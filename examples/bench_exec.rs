@@ -1,0 +1,59 @@
+//! Micro-bench of individual artifact executables through the rust PJRT
+//! engine (perf-pass instrumentation).
+use anyhow::Result;
+use spngd::harness::{self, bench};
+use spngd::runtime::HostTensor;
+use spngd::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let (manifest, engine) = harness::load_runtime()?;
+    let model = manifest.model("convnet_small")?;
+    let params = manifest.load_init_params(model)?;
+    let mut rng = Rng::new(1);
+    let n_in: usize = model.input_shape.iter().product();
+    let x = HostTensor::new(model.input_shape.clone(), (0..n_in).map(|_| rng.f32()).collect());
+    let mut t = HostTensor::zeros(vec![model.batch, model.num_classes]);
+    for b in 0..model.batch { t.data[b*10] = 1.0; }
+    let mut inputs: Vec<&HostTensor> = params.iter().collect();
+    inputs.push(&x); inputs.push(&t);
+    bench("step_emp (convnet_small)", 2, 8, || {
+        engine.execute(&model.step_emp, &inputs).unwrap();
+    });
+    // factor exe on the stem conv layer
+    let l = model.kfac_layers.iter().find(|l| l.kind == "conv").unwrap();
+    let tap = HostTensor::new(vec![model.batch, 3, 16, 16], (0..model.batch*3*256).map(|_| rng.f32()).collect());
+    bench(&format!("factor_a ({})", l.factor_a), 2, 8, || {
+        engine.execute(&l.factor_a, &[&tap]).unwrap();
+    });
+    // largest invert bucket
+    let name = manifest.executables.keys().filter(|k| k.starts_with("invert_"))
+        .max_by_key(|k| k.trim_start_matches("invert_").parse::<usize>().unwrap()).unwrap().clone();
+    let n: usize = name.trim_start_matches("invert_").parse().unwrap();
+    let mm = HostTensor::new(vec![n,n], (0..n*n).map(|_| rng.f32()*0.01).collect());
+    let mut spd = mm.as_mat().transpose().matmul(&mm.as_mat()); spd.add_diag(1.0);
+    let mt = HostTensor::from_mat(&spd); let damp = HostTensor::scalar(0.05);
+    bench(&format!("{name}"), 2, 8, || {
+        engine.execute(&name, &[&mt, &damp]).unwrap();
+    });
+    let fc = model.kfac_layers.iter().find(|l| l.kind == "fc").unwrap();
+    let (m2, n2) = fc.grad_shape;
+    let ginv = HostTensor::zeros(vec![m2,m2]); let grad = HostTensor::zeros(vec![m2,n2]); let ainv = HostTensor::zeros(vec![n2,n2]);
+    bench(&format!("precond {}x{}", m2, n2), 2, 8, || {
+        engine.execute(&fc.precond, &[&ginv, &grad, &ainv]).unwrap();
+    });
+    // eval exe
+    let mut ev_inputs: Vec<&HostTensor> = params.iter().collect();
+    ev_inputs.push(&x); ev_inputs.push(&t);
+    let bn: Vec<HostTensor> = model.bn_order.iter().map(|nm| {
+        let c = model.layer(nm).unwrap().channels; HostTensor::zeros(vec![c])
+    }).collect();
+    let bnv: Vec<HostTensor> = model.bn_order.iter().map(|nm| {
+        let c = model.layer(nm).unwrap().channels; HostTensor::new(vec![c], vec![1.0;c])
+    }).collect();
+    for b in &bn { ev_inputs.push(b); }
+    for v in &bnv { ev_inputs.push(v); }
+    bench("eval (convnet_small)", 2, 8, || {
+        engine.execute(&model.eval_exe, &ev_inputs).unwrap();
+    });
+    Ok(())
+}

@@ -1,0 +1,111 @@
+//! Scaling simulation (Fig. 5): measure a real coordinator profile on
+//! this machine, then sweep the α-β cluster model over 1→1024 simulated
+//! GPUs for every technique combination the paper plots.
+//!
+//!     cargo run --release --example scaling_sim
+
+use anyhow::Result;
+use spngd::collectives::cost::ClusterModel;
+use spngd::coordinator::{Fisher, Optim};
+use spngd::harness;
+use spngd::simulator;
+
+fn main() -> Result<()> {
+    // --- measure the emp+unitBN base profile on real steps
+    let mut cfg = harness::default_cfg("convnet_small", Optim::SpNgd);
+    cfg.workers = 2;
+    let mut tr = harness::make_trainer(cfg, 4096, 7)?;
+    for _ in 0..4 {
+        tr.step()?;
+    }
+    let base = tr.profile();
+
+    // --- measure the 1mc extra-backward delta on real steps
+    let mut cfg1 = harness::default_cfg("convnet_small", Optim::SpNgd);
+    cfg1.workers = 2;
+    cfg1.fisher = Fisher::OneMc;
+    let mut tr1 = harness::make_trainer(cfg1, 4096, 7)?;
+    for _ in 0..4 {
+        tr1.step()?;
+    }
+    let base1 = tr1.profile();
+    let extra_bwd =
+        ((base1.t_forward + base1.t_backward) - (base.t_forward + base.t_backward)).max(0.0);
+
+    // --- measure the stale refresh fraction on a longer stale run
+    let mut cfg_s = harness::default_cfg("convnet_small", Optim::SpNgd);
+    cfg_s.workers = 2;
+    cfg_s.stale = true;
+    cfg_s.grad_accum = 2;
+    let mut tr_s = harness::make_trainer(cfg_s, 4096, 7)?;
+    for _ in 0..20 {
+        tr_s.step()?;
+    }
+    let stale_fraction = tr_s.comm_reduction();
+
+    // fullBN deltas: analytic from the model's BN channel sizes
+    // (construction+inversion of (2C)² matrices vs 2×2 blocks)
+    let deltas = simulator::TechniqueDeltas {
+        t_extra_bwd_1mc: extra_bwd,
+        t_full_bn_extra: base.t_inverse * 0.5,
+        full_bn_extra_bytes: base.stats_bytes * 0.25,
+        stale_fraction,
+    };
+    println!(
+        "measured profile: fwd+bwd {:.1}ms, factors {:.1}ms, inverse {:.1}ms, stats {:.1} KiB, 1mc extra bwd {:.1}ms, stale fraction {:.1}%",
+        (base.t_forward + base.t_backward) * 1e3,
+        base.t_factors * 1e3,
+        base.t_inverse * 1e3,
+        base.stats_bytes / 1024.0,
+        extra_bwd * 1e3,
+        stale_fraction * 100.0
+    );
+
+    let variants: Vec<simulator::Variant> = simulator::fig5_techniques()
+        .iter()
+        .map(|&t| simulator::derive(&base, &deltas, t))
+        .collect();
+    let gpus = [1usize, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024];
+    let cm = ClusterModel::default();
+    let rows = simulator::sweep(&variants, &gpus, &cm);
+
+    println!("\nFig. 5 reproduction — time/step (ms) vs #GPUs (32 images/GPU):");
+    print!("{:>20}", "technique");
+    for g in &gpus {
+        print!("{g:>8}");
+    }
+    println!();
+    for row in &rows {
+        print!("{:>20}", row.label);
+        for (_, t) in &row.points {
+            print!("{:>8.1}", t * 1e3);
+        }
+        println!();
+    }
+
+    // the paper's qualitative claims, checked numerically:
+    let best = rows.last().unwrap(); // emp+unitBN+stale
+    let t1 = best.points[0].1;
+    let t64 = best.points.iter().find(|&&(g, _)| g == 64).unwrap().1;
+    let t128 = best.points.iter().find(|&&(g, _)| g == 128).unwrap().1;
+    let t1024 = best.points.iter().find(|&&(g, _)| g == 1024).unwrap().1;
+    println!("\nshape checks:");
+    println!("  superlinear region: t(1)/t(64) = {:.2}x (paper: ~3-4x)", t1 / t64);
+    println!(
+        "  near-ideal region: t(1024)/t(128) = {:.2}x (paper: ~1, 'almost ideal')",
+        t1024 / t128
+    );
+
+    std::fs::create_dir_all("results")?;
+    let mut w = spngd::util::log::TableWriter::create(
+        "results/fig5.csv",
+        &["variant", "gpus", "time_s"],
+    )?;
+    for (vi, row) in rows.iter().enumerate() {
+        for (g, t) in &row.points {
+            w.row(&[vi as f64, *g as f64, *t])?;
+        }
+    }
+    println!("wrote results/fig5.csv");
+    Ok(())
+}

@@ -1,0 +1,23 @@
+use std::rc::Rc;
+use spngd::coordinator::{BnMode, Fisher, Optim, Trainer, TrainerCfg};
+use spngd::data::{AugmentCfg, SynthDataset};
+use spngd::optim::{HyperParams, Schedule};
+use spngd::runtime::{Engine, Manifest};
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let manifest = Rc::new(Manifest::load(&dir).unwrap());
+    let engine = Rc::new(Engine::new(&manifest).unwrap());
+    let m = manifest.model("mlp").unwrap();
+    let ds = SynthDataset::new(m.num_classes, 3, 8, 8, 4000, 42);
+    let hp = HyperParams { alpha_mixup: 0.0, p_decay: 2.0, e_start: 100.0, e_end: 200.0,
+        eta0: 0.02, m0: 0.018, lambda: 2.5e-3 };
+    let cfg = TrainerCfg { model: "mlp".into(), workers: 2, grad_accum: 4,
+        fisher: Fisher::Emp, bn_mode: BnMode::Unit, stale: true, stale_alpha: 0.3,
+        lambda: hp.lambda, schedule: Schedule::new(hp, 50), optimizer: Optim::SpNgd,
+        weight_rescale: false, augment: AugmentCfg::disabled(), bn_momentum: 0.9, seed: 7 };
+    let mut tr = Trainer::new(manifest, engine, cfg, ds).unwrap();
+    for _ in 0..30 {
+        let r = tr.step().unwrap();
+        println!("step {:2} loss {:.4} acc {:.3} refreshed {}/{}", r.step, r.loss, r.train_acc, r.refreshed, r.total_stats);
+    }
+}

@@ -1,0 +1,337 @@
+"""AOT pipeline: lower every L2/L1 function to HLO text + write the
+manifest the rust coordinator consumes.
+
+Interchange is HLO *text* (not serialized HloModuleProto): jax >= 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+Artifacts (per model):
+  step_<model>_emp.hlo.txt     fwd/bwd + taps, empirical Fisher
+  step_<model>_1mc.hlo.txt     fwd/bwd + taps, 1-sample MC Fisher
+  eval_<model>.hlo.txt         validation loss/acc with running BN stats
+  init_<model>.bin             HeNormal initial parameters (raw f32 LE)
+Shared (deduplicated across models by signature):
+  factor_conv_a_*.hlo.txt      im2col + syrk  (Pallas)    A for conv
+  factor_g_r<r>c<c>.hlo.txt    syrk           (Pallas)    G, fc A
+  bn_inv_<C>.hlo.txt           unit-BN damped closed-form inverse
+  bn_full_<C>.hlo.txt          full (2C)^2 BN Fisher (ablation)
+  invert_<n>.hlo.txt           damped Newton-Schulz inverse (Pallas)
+  precond_<m>x<n>.hlo.txt      G^-1 grad A^-1 (Pallas)
+  manifest.json                everything rust needs to wire it together
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import config as C
+from . import model as M
+from .kernels import (
+    bn_full_fisher,
+    bn_unit_fisher_inv,
+    im2col,
+    newton_schulz_inverse,
+    precondition,
+    syrk,
+)
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def bucket(n: int) -> int:
+    """Inversion executables are shared across factor dims by padding to
+    a multiple of 16 (block-diagonal padding is exact; rust slices back)."""
+    return ((n + 15) // 16) * 16
+
+
+NS_ITERS = 20
+
+
+class Builder:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.exes = {}  # name -> {file, inputs, outputs}
+        self.models = {}
+
+    def emit(self, name, fn, in_specs):
+        """Lower fn at in_specs and write <name>.hlo.txt (dedup by name)."""
+        if name in self.exes:
+            return name
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        out_avals = lowered.out_info
+        self.exes[name] = {
+            "file": fname,
+            "inputs": [list(s.shape) for s in jax.tree_util.tree_leaves(in_specs)],
+            "outputs": [list(o.shape) for o in jax.tree_util.tree_leaves(out_avals)],
+        }
+        print(f"  wrote {fname} ({len(text)} chars)")
+        return name
+
+    # -- shared executables -------------------------------------------
+
+    def factor_conv_a(self, sig, batch):
+        cin, h, w, k, s, p = sig
+        name = f"factor_conv_a_c{cin}h{h}w{w}k{k}s{s}p{p}_b{batch}"
+        ho = (h + 2 * p - k) // s + 1
+        wo = (w + 2 * p - k) // s + 1
+        scale = 1.0 / (batch * ho * wo)
+
+        def fn(a_tap):
+            patches = im2col(a_tap, k, s, p).reshape(-1, cin * k * k)
+            return (syrk(patches, scale),)
+
+        return self.emit(name, fn, (spec((batch, cin, h, w)),))
+
+    def factor_g(self, rows, cols, scale_rows):
+        """syrk over a (rows, cols) tap with scale 1/scale_rows. Used for
+        conv G (rows=B*ho*wo, scale=B), fc A and fc G (rows=B, scale=B)."""
+        name = f"factor_g_r{rows}c{cols}s{scale_rows}"
+
+        def fn(tap2d):
+            return (syrk(tap2d, 1.0 / scale_rows),)
+
+        return self.emit(name, fn, (spec((rows, cols)),))
+
+    def bn_inv(self, c):
+        name = f"bn_inv_{c}"
+
+        def fn(gg, gb, damping):
+            return (bn_unit_fisher_inv(gg, gb, damping),)
+
+        return self.emit(
+            name, fn, (spec((self.batch, c)), spec((self.batch, c)), spec(()))
+        )
+
+    def bn_full(self, c):
+        name = f"bn_full_{c}"
+
+        def fn(gg, gb):
+            return (bn_full_fisher(gg, gb),)
+
+        return self.emit(name, fn, (spec((self.batch, c)), spec((self.batch, c))))
+
+    def invert(self, n):
+        nb = bucket(n)
+        name = f"invert_{nb}"
+
+        def fn(m, damping):
+            return (newton_schulz_inverse(m, damping, iters=NS_ITERS),)
+
+        self.emit(name, fn, (spec((nb, nb)), spec(())))
+        return name
+
+    def precond(self, m, n):
+        name = f"precond_{m}x{n}"
+
+        def fn(ginv, grad, ainv):
+            return (precondition(ginv, grad, ainv),)
+
+        return self.emit(
+            name, fn, (spec((m, m)), spec((m, n)), spec((n, n)))
+        )
+
+    # -- per-model ------------------------------------------------------
+
+    def add_model(self, cfg: C.ModelCfg):
+        print(f"model {cfg.name}: batch={cfg.batch} in={cfg.in_shape}")
+        self.batch = cfg.batch
+        geo = M.layer_geometry(cfg)
+        klayers = M.kfac_layers(cfg)
+        pshapes = M.param_shapes(cfg)
+        b = cfg.batch
+        cc, hh, ww = cfg.in_shape
+        k_classes = cfg.num_classes
+
+        # ---- step executables
+        params_specs = tuple(spec(s) for _, s in pshapes)
+        x_spec = spec((b, cc, hh, ww))
+        t_spec = spec((b, k_classes))
+        step_emp = self.emit(
+            f"step_{cfg.name}_emp",
+            M.make_step(cfg, "emp"),
+            (params_specs, x_spec, t_spec),
+        )
+        step_1mc = self.emit(
+            f"step_{cfg.name}_1mc",
+            M.make_step(cfg, "1mc"),
+            (params_specs, x_spec, t_spec, spec((), jnp.uint32)),
+        )
+        bn_names = [n for n, kk, _ in klayers if kk == "bn"]
+        bn_cs = [geo[n]["c"] for n in bn_names]
+        eval_exe = self.emit(
+            f"eval_{cfg.name}",
+            M.make_eval(cfg),
+            (
+                params_specs,
+                x_spec,
+                t_spec,
+                tuple(spec((c,)) for c in bn_cs),
+                tuple(spec((c,)) for c in bn_cs),
+            ),
+        )
+
+        # ---- init params
+        params = M.init_params(cfg, seed=0)
+        init_file = f"init_{cfg.name}.bin"
+        with open(os.path.join(self.out_dir, init_file), "wb") as f:
+            for p in params:
+                f.write(np.asarray(p, dtype="<f4").tobytes())
+
+        # ---- per-layer shared executables + layer table
+        layer_entries = []
+        for name, kind, op in klayers:
+            g = geo[name]
+            if kind == "bn":
+                c = g["c"]
+                layer_entries.append(
+                    {
+                        "name": name,
+                        "kind": "bn",
+                        "channels": c,
+                        "bn_inv": self.bn_inv(c),
+                        "bn_full": self.bn_full(c),
+                        "invert_full": self.invert(2 * c),
+                        "full_bucket": bucket(2 * c),
+                        "gamma_param": name + ".gamma",
+                        "beta_param": name + ".beta",
+                    }
+                )
+                continue
+            a_dim, g_dim = g["a_dim"], g["g_dim"]
+            gm, gn = g["grad_shape"]
+            if kind == "conv":
+                factor_a = self.factor_conv_a(g["conv_sig"], b)
+                rows = b * g["spatial"]
+                factor_g = self.factor_g(rows, g_dim, b)
+            else:
+                factor_a = self.factor_g(b, a_dim, b)
+                factor_g = self.factor_g(b, g_dim, b)
+            layer_entries.append(
+                {
+                    "name": name,
+                    "kind": kind,
+                    "a_dim": a_dim,
+                    "g_dim": g_dim,
+                    "a_bucket": bucket(a_dim),
+                    "g_bucket": bucket(g_dim),
+                    "grad_shape": [gm, gn],
+                    "a_tap_shape": list(g["a_tap"]),
+                    "g_tap_shape": list(g["g_tap"]),
+                    "factor_a": factor_a,
+                    "factor_g": factor_g,
+                    "invert_a": self.invert(a_dim),
+                    "invert_g": self.invert(g_dim),
+                    "precond": self.precond(gm, gn),
+                    "weight_param": name + ".w",
+                }
+            )
+
+        # ---- step output layout (mirrors model.make_step ordering)
+        outputs = [
+            {"name": "loss", "role": "loss", "shape": []},
+            {"name": "ncorrect", "role": "ncorrect", "shape": []},
+        ]
+        for pname, shape in pshapes:
+            outputs.append(
+                {"name": f"grad:{pname}", "role": "grad", "param": pname,
+                 "shape": list(shape)}
+            )
+        for name, kind, _ in klayers:
+            if kind == "bn":
+                continue
+            outputs.append(
+                {"name": f"a_tap:{name}", "role": "a_tap", "layer": name,
+                 "shape": list(geo[name]["a_tap"])}
+            )
+            outputs.append(
+                {"name": f"g_tap:{name}", "role": "g_tap", "layer": name,
+                 "shape": list(geo[name]["g_tap"])}
+            )
+        for name in bn_names:
+            outputs.append(
+                {"name": f"g_gamma:{name}", "role": "g_gamma", "layer": name,
+                 "shape": [b, geo[name]["c"]]}
+            )
+            outputs.append(
+                {"name": f"g_beta:{name}", "role": "g_beta", "layer": name,
+                 "shape": [b, geo[name]["c"]]}
+            )
+        for name in bn_names:
+            outputs.append(
+                {"name": f"bn_mean:{name}", "role": "bn_mean", "layer": name,
+                 "shape": [geo[name]["c"]]}
+            )
+            outputs.append(
+                {"name": f"bn_var:{name}", "role": "bn_var", "layer": name,
+                 "shape": [geo[name]["c"]]}
+            )
+
+        self.models[cfg.name] = {
+            "input_shape": [b, cc, hh, ww],
+            "num_classes": k_classes,
+            "batch": b,
+            "params": [
+                {"name": n, "shape": list(s)} for n, s in pshapes
+            ],
+            "init_file": init_file,
+            "kfac_layers": layer_entries,
+            "bn_order": bn_names,
+            "step_outputs": outputs,
+            "executables": {
+                "step_emp": step_emp,
+                "step_1mc": step_1mc,
+                "eval": eval_exe,
+            },
+        }
+
+    def write_manifest(self):
+        manifest = {
+            "version": 1,
+            "ns_iters": NS_ITERS,
+            "models": self.models,
+            "executables": self.exes,
+        }
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(manifest, f, indent=1, sort_keys=True)
+        print(f"  wrote manifest.json ({len(self.exes)} executables)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--models", default="mlp,convnet_small",
+        help="comma-separated model config names",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    b = Builder(args.out_dir)
+    for mname in args.models.split(","):
+        b.add_model(C.MODELS[mname.strip()]())
+    b.write_manifest()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,174 @@
+"""Model configurations for the L2 build path.
+
+A model is a flat op program (list of layer specs). Residual blocks are
+expressed with Save/Add ops; Add may carry a projection (conv+bn) applied
+to the saved tensor, which is how ResNet downsample shortcuts appear.
+
+The `convnet` family mirrors ResNet's layer taxonomy (Conv/BN/FC — the
+paper's 107 K-FAC layers for ResNet-50) at CPU-tractable width/depth; see
+DESIGN.md section 4 for the substitution rationale.
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class Conv:
+    name: str
+    cin: int
+    cout: int
+    k: int
+    stride: int = 1
+    pad: int = 0
+
+
+@dataclass(frozen=True)
+class Bn:
+    name: str
+    c: int
+
+
+@dataclass(frozen=True)
+class Relu:
+    name: str
+
+
+@dataclass(frozen=True)
+class Fc:
+    name: str
+    din: int
+    dout: int
+
+
+@dataclass(frozen=True)
+class GlobalPool:
+    name: str
+
+
+@dataclass(frozen=True)
+class Flatten:
+    name: str
+
+
+@dataclass(frozen=True)
+class Save:
+    name: str
+
+
+@dataclass(frozen=True)
+class Add:
+    name: str
+    from_save: str
+    # optional projection on the shortcut: (Conv, Bn)
+    proj_conv: Optional[Conv] = None
+    proj_bn: Optional[Bn] = None
+
+
+@dataclass
+class ModelCfg:
+    name: str
+    in_shape: Tuple[int, int, int]  # (C, H, W)
+    num_classes: int
+    batch: int  # per-worker batch (the paper uses 32/GPU)
+    ops: List[object] = field(default_factory=list)
+
+    def conv_layers(self):
+        out = [op for op in self.ops if isinstance(op, Conv)]
+        for op in self.ops:
+            if isinstance(op, Add) and op.proj_conv is not None:
+                out.append(op.proj_conv)
+        return out
+
+    def bn_layers(self):
+        out = [op for op in self.ops if isinstance(op, Bn)]
+        for op in self.ops:
+            if isinstance(op, Add) and op.proj_bn is not None:
+                out.append(op.proj_bn)
+        return out
+
+    def fc_layers(self):
+        return [op for op in self.ops if isinstance(op, Fc)]
+
+
+def _basic_block(prefix: str, cin: int, cout: int, stride: int):
+    """ResNet basic block: conv-bn-relu-conv-bn + shortcut, relu."""
+    ops = [Save(f"{prefix}.in")]
+    ops += [
+        Conv(f"{prefix}.conv1", cin, cout, 3, stride, 1),
+        Bn(f"{prefix}.bn1", cout),
+        Relu(f"{prefix}.relu1"),
+        Conv(f"{prefix}.conv2", cout, cout, 3, 1, 1),
+        Bn(f"{prefix}.bn2", cout),
+    ]
+    if stride != 1 or cin != cout:
+        ops.append(
+            Add(
+                f"{prefix}.add",
+                f"{prefix}.in",
+                proj_conv=Conv(f"{prefix}.proj", cin, cout, 1, stride, 0),
+                proj_bn=Bn(f"{prefix}.projbn", cout),
+            )
+        )
+    else:
+        ops.append(Add(f"{prefix}.add", f"{prefix}.in"))
+    ops.append(Relu(f"{prefix}.relu2"))
+    return ops
+
+
+def convnet(
+    name="convnet",
+    width=16,
+    img=16,
+    blocks=(2, 2),
+    num_classes=10,
+    batch=32,
+) -> ModelCfg:
+    """ResNet-style ConvNet: stem + stages of basic blocks + GAP + FC."""
+    ops = [
+        Conv("stem.conv", 3, width, 3, 1, 1),
+        Bn("stem.bn", width),
+        Relu("stem.relu"),
+    ]
+    cin = width
+    for s, nblocks in enumerate(blocks):
+        cout = width * (2**s)
+        for b in range(nblocks):
+            stride = 2 if (s > 0 and b == 0) else 1
+            ops += _basic_block(f"s{s}b{b}", cin, cout, stride)
+            cin = cout
+    ops += [
+        GlobalPool("gap"),
+        Flatten("flat"),
+        Fc("fc", cin, num_classes),
+    ]
+    return ModelCfg(name, (3, img, img), num_classes, batch, ops)
+
+
+def convnet_small(batch=32) -> ModelCfg:
+    """The end-to-end example model (~60k params, 21 K-FAC layers)."""
+    return convnet("convnet_small", width=16, img=16, blocks=(2, 2), batch=batch)
+
+
+def convnet_tiny(batch=8) -> ModelCfg:
+    """Fast config for pytest."""
+    return convnet("convnet_tiny", width=8, img=8, blocks=(1, 1), batch=batch)
+
+
+def mlp(name="mlp", dims=(192, 128, 64), num_classes=10, batch=32, img=8) -> ModelCfg:
+    """FC-only model for the quickstart (input flattened 3*img*img)."""
+    assert dims[0] == 3 * img * img
+    ops = [Flatten("flat")]
+    d = dims[0]
+    for i, h in enumerate(dims[1:]):
+        ops += [Fc(f"fc{i}", d, h), Relu(f"relu{i}")]
+        d = h
+    ops += [Fc("head", d, num_classes)]
+    return ModelCfg(name, (3, img, img), num_classes, batch, ops)
+
+
+MODELS = {
+    "convnet_small": convnet_small,
+    "convnet_tiny": convnet_tiny,
+    "mlp": mlp,
+}

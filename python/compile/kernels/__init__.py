@@ -1,0 +1,24 @@
+"""L1 Pallas kernels: K-FAC factor construction, inversion, preconditioning.
+
+All kernels lower with interpret=True (CPU PJRT execution); real-TPU
+structure (MXU tiles, VMEM blocking) is expressed via BlockSpec and
+documented in DESIGN.md section Hardware-Adaptation.
+"""
+
+from .bn import bn_full_fisher, bn_unit_fisher_inv
+from .im2col import im2col
+from .inverse import newton_schulz_inverse
+from .matmul import matmul, matmul_2c_minus
+from .precondition import precondition
+from .syrk import syrk
+
+__all__ = [
+    "bn_full_fisher",
+    "bn_unit_fisher_inv",
+    "im2col",
+    "newton_schulz_inverse",
+    "matmul",
+    "matmul_2c_minus",
+    "precondition",
+    "syrk",
+]

@@ -1,0 +1,23 @@
+"""Unit-wise BatchNorm Fisher + closed-form damped inverse (Sec. 4.2).
+
+Small per-channel reductions; implemented in jnp (the 2x2 blocks are far
+below MXU granularity — the paper's point is precisely that unitBN removes
+the big (2C)^2 matrix, so there is nothing left to tile).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+
+
+@jax.jit
+def bn_unit_fisher_inv(g_gamma, g_beta, damping):
+    """(B, C) per-sample gamma/beta grads -> (C, 2, 2) damped inverses."""
+    return ref.bn_unit_fisher_inv(g_gamma, g_beta, damping)
+
+
+@jax.jit
+def bn_full_fisher(g_gamma, g_beta):
+    """(B, C) grads -> (2C, 2C) full BN Fisher (fullBN ablation)."""
+    return ref.bn_full_fisher(g_gamma, g_beta)

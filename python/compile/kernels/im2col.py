@@ -1,0 +1,54 @@
+"""Pallas im2col kernel: conv-patch extraction (Eq. 10's M_A construction).
+
+Grid is over the batch: each program loads one image (C, H, W) into VMEM,
+extracts all k*k strided windows with static slices, and writes the
+(ho*wo, C*k*k) patch matrix. Column order matches
+lax.conv_general_dilated_patches (c-major, then kh, kw) so the oracle in
+ref.py compares elementwise.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _im2col_kernel(x_ref, o_ref, *, k, stride, pad, ho, wo):
+    x = x_ref[0]  # (C, H, W)
+    c = x.shape[0]
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    cols = []
+    for kh in range(k):
+        for kw in range(k):
+            win = jax.lax.slice(
+                xp,
+                (0, kh, kw),
+                (c, kh + (ho - 1) * stride + 1, kw + (wo - 1) * stride + 1),
+                (1, stride, stride),
+            )  # (C, ho, wo)
+            cols.append(win)
+    # (C, k*k, ho, wo) -> (C*k*k, ho*wo) -> (ho*wo, C*k*k)
+    patches = jnp.stack(cols, axis=1).reshape(c * k * k, ho * wo)
+    o_ref[0] = patches.T
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "stride", "pad", "interpret")
+)
+def im2col(x, k, stride, pad, interpret=True):
+    """(B, C, H, W) -> (B, ho*wo, C*k*k) conv patches."""
+    b, c, h, w = x.shape
+    ho = (h + 2 * pad - k) // stride + 1
+    wo = (w + 2 * pad - k) // stride + 1
+    kern = functools.partial(
+        _im2col_kernel, k=k, stride=stride, pad=pad, ho=ho, wo=wo
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, c, h, w), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, ho * wo, c * k * k), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, ho * wo, c * k * k), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32))

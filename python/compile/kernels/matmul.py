@@ -1,0 +1,102 @@
+"""Tiled Pallas matmul kernels.
+
+Two entry points:
+  matmul(a, b)                 -- O = A @ B
+  matmul_2c_minus(a, b, c)     -- O = 2*C - A @ B   (the Newton-Schulz
+                                   epilogue: X(2I - MX) = 2X - X(MX))
+
+Both pad operands to tile multiples (zero padding is exact for matmul),
+run an (i, j, k)-grid accumulation kernel, and slice the result back.
+
+BlockSpec expresses the HBM->VMEM schedule: block (i, k) of A and (k, j)
+of B stream through VMEM while the (i, j) output block stays resident
+across the k axis -- the standard MXU-systolic schedule (the paper's
+Tensor-Core GEMMs, re-thought for TPU; DESIGN.md Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .tiles import block_for, padded
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _mm_epilogue_kernel(a_ref, b_ref, c_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = 2.0 * c_ref[...]
+
+    o_ref[...] -= jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad2(x, pm, pn):
+    m, n = x.shape
+    if m == pm and n == pn:
+        return x
+    return jnp.pad(x, ((0, pm - m), (0, pn - n)))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def matmul(a, b, interpret=True):
+    """O = A @ B with MXU-tiled Pallas kernel. a: (m, k), b: (k, n)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"matmul shape mismatch {a.shape} @ {b.shape}"
+    pm, pk, pn = padded(m), padded(k), padded(n)
+    bm, bk, bn = block_for(m), block_for(k), block_for(n)
+    ap = _pad2(a.astype(jnp.float32), pm, pk)
+    bp = _pad2(b.astype(jnp.float32), pk, pn)
+    grid = (pm // bm, pn // bn, pk // bk)
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pm, pn), jnp.float32),
+        interpret=interpret,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def matmul_2c_minus(a, b, c, interpret=True):
+    """O = 2*C - A @ B (Newton-Schulz epilogue). All f32 2-D."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and c.shape == (m, n)
+    pm, pk, pn = padded(m), padded(k), padded(n)
+    bm, bk, bn = block_for(m), block_for(k), block_for(n)
+    ap = _pad2(a.astype(jnp.float32), pm, pk)
+    bp = _pad2(b.astype(jnp.float32), pk, pn)
+    cp = _pad2(c.astype(jnp.float32), pm, pn)
+    grid = (pm // bm, pn // bn, pk // bk)
+    out = pl.pallas_call(
+        _mm_epilogue_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pm, pn), jnp.float32),
+        interpret=interpret,
+    )(ap, bp, cp)
+    return out[:m, :n]

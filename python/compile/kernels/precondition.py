@@ -1,0 +1,19 @@
+"""K-FAC preconditioning kernel: U = G^-1 @ gradW @ A^-1 (Eq. 6 + 12).
+
+Two chained MXU-tiled Pallas matmuls; the (d_out, d_in) intermediate stays
+in f32. This is the per-layer Stage-4 update math that the owning process
+applies in the paper's model-parallel phase.
+"""
+
+import functools
+
+import jax
+
+from .matmul import matmul
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def precondition(g_inv, grad, a_inv, interpret=True):
+    """g_inv: (m, m), grad: (m, n), a_inv: (n, n) -> (m, n)."""
+    t = matmul(g_inv, grad, interpret=interpret)
+    return matmul(t, a_inv, interpret=interpret)

@@ -1,0 +1,140 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here;
+pytest (python/tests/) asserts allclose between kernel and oracle across a
+hypothesis-driven sweep of shapes. The oracles are also what the L2 model
+uses when SPNGD_USE_PALLAS=0 (debug escape hatch; artifacts default to the
+Pallas path).
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def syrk(x, scale=1.0):
+    """scale * X^T X for X of shape (rows, cols) -> (cols, cols).
+
+    This is the Kronecker-factor construction primitive:
+      FC   A      = syrk(a,  1/B)        a: (B, d_in)
+      FC   G      = syrk(gs, 1/B)        gs: (B, d_out), per-sample grads
+      Conv A      = syrk(patches, 1/(B*h*w))   patches: (B*h*w, cin*k^2)
+      Conv G      = syrk(gs2d, 1/B)      gs2d: (B*h*w, c_out)
+    """
+    x = x.astype(jnp.float32)
+    return scale * (x.T @ x)
+
+
+def matmul(a, b):
+    """Plain A @ B in f32."""
+    return a.astype(jnp.float32) @ b.astype(jnp.float32)
+
+
+def newton_schulz_step(m, x):
+    """One Newton-Schulz iteration: X <- X (2I - M X)."""
+    n = m.shape[0]
+    return x @ (2.0 * jnp.eye(n, dtype=jnp.float32) - m @ x)
+
+
+def newton_schulz_inverse(m, damping, iters=20, power_iters=8):
+    """Damped SPD inverse (M + damping*I)^-1 via Newton-Schulz.
+
+    Init X0 = I/sigma with sigma a power-iteration estimate of the largest
+    eigenvalue (padded by 10% + damping), which guarantees convergence for
+    SPD inputs. Matmul-only: this is the MXU-friendly inversion the paper's
+    Stage 4 performs with LU on V100 (see DESIGN.md section
+    Hardware-Adaptation).
+    """
+    n = m.shape[0]
+    md = m.astype(jnp.float32) + damping * jnp.eye(n, dtype=jnp.float32)
+
+    v0 = jnp.full((n,), 1.0 / jnp.sqrt(n), dtype=jnp.float32)
+
+    def pow_body(_, v):
+        w = md @ v
+        return w / jnp.maximum(jnp.linalg.norm(w), 1e-30)
+
+    v = lax.fori_loop(0, power_iters, pow_body, v0)
+    sigma = jnp.maximum(jnp.linalg.norm(md @ v), 1e-30) * 1.1 + damping
+
+    x0 = jnp.eye(n, dtype=jnp.float32) / sigma
+
+    def ns_body(_, x):
+        return newton_schulz_step(md, x)
+
+    return lax.fori_loop(0, iters, ns_body, x0)
+
+
+def precondition(g_inv, grad, a_inv):
+    """K-FAC preconditioned gradient: G^-1 @ grad @ A^-1 (Eq. 6/12)."""
+    return (
+        g_inv.astype(jnp.float32)
+        @ grad.astype(jnp.float32)
+        @ a_inv.astype(jnp.float32)
+    )
+
+
+def im2col(x, k, stride, pad):
+    """Extract conv patches: (B, C, H, W) -> (B, ho*wo, C*k*k).
+
+    Column order matches lax.conv_general_dilated_patches: feature dim is
+    C-major then (kh, kw), i.e. index = c*k*k + kh*k + kw.
+    """
+    patches = lax.conv_general_dilated_patches(
+        x.astype(jnp.float32),
+        filter_shape=(k, k),
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )  # (B, C*k*k, ho, wo)
+    b, ckk, ho_wo = patches.shape[0], patches.shape[1], patches.shape[2] * patches.shape[3]
+    return patches.reshape(b, ckk, ho_wo).transpose(0, 2, 1)
+
+
+def bn_unit_fisher(g_gamma, g_beta, scale=None):
+    """Unit-wise BatchNorm Fisher (Eq. 15-16): per-channel 2x2 blocks.
+
+    g_gamma, g_beta: (B, C) per-sample gradients of log p w.r.t. gamma/beta.
+    Returns (C, 2, 2) with block [[E[gg^2], E[gg gb]], [E[gb gg], E[gb^2]]].
+    """
+    b = g_gamma.shape[0]
+    if scale is None:
+        scale = 1.0 / b
+    f11 = scale * jnp.sum(g_gamma * g_gamma, axis=0)
+    f12 = scale * jnp.sum(g_gamma * g_beta, axis=0)
+    f22 = scale * jnp.sum(g_beta * g_beta, axis=0)
+    return jnp.stack(
+        [jnp.stack([f11, f12], axis=-1), jnp.stack([f12, f22], axis=-1)], axis=-2
+    )
+
+
+def bn_unit_fisher_inv(g_gamma, g_beta, damping):
+    """Damped closed-form inverse of the unit-wise BN Fisher (Eq. 17).
+
+    Returns (C, 2, 2) inverse blocks of (F_c + damping*I).
+    """
+    f = bn_unit_fisher(g_gamma, g_beta)
+    a = f[:, 0, 0] + damping
+    bb = f[:, 0, 1]
+    c = f[:, 1, 0]
+    d = f[:, 1, 1] + damping
+    det = a * d - bb * c
+    inv = jnp.stack(
+        [
+            jnp.stack([d, -bb], axis=-1),
+            jnp.stack([-c, a], axis=-1),
+        ],
+        axis=-2,
+    )
+    return inv / det[:, None, None]
+
+
+def bn_full_fisher(g_gamma, g_beta, scale=None):
+    """Full (2C x 2C) BatchNorm Fisher for the fullBN ablation (Sec. 4.2).
+
+    Parameter order matches Eq. 14: (gamma_1, beta_1, ..., gamma_C, beta_C).
+    """
+    b, c = g_gamma.shape
+    if scale is None:
+        scale = 1.0 / b
+    g = jnp.stack([g_gamma, g_beta], axis=-1).reshape(b, 2 * c)
+    return scale * (g.T @ g)

@@ -1,0 +1,50 @@
+"""Tile-size policy shared by the Pallas kernels.
+
+Two regimes:
+ - dims <= MAX_SINGLE use one block covering the whole (8-aligned) extent.
+   On TPU these all fit VMEM comfortably (512^2 f32 = 1 MiB << 16 MiB);
+   under interpret=True this also minimizes the per-grid-cell overhead of
+   the lowered while-loop, which profiling showed dominating wall time
+   (EXPERIMENTS.md §Perf, L1 iteration 1).
+ - larger dims tile at the 128x128 MXU systolic-array shape.
+
+The reduction (row/batch) axis streams in ROW_BLOCK_MAX chunks: a
+(8192 x 144) f32 block is ~4.7 MiB of VMEM — double-bufferable on real
+hardware, and few enough grid cells to keep interpret mode fast.
+"""
+
+MXU_TILE = 128
+MAX_SINGLE = 512
+ROW_BLOCK_MAX = 8192
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def block_for(dim: int) -> int:
+    """Block size for an output/operand dimension."""
+    if dim <= MAX_SINGLE:
+        return round_up(max(dim, 1), 8)
+    return MXU_TILE
+
+
+def padded(dim: int) -> int:
+    """Padded extent so the dimension divides evenly into blocks."""
+    return round_up(max(dim, 1), block_for(dim))
+
+
+def block_rows(dim: int) -> int:
+    """Block size for the streamed reduction axis (rows of X in syrk)."""
+    if dim <= ROW_BLOCK_MAX:
+        return round_up(max(dim, 1), 8)
+    return ROW_BLOCK_MAX
+
+
+def padded_rows(dim: int) -> int:
+    return round_up(max(dim, 1), block_rows(dim))
+
+
+def vmem_bytes_matmul(bm: int, bk: int, bn: int, dtype_bytes: int = 4) -> int:
+    """VMEM footprint estimate for one matmul grid cell (A, B, O blocks)."""
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn)

@@ -1,0 +1,414 @@
+"""L2: the JAX model — forward/backward with K-FAC statistics capture.
+
+This module builds every function the rust coordinator executes:
+
+  step_emp   (params, x, t)        -> loss, ncorrect, grads, taps, bn stats
+  step_1mc   (params, x, t, seed)  -> same, with Fisher taps from a
+                                      Monte-Carlo label sample (extra bwd)
+  eval_batch (params, x, t, bn...) -> loss, ncorrect (running BN stats)
+
+Per-sample output gradients (the G-factor inputs) are obtained with the
+probe trick: a zero "probe" tensor is added to each layer's pre-activation
+output; the gradient of the mean loss w.r.t. the probe is exactly
+(1/B) * per-sample d log p / d s, so scaling by -B recovers per-sample
+gradients of log p without per-sample vmap backward passes. This is the
+"statistics during the ordinary backward pass" trick of Sec. 4.1
+(empirical Fisher with no extra backward).
+
+Factor *construction* (im2col + syrk) happens in separate small artifacts
+(see aot.py) so the stale-statistics scheduler in rust can skip it
+per-layer (Sec. 4.3); this module only emits the taps those artifacts
+consume.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import config as C
+
+BN_EPS = 1e-5
+
+
+# --------------------------------------------------------------- params
+
+
+def param_order(cfg: C.ModelCfg):
+    """Deterministic parameter order: follows op-program order; Add
+    projections contribute after the block's own ops; BN contributes
+    (gamma, beta)."""
+    names = []
+    for op in cfg.ops:
+        if isinstance(op, C.Conv):
+            names.append((op.name + ".w", op))
+        elif isinstance(op, C.Fc):
+            names.append((op.name + ".w", op))
+        elif isinstance(op, C.Bn):
+            names.append((op.name + ".gamma", op))
+            names.append((op.name + ".beta", op))
+        elif isinstance(op, C.Add) and op.proj_conv is not None:
+            names.append((op.proj_conv.name + ".w", op.proj_conv))
+            names.append((op.proj_bn.name + ".gamma", op.proj_bn))
+            names.append((op.proj_bn.name + ".beta", op.proj_bn))
+    return names
+
+
+def param_shapes(cfg: C.ModelCfg):
+    shapes = []
+    for name, op in param_order(cfg):
+        if isinstance(op, C.Conv):
+            shapes.append((name, (op.cout, op.cin, op.k, op.k)))
+        elif isinstance(op, C.Fc):
+            shapes.append((name, (op.dout, op.din)))
+        elif isinstance(op, C.Bn):
+            shapes.append((name, (op.c,)))
+    return shapes
+
+
+def init_params(cfg: C.ModelCfg, seed=0):
+    """HeNormal for Conv/FC (as the paper: Chainer HeNormal), BN gamma=1,
+    beta=0. Returns list of arrays in param order."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for name, shape in param_shapes(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(".gamma"):
+            out.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(".beta"):
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            # HeNormal: std = sqrt(2 / fan_in)
+            fan_in = 1
+            for d in shape[1:]:
+                fan_in *= d
+            std = (2.0 / fan_in) ** 0.5
+            out.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return out
+
+
+def params_to_dict(cfg, params_list):
+    names = [n for n, _ in param_shapes(cfg)]
+    assert len(names) == len(params_list)
+    return dict(zip(names, params_list))
+
+
+# ----------------------------------------------------------- kfac meta
+
+
+def kfac_layers(cfg: C.ModelCfg):
+    """Ordered list of (name, kind, op) for layers with Kronecker factors
+    (conv/fc) or unit-BN Fisher (bn). Order = op-program order with Add
+    projections in place."""
+    out = []
+    for op in cfg.ops:
+        if isinstance(op, C.Conv):
+            out.append((op.name, "conv", op))
+        elif isinstance(op, C.Fc):
+            out.append((op.name, "fc", op))
+        elif isinstance(op, C.Bn):
+            out.append((op.name, "bn", op))
+        elif isinstance(op, C.Add) and op.proj_conv is not None:
+            out.append((op.proj_conv.name, "conv", op.proj_conv))
+            out.append((op.proj_bn.name, "bn", op.proj_bn))
+    return out
+
+
+def _spatial_out(op: C.Conv, h, w):
+    ho = (h + 2 * op.pad - op.k) // op.stride + 1
+    wo = (w + 2 * op.pad - op.k) // op.stride + 1
+    return ho, wo
+
+
+def layer_geometry(cfg: C.ModelCfg):
+    """Static shapes for every K-FAC layer: tap shapes, factor dims, grad
+    matrix shape. Traces the op program symbolically (shapes only)."""
+    b = cfg.batch
+    c, h, w = cfg.in_shape
+    geo = {}
+    saved = {}
+
+    def record_conv(op, cin, hh, ww):
+        ho, wo = _spatial_out(op, hh, ww)
+        geo[op.name] = dict(
+            kind="conv",
+            a_tap=(b, cin, hh, ww),
+            g_tap=(b, op.cout, ho, wo),
+            a_dim=cin * op.k * op.k,
+            g_dim=op.cout,
+            grad_shape=(op.cout, cin * op.k * op.k),
+            conv_sig=(cin, hh, ww, op.k, op.stride, op.pad),
+            spatial=ho * wo,
+        )
+        return op.cout, ho, wo
+
+    flat_d = None
+    for op in cfg.ops:
+        if isinstance(op, C.Save):
+            saved[op.name] = (c, h, w)
+        elif isinstance(op, C.Conv):
+            c, h, w = record_conv(op, c, h, w)
+        elif isinstance(op, C.Bn):
+            geo[op.name] = dict(kind="bn", c=op.c, tap=(b, op.c))
+        elif isinstance(op, C.Relu):
+            pass
+        elif isinstance(op, C.Add):
+            sc, sh, sw = saved[op.from_save]
+            if op.proj_conv is not None:
+                pc, ph, pw = record_conv(op.proj_conv, sc, sh, sw)
+                geo[op.proj_bn.name] = dict(
+                    kind="bn", c=op.proj_bn.c, tap=(b, op.proj_bn.c)
+                )
+                assert (pc, ph, pw) == (c, h, w), "projection shape mismatch"
+        elif isinstance(op, C.GlobalPool):
+            h, w = 1, 1
+        elif isinstance(op, C.Flatten):
+            flat_d = c * h * w
+        elif isinstance(op, C.Fc):
+            assert flat_d == op.din, f"{op.name}: {flat_d} != {op.din}"
+            geo[op.name] = dict(
+                kind="fc",
+                a_tap=(b, op.din),
+                g_tap=(b, op.dout),
+                a_dim=op.din,
+                g_dim=op.dout,
+                grad_shape=(op.dout, op.din),
+            )
+            flat_d = op.dout
+    return geo
+
+
+# ------------------------------------------------------------- forward
+
+
+def _conv_apply(h, w, op: C.Conv):
+    return lax.conv_general_dilated(
+        h,
+        w,
+        window_strides=(op.stride, op.stride),
+        padding=[(op.pad, op.pad), (op.pad, op.pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def forward(cfg, pdict, probes, x, bn_running=None):
+    """Run the op program.
+
+    probes: dict layer-name -> zero tensor added to the pre-activation
+            (conv/fc outputs, bn outputs). Pass {} for no probes (eval).
+    bn_running: dict bn-name -> (mean, var) to use instead of batch stats
+            (eval mode). None -> batch stats (training mode).
+
+    Returns (logits, taps, bn_batch_stats) where taps has, per conv/fc
+    layer, 'a' (input activation) and per bn layer 'xhat'.
+    """
+    taps = {}
+    bn_stats = {}
+    saved = {}
+    h = x
+
+    def apply_conv(h, op):
+        taps[op.name + ".a"] = h
+        s = _conv_apply(h, pdict[op.name + ".w"], op)
+        if op.name in probes:
+            s = s + probes[op.name]
+        return s
+
+    def apply_bn(h, op):
+        if bn_running is not None:
+            mean, var = bn_running[op.name]
+        else:
+            mean = jnp.mean(h, axis=(0, 2, 3))
+            var = jnp.var(h, axis=(0, 2, 3))
+            bn_stats[op.name] = (mean, var)
+        xhat = (h - mean[None, :, None, None]) * lax.rsqrt(
+            var[None, :, None, None] + BN_EPS
+        )
+        taps[op.name + ".xhat"] = xhat
+        s = (
+            pdict[op.name + ".gamma"][None, :, None, None] * xhat
+            + pdict[op.name + ".beta"][None, :, None, None]
+        )
+        if op.name in probes:
+            s = s + probes[op.name]
+        return s
+
+    for op in cfg.ops:
+        if isinstance(op, C.Save):
+            saved[op.name] = h
+        elif isinstance(op, C.Conv):
+            h = apply_conv(h, op)
+        elif isinstance(op, C.Bn):
+            h = apply_bn(h, op)
+        elif isinstance(op, C.Relu):
+            h = jax.nn.relu(h)
+        elif isinstance(op, C.Add):
+            sc = saved[op.from_save]
+            if op.proj_conv is not None:
+                sc = apply_conv(sc, op.proj_conv)
+                sc = apply_bn(sc, op.proj_bn)
+            h = h + sc
+        elif isinstance(op, C.GlobalPool):
+            h = jnp.mean(h, axis=(2, 3), keepdims=True)
+        elif isinstance(op, C.Flatten):
+            h = h.reshape(h.shape[0], -1)
+        elif isinstance(op, C.Fc):
+            taps[op.name + ".a"] = h
+            s = h @ pdict[op.name + ".w"].T
+            if op.name in probes:
+                s = s + probes[op.name]
+            h = s
+        else:
+            raise TypeError(f"unknown op {op}")
+    return h, taps, bn_stats
+
+
+def _zero_probes(cfg, geo):
+    probes = {}
+    for name, kind, op in kfac_layers(cfg):
+        if kind == "bn":
+            # probe on bn output: same shape as the conv output feeding it
+            # — recover it from the xhat tap shape at trace time; easier:
+            # bn output shape equals its input, which we do not know here,
+            # so bn probes are created inside make_step from a shape probe.
+            continue
+        probes[name] = jnp.zeros(geo[name]["g_tap"], jnp.float32)
+    return probes
+
+
+def _loss_from_logits(logits, t):
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.mean(jnp.sum(t * logp, axis=-1))
+    ncorrect = jnp.sum(
+        (jnp.argmax(logits, -1) == jnp.argmax(t, -1)).astype(jnp.float32)
+    )
+    return loss, ncorrect
+
+
+def _bn_probe_shapes(cfg, geo):
+    """BN probe shape = shape of the tensor the BN normalizes = the g_tap
+    of the conv feeding it. We find it by symbolic pairing: in the op
+    program a Bn always follows its Conv (and proj bn follows proj conv)."""
+    shapes = {}
+    prev_conv = None
+    for op in cfg.ops:
+        if isinstance(op, C.Conv):
+            prev_conv = op
+        elif isinstance(op, C.Bn):
+            assert prev_conv is not None, f"bn {op.name} without conv"
+            shapes[op.name] = geo[prev_conv.name]["g_tap"]
+        elif isinstance(op, C.Add) and op.proj_conv is not None:
+            shapes[op.proj_bn.name] = geo[op.proj_conv.name]["g_tap"]
+    return shapes
+
+
+def make_step(cfg: C.ModelCfg, fisher="emp"):
+    """Build the per-step function.
+
+    Inputs:  params (list in param order), x (B,C,H,W), t (B,K) soft
+             one-hot, and for fisher='1mc' a scalar uint32 seed.
+    Outputs (ordered, see aot.manifest):
+      loss, ncorrect,
+      grads (one per param, param order),
+      per conv/fc K-FAC layer (kfac order): a_tap, g_tap,
+      per bn layer (kfac order): g_gamma (B,C), g_beta (B,C),
+      per bn layer (kfac order): batch mean (C,), batch var (C,).
+    """
+    geo = layer_geometry(cfg)
+    bn_probe_shapes = _bn_probe_shapes(cfg, geo)
+    b = cfg.batch
+    klayers = kfac_layers(cfg)
+
+    def build_probes():
+        probes = {}
+        for name, kind, _ in klayers:
+            if kind == "bn":
+                probes[name] = jnp.zeros(bn_probe_shapes[name], jnp.float32)
+            else:
+                probes[name] = jnp.zeros(geo[name]["g_tap"], jnp.float32)
+        return probes
+
+    def loss_fn(params_list, probes, x, t):
+        pdict = params_to_dict(cfg, params_list)
+        logits, taps, bn_stats = forward(cfg, pdict, probes, x)
+        loss, ncorrect = _loss_from_logits(logits, t)
+        return loss, (logits, taps, bn_stats, ncorrect)
+
+    def collect_outputs(gparams, gprobes, taps, bn_stats, loss, ncorrect):
+        outs = [loss, ncorrect]
+        outs.extend(gparams)
+        for name, kind, _ in klayers:
+            if kind == "bn":
+                continue
+            gs = gprobes[name] * b  # per-sample dlogp/ds (sign-flipped)
+            outs.append(taps[name + ".a"])
+            outs.append(gs)
+        for name, kind, _ in klayers:
+            if kind != "bn":
+                continue
+            gs = gprobes[name] * b
+            xhat = taps[name + ".xhat"]
+            outs.append(jnp.sum(gs * xhat, axis=(2, 3)))  # g_gamma (B,C)
+            outs.append(jnp.sum(gs, axis=(2, 3)))  # g_beta (B,C)
+        for name, kind, _ in klayers:
+            if kind != "bn":
+                continue
+            mean, var = bn_stats[name]
+            outs.append(mean)
+            outs.append(var)
+        return tuple(outs)
+
+    if fisher == "emp":
+
+        def step(params_list, x, t):
+            probes = build_probes()
+            (loss, (logits, taps, bn_stats, ncorrect)), (gp, gprobe) = (
+                jax.value_and_grad(loss_fn, argnums=(0, 1), has_aux=True)(
+                    params_list, probes, x, t
+                )
+            )
+            return collect_outputs(gp, gprobe, taps, bn_stats, loss, ncorrect)
+
+        return step
+
+    elif fisher == "1mc":
+
+        def step(params_list, x, t, seed):
+            probes = build_probes()
+            # backward 1: gradients w.r.t. params for the *true* labels
+            (loss, (logits, taps, bn_stats, ncorrect)), gp = (
+                jax.value_and_grad(loss_fn, argnums=0, has_aux=True)(
+                    params_list, probes, x, t
+                )
+            )
+            # sample y ~ p_theta(y|x); backward 2: probe grads for the
+            # sampled labels (the Monte-Carlo Fisher estimate, Eq. 5)
+            key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+            y = jax.random.categorical(key, logits, axis=-1)
+            t_mc = jax.nn.one_hot(y, cfg.num_classes, dtype=jnp.float32)
+            (_, _), gprobe = jax.value_and_grad(
+                loss_fn, argnums=1, has_aux=True
+            )(params_list, probes, x, t_mc)
+            return collect_outputs(gp, gprobe, taps, bn_stats, loss, ncorrect)
+
+        return step
+
+    raise ValueError(f"unknown fisher mode {fisher}")
+
+
+def make_eval(cfg: C.ModelCfg):
+    """eval_batch(params, x, t, bn_means..., bn_vars...) -> loss, ncorrect.
+
+    Uses running BN statistics maintained by the rust coordinator.
+    """
+    bn_names = [n for n, k, _ in kfac_layers(cfg) if k == "bn"]
+
+    def eval_batch(params_list, x, t, bn_means, bn_vars):
+        pdict = params_to_dict(cfg, params_list)
+        bn_running = {
+            n: (bn_means[i], bn_vars[i]) for i, n in enumerate(bn_names)
+        }
+        logits, _, _ = forward(cfg, pdict, {}, x, bn_running=bn_running)
+        loss, ncorrect = _loss_from_logits(logits, t)
+        return loss, ncorrect
+
+    return eval_batch

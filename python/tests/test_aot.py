@@ -1,0 +1,87 @@
+"""AOT pipeline tests: manifest consistency, HLO text validity, init
+params, bucket policy, and output-layout agreement with the model."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, config as C, model as M
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    b = aot.Builder(out)
+    b.add_model(C.convnet_tiny(batch=4))
+    b.write_manifest()
+    with open(os.path.join(out, "manifest.json")) as f:
+        manifest = json.load(f)
+    return out, manifest
+
+
+def test_manifest_references_existing_files(built):
+    out, manifest = built
+    for name, e in manifest["executables"].items():
+        path = os.path.join(out, e["file"])
+        assert os.path.exists(path), f"{name} missing artifact file"
+        head = open(path).read(200)
+        assert "HloModule" in head, f"{name} is not HLO text"
+
+
+def test_layer_table_consistent(built):
+    _, manifest = built
+    m = manifest["models"]["convnet_tiny"]
+    exes = manifest["executables"]
+    for l in m["kfac_layers"]:
+        if l["kind"] == "bn":
+            assert l["bn_inv"] in exes
+            assert l["bn_full"] in exes
+            assert l["invert_full"] in exes
+            assert l["full_bucket"] >= 2 * l["channels"]
+        else:
+            assert l["factor_a"] in exes
+            assert l["factor_g"] in exes
+            assert l["invert_a"] in exes
+            assert l["precond"] in exes
+            # bucket = ceil16 >= dim
+            assert l["a_bucket"] >= l["a_dim"]
+            assert l["a_bucket"] % 16 == 0
+            assert l["grad_shape"] == [l["g_dim"], l["a_dim"]]
+
+
+def test_step_outputs_cover_model(built):
+    _, manifest = built
+    m = manifest["models"]["convnet_tiny"]
+    cfg = C.convnet_tiny(batch=4)
+    roles = [o["role"] for o in m["step_outputs"]]
+    assert roles[0] == "loss" and roles[1] == "ncorrect"
+    assert roles.count("grad") == len(M.param_shapes(cfg))
+    n_convfc = sum(1 for _, k, _ in M.kfac_layers(cfg) if k != "bn")
+    n_bn = sum(1 for _, k, _ in M.kfac_layers(cfg) if k == "bn")
+    assert roles.count("a_tap") == n_convfc
+    assert roles.count("g_tap") == n_convfc
+    assert roles.count("g_gamma") == n_bn
+    assert roles.count("bn_mean") == n_bn
+
+
+def test_init_params_file_size(built):
+    out, manifest = built
+    m = manifest["models"]["convnet_tiny"]
+    total = sum(int(np.prod(p["shape"])) for p in m["params"])
+    size = os.path.getsize(os.path.join(out, m["init_file"]))
+    assert size == 4 * total
+
+
+def test_bucket_function():
+    assert aot.bucket(1) == 16
+    assert aot.bucket(16) == 16
+    assert aot.bucket(17) == 32
+    assert aot.bucket(288) == 288
+
+
+def test_executables_deduplicated(built):
+    out, manifest = built
+    files = [e["file"] for e in manifest["executables"].values()]
+    assert len(files) == len(set(files)), "duplicate artifact files"

@@ -1,0 +1,219 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+hypothesis sweeps shapes; fixed-seed numpy draws the values. These tests
+are the CORE correctness signal for everything the rust coordinator
+executes via the AOT artifacts.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    bn_full_fisher,
+    bn_unit_fisher_inv,
+    im2col,
+    matmul,
+    matmul_2c_minus,
+    newton_schulz_inverse,
+    precondition,
+    syrk,
+)
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0)
+
+
+def randm(*shape, scale=1.0):
+    return (RNG.standard_normal(shape) * scale).astype(np.float32)
+
+
+def spd(n, damp=0.1):
+    b = randm(n, n)
+    return (b @ b.T / n + damp * np.eye(n)).astype(np.float32)
+
+
+# ---------------------------------------------------------------- matmul
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 200),
+    n=st.integers(1, 200),
+)
+def test_matmul_matches_ref(m, k, n):
+    a, b = randm(m, k), randm(k, n)
+    got = np.asarray(matmul(a, b))
+    want = np.asarray(ref.matmul(a, b))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_tile_boundaries():
+    # exactly at/around the 128 MXU tile edge
+    for m, k, n in [(128, 128, 128), (129, 127, 128), (256, 1, 7)]:
+        a, b = randm(m, k), randm(k, n)
+        np.testing.assert_allclose(
+            np.asarray(matmul(a, b)), a @ b, rtol=1e-4, atol=1e-4
+        )
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(1, 96), k=st.integers(1, 96), n=st.integers(1, 96))
+def test_matmul_epilogue(m, k, n):
+    a, b, c = randm(m, k), randm(k, n), randm(m, n)
+    got = np.asarray(matmul_2c_minus(a, b, c))
+    np.testing.assert_allclose(got, 2 * c - a @ b, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------ syrk
+
+@settings(max_examples=25, deadline=None)
+@given(r=st.integers(1, 300), c=st.integers(1, 160))
+def test_syrk_matches_ref(r, c):
+    x = randm(r, c)
+    scale = 1.0 / r
+    got = np.asarray(syrk(x, scale))
+    want = np.asarray(ref.syrk(x, scale))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_syrk_symmetric_output():
+    x = randm(64, 48)
+    a = np.asarray(syrk(x, 1.0 / 64))
+    np.testing.assert_allclose(a, a.T, rtol=0, atol=1e-6)
+
+
+def test_syrk_psd():
+    x = randm(100, 30)
+    a = np.asarray(syrk(x, 1.0 / 100)).astype(np.float64)
+    eigs = np.linalg.eigvalsh((a + a.T) / 2)
+    assert eigs.min() > -1e-5
+
+
+# ---------------------------------------------------------------- im2col
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    c=st.integers(1, 8),
+    hw=st.integers(4, 20),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+)
+def test_im2col_matches_ref(b, c, hw, k, stride):
+    pad = k // 2
+    x = randm(b, c, hw, hw)
+    got = np.asarray(im2col(x, k, stride, pad))
+    want = np.asarray(ref.im2col(x, k, stride, pad))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_im2col_identity_k1():
+    x = randm(2, 3, 5, 5)
+    got = np.asarray(im2col(x, 1, 1, 0))  # (B, 25, 3)
+    want = x.reshape(2, 3, 25).transpose(0, 2, 1)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_conv_factor_pipeline_matches_direct_gram():
+    """A-factor for a conv layer: im2col -> syrk == direct patch Gram."""
+    b, c, h, k = 2, 4, 8, 3
+    x = randm(b, c, h, h)
+    patches = np.asarray(ref.im2col(x, k, 1, 1))  # (B, hw, c*k*k)
+    flat = patches.reshape(-1, c * k * k)
+    scale = 1.0 / flat.shape[0]
+    want = scale * flat.T @ flat
+    got_patches = np.asarray(im2col(x, k, 1, 1)).reshape(-1, c * k * k)
+    got = np.asarray(syrk(got_patches, scale))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------- newton-schulz
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(2, 96))
+def test_ns_inverse_matches_numpy(n):
+    m = spd(n, damp=0.05)
+    lam = 0.05
+    got = np.asarray(newton_schulz_inverse(m, jnp.float32(lam), iters=25))
+    want = np.linalg.inv(m.astype(np.float64) + lam * np.eye(n))
+    resid = np.abs(got - want).max() / max(1.0, np.abs(want).max())
+    assert resid < 5e-3, f"n={n} resid={resid}"
+
+
+def test_ns_inverse_matches_ref_oracle():
+    m = spd(32)
+    lam = 0.1
+    got = np.asarray(newton_schulz_inverse(m, jnp.float32(lam), iters=20))
+    want = np.asarray(ref.newton_schulz_inverse(m, lam, iters=20))
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_ns_inverse_identity():
+    eye = np.eye(16, dtype=np.float32)
+    got = np.asarray(newton_schulz_inverse(eye, jnp.float32(0.0), iters=20))
+    np.testing.assert_allclose(got, eye, rtol=1e-4, atol=1e-4)
+
+
+def test_ns_residual_shrinks_with_iters():
+    m = spd(48, damp=0.02)
+    lam = 0.02
+    md = m.astype(np.float64) + lam * np.eye(48)
+    r = []
+    for it in [5, 12, 25]:
+        x = np.asarray(newton_schulz_inverse(m, jnp.float32(lam), iters=it))
+        r.append(np.abs(md @ x - np.eye(48)).max())
+    assert r[2] < r[0], f"residuals {r}"
+    assert r[2] < 1e-2
+
+
+# --------------------------------------------------------- precondition
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(1, 80), n=st.integers(1, 80))
+def test_precondition_matches_ref(m, n):
+    ginv, grad, ainv = randm(m, m), randm(m, n), randm(n, n)
+    got = np.asarray(precondition(ginv, grad, ainv))
+    want = np.asarray(ref.precondition(ginv, grad, ainv))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_precondition_with_identity_is_noop():
+    grad = randm(24, 36)
+    got = np.asarray(precondition(np.eye(24, dtype=np.float32), grad,
+                                  np.eye(36, dtype=np.float32)))
+    np.testing.assert_allclose(got, grad, rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------------- BN
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.integers(1, 64), c=st.integers(1, 64))
+def test_bn_unit_fisher_inverse(b, c):
+    gg, gb = randm(b, c), randm(b, c)
+    lam = 0.05
+    inv = np.asarray(bn_unit_fisher_inv(gg, gb, jnp.float32(lam)))
+    f = np.asarray(ref.bn_unit_fisher(gg, gb))
+    for ch in range(c):
+        blk = f[ch] + lam * np.eye(2)
+        np.testing.assert_allclose(
+            inv[ch] @ blk, np.eye(2), rtol=1e-3, atol=1e-3
+        )
+
+
+def test_bn_full_fisher_contains_unit_blocks():
+    """The 2x2 diagonal blocks of the full BN Fisher equal the unit-wise
+    Fisher — the structural claim behind the unitBN approximation."""
+    b, c = 32, 8
+    gg, gb = randm(b, c), randm(b, c)
+    full = np.asarray(bn_full_fisher(gg, gb))
+    unit = np.asarray(ref.bn_unit_fisher(gg, gb))
+    assert full.shape == (2 * c, 2 * c)
+    for ch in range(c):
+        np.testing.assert_allclose(
+            full[2 * ch: 2 * ch + 2, 2 * ch: 2 * ch + 2],
+            unit[ch],
+            rtol=1e-5,
+            atol=1e-5,
+        )
+    np.testing.assert_allclose(full, full.T, atol=1e-6)

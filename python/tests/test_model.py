@@ -1,0 +1,240 @@
+"""L2 model correctness: probe-trick Fisher taps vs direct per-sample
+gradients (vmap), factor assembly vs definitions (Eqs. 9, 11, 15-16),
+shape bookkeeping, and eval-mode BN behaviour."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import config as C, model as M
+from compile.kernels import ref
+
+
+def data(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    b = cfg.batch
+    c, h, w = cfg.in_shape
+    x = rng.standard_normal((b, c, h, w)).astype(np.float32)
+    t = np.eye(cfg.num_classes, dtype=np.float32)[
+        rng.integers(0, cfg.num_classes, b)
+    ]
+    return x, t
+
+
+def run_step(cfg, fisher="emp", seed=0):
+    params = M.init_params(cfg, 3)
+    x, t = data(cfg, seed)
+    step = M.make_step(cfg, fisher)
+    if fisher == "1mc":
+        outs = step(params, x, t, jnp.uint32(11))
+    else:
+        outs = step(params, x, t)
+    return params, x, t, outs
+
+
+def split_outputs(cfg, outs):
+    """Mirror of the manifest output layout."""
+    klayers = M.kfac_layers(cfg)
+    nparams = len(M.param_shapes(cfg))
+    loss, ncorrect = outs[0], outs[1]
+    grads = outs[2 : 2 + nparams]
+    i = 2 + nparams
+    taps = {}
+    for name, kind, _ in klayers:
+        if kind == "bn":
+            continue
+        taps[name] = (outs[i], outs[i + 1])
+        i += 2
+    bn_taps = {}
+    for name, kind, _ in klayers:
+        if kind != "bn":
+            continue
+        bn_taps[name] = (outs[i], outs[i + 1])
+        i += 2
+    bn_stats = {}
+    for name, kind, _ in klayers:
+        if kind != "bn":
+            continue
+        bn_stats[name] = (outs[i], outs[i + 1])
+        i += 2
+    assert i == len(outs)
+    return loss, ncorrect, grads, taps, bn_taps, bn_stats
+
+
+def per_sample_probe_grads(cfg, params, x, t):
+    """Direct per-sample gradients w.r.t. every probe via vmap — the
+    oracle for the probe trick."""
+    geo = M.layer_geometry(cfg)
+    bn_shapes = M._bn_probe_shapes(cfg, geo)
+    klayers = M.kfac_layers(cfg)
+
+    def one(xi, ti):
+        xi = xi[None]
+        ti = ti[None]
+        probes = {}
+        for name, kind, _ in klayers:
+            shape = bn_shapes[name] if kind == "bn" else geo[name]["g_tap"]
+            probes[name] = jnp.zeros((1,) + tuple(shape[1:]), jnp.float32)
+
+        def f(probes):
+            pdict = M.params_to_dict(cfg, params)
+            logits, _, _ = M.forward(cfg, pdict, probes, xi)
+            logp = jax.nn.log_softmax(logits)
+            return -jnp.sum(ti * logp)
+
+        return jax.grad(f)(probes)
+
+    return jax.vmap(one)(jnp.asarray(x), jnp.asarray(t))
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    return C.convnet_tiny(batch=4)
+
+
+def test_probe_grads_match_per_sample(tiny):
+    """g_tap (B-scaled probe grad) == per-sample dloss_i/ds — BN stats in
+    the vmap oracle differ (per-sample batch of 1), so compare on the MLP
+    where no BN exists, elementwise."""
+    cfg = C.mlp(batch=6)
+    params, x, t, outs = run_step(cfg)
+    _, _, _, taps, _, _ = split_outputs(cfg, outs)
+    ps = per_sample_probe_grads(cfg, params, x, t)
+    for name, kind, _ in M.kfac_layers(cfg):
+        if kind != "fc":
+            continue
+        gs = np.asarray(taps[name][1])  # (B, dout)
+        want = np.asarray(ps[name]).reshape(gs.shape)
+        np.testing.assert_allclose(gs, want, rtol=1e-4, atol=1e-5)
+
+
+def test_fc_factor_assembly_matches_kfac_definition():
+    """A = E[a a^T], G = E[g g^T] assembled from taps equals the K-FAC
+    definition computed from explicit per-sample grads (Eq. 9)."""
+    cfg = C.mlp(batch=8)
+    params, x, t, outs = run_step(cfg)
+    _, _, _, taps, _, _ = split_outputs(cfg, outs)
+    ps = per_sample_probe_grads(cfg, params, x, t)
+    b = cfg.batch
+    for name, kind, _ in M.kfac_layers(cfg):
+        a_tap, g_tap = taps[name]
+        A = np.asarray(ref.syrk(a_tap, 1.0 / b))
+        G = np.asarray(ref.syrk(g_tap, 1.0 / b))
+        gs = np.asarray(ps[name]).reshape(b, -1)
+        G_want = gs.T @ gs / b
+        np.testing.assert_allclose(G, G_want, rtol=1e-4, atol=1e-6)
+        a = np.asarray(a_tap)
+        np.testing.assert_allclose(A, a.T @ a / b, rtol=1e-4, atol=1e-6)
+
+
+def test_fc_kron_grad_identity():
+    """Sanity: mean gradient == E[g a^T] reconstructed from taps — ties
+    the taps to the actual parameter gradient (loss sign included)."""
+    cfg = C.mlp(batch=8)
+    params, x, t, outs = run_step(cfg)
+    _, _, grads, taps, _, _ = split_outputs(cfg, outs)
+    pnames = [n for n, _ in M.param_shapes(cfg)]
+    b = cfg.batch
+    for name, kind, _ in M.kfac_layers(cfg):
+        a_tap, g_tap = np.asarray(taps[name][0]), np.asarray(taps[name][1])
+        # g_tap rows are B * dL_mean/ds_i = per-sample dCE_i/ds (positive CE)
+        want = g_tap.T @ a_tap / b
+        g = np.asarray(grads[pnames.index(name + ".w")])
+        np.testing.assert_allclose(g, want, rtol=1e-3, atol=1e-5)
+
+
+def test_conv_factor_shapes_and_psd(tiny):
+    cfg = tiny
+    params, x, t, outs = run_step(cfg)
+    _, _, _, taps, _, _ = split_outputs(cfg, outs)
+    geo = M.layer_geometry(cfg)
+    for name, kind, _ in M.kfac_layers(cfg):
+        if kind != "conv":
+            continue
+        g = geo[name]
+        a_tap, g_tap = taps[name]
+        assert tuple(a_tap.shape) == g["a_tap"]
+        assert tuple(g_tap.shape) == g["g_tap"]
+        cin, hh, ww, k, s, p = g["conv_sig"]
+        patches = np.asarray(ref.im2col(a_tap, k, s, p)).reshape(-1, g["a_dim"])
+        A = patches.T @ patches / patches.shape[0]
+        eig = np.linalg.eigvalsh((A + A.T) / 2)
+        assert eig.min() > -1e-5
+        gs2 = np.asarray(g_tap).transpose(0, 2, 3, 1).reshape(-1, g["g_dim"])
+        G = gs2.T @ gs2 / cfg.batch
+        eig = np.linalg.eigvalsh((G + G.T) / 2)
+        assert eig.min() > -1e-5
+
+
+def test_bn_taps_match_param_grads(tiny):
+    """mean over batch of per-sample BN grads == the parameter gradient
+    (consistency of g_gamma/g_beta taps with autodiff)."""
+    cfg = tiny
+    params, x, t, outs = run_step(cfg)
+    _, _, grads, _, bn_taps, _ = split_outputs(cfg, outs)
+    pnames = [n for n, _ in M.param_shapes(cfg)]
+    b = cfg.batch
+    for name, kind, _ in M.kfac_layers(cfg):
+        if kind != "bn":
+            continue
+        gg, gb = np.asarray(bn_taps[name][0]), np.asarray(bn_taps[name][1])
+        gamma_grad = np.asarray(grads[pnames.index(name + ".gamma")])
+        beta_grad = np.asarray(grads[pnames.index(name + ".beta")])
+        np.testing.assert_allclose(gg.mean(0), gamma_grad, rtol=1e-3, atol=1e-5)
+        np.testing.assert_allclose(gb.mean(0), beta_grad, rtol=1e-3, atol=1e-5)
+
+
+def test_1mc_same_loss_different_taps(tiny):
+    cfg = tiny
+    params = M.init_params(cfg, 3)
+    x, t = data(cfg)
+    emp = M.make_step(cfg, "emp")(params, x, t)
+    mc = M.make_step(cfg, "1mc")(params, x, t, jnp.uint32(11))
+    assert float(emp[0]) == pytest.approx(float(mc[0]), rel=1e-6)
+    # param grads identical (true labels); taps differ (sampled labels)
+    nparams = len(M.param_shapes(cfg))
+    for i in range(2, 2 + nparams):
+        np.testing.assert_allclose(
+            np.asarray(emp[i]), np.asarray(mc[i]), rtol=1e-5, atol=1e-6
+        )
+    _, _, _, taps_e, _, _ = split_outputs(cfg, emp)
+    _, _, _, taps_m, _, _ = split_outputs(cfg, mc)
+    diffs = [
+        np.abs(np.asarray(taps_e[n][1]) - np.asarray(taps_m[n][1])).max()
+        for n, k, _ in M.kfac_layers(cfg)
+        if k != "bn"
+    ]
+    assert max(diffs) > 1e-6, "1mc taps should differ from emp taps"
+
+
+def test_eval_uses_running_stats(tiny):
+    cfg = tiny
+    params = M.init_params(cfg, 3)
+    x, t = data(cfg)
+    ev = M.make_eval(cfg)
+    bn_names = [n for n, k, _ in M.kfac_layers(cfg) if k == "bn"]
+    geo = M.layer_geometry(cfg)
+    m0 = [jnp.zeros((geo[n]["c"],)) for n in bn_names]
+    v0 = [jnp.ones((geo[n]["c"],)) for n in bn_names]
+    l0, _ = ev(params, x, t, m0, v0)
+    v1 = [10.0 * v for v in v0]
+    l1, _ = ev(params, x, t, m0, v1)
+    assert float(l0) != pytest.approx(float(l1)), "bn stats must matter"
+
+
+def test_param_order_deterministic(tiny):
+    a = [n for n, _ in M.param_shapes(tiny)]
+    b = [n for n, _ in M.param_shapes(C.convnet_tiny(batch=4))]
+    assert a == b
+
+
+def test_init_henormal_stats():
+    cfg = C.mlp(batch=4)
+    params = M.init_params(cfg, 0)
+    shapes = M.param_shapes(cfg)
+    for (name, shape), p in zip(shapes, params):
+        if name.endswith(".w") and np.prod(shape) > 1000:
+            fan_in = int(np.prod(shape[1:]))
+            std = np.asarray(p).std()
+            assert std == pytest.approx((2.0 / fan_in) ** 0.5, rel=0.2)

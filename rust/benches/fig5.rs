@@ -1,0 +1,90 @@
+//! Fig. 5 bench: time/step vs #GPUs for every practical-NGD technique
+//! combination (1mc/emp × fullBN/unitBN × ±stale).
+//!
+//! Measures the real coordinator profile on this machine, then replays it
+//! through the α-β cluster model (V100/IB constants). The paper's claims
+//! checked here: superlinear scaling to 64 GPUs from model-parallel
+//! inversion, near-ideal 128→1024 scaling for emp+unitBN+stale, and the
+//! technique ordering (1mc+fullBN slowest … emp+unitBN+stale fastest).
+
+use spngd::collectives::cost::ClusterModel;
+use spngd::coordinator::{Fisher, Optim};
+use spngd::harness;
+use spngd::simulator;
+
+fn main() {
+    let mut cfg = harness::default_cfg("convnet_small", Optim::SpNgd);
+    cfg.workers = 2;
+    let mut tr = harness::make_trainer(cfg, 4096, 7).expect("artifacts");
+    for _ in 0..6 {
+        tr.step().unwrap();
+    }
+    let base = tr.profile();
+
+    let mut cfg1 = harness::default_cfg("convnet_small", Optim::SpNgd);
+    cfg1.workers = 2;
+    cfg1.fisher = Fisher::OneMc;
+    let mut tr1 = harness::make_trainer(cfg1, 4096, 7).expect("artifacts");
+    for _ in 0..6 {
+        tr1.step().unwrap();
+    }
+    let p1 = tr1.profile();
+    let extra_bwd = ((p1.t_forward + p1.t_backward) - (base.t_forward + base.t_backward)).max(0.0);
+
+    // stale fraction from a longer accumulation run (statistics at our
+    // batch scale need α=0.3; the paper's α=0.1 applies at BS≥4K)
+    let mut cfg_s = harness::default_cfg("convnet_small", Optim::SpNgd);
+    cfg_s.workers = 2;
+    cfg_s.grad_accum = 2;
+    cfg_s.stale = true;
+    cfg_s.stale_alpha = 0.3;
+    let mut tr_s = harness::make_trainer(cfg_s, 4096, 7).expect("artifacts");
+    for _ in 0..30 {
+        tr_s.step().unwrap();
+    }
+    let stale_fraction = tr_s.comm_reduction();
+
+    let deltas = simulator::TechniqueDeltas {
+        t_extra_bwd_1mc: extra_bwd,
+        t_full_bn_extra: base.t_inverse * 0.5,
+        full_bn_extra_bytes: base.stats_bytes * 0.25,
+        stale_fraction,
+    };
+    let variants: Vec<simulator::Variant> = simulator::fig5_techniques()
+        .iter()
+        .map(|&t| simulator::derive(&base, &deltas, t))
+        .collect();
+    let gpus = [1usize, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024];
+    let rows = simulator::sweep(&variants, &gpus, &ClusterModel::default());
+
+    println!("\n=== Fig. 5: time/step (ms) vs #GPUs, 32 images/GPU ===");
+    print!("{:>20}", "technique");
+    for g in &gpus {
+        print!("{g:>8}");
+    }
+    println!();
+    for row in &rows {
+        print!("{:>20}", row.label);
+        for (_, t) in &row.points {
+            print!("{:>8.1}", t * 1e3);
+        }
+        println!();
+    }
+
+    // paper-shape assertions
+    let at = |row: &simulator::SweepRow, g: usize| {
+        row.points.iter().find(|&&(p, _)| p == g).unwrap().1
+    };
+    let best = rows.last().unwrap();
+    let sup = at(best, 1) / at(best, 64);
+    let ideal = at(best, 1024) / at(best, 128);
+    println!("\nsuperlinear 1→64: {sup:.2}x speedup (paper: ~3-4x; >1 required)");
+    println!("near-ideal 128→1024: {ideal:.2}x (paper ≈1)");
+    assert!(sup > 1.0, "superlinear region missing");
+    assert!(ideal < 1.5, "128→1024 should be near-ideal");
+    for g in [1usize, 64, 1024] {
+        assert!(at(&rows[0], g) >= at(&rows[3], g), "1mc+fullBN >= emp+unitBN at {g}");
+        assert!(at(&rows[4], g) <= at(&rows[3], g), "stale fastest at {g}");
+    }
+    println!("fig5 shape checks PASSED (stale fraction measured: {:.1}%)", stale_fraction * 100.0);
+}

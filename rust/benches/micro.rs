@@ -1,0 +1,136 @@
+//! Micro-benchmarks + ablations: per-executable costs (the Stage-1/4 hot
+//! paths), collective op costs, symmetric-packing savings, and the
+//! unitBN-vs-fullBN inversion ablation (§4.2).
+
+use spngd::collectives::comm::{SimComm, StatClass};
+use spngd::harness::{self, bench};
+use spngd::kfac::bn::{BnFisher, BnFullFisher};
+use spngd::linalg::{pack_upper, solve, unpack_upper, Mat};
+use spngd::runtime::HostTensor;
+use spngd::util::rng::Rng;
+
+fn main() {
+    let (manifest, engine) = harness::load_runtime().expect("artifacts");
+    let model = manifest.model("convnet_small").unwrap();
+    let params = manifest.load_init_params(model).unwrap();
+    let mut rng = Rng::new(1);
+
+    // ---- Stage 1+2: the step executable (fwd/bwd + taps)
+    let n_in: usize = model.input_shape.iter().product();
+    let x = HostTensor::new(model.input_shape.clone(), (0..n_in).map(|_| rng.f32()).collect());
+    let mut t = HostTensor::zeros(vec![model.batch, model.num_classes]);
+    for b in 0..model.batch {
+        t.data[b * model.num_classes] = 1.0;
+    }
+    let mut inputs: Vec<&HostTensor> = params.iter().collect();
+    inputs.push(&x);
+    inputs.push(&t);
+    bench("L2 step_emp fwd/bwd+taps", 2, 10, || {
+        engine.execute(&model.step_emp, &inputs).unwrap();
+    });
+    bench("L2 step_1mc (extra backward)", 2, 10, || {
+        engine.execute_seeded(&model.step_1mc, &inputs, Some(3)).unwrap();
+    });
+    bench("L2 eval", 2, 10, || {
+        let mut ev: Vec<&HostTensor> = params.iter().collect();
+        ev.push(&x);
+        ev.push(&t);
+        let bn: Vec<HostTensor> = model
+            .bn_order
+            .iter()
+            .map(|nm| HostTensor::zeros(vec![model.layer(nm).unwrap().channels]))
+            .collect();
+        let bnv: Vec<HostTensor> = model
+            .bn_order
+            .iter()
+            .map(|nm| {
+                let c = model.layer(nm).unwrap().channels;
+                HostTensor::new(vec![c], vec![1.0; c])
+            })
+            .collect();
+        for b in &bn {
+            ev.push(b);
+        }
+        for v in &bnv {
+            ev.push(v);
+        }
+        engine.execute(&model.eval_exe, &ev).unwrap();
+    });
+
+    // ---- Stage 1: factor construction kernels (L1 Pallas)
+    for l in model.kfac_layers.iter().filter(|l| !l.is_bn()).take(3) {
+        let a_shape = manifest
+            .models
+            .get("convnet_small")
+            .unwrap()
+            .step_outputs
+            .iter()
+            .find(|o| o.role == "a_tap" && o.layer.as_deref() == Some(&l.name))
+            .unwrap()
+            .shape
+            .clone();
+        let n: usize = a_shape.iter().product();
+        let tap = HostTensor::new(a_shape, (0..n).map(|_| rng.f32()).collect());
+        bench(&format!("L1 factor_a {}", l.name), 2, 10, || {
+            engine.execute(&l.factor_a, &[&tap]).unwrap();
+        });
+    }
+
+    // ---- Stage 4: inversion buckets (L1 Newton-Schulz)
+    let mut buckets: Vec<usize> = manifest
+        .executables
+        .keys()
+        .filter_map(|k| k.strip_prefix("invert_").and_then(|s| s.parse().ok()))
+        .collect();
+    buckets.sort();
+    for n in buckets {
+        let b: Vec<f32> = (0..n * n).map(|_| rng.normal() as f32).collect();
+        let bm = Mat::from_vec(n, n, b);
+        let mut m = bm.transpose().matmul(&bm).scale(1.0 / n as f32);
+        m.symmetrize();
+        let mt = HostTensor::from_mat(&m);
+        let damp = HostTensor::scalar(0.05);
+        bench(&format!("L1 invert_{n} (Newton-Schulz)"), 1, 6, || {
+            engine.execute(&format!("invert_{n}"), &[&mt, &damp]).unwrap();
+        });
+        // host-side Gauss-Jordan comparison (the non-MXU alternative)
+        let mut md = m.clone();
+        md.add_diag(0.05);
+        bench(&format!("L3 gauss_jordan_{n} (host)"), 1, 6, || {
+            solve::gauss_jordan_inverse(&md).unwrap();
+        });
+    }
+
+    // ---- ablation: unitBN vs fullBN (§4.2)
+    let c = 32;
+    let bsz = 32;
+    let gg: Vec<f32> = (0..bsz * c).map(|_| rng.normal() as f32).collect();
+    let gb: Vec<f32> = (0..bsz * c).map(|_| rng.normal() as f32).collect();
+    bench("BN unit fisher + closed-form inverse (C=32)", 5, 50, || {
+        let f = BnFisher::from_taps(&gg, &gb, bsz, c);
+        let grads = vec![0.1f32; c];
+        let _ = f.precondition(&grads, &grads, 0.01);
+    });
+    bench("BN full fisher (2C)^2 + GJ inverse (C=32)", 2, 10, || {
+        let f = BnFullFisher::from_taps(&gg, &gb, bsz, c);
+        let mut fd = f.fisher.clone();
+        fd.add_diag(0.01);
+        let _ = solve::gauss_jordan_inverse(&fd).unwrap();
+    });
+
+    // ---- collectives: packed vs dense ReduceScatterV
+    let comm = SimComm::new(8);
+    let mats: Vec<Vec<Mat>> = (0..8).map(|_| vec![Mat::eye(288); 4]).collect();
+    bench("RS-V 8 workers, 4x 288^2 stats (packed acct)", 2, 10, || {
+        comm.reduce_scatter_v(&mats, &[StatClass::A; 4]);
+    });
+    bench("pack+unpack 288^2 symmetric", 5, 50, || {
+        let p = pack_upper(&mats[0][0]);
+        let _ = unpack_upper(&p, 288);
+    });
+    let mut grads: Vec<Vec<f32>> = (0..8).map(|_| vec![0.5f32; 43216]).collect();
+    bench("AllReduce 8 workers, 43k-param grads", 2, 10, || {
+        comm.all_reduce_mean(&mut grads);
+    });
+    println!("\nmicro bench done");
+}

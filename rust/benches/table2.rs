@@ -1,0 +1,74 @@
+//! Table 2 bench: the stale-statistics scheduler's communication
+//! reduction and speedup across batch sizes (emp+unitBN vs
+//! emp+unitBN+stale), plus the accuracy-preservation check.
+//!
+//! Paper Table 2 reports, per batch size: reduction↓ (communication kept,
+//! 5.4-23.6%) and speedup↑ (×1.32-1.68), with accuracy changing by ≤0.4%.
+//! Here batch size grows via gradient/statistics accumulation (the
+//! paper's own method for BS≥65K) and both variants train the same number
+//! of updates.
+
+use spngd::coordinator::Optim;
+use spngd::harness;
+use spngd::util::stats::fmt_duration;
+
+/// paper's Table 2 stale-statistics columns (reference)
+const PAPER: &[(usize, f64, f64)] = &[
+    (4_096, 23.6, 1.33),
+    (8_192, 15.1, 1.32),
+    (16_384, 5.4, 1.68),
+    (32_768, 7.8, 1.40),
+];
+
+fn run(accum: usize, stale: bool, steps: usize) -> (f64, f64, f32) {
+    let mut cfg = harness::default_cfg("convnet_small", Optim::SpNgd);
+    cfg.workers = 2;
+    cfg.grad_accum = accum;
+    cfg.stale = stale;
+    cfg.stale_alpha = 0.3;
+    let mut tr = harness::make_trainer(cfg, 8192, 13).expect("artifacts");
+    for _ in 0..steps {
+        tr.step().unwrap();
+    }
+    let (_, acc) = tr.evaluate(8).unwrap();
+    (tr.log.mean_step_time(2), tr.comm_reduction(), acc)
+}
+
+fn main() {
+    println!("=== Table 2 (paper): stale-statistics columns ===");
+    println!("{:>8} {:>12} {:>9}", "BS", "reduction↓", "speedup↑");
+    for (bs, red, sp) in PAPER {
+        println!("{bs:>8} {red:>11.1}% {sp:>8.2}x");
+    }
+
+    println!("\n=== This reproduction (effective BS via accumulation) ===");
+    println!(
+        "{:>6} {:>7} {:>14} {:>14} {:>12} {:>9} {:>10} {:>10}",
+        "BS", "accum", "t/step (full)", "t/step (stale)", "reduction↓", "speedup↑", "acc full", "acc stale"
+    );
+    for &(accum, steps) in &[(1usize, 40usize), (2, 30), (4, 20)] {
+        let (t_full, _, acc_full) = run(accum, false, steps);
+        let (t_stale, reduction, acc_stale) = run(accum, true, steps);
+        let speedup = t_full / t_stale;
+        let bs = 2 * accum * 32;
+        println!(
+            "{:>6} {:>7} {:>14} {:>14} {:>11.1}% {:>8.2}x {:>9.3} {:>9.3}",
+            bs,
+            accum,
+            fmt_duration(t_full),
+            fmt_duration(t_stale),
+            reduction * 100.0,
+            speedup,
+            acc_full,
+            acc_stale
+        );
+        // paper shape: stale reduces communication and does not hurt
+        // accuracy by more than noise at this scale
+        assert!(reduction < 1.0, "stale must reduce communication");
+        assert!(
+            acc_stale > acc_full - 0.15,
+            "stale must not collapse accuracy: {acc_full} -> {acc_stale}"
+        );
+    }
+    println!("\ntable2 shape checks PASSED (reduction < 100%, accuracy preserved)");
+}

@@ -1,0 +1,268 @@
+//! In-process collective implementations with byte accounting.
+
+use std::sync::Mutex;
+
+use crate::linalg::{packed_len, Mat};
+
+/// Per-GPU communication byte counters (f32 payloads).
+#[derive(Clone, Debug, Default)]
+pub struct CommStats {
+    /// ReduceScatterV bytes for statistics (A factors).
+    pub rs_stats_a: u64,
+    /// ReduceScatterV bytes for statistics (G factors / BN Fishers).
+    pub rs_stats_g: u64,
+    /// ReduceScatter+AllGather bytes for gradients (AllReduce).
+    pub ar_grads: u64,
+    /// AllGatherV bytes for updated parameters.
+    pub ag_params: u64,
+    /// Number of collective invocations (latency accounting).
+    pub num_ops: u64,
+}
+
+impl CommStats {
+    pub fn total(&self) -> u64 {
+        self.rs_stats_a + self.rs_stats_g + self.ar_grads + self.ag_params
+    }
+    pub fn stats_total(&self) -> u64 {
+        self.rs_stats_a + self.rs_stats_g
+    }
+    pub fn add(&mut self, o: &CommStats) {
+        self.rs_stats_a += o.rs_stats_a;
+        self.rs_stats_g += o.rs_stats_g;
+        self.ar_grads += o.ar_grads;
+        self.ag_params += o.ag_params;
+        self.num_ops += o.num_ops;
+    }
+}
+
+/// Which statistic class a ReduceScatterV payload belongs to (Fig. 6
+/// stacks A separately from G/F).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StatClass {
+    A,
+    GorF,
+}
+
+/// Simulated communicator over `p` workers.
+pub struct SimComm {
+    p: usize,
+    /// communicate only the upper triangle of symmetric matrices (§5.2)
+    pub symmetric_packing: bool,
+    /// bytes per element on the wire (4 = f32, 2 = fp16 communication)
+    pub wire_elem_bytes: u64,
+    stats: Mutex<CommStats>,
+    step_stats: Mutex<CommStats>,
+}
+
+impl SimComm {
+    pub fn new(p: usize) -> Self {
+        SimComm {
+            p: p.max(1),
+            symmetric_packing: true,
+            wire_elem_bytes: 4,
+            stats: Mutex::new(CommStats::default()),
+            step_stats: Mutex::new(CommStats::default()),
+        }
+    }
+
+    pub fn world(&self) -> usize {
+        self.p
+    }
+
+    /// Per-GPU ring traffic for an N-element ReduceScatter (or AllGather).
+    fn ring_factor(&self) -> f64 {
+        (self.p as f64 - 1.0) / self.p as f64
+    }
+
+    fn elems_to_bytes(&self, elems: usize) -> u64 {
+        (elems as f64 * self.ring_factor() * self.wire_elem_bytes as f64).round() as u64
+    }
+
+    /// AllReduce (mean) of equal-shaped per-worker buffers; result is
+    /// written back to every worker. Ring AR = RS + AG.
+    pub fn all_reduce_mean(&self, bufs: &mut [Vec<f32>]) {
+        assert_eq!(bufs.len(), self.p, "one buffer per worker");
+        let n = bufs[0].len();
+        // reduce into worker 0 (f64 accumulation for order-stable means)
+        for i in 0..n {
+            let mut acc = 0.0f64;
+            for b in bufs.iter() {
+                acc += b[i] as f64;
+            }
+            bufs[0][i] = (acc / self.p as f64) as f32;
+        }
+        let (first, rest) = bufs.split_first_mut().unwrap();
+        for b in rest {
+            b.copy_from_slice(first);
+        }
+        let bytes = 2 * self.elems_to_bytes(n);
+        let mut s = self.stats.lock().unwrap();
+        s.ar_grads += bytes;
+        s.num_ops += 1;
+        let mut ss = self.step_stats.lock().unwrap();
+        ss.ar_grads += bytes;
+        ss.num_ops += 1;
+    }
+
+    /// ReduceScatterV for symmetric statistic matrices: `items[w][i]` is
+    /// worker w's local matrix for statistic i; the mean lands on the
+    /// owner of statistic i (model-parallel hand-off). Returns the
+    /// reduced matrices (one per statistic). Byte accounting uses the
+    /// packed (upper-triangular) size when enabled.
+    pub fn reduce_scatter_v(
+        &self,
+        items: &[Vec<Mat>],
+        classes: &[StatClass],
+    ) -> Vec<Mat> {
+        assert_eq!(items.len(), self.p);
+        let n_items = items[0].len();
+        assert_eq!(classes.len(), n_items);
+        let mut out = Vec::with_capacity(n_items);
+        let inv_p = 1.0 / self.p as f32;
+        let mut elems_a = 0usize;
+        let mut elems_g = 0usize;
+        for i in 0..n_items {
+            let mut acc = items[0][i].clone();
+            for w in 1..self.p {
+                let m = &items[w][i];
+                assert_eq!((m.rows, m.cols), (acc.rows, acc.cols));
+                for (a, b) in acc.data.iter_mut().zip(m.data.iter()) {
+                    *a += *b;
+                }
+            }
+            acc = acc.scale(inv_p);
+            let elems = if self.symmetric_packing && acc.is_square() {
+                packed_len(acc.rows)
+            } else {
+                acc.rows * acc.cols
+            };
+            match classes[i] {
+                StatClass::A => elems_a += elems,
+                StatClass::GorF => elems_g += elems,
+            }
+            out.push(acc);
+        }
+        let mut s = self.stats.lock().unwrap();
+        s.rs_stats_a += self.elems_to_bytes(elems_a);
+        s.rs_stats_g += self.elems_to_bytes(elems_g);
+        s.num_ops += 2;
+        drop(s);
+        let mut ss = self.step_stats.lock().unwrap();
+        ss.rs_stats_a += self.elems_to_bytes(elems_a);
+        ss.rs_stats_g += self.elems_to_bytes(elems_g);
+        ss.num_ops += 2;
+        out
+    }
+
+    /// AllGatherV of updated parameters (owners broadcast their layers).
+    /// Parameters are shared in-process, so this is accounting-only.
+    pub fn all_gather_v_params(&self, total_elems: usize) {
+        let bytes = self.elems_to_bytes(total_elems);
+        let mut s = self.stats.lock().unwrap();
+        s.ag_params += bytes;
+        s.num_ops += 1;
+        drop(s);
+        let mut ss = self.step_stats.lock().unwrap();
+        ss.ag_params += bytes;
+        ss.num_ops += 1;
+    }
+
+    /// Snapshot cumulative counters.
+    pub fn stats(&self) -> CommStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Take and reset the per-step counters (Fig. 6 series).
+    pub fn take_step_stats(&self) -> CommStats {
+        let mut ss = self.step_stats.lock().unwrap();
+        let out = ss.clone();
+        *ss = CommStats::default();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mats(vals: &[&[f32]], n: usize) -> Vec<Mat> {
+        vals.iter().map(|v| Mat::from_vec(n, n, v.to_vec())).collect()
+    }
+
+    #[test]
+    fn all_reduce_mean_exact() {
+        let c = SimComm::new(4);
+        let mut bufs = vec![
+            vec![1.0, 2.0],
+            vec![3.0, 4.0],
+            vec![5.0, 6.0],
+            vec![7.0, 8.0],
+        ];
+        c.all_reduce_mean(&mut bufs);
+        for b in &bufs {
+            assert_eq!(b, &vec![4.0, 5.0]);
+        }
+        let s = c.stats();
+        // 2 * (3/4) * 2 elems * 4 bytes = 12
+        assert_eq!(s.ar_grads, 12);
+    }
+
+    #[test]
+    fn reduce_scatter_v_mean_and_bytes() {
+        let c = SimComm::new(2);
+        let w0 = mats(&[&[1., 0., 0., 1.], &[2., 2., 2., 2.]], 2);
+        let w1 = mats(&[&[3., 0., 0., 3.], &[0., 0., 0., 0.]], 2);
+        let out = c.reduce_scatter_v(
+            &[w0, w1],
+            &[StatClass::A, StatClass::GorF],
+        );
+        assert_eq!(out[0].data, vec![2., 0., 0., 2.]);
+        assert_eq!(out[1].data, vec![1., 1., 1., 1.]);
+        let s = c.stats();
+        // packed 2x2 = 3 elems; ring factor 1/2; 4 bytes => 6 bytes each
+        assert_eq!(s.rs_stats_a, 6);
+        assert_eq!(s.rs_stats_g, 6);
+    }
+
+    #[test]
+    fn packing_toggle_changes_bytes() {
+        let mk = |packed: bool| {
+            let mut c = SimComm::new(2);
+            c.symmetric_packing = packed;
+            let m = vec![Mat::eye(8)];
+            c.reduce_scatter_v(&[m.clone(), m], &[StatClass::A]);
+            c.stats().rs_stats_a
+        };
+        let packed = mk(true);
+        let dense = mk(false);
+        assert!(packed < dense);
+        assert_eq!(packed as f64 / dense as f64, 36.0 / 64.0);
+    }
+
+    #[test]
+    fn fp16_wire_halves_bytes() {
+        let mut c = SimComm::new(2);
+        c.wire_elem_bytes = 2;
+        let mut bufs = vec![vec![0.0f32; 100], vec![0.0; 100]];
+        c.all_reduce_mean(&mut bufs);
+        assert_eq!(c.stats().ar_grads, 2 * 50 * 2);
+    }
+
+    #[test]
+    fn step_stats_reset() {
+        let c = SimComm::new(2);
+        c.all_gather_v_params(1000);
+        assert!(c.take_step_stats().ag_params > 0);
+        assert_eq!(c.take_step_stats().ag_params, 0);
+        assert!(c.stats().ag_params > 0, "cumulative stays");
+    }
+
+    #[test]
+    fn single_worker_no_wire_bytes() {
+        let c = SimComm::new(1);
+        let mut bufs = vec![vec![1.0, 2.0]];
+        c.all_reduce_mean(&mut bufs);
+        assert_eq!(bufs[0], vec![1.0, 2.0]);
+        assert_eq!(c.stats().total(), 0, "P=1 moves nothing");
+    }
+}

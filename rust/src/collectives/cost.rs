@@ -1,0 +1,252 @@
+//! α-β cluster cost model: converts measured per-GPU work + logged
+//! communication volumes into predicted step times at arbitrary GPU
+//! counts. Regenerates the *shape* of Fig. 5 / Table 1 timing columns
+//! (the authors' testbed was ABCI: 4×V100 per node, InfiniBand EDR).
+
+/// Collective algorithm families the model prices.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CollectiveKind {
+    RingAllReduce,
+    RingReduceScatter,
+    RingAllGather,
+    /// Ueno & Yokota hierarchical AllReduce: intra-node RS, inter-node AR
+    /// over the node leaders, intra-node AG.
+    HierarchicalAllReduce,
+}
+
+/// Cluster constants. Defaults approximate ABCI (Tesla V100 nodes).
+#[derive(Clone, Debug)]
+pub struct ClusterModel {
+    /// GPUs per node (ABCI: 4).
+    pub gpus_per_node: usize,
+    /// per-hop latency within a node (NVLink), seconds
+    pub alpha_intra: f64,
+    /// per-hop latency across nodes (IB EDR), seconds
+    pub alpha_inter: f64,
+    /// intra-node bandwidth, bytes/s per GPU pair
+    pub beta_intra: f64,
+    /// inter-node bandwidth, bytes/s per node
+    pub beta_inter: f64,
+}
+
+impl Default for ClusterModel {
+    fn default() -> Self {
+        ClusterModel {
+            gpus_per_node: 4,
+            alpha_intra: 3e-6,
+            alpha_inter: 8e-6,
+            beta_intra: 60e9,  // NVLink-ish effective
+            beta_inter: 10e9,  // IB EDR ~100 Gb/s effective
+        }
+    }
+}
+
+impl ClusterModel {
+    fn nodes(&self, p: usize) -> usize {
+        p.div_ceil(self.gpus_per_node).max(1)
+    }
+
+    /// Effective per-GPU bandwidth for a ring spanning the whole cluster:
+    /// bounded by the inter-node link once the ring crosses nodes.
+    fn ring_beta(&self, p: usize) -> f64 {
+        if p <= self.gpus_per_node {
+            self.beta_intra
+        } else {
+            // every node's traffic funnels through its IB link; the ring
+            // moves ~(per-GPU bytes * gpus_per_node) through each node
+            self.beta_inter / self.gpus_per_node as f64
+        }
+    }
+
+    fn ring_alpha(&self, p: usize) -> f64 {
+        if p <= self.gpus_per_node {
+            self.alpha_intra
+        } else {
+            self.alpha_inter
+        }
+    }
+
+    /// Time for one collective moving `bytes` *per GPU of payload* (the
+    /// full buffer size N; ring traffic factors are applied here).
+    pub fn collective_time(&self, kind: CollectiveKind, bytes: f64, p: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        let pf = p as f64;
+        let ring = (pf - 1.0) / pf;
+        match kind {
+            CollectiveKind::RingReduceScatter | CollectiveKind::RingAllGather => {
+                (pf - 1.0) * self.ring_alpha(p) + ring * bytes / self.ring_beta(p)
+            }
+            CollectiveKind::RingAllReduce => {
+                2.0 * (pf - 1.0) * self.ring_alpha(p)
+                    + 2.0 * ring * bytes / self.ring_beta(p)
+            }
+            CollectiveKind::HierarchicalAllReduce => {
+                let g = self.gpus_per_node.min(p) as f64;
+                let nodes = self.nodes(p) as f64;
+                let intra = 2.0 * (g - 1.0) * self.alpha_intra
+                    + 2.0 * (g - 1.0) / g * bytes / self.beta_intra;
+                let inter = if nodes > 1.0 {
+                    2.0 * (nodes - 1.0) * self.alpha_inter
+                        + 2.0 * (nodes - 1.0) / nodes * (bytes / g) / self.beta_inter
+                } else {
+                    0.0
+                };
+                intra + inter
+            }
+        }
+    }
+}
+
+/// Measured single-GPU work profile for one training step (seconds),
+/// captured by the coordinator and fed to [`predict_step_time`].
+#[derive(Clone, Debug, Default)]
+pub struct StepProfile {
+    /// forward pass (per GPU, fixed per-GPU batch)
+    pub t_forward: f64,
+    /// backward pass (per GPU)
+    pub t_backward: f64,
+    /// statistics construction for ALL layers (one GPU's shard)
+    pub t_factors: f64,
+    /// factor inversion for ALL layers (single process)
+    pub t_inverse: f64,
+    /// preconditioning + weight update for ALL layers
+    pub t_update: f64,
+    /// extra backward for the 1mc Fisher (0 for emp)
+    pub t_extra_bwd: f64,
+    /// bytes per GPU: statistics ReduceScatterV payload (A + G/F)
+    pub stats_bytes: f64,
+    /// bytes per GPU: gradient AllReduce payload
+    pub grad_bytes: f64,
+    /// bytes per GPU: parameter AllGatherV payload
+    pub param_bytes: f64,
+    /// number of invertible statistics (model-parallel work items)
+    pub n_stats: usize,
+}
+
+/// Predict time/step at `p` GPUs from a single-GPU profile — the Fig. 5
+/// generator. Key structure (§5.1):
+///  - fwd/bwd/factor construction are data-parallel (constant in p,
+///    per-GPU batch fixed);
+///  - Stage-2 overlaps the A-statistics ReduceScatterV with the backward;
+///  - inversion + update are model-parallel: divided by min(p, n_stats)
+///    (the superlinear-scaling source at small p);
+///  - Stage-5 AllGatherV + gradient AllReduce pay ring costs that grow
+///    with p (the ≥128-GPU degradation).
+pub fn predict_step_time(prof: &StepProfile, p: usize, cm: &ClusterModel) -> f64 {
+    let p = p.max(1);
+    let mp = p.min(prof.n_stats.max(1)) as f64;
+    let t_inv = prof.t_inverse / mp;
+    let t_upd = prof.t_update / mp;
+
+    let half = 0.5 * prof.stats_bytes;
+    let t_rs_a = cm.collective_time(CollectiveKind::RingReduceScatter, half, p);
+    let t_rs_g = cm.collective_time(CollectiveKind::RingReduceScatter, half, p);
+    let t_ar_grad =
+        cm.collective_time(CollectiveKind::HierarchicalAllReduce, prof.grad_bytes, p);
+    let t_ag_param = cm.collective_time(CollectiveKind::RingAllGather, prof.param_bytes, p);
+
+    // Stage 1: forward + A-factor construction (half the factor work)
+    let stage1 = prof.t_forward + 0.5 * prof.t_factors;
+    // Stage 2: backward (+1mc extra) overlapped with ReduceScatterV(A)
+    let stage2 = (prof.t_backward + prof.t_extra_bwd + 0.5 * prof.t_factors).max(t_rs_a);
+    // Stage 3: ReduceScatterV(G, F) + gradient AllReduce
+    let stage3 = t_rs_g + t_ar_grad;
+    // Stage 4: model-parallel inversion + update
+    let stage4 = t_inv + t_upd;
+    // Stage 5: AllGatherV(params)
+    let stage5 = t_ag_param;
+
+    stage1 + stage2 + stage3 + stage4 + stage5
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile() -> StepProfile {
+        StepProfile {
+            t_forward: 0.020,
+            t_backward: 0.040,
+            t_factors: 0.030,
+            t_inverse: 0.120,
+            t_update: 0.020,
+            t_extra_bwd: 0.0,
+            stats_bytes: 25e6,
+            grad_bytes: 100e6,
+            param_bytes: 100e6,
+            n_stats: 107, // ResNet-50's K-FAC layer count
+        }
+    }
+
+    #[test]
+    fn superlinear_region_small_p() {
+        // time/step should drop superlinearly from 1 -> 64 GPUs (Fig. 5):
+        // t(1)/t(64) > 2 because inversion is model-parallel.
+        let cm = ClusterModel::default();
+        let p1 = predict_step_time(&profile(), 1, &cm);
+        let p64 = predict_step_time(&profile(), 64, &cm);
+        assert!(p1 / p64 > 1.5, "p1={p1} p64={p64}");
+        assert!(p1 > p64);
+    }
+
+    #[test]
+    fn degradation_at_large_p_is_bounded() {
+        // 128 -> 1024 should be near-flat (ideal scaling region) —
+        // within 2x (paper: "almost ideal").
+        let cm = ClusterModel::default();
+        let a = predict_step_time(&profile(), 128, &cm);
+        let b = predict_step_time(&profile(), 1024, &cm);
+        assert!(b / a < 2.0, "128:{a} 1024:{b}");
+    }
+
+    #[test]
+    fn collective_times_monotone_in_bytes() {
+        let cm = ClusterModel::default();
+        for kind in [
+            CollectiveKind::RingAllReduce,
+            CollectiveKind::RingReduceScatter,
+            CollectiveKind::RingAllGather,
+            CollectiveKind::HierarchicalAllReduce,
+        ] {
+            let t1 = cm.collective_time(kind, 1e6, 64);
+            let t2 = cm.collective_time(kind, 1e8, 64);
+            assert!(t2 > t1, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn hierarchical_beats_flat_ring_at_scale() {
+        // The hierarchical AR (Ueno & Yokota) should win at large node
+        // counts on latency (the paper's reason to adopt it).
+        let cm = ClusterModel::default();
+        let flat = cm.collective_time(CollectiveKind::RingAllReduce, 1e6, 1024);
+        let hier = cm.collective_time(CollectiveKind::HierarchicalAllReduce, 1e6, 1024);
+        assert!(hier < flat, "flat={flat} hier={hier}");
+    }
+
+    #[test]
+    fn single_gpu_no_comm() {
+        let cm = ClusterModel::default();
+        assert_eq!(cm.collective_time(CollectiveKind::RingAllReduce, 1e9, 1), 0.0);
+    }
+
+    #[test]
+    fn stale_stats_shrink_predicted_time() {
+        // zeroing the stats bytes + inversion (the stale-step fast path)
+        // must reduce the predicted step time at comm-bound scales.
+        let cm = ClusterModel::default();
+        let full = profile();
+        let mut stale = profile();
+        stale.stats_bytes = 0.06 * stale.stats_bytes; // Table 2: 5-8%
+        stale.t_inverse = 0.06 * stale.t_inverse;
+        stale.t_factors = 0.06 * stale.t_factors;
+        for p in [64, 256, 1024] {
+            assert!(
+                predict_step_time(&stale, p, &cm) < predict_step_time(&full, p, &cm),
+                "p={p}"
+            );
+        }
+    }
+}

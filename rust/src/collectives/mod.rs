@@ -1,0 +1,20 @@
+//! Collective communication substrate for the simulated multi-GPU runtime.
+//!
+//! The paper's decentralized design (§5) replaces the parameter server
+//! with MPI/NCCL collectives: `ReduceScatterV` moves per-layer statistics
+//! from data-parallel workers to their model-parallel owner, `AllGatherV`
+//! broadcasts updated weights back, and gradients use AllReduce
+//! (= ReduceScatter + AllGather).
+//!
+//! Workers here are simulated processes sharing one address space, so the
+//! *reduction math is real* (buffers are actually combined, bit-for-bit
+//! what NCCL would produce) while the *wire time* is modeled: every
+//! operation logs the per-GPU bytes it would move (symmetry-aware packed
+//! sizes for the statistics, §5.2) and the α-β cost model in
+//! [`cost`] converts byte/latency counts into cluster step times.
+
+pub mod comm;
+pub mod cost;
+
+pub use comm::{CommStats, SimComm};
+pub use cost::{ClusterModel, CollectiveKind};

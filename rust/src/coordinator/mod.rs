@@ -1,0 +1,21 @@
+//! The SP-NGD coordinator — the paper's systems contribution (§5, Alg. 3).
+//!
+//! Drives the hybrid data/model-parallel training step over simulated GPU
+//! workers:
+//!
+//! ```text
+//! Stage 1  workers run fwd (+ A-statistics construction)          [data ||]
+//! Stage 2  ReduceScatterV(A) overlapped with bwd (+ G, F_unitBN)  [data ||]
+//! Stage 3  ReduceScatterV(G, F, grad L)
+//! Stage 4  owners invert factors + apply NGD update               [model ||]
+//! Stage 5  AllGatherV(w)
+//! ```
+//!
+//! plus the practical-NGD machinery: empirical-vs-1mc Fisher, unit-wise
+//! BatchNorm Fisher, and the adaptive stale-statistics scheduler.
+
+pub mod stale;
+pub mod trainer;
+
+pub use stale::StaleState;
+pub use trainer::{BnMode, Fisher, Optim, Trainer, TrainerCfg};

@@ -1,0 +1,835 @@
+//! The SP-NGD trainer: Algorithm 3 over simulated GPU workers.
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::collectives::comm::{SimComm, StatClass};
+use crate::collectives::cost::StepProfile;
+use crate::data::{Augment, AugmentCfg, Batch, SynthDataset};
+use crate::kfac::bn::{BnFisher, BnFullFisher};
+use crate::kfac::damping::pi_split;
+use crate::linalg::Mat;
+use crate::metrics::{RunLog, StageTimes, StepRecord};
+use crate::optim::{rescale_weight, spngd_update, Schedule};
+use crate::runtime::{Engine, HostTensor, Manifest, ModelManifest};
+use crate::util::rng::Rng;
+
+/// Fisher estimation mode (§4.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fisher {
+    /// empirical Fisher captured in the ordinary bwd pass (`emp`)
+    Emp,
+    /// one-sample Monte-Carlo Fisher — extra backward pass (`1mc`)
+    OneMc,
+}
+
+/// BatchNorm Fisher mode (§4.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BnMode {
+    /// unit-wise 2×2 blocks, closed-form inverse (`unitBN`)
+    Unit,
+    /// full (2C)² Fisher inverted like any factor (`fullBN`)
+    Full,
+}
+
+/// Optimizer selection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Optim {
+    SpNgd,
+    Sgd,
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainerCfg {
+    pub model: String,
+    /// simulated GPUs (data-parallel workers)
+    pub workers: usize,
+    /// micro-steps accumulated per update (extreme-BS mimicry, §7.1)
+    pub grad_accum: usize,
+    pub fisher: Fisher,
+    pub bn_mode: BnMode,
+    /// adaptive stale-statistics scheduler (§4.3); false = refresh every step
+    pub stale: bool,
+    /// similarity threshold α (paper: 0.1)
+    pub stale_alpha: f32,
+    /// base damping λ
+    pub lambda: f32,
+    pub schedule: Schedule,
+    pub optimizer: Optim,
+    /// Normalizing-Weights rescale (Eq. 24) for conv layers
+    pub weight_rescale: bool,
+    /// trust-ratio clip: per-layer update norm <= clip * ||w|| (0 = off).
+    /// Stabilizes the preconditioner when the Fisher collapses near zero
+    /// training loss (a regime ImageNet-scale runs never reach).
+    pub clip_update_ratio: f32,
+    pub augment: AugmentCfg,
+    /// BN running-stat EMA momentum
+    pub bn_momentum: f32,
+    /// half-precision (fp16) wire format for collectives (§5.2's
+    /// mixed-precision communication) — affects byte accounting only;
+    /// reductions stay f32 in this in-process simulation
+    pub fp16_comm: bool,
+    pub seed: u64,
+}
+
+impl TrainerCfg {
+    pub fn effective_batch(&self, per_worker: usize) -> usize {
+        self.workers * self.grad_accum * per_worker
+    }
+}
+
+/// Which statistic of a layer a stale-scheduler entry tracks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum StatKind {
+    A,
+    G,
+    BnF,
+}
+
+/// Per-layer coordinator state (owned by `owner` in Stage 4).
+struct LayerState {
+    /// owning process for the model-parallel Stage 4 (round-robin)
+    owner: usize,
+    a_stale: StaleStateOpt,
+    g_stale: StaleStateOpt,
+    /// current reduced factors (owner's copy)
+    a: Option<Mat>,
+    g: Option<Mat>,
+    /// cached damped inverses (padded-bucket sliced back)
+    a_inv: Option<HostTensor>,
+    g_inv: Option<HostTensor>,
+    /// BN state
+    bn_fisher: Option<BnFisher>,
+    bn_full_inv: Option<Mat>,
+}
+
+type StaleStateOpt = super::stale::StaleState;
+
+pub struct Trainer {
+    pub cfg: TrainerCfg,
+    model: ModelManifest,
+    engine: Rc<Engine>,
+    comm: SimComm,
+    pub params: Vec<HostTensor>,
+    velocity: Vec<HostTensor>,
+    layers: Vec<LayerState>,
+    bn_running: Vec<(HostTensor, HostTensor)>, // (mean, var) per bn_order
+    dataset: SynthDataset,
+    augments: Vec<Augment>,
+    worker_rngs: Vec<Rng>,
+    val_rng: Rng,
+    step: u64,
+    pub log: RunLog,
+    // cumulative profile accumulators (full-refresh steps only)
+    prof_exec_samples: Vec<f64>,
+    prof_full_factors: Vec<f64>,
+    prof_full_inverse: Vec<f64>,
+    prof_update: Vec<f64>,
+    prof_full_stats_bytes: Vec<f64>,
+}
+
+impl Trainer {
+    pub fn new(
+        manifest: Rc<Manifest>,
+        engine: Rc<Engine>,
+        cfg: TrainerCfg,
+        dataset: SynthDataset,
+    ) -> Result<Trainer> {
+        let model = manifest.model(&cfg.model)?.clone();
+        anyhow::ensure!(
+            model.input_shape[1..] == [dataset.channels, dataset.h, dataset.w],
+            "dataset dims {:?} do not match model input {:?}",
+            (dataset.channels, dataset.h, dataset.w),
+            model.input_shape,
+        );
+        let params = manifest.load_init_params(&model)?;
+        let velocity = params.iter().map(|p| HostTensor::zeros(p.shape.clone())).collect();
+        let mut rng = Rng::new(cfg.seed);
+        let worker_rngs: Vec<Rng> = (0..cfg.workers).map(|w| rng.fork(w as u64)).collect();
+        let augments = (0..cfg.workers)
+            .map(|w| Augment::new(cfg.augment.clone(), cfg.seed ^ (w as u64) << 8))
+            .collect();
+        let layers = model
+            .kfac_layers
+            .iter()
+            .enumerate()
+            .map(|(i, _)| LayerState {
+                owner: i % cfg.workers.max(1),
+                a_stale: StaleStateOpt::new(cfg.stale_alpha),
+                g_stale: StaleStateOpt::new(cfg.stale_alpha),
+                a: None,
+                g: None,
+                a_inv: None,
+                g_inv: None,
+                bn_fisher: None,
+                bn_full_inv: None,
+            })
+            .collect();
+        let bn_running = model
+            .bn_order
+            .iter()
+            .map(|n| {
+                let c = model.layer(n).map(|l| l.channels).unwrap_or(0);
+                (HostTensor::zeros(vec![c]), HostTensor::new(vec![c], vec![1.0; c]))
+            })
+            .collect();
+        let mut comm = SimComm::new(cfg.workers);
+        if cfg.fp16_comm {
+            comm.wire_elem_bytes = 2;
+        }
+        Ok(Trainer {
+            val_rng: rng.fork(0xEA1),
+            cfg,
+            model,
+            engine,
+            comm,
+            params,
+            velocity,
+            layers,
+            bn_running,
+            dataset,
+            augments,
+            worker_rngs,
+            step: 0,
+            log: RunLog::default(),
+            prof_exec_samples: Vec::new(),
+            prof_full_factors: Vec::new(),
+            prof_full_inverse: Vec::new(),
+            prof_update: Vec::new(),
+            prof_full_stats_bytes: Vec::new(),
+        })
+    }
+
+    pub fn current_step(&self) -> u64 {
+        self.step
+    }
+
+    pub fn comm(&self) -> &SimComm {
+        &self.comm
+    }
+
+    fn step_exe(&self) -> &str {
+        match self.cfg.fisher {
+            Fisher::Emp => &self.model.step_emp,
+            Fisher::OneMc => &self.model.step_1mc,
+        }
+    }
+
+    /// Is an NGD statistic refresh due this step for a given scheduler?
+    fn ngd(&self) -> bool {
+        self.cfg.optimizer == Optim::SpNgd
+    }
+
+    /// One SP-NGD training step (Alg. 3 + grad accumulation).
+    pub fn step(&mut self) -> Result<StepRecord> {
+        self.step += 1;
+        let t = self.step;
+        let t_start = Instant::now();
+        let w = self.cfg.workers;
+        let nparams = self.params.len();
+
+        // ------------------------------------------------ refresh plan
+        // Which statistics get refreshed this step (Alg. 1's `t == t_X`)?
+        let mut plan: Vec<(usize, StatKind)> = Vec::new();
+        if self.ngd() {
+            for (li, l) in self.layers.iter_mut().enumerate() {
+                let ml = &self.model.kfac_layers[li];
+                let due_always = !self.cfg.stale;
+                if ml.is_bn() {
+                    if due_always || l.a_stale.due(t) {
+                        plan.push((li, StatKind::BnF));
+                    } else {
+                        l.a_stale.note_skip();
+                    }
+                } else {
+                    if due_always || l.a_stale.due(t) {
+                        plan.push((li, StatKind::A));
+                    } else {
+                        l.a_stale.note_skip();
+                    }
+                    if due_always || l.g_stale.due(t) {
+                        plan.push((li, StatKind::G));
+                    } else {
+                        l.g_stale.note_skip();
+                    }
+                }
+            }
+        }
+
+        // ------------------------------------ Stages 1-2: compute (data ∥)
+        let mut grad_accum: Vec<Vec<f32>> = vec![Vec::new(); w];
+        let mut factor_accum: Vec<Vec<Mat>> = vec![Vec::new(); w];
+        let mut loss_sum = 0.0f64;
+        let mut ncorrect_sum = 0.0f64;
+        let mut bn_mean_acc: Vec<Vec<f32>> = Vec::new();
+        let mut bn_var_acc: Vec<Vec<f32>> = Vec::new();
+        let mut t_step_exec = 0.0f64;
+        let mut t_factors = 0.0f64;
+
+        let micro = self.cfg.grad_accum.max(1);
+        for m in 0..micro {
+            // draw per-worker batches through the augmentation pipeline
+            let batches: Vec<Batch> = (0..w)
+                .map(|wi| {
+                    let b = self.dataset.batch(self.model.batch, &mut self.worker_rngs[wi]);
+                    self.augments[wi].apply(b)
+                })
+                .collect();
+
+            // Stage 1+2 compute: every worker runs the step executable.
+            // Simulated GPUs share this CPU, so execution is sequential;
+            // per-worker durations are recorded individually and the
+            // cluster cost model supplies the parallel semantics.
+            let exe = self.step_exe().to_string();
+            let seed_base = (t as u32) << 8 | m as u32;
+            let mut outs: Vec<Vec<HostTensor>> = Vec::with_capacity(w);
+            for wi in 0..w {
+                let mut inputs: Vec<&HostTensor> = self.params.iter().collect();
+                inputs.push(&batches[wi].x);
+                inputs.push(&batches[wi].t);
+                let seed = match self.cfg.fisher {
+                    Fisher::OneMc => Some(seed_base ^ (wi as u32).wrapping_mul(0x9E37)),
+                    Fisher::Emp => None,
+                };
+                let te = Instant::now();
+                let o = self
+                    .engine
+                    .execute_seeded(&exe, &inputs, seed)
+                    .context("step exec")?;
+                let dt = te.elapsed().as_secs_f64();
+                t_step_exec += dt;
+                self.prof_exec_samples.push(dt);
+                outs.push(o);
+            }
+
+            // accumulate loss/acc/grads
+            for (wi, o) in outs.iter().enumerate() {
+                loss_sum += o[0].data[0] as f64;
+                ncorrect_sum += o[1].data[0] as f64;
+                // flatten grads (outputs 2..2+nparams)
+                if grad_accum[wi].is_empty() {
+                    grad_accum[wi] = vec![0.0; self.model.total_param_count()];
+                }
+                let mut off = 0;
+                for pi in 0..nparams {
+                    let g = &o[2 + pi];
+                    for (dst, src) in
+                        grad_accum[wi][off..off + g.data.len()].iter_mut().zip(g.data.iter())
+                    {
+                        *dst += *src;
+                    }
+                    off += g.data.len();
+                }
+            }
+
+            // BN batch stats (mean over workers, accumulated over micro)
+            for (bi, bname) in self.model.bn_order.clone().iter().enumerate() {
+                let mi = self.model.output_index("bn_mean", Some(bname)).unwrap();
+                let vi = self.model.output_index("bn_var", Some(bname)).unwrap();
+                let c = outs[0][mi].data.len();
+                if bn_mean_acc.len() <= bi {
+                    bn_mean_acc.push(vec![0.0; c]);
+                    bn_var_acc.push(vec![0.0; c]);
+                }
+                for o in &outs {
+                    for i in 0..c {
+                        bn_mean_acc[bi][i] += o[mi].data[i];
+                        bn_var_acc[bi][i] += o[vi].data[i];
+                    }
+                }
+            }
+
+            // statistics construction for planned refreshes (per worker)
+            if !plan.is_empty() {
+                let tf = Instant::now();
+                let plan_ref = &plan;
+                let model = &self.model;
+                let engine2 = self.engine.clone();
+                let bn_mode = self.cfg.bn_mode;
+                let outs_ref = &outs;
+                let per_worker: Vec<Result<Vec<Mat>>> = (0..w).map(|wi| {
+                    let o = &outs_ref[wi];
+                    let mut mats = Vec::with_capacity(plan_ref.len());
+                    for &(li, kind) in plan_ref {
+                        let ml = &model.kfac_layers[li];
+                        let mat = match kind {
+                            StatKind::A => {
+                                let ti = model
+                                    .output_index("a_tap", Some(&ml.name))
+                                    .context("a_tap index")?;
+                                let f = engine2.execute(&ml.factor_a, &[&o[ti]])?;
+                                f[0].as_mat()
+                            }
+                            StatKind::G => {
+                                let ti = model
+                                    .output_index("g_tap", Some(&ml.name))
+                                    .context("g_tap index")?;
+                                let tap = &o[ti];
+                                let f = if ml.kind == "conv" {
+                                    let t2 = tap.nchw_to_rows_channels();
+                                    engine2.execute(&ml.factor_g, &[&t2])?
+                                } else {
+                                    engine2.execute(&ml.factor_g, &[tap])?
+                                };
+                                f[0].as_mat()
+                            }
+                            StatKind::BnF => {
+                                let gi = model
+                                    .output_index("g_gamma", Some(&ml.name))
+                                    .context("g_gamma index")?;
+                                let bi = model
+                                    .output_index("g_beta", Some(&ml.name))
+                                    .context("g_beta index")?;
+                                match bn_mode {
+                                    BnMode::Unit => BnFisher::from_taps(
+                                        &o[gi].data,
+                                        &o[bi].data,
+                                        model.batch,
+                                        ml.channels,
+                                    )
+                                    .as_mat(),
+                                    BnMode::Full => {
+                                        let f = engine2
+                                            .execute(&ml.bn_full, &[&o[gi], &o[bi]])?;
+                                        f[0].as_mat()
+                                    }
+                                }
+                            }
+                        };
+                        mats.push(mat);
+                    }
+                    Ok(mats)
+                }).collect();
+                t_factors += tf.elapsed().as_secs_f64();
+                for (wi, mats) in per_worker.into_iter().enumerate() {
+                    let mats = mats.context("factor construction")?;
+                    if factor_accum[wi].is_empty() {
+                        factor_accum[wi] = mats;
+                    } else {
+                        for (acc, m2) in factor_accum[wi].iter_mut().zip(mats) {
+                            for (a, b) in acc.data.iter_mut().zip(m2.data.iter()) {
+                                *a += *b;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // average accumulations over micro-steps
+        let inv_micro = 1.0 / micro as f32;
+        for g in grad_accum.iter_mut() {
+            for v in g.iter_mut() {
+                *v *= inv_micro;
+            }
+        }
+        for mats in factor_accum.iter_mut() {
+            for m in mats.iter_mut() {
+                for v in m.data.iter_mut() {
+                    *v *= inv_micro;
+                }
+            }
+        }
+
+        // ------------------------- Stage 3: gradient AllReduce (mean)
+        self.comm.all_reduce_mean(&mut grad_accum);
+        let grads_flat = std::mem::take(&mut grad_accum[0]);
+        let grads = self.unflatten_grads(&grads_flat);
+
+        // ----------------- Stages 2-3: ReduceScatterV of the statistics
+        let reduced: Vec<Mat> = if plan.is_empty() {
+            Vec::new()
+        } else {
+            let classes: Vec<StatClass> = plan
+                .iter()
+                .map(|&(_, kind)| match kind {
+                    StatKind::A => StatClass::A,
+                    _ => StatClass::GorF,
+                })
+                .collect();
+            self.comm.reduce_scatter_v(&factor_accum, &classes)
+        };
+
+        // ------------------- Stage 4a: model-parallel factor inversion
+        let t_inv_start = Instant::now();
+        let mut inversion_jobs: Vec<(usize, StatKind, Mat)> = Vec::new();
+        for (&(li, kind), mat) in plan.iter().zip(reduced.into_iter()) {
+            // scheduler update (Alg. 2) happens at the owner
+            let l = &mut self.layers[li];
+            match kind {
+                StatKind::A => {
+                    l.a_stale.refresh(t, &mat);
+                    l.a = Some(mat.clone());
+                }
+                StatKind::G => {
+                    l.g_stale.refresh(t, &mat);
+                    l.g = Some(mat.clone());
+                }
+                StatKind::BnF => {
+                    l.a_stale.refresh(t, &mat);
+                }
+            }
+            inversion_jobs.push((li, kind, mat));
+        }
+        // parallel inversion across owners (min(workers, jobs) threads —
+        // the model-parallel Stage 4)
+        {
+            let engine = self.engine.clone();
+            let model = &self.model;
+            let lambda = self.cfg.lambda;
+            let bn_mode = self.cfg.bn_mode;
+            // snapshot traces for the π split
+            let traces: Vec<(f32, f32)> = inversion_jobs
+                .iter()
+                .map(|&(li, _, _)| {
+                    let l = &self.layers[li];
+                    (
+                        l.a.as_ref().map(|m| m.trace()).unwrap_or(0.0),
+                        l.g.as_ref().map(|m| m.trace()).unwrap_or(0.0),
+                    )
+                })
+                .collect();
+            let jobs = &inversion_jobs;
+            let results: Vec<Result<InvResult>> = (0..jobs.len()).map(|ji| {
+                let (li, kind, ref mat) = jobs[ji];
+                let ml = &model.kfac_layers[li];
+                match kind {
+                    StatKind::BnF if bn_mode == BnMode::Unit => {
+                        // closed-form per-channel blocks — nothing to invert
+                        let fisher = BnFisher {
+                            channels: ml.channels,
+                            blocks: (0..ml.channels)
+                                .map(|c| {
+                                    [mat.data[c * 3], mat.data[c * 3 + 1], mat.data[c * 3 + 2]]
+                                })
+                                .collect(),
+                        };
+                        Ok(InvResult::BnUnit(li, fisher))
+                    }
+                    StatKind::BnF => {
+                        let padded =
+                            HostTensor::from_mat(mat).pad_square(ml.full_bucket);
+                        let damp = HostTensor::scalar(lambda);
+                        let out = engine.execute(&ml.invert_full, &[&padded, &damp])?;
+                        let inv = out[0].slice_square(2 * ml.channels);
+                        Ok(InvResult::BnFull(li, inv.as_mat()))
+                    }
+                    StatKind::A | StatKind::G => {
+                        let (tr_a, tr_g) = traces[ji];
+                        let dims = (ml.a_dim as f32, ml.g_dim as f32);
+                        let (da, dg) = pi_split_traces(tr_a, dims.0, tr_g, dims.1, lambda);
+                        let (exe, bucket, dim, damp) = match kind {
+                            StatKind::A => (&ml.invert_a, ml.a_bucket, ml.a_dim, da),
+                            _ => (&ml.invert_g, ml.g_bucket, ml.g_dim, dg),
+                        };
+                        let padded = HostTensor::from_mat(mat).pad_square(bucket);
+                        let damp = HostTensor::scalar(damp);
+                        let out = engine.execute(exe, &[&padded, &damp])?;
+                        let inv = out[0].slice_square(dim);
+                        Ok(InvResult::Factor(li, kind, inv))
+                    }
+                }
+            }).collect();
+            for r in results {
+                match r.context("inversion")? {
+                    InvResult::BnUnit(li, f) => self.layers[li].bn_fisher = Some(f),
+                    InvResult::BnFull(li, inv) => self.layers[li].bn_full_inv = Some(inv),
+                    InvResult::Factor(li, StatKind::A, inv) => {
+                        self.layers[li].a_inv = Some(inv)
+                    }
+                    InvResult::Factor(li, _, inv) => self.layers[li].g_inv = Some(inv),
+                }
+            }
+        }
+        let t_inverse = t_inv_start.elapsed().as_secs_f64();
+
+        // ------------------- Stage 4b: preconditioning + weight update
+        let t_upd_start = Instant::now();
+        let lr = self.cfg.schedule.lr(t) as f32;
+        let mom = self.cfg.schedule.momentum(t) as f32;
+        self.apply_updates(&grads, lr, mom)?;
+        let t_update = t_upd_start.elapsed().as_secs_f64();
+
+        // --------------------------------- Stage 5: AllGatherV(params)
+        self.comm.all_gather_v_params(self.model.total_param_count());
+
+        // BN running stats EMA
+        let denom = (w * micro) as f32;
+        for (bi, (rm, rv)) in self.bn_running.iter_mut().enumerate() {
+            if bn_mean_acc.is_empty() {
+                break;
+            }
+            let bm = self.cfg.bn_momentum;
+            for i in 0..rm.data.len() {
+                rm.data[i] = bm * rm.data[i] + (1.0 - bm) * bn_mean_acc[bi][i] / denom;
+                rv.data[i] = bm * rv.data[i] + (1.0 - bm) * bn_var_acc[bi][i] / denom;
+            }
+        }
+
+        // ------------------------------------------------- bookkeeping
+        let comm_step = self.comm.take_step_stats();
+        let denom_samples = (w * micro) as f64 * self.model.batch as f64;
+        let total_stats = self.total_stats();
+        let times = StageTimes {
+            t_step_exec,
+            t_factors,
+            t_inverse,
+            t_update,
+            t_total: t_start.elapsed().as_secs_f64(),
+        };
+        // profile capture
+        self.prof_update.push(t_update);
+        if self.ngd() && plan.len() == total_stats {
+            self.prof_full_factors.push(t_factors / (micro * w) as f64);
+            self.prof_full_inverse.push(t_inverse);
+            self.prof_full_stats_bytes
+                .push(comm_step.stats_total() as f64 / micro as f64);
+        }
+        let rec = StepRecord {
+            step: t,
+            epoch: self.epoch(),
+            loss: (loss_sum / (w * micro) as f64) as f32,
+            train_acc: (ncorrect_sum / denom_samples) as f32,
+            lr: lr as f64,
+            momentum: mom as f64,
+            times,
+            comm: comm_step,
+            refreshed: plan.len(),
+            total_stats,
+        };
+        self.log.push(rec.clone());
+        Ok(rec)
+    }
+
+    /// Stage-4 layer→process ownership (round-robin, as in §5.1 when
+    /// the layer count exceeds the process count).
+    pub fn layer_owners(&self) -> Vec<usize> {
+        self.layers.iter().map(|l| l.owner).collect()
+    }
+
+    fn total_stats(&self) -> usize {
+        self.model
+            .kfac_layers
+            .iter()
+            .map(|l| if l.is_bn() { 1 } else { 2 })
+            .sum()
+    }
+
+    pub fn epoch(&self) -> f64 {
+        self.cfg.schedule.epoch_of(self.step)
+    }
+
+    fn unflatten_grads(&self, flat: &[f32]) -> Vec<HostTensor> {
+        let mut out = Vec::with_capacity(self.params.len());
+        let mut off = 0;
+        for p in &self.model.params {
+            let n: usize = p.shape.iter().product();
+            out.push(HostTensor::new(p.shape.clone(), flat[off..off + n].to_vec()));
+            off += n;
+        }
+        out
+    }
+
+    /// Stage 4b: per-layer preconditioned updates + momentum + rescale.
+    fn apply_updates(&mut self, grads: &[HostTensor], lr: f32, mom: f32) -> Result<()> {
+        let nlayers = self.model.kfac_layers.len();
+        for li in 0..nlayers {
+            let ml = self.model.kfac_layers[li].clone();
+            if ml.is_bn() {
+                let gi = self.model.param_index(&ml.gamma_param).context("gamma param")?;
+                let bi = self.model.param_index(&ml.beta_param).context("beta param")?;
+                let (dir_g, dir_b) = if self.ngd() {
+                    match self.cfg.bn_mode {
+                        BnMode::Unit => {
+                            let f = self.layers[li]
+                                .bn_fisher
+                                .as_ref()
+                                .context("bn fisher missing")?;
+                            let (g, b) = f.precondition(
+                                &grads[gi].data,
+                                &grads[bi].data,
+                                self.cfg.lambda,
+                            );
+                            (g, b)
+                        }
+                        BnMode::Full => {
+                            let inv = self.layers[li]
+                                .bn_full_inv
+                                .as_ref()
+                                .context("bn full inverse missing")?;
+                            BnFullFisher::apply_inverse(inv, &grads[gi].data, &grads[bi].data)
+                        }
+                    }
+                } else {
+                    (grads[gi].data.clone(), grads[bi].data.clone())
+                };
+                let mut dg = HostTensor::new(grads[gi].shape.clone(), dir_g);
+                let mut db = HostTensor::new(grads[bi].shape.clone(), dir_b);
+                if !dg.norm().is_finite() {
+                    dg = grads[gi].clone();
+                }
+                if !db.norm().is_finite() {
+                    db = grads[bi].clone();
+                }
+                self.clip_direction(&mut dg, &self.params[gi].clone(), lr);
+                self.clip_direction(&mut db, &self.params[bi].clone(), lr);
+                spngd_update(&mut self.params[gi], &mut self.velocity[gi], &dg, lr, mom);
+                spngd_update(&mut self.params[bi], &mut self.velocity[bi], &db, lr, mom);
+            } else {
+                let wi = self.model.param_index(&ml.weight_param).context("weight param")?;
+                let (m, n) = ml.grad_shape;
+                let gmat = grads[wi].clone().reshape(vec![m, n]);
+                let mut dir = if self.ngd() {
+                    let (ainv, ginv) = {
+                        let l = &self.layers[li];
+                        (
+                            l.a_inv.clone().context("A inverse missing")?,
+                            l.g_inv.clone().context("G inverse missing")?,
+                        )
+                    };
+                    let out = self.engine.execute(&ml.precond, &[&ginv, &gmat, &ainv])?;
+                    out[0].clone().reshape(grads[wi].shape.clone())
+                } else {
+                    grads[wi].clone()
+                };
+                // numerical guard: a degenerate Fisher (possible when the
+                // loss approaches zero) can blow up the inverse — fall
+                // back to the raw gradient for this step
+                if !dir.norm().is_finite() {
+                    dir = grads[wi].clone();
+                }
+                self.clip_direction(&mut dir, &self.params[wi].clone(), lr);
+                spngd_update(&mut self.params[wi], &mut self.velocity[wi], &dir, lr, mom);
+                // Normalizing Weights (Eq. 24) — conv layers (BN-covered);
+                // the FC head keeps its scale (no BN follows it here).
+                if self.cfg.weight_rescale && ml.kind == "conv" {
+                    rescale_weight(&mut self.params[wi], m);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Trust-ratio clip (applied to the *preconditioned* direction):
+    /// ensures ||lr * dir|| <= clip_update_ratio * ||w||.
+    fn clip_direction(&self, dir: &mut HostTensor, w: &HostTensor, lr: f32) {
+        let clip = self.cfg.clip_update_ratio;
+        if clip <= 0.0 || lr <= 0.0 {
+            return;
+        }
+        let wn = w.norm().max(1e-3);
+        let dn = dir.norm() * lr;
+        if dn > clip * wn {
+            dir.scale_inplace(clip * wn / dn);
+        }
+    }
+
+    /// Validation over `batches` held-out batches: (loss, accuracy).
+    pub fn evaluate(&mut self, batches: usize) -> Result<(f32, f32)> {
+        let mut loss = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut total = 0.0f64;
+        for _ in 0..batches {
+            let b = self.dataset.val_batch(self.model.batch, &mut self.val_rng);
+            let mut inputs: Vec<&HostTensor> = self.params.iter().collect();
+            inputs.push(&b.x);
+            inputs.push(&b.t);
+            for (m, _) in &self.bn_running {
+                inputs.push(m);
+            }
+            for (_, v) in &self.bn_running {
+                inputs.push(v);
+            }
+            let out = self.engine.execute(&self.model.eval_exe, &inputs)?;
+            loss += out[0].data[0] as f64;
+            correct += out[1].data[0] as f64;
+            total += self.model.batch as f64;
+        }
+        Ok(((loss / batches as f64) as f32, (correct / total) as f32))
+    }
+
+    /// Measured single-GPU work profile for the cluster cost model
+    /// (Fig. 5 / Table 1 extrapolation). Uses full-refresh steps for the
+    /// factor/inversion components.
+    pub fn profile(&self) -> StepProfile {
+        // drop warmup samples (first executions pay lazy PJRT init)
+        let mean = |v: &[f64]| {
+            let skip = (v.len() / 4).min(2);
+            let v = &v[skip.min(v.len().saturating_sub(1))..];
+            if v.is_empty() {
+                0.0
+            } else {
+                v.iter().sum::<f64>() / v.len() as f64
+            }
+        };
+        let t_fwd_bwd = mean(&self.prof_exec_samples);
+        let param_bytes = self.model.total_param_count() as f64 * 4.0;
+        StepProfile {
+            // fwd:bwd ≈ 1:2 for conv nets
+            t_forward: t_fwd_bwd / 3.0,
+            t_backward: t_fwd_bwd * 2.0 / 3.0,
+            t_factors: mean(&self.prof_full_factors),
+            t_inverse: mean(&self.prof_full_inverse),
+            t_update: mean(&self.prof_update),
+            t_extra_bwd: 0.0,
+            stats_bytes: mean(&self.prof_full_stats_bytes).max(self.full_stats_bytes()),
+            grad_bytes: param_bytes,
+            param_bytes,
+            n_stats: self.total_stats(),
+        }
+    }
+
+    /// Analytic per-GPU statistics payload at full refresh (packed f32).
+    pub fn full_stats_bytes(&self) -> f64 {
+        let mut elems = 0usize;
+        for l in &self.model.kfac_layers {
+            if l.is_bn() {
+                elems += 3 * l.channels;
+            } else {
+                elems += l.a_dim * (l.a_dim + 1) / 2;
+                elems += l.g_dim * (l.g_dim + 1) / 2;
+            }
+        }
+        elems as f64 * 4.0
+    }
+
+    /// Per-statistic refresh fractions (for Table 2's reduction metric),
+    /// weighted by communicated matrix size.
+    pub fn comm_reduction(&self) -> f64 {
+        let mut sent = 0.0f64;
+        let mut full = 0.0f64;
+        for (l, ml) in self.layers.iter().zip(self.model.kfac_layers.iter()) {
+            if ml.is_bn() {
+                let sz = (3 * ml.channels) as f64;
+                sent += sz * l.a_stale.refresh_fraction();
+                full += sz;
+            } else {
+                let sa = (ml.a_dim * (ml.a_dim + 1) / 2) as f64;
+                let sg = (ml.g_dim * (ml.g_dim + 1) / 2) as f64;
+                sent += sa * l.a_stale.refresh_fraction() + sg * l.g_stale.refresh_fraction();
+                full += sa + sg;
+            }
+        }
+        if full == 0.0 {
+            1.0
+        } else {
+            sent / full
+        }
+    }
+}
+
+enum InvResult {
+    Factor(usize, StatKind, HostTensor),
+    BnUnit(usize, BnFisher),
+    BnFull(usize, Mat),
+}
+
+/// π split from cached traces (both factors' traces are known even when
+/// only one refreshed this step).
+fn pi_split_traces(tr_a: f32, dim_a: f32, tr_g: f32, dim_g: f32, lambda: f32) -> (f32, f32) {
+    let a = Mat::from_vec(1, 1, vec![tr_a / dim_a.max(1.0)]);
+    let g = Mat::from_vec(1, 1, vec![tr_g / dim_g.max(1.0)]);
+    pi_split(&a, &g, lambda)
+}

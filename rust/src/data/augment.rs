@@ -1,0 +1,188 @@
+//! Input augmentations (§6.1): running mixup (Eqs. 18-19) and
+//! zero-valued random erasing. These run in the rust data pipeline —
+//! the same place the paper's DALI-based loader applied them.
+
+use crate::data::synth::Batch;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct AugmentCfg {
+    /// Beta(α, α) parameter for mixup; 0 disables mixup.
+    pub alpha_mixup: f64,
+    /// random-erasing probability (paper: 0.5); 0 disables erasing.
+    pub erase_p: f64,
+    /// erasing area ratio range (paper: [0.02, 0.25])
+    pub erase_area: (f64, f64),
+    /// erasing aspect ratio range (paper: [0.3, 1.0])
+    pub erase_aspect: (f64, f64),
+}
+
+impl Default for AugmentCfg {
+    fn default() -> Self {
+        AugmentCfg {
+            alpha_mixup: 0.4,
+            erase_p: 0.5,
+            erase_area: (0.02, 0.25),
+            erase_aspect: (0.3, 1.0),
+        }
+    }
+}
+
+impl AugmentCfg {
+    pub fn disabled() -> Self {
+        AugmentCfg { alpha_mixup: 0.0, erase_p: 0.0, ..Default::default() }
+    }
+}
+
+/// Stateful augmentation pipeline. *Running* mixup keeps the previous
+/// step's virtual batch and mixes the raw batch against it (Eq. 18-19),
+/// extending mixup's regularization across steps.
+pub struct Augment {
+    pub cfg: AugmentCfg,
+    prev: Option<Batch>,
+    rng: Rng,
+}
+
+impl Augment {
+    pub fn new(cfg: AugmentCfg, seed: u64) -> Self {
+        Augment { cfg, prev: None, rng: Rng::new(seed ^ 0xA06_3E27) }
+    }
+
+    /// Apply running mixup + random erasing in place; returns the batch
+    /// fed to the model (the virtual batch is retained for the next step).
+    pub fn apply(&mut self, mut batch: Batch) -> Batch {
+        if self.cfg.erase_p > 0.0 {
+            self.random_erase(&mut batch);
+        }
+        if self.cfg.alpha_mixup > 0.0 {
+            batch = self.running_mixup(batch);
+        }
+        batch
+    }
+
+    fn running_mixup(&mut self, raw: Batch) -> Batch {
+        let out = match &self.prev {
+            None => raw.clone(),
+            Some(prev) if prev.x.shape == raw.x.shape => {
+                let lam = self.rng.beta_symmetric(self.cfg.alpha_mixup) as f32;
+                let mut x = raw.x.clone();
+                let mut t = raw.t.clone();
+                for (o, p) in x.data.iter_mut().zip(prev.x.data.iter()) {
+                    *o = lam * *o + (1.0 - lam) * p;
+                }
+                for (o, p) in t.data.iter_mut().zip(prev.t.data.iter()) {
+                    *o = lam * *o + (1.0 - lam) * p;
+                }
+                Batch { x, t }
+            }
+            Some(_) => raw.clone(), // shape change (e.g. last partial batch)
+        };
+        self.prev = Some(out.clone());
+        out
+    }
+
+    fn random_erase(&mut self, batch: &mut Batch) {
+        let dims = batch.x.shape.clone();
+        let (b, c, h, w) = (dims[0], dims[1], dims[2], dims[3]);
+        for i in 0..b {
+            if !self.rng.bool(self.cfg.erase_p) {
+                continue;
+            }
+            let area = h as f64 * w as f64
+                * self.rng.range_f64(self.cfg.erase_area.0, self.cfg.erase_area.1);
+            let mut aspect =
+                self.rng.range_f64(self.cfg.erase_aspect.0, self.cfg.erase_aspect.1);
+            // paper: randomly swap (He, We) -> (We, He)
+            if self.rng.bool(0.5) {
+                aspect = 1.0 / aspect;
+            }
+            let he = ((area * aspect).sqrt().round() as usize).clamp(1, h);
+            let we = ((area / aspect).sqrt().round() as usize).clamp(1, w);
+            let y0 = self.rng.below_usize(h - he + 1);
+            let x0 = self.rng.below_usize(w - we + 1);
+            for ch in 0..c {
+                for y in y0..y0 + he {
+                    let base = ((i * c + ch) * h + y) * w;
+                    // zero value, not random (paper's variant)
+                    for x in x0..x0 + we {
+                        batch.x.data[base + x] = 0.0;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::HostTensor;
+
+    fn ones_batch(b: usize) -> Batch {
+        Batch {
+            x: HostTensor::new(vec![b, 1, 8, 8], vec![1.0; b * 64]),
+            t: {
+                let mut t = HostTensor::zeros(vec![b, 4]);
+                for i in 0..b {
+                    t.data[i * 4] = 1.0;
+                }
+                t
+            },
+        }
+    }
+
+    #[test]
+    fn disabled_is_identity() {
+        let mut aug = Augment::new(AugmentCfg::disabled(), 1);
+        let b = ones_batch(4);
+        let out = aug.apply(b.clone());
+        assert_eq!(out.x.data, b.x.data);
+        assert_eq!(out.t.data, b.t.data);
+    }
+
+    #[test]
+    fn erasing_zeroes_a_rectangle() {
+        let cfg = AugmentCfg { alpha_mixup: 0.0, erase_p: 1.0, ..Default::default() };
+        let mut aug = Augment::new(cfg, 2);
+        let out = aug.apply(ones_batch(8));
+        let zeros = out.x.data.iter().filter(|&&v| v == 0.0).count();
+        assert!(zeros > 0, "some pixels erased");
+        // bounded by max area ratio (plus rounding slack)
+        assert!(zeros <= 8 * 64 * 40 / 100, "erased too much: {zeros}");
+    }
+
+    #[test]
+    fn mixup_produces_convex_labels() {
+        let cfg = AugmentCfg { alpha_mixup: 0.4, erase_p: 0.0, ..Default::default() };
+        let mut aug = Augment::new(cfg, 3);
+        // first batch: class 0; second: class 1
+        let b1 = ones_batch(2);
+        let mut b2 = ones_batch(2);
+        for i in 0..2 {
+            b2.t.data[i * 4] = 0.0;
+            b2.t.data[i * 4 + 1] = 1.0;
+        }
+        aug.apply(b1);
+        let out = aug.apply(b2);
+        for i in 0..2 {
+            let row = &out.t.data[i * 4..(i + 1) * 4];
+            assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-5, "labels stay a distribution");
+            assert!(row[0] >= 0.0 && row[1] >= 0.0);
+        }
+    }
+
+    #[test]
+    fn running_mixup_chains_history() {
+        // after two steps, the virtual batch contains traces of step-1
+        // inputs (running variant vs vanilla): feed constant 0 images then
+        // constant 1; the second output is strictly between unless λ=1
+        let cfg = AugmentCfg { alpha_mixup: 10.0, erase_p: 0.0, ..Default::default() };
+        let mut aug = Augment::new(cfg, 4);
+        let mut zeros = ones_batch(1);
+        zeros.x.data.iter_mut().for_each(|v| *v = 0.0);
+        aug.apply(zeros);
+        let out = aug.apply(ones_batch(1));
+        let m: f32 = out.x.data.iter().sum::<f32>() / 64.0;
+        assert!(m > 0.05 && m < 0.999, "mixed value {m}");
+    }
+}

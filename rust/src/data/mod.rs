@@ -1,0 +1,8 @@
+//! Data substrate: synthetic ImageNet-stand-in corpus + the augmentation
+//! pipeline (§6.1 — running mixup, zero-valued random erasing).
+
+pub mod augment;
+pub mod synth;
+
+pub use augment::{Augment, AugmentCfg};
+pub use synth::{Batch, SynthDataset};

@@ -1,0 +1,99 @@
+//! Shared harness for examples and benches: artifact loading, trainer
+//! construction with sensible defaults, and a tiny bench timer
+//! (criterion replacement — criterion is not available offline).
+
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{BnMode, Fisher, Optim, Trainer, TrainerCfg};
+use crate::data::{AugmentCfg, SynthDataset};
+use crate::optim::{HyperParams, Schedule};
+use crate::runtime::{Engine, Manifest};
+use crate::util::stats::Summary;
+
+/// Locate `artifacts/` relative to the crate root.
+pub fn artifacts_dir() -> Result<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    anyhow::ensure!(
+        dir.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    Ok(dir)
+}
+
+pub fn load_runtime() -> Result<(Rc<Manifest>, Rc<Engine>)> {
+    let dir = artifacts_dir()?;
+    let manifest = Rc::new(Manifest::load(&dir)?);
+    let engine = Rc::new(Engine::new(&manifest)?);
+    Ok((manifest, engine))
+}
+
+/// Default hyperparameters for short synthetic-corpus runs.
+pub fn default_hp(optimizer: Optim) -> HyperParams {
+    HyperParams {
+        alpha_mixup: 0.0,
+        p_decay: 3.5,
+        e_start: 2.0,
+        e_end: 60.0,
+        eta0: if optimizer == Optim::Sgd { 0.05 } else { 0.02 },
+        m0: if optimizer == Optim::Sgd { 0.045 } else { 0.018 },
+        lambda: 2.5e-3,
+    }
+}
+
+/// Default trainer config for a model/optimizer pair.
+pub fn default_cfg(model: &str, optimizer: Optim) -> TrainerCfg {
+    let hp = default_hp(optimizer);
+    TrainerCfg {
+        model: model.to_string(),
+        workers: 2,
+        grad_accum: 1,
+        fisher: Fisher::Emp,
+        bn_mode: BnMode::Unit,
+        stale: false,
+        stale_alpha: 0.1,
+        lambda: hp.lambda,
+        schedule: Schedule::new(hp, 64),
+        optimizer,
+        weight_rescale: false,
+        clip_update_ratio: 0.3,
+        augment: AugmentCfg::disabled(),
+        bn_momentum: 0.9,
+        fp16_comm: false,
+        seed: 7,
+    }
+}
+
+/// Build a trainer with a dataset matched to the model's input shape.
+pub fn make_trainer(cfg: TrainerCfg, dataset_len: usize, seed: u64) -> Result<Trainer> {
+    let (manifest, engine) = load_runtime()?;
+    let m = manifest.model(&cfg.model).context("model lookup")?;
+    let (c, h, w) = (m.input_shape[1], m.input_shape[2], m.input_shape[3]);
+    let ds = SynthDataset::new(m.num_classes, c, h, w, dataset_len, seed);
+    Trainer::new(manifest, engine, cfg, ds)
+}
+
+/// Minimal bench runner: warmup + timed iterations, prints a stats row.
+/// Returns the per-iteration summary (seconds).
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Summary::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        s.push(t0.elapsed().as_secs_f64());
+    }
+    println!(
+        "bench {name:<40} mean {:>12} ± {:>10}  p50 {:>12}  n={}",
+        crate::util::stats::fmt_duration(s.mean()),
+        crate::util::stats::fmt_duration(s.stddev()),
+        crate::util::stats::fmt_duration(s.median()),
+        s.len()
+    );
+    s
+}

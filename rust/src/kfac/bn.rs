@@ -1,0 +1,293 @@
+//! Unit-wise BatchNorm natural gradient (§4.2).
+//!
+//! The unit-wise Fisher keeps only the per-channel 2×2 (γ_c, β_c) blocks
+//! (Eq. 15-16) and inverts them in closed form (Eq. 17) — reducing the
+//! elements from 4c² to 4c. This math is deliberately host-side rust: the
+//! paper's point is that unitBN makes the BN statistics negligible, and
+//! at (C, 2, 2) scale the matrix work is a handful of flops per channel.
+
+use crate::linalg::solve::inv2x2;
+use crate::linalg::Mat;
+
+/// Per-channel 2×2 Fisher blocks, stored flat: [f11, f12, f22] per channel.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BnFisher {
+    pub channels: usize,
+    /// (f11, f12, f22) per channel — symmetric, f21 == f12
+    pub blocks: Vec<[f32; 3]>,
+}
+
+impl BnFisher {
+    /// Build from per-sample gradients: g_gamma, g_beta of shape (B, C)
+    /// (the step executable's taps, already scaled to per-sample
+    /// d log p / dθ). F_c = (1/B) Σ_b [gγ;gβ][gγ;gβ]ᵀ.
+    pub fn from_taps(g_gamma: &[f32], g_beta: &[f32], batch: usize, channels: usize) -> Self {
+        assert_eq!(g_gamma.len(), batch * channels);
+        assert_eq!(g_beta.len(), batch * channels);
+        let mut blocks = vec![[0.0f32; 3]; channels];
+        for b in 0..batch {
+            for c in 0..channels {
+                let gg = g_gamma[b * channels + c];
+                let gb = g_beta[b * channels + c];
+                blocks[c][0] += gg * gg;
+                blocks[c][1] += gg * gb;
+                blocks[c][2] += gb * gb;
+            }
+        }
+        let inv_b = 1.0 / batch as f32;
+        for blk in blocks.iter_mut() {
+            blk[0] *= inv_b;
+            blk[1] *= inv_b;
+            blk[2] *= inv_b;
+        }
+        BnFisher { channels, blocks }
+    }
+
+    /// Mean of several workers' Fishers (the ReduceScatterV for BN stats).
+    pub fn mean(parts: &[BnFisher]) -> BnFisher {
+        assert!(!parts.is_empty());
+        let channels = parts[0].channels;
+        let mut blocks = vec![[0.0f32; 3]; channels];
+        for p in parts {
+            assert_eq!(p.channels, channels);
+            for (acc, b) in blocks.iter_mut().zip(p.blocks.iter()) {
+                acc[0] += b[0];
+                acc[1] += b[1];
+                acc[2] += b[2];
+            }
+        }
+        let inv = 1.0 / parts.len() as f32;
+        for b in blocks.iter_mut() {
+            b[0] *= inv;
+            b[1] *= inv;
+            b[2] *= inv;
+        }
+        BnFisher { channels, blocks }
+    }
+
+    /// Apply the damped inverse to the (γ, β) gradient pair per channel:
+    /// (F_c + λI)⁻¹ [gγ_c; gβ_c]  (the Stage-4 update for BN layers).
+    pub fn precondition(
+        &self,
+        grad_gamma: &[f32],
+        grad_beta: &[f32],
+        lambda: f32,
+    ) -> (Vec<f32>, Vec<f32>) {
+        assert_eq!(grad_gamma.len(), self.channels);
+        assert_eq!(grad_beta.len(), self.channels);
+        let mut out_g = vec![0.0f32; self.channels];
+        let mut out_b = vec![0.0f32; self.channels];
+        for c in 0..self.channels {
+            let [f11, f12, f22] = self.blocks[c];
+            let inv = inv2x2(f11 + lambda, f12, f12, f22 + lambda)
+                // damped block is SPD, determinant > 0; fall back to
+                // identity (plain gradient) if numerically degenerate
+                .unwrap_or([1.0, 0.0, 0.0, 1.0]);
+            out_g[c] = inv[0] * grad_gamma[c] + inv[1] * grad_beta[c];
+            out_b[c] = inv[2] * grad_gamma[c] + inv[3] * grad_beta[c];
+        }
+        (out_g, out_b)
+    }
+
+    /// Frobenius-norm view for the stale-statistics similarity metric.
+    pub fn as_mat(&self) -> Mat {
+        let mut m = Mat::zeros(self.channels, 3);
+        for (c, b) in self.blocks.iter().enumerate() {
+            m.data[c * 3] = b[0];
+            m.data[c * 3 + 1] = b[1];
+            m.data[c * 3 + 2] = b[2];
+        }
+        m
+    }
+
+    /// Element count communicated per worker (4c of the paper vs 4c²).
+    pub fn comm_elems(&self) -> usize {
+        3 * self.channels // symmetric 2x2 packed = 3 per channel
+    }
+}
+
+/// Full (2C × 2C) BN Fisher for the `fullBN` ablation — parameter order
+/// (γ₁, β₁, …, γ_C, β_C) as in Eq. 14.
+#[derive(Clone, Debug)]
+pub struct BnFullFisher {
+    pub channels: usize,
+    pub fisher: Mat,
+}
+
+impl BnFullFisher {
+    pub fn from_taps(g_gamma: &[f32], g_beta: &[f32], batch: usize, channels: usize) -> Self {
+        let n = 2 * channels;
+        let mut fisher = Mat::zeros(n, n);
+        for b in 0..batch {
+            // interleaved per-sample gradient vector
+            let mut v = vec![0.0f32; n];
+            for c in 0..channels {
+                v[2 * c] = g_gamma[b * channels + c];
+                v[2 * c + 1] = g_beta[b * channels + c];
+            }
+            for i in 0..n {
+                if v[i] == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    fisher.data[i * n + j] += v[i] * v[j];
+                }
+            }
+        }
+        let fisher = fisher.scale(1.0 / batch as f32);
+        BnFullFisher { channels, fisher }
+    }
+
+    /// Apply a precomputed damped inverse (from the invert executable) to
+    /// the interleaved (γ, β) gradient.
+    pub fn apply_inverse(
+        inv: &Mat,
+        grad_gamma: &[f32],
+        grad_beta: &[f32],
+    ) -> (Vec<f32>, Vec<f32>) {
+        let channels = grad_gamma.len();
+        let n = 2 * channels;
+        assert_eq!(inv.rows, n);
+        let mut v = vec![0.0f32; n];
+        for c in 0..channels {
+            v[2 * c] = grad_gamma[c];
+            v[2 * c + 1] = grad_beta[c];
+        }
+        let mut out = vec![0.0f32; n];
+        for i in 0..n {
+            let row = &inv.data[i * n..(i + 1) * n];
+            let mut acc = 0.0f32;
+            for j in 0..n {
+                acc += row[j] * v[j];
+            }
+            out[i] = acc;
+        }
+        let mut og = vec![0.0f32; channels];
+        let mut ob = vec![0.0f32; channels];
+        for c in 0..channels {
+            og[c] = out[2 * c];
+            ob[c] = out[2 * c + 1];
+        }
+        (og, ob)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::solve;
+    use crate::util::rng::Rng;
+
+    fn taps(rng: &mut Rng, b: usize, c: usize) -> (Vec<f32>, Vec<f32>) {
+        let gg = (0..b * c).map(|_| rng.normal() as f32).collect();
+        let gb = (0..b * c).map(|_| rng.normal() as f32).collect();
+        (gg, gb)
+    }
+
+    #[test]
+    fn unit_fisher_matches_manual() {
+        let gg = vec![1.0, 2.0, 3.0, 4.0]; // B=2, C=2
+        let gb = vec![0.5, 0.0, 1.0, 1.0];
+        let f = BnFisher::from_taps(&gg, &gb, 2, 2);
+        // channel 0: samples (1, .5), (3, 1): f11=(1+9)/2=5, f12=(0.5+3)/2
+        assert!((f.blocks[0][0] - 5.0).abs() < 1e-6);
+        assert!((f.blocks[0][1] - 1.75).abs() < 1e-6);
+        assert!((f.blocks[0][2] - 0.625).abs() < 1e-6);
+    }
+
+    #[test]
+    fn unit_blocks_equal_full_diagonal() {
+        let mut rng = Rng::new(5);
+        let (b, c) = (16, 6);
+        let (gg, gb) = taps(&mut rng, b, c);
+        let unit = BnFisher::from_taps(&gg, &gb, b, c);
+        let full = BnFullFisher::from_taps(&gg, &gb, b, c);
+        for ch in 0..c {
+            let n = 2 * c;
+            assert!((full.fisher.data[(2 * ch) * n + 2 * ch] - unit.blocks[ch][0]).abs() < 1e-5);
+            assert!(
+                (full.fisher.data[(2 * ch) * n + 2 * ch + 1] - unit.blocks[ch][1]).abs() < 1e-5
+            );
+            assert!(
+                (full.fisher.data[(2 * ch + 1) * n + 2 * ch + 1] - unit.blocks[ch][2]).abs()
+                    < 1e-5
+            );
+        }
+    }
+
+    #[test]
+    fn precondition_is_true_damped_inverse() {
+        let mut rng = Rng::new(7);
+        let (b, c) = (32, 4);
+        let (gg, gb) = taps(&mut rng, b, c);
+        let f = BnFisher::from_taps(&gg, &gb, b, c);
+        let lam = 0.05;
+        let grad_g: Vec<f32> = (0..c).map(|_| rng.normal() as f32).collect();
+        let grad_b: Vec<f32> = (0..c).map(|_| rng.normal() as f32).collect();
+        let (pg, pb) = f.precondition(&grad_g, &grad_b, lam);
+        // verify F_damped @ preconditioned == grad per channel
+        for ch in 0..c {
+            let [f11, f12, f22] = f.blocks[ch];
+            let r1 = (f11 + lam) * pg[ch] + f12 * pb[ch];
+            let r2 = f12 * pg[ch] + (f22 + lam) * pb[ch];
+            assert!((r1 - grad_g[ch]).abs() < 1e-3, "ch{ch}");
+            assert!((r2 - grad_b[ch]).abs() < 1e-3, "ch{ch}");
+        }
+    }
+
+    #[test]
+    fn mean_across_workers() {
+        let mut rng = Rng::new(9);
+        let (b, c) = (8, 3);
+        let parts: Vec<BnFisher> = (0..4)
+            .map(|_| {
+                let (gg, gb) = taps(&mut rng, b, c);
+                BnFisher::from_taps(&gg, &gb, b, c)
+            })
+            .collect();
+        let m = BnFisher::mean(&parts);
+        for ch in 0..c {
+            let want: f32 = parts.iter().map(|p| p.blocks[ch][0]).sum::<f32>() / 4.0;
+            assert!((m.blocks[ch][0] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn full_fisher_apply_matches_gauss_jordan() {
+        let mut rng = Rng::new(11);
+        let (b, c) = (16, 3);
+        let (gg, gb) = taps(&mut rng, b, c);
+        let full = BnFullFisher::from_taps(&gg, &gb, b, c);
+        let lam = 0.1;
+        let mut fd = full.fisher.clone();
+        fd.add_diag(lam);
+        let inv = solve::gauss_jordan_inverse(&fd).unwrap();
+        let grad_g: Vec<f32> = (0..c).map(|_| rng.normal() as f32).collect();
+        let grad_b: Vec<f32> = (0..c).map(|_| rng.normal() as f32).collect();
+        let (og, ob) = BnFullFisher::apply_inverse(&inv, &grad_g, &grad_b);
+        // residual check: fd @ out == grad
+        let n = 2 * c;
+        let mut v = vec![0.0f32; n];
+        for ch in 0..c {
+            v[2 * ch] = og[ch];
+            v[2 * ch + 1] = ob[ch];
+        }
+        for i in 0..n {
+            let mut acc = 0.0;
+            for j in 0..n {
+                acc += fd.data[i * n + j] * v[j];
+            }
+            let want = if i % 2 == 0 { grad_g[i / 2] } else { grad_b[i / 2] };
+            assert!((acc - want).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn comm_savings_unit_vs_full() {
+        // paper: 4c² -> 4c elements (we pack symmetric: 3c vs c(2c+1))
+        let f = BnFisher { channels: 1024, blocks: vec![[0.0; 3]; 1024] };
+        let unit_elems = f.comm_elems();
+        let full_elems = 1024 * 2 * (1024 * 2 + 1) / 2;
+        assert!(unit_elems * 100 < full_elems);
+    }
+}

@@ -1,0 +1,121 @@
+//! Tikhonov damping with the π split (Eq. 12, Martens & Grosse).
+//!
+//! (G ⊗ A + λI)⁻¹ ≈ (G + √λ/π I)⁻¹ ⊗ (A + π√λ I)⁻¹ with
+//! π = sqrt(avg_eig(A) / avg_eig(G)); avg eigenvalue = trace / dim.
+
+use crate::linalg::Mat;
+
+/// π clamp range — degenerate factors (zero trace early in training or
+/// dead units) would otherwise send one side's damping to 0 or ∞.
+const PI_MIN: f32 = 1e-1;
+const PI_MAX: f32 = 1e1;
+
+/// Compute (damp_a, damp_g) = (π√λ, √λ/π) from factor traces.
+pub fn pi_split(a: &Mat, g: &Mat, lambda: f32) -> (f32, f32) {
+    let sqrt_l = lambda.max(0.0).sqrt();
+    let avg_a = (a.trace() / a.rows as f32).max(0.0);
+    let avg_g = (g.trace() / g.rows as f32).max(0.0);
+    let pi = if avg_a > 0.0 && avg_g > 0.0 {
+        (avg_a / avg_g).sqrt().clamp(PI_MIN, PI_MAX)
+    } else {
+        1.0
+    };
+    (pi * sqrt_l, sqrt_l / pi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::solve;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn balanced_factors_give_sqrt_lambda() {
+        let a = Mat::eye(4).scale(2.0);
+        let g = Mat::eye(8).scale(2.0);
+        let (da, dg) = pi_split(&a, &g, 0.04);
+        assert!((da - 0.2).abs() < 1e-6);
+        assert!((dg - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pi_scales_with_trace_ratio() {
+        let a = Mat::eye(4).scale(100.0);
+        let g = Mat::eye(4).scale(1.0);
+        let (da, dg) = pi_split(&a, &g, 1.0);
+        // π = 10: A damped more, G damped less; product preserved = λ
+        assert!((da - 10.0).abs() < 1e-4);
+        assert!((dg - 0.1).abs() < 1e-5);
+        assert!((da * dg - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn degenerate_factor_clamped() {
+        let a = Mat::zeros(4, 4);
+        let g = Mat::eye(4);
+        let (da, dg) = pi_split(&a, &g, 0.01);
+        assert_eq!(da, 0.1);
+        assert_eq!(dg, 0.1);
+    }
+
+    #[test]
+    fn product_of_dampings_equals_lambda() {
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            let n = 3 + rng.below_usize(8);
+            let d: Vec<f32> = (0..n * n).map(|_| rng.normal() as f32).collect();
+            let b = Mat::from_vec(n, n, d);
+            let a = b.transpose().matmul(&b);
+            let g = Mat::eye(n).scale(0.5 + rng.f32());
+            let lambda = 0.001 + rng.f32() * 0.1;
+            let (da, dg) = pi_split(&a, &g, lambda);
+            assert!((da * dg - lambda).abs() / lambda < 1e-3);
+        }
+    }
+
+    #[test]
+    fn damped_kron_inverse_approximates_true_inverse() {
+        // end-to-end check of Eq. 12 on a small Kronecker product:
+        // (G ⊗ A + λI)⁻¹ vs (G+√λ/π I)⁻¹ ⊗ (A+π√λ I)⁻¹ should be close
+        // when λ is small relative to the factor scales.
+        let a = Mat::from_vec(2, 2, vec![2.0, 0.3, 0.3, 1.5]);
+        let g = Mat::from_vec(2, 2, vec![1.0, 0.1, 0.1, 0.8]);
+        let lambda = 0.01;
+        let (da, dg) = pi_split(&a, &g, lambda);
+        let mut ad = a.clone();
+        ad.add_diag(da);
+        let mut gd = g.clone();
+        gd.add_diag(dg);
+        let ainv = solve::gauss_jordan_inverse(&ad).unwrap();
+        let ginv = solve::gauss_jordan_inverse(&gd).unwrap();
+        // kron(G,A) + λI, inverted exactly
+        let n = 4;
+        let mut kron = Mat::zeros(n, n);
+        for i in 0..2 {
+            for j in 0..2 {
+                for k in 0..2 {
+                    for l in 0..2 {
+                        kron.data[(i * 2 + k) * n + (j * 2 + l)] =
+                            g.at(i, j) * a.at(k, l);
+                    }
+                }
+            }
+        }
+        kron.add_diag(lambda);
+        let exact = solve::gauss_jordan_inverse(&kron).unwrap();
+        let mut approx = Mat::zeros(n, n);
+        for i in 0..2 {
+            for j in 0..2 {
+                for k in 0..2 {
+                    for l in 0..2 {
+                        approx.data[(i * 2 + k) * n + (j * 2 + l)] =
+                            ginv.at(i, j) * ainv.at(k, l);
+                    }
+                }
+            }
+        }
+        // loose bound — Eq. 12 is itself an approximation
+        let rel = exact.fro_dist(&approx) / exact.fro_norm();
+        assert!(rel < 0.2, "rel={rel}");
+    }
+}

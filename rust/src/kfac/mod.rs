@@ -1,0 +1,8 @@
+//! Host-side K-FAC state: damping (π split of Eq. 12), unit-wise
+//! BatchNorm Fisher (Eqs. 15-17), and per-layer factor bookkeeping.
+
+pub mod bn;
+pub mod damping;
+
+pub use bn::{BnFisher, BnFullFisher};
+pub use damping::pi_split;

@@ -1,0 +1,28 @@
+//! SP-NGD: Scalable and Practical Natural Gradient Descent.
+//!
+//! Reproduction of Osawa et al., "Scalable and Practical Natural Gradient
+//! for Large-Scale Deep Learning" (2020) as a three-layer stack:
+//!
+//! - **L3 (this crate)** — the distributed coordinator: hybrid data/model
+//!   parallel SP-NGD step (Stages 1-5), adaptive stale-statistics scheduler,
+//!   collectives, optimizer schedules, data pipeline and cluster simulator.
+//! - **L2 (python/compile/model.py)** — JAX model fwd/bwd with K-FAC factor
+//!   capture, AOT-lowered to HLO text under `artifacts/`.
+//! - **L1 (python/compile/kernels/)** — Pallas kernels for factor
+//!   construction, Newton-Schulz inversion and preconditioning.
+//!
+//! Python never runs on the training path: `rust/src/runtime` loads the
+//! HLO artifacts through the PJRT C API (`xla` crate) and the coordinator
+//! drives everything from rust.
+
+pub mod collectives;
+pub mod coordinator;
+pub mod data;
+pub mod harness;
+pub mod kfac;
+pub mod metrics;
+pub mod optim;
+pub mod linalg;
+pub mod runtime;
+pub mod simulator;
+pub mod util;

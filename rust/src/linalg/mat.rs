@@ -1,0 +1,198 @@
+//! Row-major dense f32 matrix.
+
+/// Row-major dense matrix of f32 (the training-path element type).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        t
+    }
+
+    /// self @ other — blocked ikj matmul (cache-friendly for our sizes).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[p * n..(p + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// self + alpha * other (element-wise), shapes must match.
+    pub fn axpy(&self, alpha: f32, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| a + alpha * b)
+            .collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn scale(&self, s: f32) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|x| x * s).collect(),
+        }
+    }
+
+    /// Add `lambda` to the diagonal (Tikhonov damping), in place.
+    pub fn add_diag(&mut self, lambda: f32) {
+        assert!(self.is_square());
+        let n = self.rows;
+        for i in 0..n {
+            self.data[i * n + i] += lambda;
+        }
+    }
+
+    pub fn trace(&self) -> f32 {
+        assert!(self.is_square());
+        (0..self.rows).map(|i| self.at(i, i)).sum()
+    }
+
+    /// Frobenius norm — the staleness metric of Algorithm 2 uses
+    /// ||X - X₋₁||_F / ||X₋₁||_F.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    /// ||self - other||_F.
+    pub fn fro_dist(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| {
+                let d = (*a as f64) - (*b as f64);
+                d * d
+            })
+            .sum::<f64>()
+            .sqrt() as f32
+    }
+
+    /// Max |aᵢⱼ - bᵢⱼ|.
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Symmetrize in place: X ← (X + Xᵀ)/2. Keeps accumulated factors
+    /// numerically symmetric so packed communication is lossless.
+    pub fn symmetrize(&mut self) {
+        assert!(self.is_square());
+        let n = self.rows;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let v = 0.5 * (self.data[i * n + j] + self.data[j * n + i]);
+                self.data[i * n + j] = v;
+                self.data[j * n + i] = v;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let i3 = Mat::eye(3);
+        assert_eq!(a.matmul(&i3), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = Mat::from_vec(2, 2, vec![5., 6., 7., 8.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn fro_norm_known() {
+        let a = Mat::from_vec(1, 2, vec![3., 4.]);
+        assert!((a.fro_norm() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn damping_adds_diagonal() {
+        let mut a = Mat::zeros(3, 3);
+        a.add_diag(0.5);
+        assert_eq!(a.trace(), 1.5);
+        assert_eq!(a.at(0, 1), 0.0);
+    }
+
+    #[test]
+    fn symmetrize_works() {
+        let mut a = Mat::from_vec(2, 2, vec![1., 2., 4., 3.]);
+        a.symmetrize();
+        assert_eq!(a.at(0, 1), 3.0);
+        assert_eq!(a.at(1, 0), 3.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Dense + packed-symmetric linear algebra substrate.
+//!
+//! The coordinator needs host-side matrix math for: Kronecker-factor
+//! bookkeeping (damping, π split, staleness norms), the closed-form 2×2
+//! BatchNorm inverse, symmetry-aware packing for communication, and
+//! reference inverses to cross-check the HLO Newton-Schulz artifacts.
+
+pub mod mat;
+pub mod packed;
+pub mod solve;
+
+pub use mat::Mat;
+pub use packed::{pack_upper, packed_len, unpack_upper};

@@ -1,0 +1,94 @@
+//! Symmetry-aware packing (§5.2 of the paper).
+//!
+//! The statistics matrices A, G, F_unitBN are symmetric; to communicate an
+//! N×N symmetric matrix only the upper triangle with N(N+1)/2 elements is
+//! sent. These helpers convert between dense row-major and packed
+//! row-major-upper-triangular layouts and are used by the collectives.
+
+use super::Mat;
+
+/// Number of packed elements for an n×n symmetric matrix.
+#[inline]
+pub const fn packed_len(n: usize) -> usize {
+    n * (n + 1) / 2
+}
+
+/// Pack the upper triangle (row-major: row i contributes cols i..n).
+pub fn pack_upper(m: &Mat) -> Vec<f32> {
+    assert!(m.is_square(), "pack_upper requires square");
+    let n = m.rows;
+    let mut out = Vec::with_capacity(packed_len(n));
+    for i in 0..n {
+        out.extend_from_slice(&m.data[i * n + i..(i + 1) * n]);
+    }
+    out
+}
+
+/// Unpack into a dense symmetric matrix.
+pub fn unpack_upper(packed: &[f32], n: usize) -> Mat {
+    assert_eq!(packed.len(), packed_len(n), "packed length mismatch");
+    let mut m = Mat::zeros(n, n);
+    let mut k = 0;
+    for i in 0..n {
+        for j in i..n {
+            m.data[i * n + j] = packed[k];
+            m.data[j * n + i] = packed[k];
+            k += 1;
+        }
+    }
+    m
+}
+
+/// Bytes saved by packing an n×n f32 symmetric matrix (for comm accounting).
+pub fn packed_savings_bytes(n: usize) -> usize {
+    (n * n - packed_len(n)) * std::mem::size_of::<f32>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{self, gen};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pack_len() {
+        assert_eq!(packed_len(1), 1);
+        assert_eq!(packed_len(4), 10);
+        assert_eq!(packed_len(64), 2080);
+    }
+
+    #[test]
+    fn roundtrip_small() {
+        let m = unpack_upper(&[1., 2., 3., 4., 5., 6.], 3);
+        assert_eq!(m.at(0, 2), 3.0);
+        assert_eq!(m.at(2, 0), 3.0);
+        assert_eq!(m.at(1, 1), 4.0);
+        let p = pack_upper(&m);
+        assert_eq!(p, vec![1., 2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn prop_roundtrip_symmetric() {
+        prop::check(
+            42,
+            50,
+            32,
+            |rng: &mut Rng, size| {
+                let n = size.max(1);
+                let d = gen::spd(rng, n, 0.1);
+                Mat::from_vec(n, n, d.iter().map(|x| *x as f32).collect())
+            },
+            |m| {
+                let p = pack_upper(m);
+                let m2 = unpack_upper(&p, m.rows);
+                m.max_abs_diff(&m2) == 0.0
+            },
+        );
+    }
+
+    #[test]
+    fn savings_grow_quadratically() {
+        assert_eq!(packed_savings_bytes(1), 0);
+        assert!(packed_savings_bytes(256) > packed_savings_bytes(128) * 3);
+    }
+}

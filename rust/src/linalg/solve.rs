@@ -1,0 +1,289 @@
+//! Inverses & factorizations: Gauss-Jordan (general), Cholesky (SPD),
+//! Newton-Schulz iteration (SPD, matmul-only — the same scheme the L1
+//! Pallas kernel uses on the MXU), and a power-iteration spectral-norm
+//! estimate used to initialize Newton-Schulz.
+
+use super::Mat;
+
+/// Gauss-Jordan inverse with partial pivoting. O(n³); reference oracle for
+/// validating the Newton-Schulz artifacts and for small host-side solves.
+pub fn gauss_jordan_inverse(a: &Mat) -> Option<Mat> {
+    assert!(a.is_square());
+    let n = a.rows;
+    // augmented [A | I] in f64 for accuracy
+    let mut aug = vec![0.0f64; n * 2 * n];
+    for i in 0..n {
+        for j in 0..n {
+            aug[i * 2 * n + j] = a.at(i, j) as f64;
+        }
+        aug[i * 2 * n + n + i] = 1.0;
+    }
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        let mut best = aug[col * 2 * n + col].abs();
+        for r in (col + 1)..n {
+            let v = aug[r * 2 * n + col].abs();
+            if v > best {
+                best = v;
+                piv = r;
+            }
+        }
+        if best < 1e-300 {
+            return None; // singular
+        }
+        if piv != col {
+            for j in 0..2 * n {
+                aug.swap(col * 2 * n + j, piv * 2 * n + j);
+            }
+        }
+        let d = aug[col * 2 * n + col];
+        for j in 0..2 * n {
+            aug[col * 2 * n + j] /= d;
+        }
+        for r in 0..n {
+            if r == col {
+                continue;
+            }
+            let f = aug[r * 2 * n + col];
+            if f == 0.0 {
+                continue;
+            }
+            for j in 0..2 * n {
+                aug[r * 2 * n + j] -= f * aug[col * 2 * n + j];
+            }
+        }
+    }
+    let mut inv = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            inv.data[i * n + j] = aug[i * 2 * n + n + j] as f32;
+        }
+    }
+    Some(inv)
+}
+
+/// Cholesky factor L (lower) of an SPD matrix, or None if not PD.
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    assert!(a.is_square());
+    let n = a.rows;
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a.at(i, j) as f64;
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                l[i * n + i] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    Some(Mat::from_vec(n, n, l.iter().map(|x| *x as f32).collect()))
+}
+
+/// SPD inverse via Cholesky: A⁻¹ = L⁻ᵀ L⁻¹.
+pub fn cholesky_inverse(a: &Mat) -> Option<Mat> {
+    let l = cholesky(a)?;
+    let n = a.rows;
+    // invert lower-triangular L by forward substitution per unit vector
+    let mut linv = Mat::zeros(n, n);
+    for col in 0..n {
+        for i in col..n {
+            let mut s = if i == col { 1.0f64 } else { 0.0 };
+            for k in col..i {
+                s -= (l.at(i, k) as f64) * (linv.at(k, col) as f64);
+            }
+            *linv.at_mut(i, col) = (s / l.at(i, i) as f64) as f32;
+        }
+    }
+    Some(linv.transpose().matmul(&linv))
+}
+
+/// Power-iteration estimate of the spectral norm (largest eigenvalue of a
+/// symmetric PSD matrix). `iters`=16 gives ~3 digits for our factors.
+pub fn spectral_norm_est(a: &Mat, iters: usize) -> f32 {
+    assert!(a.is_square());
+    let n = a.rows;
+    let mut v = vec![1.0f32 / (n as f32).sqrt(); n];
+    let mut lambda = 0.0f32;
+    for _ in 0..iters {
+        let mut w = vec![0.0f32; n];
+        for i in 0..n {
+            let row = &a.data[i * n..(i + 1) * n];
+            let mut acc = 0.0;
+            for j in 0..n {
+                acc += row[j] * v[j];
+            }
+            w[i] = acc;
+        }
+        let norm = w.iter().map(|x| x * x).sum::<f32>().sqrt();
+        if norm == 0.0 {
+            return 0.0;
+        }
+        lambda = norm;
+        for i in 0..n {
+            v[i] = w[i] / norm;
+        }
+    }
+    lambda
+}
+
+/// Newton-Schulz iteration for the inverse of an SPD matrix.
+///
+/// X₀ = (1/σ) I with σ ≥ λ_max(M) guarantees convergence; each step is
+/// X ← X (2I − M X) — two matmuls, exactly the MXU-friendly scheme of the
+/// L1 `inverse.py` kernel. Returns after `iters` steps.
+pub fn newton_schulz_inverse(m: &Mat, iters: usize) -> Mat {
+    assert!(m.is_square());
+    let n = m.rows;
+    let sigma = spectral_norm_est(m, 16).max(f32::MIN_POSITIVE);
+    let mut x = Mat::eye(n).scale(1.0 / sigma);
+    let two_i = Mat::eye(n).scale(2.0);
+    for _ in 0..iters {
+        let mx = m.matmul(&x);
+        let t = two_i.axpy(-1.0, &mx); // 2I - MX
+        x = x.matmul(&t);
+    }
+    x
+}
+
+/// Residual ||A X − I||_F / sqrt(n): convergence check for inverse quality.
+pub fn inverse_residual(a: &Mat, x: &Mat) -> f32 {
+    let n = a.rows;
+    let ax = a.matmul(x);
+    let mut acc = 0.0f64;
+    for i in 0..n {
+        for j in 0..n {
+            let target = if i == j { 1.0 } else { 0.0 };
+            let d = (ax.at(i, j) - target) as f64;
+            acc += d * d;
+        }
+    }
+    (acc.sqrt() / (n as f64).sqrt()) as f32
+}
+
+/// Closed-form 2×2 inverse (Eq. 17 of the paper) — unit-wise BatchNorm.
+/// Returns None if the determinant is (numerically) zero.
+pub fn inv2x2(a: f32, b: f32, c: f32, d: f32) -> Option<[f32; 4]> {
+    let det = (a as f64) * (d as f64) - (b as f64) * (c as f64);
+    if det.abs() < 1e-30 {
+        return None;
+    }
+    let inv_det = 1.0 / det;
+    Some([
+        (d as f64 * inv_det) as f32,
+        (-b as f64 * inv_det) as f32,
+        (-c as f64 * inv_det) as f32,
+        (a as f64 * inv_det) as f32,
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{self, gen};
+    use crate::util::rng::Rng;
+
+    fn spd_mat(rng: &mut Rng, n: usize, eps: f64) -> Mat {
+        let d = gen::spd(rng, n, eps);
+        Mat::from_vec(n, n, d.iter().map(|x| *x as f32).collect())
+    }
+
+    #[test]
+    fn gj_inverse_known() {
+        let a = Mat::from_vec(2, 2, vec![4., 7., 2., 6.]);
+        let inv = gauss_jordan_inverse(&a).unwrap();
+        assert!(inverse_residual(&a, &inv) < 1e-5);
+    }
+
+    #[test]
+    fn gj_singular_none() {
+        let a = Mat::from_vec(2, 2, vec![1., 2., 2., 4.]);
+        assert!(gauss_jordan_inverse(&a).is_none());
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::new(3);
+        let a = spd_mat(&mut rng, 8, 0.5);
+        let l = cholesky(&a).unwrap();
+        let rec = l.matmul(&l.transpose());
+        assert!(a.max_abs_diff(&rec) < 1e-4);
+    }
+
+    #[test]
+    fn cholesky_inverse_matches_gj() {
+        let mut rng = Rng::new(4);
+        let a = spd_mat(&mut rng, 10, 0.5);
+        let i1 = cholesky_inverse(&a).unwrap();
+        let i2 = gauss_jordan_inverse(&a).unwrap();
+        assert!(i1.max_abs_diff(&i2) < 1e-3);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_vec(2, 2, vec![1., 2., 2., 1.]); // eigvals 3, -1
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn spectral_norm_diag() {
+        let mut a = Mat::zeros(3, 3);
+        a.data[0] = 5.0;
+        a.data[4] = 2.0;
+        a.data[8] = 1.0;
+        // power iteration from a non-aligned start still finds 5 after iters
+        let est = spectral_norm_est(&a, 50);
+        assert!((est - 5.0).abs() < 1e-3, "est={est}");
+    }
+
+    #[test]
+    fn newton_schulz_converges_on_spd() {
+        let mut rng = Rng::new(5);
+        let mut a = spd_mat(&mut rng, 16, 0.0);
+        a.add_diag(0.1); // damped, like the real factors
+        let x = newton_schulz_inverse(&a, 30);
+        let r = inverse_residual(&a, &x);
+        assert!(r < 1e-3, "residual={r}");
+    }
+
+    #[test]
+    fn prop_newton_schulz_matches_gj() {
+        prop::check(
+            7,
+            25,
+            24,
+            |rng: &mut Rng, size| {
+                let n = size.max(2);
+                let mut m = spd_mat(rng, n, 0.0);
+                m.add_diag(0.05 + m.trace() / n as f32 * 0.01);
+                m
+            },
+            |m| {
+                let ns = newton_schulz_inverse(m, 40);
+                inverse_residual(m, &ns) < 5e-3
+            },
+        );
+    }
+
+    #[test]
+    fn inv2x2_matches_gj() {
+        let a = Mat::from_vec(2, 2, vec![3., 1., 1., 2.]);
+        let gj = gauss_jordan_inverse(&a).unwrap();
+        let f = inv2x2(3., 1., 1., 2.).unwrap();
+        assert!((gj.data[0] - f[0]).abs() < 1e-6);
+        assert!((gj.data[1] - f[1]).abs() < 1e-6);
+        assert!((gj.data[3] - f[3]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn inv2x2_singular() {
+        assert!(inv2x2(1., 2., 2., 4.).is_none());
+    }
+}

@@ -1,0 +1,290 @@
+//! spngd — SP-NGD leader CLI.
+//!
+//! Subcommands:
+//!   info      print the artifact manifest summary
+//!   train     run SP-NGD (or SGD) training on the synthetic corpus
+//!   simulate  sweep the cluster cost model over GPU counts (Fig. 5)
+//!
+//! `make artifacts` must have produced `artifacts/` first.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use spngd::collectives::cost::ClusterModel;
+use spngd::coordinator::{BnMode, Fisher, Optim, Trainer, TrainerCfg};
+use spngd::data::{AugmentCfg, SynthDataset};
+use spngd::optim::{HyperParams, Schedule};
+use spngd::runtime::{Engine, Manifest};
+use spngd::simulator;
+use spngd::util::cli::Args;
+use spngd::util::stats::{fmt_bytes, fmt_duration};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let cmd = argv.get(1).map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "info" => cmd_info(),
+        "train" => cmd_train(),
+        "simulate" => cmd_simulate(),
+        _ => {
+            eprintln!(
+                "usage: spngd <info|train|simulate> [options]\n\
+                 run `spngd <cmd> --help` for per-command options"
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load(artifacts: &str) -> Result<(Rc<Manifest>, Rc<Engine>)> {
+    let dir = Path::new(artifacts);
+    if !dir.join("manifest.json").exists() {
+        bail!("no manifest in {artifacts} — run `make artifacts` first");
+    }
+    let manifest = Rc::new(Manifest::load(dir)?);
+    let engine = Rc::new(Engine::new(&manifest)?);
+    Ok((manifest, engine))
+}
+
+fn cmd_info() -> Result<()> {
+    let parsed = Args::new("spngd info", "print the artifact manifest summary")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .parse_env(2)
+        .map_err(|u| anyhow::anyhow!("{u}"))?;
+    let (manifest, engine) = load(parsed.get("artifacts"))?;
+    println!("platform: {}", engine.platform());
+    println!("executables: {}", manifest.executables.len());
+    for (name, m) in &manifest.models {
+        println!(
+            "model {name}: input {:?}, {} classes, batch/GPU {}, {} params ({} tensors), {} K-FAC layers",
+            m.input_shape,
+            m.num_classes,
+            m.batch,
+            m.total_param_count(),
+            m.params.len(),
+            m.kfac_layers.len()
+        );
+        let (conv, fc, bn) = m.kfac_layers.iter().fold((0, 0, 0), |(c, f, b), l| {
+            match l.kind.as_str() {
+                "conv" => (c + 1, f, b),
+                "fc" => (c, f + 1, b),
+                _ => (c, f, b + 1),
+            }
+        });
+        println!("  layer mix: {conv} conv, {fc} fc, {bn} bn");
+    }
+    Ok(())
+}
+
+fn trainer_from_args(parsed: &spngd::util::cli::Parsed) -> Result<Trainer> {
+    let (manifest, engine) = load(parsed.get("artifacts"))?;
+    let model = parsed.get("model").to_string();
+    let m = manifest.model(&model)?;
+    let workers = parsed.get_usize("workers");
+    let accum = parsed.get_usize("accum");
+    let eff_bs = workers * accum * m.batch;
+    let hp = if parsed.get_bool("table2-hp") {
+        // map the effective batch onto the paper's Table 2 rows: our
+        // corpus is ~1/128 the scale of ImageNet, so scale BS accordingly
+        HyperParams::table2(eff_bs * 128)
+    } else {
+        HyperParams {
+            alpha_mixup: parsed.get_f64("mixup"),
+            p_decay: parsed.get_f64("p-decay"),
+            e_start: parsed.get_f64("e-start"),
+            e_end: parsed.get_f64("e-end"),
+            eta0: parsed.get_f64("lr"),
+            m0: parsed.get_f64("momentum"),
+            lambda: parsed.get_f64("lambda") as f32,
+        }
+    };
+    let dataset_len = parsed.get_usize("dataset");
+    let steps_per_epoch = (dataset_len / eff_bs).max(1);
+    let augment = if parsed.get_bool("augment") {
+        AugmentCfg { alpha_mixup: hp.alpha_mixup, ..AugmentCfg::default() }
+    } else {
+        AugmentCfg::disabled()
+    };
+    let cfg = TrainerCfg {
+        model,
+        workers,
+        grad_accum: accum,
+        fisher: match parsed.get("fisher") {
+            "1mc" => Fisher::OneMc,
+            _ => Fisher::Emp,
+        },
+        bn_mode: match parsed.get("bn") {
+            "full" => BnMode::Full,
+            _ => BnMode::Unit,
+        },
+        stale: parsed.get_bool("stale"),
+        stale_alpha: parsed.get_f64("stale-alpha") as f32,
+        lambda: hp.lambda,
+        schedule: Schedule::new(hp, steps_per_epoch),
+        optimizer: match parsed.get("optimizer") {
+            "sgd" => Optim::Sgd,
+            _ => Optim::SpNgd,
+        },
+        weight_rescale: parsed.get_bool("rescale"),
+        clip_update_ratio: parsed.get_f64("clip") as f32,
+        augment,
+        bn_momentum: 0.9,
+        fp16_comm: parsed.get_bool("fp16-comm"),
+        seed: parsed.get_u64("seed"),
+    };
+    let (c, h, w) = (m.input_shape[1], m.input_shape[2], m.input_shape[3]);
+    let ds = SynthDataset::new(m.num_classes, c, h, w, dataset_len, parsed.get_u64("seed"));
+    Trainer::new(manifest, engine, cfg, ds)
+}
+
+fn train_args() -> Args {
+    Args::new("spngd train", "train on the synthetic corpus")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("model", "convnet_small", "model name (mlp | convnet_small)")
+        .opt("optimizer", "spngd", "spngd | sgd")
+        .opt("fisher", "emp", "Fisher estimation: emp | 1mc")
+        .opt("bn", "unit", "BatchNorm Fisher: unit | full")
+        .flag("stale", "enable the adaptive stale-statistics scheduler")
+        .opt("stale-alpha", "0.1", "similarity threshold α")
+        .opt("workers", "4", "simulated GPUs")
+        .opt("accum", "1", "gradient accumulation micro-steps")
+        .opt("steps", "200", "training steps")
+        .opt("dataset", "8192", "synthetic corpus size")
+        .opt("lr", "0.02", "initial learning rate η₀")
+        .opt("momentum", "0.018", "initial momentum m₀")
+        .opt("lambda", "0.0025", "damping λ")
+        .opt("mixup", "0.4", "mixup α (with --augment)")
+        .opt("p-decay", "3.5", "polynomial decay exponent")
+        .opt("e-start", "1.0", "decay start epoch")
+        .opt("e-end", "60.0", "decay end epoch")
+        .flag("table2-hp", "use the paper's Table 2 hyperparameters")
+        .flag("augment", "enable running mixup + random erasing")
+        .flag("rescale", "enable Normalizing Weights (Eq. 24)")
+        .flag("fp16-comm", "half-precision wire format for collectives (§5.2)")
+        .opt("clip", "0.3", "trust-ratio update clip (0 = off)")
+        .opt("eval-every", "0", "evaluate every N steps (0 = only at end)")
+        .opt("csv", "", "write per-step CSV to this path")
+        .opt("seed", "7", "RNG seed")
+}
+
+fn cmd_train() -> Result<()> {
+    let parsed = train_args().parse_env(2).map_err(|u| anyhow::anyhow!("{u}"))?;
+    let steps = parsed.get_usize("steps");
+    let eval_every = parsed.get_usize("eval-every");
+    let mut tr = trainer_from_args(&parsed)?;
+    println!(
+        "training {} with {} (workers={}, accum={}, effective batch={})",
+        tr.cfg.model,
+        parsed.get("optimizer"),
+        tr.cfg.workers,
+        tr.cfg.grad_accum,
+        tr.cfg.effective_batch(32)
+    );
+    for i in 1..=steps {
+        let rec = tr.step()?;
+        if i <= 3 || i % 20 == 0 {
+            println!(
+                "step {:4}  loss {:.4}  acc {:.3}  lr {:.4}  {}/step  stats {}  refreshed {}/{}",
+                rec.step,
+                rec.loss,
+                rec.train_acc,
+                rec.lr,
+                fmt_duration(rec.times.t_total),
+                fmt_bytes(rec.comm.stats_total() as f64),
+                rec.refreshed,
+                rec.total_stats
+            );
+        }
+        if eval_every > 0 && i % eval_every == 0 {
+            let (vl, va) = tr.evaluate(8)?;
+            println!("  eval @ {i}: loss {vl:.4} acc {va:.3}");
+        }
+    }
+    let (vl, va) = tr.evaluate(16)?;
+    println!("final: val loss {vl:.4}, val acc {va:.3}");
+    println!(
+        "mean step {}  comm reduction {:.1}%  total stats comm {}",
+        fmt_duration(tr.log.mean_step_time(3)),
+        tr.comm_reduction() * 100.0,
+        fmt_bytes(tr.log.total_stats_bytes() as f64)
+    );
+    let csv = parsed.get("csv");
+    if !csv.is_empty() {
+        tr.log.write_csv(csv)?;
+        println!("wrote {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_simulate() -> Result<()> {
+    let parsed = Args::new("spngd simulate", "Fig. 5 cluster sweep from a measured profile")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("model", "convnet_small", "model to profile")
+        .opt("probe-steps", "4", "steps to measure the profile")
+        .opt("gpus", "1,4,16,64,128,256,512,1024", "GPU counts")
+        .opt("stale-fraction", "0.08", "assumed stale refresh fraction")
+        .parse_env(2)
+        .map_err(|u| anyhow::anyhow!("{u}"))?;
+    let (manifest, engine) = load(parsed.get("artifacts"))?;
+    let model = parsed.get("model").to_string();
+    let m = manifest.model(&model)?;
+    let (c, h, w) = (m.input_shape[1], m.input_shape[2], m.input_shape[3]);
+    let ds = SynthDataset::new(m.num_classes, c, h, w, 4096, 7);
+    let hp = HyperParams::table2(32_768);
+    let cfg = TrainerCfg {
+        model,
+        workers: 2,
+        grad_accum: 1,
+        fisher: Fisher::Emp,
+        bn_mode: BnMode::Unit,
+        stale: false,
+        stale_alpha: 0.1,
+        lambda: hp.lambda,
+        schedule: Schedule::new(hp, 100),
+        optimizer: Optim::SpNgd,
+        weight_rescale: false,
+        clip_update_ratio: 0.3,
+        augment: AugmentCfg::disabled(),
+        bn_momentum: 0.9,
+        fp16_comm: parsed.get_bool("fp16-comm"),
+        seed: 7,
+    };
+    let mut tr = Trainer::new(manifest, engine, cfg, ds)?;
+    let probe = parsed.get_usize("probe-steps");
+    for _ in 0..probe {
+        tr.step()?;
+    }
+    let base = tr.profile();
+    let deltas = simulator::TechniqueDeltas {
+        t_extra_bwd_1mc: base.t_backward * 0.9,
+        t_full_bn_extra: base.t_inverse * 0.4,
+        full_bn_extra_bytes: base.stats_bytes * 0.3,
+        stale_fraction: parsed.get_f64("stale-fraction"),
+    };
+    let variants: Vec<simulator::Variant> = simulator::fig5_techniques()
+        .iter()
+        .map(|&t| simulator::derive(&base, &deltas, t))
+        .collect();
+    let gpus = parsed.get_usize_list("gpus");
+    let cm = ClusterModel::default();
+    let rows = simulator::sweep(&variants, &gpus, &cm);
+    print!("{:>20}", "technique \\ GPUs");
+    for g in &gpus {
+        print!("{g:>10}");
+    }
+    println!();
+    for row in rows {
+        print!("{:>20}", row.label);
+        for (_, t) in row.points {
+            print!("{:>10}", format!("{:.1}ms", t * 1e3));
+        }
+        println!();
+    }
+    Ok(())
+}

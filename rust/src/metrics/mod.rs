@@ -1,0 +1,144 @@
+//! Training metrics: per-step records and run summaries consumed by the
+//! examples, the benches, and EXPERIMENTS.md.
+
+use crate::collectives::comm::CommStats;
+
+/// Wall-time breakdown of one coordinator step (seconds).
+#[derive(Clone, Debug, Default)]
+pub struct StageTimes {
+    /// Stage 1+2 compute: fwd/bwd step executable (max over workers)
+    pub t_step_exec: f64,
+    /// statistics construction (factor executables, max over workers)
+    pub t_factors: f64,
+    /// Stage 4a: factor inversion (wall time across parallel owners)
+    pub t_inverse: f64,
+    /// Stage 4b: preconditioning + parameter update
+    pub t_update: f64,
+    /// whole step
+    pub t_total: f64,
+}
+
+/// One training step's record.
+#[derive(Clone, Debug)]
+pub struct StepRecord {
+    pub step: u64,
+    pub epoch: f64,
+    pub loss: f32,
+    pub train_acc: f32,
+    pub lr: f64,
+    pub momentum: f64,
+    pub times: StageTimes,
+    pub comm: CommStats,
+    /// statistics refreshed this step / total statistics
+    pub refreshed: usize,
+    pub total_stats: usize,
+}
+
+/// Accumulating run log with summary helpers.
+#[derive(Default)]
+pub struct RunLog {
+    pub records: Vec<StepRecord>,
+}
+
+impl RunLog {
+    pub fn push(&mut self, r: StepRecord) {
+        self.records.push(r);
+    }
+
+    pub fn mean_step_time(&self, skip_warmup: usize) -> f64 {
+        let xs: Vec<f64> = self
+            .records
+            .iter()
+            .skip(skip_warmup)
+            .map(|r| r.times.t_total)
+            .collect();
+        if xs.is_empty() {
+            return f64::NAN;
+        }
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+
+    /// Total statistics communication bytes over the run.
+    pub fn total_stats_bytes(&self) -> u64 {
+        self.records.iter().map(|r| r.comm.stats_total()).sum()
+    }
+
+    /// Fraction of statistic-refreshes actually performed (Table 2's
+    /// communication-reduction column ≈ this, weighted by matrix sizes).
+    pub fn refresh_fraction(&self) -> f64 {
+        let (mut r, mut t) = (0usize, 0usize);
+        for rec in &self.records {
+            r += rec.refreshed;
+            t += rec.total_stats;
+        }
+        if t == 0 {
+            1.0
+        } else {
+            r as f64 / t as f64
+        }
+    }
+
+    /// First step at which loss drops below `target` (None if never).
+    pub fn steps_to_loss(&self, target: f32) -> Option<u64> {
+        self.records.iter().find(|r| r.loss <= target).map(|r| r.step)
+    }
+
+    pub fn final_loss(&self) -> f32 {
+        self.records.last().map(|r| r.loss).unwrap_or(f32::NAN)
+    }
+
+    /// Write a CSV of (step, epoch, loss, acc, lr, t_total, stats_bytes).
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        use crate::util::log::TableWriter;
+        let mut w = TableWriter::create(
+            path,
+            &["step", "epoch", "loss", "train_acc", "lr", "t_total", "stats_bytes"],
+        )?;
+        for r in &self.records {
+            w.row(&[
+                r.step as f64,
+                r.epoch,
+                r.loss as f64,
+                r.train_acc as f64,
+                r.lr,
+                r.times.t_total,
+                r.comm.stats_total() as f64,
+            ])?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: u64, loss: f32, t: f64, refreshed: usize) -> StepRecord {
+        StepRecord {
+            step,
+            epoch: step as f64 / 10.0,
+            loss,
+            train_acc: 0.5,
+            lr: 0.1,
+            momentum: 0.9,
+            times: StageTimes { t_total: t, ..Default::default() },
+            comm: CommStats { rs_stats_a: 100, rs_stats_g: 50, ..Default::default() },
+            refreshed,
+            total_stats: 10,
+        }
+    }
+
+    #[test]
+    fn summaries() {
+        let mut log = RunLog::default();
+        log.push(rec(1, 2.0, 1.0, 10));
+        log.push(rec(2, 1.0, 0.5, 5));
+        log.push(rec(3, 0.4, 0.5, 0));
+        assert_eq!(log.mean_step_time(1), 0.5);
+        assert_eq!(log.total_stats_bytes(), 450);
+        assert!((log.refresh_fraction() - 0.5).abs() < 1e-9);
+        assert_eq!(log.steps_to_loss(1.0), Some(2));
+        assert_eq!(log.steps_to_loss(0.1), None);
+        assert_eq!(log.final_loss(), 0.4);
+    }
+}

@@ -1,0 +1,7 @@
+//! Optimizer schedules and update rules (§6.2-6.3).
+
+pub mod schedule;
+pub mod update;
+
+pub use schedule::{HyperParams, Schedule};
+pub use update::{sgd_update, spngd_update, rescale_weight, Velocity};

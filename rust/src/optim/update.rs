@@ -1,0 +1,118 @@
+//! Parameter update rules: SP-NGD momentum update (Eq. 23), Normalizing
+//! Weights rescaling (Eq. 24), and the SGD baseline.
+
+use crate::runtime::HostTensor;
+
+/// Momentum state: v(t) = w(t) − w(t−1) per parameter (Eq. 23 defines the
+/// momentum term from the previous update).
+#[derive(Clone, Debug, Default)]
+pub struct Velocity {
+    pub v: Vec<HostTensor>,
+}
+
+impl Velocity {
+    pub fn zeros_like(params: &[HostTensor]) -> Self {
+        Velocity { v: params.iter().map(|p| HostTensor::zeros(p.shape.clone())).collect() }
+    }
+}
+
+/// SP-NGD update (Eq. 23): w ← w − η·(F̂+λI)⁻¹∇L + m·v, where `direction`
+/// is the preconditioned gradient from Stage 4. Updates velocity in place.
+pub fn spngd_update(
+    w: &mut HostTensor,
+    v: &mut HostTensor,
+    direction: &HostTensor,
+    lr: f32,
+    momentum: f32,
+) {
+    assert_eq!(w.shape, direction.shape);
+    assert_eq!(w.shape, v.shape);
+    for i in 0..w.data.len() {
+        let dw = -lr * direction.data[i] + momentum * v.data[i];
+        w.data[i] += dw;
+        v.data[i] = dw;
+    }
+}
+
+/// SGD with momentum baseline: same signature, direction = raw gradient.
+pub fn sgd_update(
+    w: &mut HostTensor,
+    v: &mut HostTensor,
+    grad: &HostTensor,
+    lr: f32,
+    momentum: f32,
+) {
+    spngd_update(w, v, grad, lr, momentum);
+}
+
+/// Normalizing Weights (Eq. 24): rescale conv/fc weights to norm
+/// √(2·d_out) after the update (ε stabilizes the division).
+pub fn rescale_weight(w: &mut HostTensor, d_out: usize) {
+    const EPS: f32 = 1e-9;
+    let target = (2.0 * d_out as f32).sqrt();
+    let norm = w.norm();
+    let s = target / (norm + EPS);
+    w.scale_inplace(s);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(data: Vec<f32>) -> HostTensor {
+        let n = data.len();
+        HostTensor::new(vec![n], data)
+    }
+
+    #[test]
+    fn update_applies_lr_and_momentum() {
+        let mut w = t(vec![1.0, 1.0]);
+        let mut v = t(vec![0.0, 0.0]);
+        let d = t(vec![0.5, -0.5]);
+        spngd_update(&mut w, &mut v, &d, 0.1, 0.9);
+        assert_eq!(w.data, vec![0.95, 1.05]);
+        assert_eq!(v.data, vec![-0.05, 0.05]);
+        // second step: momentum carries
+        spngd_update(&mut w, &mut v, &d, 0.1, 0.9);
+        assert!((w.data[0] - (0.95 - 0.05 - 0.045)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn velocity_equals_weight_delta() {
+        // Eq. 23: v(t) = w(t) − w(t−1)
+        let mut w = t(vec![2.0, -1.0, 0.5]);
+        let w_prev = w.clone();
+        let mut v = t(vec![0.1, 0.2, -0.1]);
+        let d = t(vec![1.0, 0.0, 2.0]);
+        spngd_update(&mut w, &mut v, &d, 0.05, 0.5);
+        for i in 0..3 {
+            assert!((v.data[i] - (w.data[i] - w_prev.data[i])).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn rescale_hits_target_norm() {
+        let mut w = HostTensor::new(vec![4, 2], vec![3.0; 8]);
+        rescale_weight(&mut w, 4);
+        assert!((w.norm() - (8.0f32).sqrt()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn rescale_zero_weight_stable() {
+        let mut w = HostTensor::zeros(vec![4]);
+        rescale_weight(&mut w, 2);
+        assert!(w.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn sgd_is_ngd_with_identity_preconditioner() {
+        let mut w1 = t(vec![1.0]);
+        let mut v1 = t(vec![0.0]);
+        let mut w2 = w1.clone();
+        let mut v2 = v1.clone();
+        let g = t(vec![0.3]);
+        sgd_update(&mut w1, &mut v1, &g, 0.1, 0.9);
+        spngd_update(&mut w2, &mut v2, &g, 0.1, 0.9);
+        assert_eq!(w1.data, w2.data);
+    }
+}

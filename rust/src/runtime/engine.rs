@@ -1,0 +1,144 @@
+//! Engine: PJRT CPU client + compiled-executable cache.
+//!
+//! Artifacts are HLO text; compilation happens once at startup (or lazily
+//! on first use) and the compiled executables are shared by all simulated
+//! workers. Execution is behind `&self` — the PJRT CPU client is
+//! thread-safe — so Stage-1/Stage-4 work can run from the worker pool.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, RwLock};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::manifest::Manifest;
+use super::tensor::HostTensor;
+
+/// Cumulative execution accounting (for the perf pass + benches).
+#[derive(Default, Debug)]
+pub struct EngineStats {
+    pub executions: AtomicU64,
+    pub exec_nanos: AtomicU64,
+    pub compile_nanos: AtomicU64,
+}
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    files: HashMap<String, String>,
+    exes: RwLock<HashMap<String, xla::PjRtLoadedExecutable>>,
+    compile_lock: Mutex<()>,
+    pub stats: EngineStats,
+}
+
+impl Engine {
+    /// Create an engine over a parsed manifest (CPU PJRT client).
+    pub fn new(manifest: &Manifest) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            dir: manifest.dir.clone(),
+            files: manifest.executables.iter().map(|(k, v)| (k.clone(), v.clone())).collect(),
+            exes: RwLock::new(HashMap::new()),
+            compile_lock: Mutex::new(()),
+            stats: EngineStats::default(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Ensure an executable is compiled; returns whether it was a cache miss.
+    pub fn ensure_compiled(&self, name: &str) -> Result<bool> {
+        if self.exes.read().unwrap().contains_key(name) {
+            return Ok(false);
+        }
+        // serialize compilation (PJRT compile is heavyweight); re-check
+        // under the lock to avoid duplicate compiles.
+        let _g = self.compile_lock.lock().unwrap();
+        if self.exes.read().unwrap().contains_key(name) {
+            return Ok(false);
+        }
+        let file = self
+            .files
+            .get(name)
+            .with_context(|| format!("executable '{name}' not in manifest"))?;
+        let path = self.dir.join(file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        self.stats
+            .compile_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.exes.write().unwrap().insert(name.to_string(), exe);
+        Ok(true)
+    }
+
+    /// Compile every executable named in the manifest (warm start).
+    pub fn compile_all(&self) -> Result<usize> {
+        let names: Vec<String> = self.files.keys().cloned().collect();
+        let mut n = 0;
+        for name in names {
+            if self.ensure_compiled(&name)? {
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+
+    /// Execute an artifact by name. Inputs are f32 host tensors (plus
+    /// `extra_u32` appended as scalar u32 literals, e.g. the 1mc seed).
+    pub fn execute(&self, name: &str, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        self.execute_seeded(name, inputs, None)
+    }
+
+    pub fn execute_seeded(
+        &self,
+        name: &str,
+        inputs: &[&HostTensor],
+        seed: Option<u32>,
+    ) -> Result<Vec<HostTensor>> {
+        self.ensure_compiled(name)?;
+        let t0 = Instant::now();
+        let mut lits = Vec::with_capacity(inputs.len() + 1);
+        for t in inputs {
+            lits.push(t.to_literal()?);
+        }
+        if let Some(s) = seed {
+            lits.push(xla::Literal::scalar(s));
+        }
+        let guard = self.exes.read().unwrap();
+        let exe = guard.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .with_context(|| format!("executing {name}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {name}"))?;
+        drop(guard);
+        // All artifacts are lowered with return_tuple=True.
+        let parts = lit.to_tuple().context("decomposing output tuple")?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(HostTensor::from_literal(&p)?);
+        }
+        self.stats.executions.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .exec_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        Ok(out)
+    }
+
+    /// Total seconds spent inside PJRT execute calls.
+    pub fn exec_seconds(&self) -> f64 {
+        self.stats.exec_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+}

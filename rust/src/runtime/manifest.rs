@@ -1,0 +1,323 @@
+//! Parsed view of `artifacts/manifest.json` — the contract between the
+//! python AOT pipeline (L2) and the rust coordinator (L3).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One tensor output of the step executable.
+#[derive(Clone, Debug)]
+pub struct OutputSpec {
+    pub name: String,
+    /// loss | ncorrect | grad | a_tap | g_tap | g_gamma | g_beta |
+    /// bn_mean | bn_var
+    pub role: String,
+    pub layer: Option<String>,
+    pub param: Option<String>,
+    pub shape: Vec<usize>,
+}
+
+/// A K-FAC-tracked layer (conv / fc / bn).
+#[derive(Clone, Debug)]
+pub struct KfacLayer {
+    pub name: String,
+    pub kind: String, // "conv" | "fc" | "bn"
+    // conv/fc:
+    pub a_dim: usize,
+    pub g_dim: usize,
+    pub a_bucket: usize,
+    pub g_bucket: usize,
+    pub grad_shape: (usize, usize),
+    pub factor_a: String,
+    pub factor_g: String,
+    pub invert_a: String,
+    pub invert_g: String,
+    pub precond: String,
+    pub weight_param: String,
+    // bn:
+    pub channels: usize,
+    pub bn_inv: String,
+    pub bn_full: String,
+    pub invert_full: String,
+    pub full_bucket: usize,
+    pub gamma_param: String,
+    pub beta_param: String,
+}
+
+impl KfacLayer {
+    pub fn is_bn(&self) -> bool {
+        self.kind == "bn"
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelManifest {
+    pub name: String,
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub batch: usize,
+    pub params: Vec<ParamSpec>,
+    pub init_file: String,
+    pub kfac_layers: Vec<KfacLayer>,
+    pub bn_order: Vec<String>,
+    pub step_outputs: Vec<OutputSpec>,
+    pub step_emp: String,
+    pub step_1mc: String,
+    pub eval_exe: String,
+}
+
+impl ModelManifest {
+    pub fn param_index(&self, name: &str) -> Option<usize> {
+        self.params.iter().position(|p| p.name == name)
+    }
+
+    pub fn layer(&self, name: &str) -> Option<&KfacLayer> {
+        self.kfac_layers.iter().find(|l| l.name == name)
+    }
+
+    /// Indices into the step output tuple by (role, layer/param key).
+    pub fn output_index(&self, role: &str, key: Option<&str>) -> Option<usize> {
+        self.step_outputs.iter().position(|o| {
+            o.role == role
+                && match key {
+                    None => true,
+                    Some(k) => {
+                        o.layer.as_deref() == Some(k) || o.param.as_deref() == Some(k)
+                    }
+                }
+        })
+    }
+
+    pub fn total_param_count(&self) -> usize {
+        self.params.iter().map(|p| p.shape.iter().product::<usize>()).sum()
+    }
+}
+
+/// The whole manifest: models + the executable table.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub ns_iters: usize,
+    pub models: BTreeMap<String, ModelManifest>,
+    /// executable name -> artifact file name
+    pub executables: BTreeMap<String, String>,
+}
+
+fn as_usize(j: &Json, what: &str) -> Result<usize> {
+    j.as_usize().with_context(|| format!("manifest: {what} not a usize: {j:?}"))
+}
+
+fn as_str(j: &Json, what: &str) -> Result<String> {
+    Ok(j.as_str().with_context(|| format!("manifest: {what} not a string"))?.to_string())
+}
+
+fn shape_of(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()
+        .context("shape not an array")?
+        .iter()
+        .map(|d| as_usize(d, "shape dim"))
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {}", dir.display()))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut executables = BTreeMap::new();
+        for (name, e) in root.get("executables").as_obj().context("executables")? {
+            executables.insert(name.clone(), as_str(e.get("file"), "file")?);
+        }
+
+        let mut models = BTreeMap::new();
+        for (mname, m) in root.get("models").as_obj().context("models")? {
+            let mut params = Vec::new();
+            for p in m.get("params").as_arr().context("params")? {
+                params.push(ParamSpec {
+                    name: as_str(p.get("name"), "param name")?,
+                    shape: shape_of(p.get("shape"))?,
+                });
+            }
+            let mut kfac_layers = Vec::new();
+            for l in m.get("kfac_layers").as_arr().context("kfac_layers")? {
+                let kind = as_str(l.get("kind"), "kind")?;
+                let gs = l.get("grad_shape");
+                kfac_layers.push(KfacLayer {
+                    name: as_str(l.get("name"), "layer name")?,
+                    kind: kind.clone(),
+                    a_dim: l.get("a_dim").as_usize().unwrap_or(0),
+                    g_dim: l.get("g_dim").as_usize().unwrap_or(0),
+                    a_bucket: l.get("a_bucket").as_usize().unwrap_or(0),
+                    g_bucket: l.get("g_bucket").as_usize().unwrap_or(0),
+                    grad_shape: if kind == "bn" {
+                        (0, 0)
+                    } else {
+                        (as_usize(gs.at(0), "grad rows")?, as_usize(gs.at(1), "grad cols")?)
+                    },
+                    factor_a: l.get("factor_a").as_str().unwrap_or("").to_string(),
+                    factor_g: l.get("factor_g").as_str().unwrap_or("").to_string(),
+                    invert_a: l.get("invert_a").as_str().unwrap_or("").to_string(),
+                    invert_g: l.get("invert_g").as_str().unwrap_or("").to_string(),
+                    precond: l.get("precond").as_str().unwrap_or("").to_string(),
+                    weight_param: l.get("weight_param").as_str().unwrap_or("").to_string(),
+                    channels: l.get("channels").as_usize().unwrap_or(0),
+                    bn_inv: l.get("bn_inv").as_str().unwrap_or("").to_string(),
+                    bn_full: l.get("bn_full").as_str().unwrap_or("").to_string(),
+                    invert_full: l.get("invert_full").as_str().unwrap_or("").to_string(),
+                    full_bucket: l.get("full_bucket").as_usize().unwrap_or(0),
+                    gamma_param: l.get("gamma_param").as_str().unwrap_or("").to_string(),
+                    beta_param: l.get("beta_param").as_str().unwrap_or("").to_string(),
+                });
+            }
+            let mut step_outputs = Vec::new();
+            for o in m.get("step_outputs").as_arr().context("step_outputs")? {
+                step_outputs.push(OutputSpec {
+                    name: as_str(o.get("name"), "output name")?,
+                    role: as_str(o.get("role"), "output role")?,
+                    layer: o.get("layer").as_str().map(|s| s.to_string()),
+                    param: o.get("param").as_str().map(|s| s.to_string()),
+                    shape: shape_of(o.get("shape"))?,
+                });
+            }
+            let exes = m.get("executables");
+            let bn_order = m
+                .get("bn_order")
+                .as_arr()
+                .context("bn_order")?
+                .iter()
+                .map(|b| as_str(b, "bn name"))
+                .collect::<Result<Vec<_>>>()?;
+            models.insert(
+                mname.clone(),
+                ModelManifest {
+                    name: mname.clone(),
+                    input_shape: shape_of(m.get("input_shape"))?,
+                    num_classes: as_usize(m.get("num_classes"), "num_classes")?,
+                    batch: as_usize(m.get("batch"), "batch")?,
+                    params,
+                    init_file: as_str(m.get("init_file"), "init_file")?,
+                    kfac_layers,
+                    bn_order,
+                    step_outputs,
+                    step_emp: as_str(exes.get("step_emp"), "step_emp")?,
+                    step_1mc: as_str(exes.get("step_1mc"), "step_1mc")?,
+                    eval_exe: as_str(exes.get("eval"), "eval")?,
+                },
+            );
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            ns_iters: root.get("ns_iters").as_usize().unwrap_or(20),
+            models,
+            executables,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        match self.models.get(name) {
+            Some(m) => Ok(m),
+            None => bail!(
+                "model '{name}' not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            ),
+        }
+    }
+
+    /// Load the initial parameters for a model (raw f32 LE, param order).
+    pub fn load_init_params(&self, model: &ModelManifest) -> Result<Vec<super::HostTensor>> {
+        let bytes = std::fs::read(self.dir.join(&model.init_file))
+            .with_context(|| format!("reading {}", model.init_file))?;
+        let mut floats = Vec::with_capacity(bytes.len() / 4);
+        for chunk in bytes.chunks_exact(4) {
+            floats.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+        }
+        let mut out = Vec::new();
+        let mut off = 0;
+        for p in &model.params {
+            let n: usize = p.shape.iter().product();
+            anyhow::ensure!(off + n <= floats.len(), "init file too short at {}", p.name);
+            out.push(super::HostTensor::new(p.shape.clone(), floats[off..off + n].to_vec()));
+            off += n;
+        }
+        anyhow::ensure!(off == floats.len(), "init file has trailing bytes");
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal synthetic manifest exercising the parser.
+    fn sample() -> String {
+        r#"{
+ "version": 1, "ns_iters": 22,
+ "executables": {"step_m_emp": {"file": "step_m_emp.hlo.txt"},
+                 "invert_16": {"file": "invert_16.hlo.txt"}},
+ "models": {"m": {
+   "input_shape": [4,3,8,8], "num_classes": 10, "batch": 4,
+   "params": [{"name":"fc.w","shape":[10,192]}],
+   "init_file": "init_m.bin",
+   "bn_order": [],
+   "kfac_layers": [{"name":"fc","kind":"fc","a_dim":192,"g_dim":10,
+     "a_bucket":192,"g_bucket":16,"grad_shape":[10,192],
+     "factor_a":"fa","factor_g":"fg","invert_a":"invert_192",
+     "invert_g":"invert_16","precond":"precond_10x192",
+     "weight_param":"fc.w"}],
+   "step_outputs": [
+     {"name":"loss","role":"loss","shape":[]},
+     {"name":"ncorrect","role":"ncorrect","shape":[]},
+     {"name":"grad:fc.w","role":"grad","param":"fc.w","shape":[10,192]},
+     {"name":"a_tap:fc","role":"a_tap","layer":"fc","shape":[4,192]},
+     {"name":"g_tap:fc","role":"g_tap","layer":"fc","shape":[4,10]}],
+   "executables": {"step_emp":"step_m_emp","step_1mc":"step_m_1mc","eval":"eval_m"}
+ }}}"#
+            .to_string()
+    }
+
+    #[test]
+    fn parse_sample_manifest() {
+        let dir = std::env::temp_dir().join("spngd_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), sample()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.ns_iters, 22);
+        let model = m.model("m").unwrap();
+        assert_eq!(model.batch, 4);
+        assert_eq!(model.params[0].shape, vec![10, 192]);
+        let l = model.layer("fc").unwrap();
+        assert_eq!(l.grad_shape, (10, 192));
+        assert!(!l.is_bn());
+        assert_eq!(model.output_index("loss", None), Some(0));
+        assert_eq!(model.output_index("g_tap", Some("fc")), Some(4));
+        assert_eq!(model.output_index("grad", Some("fc.w")), Some(2));
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn init_params_roundtrip() {
+        let dir = std::env::temp_dir().join("spngd_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), sample()).unwrap();
+        let vals: Vec<f32> = (0..1920).map(|i| i as f32).collect();
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(dir.join("init_m.bin"), bytes).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let model = m.model("m").unwrap();
+        let params = m.load_init_params(model).unwrap();
+        assert_eq!(params.len(), 1);
+        assert_eq!(params[0].shape, vec![10, 192]);
+        assert_eq!(params[0].data[5], 5.0);
+    }
+}

@@ -1,0 +1,14 @@
+//! Runtime: loads the AOT artifacts (HLO text + manifest) and executes
+//! them on the PJRT CPU client via the `xla` crate.
+//!
+//! This is the only module that touches PJRT; the coordinator sees
+//! [`Engine`] (execute-by-name over [`HostTensor`]s) and the parsed
+//! [`manifest::Manifest`].
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::Engine;
+pub use manifest::{KfacLayer, Manifest, ModelManifest, OutputSpec};
+pub use tensor::HostTensor;

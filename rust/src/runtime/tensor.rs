@@ -1,0 +1,191 @@
+//! Host-side tensor: the coordinator's currency for model state, taps,
+//! factors and gradients. Conversion to/from `xla::Literal` lives here so
+//! nothing else needs the xla crate's types.
+
+use crate::linalg::Mat;
+
+/// Dense f32 tensor with row-major layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        HostTensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        HostTensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Interpret as a 2-D matrix (requires rank 2).
+    pub fn as_mat(&self) -> Mat {
+        assert_eq!(self.rank(), 2, "as_mat requires rank-2 tensor");
+        Mat::from_vec(self.shape[0], self.shape[1], self.data.clone())
+    }
+
+    pub fn from_mat(m: &Mat) -> Self {
+        HostTensor { shape: vec![m.rows, m.cols], data: m.data.clone() }
+    }
+
+    /// Reshape (same element count).
+    pub fn reshape(mut self, shape: Vec<usize>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape;
+        self
+    }
+
+    /// Flatten a 4-D (B, C, H, W) tap into (B*H*W, C) — the layout the
+    /// conv-G factor executable's syrk consumed at build time (transpose
+    /// to channel-last then collapse).
+    pub fn nchw_to_rows_channels(&self) -> HostTensor {
+        assert_eq!(self.rank(), 4);
+        let (b, c, h, w) = (self.shape[0], self.shape[1], self.shape[2], self.shape[3]);
+        let mut out = vec![0.0f32; b * h * w * c];
+        for bi in 0..b {
+            for ci in 0..c {
+                for hi in 0..h {
+                    for wi in 0..w {
+                        let src = ((bi * c + ci) * h + hi) * w + wi;
+                        let dst = ((bi * h + hi) * w + wi) * c + ci;
+                        out[dst] = self.data[src];
+                    }
+                }
+            }
+        }
+        HostTensor::new(vec![b * h * w, c], out)
+    }
+
+    /// Elementwise AXPY: self += alpha * other.
+    pub fn axpy_inplace(&mut self, alpha: f32, other: &HostTensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += alpha * b;
+        }
+    }
+
+    pub fn scale_inplace(&mut self, s: f32) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    /// L2 norm of the flattened tensor.
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    /// Pad a square (n, n) matrix tensor into (nb, nb) (top-left block);
+    /// used to feed bucketed inversion executables.
+    pub fn pad_square(&self, nb: usize) -> HostTensor {
+        assert_eq!(self.rank(), 2);
+        let n = self.shape[0];
+        assert_eq!(n, self.shape[1]);
+        assert!(nb >= n);
+        if nb == n {
+            return self.clone();
+        }
+        let mut out = vec![0.0f32; nb * nb];
+        for i in 0..n {
+            out[i * nb..i * nb + n].copy_from_slice(&self.data[i * n..(i + 1) * n]);
+        }
+        HostTensor::new(vec![nb, nb], out)
+    }
+
+    /// Slice the top-left (n, n) block out of a square matrix tensor.
+    pub fn slice_square(&self, n: usize) -> HostTensor {
+        assert_eq!(self.rank(), 2);
+        let nb = self.shape[0];
+        assert!(n <= nb);
+        if nb == n {
+            return self.clone();
+        }
+        let mut out = vec![0.0f32; n * n];
+        for i in 0..n {
+            out[i * n..(i + 1) * n].copy_from_slice(&self.data[i * nb..i * nb + n]);
+        }
+        HostTensor::new(vec![n, n], out)
+    }
+
+    // -- xla interop -----------------------------------------------------
+
+    pub fn to_literal(&self) -> anyhow::Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.shape.is_empty() {
+            // scalar: reshape to rank-0
+            Ok(lit.reshape(&[])?)
+        } else {
+            let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> anyhow::Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = match lit.ty()? {
+            xla::ElementType::F32 => lit.to_vec::<f32>()?,
+            other => anyhow::bail!("unsupported output element type {other:?}"),
+        };
+        Ok(HostTensor::new(dims, data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nchw_conversion_layout() {
+        // B=1, C=2, H=1, W=2: [[c0: a b], [c1: c d]] -> rows (hw) x channels
+        let t = HostTensor::new(vec![1, 2, 1, 2], vec![1., 2., 3., 4.]);
+        let r = t.nchw_to_rows_channels();
+        assert_eq!(r.shape, vec![2, 2]);
+        // position (h0,w0): channels (1,3); (h0,w1): (2,4)
+        assert_eq!(r.data, vec![1., 3., 2., 4.]);
+    }
+
+    #[test]
+    fn pad_slice_roundtrip() {
+        let t = HostTensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let p = t.pad_square(5);
+        assert_eq!(p.shape, vec![5, 5]);
+        assert_eq!(p.data[0], 1.0);
+        assert_eq!(p.data[6], 4.0); // (1,1)
+        assert_eq!(p.slice_square(2), t);
+    }
+
+    #[test]
+    fn axpy_and_norm() {
+        let mut a = HostTensor::new(vec![3], vec![1., 2., 2.]);
+        let b = HostTensor::new(vec![3], vec![1., 0., 0.]);
+        a.axpy_inplace(2.0, &b);
+        assert_eq!(a.data, vec![3., 2., 2.]);
+        assert!((a.norm() - (17.0f32).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn shape_mismatch_panics() {
+        HostTensor::new(vec![2, 2], vec![1.0]);
+    }
+}

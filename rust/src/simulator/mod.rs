@@ -1,0 +1,165 @@
+//! Cluster simulator: replays measured coordinator work profiles through
+//! the α-β cost model at arbitrary GPU counts, with the paper's technique
+//! toggles (1mc/emp × fullBN/unitBN × ±stale) — the Fig. 5 generator.
+
+use crate::collectives::cost::{predict_step_time, ClusterModel, StepProfile};
+
+/// A named technique variant derived from a measured base profile.
+#[derive(Clone, Debug)]
+pub struct Variant {
+    pub label: String,
+    pub profile: StepProfile,
+}
+
+/// Technique toggles applied to a measured `emp+unitBN` base profile.
+#[derive(Clone, Copy, Debug)]
+pub struct Technique {
+    /// 1mc Fisher: adds the extra backward pass
+    pub one_mc: bool,
+    /// full (2C)² BN Fisher instead of unit-wise
+    pub full_bn: bool,
+    /// stale-statistics scheduler active
+    pub stale: bool,
+}
+
+impl Technique {
+    pub fn label(&self) -> String {
+        format!(
+            "{}+{}{}",
+            if self.one_mc { "1mc" } else { "emp" },
+            if self.full_bn { "fullBN" } else { "unitBN" },
+            if self.stale { "+stale" } else { "" }
+        )
+    }
+}
+
+/// Extra measured deltas needed to derive variants from the base profile.
+#[derive(Clone, Debug, Default)]
+pub struct TechniqueDeltas {
+    /// extra backward time for the 1mc Fisher (s)
+    pub t_extra_bwd_1mc: f64,
+    /// extra construction+inversion time for fullBN (s)
+    pub t_full_bn_extra: f64,
+    /// extra statistics bytes for fullBN vs unitBN (per GPU)
+    pub full_bn_extra_bytes: f64,
+    /// measured stale refresh fraction (Table 2 reduction; e.g. 0.08)
+    pub stale_fraction: f64,
+}
+
+/// Derive a variant profile from the measured base (emp+unitBN, no stale).
+pub fn derive(base: &StepProfile, deltas: &TechniqueDeltas, t: Technique) -> Variant {
+    let mut p = base.clone();
+    if t.one_mc {
+        p.t_extra_bwd = deltas.t_extra_bwd_1mc;
+    }
+    if t.full_bn {
+        p.t_inverse += deltas.t_full_bn_extra;
+        p.stats_bytes += deltas.full_bn_extra_bytes;
+    }
+    if t.stale {
+        let f = deltas.stale_fraction.clamp(0.0, 1.0);
+        p.t_factors *= f;
+        p.t_inverse *= f;
+        p.stats_bytes *= f;
+    }
+    Variant { label: t.label(), profile: p }
+}
+
+/// One Fig. 5 row: time/step for each GPU count.
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    pub label: String,
+    pub points: Vec<(usize, f64)>,
+}
+
+/// Sweep all variants over the GPU counts (Fig. 5's x-axis).
+pub fn sweep(variants: &[Variant], gpus: &[usize], cm: &ClusterModel) -> Vec<SweepRow> {
+    variants
+        .iter()
+        .map(|v| SweepRow {
+            label: v.label.clone(),
+            points: gpus
+                .iter()
+                .map(|&p| (p, predict_step_time(&v.profile, p, cm)))
+                .collect(),
+        })
+        .collect()
+}
+
+/// The six Fig. 5 technique combinations (in the paper's legend order).
+pub fn fig5_techniques() -> Vec<Technique> {
+    vec![
+        Technique { one_mc: true, full_bn: true, stale: false },
+        Technique { one_mc: true, full_bn: false, stale: false },
+        Technique { one_mc: false, full_bn: true, stale: false },
+        Technique { one_mc: false, full_bn: false, stale: false },
+        Technique { one_mc: false, full_bn: false, stale: true },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> StepProfile {
+        StepProfile {
+            t_forward: 0.02,
+            t_backward: 0.04,
+            t_factors: 0.03,
+            t_inverse: 0.12,
+            t_update: 0.02,
+            t_extra_bwd: 0.0,
+            stats_bytes: 25e6,
+            grad_bytes: 100e6,
+            param_bytes: 100e6,
+            n_stats: 107,
+        }
+    }
+
+    fn deltas() -> TechniqueDeltas {
+        TechniqueDeltas {
+            t_extra_bwd_1mc: 0.03,
+            t_full_bn_extra: 0.05,
+            full_bn_extra_bytes: 10e6,
+            stale_fraction: 0.08,
+        }
+    }
+
+    #[test]
+    fn ordering_matches_paper_fig5() {
+        // at any GPU count: 1mc+fullBN slowest ... emp+unitBN+stale fastest
+        let cm = ClusterModel::default();
+        let vs: Vec<Variant> =
+            fig5_techniques().iter().map(|&t| derive(&base(), &deltas(), t)).collect();
+        for &p in &[1usize, 16, 128, 1024] {
+            let times: Vec<f64> =
+                vs.iter().map(|v| predict_step_time(&v.profile, p, &cm)).collect();
+            assert!(times[0] >= times[1], "1mc+fullBN >= 1mc+unitBN at p={p}");
+            assert!(times[0] >= times[2], "1mc+fullBN >= emp+fullBN at p={p}");
+            assert!(times[3] <= times[1] && times[3] <= times[2], "emp+unitBN wins at p={p}");
+            assert!(times[4] <= times[3], "stale fastest at p={p}");
+        }
+    }
+
+    #[test]
+    fn sweep_shapes() {
+        let cm = ClusterModel::default();
+        let vs = vec![derive(&base(), &deltas(), fig5_techniques()[3])];
+        let rows = sweep(&vs, &[1, 4, 16], &cm);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].points.len(), 3);
+        assert!(rows[0].points.iter().all(|&(_, t)| t > 0.0));
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(
+            Technique { one_mc: false, full_bn: false, stale: true }.label(),
+            "emp+unitBN+stale"
+        );
+        assert_eq!(
+            Technique { one_mc: true, full_bn: true, stale: false }.label(),
+            "1mc+fullBN"
+        );
+    }
+}

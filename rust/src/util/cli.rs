@@ -1,0 +1,246 @@
+//! Minimal CLI argument parser — substrate replacing `clap`.
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! generates `--help` text from registered options.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+struct Opt {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative argument set for one (sub)command.
+pub struct Args {
+    program: String,
+    about: String,
+    opts: Vec<Opt>,
+    values: BTreeMap<String, String>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Self {
+        Args {
+            program: program.to_string(),
+            about: about.to_string(),
+            opts: Vec::new(),
+            values: BTreeMap::new(),
+            positionals: Vec::new(),
+        }
+    }
+
+    /// Register an option with a default value.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Register a required option (no default).
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Register a boolean flag (default false).
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some("false".to_string()),
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for o in &self.opts {
+            let tail = if o.is_flag {
+                String::new()
+            } else {
+                match &o.default {
+                    Some(d) => format!(" <value> (default: {d})"),
+                    None => " <value> (required)".to_string(),
+                }
+            };
+            s.push_str(&format!("  --{}{}\n      {}\n", o.name, tail, o.help));
+        }
+        s
+    }
+
+    /// Parse a token list (without argv[0]).
+    pub fn parse(mut self, argv: &[String]) -> Result<Parsed, String> {
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?
+                    .clone();
+                let val = if opt.is_flag {
+                    match inline_val {
+                        Some(v) => v,
+                        None => "true".to_string(),
+                    }
+                } else {
+                    match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{key} expects a value"))?
+                        }
+                    }
+                };
+                self.values.insert(key, val);
+            } else {
+                self.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        // fill defaults, check required
+        for o in &self.opts {
+            if !self.values.contains_key(&o.name) {
+                match &o.default {
+                    Some(d) => {
+                        self.values.insert(o.name.clone(), d.clone());
+                    }
+                    None => return Err(format!("missing required option --{}", o.name)),
+                }
+            }
+        }
+        Ok(Parsed { values: self.values, positionals: self.positionals })
+    }
+
+    /// Parse from the process environment (skipping argv[0] and a subcommand).
+    pub fn parse_env(self, skip: usize) -> Result<Parsed, String> {
+        let argv: Vec<String> = std::env::args().skip(skip).collect();
+        self.parse(&argv)
+    }
+}
+
+/// Parsed argument values with typed accessors.
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    pub positionals: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} was not registered"))
+    }
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an unsigned integer"))
+    }
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an unsigned integer"))
+    }
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name).parse().unwrap_or_else(|_| panic!("--{name} expects a number"))
+    }
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get(name), "true" | "1" | "yes" | "on")
+    }
+    /// Comma-separated list of usizes, e.g. "1,2,4,8".
+    pub fn get_usize_list(&self, name: &str) -> Vec<usize> {
+        let s = self.get(name);
+        if s.is_empty() {
+            return Vec::new();
+        }
+        s.split(',')
+            .map(|t| t.trim().parse().unwrap_or_else(|_| panic!("--{name}: bad list item '{t}'")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let p = Args::new("t", "test")
+            .opt("steps", "100", "number of steps")
+            .opt("lr", "0.1", "learning rate")
+            .flag("verbose", "verbose output")
+            .parse(&argv(&["--steps", "250", "--verbose"]))
+            .unwrap();
+        assert_eq!(p.get_usize("steps"), 250);
+        assert_eq!(p.get_f64("lr"), 0.1);
+        assert!(p.get_bool("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_positionals() {
+        let p = Args::new("t", "test")
+            .opt("mode", "a", "mode")
+            .parse(&argv(&["run", "--mode=b", "extra"]))
+            .unwrap();
+        assert_eq!(p.get("mode"), "b");
+        assert_eq!(p.positionals, vec!["run", "extra"]);
+    }
+
+    #[test]
+    fn required_missing() {
+        let r = Args::new("t", "test").req("out", "output").parse(&argv(&[]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let r = Args::new("t", "test").parse(&argv(&["--nope"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let p = Args::new("t", "t")
+            .opt("gpus", "1,2,4", "gpu counts")
+            .parse(&argv(&[]))
+            .unwrap();
+        assert_eq!(p.get_usize_list("gpus"), vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn help_is_err_with_usage() {
+        let r = Args::new("prog", "about").opt("x", "1", "the x").parse(&argv(&["--help"]));
+        let msg = r.err().unwrap();
+        assert!(msg.contains("prog"));
+        assert!(msg.contains("--x"));
+    }
+}

@@ -1,0 +1,131 @@
+//! Structured logging substrate (replaces `tracing`): leveled, timestamped
+//! stderr logging with a global level switch, plus a CSV-ish metrics writer
+//! for loss curves / step times consumed by EXPERIMENTS.md.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    l as u8 >= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(l: Level, target: &str, msg: &str) {
+    if !enabled(l) {
+        return;
+    }
+    let tag = match l {
+        Level::Debug => "DEBUG",
+        Level::Info => "INFO ",
+        Level::Warn => "WARN ",
+        Level::Error => "ERROR",
+    };
+    let t = now_secs();
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "[{t:10.3}] {tag} {target}: {msg}");
+}
+
+fn start_instant() -> &'static Instant {
+    use std::sync::OnceLock;
+    static START: OnceLock<Instant> = OnceLock::new();
+    START.get_or_init(Instant::now)
+}
+
+/// Seconds since process logging start (monotonic).
+pub fn now_secs() -> f64 {
+    start_instant().elapsed().as_secs_f64()
+}
+
+#[macro_export]
+macro_rules! info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Info, $target, &format!($($arg)*))
+    };
+}
+#[macro_export]
+macro_rules! debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Debug, $target, &format!($($arg)*))
+    };
+}
+#[macro_export]
+macro_rules! warn_ {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Warn, $target, &format!($($arg)*))
+    };
+}
+
+/// Append-only table writer: header once, then rows; used for loss curves
+/// and bench series the experiment docs reference.
+pub struct TableWriter {
+    file: std::fs::File,
+    wrote_header: bool,
+    columns: Vec<String>,
+}
+
+impl TableWriter {
+    pub fn create(path: &str, columns: &[&str]) -> std::io::Result<Self> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        Ok(TableWriter {
+            file: std::fs::File::create(path)?,
+            wrote_header: false,
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+        })
+    }
+
+    pub fn row(&mut self, values: &[f64]) -> std::io::Result<()> {
+        assert_eq!(values.len(), self.columns.len(), "row arity mismatch");
+        if !self.wrote_header {
+            writeln!(self.file, "{}", self.columns.join(","))?;
+            self.wrote_header = true;
+        }
+        let cells: Vec<String> = values.iter().map(|v| format!("{v}")).collect();
+        writeln!(self.file, "{}", cells.join(","))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(!enabled(Level::Info));
+        assert!(enabled(Level::Error));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+    }
+
+    #[test]
+    fn table_writer_csv() {
+        let path = std::env::temp_dir().join("spngd_test_table.csv");
+        let p = path.to_str().unwrap();
+        {
+            let mut w = TableWriter::create(p, &["step", "loss"]).unwrap();
+            w.row(&[1.0, 2.5]).unwrap();
+            w.row(&[2.0, 2.0]).unwrap();
+        }
+        let s = std::fs::read_to_string(p).unwrap();
+        assert!(s.starts_with("step,loss\n"));
+        assert!(s.contains("1,2.5"));
+        let _ = std::fs::remove_file(p);
+    }
+}

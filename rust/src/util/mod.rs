@@ -1,0 +1,14 @@
+//! Small self-contained substrates (no external deps beyond std).
+//!
+//! Only the `xla` crate's vendored dependency closure is available offline,
+//! so each of these replaces a crate a production project would normally
+//! pull in: rng≈`rand`, json≈`serde_json`, cli≈`clap`, pool≈`rayon`,
+//! prop≈`proptest`, stats+bench≈`criterion`, log≈`tracing`.
+
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,221 @@
+//! Scoped thread pool — substrate replacing `rayon` for the coordinator's
+//! parallel worker execution (Stage 1/2/4 per-process work).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<Vec<Job>>,
+    cv: Condvar,
+    shutdown: Mutex<bool>,
+    outstanding: AtomicUsize,
+    done_cv: Condvar,
+    done_mx: Mutex<()>,
+}
+
+/// A fixed-size thread pool with a `scope`-style parallel-for.
+pub struct Pool {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl Pool {
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Vec::new()),
+            cv: Condvar::new(),
+            shutdown: Mutex::new(false),
+            outstanding: AtomicUsize::new(0),
+            done_cv: Condvar::new(),
+            done_mx: Mutex::new(()),
+        });
+        let workers = (0..size)
+            .map(|_| {
+                let sh = shared.clone();
+                std::thread::spawn(move || loop {
+                    let job = {
+                        let mut q = sh.queue.lock().unwrap();
+                        loop {
+                            if let Some(j) = q.pop() {
+                                break Some(j);
+                            }
+                            if *sh.shutdown.lock().unwrap() {
+                                break None;
+                            }
+                            q = sh.cv.wait(q).unwrap();
+                        }
+                    };
+                    match job {
+                        Some(j) => {
+                            j();
+                            if sh.outstanding.fetch_sub(1, Ordering::AcqRel) == 1 {
+                                let _g = sh.done_mx.lock().unwrap();
+                                sh.done_cv.notify_all();
+                            }
+                        }
+                        None => return,
+                    }
+                })
+            })
+            .collect();
+        Pool { shared, workers, size }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a job; does not wait.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.shared.outstanding.fetch_add(1, Ordering::AcqRel);
+        self.shared.queue.lock().unwrap().push(Box::new(f));
+        self.shared.cv.notify_one();
+    }
+
+    /// Wait until every submitted job has completed.
+    pub fn wait(&self) {
+        let mut g = self.shared.done_mx.lock().unwrap();
+        while self.shared.outstanding.load(Ordering::Acquire) != 0 {
+            g = self.shared.done_cv.wait(g).unwrap();
+        }
+    }
+
+    /// Run `f(i)` for i in 0..n across the pool and wait. `f` may borrow
+    /// stack data (scoped via std::thread::scope semantics replicated with
+    /// unsafe-free Arc: we require 'static by boxing a clone-per-task of an
+    /// Arc'd closure).
+    pub fn for_each<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        for i in 0..n {
+            let f = f.clone();
+            self.submit(move || f(i));
+        }
+        self.wait();
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        *self.shared.shutdown.lock().unwrap() = true;
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Scoped parallel map over indices using std::thread::scope — for cases
+/// where tasks must borrow from the caller's stack. Spawns min(n, threads)
+/// OS threads; fine for the coordinator's per-step fan-out granularity.
+pub fn scoped_for_each<F>(threads: usize, n: usize, f: F)
+where
+    F: Fn(usize) + Send + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    return;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Scoped parallel map collecting results in order.
+pub fn scoped_map<T, F>(threads: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Send + Sync,
+{
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    {
+        let slots: Vec<Mutex<&mut Option<T>>> = out.iter_mut().map(Mutex::new).collect();
+        let next = AtomicUsize::new(0);
+        let threads = threads.max(1).min(n.max(1));
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        return;
+                    }
+                    let v = f(i);
+                    **slots[i].lock().unwrap() = Some(v);
+                });
+            }
+        });
+    }
+    out.into_iter().map(|o| o.expect("scoped_map slot unfilled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = Pool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = counter.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn for_each_covers_indices() {
+        let pool = Pool::new(3);
+        let hits = Arc::new(Mutex::new(vec![0u8; 50]));
+        let h = hits.clone();
+        pool.for_each(50, move |i| {
+            h.lock().unwrap()[i] += 1;
+        });
+        assert!(hits.lock().unwrap().iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn scoped_map_ordered() {
+        let v = scoped_map(4, 20, |i| i * i);
+        assert_eq!(v, (0..20).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_for_each_borrows_stack() {
+        let data: Vec<u64> = (0..32).collect();
+        let sum = AtomicU64::new(0);
+        scoped_for_each(4, data.len(), |i| {
+            sum.fetch_add(data[i], Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), (0..32).sum::<u64>());
+    }
+
+    #[test]
+    fn pool_reuse_across_batches() {
+        let pool = Pool::new(2);
+        let c = Arc::new(AtomicU64::new(0));
+        for _ in 0..5 {
+            let cc = c.clone();
+            pool.for_each(10, move |_| {
+                cc.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(c.load(Ordering::Relaxed), 50);
+    }
+}

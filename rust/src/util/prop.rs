@@ -1,0 +1,116 @@
+//! Tiny property-based testing framework — substrate replacing `proptest`.
+//!
+//! Generates `cases` random inputs from a generator closure, runs the
+//! property, and on failure attempts a simple greedy shrink by re-sampling
+//! "smaller" inputs (the generator receives a shrink budget hint).
+
+use crate::util::rng::Rng;
+
+/// Run `prop` against `cases` random inputs drawn by `gen`.
+///
+/// `gen` receives (rng, size) where size ramps up from 1 to `max_size` over
+/// the run, so early cases are small (cheap failures shrink themselves).
+/// Panics with the failing case description on the first violation.
+pub fn check<T, G, P>(seed: u64, cases: usize, max_size: usize, gen: G, prop: P)
+where
+    T: std::fmt::Debug,
+    G: Fn(&mut Rng, usize) -> T,
+    P: Fn(&T) -> bool,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let size = 1 + (case * max_size) / cases.max(1);
+        let input = gen(&mut rng, size);
+        if !prop(&input) {
+            // greedy shrink: try smaller sizes with fresh draws
+            let mut best: Option<T> = None;
+            let mut shrink_rng = rng.fork(0xD5);
+            for s in (1..size).rev() {
+                for _ in 0..20 {
+                    let candidate = gen(&mut shrink_rng, s);
+                    if !prop(&candidate) {
+                        best = Some(candidate);
+                        break;
+                    }
+                }
+                if best.is_some() {
+                    break;
+                }
+            }
+            match best {
+                Some(b) => panic!(
+                    "property failed (seed={seed}, case={case}, size={size})\n  original: {input:?}\n  shrunk:   {b:?}"
+                ),
+                None => panic!(
+                    "property failed (seed={seed}, case={case}, size={size})\n  input: {input:?}"
+                ),
+            }
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::util::rng::Rng;
+
+    /// Vec of f32 in [-scale, scale], length = size.
+    pub fn vec_f32(rng: &mut Rng, size: usize, scale: f32) -> Vec<f32> {
+        (0..size).map(|_| (rng.f32() * 2.0 - 1.0) * scale).collect()
+    }
+
+    /// Vec of f64 in [-scale, scale], length = size.
+    pub fn vec_f64(rng: &mut Rng, size: usize, scale: f64) -> Vec<f64> {
+        (0..size).map(|_| (rng.f64() * 2.0 - 1.0) * scale).collect()
+    }
+
+    /// A random SPD matrix of dim n (row-major) built as B Bᵀ + eps I.
+    pub fn spd(rng: &mut Rng, n: usize, eps: f64) -> Vec<f64> {
+        let b: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+        let mut m = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for k in 0..n {
+                    acc += b[i * n + k] * b[j * n + k];
+                }
+                m[i * n + j] = acc / n as f64 + if i == j { eps } else { 0.0 };
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(1, 200, 64, |rng, size| gen::vec_f64(rng, size, 10.0), |v| {
+            v.iter().all(|x| x.abs() <= 10.0)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(2, 200, 64, |rng, size| gen::vec_f64(rng, size, 1.0), |v| v.len() < 30);
+    }
+
+    #[test]
+    fn spd_is_symmetric_positive() {
+        check(3, 30, 12, |rng, size| gen::spd(rng, size.max(1), 1e-3), |m| {
+            let n = (m.len() as f64).sqrt() as usize;
+            // symmetry
+            for i in 0..n {
+                for j in 0..n {
+                    if (m[i * n + j] - m[j * n + i]).abs() > 1e-12 {
+                        return false;
+                    }
+                }
+            }
+            // diagonal positive (necessary condition)
+            (0..n).all(|i| m[i * n + i] > 0.0)
+        });
+    }
+}

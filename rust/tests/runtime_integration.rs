@@ -1,0 +1,211 @@
+//! Integration: rust engine loads the real AOT artifacts and the numbers
+//! agree with rust-side oracles (linalg) — the cross-layer correctness
+//! seam between L3 and L2/L1.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use spngd::linalg::{solve, Mat};
+use spngd::runtime::{Engine, HostTensor, Manifest};
+use spngd::util::rng::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+fn rand_tensor(rng: &mut Rng, shape: Vec<usize>, scale: f32) -> HostTensor {
+    let n = shape.iter().product();
+    let data = (0..n).map(|_| (rng.f32() * 2.0 - 1.0) * scale).collect();
+    HostTensor::new(shape, data)
+}
+
+#[test]
+fn engine_compiles_and_runs_step() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Engine::new(&manifest).unwrap();
+    let model = manifest.model("mlp").unwrap();
+    let params = manifest.load_init_params(model).unwrap();
+
+    let mut rng = Rng::new(1);
+    let x = rand_tensor(&mut rng, model.input_shape.clone(), 1.0);
+    let mut t = HostTensor::zeros(vec![model.batch, model.num_classes]);
+    for b in 0..model.batch {
+        t.data[b * model.num_classes + rng.below_usize(model.num_classes)] = 1.0;
+    }
+
+    let mut inputs: Vec<&HostTensor> = params.iter().collect();
+    inputs.push(&x);
+    inputs.push(&t);
+    let outs = engine.execute(&model.step_emp, &inputs).unwrap();
+    assert_eq!(outs.len(), model.step_outputs.len(), "output arity");
+
+    let loss = outs[model.output_index("loss", None).unwrap()].data[0];
+    assert!(loss.is_finite() && loss > 0.0, "loss={loss}");
+    // fresh 10-class model: loss near ln(10)
+    assert!((loss - (10.0f32).ln()).abs() < 1.5, "loss={loss}");
+
+    let ncorrect = outs[model.output_index("ncorrect", None).unwrap()].data[0];
+    assert!((0.0..=model.batch as f32).contains(&ncorrect));
+
+    // every declared output shape matches
+    for (o, spec) in outs.iter().zip(model.step_outputs.iter()) {
+        assert_eq!(o.shape, spec.shape, "shape of {}", spec.name);
+    }
+}
+
+#[test]
+fn invert_executable_matches_gauss_jordan() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Engine::new(&manifest).unwrap();
+
+    // any invert_<n> artifact
+    let name = manifest
+        .executables
+        .keys()
+        .find(|k| k.starts_with("invert_"))
+        .expect("no invert executable")
+        .clone();
+    let n: usize = name.trim_start_matches("invert_").parse().unwrap();
+
+    let mut rng = Rng::new(7);
+    // SPD test matrix
+    let b: Vec<f32> = (0..n * n).map(|_| rng.normal() as f32).collect();
+    let bm = Mat::from_vec(n, n, b);
+    let mut m = bm.transpose().matmul(&bm).scale(1.0 / n as f32);
+    m.symmetrize();
+    let lambda = 0.1f32;
+
+    let mt = HostTensor::from_mat(&m);
+    let damp = HostTensor::scalar(lambda);
+    let outs = engine.execute(&name, &[&mt, &damp]).unwrap();
+    let inv = outs[0].as_mat();
+
+    let mut md = m.clone();
+    md.add_diag(lambda);
+    let want = solve::gauss_jordan_inverse(&md).unwrap();
+    let diff = inv.max_abs_diff(&want);
+    assert!(diff < 5e-3, "NS-vs-GJ diff {diff}");
+    assert!(solve::inverse_residual(&md, &inv) < 5e-3);
+}
+
+#[test]
+fn fc_factor_executable_matches_host_syrk() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Engine::new(&manifest).unwrap();
+    let model = manifest.model("mlp").unwrap();
+    let layer = model.kfac_layers.iter().find(|l| l.kind == "fc").unwrap();
+
+    let b = model.batch;
+    let d = layer.a_dim;
+    let mut rng = Rng::new(9);
+    let tap = rand_tensor(&mut rng, vec![b, d], 1.0);
+    let outs = engine.execute(&layer.factor_a, &[&tap]).unwrap();
+    let a = outs[0].as_mat();
+
+    // host oracle: A = tap^T tap / B
+    let tm = tap.as_mat();
+    let want = tm.transpose().matmul(&tm).scale(1.0 / b as f32);
+    assert!(a.max_abs_diff(&want) < 1e-3, "diff {}", a.max_abs_diff(&want));
+}
+
+#[test]
+fn precond_executable_matches_host_matmul() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Engine::new(&manifest).unwrap();
+    let model = manifest.model("mlp").unwrap();
+    let layer = model.kfac_layers.iter().find(|l| l.kind == "fc").unwrap();
+    let (m, n) = layer.grad_shape;
+
+    let mut rng = Rng::new(11);
+    let ginv = rand_tensor(&mut rng, vec![m, m], 0.5);
+    let grad = rand_tensor(&mut rng, vec![m, n], 0.5);
+    let ainv = rand_tensor(&mut rng, vec![n, n], 0.5);
+    let outs = engine.execute(&layer.precond, &[&ginv, &grad, &ainv]).unwrap();
+    let got = outs[0].as_mat();
+    let want = ginv.as_mat().matmul(&grad.as_mat()).matmul(&ainv.as_mat());
+    assert!(got.max_abs_diff(&want) < 1e-2, "diff {}", got.max_abs_diff(&want));
+}
+
+#[test]
+fn bn_inv_executable_is_true_inverse() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Engine::new(&manifest).unwrap();
+    let model = manifest.model("convnet_small").unwrap();
+    let layer = model.kfac_layers.iter().find(|l| l.is_bn()).unwrap();
+    let (b, c) = (model.batch, layer.channels);
+
+    let mut rng = Rng::new(13);
+    let gg = rand_tensor(&mut rng, vec![b, c], 1.0);
+    let gb = rand_tensor(&mut rng, vec![b, c], 1.0);
+    let lam = 0.05f32;
+    let damp = HostTensor::scalar(lam);
+    let outs = engine.execute(&layer.bn_inv, &[&gg, &gb, &damp]).unwrap();
+    let inv = &outs[0];
+    assert_eq!(inv.shape, vec![c, 2, 2]);
+
+    // host fisher: per channel 2x2 from per-sample grads
+    for ch in 0..c.min(4) {
+        let (mut f11, mut f12, mut f22) = (0.0f64, 0.0f64, 0.0f64);
+        for bi in 0..b {
+            let g1 = gg.data[bi * c + ch] as f64;
+            let g2 = gb.data[bi * c + ch] as f64;
+            f11 += g1 * g1;
+            f12 += g1 * g2;
+            f22 += g2 * g2;
+        }
+        let (f11, f12, f22) =
+            (f11 / b as f64 + lam as f64, f12 / b as f64, f22 / b as f64 + lam as f64);
+        let got = &inv.data[ch * 4..ch * 4 + 4];
+        // check F * F^-1 = I
+        let i00 = f11 * got[0] as f64 + f12 * got[2] as f64;
+        let i01 = f11 * got[1] as f64 + f12 * got[3] as f64;
+        let i11 = f12 * got[1] as f64 + f22 * got[3] as f64;
+        assert!((i00 - 1.0).abs() < 1e-3, "ch{ch} i00={i00}");
+        assert!(i01.abs() < 1e-3);
+        assert!((i11 - 1.0).abs() < 1e-3);
+    }
+}
+
+#[test]
+fn step_1mc_runs_with_seed() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Engine::new(&manifest).unwrap();
+    let model = manifest.model("mlp").unwrap();
+    let params = manifest.load_init_params(model).unwrap();
+
+    let mut rng = Rng::new(15);
+    let x = rand_tensor(&mut rng, model.input_shape.clone(), 1.0);
+    let mut t = HostTensor::zeros(vec![model.batch, model.num_classes]);
+    for b in 0..model.batch {
+        t.data[b * model.num_classes + rng.below_usize(model.num_classes)] = 1.0;
+    }
+    let mut inputs: Vec<&HostTensor> = params.iter().collect();
+    inputs.push(&x);
+    inputs.push(&t);
+    let o1 = engine.execute_seeded(&model.step_1mc, &inputs, Some(3)).unwrap();
+    let o2 = engine.execute_seeded(&model.step_1mc, &inputs, Some(4)).unwrap();
+    let loss_idx = model.output_index("loss", None).unwrap();
+    assert_eq!(o1[loss_idx].data[0], o2[loss_idx].data[0], "loss is seed-free");
+    // the MC taps differ with the seed
+    let gt_idx = model
+        .output_index("g_tap", model.kfac_layers.first().map(|l| l.name.as_str()))
+        .unwrap();
+    let d: f32 = o1[gt_idx]
+        .data
+        .iter()
+        .zip(o2[gt_idx].data.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    assert!(d > 1e-7, "1mc taps should vary with seed");
+}

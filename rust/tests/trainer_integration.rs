@@ -1,0 +1,213 @@
+//! End-to-end coordinator integration over real artifacts: SP-NGD
+//! training decreases the loss, the stale scheduler skips refreshes, the
+//! SGD baseline works, and all practical-NGD modes run.
+
+use std::rc::Rc;
+
+use spngd::coordinator::{BnMode, Fisher, Optim, Trainer, TrainerCfg};
+use spngd::data::{AugmentCfg, SynthDataset};
+use spngd::optim::{HyperParams, Schedule};
+use spngd::runtime::{Engine, Manifest};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+fn base_cfg(model: &str, optimizer: Optim) -> TrainerCfg {
+    let hp = HyperParams {
+        alpha_mixup: 0.0,
+        p_decay: 2.0,
+        e_start: 100.0, // effectively flat LR for these short runs
+        e_end: 200.0,
+        eta0: if optimizer == Optim::Sgd { 0.05 } else { 0.02 },
+        m0: if optimizer == Optim::Sgd { 0.045 } else { 0.018 },
+        lambda: 2.5e-3,
+    };
+    TrainerCfg {
+        model: model.to_string(),
+        workers: 2,
+        grad_accum: 1,
+        fisher: Fisher::Emp,
+        bn_mode: BnMode::Unit,
+        stale: false,
+        stale_alpha: 0.1,
+        lambda: hp.lambda,
+        schedule: Schedule::new(hp, 50),
+        optimizer,
+        weight_rescale: false,
+        clip_update_ratio: 0.3,
+        augment: AugmentCfg::disabled(),
+        bn_momentum: 0.9,
+        fp16_comm: false,
+        seed: 7,
+    }
+}
+
+fn make_trainer(cfg: TrainerCfg) -> Option<Trainer> {
+    let dir = artifacts_dir()?;
+    let manifest = Rc::new(Manifest::load(&dir).unwrap());
+    let engine = Rc::new(Engine::new(&manifest).unwrap());
+    // dataset dims must match the model's input shape
+    let m = manifest.model(&cfg.model).unwrap();
+    let (c, h, w) = (m.input_shape[1], m.input_shape[2], m.input_shape[3]);
+    let ds = SynthDataset::new(m.num_classes, c, h, w, 4000, 42);
+    Some(Trainer::new(manifest, engine, cfg, ds).unwrap())
+}
+
+#[test]
+fn spngd_mlp_loss_decreases() {
+    let Some(mut tr) = make_trainer(base_cfg("mlp", Optim::SpNgd)) else { return };
+    let mut first = 0.0;
+    let mut last = 0.0;
+    for i in 0..25 {
+        let rec = tr.step().unwrap();
+        assert!(rec.loss.is_finite(), "loss diverged at step {i}");
+        if i == 0 {
+            first = rec.loss;
+        }
+        last = rec.loss;
+    }
+    assert!(last < first * 0.8, "loss should drop: first={first} last={last}");
+}
+
+#[test]
+fn sgd_baseline_trains() {
+    let Some(mut tr) = make_trainer(base_cfg("mlp", Optim::Sgd)) else { return };
+    let first = tr.step().unwrap().loss;
+    let mut last = first;
+    for _ in 0..24 {
+        last = tr.step().unwrap().loss;
+    }
+    assert!(last < first, "sgd loss should drop: {first} -> {last}");
+    // SGD moves zero statistics bytes
+    assert_eq!(tr.comm().stats().stats_total(), 0);
+}
+
+#[test]
+fn stale_scheduler_reduces_refreshes() {
+    let mut cfg = base_cfg("mlp", Optim::SpNgd);
+    cfg.stale = true;
+    // small per-step statistics batches fluctuate strongly (the paper's
+    // own observation); grad accumulation stabilizes them enough for the
+    // scheduler to start stretching intervals within the test budget.
+    cfg.grad_accum = 4;
+    cfg.stale_alpha = 0.3;
+    let Some(mut tr) = make_trainer(cfg) else { return };
+    let mut refreshed = 0usize;
+    let mut total = 0usize;
+    for _ in 0..30 {
+        let rec = tr.step().unwrap();
+        refreshed += rec.refreshed;
+        total += rec.total_stats;
+    }
+    assert!(refreshed < total, "stale must skip some refreshes: {refreshed}/{total}");
+    let red = tr.comm_reduction();
+    assert!(red < 1.0 && red > 0.0, "comm reduction {red}");
+    // loss still improves under stale statistics
+    assert!(tr.log.final_loss() < tr.log.records[0].loss);
+}
+
+#[test]
+fn convnet_all_modes_one_step() {
+    for (fisher, bn) in [
+        (Fisher::Emp, BnMode::Unit),
+        (Fisher::Emp, BnMode::Full),
+        (Fisher::OneMc, BnMode::Unit),
+    ] {
+        let mut cfg = base_cfg("convnet_small", Optim::SpNgd);
+        cfg.fisher = fisher;
+        cfg.bn_mode = bn;
+        cfg.workers = 2;
+        let Some(mut tr) = make_trainer(cfg) else { return };
+        let rec = tr.step().unwrap();
+        assert!(rec.loss.is_finite(), "{fisher:?}/{bn:?}");
+        assert!(rec.comm.stats_total() > 0);
+        assert_eq!(rec.refreshed, rec.total_stats, "first step refreshes all");
+    }
+}
+
+#[test]
+fn grad_accumulation_mimics_larger_batch() {
+    let mut cfg = base_cfg("mlp", Optim::SpNgd);
+    cfg.grad_accum = 4;
+    let Some(mut tr) = make_trainer(cfg.clone()) else { return };
+    assert_eq!(cfg.effective_batch(32), 2 * 4 * 32);
+    let rec = tr.step().unwrap();
+    assert!(rec.loss.is_finite());
+    let rec2 = tr.step().unwrap();
+    assert!(rec2.loss.is_finite());
+}
+
+#[test]
+fn evaluation_reports_sane_accuracy() {
+    let Some(mut tr) = make_trainer(base_cfg("mlp", Optim::SpNgd)) else { return };
+    let (l0, a0) = tr.evaluate(4).unwrap();
+    assert!(l0 > 0.0 && (0.0..=1.0).contains(&a0));
+    for _ in 0..30 {
+        tr.step().unwrap();
+    }
+    let (l1, a1) = tr.evaluate(4).unwrap();
+    assert!(l1 < l0, "val loss should improve: {l0} -> {l1}");
+    assert!(a1 >= a0 * 0.8, "val acc not collapsing: {a0} -> {a1}");
+}
+
+#[test]
+fn profile_has_all_components() {
+    let Some(mut tr) = make_trainer(base_cfg("mlp", Optim::SpNgd)) else { return };
+    for _ in 0..3 {
+        tr.step().unwrap();
+    }
+    let p = tr.profile();
+    assert!(p.t_forward > 0.0);
+    assert!(p.t_backward > 0.0);
+    assert!(p.t_factors > 0.0);
+    assert!(p.t_inverse > 0.0);
+    assert!(p.stats_bytes > 0.0);
+    assert!(p.n_stats > 0);
+}
+
+#[test]
+fn fp16_comm_halves_statistics_bytes() {
+    let cfg32 = base_cfg("mlp", Optim::SpNgd);
+    let mut cfg16 = base_cfg("mlp", Optim::SpNgd);
+    cfg16.fp16_comm = true;
+    let (Some(mut a), Some(mut b)) = (make_trainer(cfg32), make_trainer(cfg16)) else {
+        return;
+    };
+    let ra = a.step().unwrap();
+    let rb = b.step().unwrap();
+    assert!(rb.comm.stats_total() * 2 == ra.comm.stats_total(),
+        "fp16 wire should halve stats bytes: {} vs {}",
+        rb.comm.stats_total(), ra.comm.stats_total());
+    // numerics unchanged (accounting-only in the simulation)
+    assert_eq!(ra.loss, rb.loss);
+}
+
+#[test]
+fn layer_ownership_round_robin() {
+    let Some(tr) = make_trainer(base_cfg("convnet_small", Optim::SpNgd)) else { return };
+    let owners = tr.layer_owners();
+    assert_eq!(owners.len(), 21);
+    // round-robin across 2 workers
+    for (i, &o) in owners.iter().enumerate() {
+        assert_eq!(o, i % 2);
+    }
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let Some(mut t1) = make_trainer(base_cfg("mlp", Optim::SpNgd)) else { return };
+    let Some(mut t2) = make_trainer(base_cfg("mlp", Optim::SpNgd)) else { return };
+    for _ in 0..3 {
+        let r1 = t1.step().unwrap();
+        let r2 = t2.step().unwrap();
+        assert_eq!(r1.loss, r2.loss);
+        assert_eq!(r1.train_acc, r2.train_acc);
+    }
+}
