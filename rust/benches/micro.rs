@@ -6,7 +6,7 @@ use spngd::collectives::comm::{SimComm, StatClass};
 use spngd::harness::{self, bench};
 use spngd::kfac::bn::{BnFisher, BnFullFisher};
 use spngd::linalg::{pack_upper, solve, unpack_upper, Mat};
-use spngd::runtime::HostTensor;
+use spngd::runtime::{Executor, HostTensor};
 use spngd::util::rng::Rng;
 
 fn main() {

@@ -1,8 +1,8 @@
-//! Micro-bench of individual artifact executables through the rust PJRT
-//! engine (perf-pass instrumentation).
+//! Micro-bench of individual executables through the active backend
+//! (native CPU by default; `SPNGD_BACKEND=pjrt` for the PJRT engine).
 use anyhow::Result;
 use spngd::harness::{self, bench};
-use spngd::runtime::HostTensor;
+use spngd::runtime::{Executor, HostTensor};
 use spngd::util::rng::Rng;
 
 fn main() -> Result<()> {

@@ -1,9 +1,13 @@
 //! Quickstart: train a small MLP with SP-NGD on the synthetic corpus.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
 //!
-//! Demonstrates the minimal public API: load artifacts, build a trainer,
-//! step it, evaluate.
+//! Runs end-to-end on the native CPU backend — no artifacts needed.
+//! Demonstrates the minimal public API: load the runtime, build a
+//! trainer, step it, evaluate. (`SPNGD_BACKEND=pjrt` switches to the
+//! PJRT engine when built with `--features pjrt`.)
 
 use anyhow::Result;
 use spngd::coordinator::Optim;

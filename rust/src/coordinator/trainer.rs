@@ -13,7 +13,7 @@ use crate::kfac::damping::pi_split;
 use crate::linalg::Mat;
 use crate::metrics::{RunLog, StageTimes, StepRecord};
 use crate::optim::{rescale_weight, spngd_update, Schedule};
-use crate::runtime::{Engine, HostTensor, Manifest, ModelManifest};
+use crate::runtime::{Executor, HostTensor, Manifest, ModelManifest};
 use crate::util::rng::Rng;
 
 /// Fisher estimation mode (§4.1).
@@ -110,7 +110,7 @@ type StaleStateOpt = super::stale::StaleState;
 pub struct Trainer {
     pub cfg: TrainerCfg,
     model: ModelManifest,
-    engine: Rc<Engine>,
+    engine: Rc<dyn Executor>,
     comm: SimComm,
     pub params: Vec<HostTensor>,
     velocity: Vec<HostTensor>,
@@ -133,7 +133,7 @@ pub struct Trainer {
 impl Trainer {
     pub fn new(
         manifest: Rc<Manifest>,
-        engine: Rc<Engine>,
+        engine: Rc<dyn Executor>,
         cfg: TrainerCfg,
         dataset: SynthDataset,
     ) -> Result<Trainer> {

@@ -1,5 +1,5 @@
-//! Shared harness for examples and benches: artifact loading, trainer
-//! construction with sensible defaults, and a tiny bench timer
+//! Shared harness for examples and benches: runtime/backend selection,
+//! trainer construction with sensible defaults, and a tiny bench timer
 //! (criterion replacement — criterion is not available offline).
 
 use std::path::PathBuf;
@@ -11,10 +11,10 @@ use anyhow::{Context, Result};
 use crate::coordinator::{BnMode, Fisher, Optim, Trainer, TrainerCfg};
 use crate::data::{AugmentCfg, SynthDataset};
 use crate::optim::{HyperParams, Schedule};
-use crate::runtime::{Engine, Manifest};
+use crate::runtime::{native, Executor, Manifest};
 use crate::util::stats::Summary;
 
-/// Locate `artifacts/` relative to the crate root.
+/// Locate `artifacts/` relative to the crate root (PJRT backend only).
 pub fn artifacts_dir() -> Result<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     anyhow::ensure!(
@@ -24,11 +24,54 @@ pub fn artifacts_dir() -> Result<PathBuf> {
     Ok(dir)
 }
 
-pub fn load_runtime() -> Result<(Rc<Manifest>, Rc<Engine>)> {
-    let dir = artifacts_dir()?;
-    let manifest = Rc::new(Manifest::load(&dir)?);
-    let engine = Rc::new(Engine::new(&manifest)?);
-    Ok((manifest, engine))
+/// Load the default runtime: the native CPU backend, or — when the
+/// `SPNGD_BACKEND=pjrt` environment variable is set — the PJRT engine
+/// over the AOT artifacts (requires the `pjrt` cargo feature).
+pub fn load_runtime() -> Result<(Rc<Manifest>, Rc<dyn Executor>)> {
+    match std::env::var("SPNGD_BACKEND") {
+        Ok(b) if b == "pjrt" => load_runtime_pjrt(),
+        Ok(b) if !b.is_empty() && b != "native" => {
+            anyhow::bail!("unknown SPNGD_BACKEND '{b}' (expected native | pjrt)")
+        }
+        _ => load_runtime_native(),
+    }
+}
+
+/// The hermetic native CPU runtime (default model set).
+pub fn load_runtime_native() -> Result<(Rc<Manifest>, Rc<dyn Executor>)> {
+    let (manifest, backend) = native::build_default()?;
+    Ok((Rc::new(manifest), Rc::new(backend) as Rc<dyn Executor>))
+}
+
+/// The PJRT runtime over the crate-root `artifacts/` (feature `pjrt`).
+#[cfg(feature = "pjrt")]
+pub fn load_runtime_pjrt() -> Result<(Rc<Manifest>, Rc<dyn Executor>)> {
+    load_runtime_pjrt_at(&artifacts_dir()?)
+}
+
+/// The PJRT runtime over the crate-root `artifacts/` (feature `pjrt`).
+#[cfg(not(feature = "pjrt"))]
+pub fn load_runtime_pjrt() -> Result<(Rc<Manifest>, Rc<dyn Executor>)> {
+    load_runtime_pjrt_at(std::path::Path::new("artifacts"))
+}
+
+/// The PJRT runtime over an explicit artifact directory.
+#[cfg(feature = "pjrt")]
+pub fn load_runtime_pjrt_at(dir: &std::path::Path) -> Result<(Rc<Manifest>, Rc<dyn Executor>)> {
+    anyhow::ensure!(
+        dir.join("manifest.json").exists(),
+        "no manifest in {} — run `make artifacts` first",
+        dir.display()
+    );
+    let manifest = Rc::new(Manifest::load(dir)?);
+    let engine = Rc::new(crate::runtime::Engine::new(&manifest)?);
+    Ok((manifest, engine as Rc<dyn Executor>))
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub fn load_runtime_pjrt_at(dir: &std::path::Path) -> Result<(Rc<Manifest>, Rc<dyn Executor>)> {
+    let _ = dir;
+    anyhow::bail!("this build has no PJRT support — rebuild with `--features pjrt`")
 }
 
 /// Default hyperparameters for short synthetic-corpus runs.

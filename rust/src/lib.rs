@@ -11,9 +11,14 @@
 //! - **L1 (python/compile/kernels/)** — Pallas kernels for factor
 //!   construction, Newton-Schulz inversion and preconditioning.
 //!
-//! Python never runs on the training path: `rust/src/runtime` loads the
-//! HLO artifacts through the PJRT C API (`xla` crate) and the coordinator
-//! drives everything from rust.
+//! Python never runs on the training path. The coordinator talks to an
+//! execution backend through [`runtime::Executor`]:
+//!
+//! - the default **native CPU backend** (`runtime::native`) implements
+//!   the full L1/L2 contract in pure rust — hermetic builds, no
+//!   artifacts or XLA toolchain required;
+//! - with the `pjrt` cargo feature, `runtime::engine` loads the AOT HLO
+//!   artifacts through the PJRT C API (`xla` crate) instead.
 
 pub mod collectives;
 pub mod coordinator;

@@ -1,13 +1,14 @@
 //! spngd — SP-NGD leader CLI.
 //!
 //! Subcommands:
-//!   info      print the artifact manifest summary
+//!   info      print the manifest summary
 //!   train     run SP-NGD (or SGD) training on the synthetic corpus
 //!   simulate  sweep the cluster cost model over GPU counts (Fig. 5)
 //!
-//! `make artifacts` must have produced `artifacts/` first.
+//! Every subcommand takes `--backend native|pjrt`. The default native
+//! backend is self-contained; `--backend pjrt` additionally needs the
+//! `pjrt` cargo feature and `make artifacts`.
 
-use std::path::Path;
 use std::rc::Rc;
 
 use anyhow::{bail, Result};
@@ -16,7 +17,7 @@ use spngd::collectives::cost::ClusterModel;
 use spngd::coordinator::{BnMode, Fisher, Optim, Trainer, TrainerCfg};
 use spngd::data::{AugmentCfg, SynthDataset};
 use spngd::optim::{HyperParams, Schedule};
-use spngd::runtime::{Engine, Manifest};
+use spngd::runtime::{Executor, Manifest};
 use spngd::simulator;
 use spngd::util::cli::Args;
 use spngd::util::stats::{fmt_bytes, fmt_duration};
@@ -42,22 +43,21 @@ fn main() {
     }
 }
 
-fn load(artifacts: &str) -> Result<(Rc<Manifest>, Rc<Engine>)> {
-    let dir = Path::new(artifacts);
-    if !dir.join("manifest.json").exists() {
-        bail!("no manifest in {artifacts} — run `make artifacts` first");
+fn load(backend: &str, artifacts: &str) -> Result<(Rc<Manifest>, Rc<dyn Executor>)> {
+    match backend {
+        "native" => spngd::harness::load_runtime_native(),
+        "pjrt" => spngd::harness::load_runtime_pjrt_at(std::path::Path::new(artifacts)),
+        other => bail!("unknown backend '{other}' (expected native | pjrt)"),
     }
-    let manifest = Rc::new(Manifest::load(dir)?);
-    let engine = Rc::new(Engine::new(&manifest)?);
-    Ok((manifest, engine))
 }
 
 fn cmd_info() -> Result<()> {
-    let parsed = Args::new("spngd info", "print the artifact manifest summary")
-        .opt("artifacts", "artifacts", "artifact directory")
+    let parsed = Args::new("spngd info", "print the manifest summary")
+        .opt("backend", "native", "execution backend: native | pjrt")
+        .opt("artifacts", "artifacts", "artifact directory (pjrt backend)")
         .parse_env(2)
         .map_err(|u| anyhow::anyhow!("{u}"))?;
-    let (manifest, engine) = load(parsed.get("artifacts"))?;
+    let (manifest, engine) = load(parsed.get("backend"), parsed.get("artifacts"))?;
     println!("platform: {}", engine.platform());
     println!("executables: {}", manifest.executables.len());
     for (name, m) in &manifest.models {
@@ -83,7 +83,7 @@ fn cmd_info() -> Result<()> {
 }
 
 fn trainer_from_args(parsed: &spngd::util::cli::Parsed) -> Result<Trainer> {
-    let (manifest, engine) = load(parsed.get("artifacts"))?;
+    let (manifest, engine) = load(parsed.get("backend"), parsed.get("artifacts"))?;
     let model = parsed.get("model").to_string();
     let m = manifest.model(&model)?;
     let workers = parsed.get_usize("workers");
@@ -145,7 +145,8 @@ fn trainer_from_args(parsed: &spngd::util::cli::Parsed) -> Result<Trainer> {
 
 fn train_args() -> Args {
     Args::new("spngd train", "train on the synthetic corpus")
-        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("backend", "native", "execution backend: native | pjrt")
+        .opt("artifacts", "artifacts", "artifact directory (pjrt backend)")
         .opt("model", "convnet_small", "model name (mlp | convnet_small)")
         .opt("optimizer", "spngd", "spngd | sgd")
         .opt("fisher", "emp", "Fisher estimation: emp | 1mc")
@@ -224,14 +225,16 @@ fn cmd_train() -> Result<()> {
 
 fn cmd_simulate() -> Result<()> {
     let parsed = Args::new("spngd simulate", "Fig. 5 cluster sweep from a measured profile")
-        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("backend", "native", "execution backend: native | pjrt")
+        .opt("artifacts", "artifacts", "artifact directory (pjrt backend)")
         .opt("model", "convnet_small", "model to profile")
         .opt("probe-steps", "4", "steps to measure the profile")
         .opt("gpus", "1,4,16,64,128,256,512,1024", "GPU counts")
         .opt("stale-fraction", "0.08", "assumed stale refresh fraction")
+        .flag("fp16-comm", "half-precision wire format for collectives (§5.2)")
         .parse_env(2)
         .map_err(|u| anyhow::anyhow!("{u}"))?;
-    let (manifest, engine) = load(parsed.get("artifacts"))?;
+    let (manifest, engine) = load(parsed.get("backend"), parsed.get("artifacts"))?;
     let model = parsed.get("model").to_string();
     let m = manifest.model(&model)?;
     let (c, h, w) = (m.input_shape[1], m.input_shape[2], m.input_shape[3]);

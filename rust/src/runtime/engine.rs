@@ -1,9 +1,15 @@
-//! Engine: PJRT CPU client + compiled-executable cache.
+//! Engine: PJRT CPU client + compiled-executable cache (cargo feature
+//! `pjrt`).
 //!
 //! Artifacts are HLO text; compilation happens once at startup (or lazily
 //! on first use) and the compiled executables are shared by all simulated
 //! workers. Execution is behind `&self` — the PJRT CPU client is
 //! thread-safe — so Stage-1/Stage-4 work can run from the worker pool.
+//!
+//! The default build ships the vendored `xla` *stub* (see
+//! `rust/vendor/xla`): this module compiles, but [`Engine::new`] reports
+//! that real PJRT bindings are required. Swap the path dependency to run
+//! actual HLO artifacts.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -140,5 +146,28 @@ impl Engine {
     /// Total seconds spent inside PJRT execute calls.
     pub fn exec_seconds(&self) -> f64 {
         self.stats.exec_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+}
+
+impl super::Executor for Engine {
+    fn platform(&self) -> String {
+        Engine::platform(self)
+    }
+
+    fn execute_seeded(
+        &self,
+        name: &str,
+        inputs: &[&HostTensor],
+        seed: Option<u32>,
+    ) -> Result<Vec<HostTensor>> {
+        Engine::execute_seeded(self, name, inputs, seed)
+    }
+
+    fn ensure_compiled(&self, name: &str) -> Result<bool> {
+        Engine::ensure_compiled(self, name)
+    }
+
+    fn exec_seconds(&self) -> f64 {
+        Engine::exec_seconds(self)
     }
 }

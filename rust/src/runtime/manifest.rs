@@ -108,8 +108,12 @@ pub struct Manifest {
     pub dir: PathBuf,
     pub ns_iters: usize,
     pub models: BTreeMap<String, ModelManifest>,
-    /// executable name -> artifact file name
+    /// executable name -> artifact file name (native backends map a name
+    /// to itself — there is no file)
     pub executables: BTreeMap<String, String>,
+    /// in-memory initial parameters by model name (native backend);
+    /// consulted before `init_file` by [`Manifest::load_init_params`]
+    pub init_params: BTreeMap<String, Vec<super::HostTensor>>,
 }
 
 fn as_usize(j: &Json, what: &str) -> Result<usize> {
@@ -221,6 +225,7 @@ impl Manifest {
             ns_iters: root.get("ns_iters").as_usize().unwrap_or(20),
             models,
             executables,
+            init_params: BTreeMap::new(),
         })
     }
 
@@ -234,8 +239,13 @@ impl Manifest {
         }
     }
 
-    /// Load the initial parameters for a model (raw f32 LE, param order).
+    /// Load the initial parameters for a model: the in-memory table
+    /// (native backend) if present, else the raw f32-LE `init_file`
+    /// artifact (param order).
     pub fn load_init_params(&self, model: &ModelManifest) -> Result<Vec<super::HostTensor>> {
+        if let Some(params) = self.init_params.get(&model.name) {
+            return Ok(params.clone());
+        }
         let bytes = std::fs::read(self.dir.join(&model.init_file))
             .with_context(|| format!("reading {}", model.init_file))?;
         let mut floats = Vec::with_capacity(bytes.len() / 4);

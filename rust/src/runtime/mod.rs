@@ -1,14 +1,58 @@
-//! Runtime: loads the AOT artifacts (HLO text + manifest) and executes
-//! them on the PJRT CPU client via the `xla` crate.
+//! Runtime: pluggable execution backends behind the [`Executor`] trait.
 //!
-//! This is the only module that touches PJRT; the coordinator sees
-//! [`Engine`] (execute-by-name over [`HostTensor`]s) and the parsed
-//! [`manifest::Manifest`].
+//! The coordinator addresses compute by *executable name* (the contract
+//! recorded in [`manifest::Manifest`]) and never sees a backend type:
+//!
+//! - [`native`] — pure-rust CPU backend (default). Implements the full
+//!   SP-NGD training path (model fwd/bwd with K-FAC statistics capture,
+//!   im2col/SYRK factor construction, Newton-Schulz inversion,
+//!   preconditioning) on top of `linalg`, and synthesizes the manifest
+//!   in-process — no artifacts, no XLA toolchain, no network.
+//! - [`engine`] (cargo feature `pjrt`) — loads the AOT HLO artifacts
+//!   produced by `python/compile` and executes them through the PJRT C
+//!   API (`xla` crate).
 
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod manifest;
+pub mod native;
 pub mod tensor;
 
+#[cfg(feature = "pjrt")]
 pub use engine::Engine;
 pub use manifest::{KfacLayer, Manifest, ModelManifest, OutputSpec};
+pub use native::NativeBackend;
 pub use tensor::HostTensor;
+
+use anyhow::Result;
+
+/// Execute-by-name over [`HostTensor`]s — the seam between the
+/// coordinator (L3) and whichever kernel substrate (L1/L2) is compiled
+/// in. Object-safe so the trainer can hold an `Rc<dyn Executor>`.
+pub trait Executor {
+    /// Backend identifier (e.g. "native-cpu", PJRT platform name).
+    fn platform(&self) -> String;
+
+    /// Execute an executable by manifest name. `seed` feeds stochastic
+    /// executables (the 1mc Fisher's Monte-Carlo label sample).
+    fn execute_seeded(
+        &self,
+        name: &str,
+        inputs: &[&HostTensor],
+        seed: Option<u32>,
+    ) -> Result<Vec<HostTensor>>;
+
+    /// Execute without a seed.
+    fn execute(&self, name: &str, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        self.execute_seeded(name, inputs, None)
+    }
+
+    /// Prepare an executable ahead of time; returns whether work happened
+    /// (PJRT compiles HLO here; the native backend only validates the
+    /// name). Whole-manifest warmup stays backend-specific — see
+    /// `Engine::compile_all`.
+    fn ensure_compiled(&self, name: &str) -> Result<bool>;
+
+    /// Cumulative seconds spent executing (perf instrumentation).
+    fn exec_seconds(&self) -> f64;
+}

@@ -1,0 +1,326 @@
+//! Native CPU kernels — the rust counterparts of the L1 Pallas kernels,
+//! numerically matched to the oracles in `python/compile/kernels/ref.py`
+//! (see `tests/native_golden.rs` for golden-value checks).
+
+use crate::linalg::Mat;
+use crate::runtime::HostTensor;
+
+/// Conv-patch extraction: (B, C, H, W) -> (B*ho*wo, C*k*k) with row index
+/// (b, oy, ox) and column index c*k*k + kh*k + kw — the exact layout of
+/// `lax.conv_general_dilated_patches` the AOT factor executables consume.
+pub fn im2col(x: &HostTensor, k: usize, stride: usize, pad: usize) -> (Mat, usize, usize) {
+    assert_eq!(x.rank(), 4, "im2col expects NCHW");
+    let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let ho = (h + 2 * pad - k) / stride + 1;
+    let wo = (w + 2 * pad - k) / stride + 1;
+    let ckk = c * k * k;
+    let mut out = Mat::zeros(b * ho * wo, ckk);
+    for bi in 0..b {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let base = ((bi * ho + oy) * wo + ox) * ckk;
+                for ci in 0..c {
+                    for kh in 0..k {
+                        let y = (oy * stride + kh) as isize - pad as isize;
+                        if y < 0 || y >= h as isize {
+                            continue;
+                        }
+                        let src = ((bi * c + ci) * h + y as usize) * w;
+                        for kw in 0..k {
+                            let xx = (ox * stride + kw) as isize - pad as isize;
+                            if xx < 0 || xx >= w as isize {
+                                continue;
+                            }
+                            out.data[base + (ci * k + kh) * k + kw] = x.data[src + xx as usize];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (out, ho, wo)
+}
+
+/// Scatter-add inverse of [`im2col`]: fold patch gradients back onto the
+/// input image (the conv backward data path).
+pub fn col2im(
+    dpatches: &Mat,
+    xshape: &[usize; 4],
+    k: usize,
+    stride: usize,
+    pad: usize,
+    ho: usize,
+    wo: usize,
+) -> HostTensor {
+    let [b, c, h, w] = *xshape;
+    let ckk = c * k * k;
+    assert_eq!(dpatches.rows, b * ho * wo);
+    assert_eq!(dpatches.cols, ckk);
+    let mut dx = vec![0.0f32; b * c * h * w];
+    for bi in 0..b {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let base = ((bi * ho + oy) * wo + ox) * ckk;
+                for ci in 0..c {
+                    for kh in 0..k {
+                        let y = (oy * stride + kh) as isize - pad as isize;
+                        if y < 0 || y >= h as isize {
+                            continue;
+                        }
+                        let dst = ((bi * c + ci) * h + y as usize) * w;
+                        for kw in 0..k {
+                            let xx = (ox * stride + kw) as isize - pad as isize;
+                            if xx < 0 || xx >= w as isize {
+                                continue;
+                            }
+                            dx[dst + xx as usize] += dpatches.data[base + (ci * k + kh) * k + kw];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    HostTensor::new(vec![b, c, h, w], dx)
+}
+
+/// SYRK: scale * XᵀX for X (rows, cols) -> (cols, cols) symmetric — the
+/// Kronecker-factor construction primitive (f64 accumulation over the
+/// long row axis).
+pub fn syrk(x: &Mat, scale: f32) -> Mat {
+    let (r, c) = (x.rows, x.cols);
+    let mut out = Mat::zeros(c, c);
+    for i in 0..c {
+        for j in i..c {
+            let mut acc = 0.0f64;
+            for t in 0..r {
+                acc += x.data[t * c + i] as f64 * x.data[t * c + j] as f64;
+            }
+            let v = (acc * scale as f64) as f32;
+            out.data[i * c + j] = v;
+            out.data[j * c + i] = v;
+        }
+    }
+    out
+}
+
+fn matvec(m: &Mat, v: &[f32]) -> Vec<f32> {
+    let n = m.rows;
+    let mut out = vec![0.0f32; n];
+    for i in 0..n {
+        let row = &m.data[i * m.cols..(i + 1) * m.cols];
+        let mut acc = 0.0f64;
+        for j in 0..v.len() {
+            acc += row[j] as f64 * v[j] as f64;
+        }
+        out[i] = acc as f32;
+    }
+    out
+}
+
+fn l2norm(v: &[f32]) -> f32 {
+    v.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt() as f32
+}
+
+/// Damped SPD inverse (M + damping·I)⁻¹ via Newton-Schulz, matching the
+/// AOT `invert_<n>` executables exactly: 8 power iterations from
+/// v₀ = 1/√n, σ = 1.1·‖M_d v‖ + damping, X₀ = I/σ, then `iters` steps of
+/// X ← X(2I − M_d X). Zero-padded buckets stay exact: damping makes the
+/// pad block λI, which inverts independently of the top-left block.
+pub fn ns_inverse(m: &Mat, damping: f32, iters: usize) -> Mat {
+    assert!(m.is_square());
+    let n = m.rows;
+    let mut md = m.clone();
+    md.add_diag(damping);
+    let mut v = vec![1.0f32 / (n as f32).sqrt(); n];
+    for _ in 0..8 {
+        let w = matvec(&md, &v);
+        let norm = l2norm(&w).max(1e-30);
+        for (vi, wi) in v.iter_mut().zip(w.iter()) {
+            *vi = wi / norm;
+        }
+    }
+    let sigma = l2norm(&matvec(&md, &v)).max(1e-30) * 1.1 + damping;
+    let mut x = Mat::eye(n).scale(1.0 / sigma);
+    let two_i = Mat::eye(n).scale(2.0);
+    for _ in 0..iters {
+        let p = md.matmul(&x);
+        x = x.matmul(&two_i.axpy(-1.0, &p));
+    }
+    x
+}
+
+/// K-FAC preconditioned gradient: G⁻¹ · grad · A⁻¹.
+pub fn precondition(g_inv: &Mat, grad: &Mat, a_inv: &Mat) -> Mat {
+    g_inv.matmul(grad).matmul(a_inv)
+}
+
+/// Full (2C × 2C) BatchNorm Fisher from per-sample (B, C) gamma/beta
+/// gradients, parameter order (γ₁, β₁, …, γ_C, β_C).
+pub fn bn_full_fisher(g_gamma: &HostTensor, g_beta: &HostTensor) -> HostTensor {
+    let (b, c) = (g_gamma.shape[0], g_gamma.shape[1]);
+    assert_eq!(g_beta.shape, g_gamma.shape);
+    let n = 2 * c;
+    let mut f = vec![0.0f32; n * n];
+    let mut v = vec![0.0f32; n];
+    for bi in 0..b {
+        for ci in 0..c {
+            v[2 * ci] = g_gamma.data[bi * c + ci];
+            v[2 * ci + 1] = g_beta.data[bi * c + ci];
+        }
+        for i in 0..n {
+            if v[i] == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                f[i * n + j] += v[i] * v[j];
+            }
+        }
+    }
+    let inv_b = 1.0 / b as f32;
+    for x in f.iter_mut() {
+        *x *= inv_b;
+    }
+    HostTensor::new(vec![n, n], f)
+}
+
+/// Damped closed-form inverse of the unit-wise BN Fisher: (B, C) gamma
+/// and beta gradients -> (C, 2, 2) inverse blocks of (F_c + damping·I).
+pub fn bn_unit_fisher_inv(g_gamma: &HostTensor, g_beta: &HostTensor, damping: f32) -> HostTensor {
+    let (b, c) = (g_gamma.shape[0], g_gamma.shape[1]);
+    assert_eq!(g_beta.shape, g_gamma.shape);
+    let mut out = vec![0.0f32; c * 4];
+    let inv_b = 1.0 / b as f32;
+    for ci in 0..c {
+        let (mut f11, mut f12, mut f22) = (0.0f64, 0.0f64, 0.0f64);
+        for bi in 0..b {
+            let gg = g_gamma.data[bi * c + ci] as f64;
+            let gb = g_beta.data[bi * c + ci] as f64;
+            f11 += gg * gg;
+            f12 += gg * gb;
+            f22 += gb * gb;
+        }
+        let a = f11 * inv_b as f64 + damping as f64;
+        let off = f12 * inv_b as f64;
+        let d = f22 * inv_b as f64 + damping as f64;
+        let det = a * d - off * off;
+        out[ci * 4] = (d / det) as f32;
+        out[ci * 4 + 1] = (-off / det) as f32;
+        out[ci * 4 + 2] = (-off / det) as f32;
+        out[ci * 4 + 3] = (a / det) as f32;
+    }
+    HostTensor::new(vec![c, 2, 2], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::solve;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn im2col_col2im_adjoint() {
+        // <im2col(x), y> == <x, col2im(y)> for random x, y (adjointness is
+        // exactly what conv backward needs)
+        let mut rng = Rng::new(3);
+        let x = HostTensor::new(vec![2, 3, 5, 5], (0..150).map(|_| rng.f32()).collect());
+        let (px, ho, wo) = im2col(&x, 3, 2, 1);
+        let y = Mat::from_vec(px.rows, px.cols, (0..px.data.len()).map(|_| rng.f32()).collect());
+        let lhs: f64 =
+            px.data.iter().zip(y.data.iter()).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+        let folded = col2im(&y, &[2, 3, 5, 5], 3, 2, 1, ho, wo);
+        let rhs: f64 =
+            x.data.iter().zip(folded.data.iter()).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+        assert!((lhs - rhs).abs() < 1e-3, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn syrk_is_symmetric_gram() {
+        let x = Mat::from_vec(3, 2, vec![1.0, 2.0, 3.0, -1.0, 0.5, 4.0]);
+        let s = syrk(&x, 0.5);
+        let want = x.transpose().matmul(&x).scale(0.5);
+        assert!(s.max_abs_diff(&want) < 1e-5);
+        assert_eq!(s.at(0, 1), s.at(1, 0));
+    }
+
+    #[test]
+    fn ns_inverse_matches_gauss_jordan() {
+        let mut rng = Rng::new(11);
+        let n = 24;
+        let raw: Vec<f32> = (0..n * n).map(|_| rng.normal() as f32).collect();
+        let b = Mat::from_vec(n, n, raw);
+        let mut m = b.transpose().matmul(&b).scale(1.0 / n as f32);
+        m.symmetrize();
+        let lambda = 0.05;
+        let inv = ns_inverse(&m, lambda, 20);
+        let mut md = m.clone();
+        md.add_diag(lambda);
+        let gj = solve::gauss_jordan_inverse(&md).unwrap();
+        assert!(inv.max_abs_diff(&gj) < 5e-3, "diff {}", inv.max_abs_diff(&gj));
+    }
+
+    #[test]
+    fn ns_inverse_padded_bucket_slices_exactly() {
+        // pad a 5x5 SPD into a 16-bucket; the sliced-back inverse must
+        // match the unpadded inverse (block-diagonal argument)
+        let mut rng = Rng::new(13);
+        let raw: Vec<f32> = (0..25).map(|_| rng.normal() as f32).collect();
+        let b = Mat::from_vec(5, 5, raw);
+        let mut m = b.transpose().matmul(&b).scale(0.2);
+        m.symmetrize();
+        let t = HostTensor::from_mat(&m).pad_square(16);
+        let inv_padded = ns_inverse(&t.as_mat(), 0.1, 20);
+        let sliced = HostTensor::from_mat(&inv_padded).slice_square(5);
+        let inv_direct = ns_inverse(&m, 0.1, 20);
+        assert!(sliced.as_mat().max_abs_diff(&inv_direct) < 1e-4);
+    }
+
+    #[test]
+    fn bn_unit_inv_inverts_damped_fisher() {
+        let mut rng = Rng::new(17);
+        let (b, c) = (16, 3);
+        let gg = HostTensor::new(vec![b, c], (0..b * c).map(|_| rng.normal() as f32).collect());
+        let gb = HostTensor::new(vec![b, c], (0..b * c).map(|_| rng.normal() as f32).collect());
+        let lam = 0.05f32;
+        let inv = bn_unit_fisher_inv(&gg, &gb, lam);
+        assert_eq!(inv.shape, vec![c, 2, 2]);
+        for ci in 0..c {
+            let (mut f11, mut f12, mut f22) = (0.0f64, 0.0f64, 0.0f64);
+            for bi in 0..b {
+                let g1 = gg.data[bi * c + ci] as f64;
+                let g2 = gb.data[bi * c + ci] as f64;
+                f11 += g1 * g1;
+                f12 += g1 * g2;
+                f22 += g2 * g2;
+            }
+            let (f11, f12, f22) = (
+                f11 / b as f64 + lam as f64,
+                f12 / b as f64,
+                f22 / b as f64 + lam as f64,
+            );
+            let blk = &inv.data[ci * 4..ci * 4 + 4];
+            let i00 = f11 * blk[0] as f64 + f12 * blk[2] as f64;
+            let i01 = f11 * blk[1] as f64 + f12 * blk[3] as f64;
+            let i11 = f12 * blk[1] as f64 + f22 * blk[3] as f64;
+            assert!((i00 - 1.0).abs() < 1e-4);
+            assert!(i01.abs() < 1e-4);
+            assert!((i11 - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn bn_full_diagonal_matches_unit_blocks() {
+        let mut rng = Rng::new(19);
+        let (b, c) = (8, 3);
+        let gg = HostTensor::new(vec![b, c], (0..b * c).map(|_| rng.normal() as f32).collect());
+        let gb = HostTensor::new(vec![b, c], (0..b * c).map(|_| rng.normal() as f32).collect());
+        let full = bn_full_fisher(&gg, &gb);
+        assert_eq!(full.shape, vec![2 * c, 2 * c]);
+        let f = crate::kfac::bn::BnFisher::from_taps(&gg.data, &gb.data, b, c);
+        let n = 2 * c;
+        for ci in 0..c {
+            assert!((full.data[(2 * ci) * n + 2 * ci] - f.blocks[ci][0]).abs() < 1e-5);
+            assert!((full.data[(2 * ci) * n + 2 * ci + 1] - f.blocks[ci][1]).abs() < 1e-5);
+            assert!((full.data[(2 * ci + 1) * n + 2 * ci + 1] - f.blocks[ci][2]).abs() < 1e-5);
+        }
+    }
+}

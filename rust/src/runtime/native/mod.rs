@@ -1,0 +1,478 @@
+//! Native CPU backend: the default, hermetic [`Executor`].
+//!
+//! Mirrors the AOT pipeline (`python/compile/aot.py`) in-process: for each
+//! model it synthesizes the same manifest (same executable names, layer
+//! table, output layout, padded inversion buckets) and registers a native
+//! implementation per executable — full fwd/bwd step with K-FAC taps,
+//! im2col+SYRK factor construction, damped Newton-Schulz inversion, and
+//! preconditioning. `cargo build` with default features is all it needs:
+//! no artifacts, no XLA toolchain, no network.
+
+pub mod kernels;
+pub mod model;
+mod net;
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use self::model::{LayerGeo, NativeModelCfg};
+use super::manifest::{KfacLayer, Manifest, ModelManifest, OutputSpec, ParamSpec};
+use super::{Executor, HostTensor};
+
+/// Newton-Schulz iteration count — matches `NS_ITERS` in the AOT
+/// pipeline, where 20 iterations reach f32 tolerance at the damping
+/// levels the coordinator uses.
+const NS_ITERS: usize = 20;
+
+/// Inversion executables are shared across factor dims by padding to a
+/// multiple of 16 (block-diagonal padding is exact; the trainer slices
+/// the top-left block back out).
+fn bucket(n: usize) -> usize {
+    n.div_ceil(16) * 16
+}
+
+/// How to execute a manifest name natively. Every name fully determines
+/// its spec, so cross-model sharing (e.g. `invert_64`) is safe.
+#[derive(Clone, Debug)]
+enum ExecSpec {
+    Step {
+        model: String,
+        one_mc: bool,
+    },
+    Eval {
+        model: String,
+    },
+    FactorConvA {
+        cin: usize,
+        h: usize,
+        w: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        batch: usize,
+    },
+    FactorSyrk {
+        rows: usize,
+        cols: usize,
+        scale_rows: usize,
+    },
+    BnInv,
+    BnFull,
+    Invert {
+        n: usize,
+    },
+    Precond {
+        m: usize,
+        n: usize,
+    },
+}
+
+struct NativeModel {
+    cfg: NativeModelCfg,
+    param_names: Vec<String>,
+    geo: Vec<LayerGeo>,
+}
+
+/// The native backend: model table + executable registry + counters.
+pub struct NativeBackend {
+    models: BTreeMap<String, NativeModel>,
+    execs: BTreeMap<String, ExecSpec>,
+    ns_iters: usize,
+    executions: AtomicU64,
+    exec_nanos: AtomicU64,
+}
+
+/// Build manifests + backend for the default model set.
+pub fn build_default() -> Result<(Manifest, NativeBackend)> {
+    build(&["mlp", "convnet_small", "convnet_tiny"], 0)
+}
+
+/// Build an in-memory [`Manifest`] (same contract as the AOT
+/// `manifest.json`) and the backend executing it, for the named models.
+/// `seed` controls the HeNormal parameter initialization.
+pub fn build(model_names: &[&str], seed: u64) -> Result<(Manifest, NativeBackend)> {
+    let mut execs: BTreeMap<String, ExecSpec> = BTreeMap::new();
+    let mut models = BTreeMap::new();
+    let mut manifests = BTreeMap::new();
+    let mut init_params = BTreeMap::new();
+
+    for &mname in model_names {
+        let cfg = model::by_name(mname).with_context(|| format!("unknown model '{mname}'"))?;
+        let geo = cfg.layer_geometry();
+        let pshapes = cfg.param_shapes();
+        let b = cfg.batch;
+
+        let step_emp = format!("step_{mname}_emp");
+        let step_1mc = format!("step_{mname}_1mc");
+        let eval_exe = format!("eval_{mname}");
+        execs.insert(step_emp.clone(), ExecSpec::Step { model: mname.to_string(), one_mc: false });
+        execs.insert(step_1mc.clone(), ExecSpec::Step { model: mname.to_string(), one_mc: true });
+        execs.insert(eval_exe.clone(), ExecSpec::Eval { model: mname.to_string() });
+
+        let mut kfac_layers = Vec::new();
+        let mut bn_order = Vec::new();
+        for lg in &geo {
+            if lg.kind == "bn" {
+                let c = lg.channels;
+                let bn_inv = format!("bn_inv_{c}");
+                let bn_full = format!("bn_full_{c}");
+                let full_bucket = bucket(2 * c);
+                let invert_full = format!("invert_{full_bucket}");
+                execs.insert(bn_inv.clone(), ExecSpec::BnInv);
+                execs.insert(bn_full.clone(), ExecSpec::BnFull);
+                execs.insert(invert_full.clone(), ExecSpec::Invert { n: full_bucket });
+                kfac_layers.push(KfacLayer {
+                    name: lg.name.clone(),
+                    kind: "bn".to_string(),
+                    a_dim: 0,
+                    g_dim: 0,
+                    a_bucket: 0,
+                    g_bucket: 0,
+                    grad_shape: (0, 0),
+                    factor_a: String::new(),
+                    factor_g: String::new(),
+                    invert_a: String::new(),
+                    invert_g: String::new(),
+                    precond: String::new(),
+                    weight_param: String::new(),
+                    channels: c,
+                    bn_inv,
+                    bn_full,
+                    invert_full,
+                    full_bucket,
+                    gamma_param: format!("{}.gamma", lg.name),
+                    beta_param: format!("{}.beta", lg.name),
+                });
+                bn_order.push(lg.name.clone());
+                continue;
+            }
+            let (factor_a, factor_g) = if lg.kind == "conv" {
+                let (cin, h, w, k, s, p) = lg.conv_sig.expect("conv layer has a signature");
+                let fa = format!("factor_conv_a_c{cin}h{h}w{w}k{k}s{s}p{p}_b{b}");
+                execs.insert(
+                    fa.clone(),
+                    ExecSpec::FactorConvA { cin, h, w, k, stride: s, pad: p, batch: b },
+                );
+                let rows = b * lg.spatial;
+                let fg = format!("factor_g_r{rows}c{}s{b}", lg.g_dim);
+                execs.insert(
+                    fg.clone(),
+                    ExecSpec::FactorSyrk { rows, cols: lg.g_dim, scale_rows: b },
+                );
+                (fa, fg)
+            } else {
+                let fa = format!("factor_g_r{b}c{}s{b}", lg.a_dim);
+                execs.insert(
+                    fa.clone(),
+                    ExecSpec::FactorSyrk { rows: b, cols: lg.a_dim, scale_rows: b },
+                );
+                let fg = format!("factor_g_r{b}c{}s{b}", lg.g_dim);
+                execs.insert(
+                    fg.clone(),
+                    ExecSpec::FactorSyrk { rows: b, cols: lg.g_dim, scale_rows: b },
+                );
+                (fa, fg)
+            };
+            let (a_bucket, g_bucket) = (bucket(lg.a_dim), bucket(lg.g_dim));
+            let invert_a = format!("invert_{a_bucket}");
+            let invert_g = format!("invert_{g_bucket}");
+            execs.insert(invert_a.clone(), ExecSpec::Invert { n: a_bucket });
+            execs.insert(invert_g.clone(), ExecSpec::Invert { n: g_bucket });
+            let (gm, gn) = lg.grad_shape;
+            let precond = format!("precond_{gm}x{gn}");
+            execs.insert(precond.clone(), ExecSpec::Precond { m: gm, n: gn });
+            kfac_layers.push(KfacLayer {
+                name: lg.name.clone(),
+                kind: lg.kind.to_string(),
+                a_dim: lg.a_dim,
+                g_dim: lg.g_dim,
+                a_bucket,
+                g_bucket,
+                grad_shape: lg.grad_shape,
+                factor_a,
+                factor_g,
+                invert_a,
+                invert_g,
+                precond,
+                weight_param: format!("{}.w", lg.name),
+                channels: 0,
+                bn_inv: String::new(),
+                bn_full: String::new(),
+                invert_full: String::new(),
+                full_bucket: 0,
+                gamma_param: String::new(),
+                beta_param: String::new(),
+            });
+        }
+
+        // step output layout (mirrors the AOT manifest ordering)
+        let mut step_outputs = vec![
+            OutputSpec {
+                name: "loss".to_string(),
+                role: "loss".to_string(),
+                layer: None,
+                param: None,
+                shape: Vec::new(),
+            },
+            OutputSpec {
+                name: "ncorrect".to_string(),
+                role: "ncorrect".to_string(),
+                layer: None,
+                param: None,
+                shape: Vec::new(),
+            },
+        ];
+        for (pname, shape) in &pshapes {
+            step_outputs.push(OutputSpec {
+                name: format!("grad:{pname}"),
+                role: "grad".to_string(),
+                layer: None,
+                param: Some(pname.clone()),
+                shape: shape.clone(),
+            });
+        }
+        for lg in geo.iter().filter(|lg| lg.kind != "bn") {
+            step_outputs.push(OutputSpec {
+                name: format!("a_tap:{}", lg.name),
+                role: "a_tap".to_string(),
+                layer: Some(lg.name.clone()),
+                param: None,
+                shape: lg.a_tap_shape.clone(),
+            });
+            step_outputs.push(OutputSpec {
+                name: format!("g_tap:{}", lg.name),
+                role: "g_tap".to_string(),
+                layer: Some(lg.name.clone()),
+                param: None,
+                shape: lg.g_tap_shape.clone(),
+            });
+        }
+        for lg in geo.iter().filter(|lg| lg.kind == "bn") {
+            for role in ["g_gamma", "g_beta"] {
+                step_outputs.push(OutputSpec {
+                    name: format!("{role}:{}", lg.name),
+                    role: role.to_string(),
+                    layer: Some(lg.name.clone()),
+                    param: None,
+                    shape: vec![b, lg.channels],
+                });
+            }
+        }
+        for lg in geo.iter().filter(|lg| lg.kind == "bn") {
+            for role in ["bn_mean", "bn_var"] {
+                step_outputs.push(OutputSpec {
+                    name: format!("{role}:{}", lg.name),
+                    role: role.to_string(),
+                    layer: Some(lg.name.clone()),
+                    param: None,
+                    shape: vec![lg.channels],
+                });
+            }
+        }
+
+        let (c, h, w) = cfg.in_shape;
+        manifests.insert(
+            mname.to_string(),
+            ModelManifest {
+                name: mname.to_string(),
+                input_shape: vec![b, c, h, w],
+                num_classes: cfg.num_classes,
+                batch: b,
+                params: pshapes
+                    .iter()
+                    .map(|(n, s)| ParamSpec { name: n.clone(), shape: s.clone() })
+                    .collect(),
+                init_file: String::new(),
+                kfac_layers,
+                bn_order,
+                step_outputs,
+                step_emp,
+                step_1mc,
+                eval_exe,
+            },
+        );
+        init_params.insert(mname.to_string(), cfg.init_params(seed));
+        models.insert(
+            mname.to_string(),
+            NativeModel {
+                param_names: pshapes.into_iter().map(|(n, _)| n).collect(),
+                geo,
+                cfg,
+            },
+        );
+    }
+
+    let executables = execs.keys().map(|k| (k.clone(), k.clone())).collect();
+    let manifest = Manifest {
+        dir: PathBuf::new(),
+        ns_iters: NS_ITERS,
+        models: manifests,
+        executables,
+        init_params,
+    };
+    let backend = NativeBackend {
+        models,
+        execs,
+        ns_iters: NS_ITERS,
+        executions: AtomicU64::new(0),
+        exec_nanos: AtomicU64::new(0),
+    };
+    Ok((manifest, backend))
+}
+
+impl NativeBackend {
+    fn model(&self, name: &str) -> Result<&NativeModel> {
+        self.models.get(name).with_context(|| format!("model '{name}' not registered"))
+    }
+
+    pub fn executions(&self) -> u64 {
+        self.executions.load(Ordering::Relaxed)
+    }
+}
+
+fn check_shape(t: &HostTensor, want: &[usize], what: &str) -> Result<()> {
+    anyhow::ensure!(t.shape == want, "{what}: shape {:?} != expected {:?}", t.shape, want);
+    Ok(())
+}
+
+impl Executor for NativeBackend {
+    fn platform(&self) -> String {
+        "native-cpu".to_string()
+    }
+
+    fn execute_seeded(
+        &self,
+        name: &str,
+        inputs: &[&HostTensor],
+        seed: Option<u32>,
+    ) -> Result<Vec<HostTensor>> {
+        let spec = self
+            .execs
+            .get(name)
+            .with_context(|| format!("executable '{name}' not in manifest"))?;
+        let t0 = Instant::now();
+        let out = match spec {
+            ExecSpec::Step { model, one_mc } => {
+                let m = self.model(model)?;
+                net::run_step(&m.cfg, &m.param_names, &m.geo, inputs, *one_mc, seed)
+                    .with_context(|| format!("native step {name}"))?
+            }
+            ExecSpec::Eval { model } => {
+                let m = self.model(model)?;
+                net::run_eval(&m.cfg, &m.param_names, &m.geo, inputs)
+                    .with_context(|| format!("native eval {name}"))?
+            }
+            ExecSpec::FactorConvA { cin, h, w, k, stride, pad, batch } => {
+                anyhow::ensure!(inputs.len() == 1, "{name}: expects the a_tap input");
+                check_shape(inputs[0], &[*batch, *cin, *h, *w], name)?;
+                let (patches, ho, wo) = kernels::im2col(inputs[0], *k, *stride, *pad);
+                let scale = 1.0 / (*batch * ho * wo) as f32;
+                vec![HostTensor::from_mat(&kernels::syrk(&patches, scale))]
+            }
+            ExecSpec::FactorSyrk { rows, cols, scale_rows } => {
+                anyhow::ensure!(inputs.len() == 1, "{name}: expects the tap input");
+                check_shape(inputs[0], &[*rows, *cols], name)?;
+                let scale = 1.0 / *scale_rows as f32;
+                vec![HostTensor::from_mat(&kernels::syrk(&inputs[0].as_mat(), scale))]
+            }
+            ExecSpec::BnInv => {
+                anyhow::ensure!(inputs.len() == 3, "{name}: expects (g_gamma, g_beta, damping)");
+                vec![kernels::bn_unit_fisher_inv(inputs[0], inputs[1], inputs[2].data[0])]
+            }
+            ExecSpec::BnFull => {
+                anyhow::ensure!(inputs.len() == 2, "{name}: expects (g_gamma, g_beta)");
+                vec![kernels::bn_full_fisher(inputs[0], inputs[1])]
+            }
+            ExecSpec::Invert { n } => {
+                anyhow::ensure!(inputs.len() == 2, "{name}: expects (matrix, damping)");
+                check_shape(inputs[0], &[*n, *n], name)?;
+                let damping = inputs[1].data[0];
+                let inv = kernels::ns_inverse(&inputs[0].as_mat(), damping, self.ns_iters);
+                vec![HostTensor::from_mat(&inv)]
+            }
+            ExecSpec::Precond { m, n } => {
+                anyhow::ensure!(inputs.len() == 3, "{name}: expects (g_inv, grad, a_inv)");
+                check_shape(inputs[0], &[*m, *m], name)?;
+                check_shape(inputs[1], &[*m, *n], name)?;
+                check_shape(inputs[2], &[*n, *n], name)?;
+                let u = kernels::precondition(
+                    &inputs[0].as_mat(),
+                    &inputs[1].as_mat(),
+                    &inputs[2].as_mat(),
+                );
+                vec![HostTensor::from_mat(&u)]
+            }
+        };
+        self.executions.fetch_add(1, Ordering::Relaxed);
+        self.exec_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        Ok(out)
+    }
+
+    fn ensure_compiled(&self, name: &str) -> Result<bool> {
+        anyhow::ensure!(self.execs.contains_key(name), "executable '{name}' not in manifest");
+        Ok(false)
+    }
+
+    fn exec_seconds(&self) -> f64 {
+        self.exec_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_mirrors_aot_contract() {
+        let (manifest, backend) = build(&["mlp", "convnet_small"], 0).unwrap();
+        let m = manifest.model("convnet_small").unwrap();
+        assert_eq!(m.kfac_layers.len(), 21);
+        assert_eq!(m.input_shape, vec![32, 3, 16, 16]);
+        // every referenced executable resolves in the backend
+        for l in &m.kfac_layers {
+            let names: Vec<&String> = if l.is_bn() {
+                vec![&l.bn_inv, &l.bn_full, &l.invert_full]
+            } else {
+                vec![&l.factor_a, &l.factor_g, &l.invert_a, &l.invert_g, &l.precond]
+            };
+            for n in names {
+                assert!(backend.execs.contains_key(n), "missing exec {n}");
+            }
+        }
+        assert!(backend.execs.contains_key(&m.step_emp));
+        assert!(backend.execs.contains_key(&m.step_1mc));
+        assert!(backend.execs.contains_key(&m.eval_exe));
+        // buckets are multiples of 16 and cover the dims
+        for l in m.kfac_layers.iter().filter(|l| !l.is_bn()) {
+            assert!(l.a_bucket >= l.a_dim && l.a_bucket % 16 == 0);
+            assert!(l.g_bucket >= l.g_dim && l.g_bucket % 16 == 0);
+        }
+        // step outputs: declared count = 2 + params + 2*(conv/fc) + 4*bn
+        let bn = m.kfac_layers.iter().filter(|l| l.is_bn()).count();
+        let convfc = m.kfac_layers.len() - bn;
+        assert_eq!(m.step_outputs.len(), 2 + m.params.len() + 2 * convfc + 4 * bn);
+    }
+
+    #[test]
+    fn init_params_present_for_each_model() {
+        let (manifest, _) = build(&["mlp"], 7).unwrap();
+        let m = manifest.model("mlp").unwrap();
+        let params = manifest.load_init_params(m).unwrap();
+        assert_eq!(params.len(), m.params.len());
+        for (p, spec) in params.iter().zip(m.params.iter()) {
+            assert_eq!(p.shape, spec.shape);
+        }
+    }
+
+    #[test]
+    fn unknown_executable_is_an_error() {
+        let (_, backend) = build(&["mlp"], 0).unwrap();
+        assert!(backend.execute("nope", &[]).is_err());
+        assert!(backend.ensure_compiled("nope").is_err());
+        assert!(backend.ensure_compiled("step_mlp_emp").is_ok());
+    }
+}

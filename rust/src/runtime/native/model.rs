@@ -1,0 +1,421 @@
+//! Native model configurations — rust port of `python/compile/config.py`.
+//!
+//! A model is a flat op program; residual blocks are expressed with
+//! Save/Add ops, and an Add may carry a projection (conv + bn) applied to
+//! the saved tensor (ResNet downsample shortcuts). The same geometry
+//! rules as the python L2 tracer apply, so the manifests the native
+//! backend synthesizes are shape-identical to the AOT ones.
+
+use crate::runtime::HostTensor;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ConvSpec {
+    pub name: String,
+    pub cin: usize,
+    pub cout: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl ConvSpec {
+    pub fn spatial_out(&self, h: usize, w: usize) -> (usize, usize) {
+        (
+            (h + 2 * self.pad - self.k) / self.stride + 1,
+            (w + 2 * self.pad - self.k) / self.stride + 1,
+        )
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BnSpec {
+    pub name: String,
+    pub c: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct FcSpec {
+    pub name: String,
+    pub din: usize,
+    pub dout: usize,
+}
+
+#[derive(Clone, Debug)]
+pub enum Op {
+    Conv(ConvSpec),
+    Bn(BnSpec),
+    Relu,
+    Save(String),
+    Add { from_save: String, proj: Option<Box<(ConvSpec, BnSpec)>> },
+    GlobalPool,
+    Flatten,
+    Fc(FcSpec),
+}
+
+#[derive(Clone, Debug)]
+pub struct NativeModelCfg {
+    pub name: String,
+    /// (C, H, W)
+    pub in_shape: (usize, usize, usize),
+    pub num_classes: usize,
+    /// per-worker batch
+    pub batch: usize,
+    pub ops: Vec<Op>,
+}
+
+/// Shape of the tensor flowing through the op program.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Flow {
+    Chw(usize, usize, usize),
+    Flat(usize),
+}
+
+/// Static per-K-FAC-layer geometry, in kfac order (op-program order, Add
+/// projections in place).
+#[derive(Clone, Debug)]
+pub struct LayerGeo {
+    pub name: String,
+    pub kind: &'static str, // "conv" | "fc" | "bn"
+    pub a_dim: usize,
+    pub g_dim: usize,
+    pub grad_shape: (usize, usize),
+    pub a_tap_shape: Vec<usize>,
+    pub g_tap_shape: Vec<usize>,
+    /// conv only: (cin, h, w, k, stride, pad) at this layer's input
+    pub conv_sig: Option<(usize, usize, usize, usize, usize, usize)>,
+    /// conv only: ho * wo
+    pub spatial: usize,
+    /// bn only
+    pub channels: usize,
+}
+
+impl NativeModelCfg {
+    /// Parameter (name, shape) pairs in the canonical order the manifest,
+    /// the step executable and the trainer all share.
+    pub fn param_shapes(&self) -> Vec<(String, Vec<usize>)> {
+        let mut out = Vec::new();
+        let push_conv = |out: &mut Vec<(String, Vec<usize>)>, c: &ConvSpec| {
+            out.push((format!("{}.w", c.name), vec![c.cout, c.cin, c.k, c.k]));
+        };
+        let push_bn = |out: &mut Vec<(String, Vec<usize>)>, b: &BnSpec| {
+            out.push((format!("{}.gamma", b.name), vec![b.c]));
+            out.push((format!("{}.beta", b.name), vec![b.c]));
+        };
+        for op in &self.ops {
+            match op {
+                Op::Conv(c) => push_conv(&mut out, c),
+                Op::Fc(f) => out.push((format!("{}.w", f.name), vec![f.dout, f.din])),
+                Op::Bn(b) => push_bn(&mut out, b),
+                Op::Add { proj: Some(p), .. } => {
+                    push_conv(&mut out, &p.0);
+                    push_bn(&mut out, &p.1);
+                }
+                _ => {}
+            }
+        }
+        out
+    }
+
+    /// Trace the op program symbolically (shapes only) and return the
+    /// K-FAC layer table. Panics on inconsistent configs — these are
+    /// compiled-in, so a bad one is a programming error.
+    pub fn layer_geometry(&self) -> Vec<LayerGeo> {
+        let b = self.batch;
+        let (c0, h0, w0) = self.in_shape;
+        let mut flow = Flow::Chw(c0, h0, w0);
+        let mut saved: Vec<(String, Flow)> = Vec::new();
+        let mut geo = Vec::new();
+
+        fn conv_geo(b: usize, cs: &ConvSpec, flow: Flow) -> (LayerGeo, Flow) {
+            let Flow::Chw(cin, h, w) = flow else {
+                panic!("{}: conv after flatten", cs.name)
+            };
+            assert_eq!(cin, cs.cin, "{}: cin mismatch", cs.name);
+            let (ho, wo) = cs.spatial_out(h, w);
+            let a_dim = cs.cin * cs.k * cs.k;
+            let geo = LayerGeo {
+                name: cs.name.clone(),
+                kind: "conv",
+                a_dim,
+                g_dim: cs.cout,
+                grad_shape: (cs.cout, a_dim),
+                a_tap_shape: vec![b, cin, h, w],
+                g_tap_shape: vec![b, cs.cout, ho, wo],
+                conv_sig: Some((cin, h, w, cs.k, cs.stride, cs.pad)),
+                spatial: ho * wo,
+                channels: 0,
+            };
+            (geo, Flow::Chw(cs.cout, ho, wo))
+        }
+
+        fn bn_geo(b: usize, bs: &BnSpec, flow: Flow) -> LayerGeo {
+            let Flow::Chw(c, _, _) = flow else {
+                panic!("{}: bn after flatten", bs.name)
+            };
+            assert_eq!(c, bs.c, "{}: channel mismatch", bs.name);
+            LayerGeo {
+                name: bs.name.clone(),
+                kind: "bn",
+                a_dim: 0,
+                g_dim: 0,
+                grad_shape: (0, 0),
+                a_tap_shape: Vec::new(),
+                g_tap_shape: vec![b, bs.c],
+                conv_sig: None,
+                spatial: 0,
+                channels: bs.c,
+            }
+        }
+
+        for op in &self.ops {
+            match op {
+                Op::Save(name) => saved.push((name.clone(), flow)),
+                Op::Conv(cs) => {
+                    let (g, f) = conv_geo(b, cs, flow);
+                    geo.push(g);
+                    flow = f;
+                }
+                Op::Bn(bs) => geo.push(bn_geo(b, bs, flow)),
+                Op::Relu => {}
+                Op::Add { from_save, proj } => {
+                    let sflow = saved
+                        .iter()
+                        .rev()
+                        .find(|(n, _)| n == from_save)
+                        .unwrap_or_else(|| panic!("add from unknown save '{from_save}'"))
+                        .1;
+                    match proj {
+                        Some(p) => {
+                            let (g, pf) = conv_geo(b, &p.0, sflow);
+                            geo.push(g);
+                            geo.push(bn_geo(b, &p.1, pf));
+                            assert_eq!(pf, flow, "projection shape mismatch at {from_save}");
+                        }
+                        None => assert_eq!(sflow, flow, "identity add mismatch at {from_save}"),
+                    }
+                }
+                Op::GlobalPool => {
+                    let Flow::Chw(c, _, _) = flow else { panic!("gap after flatten") };
+                    flow = Flow::Chw(c, 1, 1);
+                }
+                Op::Flatten => {
+                    let Flow::Chw(c, h, w) = flow else { panic!("double flatten") };
+                    flow = Flow::Flat(c * h * w);
+                }
+                Op::Fc(fs) => {
+                    let Flow::Flat(d) = flow else { panic!("{}: fc before flatten", fs.name) };
+                    assert_eq!(d, fs.din, "{}: din mismatch", fs.name);
+                    geo.push(LayerGeo {
+                        name: fs.name.clone(),
+                        kind: "fc",
+                        a_dim: fs.din,
+                        g_dim: fs.dout,
+                        grad_shape: (fs.dout, fs.din),
+                        a_tap_shape: vec![b, fs.din],
+                        g_tap_shape: vec![b, fs.dout],
+                        conv_sig: None,
+                        spatial: 0,
+                        channels: 0,
+                    });
+                    flow = Flow::Flat(fs.dout);
+                }
+            }
+        }
+        assert_eq!(flow, Flow::Flat(self.num_classes), "program must end at the logits");
+        geo
+    }
+
+    /// HeNormal initial parameters (BN gamma = 1, beta = 0), in param
+    /// order. Deterministic for a given seed.
+    pub fn init_params(&self, seed: u64) -> Vec<HostTensor> {
+        let mut rng = Rng::new(seed ^ 0x1417_BEEF);
+        self.param_shapes()
+            .into_iter()
+            .map(|(name, shape)| {
+                let n: usize = shape.iter().product();
+                if name.ends_with(".gamma") {
+                    HostTensor::new(shape, vec![1.0; n])
+                } else if name.ends_with(".beta") {
+                    HostTensor::zeros(shape)
+                } else {
+                    let fan_in: usize = shape[1..].iter().product();
+                    let std = (2.0 / fan_in as f64).sqrt();
+                    let data = (0..n).map(|_| (rng.normal() * std) as f32).collect();
+                    HostTensor::new(shape, data)
+                }
+            })
+            .collect()
+    }
+}
+
+fn conv(name: &str, cin: usize, cout: usize, k: usize, stride: usize, pad: usize) -> ConvSpec {
+    ConvSpec { name: name.to_string(), cin, cout, k, stride, pad }
+}
+
+/// ResNet basic block: conv-bn-relu-conv-bn + shortcut, relu.
+fn basic_block(ops: &mut Vec<Op>, prefix: &str, cin: usize, cout: usize, stride: usize) {
+    ops.push(Op::Save(format!("{prefix}.in")));
+    ops.push(Op::Conv(conv(&format!("{prefix}.conv1"), cin, cout, 3, stride, 1)));
+    ops.push(Op::Bn(BnSpec { name: format!("{prefix}.bn1"), c: cout }));
+    ops.push(Op::Relu);
+    ops.push(Op::Conv(conv(&format!("{prefix}.conv2"), cout, cout, 3, 1, 1)));
+    ops.push(Op::Bn(BnSpec { name: format!("{prefix}.bn2"), c: cout }));
+    let proj = if stride != 1 || cin != cout {
+        Some(Box::new((
+            conv(&format!("{prefix}.proj"), cin, cout, 1, stride, 0),
+            BnSpec { name: format!("{prefix}.projbn"), c: cout },
+        )))
+    } else {
+        None
+    };
+    ops.push(Op::Add { from_save: format!("{prefix}.in"), proj });
+    ops.push(Op::Relu);
+}
+
+/// ResNet-style ConvNet: stem + stages of basic blocks + GAP + FC.
+pub fn convnet(
+    name: &str,
+    width: usize,
+    img: usize,
+    blocks: &[usize],
+    num_classes: usize,
+    batch: usize,
+) -> NativeModelCfg {
+    let mut ops = vec![
+        Op::Conv(conv("stem.conv", 3, width, 3, 1, 1)),
+        Op::Bn(BnSpec { name: "stem.bn".to_string(), c: width }),
+        Op::Relu,
+    ];
+    let mut cin = width;
+    for (s, &nblocks) in blocks.iter().enumerate() {
+        let cout = width << s;
+        for b in 0..nblocks {
+            let stride = if s > 0 && b == 0 { 2 } else { 1 };
+            basic_block(&mut ops, &format!("s{s}b{b}"), cin, cout, stride);
+            cin = cout;
+        }
+    }
+    ops.push(Op::GlobalPool);
+    ops.push(Op::Flatten);
+    ops.push(Op::Fc(FcSpec { name: "fc".to_string(), din: cin, dout: num_classes }));
+    NativeModelCfg {
+        name: name.to_string(),
+        in_shape: (3, img, img),
+        num_classes,
+        batch,
+        ops,
+    }
+}
+
+/// The end-to-end example model (~60k params, 21 K-FAC layers).
+pub fn convnet_small() -> NativeModelCfg {
+    convnet("convnet_small", 16, 16, &[2, 2], 10, 32)
+}
+
+/// Fast config for tests.
+pub fn convnet_tiny() -> NativeModelCfg {
+    convnet("convnet_tiny", 8, 8, &[1, 1], 10, 8)
+}
+
+/// FC-only model for the quickstart (input flattened 3*img*img).
+pub fn mlp() -> NativeModelCfg {
+    let (img, dims) = (8usize, [192usize, 128, 64]);
+    let mut ops = vec![Op::Flatten];
+    let mut d = dims[0];
+    for (i, &h) in dims[1..].iter().enumerate() {
+        ops.push(Op::Fc(FcSpec { name: format!("fc{i}"), din: d, dout: h }));
+        ops.push(Op::Relu);
+        d = h;
+    }
+    ops.push(Op::Fc(FcSpec { name: "head".to_string(), din: d, dout: 10 }));
+    NativeModelCfg {
+        name: "mlp".to_string(),
+        in_shape: (3, img, img),
+        num_classes: 10,
+        batch: 32,
+        ops,
+    }
+}
+
+/// Look up a built-in model config by name.
+pub fn by_name(name: &str) -> Option<NativeModelCfg> {
+    match name {
+        "mlp" => Some(mlp()),
+        "convnet_small" => Some(convnet_small()),
+        "convnet_tiny" => Some(convnet_tiny()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn convnet_small_matches_aot_geometry() {
+        let cfg = convnet_small();
+        let geo = cfg.layer_geometry();
+        // 21 K-FAC layers, as the AOT manifest records for this model
+        assert_eq!(geo.len(), 21);
+        assert_eq!(geo[0].name, "stem.conv");
+        assert_eq!(geo[0].a_dim, 27);
+        assert_eq!(geo[0].g_dim, 16);
+        // s1b0 projection appears in place, right after s1b0.bn2
+        let names: Vec<&str> = geo.iter().map(|g| g.name.as_str()).collect();
+        let i = names.iter().position(|n| *n == "s1b0.proj").unwrap();
+        assert_eq!(names[i - 1], "s1b0.bn2");
+        assert_eq!(names[i + 1], "s1b0.projbn");
+        // final fc takes the GAP output
+        let fc = geo.last().unwrap();
+        assert_eq!(fc.kind, "fc");
+        assert_eq!(fc.a_dim, 32);
+        assert_eq!(fc.g_dim, 10);
+    }
+
+    #[test]
+    fn mlp_geometry_and_params() {
+        let cfg = mlp();
+        let geo = cfg.layer_geometry();
+        assert_eq!(geo.len(), 3);
+        assert_eq!(geo[0].a_dim, 192);
+        assert_eq!(geo[2].g_dim, 10);
+        let shapes = cfg.param_shapes();
+        assert_eq!(shapes.len(), 3);
+        assert_eq!(shapes[0].1, vec![128, 192]);
+        let total: usize = shapes.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+        assert_eq!(total, 128 * 192 + 64 * 128 + 10 * 64);
+    }
+
+    #[test]
+    fn init_params_deterministic_and_scaled() {
+        let cfg = convnet_tiny();
+        let p1 = cfg.init_params(0);
+        let p2 = cfg.init_params(0);
+        let p3 = cfg.init_params(1);
+        assert_eq!(p1.len(), cfg.param_shapes().len());
+        assert_eq!(p1[0].data, p2[0].data);
+        assert_ne!(p1[0].data, p3[0].data);
+        // stem conv: fan_in = 27, HeNormal std ~ sqrt(2/27)
+        let std = (p1[0].data.iter().map(|v| (*v as f64).powi(2)).sum::<f64>()
+            / p1[0].data.len() as f64)
+            .sqrt();
+        let want = (2.0f64 / 27.0).sqrt();
+        assert!((std - want).abs() < want * 0.5, "std={std} want~{want}");
+        // gammas are ones, betas zeros
+        let shapes = cfg.param_shapes();
+        let gi = shapes.iter().position(|(n, _)| n.ends_with(".gamma")).unwrap();
+        assert!(p1[gi].data.iter().all(|&v| v == 1.0));
+        assert!(p1[gi + 1].data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn tiny_has_projection_block() {
+        let cfg = convnet_tiny();
+        let geo = cfg.layer_geometry();
+        assert!(geo.iter().any(|g| g.name == "s1b0.proj"));
+        // stride-2 stage halves the spatial dims: s1 convs see 4x4
+        let c = geo.iter().find(|g| g.name == "s1b0.conv2").unwrap();
+        assert_eq!(c.g_tap_shape, vec![cfg.batch, 16, 4, 4]);
+    }
+}

@@ -125,9 +125,12 @@ impl HostTensor {
         }
         HostTensor::new(vec![n, n], out)
     }
+}
 
-    // -- xla interop -----------------------------------------------------
-
+/// PJRT interop: conversion to/from `xla::Literal` lives here so nothing
+/// else needs the xla crate's types.
+#[cfg(feature = "pjrt")]
+impl HostTensor {
     pub fn to_literal(&self) -> anyhow::Result<xla::Literal> {
         let lit = xla::Literal::vec1(&self.data);
         if self.shape.is_empty() {

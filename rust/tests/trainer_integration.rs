@@ -1,23 +1,15 @@
-//! End-to-end coordinator integration over real artifacts: SP-NGD
+//! End-to-end coordinator integration over the native backend: SP-NGD
 //! training decreases the loss, the stale scheduler skips refreshes, the
-//! SGD baseline works, and all practical-NGD modes run.
+//! SGD baseline works, and all practical-NGD modes run. Hermetic — no
+//! artifacts, no network (the `data/synth` corpus is generated
+//! in-process).
 
 use std::rc::Rc;
 
 use spngd::coordinator::{BnMode, Fisher, Optim, Trainer, TrainerCfg};
 use spngd::data::{AugmentCfg, SynthDataset};
 use spngd::optim::{HyperParams, Schedule};
-use spngd::runtime::{Engine, Manifest};
-
-fn artifacts_dir() -> Option<std::path::PathBuf> {
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("manifest.json").exists() {
-        Some(dir)
-    } else {
-        eprintln!("skipping: run `make artifacts` first");
-        None
-    }
-}
+use spngd::runtime::native;
 
 fn base_cfg(model: &str, optimizer: Optim) -> TrainerCfg {
     let hp = HyperParams {
@@ -49,20 +41,18 @@ fn base_cfg(model: &str, optimizer: Optim) -> TrainerCfg {
     }
 }
 
-fn make_trainer(cfg: TrainerCfg) -> Option<Trainer> {
-    let dir = artifacts_dir()?;
-    let manifest = Rc::new(Manifest::load(&dir).unwrap());
-    let engine = Rc::new(Engine::new(&manifest).unwrap());
-    // dataset dims must match the model's input shape
+fn make_trainer(cfg: TrainerCfg) -> Trainer {
+    let (manifest, engine) = native::build_default().unwrap();
+    let manifest = Rc::new(manifest);
     let m = manifest.model(&cfg.model).unwrap();
     let (c, h, w) = (m.input_shape[1], m.input_shape[2], m.input_shape[3]);
     let ds = SynthDataset::new(m.num_classes, c, h, w, 4000, 42);
-    Some(Trainer::new(manifest, engine, cfg, ds).unwrap())
+    Trainer::new(manifest, Rc::new(engine), cfg, ds).unwrap()
 }
 
 #[test]
 fn spngd_mlp_loss_decreases() {
-    let Some(mut tr) = make_trainer(base_cfg("mlp", Optim::SpNgd)) else { return };
+    let mut tr = make_trainer(base_cfg("mlp", Optim::SpNgd));
     let mut first = 0.0;
     let mut last = 0.0;
     for i in 0..25 {
@@ -77,8 +67,19 @@ fn spngd_mlp_loss_decreases() {
 }
 
 #[test]
+fn one_step_changes_weights() {
+    let mut tr = make_trainer(base_cfg("mlp", Optim::SpNgd));
+    let before: Vec<f32> = tr.params.iter().flat_map(|p| p.data.clone()).collect();
+    tr.step().unwrap();
+    let after: Vec<f32> = tr.params.iter().flat_map(|p| p.data.clone()).collect();
+    let delta: f32 = before.iter().zip(after.iter()).map(|(a, b)| (a - b).abs()).sum();
+    assert!(delta > 0.0, "a training step must move the weights");
+    assert!(after.iter().all(|v| v.is_finite()));
+}
+
+#[test]
 fn sgd_baseline_trains() {
-    let Some(mut tr) = make_trainer(base_cfg("mlp", Optim::Sgd)) else { return };
+    let mut tr = make_trainer(base_cfg("mlp", Optim::Sgd));
     let first = tr.step().unwrap().loss;
     let mut last = first;
     for _ in 0..24 {
@@ -98,7 +99,7 @@ fn stale_scheduler_reduces_refreshes() {
     // scheduler to start stretching intervals within the test budget.
     cfg.grad_accum = 4;
     cfg.stale_alpha = 0.3;
-    let Some(mut tr) = make_trainer(cfg) else { return };
+    let mut tr = make_trainer(cfg);
     let mut refreshed = 0usize;
     let mut total = 0usize;
     for _ in 0..30 {
@@ -120,11 +121,11 @@ fn convnet_all_modes_one_step() {
         (Fisher::Emp, BnMode::Full),
         (Fisher::OneMc, BnMode::Unit),
     ] {
-        let mut cfg = base_cfg("convnet_small", Optim::SpNgd);
+        let mut cfg = base_cfg("convnet_tiny", Optim::SpNgd);
         cfg.fisher = fisher;
         cfg.bn_mode = bn;
         cfg.workers = 2;
-        let Some(mut tr) = make_trainer(cfg) else { return };
+        let mut tr = make_trainer(cfg);
         let rec = tr.step().unwrap();
         assert!(rec.loss.is_finite(), "{fisher:?}/{bn:?}");
         assert!(rec.comm.stats_total() > 0);
@@ -133,11 +134,21 @@ fn convnet_all_modes_one_step() {
 }
 
 #[test]
+fn convnet_small_spngd_step_runs() {
+    let mut tr = make_trainer(base_cfg("convnet_small", Optim::SpNgd));
+    let rec = tr.step().unwrap();
+    assert!(rec.loss.is_finite());
+    assert_eq!(rec.refreshed, rec.total_stats);
+    let rec2 = tr.step().unwrap();
+    assert!(rec2.loss.is_finite());
+}
+
+#[test]
 fn grad_accumulation_mimics_larger_batch() {
     let mut cfg = base_cfg("mlp", Optim::SpNgd);
     cfg.grad_accum = 4;
-    let Some(mut tr) = make_trainer(cfg.clone()) else { return };
     assert_eq!(cfg.effective_batch(32), 2 * 4 * 32);
+    let mut tr = make_trainer(cfg);
     let rec = tr.step().unwrap();
     assert!(rec.loss.is_finite());
     let rec2 = tr.step().unwrap();
@@ -146,7 +157,7 @@ fn grad_accumulation_mimics_larger_batch() {
 
 #[test]
 fn evaluation_reports_sane_accuracy() {
-    let Some(mut tr) = make_trainer(base_cfg("mlp", Optim::SpNgd)) else { return };
+    let mut tr = make_trainer(base_cfg("mlp", Optim::SpNgd));
     let (l0, a0) = tr.evaluate(4).unwrap();
     assert!(l0 > 0.0 && (0.0..=1.0).contains(&a0));
     for _ in 0..30 {
@@ -159,7 +170,7 @@ fn evaluation_reports_sane_accuracy() {
 
 #[test]
 fn profile_has_all_components() {
-    let Some(mut tr) = make_trainer(base_cfg("mlp", Optim::SpNgd)) else { return };
+    let mut tr = make_trainer(base_cfg("mlp", Optim::SpNgd));
     for _ in 0..3 {
         tr.step().unwrap();
     }
@@ -177,21 +188,23 @@ fn fp16_comm_halves_statistics_bytes() {
     let cfg32 = base_cfg("mlp", Optim::SpNgd);
     let mut cfg16 = base_cfg("mlp", Optim::SpNgd);
     cfg16.fp16_comm = true;
-    let (Some(mut a), Some(mut b)) = (make_trainer(cfg32), make_trainer(cfg16)) else {
-        return;
-    };
+    let mut a = make_trainer(cfg32);
+    let mut b = make_trainer(cfg16);
     let ra = a.step().unwrap();
     let rb = b.step().unwrap();
-    assert!(rb.comm.stats_total() * 2 == ra.comm.stats_total(),
+    assert!(
+        rb.comm.stats_total() * 2 == ra.comm.stats_total(),
         "fp16 wire should halve stats bytes: {} vs {}",
-        rb.comm.stats_total(), ra.comm.stats_total());
+        rb.comm.stats_total(),
+        ra.comm.stats_total()
+    );
     // numerics unchanged (accounting-only in the simulation)
     assert_eq!(ra.loss, rb.loss);
 }
 
 #[test]
 fn layer_ownership_round_robin() {
-    let Some(tr) = make_trainer(base_cfg("convnet_small", Optim::SpNgd)) else { return };
+    let tr = make_trainer(base_cfg("convnet_small", Optim::SpNgd));
     let owners = tr.layer_owners();
     assert_eq!(owners.len(), 21);
     // round-robin across 2 workers
@@ -202,8 +215,8 @@ fn layer_ownership_round_robin() {
 
 #[test]
 fn deterministic_given_seed() {
-    let Some(mut t1) = make_trainer(base_cfg("mlp", Optim::SpNgd)) else { return };
-    let Some(mut t2) = make_trainer(base_cfg("mlp", Optim::SpNgd)) else { return };
+    let mut t1 = make_trainer(base_cfg("mlp", Optim::SpNgd));
+    let mut t2 = make_trainer(base_cfg("mlp", Optim::SpNgd));
     for _ in 0..3 {
         let r1 = t1.step().unwrap();
         let r2 = t2.step().unwrap();

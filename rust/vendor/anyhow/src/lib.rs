@@ -1,0 +1,183 @@
+//! Vendored stand-in for the `anyhow` crate.
+//!
+//! The build must work from a clean checkout with no network and no cargo
+//! registry cache (see ROADMAP: tier-1 verify), so the crate dependency
+//! closure has to be path-only. This module implements the subset of
+//! anyhow's API the workspace uses: [`Error`] as a context chain,
+//! [`Result`], the [`Context`] extension trait for `Result`/`Option`, and
+//! the `anyhow!` / `bail!` / `ensure!` macros. `{:#}` formatting prints
+//! the full `outer: ...: root` chain, as anyhow does.
+
+use std::fmt;
+
+/// An error made of a context chain: outermost context first, root cause
+/// last.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error { chain: vec![msg.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The innermost (root) message of the chain.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.chain.split_first() {
+            None => Ok(()),
+            Some((head, [])) => f.write_str(head),
+            Some((head, rest)) => {
+                writeln!(f, "{head}")?;
+                writeln!(f, "\nCaused by:")?;
+                for (i, cause) in rest.iter().enumerate() {
+                    writeln!(f, "    {i}: {cause}")?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+// NOTE: `Error` deliberately does not implement `std::error::Error`; that
+// keeps this blanket conversion coherent with the reflexive `From<Error>`
+// (the same trick real anyhow uses).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(cause) = src {
+            chain.push(cause.to_string());
+            src = cause.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>`: a `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` / `.with_context(...)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an error built from format arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading manifest")
+            .unwrap_err()
+            .context("loading runtime");
+        assert_eq!(format!("{e}"), "loading runtime");
+        assert_eq!(format!("{e:#}"), "loading runtime: reading manifest: missing");
+        assert_eq!(e.root_cause(), "missing");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("index lookup").unwrap_err();
+        assert_eq!(format!("{e:#}"), "index lookup");
+        assert_eq!(Some(3).context("present").unwrap(), 3);
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: std::result::Result<u32, std::io::Error> = Ok(1);
+        let v = ok.with_context(|| panic!("must not evaluate")).unwrap();
+        assert_eq!(v, 1);
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{:#}", f(12).unwrap_err()), "x too big: 12");
+        assert_eq!(format!("{:#}", f(5).unwrap_err()), "five is right out");
+        let e = anyhow!("custom {}", 7);
+        assert_eq!(format!("{e}"), "custom 7");
+    }
+}

@@ -1,0 +1,142 @@
+//! Stub of the `xla` crate surface `spngd`'s PJRT engine compiles against.
+//!
+//! The container image that runs the tier-1 verify has no network and no
+//! XLA toolchain, so the real PJRT bindings cannot be a registry
+//! dependency. This stub keeps `--features pjrt` *compiling* everywhere
+//! (CI builds it to prevent bitrot); every entry point that would touch
+//! PJRT returns an error at runtime. To actually execute HLO artifacts,
+//! point the `xla` path dependency in `rust/Cargo.toml` at a build of the
+//! real bindings — the API below matches the calls `runtime/engine.rs`
+//! and `runtime/tensor.rs` make.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Error type returned by every stub entry point.
+#[derive(Debug)]
+pub struct XlaError(String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn stub<T>(what: &str) -> Result<T> {
+    Err(XlaError(format!(
+        "{what}: this binary was built against the vendored `xla` stub; \
+         point the `xla` path dependency at real PJRT bindings to run HLO artifacts"
+    )))
+}
+
+/// PJRT client handle (stub).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        stub("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "pjrt-stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        stub("PjRtClient::compile")
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        stub("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation wrapper (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Compiled executable (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// Device buffer handle (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        stub("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Element types the engine can decode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    U32,
+    F32,
+    F64,
+}
+
+/// Array shape view (stub).
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Host literal (stub).
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn scalar(_value: u32) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        stub("Literal::reshape")
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        stub("Literal::to_tuple")
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        stub("Literal::array_shape")
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        stub("Literal::ty")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        stub("Literal::to_vec")
+    }
+}
