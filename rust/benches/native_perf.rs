@@ -1,0 +1,157 @@
+//! Native-backend perf tracker: times the parallel/blocked kernels and
+//! the end-to-end native step against their single-threaded naive
+//! references and writes machine-readable `BENCH_native.json`, so the
+//! perf trajectory is tracked from PR to PR (CI uploads it as an
+//! artifact).
+//!
+//! ```text
+//! cargo bench --bench native_perf                    # full run
+//! cargo bench --bench native_perf -- --quick         # CI smoke: 1 warmup / 1 iter
+//! SPNGD_THREADS=4 cargo bench --bench native_perf    # pin the pool size
+//! ```
+//!
+//! JSON schema (`spngd-bench-native/1`): `{schema, model, threads, quick,
+//! step: {name, ns, naive_ns, speedup}, kernels: [{name, ns, naive_ns,
+//! speedup}, ...]}` — `ns` is the median per-iteration wall time of the
+//! parallel kernel, `naive_ns` the same measurement with
+//! `linalg::set_reference_kernels(true)` routing every product to the
+//! pre-refactor naive loops, `speedup` their ratio.
+
+use spngd::harness::{self, bench};
+use spngd::linalg::{self, Mat};
+use spngd::runtime::native::kernels;
+use spngd::runtime::{Executor, HostTensor};
+use spngd::util::cli::Args;
+use spngd::util::json::{obj, Json};
+use spngd::util::pool;
+use spngd::util::rng::Rng;
+
+struct Entry {
+    name: String,
+    ns: f64,
+    naive_ns: f64,
+}
+
+impl Entry {
+    fn speedup(&self) -> f64 {
+        self.naive_ns / self.ns.max(1e-9)
+    }
+
+    fn json(&self) -> Json {
+        obj(vec![
+            ("name", Json::from(self.name.clone())),
+            ("ns", Json::from(self.ns)),
+            ("naive_ns", Json::from(self.naive_ns)),
+            ("speedup", Json::from(self.speedup())),
+        ])
+    }
+}
+
+/// Time `f` twice — on the parallel/blocked kernels, then with the naive
+/// reference routing — and record both medians.
+fn timed<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Entry {
+    let fast = bench(name, warmup, iters, &mut f);
+    linalg::set_reference_kernels(true);
+    let naive = bench(&format!("{name} (naive)"), warmup, iters, &mut f);
+    linalg::set_reference_kernels(false);
+    Entry { name: name.to_string(), ns: fast.median() * 1e9, naive_ns: naive.median() * 1e9 }
+}
+
+fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+    Mat::from_vec(r, c, (0..r * c).map(|_| rng.normal() as f32).collect())
+}
+
+fn main() {
+    let parsed = Args::new("native_perf", "native-backend bench runner (BENCH_native.json)")
+        .opt("model", "convnet_small", "model for the end-to-end step")
+        .opt("out", "BENCH_native.json", "output path for the JSON report")
+        .flag("quick", "smoke mode: 1 warmup / 1 timed iteration")
+        .flag("bench", "ignored (cargo bench passes it)")
+        .parse_env(1)
+        .unwrap_or_else(|u| {
+            eprintln!("{u}");
+            std::process::exit(2);
+        });
+    let quick = parsed.get_bool("quick");
+    let (wu, it) = if quick { (1, 1) } else { (2, 8) };
+    let threads = pool::global().size();
+    println!("native_perf: {threads} threads (set SPNGD_THREADS to override), quick={quick}");
+
+    let (manifest, engine) = harness::load_runtime_native().expect("native runtime");
+    let model_name = parsed.get("model").to_string();
+    let model = manifest.model(&model_name).expect("model in manifest");
+    let params = manifest.load_init_params(model).expect("init params");
+    let mut rng = Rng::new(1);
+    let n_in: usize = model.input_shape.iter().product();
+    let x = HostTensor::new(model.input_shape.clone(), (0..n_in).map(|_| rng.f32()).collect());
+    let mut t = HostTensor::zeros(vec![model.batch, model.num_classes]);
+    for b in 0..model.batch {
+        t.data[b * model.num_classes] = 1.0;
+    }
+    let mut inputs: Vec<&HostTensor> = params.iter().collect();
+    inputs.push(&x);
+    inputs.push(&t);
+
+    // ---- end-to-end: the full native step executable (fwd/bwd + taps)
+    let step = timed(&format!("step_emp {model_name}"), wu, it, || {
+        engine.execute(&model.step_emp, &inputs).unwrap();
+    });
+
+    // ---- hot kernels on the model's stem-conv geometry
+    let [ib, ic, ih, iw] = [
+        model.input_shape[0],
+        model.input_shape[1],
+        model.input_shape[2],
+        model.input_shape[3],
+    ];
+    let mut entries: Vec<Entry> = Vec::new();
+    let (patches, ho, wo) = kernels::im2col(&x, 3, 1, 1);
+    entries.push(timed("im2col k3 s1 p1", wu, it, || {
+        let _ = kernels::im2col(&x, 3, 1, 1);
+    }));
+    let dpatches = rand_mat(&mut rng, patches.rows, patches.cols);
+    let xshape = [ib, ic, ih, iw];
+    entries.push(timed("col2im k3 s1 p1", wu, it, || {
+        let _ = kernels::col2im(&dpatches, &xshape, 3, 1, 1, ho, wo);
+    }));
+    entries.push(timed(&format!("syrk {}x{}", patches.rows, patches.cols), wu, it, || {
+        let _ = kernels::syrk(&patches, 0.01);
+    }));
+    let gtap = rand_mat(&mut rng, patches.rows, 64);
+    entries.push(timed(&format!("syrk {}x64", gtap.rows), wu, it, || {
+        let _ = kernels::syrk(&gtap, 0.01);
+    }));
+    let wmat = rand_mat(&mut rng, patches.cols, 64);
+    entries.push(timed(&format!("matmul {}x{}x64", patches.rows, patches.cols), wu, it, || {
+        let _ = patches.matmul(&wmat);
+    }));
+    let wt = rand_mat(&mut rng, 64, patches.cols);
+    let mm_t_name = format!("matmul_transposed {}x{}x64", patches.rows, patches.cols);
+    entries.push(timed(&mm_t_name, wu, it, || {
+        let _ = patches.matmul_transposed(&wt);
+    }));
+    let nmax = manifest
+        .executables
+        .keys()
+        .filter_map(|k| k.strip_prefix("invert_").and_then(|s| s.parse::<usize>().ok()))
+        .max()
+        .unwrap_or(64);
+    let bm = rand_mat(&mut rng, nmax, nmax);
+    let mut spd = bm.transpose().matmul(&bm).scale(1.0 / nmax as f32);
+    spd.symmetrize();
+    entries.push(timed(&format!("ns_inverse {nmax} (20 iters)"), wu, it, || {
+        let _ = kernels::ns_inverse(&spd, 0.05, 20);
+    }));
+
+    let report = obj(vec![
+        ("schema", Json::from("spngd-bench-native/1")),
+        ("model", Json::from(model_name.clone())),
+        ("threads", Json::from(threads)),
+        ("quick", Json::from(quick)),
+        ("step", step.json()),
+        ("kernels", Json::Arr(entries.iter().map(Entry::json).collect())),
+    ]);
+    let out_path = parsed.get("out");
+    std::fs::write(out_path, report.to_string_pretty()).expect("write bench report");
+    println!("\nwrote {out_path}: step {:.2}x vs naive at {threads} threads", step.speedup());
+}

@@ -1,4 +1,24 @@
-//! Row-major dense f32 matrix.
+//! Row-major dense f32 matrix with blocked, pool-parallel products.
+//!
+//! The product kernels split the output into row bands scheduled on
+//! [`crate::util::pool::global`] (or an explicit pool via the `_with`
+//! variants) and walk the shared operand in k-blocks with a two-row
+//! register tile, so every worker streams cache-resident slices. The
+//! pre-refactor single-threaded loop survives as [`Mat::matmul_ref`] —
+//! the differential-testing oracle and the bench baseline. Unlike the old
+//! loop there is no `a == 0.0` skip: the branch cost more than the
+//! multiplies on real factor data and silently dropped NaN/Inf
+//! propagation from the other operand.
+
+use crate::util::pool::{self, Pool};
+
+/// k-block edge for the blocked matmul: one block of the B operand's rows
+/// (KC·n floats) stays L1/L2-resident while a row band streams past it.
+const KC: usize = 256;
+
+/// Product work (m·k·n) below which parallel dispatch costs more than it
+/// saves and the kernels run on the calling thread.
+const PAR_FLOP_CUTOFF: usize = 1 << 15;
 
 /// Row-major dense matrix of f32 (the training-path element type).
 #[derive(Clone, Debug, PartialEq)]
@@ -40,34 +60,118 @@ impl Mat {
         self.rows == self.cols
     }
 
+    /// Reshape to (rows, cols) and zero-fill, reusing the allocation when
+    /// its capacity suffices — the reset step of every `_into` kernel.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
     pub fn transpose(&self) -> Mat {
         let mut t = Mat::zeros(self.cols, self.rows);
-        for i in 0..self.rows {
-            for j in 0..self.cols {
-                t.data[j * self.rows + i] = self.data[i * self.cols + j];
-            }
-        }
+        self.transpose_into(&mut t);
         t
     }
 
-    /// self @ other — blocked ikj matmul (cache-friendly for our sizes).
+    /// Transpose into `out` (reshaped as needed).
+    pub fn transpose_into(&self, out: &mut Mat) {
+        out.reset(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+    }
+
+    /// self @ other — blocked parallel matmul on the global pool.
     pub fn matmul(&self, other: &Mat) -> Mat {
+        self.matmul_with(pool::global(), other)
+    }
+
+    /// self @ other on an explicit pool.
+    pub fn matmul_with(&self, pool: &Pool, other: &Mat) -> Mat {
+        let mut out = Mat::zeros(0, 0);
+        self.matmul_into_with(pool, other, &mut out);
+        out
+    }
+
+    /// self @ other into `out` (global pool).
+    pub fn matmul_into(&self, other: &Mat, out: &mut Mat) {
+        self.matmul_into_with(pool::global(), other, out);
+    }
+
+    /// self @ other into `out` on an explicit pool. `out` is reshaped to
+    /// (self.rows, other.cols); its allocation is reused when possible.
+    pub fn matmul_into_with(&self, pool: &Pool, other: &Mat, out: &mut Mat) {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        out.reset(m, n);
+        if super::reference_kernels() {
+            mm_rows_ref(&self.data, &other.data, &mut out.data, 0, m, k, n);
+            return;
+        }
+        if m * k * n < PAR_FLOP_CUTOFF || pool.size() <= 1 {
+            mm_rows(&self.data, &other.data, &mut out.data, 0, m, k, n);
+            return;
+        }
+        let grain = row_grain(pool, m, k * n);
+        let (a, b) = (&self.data, &other.data);
+        pool.parallel_for_mut(&mut out.data, grain * n, |ci, chunk| {
+            let i0 = ci * grain;
+            mm_rows(a, b, chunk, i0, (i0 + grain).min(m), k, n);
+        });
+    }
+
+    /// self @ otherᵀ — the fused form of `a.matmul(&b.transpose())` the
+    /// conv/fc forward passes use (no transposed copy is materialized).
+    pub fn matmul_transposed(&self, other: &Mat) -> Mat {
+        self.matmul_transposed_with(pool::global(), other)
+    }
+
+    /// self @ otherᵀ on an explicit pool.
+    pub fn matmul_transposed_with(&self, pool: &Pool, other: &Mat) -> Mat {
+        let mut out = Mat::zeros(0, 0);
+        self.matmul_transposed_into_with(pool, other, &mut out);
+        out
+    }
+
+    /// self @ otherᵀ into `out` (global pool).
+    pub fn matmul_transposed_into(&self, other: &Mat, out: &mut Mat) {
+        self.matmul_transposed_into_with(pool::global(), other, out);
+    }
+
+    /// self @ otherᵀ into `out` on an explicit pool. `out` is reshaped to
+    /// (self.rows, other.rows).
+    pub fn matmul_transposed_into_with(&self, pool: &Pool, other: &Mat, out: &mut Mat) {
+        assert_eq!(self.cols, other.cols, "matmul_transposed shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.rows);
+        out.reset(m, n);
+        if super::reference_kernels() {
+            let bt = other.transpose();
+            mm_rows_ref(&self.data, &bt.data, &mut out.data, 0, m, k, n);
+            return;
+        }
+        if m * k * n < PAR_FLOP_CUTOFF || pool.size() <= 1 {
+            mm_tb_rows(&self.data, &other.data, &mut out.data, 0, m, k, n);
+            return;
+        }
+        let grain = row_grain(pool, m, k * n);
+        let (a, b) = (&self.data, &other.data);
+        pool.parallel_for_mut(&mut out.data, grain * n, |ci, chunk| {
+            let i0 = ci * grain;
+            mm_tb_rows(a, b, chunk, i0, (i0 + grain).min(m), k, n);
+        });
+    }
+
+    /// self @ other — the pre-refactor single-threaded ikj loop, kept as
+    /// the oracle for differential tests and the naive bench baseline.
+    pub fn matmul_ref(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = Mat::zeros(m, n);
-        for i in 0..m {
-            let orow = &mut out.data[i * n..(i + 1) * n];
-            for p in 0..k {
-                let a = self.data[i * k + p];
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = &other.data[p * n..(p + 1) * n];
-                for j in 0..n {
-                    orow[j] += a * brow[j];
-                }
-            }
-        }
+        mm_rows_ref(&self.data, &other.data, &mut out.data, 0, m, k, n);
         out
     }
 
@@ -149,9 +253,135 @@ impl Mat {
     }
 }
 
+/// Rows per parallel chunk: enough chunks for load balance (≈4 per
+/// worker), but at least `PAR_FLOP_CUTOFF` work per chunk so small
+/// products don't shred into dispatch overhead.
+fn row_grain(pool: &Pool, m: usize, flops_per_row: usize) -> usize {
+    let balance = m.div_ceil(pool.size() * 4);
+    let floor = PAR_FLOP_CUTOFF.div_ceil(flops_per_row.max(1));
+    balance.max(floor).max(1)
+}
+
+/// The pre-refactor naive ikj loop over a row range (without the
+/// `a == 0.0` skip, which broke NaN/Inf propagation).
+fn mm_rows_ref(a: &[f32], b: &[f32], out: &mut [f32], i0: usize, i1: usize, k: usize, n: usize) {
+    for i in i0..i1 {
+        let orow = &mut out[(i - i0) * n..(i - i0 + 1) * n];
+        for p in 0..k {
+            let av = a[i * k + p];
+            let brow = &b[p * n..(p + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// Blocked ikj matmul over the row band [i0, i1): k is walked in
+/// KC-blocks and rows in register-tiled pairs, so each pass streams one
+/// cache-resident block of B past two accumulator rows. `out` holds only
+/// the band (row i lands at out[(i - i0) * n..]). Accumulation order per
+/// output element is p-ascending — identical to the naive reference, so
+/// results match it bit-for-bit.
+fn mm_rows(a: &[f32], b: &[f32], out: &mut [f32], i0: usize, i1: usize, k: usize, n: usize) {
+    let mut p0 = 0;
+    while p0 < k {
+        let p1 = (p0 + KC).min(k);
+        let mut i = i0;
+        while i + 2 <= i1 {
+            let (lo, hi) = out[(i - i0) * n..(i - i0 + 2) * n].split_at_mut(n);
+            mm_tile2(&a[i * k..], &a[(i + 1) * k..], b, p0, p1, n, lo, hi);
+            i += 2;
+        }
+        if i < i1 {
+            let orow = &mut out[(i - i0) * n..(i - i0 + 1) * n];
+            mm_tile1(&a[i * k..], b, p0, p1, n, orow);
+        }
+        p0 = p1;
+    }
+}
+
+/// Two-row register tile: both accumulator rows reuse every loaded B row.
+#[inline]
+fn mm_tile2(
+    a0: &[f32],
+    a1: &[f32],
+    b: &[f32],
+    p0: usize,
+    p1: usize,
+    n: usize,
+    o0: &mut [f32],
+    o1: &mut [f32],
+) {
+    let o0 = &mut o0[..n];
+    let o1 = &mut o1[..n];
+    for p in p0..p1 {
+        let (x0, x1) = (a0[p], a1[p]);
+        let brow = &b[p * n..p * n + n];
+        for j in 0..n {
+            o0[j] += x0 * brow[j];
+            o1[j] += x1 * brow[j];
+        }
+    }
+}
+
+/// Single-row tail of [`mm_tile2`].
+#[inline]
+fn mm_tile1(a0: &[f32], b: &[f32], p0: usize, p1: usize, n: usize, o0: &mut [f32]) {
+    let o0 = &mut o0[..n];
+    for p in p0..p1 {
+        let x0 = a0[p];
+        let brow = &b[p * n..p * n + n];
+        for j in 0..n {
+            o0[j] += x0 * brow[j];
+        }
+    }
+}
+
+/// a @ bᵀ over the row band [i0, i1): each output element is a row·row
+/// dot product, computed with an 8-lane partial-sum tile so the reduction
+/// vectorizes. b is (n, k) row-major.
+fn mm_tb_rows(a: &[f32], b: &[f32], out: &mut [f32], i0: usize, i1: usize, k: usize, n: usize) {
+    for i in i0..i1 {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[(i - i0) * n..(i - i0 + 1) * n];
+        for j in 0..n {
+            orow[j] = dot8(arow, &b[j * k..(j + 1) * k]);
+        }
+    }
+}
+
+/// Dot product with 8 independent accumulator lanes (vectorizable without
+/// reassociating the whole sum).
+#[inline]
+fn dot8(a: &[f32], b: &[f32]) -> f32 {
+    let k = a.len();
+    let lanes = k / 8 * 8;
+    let mut acc = [0.0f32; 8];
+    let mut p = 0;
+    while p < lanes {
+        let av = &a[p..p + 8];
+        let bv = &b[p..p + 8];
+        for l in 0..8 {
+            acc[l] += av[l] * bv[l];
+        }
+        p += 8;
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]) + (acc[4] + acc[5]) + (acc[6] + acc[7]);
+    for t in lanes..k {
+        s += a[t] * b[t];
+    }
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        Mat::from_vec(r, c, (0..r * c).map(|_| rng.normal() as f32).collect())
+    }
 
     #[test]
     fn matmul_identity() {
@@ -166,6 +396,56 @@ mod tests {
         let b = Mat::from_vec(2, 2, vec![5., 6., 7., 8.]);
         let c = a.matmul(&b);
         assert_eq!(c.data, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn matmul_matches_ref_on_odd_shapes() {
+        let mut rng = Rng::new(41);
+        for &(m, k, n) in &[(1, 1, 1), (1, 9, 5), (5, 9, 1), (17, 31, 13), (33, 257, 29)] {
+            let a = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, k, n);
+            let got = a.matmul(&b);
+            let want = a.matmul_ref(&b);
+            assert!(got.max_abs_diff(&want) < 1e-5, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn matmul_propagates_nan() {
+        // the old `a == 0.0` skip silently dropped NaN from B
+        let a = Mat::from_vec(1, 2, vec![0.0, 0.0]);
+        let b = Mat::from_vec(2, 1, vec![f32::NAN, 1.0]);
+        assert!(a.matmul(&b).data[0].is_nan());
+        assert!(a.matmul_ref(&b).data[0].is_nan());
+    }
+
+    #[test]
+    fn matmul_transposed_matches_explicit_transpose() {
+        let mut rng = Rng::new(42);
+        for &(m, k, n) in &[(1, 3, 1), (4, 27, 7), (19, 64, 33), (3, 100, 2)] {
+            let a = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, n, k);
+            let got = a.matmul_transposed(&b);
+            let want = a.matmul_ref(&b.transpose());
+            assert!(got.max_abs_diff(&want) < 1e-4, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn matmul_into_reuses_buffer() {
+        let mut rng = Rng::new(43);
+        let a = rand_mat(&mut rng, 8, 6);
+        let b = rand_mat(&mut rng, 6, 10);
+        let mut out = Mat::zeros(8, 10);
+        let cap = out.data.capacity();
+        a.matmul_into(&b, &mut out);
+        assert_eq!(out.data.capacity(), cap, "no realloc for same-size out");
+        assert!(out.max_abs_diff(&a.matmul_ref(&b)) < 1e-5);
+        // stale contents must not leak into a smaller product
+        let c = rand_mat(&mut rng, 3, 6);
+        c.matmul_into(&b, &mut out);
+        assert_eq!((out.rows, out.cols), (3, 10));
+        assert!(out.max_abs_diff(&c.matmul_ref(&b)) < 1e-5);
     }
 
     #[test]

@@ -4,10 +4,35 @@
 //! bookkeeping (damping, π split, staleness norms), the closed-form 2×2
 //! BatchNorm inverse, symmetry-aware packing for communication, and
 //! reference inverses to cross-check the HLO Newton-Schulz artifacts.
+//!
+//! The product kernels are blocked and pool-parallel (see [`mat`]); the
+//! single-threaded pre-refactor loops survive as `*_ref` oracles. The
+//! [`set_reference_kernels`] switch routes every blocked/parallel kernel
+//! back to its oracle — bench-only, for measuring the naive baseline the
+//! speedups in `BENCH_native.json` are computed against.
 
 pub mod mat;
 pub mod packed;
+pub mod scratch;
 pub mod solve;
+
+use std::sync::atomic::{AtomicBool, Ordering};
 
 pub use mat::Mat;
 pub use packed::{pack_upper, packed_len, unpack_upper};
+pub use scratch::Scratch;
+
+static REFERENCE_KERNELS: AtomicBool = AtomicBool::new(false);
+
+/// Route the blocked/parallel kernels (matmul, SYRK, im2col/col2im,
+/// Newton-Schulz) to their naive `*_ref` implementations. Bench-only:
+/// flip it around a timed section to measure the naive baseline; never
+/// leave it on in concurrent code.
+pub fn set_reference_kernels(on: bool) {
+    REFERENCE_KERNELS.store(on, Ordering::Relaxed);
+}
+
+/// Whether [`set_reference_kernels`] routing is active.
+pub fn reference_kernels() -> bool {
+    REFERENCE_KERNELS.load(Ordering::Relaxed)
+}

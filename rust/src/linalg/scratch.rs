@@ -1,0 +1,157 @@
+//! Scratch-buffer arena: recycles the f32 buffers of the per-step hot
+//! loop (matmul outputs, im2col patch matrices, backward flow tensors) so
+//! the native backend stops allocating fresh `Vec`s per layer per step.
+//!
+//! The arena is a plain free list of `Vec<f32>` allocations. `take`
+//! returns a zeroed buffer of the requested length, reusing the
+//! smallest free allocation whose capacity suffices; `recycle` returns a
+//! buffer to the list. Buffers that are never recycled (e.g. ones moved
+//! into step outputs) simply drop — the arena is an optimization, not an
+//! ownership regime.
+
+use super::Mat;
+
+/// Upper bound on retained free buffers — a safety valve so a pathological
+/// caller can't grow the list without bound (the per-step hot loop keeps
+/// it far below this).
+const MAX_FREE: usize = 256;
+
+#[derive(Debug, Default)]
+pub struct Scratch {
+    free: Vec<Vec<f32>>,
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Scratch { free: Vec::new() }
+    }
+
+    /// Number of buffers currently in the free list.
+    pub fn pooled(&self) -> usize {
+        self.free.len()
+    }
+
+    /// An empty buffer with capacity ≥ `cap`, reusing the smallest free
+    /// allocation that is large enough.
+    fn take_raw(&mut self, cap: usize) -> Vec<f32> {
+        let mut best: Option<usize> = None;
+        for (i, b) in self.free.iter().enumerate() {
+            if b.capacity() >= cap && best.is_none_or(|j| b.capacity() < self.free[j].capacity()) {
+                best = Some(i);
+            }
+        }
+        match best {
+            Some(i) => {
+                let mut v = self.free.swap_remove(i);
+                v.clear();
+                v
+            }
+            None => Vec::with_capacity(cap),
+        }
+    }
+
+    /// A zeroed buffer of exactly `len` elements, reusing a recycled
+    /// allocation when one is large enough.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.take_raw(len);
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// A buffer holding a copy of `src` (no intermediate zero-fill).
+    pub fn take_from(&mut self, src: &[f32]) -> Vec<f32> {
+        let mut v = self.take_raw(src.len());
+        v.extend_from_slice(src);
+        v
+    }
+
+    /// A zeroed (rows, cols) matrix backed by a recycled buffer.
+    pub fn mat(&mut self, rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: self.take(rows * cols) }
+    }
+
+    /// An empty matrix whose buffer reserves rows·cols elements — for
+    /// `_into` kernels, which set the real shape themselves via
+    /// [`Mat::reset`] (skips the redundant pre-zeroing of [`Self::mat`]).
+    pub fn mat_spare(&mut self, rows: usize, cols: usize) -> Mat {
+        Mat { rows: 0, cols: 0, data: self.take_raw(rows * cols) }
+    }
+
+    /// A (rows, cols) matrix holding a copy of `src`.
+    pub fn mat_from(&mut self, rows: usize, cols: usize, src: &[f32]) -> Mat {
+        assert_eq!(rows * cols, src.len(), "mat_from shape mismatch");
+        Mat { rows, cols, data: self.take_from(src) }
+    }
+
+    /// Return a buffer to the free list.
+    pub fn recycle(&mut self, v: Vec<f32>) {
+        if v.capacity() > 0 && self.free.len() < MAX_FREE {
+            self.free.push(v);
+        }
+    }
+
+    /// Return a matrix's backing buffer to the free list.
+    pub fn recycle_mat(&mut self, m: Mat) {
+        self.recycle(m.data);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zeroed_after_recycle() {
+        let mut s = Scratch::new();
+        let mut v = s.take(8);
+        v.iter_mut().for_each(|x| *x = 7.0);
+        s.recycle(v);
+        let w = s.take(4);
+        assert_eq!(w, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn reuses_allocation() {
+        let mut s = Scratch::new();
+        let v = s.take(100);
+        let p = v.as_ptr();
+        s.recycle(v);
+        let w = s.take(50);
+        assert_eq!(w.as_ptr(), p, "smaller request reuses the freed buffer");
+        assert_eq!(s.pooled(), 0);
+    }
+
+    #[test]
+    fn picks_smallest_sufficient_buffer() {
+        let mut s = Scratch::new();
+        let big = s.take(1000);
+        let small = s.take(10);
+        let (pb, ps) = (big.as_ptr(), small.as_ptr());
+        s.recycle(big);
+        s.recycle(small);
+        assert_eq!(s.take(5).as_ptr(), ps, "best fit wins");
+        assert_eq!(s.take(500).as_ptr(), pb);
+    }
+
+    #[test]
+    fn mat_spare_reserves_without_zeroing() {
+        let mut s = Scratch::new();
+        let v = s.take(64);
+        let p = v.as_ptr();
+        s.recycle(v);
+        let m = s.mat_spare(8, 8);
+        assert_eq!((m.rows, m.cols), (0, 0));
+        assert!(m.data.is_empty() && m.data.capacity() >= 64);
+        assert_eq!(m.data.as_ptr(), p, "reuses the recycled allocation");
+    }
+
+    #[test]
+    fn mat_roundtrip() {
+        let mut s = Scratch::new();
+        let m = s.mat_from(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.at(1, 2), 6.0);
+        s.recycle_mat(m);
+        let z = s.mat(3, 2);
+        assert_eq!(z.data, vec![0.0; 6]);
+    }
+}

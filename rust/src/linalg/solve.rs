@@ -138,17 +138,24 @@ pub fn spectral_norm_est(a: &Mat, iters: usize) -> f32 {
 ///
 /// X₀ = (1/σ) I with σ ≥ λ_max(M) guarantees convergence; each step is
 /// X ← X (2I − M X) — two matmuls, exactly the MXU-friendly scheme of the
-/// L1 `inverse.py` kernel. Returns after `iters` steps.
+/// L1 `inverse.py` kernel. Returns after `iters` steps. The two inner
+/// products run on the global pool and ping-pong between two reused
+/// buffers instead of allocating per iteration.
 pub fn newton_schulz_inverse(m: &Mat, iters: usize) -> Mat {
     assert!(m.is_square());
     let n = m.rows;
     let sigma = spectral_norm_est(m, 16).max(f32::MIN_POSITIVE);
     let mut x = Mat::eye(n).scale(1.0 / sigma);
-    let two_i = Mat::eye(n).scale(2.0);
+    let mut t = Mat::zeros(n, n);
+    let mut x2 = Mat::zeros(n, n);
     for _ in 0..iters {
-        let mx = m.matmul(&x);
-        let t = two_i.axpy(-1.0, &mx); // 2I - MX
-        x = x.matmul(&t);
+        m.matmul_into(&x, &mut t);
+        for v in t.data.iter_mut() {
+            *v = -*v;
+        }
+        t.add_diag(2.0); // t = 2I - MX
+        x.matmul_into(&t, &mut x2);
+        std::mem::swap(&mut x, &mut x2);
     }
     x
 }

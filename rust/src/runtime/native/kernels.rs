@@ -1,49 +1,202 @@
 //! Native CPU kernels — the rust counterparts of the L1 Pallas kernels,
 //! numerically matched to the oracles in `python/compile/kernels/ref.py`
 //! (see `tests/native_golden.rs` for golden-value checks).
+//!
+//! The hot kernels are parallel: im2col/col2im fan out over the batch
+//! axis, SYRK over row bands with per-thread f64 accumulators, and the
+//! Newton-Schulz products run on the blocked pool matmul with ping-pong
+//! scratch buffers. Each keeps its single-threaded predecessor as a
+//! `*_ref` oracle for differential tests and the naive bench baseline
+//! (`linalg::set_reference_kernels` routes the default entry points back
+//! to them).
 
-use crate::linalg::Mat;
+use crate::linalg::{self, Mat, Scratch};
 use crate::runtime::HostTensor;
+use crate::util::pool::{self, Pool};
+
+/// SYRK row-band work (rows · cols²) below which parallel dispatch costs
+/// more than it saves.
+const SYRK_PAR_CUTOFF: usize = 1 << 15;
+
+/// Minimum SYRK rows per band: each band re-walks the full c×c
+/// accumulator, so bands must amortize that traffic.
+const SYRK_MIN_BAND: usize = 16;
+
+// ------------------------------------------------------------- im2col
+
+/// Conv output spatial dims for an (h, w) input with a square k-kernel —
+/// the single home of the `(d + 2·pad − k)/stride + 1` formula.
+pub fn conv_out_dims(h: usize, w: usize, k: usize, stride: usize, pad: usize) -> (usize, usize) {
+    ((h + 2 * pad - k) / stride + 1, (w + 2 * pad - k) / stride + 1)
+}
 
 /// Conv-patch extraction: (B, C, H, W) -> (B*ho*wo, C*k*k) with row index
 /// (b, oy, ox) and column index c*k*k + kh*k + kw — the exact layout of
 /// `lax.conv_general_dilated_patches` the AOT factor executables consume.
+/// Parallel over the batch axis on the global pool.
 pub fn im2col(x: &HostTensor, k: usize, stride: usize, pad: usize) -> (Mat, usize, usize) {
+    im2col_with(pool::global(), x, k, stride, pad)
+}
+
+/// [`im2col`] on an explicit pool.
+pub fn im2col_with(
+    pool: &Pool,
+    x: &HostTensor,
+    k: usize,
+    stride: usize,
+    pad: usize,
+) -> (Mat, usize, usize) {
+    let mut out = Mat::zeros(0, 0);
+    let (ho, wo) = im2col_into_with(pool, x, k, stride, pad, &mut out);
+    (out, ho, wo)
+}
+
+/// [`im2col`] into a caller-provided (scratch) matrix; returns (ho, wo).
+pub fn im2col_into_with(
+    pool: &Pool,
+    x: &HostTensor,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    out: &mut Mat,
+) -> (usize, usize) {
+    assert_eq!(x.rank(), 4, "im2col expects NCHW");
+    let (b, h, w) = (x.shape[0], x.shape[2], x.shape[3]);
+    let c = x.shape[1];
+    let (ho, wo) = conv_out_dims(h, w, k, stride, pad);
+    let ckk = c * k * k;
+    out.reset(b * ho * wo, ckk);
+    let per_image = ho * wo * ckk;
+    if b <= 1 || pool.size() <= 1 || linalg::reference_kernels() {
+        for (bi, chunk) in out.data.chunks_mut(per_image.max(1)).enumerate() {
+            im2col_image(x, bi, k, stride, pad, ho, wo, chunk);
+        }
+    } else {
+        pool.parallel_for_mut(&mut out.data, per_image, |bi, chunk| {
+            im2col_image(x, bi, k, stride, pad, ho, wo, chunk);
+        });
+    }
+    (ho, wo)
+}
+
+/// Single-threaded [`im2col`] — differential-test oracle / naive baseline.
+pub fn im2col_ref(x: &HostTensor, k: usize, stride: usize, pad: usize) -> (Mat, usize, usize) {
     assert_eq!(x.rank(), 4, "im2col expects NCHW");
     let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
-    let ho = (h + 2 * pad - k) / stride + 1;
-    let wo = (w + 2 * pad - k) / stride + 1;
+    let (ho, wo) = conv_out_dims(h, w, k, stride, pad);
     let ckk = c * k * k;
     let mut out = Mat::zeros(b * ho * wo, ckk);
-    for bi in 0..b {
-        for oy in 0..ho {
-            for ox in 0..wo {
-                let base = ((bi * ho + oy) * wo + ox) * ckk;
-                for ci in 0..c {
-                    for kh in 0..k {
-                        let y = (oy * stride + kh) as isize - pad as isize;
-                        if y < 0 || y >= h as isize {
+    let per_image = ho * wo * ckk;
+    for (bi, chunk) in out.data.chunks_mut(per_image.max(1)).enumerate() {
+        im2col_image(x, bi, k, stride, pad, ho, wo, chunk);
+    }
+    (out, ho, wo)
+}
+
+/// Fill the patch rows of one image: `chunk` is the (ho*wo, C*k*k) block
+/// of rows belonging to batch element `bi`, already zeroed.
+fn im2col_image(
+    x: &HostTensor,
+    bi: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    ho: usize,
+    wo: usize,
+    chunk: &mut [f32],
+) {
+    let (c, h, w) = (x.shape[1], x.shape[2], x.shape[3]);
+    let ckk = c * k * k;
+    for oy in 0..ho {
+        for ox in 0..wo {
+            let base = (oy * wo + ox) * ckk;
+            for ci in 0..c {
+                for kh in 0..k {
+                    let y = (oy * stride + kh) as isize - pad as isize;
+                    if y < 0 || y >= h as isize {
+                        continue;
+                    }
+                    let src = ((bi * c + ci) * h + y as usize) * w;
+                    for kw in 0..k {
+                        let xx = (ox * stride + kw) as isize - pad as isize;
+                        if xx < 0 || xx >= w as isize {
                             continue;
                         }
-                        let src = ((bi * c + ci) * h + y as usize) * w;
-                        for kw in 0..k {
-                            let xx = (ox * stride + kw) as isize - pad as isize;
-                            if xx < 0 || xx >= w as isize {
-                                continue;
-                            }
-                            out.data[base + (ci * k + kh) * k + kw] = x.data[src + xx as usize];
-                        }
+                        chunk[base + (ci * k + kh) * k + kw] = x.data[src + xx as usize];
                     }
                 }
             }
         }
     }
-    (out, ho, wo)
 }
 
+// ------------------------------------------------------------- col2im
+
 /// Scatter-add inverse of [`im2col`]: fold patch gradients back onto the
-/// input image (the conv backward data path).
+/// input image (the conv backward data path). Parallel over the batch
+/// axis on the global pool.
 pub fn col2im(
+    dpatches: &Mat,
+    xshape: &[usize; 4],
+    k: usize,
+    stride: usize,
+    pad: usize,
+    ho: usize,
+    wo: usize,
+) -> HostTensor {
+    col2im_with(pool::global(), dpatches, xshape, k, stride, pad, ho, wo)
+}
+
+/// [`col2im`] on an explicit pool.
+pub fn col2im_with(
+    pool: &Pool,
+    dpatches: &Mat,
+    xshape: &[usize; 4],
+    k: usize,
+    stride: usize,
+    pad: usize,
+    ho: usize,
+    wo: usize,
+) -> HostTensor {
+    let [b, c, h, w] = *xshape;
+    let mut dx = HostTensor::zeros(vec![b, c, h, w]);
+    col2im_into_with(pool, dpatches, xshape, k, stride, pad, ho, wo, &mut dx);
+    dx
+}
+
+/// [`col2im`] into a caller-provided (scratch) tensor of shape `xshape`;
+/// `dx` is zeroed before the scatter.
+pub fn col2im_into_with(
+    pool: &Pool,
+    dpatches: &Mat,
+    xshape: &[usize; 4],
+    k: usize,
+    stride: usize,
+    pad: usize,
+    ho: usize,
+    wo: usize,
+    dx: &mut HostTensor,
+) {
+    let [b, c, h, w] = *xshape;
+    let ckk = c * k * k;
+    assert_eq!(dpatches.rows, b * ho * wo);
+    assert_eq!(dpatches.cols, ckk);
+    assert_eq!(dx.shape, xshape, "col2im output shape mismatch");
+    dx.data.fill(0.0);
+    let per_image = c * h * w;
+    if b <= 1 || pool.size() <= 1 || linalg::reference_kernels() {
+        for (bi, img) in dx.data.chunks_mut(per_image.max(1)).enumerate() {
+            col2im_image(dpatches, bi, c, h, w, k, stride, pad, ho, wo, img);
+        }
+    } else {
+        pool.parallel_for_mut(&mut dx.data, per_image, |bi, img| {
+            col2im_image(dpatches, bi, c, h, w, k, stride, pad, ho, wo, img);
+        });
+    }
+}
+
+/// Single-threaded [`col2im`] — differential-test oracle / naive baseline.
+pub fn col2im_ref(
     dpatches: &Mat,
     xshape: &[usize; 4],
     k: usize,
@@ -56,44 +209,114 @@ pub fn col2im(
     let ckk = c * k * k;
     assert_eq!(dpatches.rows, b * ho * wo);
     assert_eq!(dpatches.cols, ckk);
-    let mut dx = vec![0.0f32; b * c * h * w];
-    for bi in 0..b {
-        for oy in 0..ho {
-            for ox in 0..wo {
-                let base = ((bi * ho + oy) * wo + ox) * ckk;
-                for ci in 0..c {
-                    for kh in 0..k {
-                        let y = (oy * stride + kh) as isize - pad as isize;
-                        if y < 0 || y >= h as isize {
+    let mut dx = HostTensor::zeros(vec![b, c, h, w]);
+    let per_image = c * h * w;
+    for (bi, img) in dx.data.chunks_mut(per_image.max(1)).enumerate() {
+        col2im_image(dpatches, bi, c, h, w, k, stride, pad, ho, wo, img);
+    }
+    dx
+}
+
+/// Fold the patch-gradient rows of one image: `img` is the (C, H, W)
+/// block of batch element `bi`, already zeroed.
+fn col2im_image(
+    dpatches: &Mat,
+    bi: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    ho: usize,
+    wo: usize,
+    img: &mut [f32],
+) {
+    let ckk = c * k * k;
+    for oy in 0..ho {
+        for ox in 0..wo {
+            let base = ((bi * ho + oy) * wo + ox) * ckk;
+            for ci in 0..c {
+                for kh in 0..k {
+                    let y = (oy * stride + kh) as isize - pad as isize;
+                    if y < 0 || y >= h as isize {
+                        continue;
+                    }
+                    let dst = (ci * h + y as usize) * w;
+                    for kw in 0..k {
+                        let xx = (ox * stride + kw) as isize - pad as isize;
+                        if xx < 0 || xx >= w as isize {
                             continue;
                         }
-                        let dst = ((bi * c + ci) * h + y as usize) * w;
-                        for kw in 0..k {
-                            let xx = (ox * stride + kw) as isize - pad as isize;
-                            if xx < 0 || xx >= w as isize {
-                                continue;
-                            }
-                            dx[dst + xx as usize] += dpatches.data[base + (ci * k + kh) * k + kw];
-                        }
+                        img[dst + xx as usize] += dpatches.data[base + (ci * k + kh) * k + kw];
                     }
                 }
             }
         }
     }
-    HostTensor::new(vec![b, c, h, w], dx)
 }
+
+// --------------------------------------------------------------- syrk
 
 /// SYRK: scale * XᵀX for X (rows, cols) -> (cols, cols) symmetric — the
 /// Kronecker-factor construction primitive (f64 accumulation over the
-/// long row axis).
+/// long row axis). Row-band-parallel on the global pool: each band
+/// accumulates a private f64 upper triangle, reduced in band order so
+/// results are deterministic for a fixed thread count.
 pub fn syrk(x: &Mat, scale: f32) -> Mat {
-    let (r, c) = (x.rows, x.cols);
+    syrk_with(pool::global(), x, scale)
+}
+
+/// [`syrk`] on an explicit pool.
+pub fn syrk_with(pool: &Pool, x: &Mat, scale: f32) -> Mat {
+    syrk_slice_with(pool, &x.data, x.rows, x.cols, scale)
+}
+
+/// [`syrk`] over a raw row-major (rows, cols) slice — lets the backend
+/// feed tap tensors without copying them into a `Mat` first.
+pub fn syrk_slice_with(pool: &Pool, x: &[f32], rows: usize, cols: usize, scale: f32) -> Mat {
+    assert_eq!(x.len(), rows * cols, "syrk shape mismatch");
+    if linalg::reference_kernels() {
+        return syrk_slice_ref(x, rows, cols, scale);
+    }
+    let (r, c) = (rows, cols);
+    let nbands = pool.size().min(r.div_ceil(SYRK_MIN_BAND)).max(1);
+    if nbands <= 1 || r * c * c < SYRK_PAR_CUTOFF {
+        let mut acc = vec![0.0f64; c * c];
+        syrk_band(x, 0, r, c, &mut acc);
+        return syrk_finish(&acc, c, scale);
+    }
+    let band = r.div_ceil(nbands);
+    let mut partials: Vec<Vec<f64>> = (0..nbands).map(|_| vec![0.0f64; c * c]).collect();
+    pool.parallel_for_mut(&mut partials, 1, |bi, slot| {
+        let t0 = bi * band;
+        let t1 = (t0 + band).min(r);
+        syrk_band(x, t0, t1, c, &mut slot[0]);
+    });
+    // reduce in band order (deterministic for a fixed band count)
+    let (head, rest) = partials.split_first_mut().expect("at least one band");
+    for p in rest {
+        for (a, v) in head.iter_mut().zip(p.iter()) {
+            *a += *v;
+        }
+    }
+    syrk_finish(head, c, scale)
+}
+
+/// Single-threaded [`syrk`] (the pre-refactor column-pair loop) —
+/// differential-test oracle / naive baseline.
+pub fn syrk_ref(x: &Mat, scale: f32) -> Mat {
+    syrk_slice_ref(&x.data, x.rows, x.cols, scale)
+}
+
+fn syrk_slice_ref(x: &[f32], rows: usize, cols: usize, scale: f32) -> Mat {
+    let (r, c) = (rows, cols);
     let mut out = Mat::zeros(c, c);
     for i in 0..c {
         for j in i..c {
             let mut acc = 0.0f64;
             for t in 0..r {
-                acc += x.data[t * c + i] as f64 * x.data[t * c + j] as f64;
+                acc += x[t * c + i] as f64 * x[t * c + j] as f64;
             }
             let v = (acc * scale as f64) as f32;
             out.data[i * c + j] = v;
@@ -102,6 +325,38 @@ pub fn syrk(x: &Mat, scale: f32) -> Mat {
     }
     out
 }
+
+/// Accumulate the upper triangle of XᵀX over rows [t0, t1) into `acc`
+/// (c×c, row-major, only i ≤ j written) — the per-band body. Row-wise
+/// walk: one x row stays register/L1-resident per outer-product update.
+fn syrk_band(x: &[f32], t0: usize, t1: usize, c: usize, acc: &mut [f64]) {
+    for t in t0..t1 {
+        let xrow = &x[t * c..(t + 1) * c];
+        for i in 0..c {
+            let xi = xrow[i] as f64;
+            let arow = &mut acc[i * c..(i + 1) * c];
+            for j in i..c {
+                arow[j] += xi * xrow[j] as f64;
+            }
+        }
+    }
+}
+
+/// Scale the accumulated upper triangle and mirror it into a full matrix.
+fn syrk_finish(acc: &[f64], c: usize, scale: f32) -> Mat {
+    let mut out = Mat::zeros(c, c);
+    let s = scale as f64;
+    for i in 0..c {
+        for j in i..c {
+            let v = (acc[i * c + j] * s) as f32;
+            out.data[i * c + j] = v;
+            out.data[j * c + i] = v;
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------ Newton-Schulz
 
 fn matvec(m: &Mat, v: &[f32]) -> Vec<f32> {
     let n = m.rows;
@@ -127,6 +382,60 @@ fn l2norm(v: &[f32]) -> f32 {
 /// X ← X(2I − M_d X). Zero-padded buckets stay exact: damping makes the
 /// pad block λI, which inverts independently of the top-left block.
 pub fn ns_inverse(m: &Mat, damping: f32, iters: usize) -> Mat {
+    let mut scratch = Scratch::new();
+    ns_inverse_with(pool::global(), &mut scratch, &m.data, m.rows, damping, iters)
+}
+
+/// [`ns_inverse`] over a raw row-major n×n slice, on an explicit pool
+/// with scratch-buffer reuse: the two products per iteration run on the
+/// blocked pool matmul and ping-pong between recycled buffers.
+pub fn ns_inverse_with(
+    pool: &Pool,
+    scratch: &mut Scratch,
+    m: &[f32],
+    n: usize,
+    damping: f32,
+    iters: usize,
+) -> Mat {
+    assert_eq!(m.len(), n * n, "ns_inverse expects a square matrix");
+    if linalg::reference_kernels() {
+        return ns_inverse_ref(&Mat::from_vec(n, n, m.to_vec()), damping, iters);
+    }
+    let mut md = scratch.mat_from(n, n, m);
+    md.add_diag(damping);
+    let mut v = vec![1.0f32 / (n as f32).sqrt(); n];
+    for _ in 0..8 {
+        let w = matvec(&md, &v);
+        let norm = l2norm(&w).max(1e-30);
+        for (vi, wi) in v.iter_mut().zip(w.iter()) {
+            *vi = wi / norm;
+        }
+    }
+    let sigma = l2norm(&matvec(&md, &v)).max(1e-30) * 1.1 + damping;
+    let mut x = scratch.mat(n, n);
+    for i in 0..n {
+        x.data[i * n + i] = 1.0 / sigma;
+    }
+    let mut t = scratch.mat_spare(n, n);
+    let mut x2 = scratch.mat_spare(n, n);
+    for _ in 0..iters {
+        md.matmul_into_with(pool, &x, &mut t);
+        for tv in t.data.iter_mut() {
+            *tv = -*tv;
+        }
+        t.add_diag(2.0); // t = 2I − M_d X
+        x.matmul_into_with(pool, &t, &mut x2);
+        std::mem::swap(&mut x, &mut x2);
+    }
+    scratch.recycle_mat(md);
+    scratch.recycle_mat(t);
+    scratch.recycle_mat(x2);
+    x
+}
+
+/// Single-threaded [`ns_inverse`] (the pre-refactor allocate-per-step
+/// loop over `matmul_ref`) — differential-test oracle / naive baseline.
+pub fn ns_inverse_ref(m: &Mat, damping: f32, iters: usize) -> Mat {
     assert!(m.is_square());
     let n = m.rows;
     let mut md = m.clone();
@@ -143,16 +452,36 @@ pub fn ns_inverse(m: &Mat, damping: f32, iters: usize) -> Mat {
     let mut x = Mat::eye(n).scale(1.0 / sigma);
     let two_i = Mat::eye(n).scale(2.0);
     for _ in 0..iters {
-        let p = md.matmul(&x);
-        x = x.matmul(&two_i.axpy(-1.0, &p));
+        let p = md.matmul_ref(&x);
+        x = x.matmul_ref(&two_i.axpy(-1.0, &p));
     }
     x
 }
+
+// ------------------------------------------------------ precondition
 
 /// K-FAC preconditioned gradient: G⁻¹ · grad · A⁻¹.
 pub fn precondition(g_inv: &Mat, grad: &Mat, a_inv: &Mat) -> Mat {
     g_inv.matmul(grad).matmul(a_inv)
 }
+
+/// [`precondition`] on an explicit pool with scratch-buffer reuse.
+pub fn precondition_with(
+    pool: &Pool,
+    scratch: &mut Scratch,
+    g_inv: &Mat,
+    grad: &Mat,
+    a_inv: &Mat,
+) -> Mat {
+    let mut t = scratch.mat_spare(g_inv.rows, grad.cols);
+    g_inv.matmul_into_with(pool, grad, &mut t);
+    let mut out = scratch.mat_spare(t.rows, a_inv.cols);
+    t.matmul_into_with(pool, a_inv, &mut out);
+    scratch.recycle_mat(t);
+    out
+}
+
+// ------------------------------------------------------------------ bn
 
 /// Full (2C × 2C) BatchNorm Fisher from per-sample (B, C) gamma/beta
 /// gradients, parameter order (γ₁, β₁, …, γ_C, β_C).
@@ -256,6 +585,19 @@ mod tests {
         md.add_diag(lambda);
         let gj = solve::gauss_jordan_inverse(&md).unwrap();
         assert!(inv.max_abs_diff(&gj) < 5e-3, "diff {}", inv.max_abs_diff(&gj));
+    }
+
+    #[test]
+    fn ns_inverse_matches_its_ref_oracle() {
+        let mut rng = Rng::new(29);
+        let n = 48;
+        let raw: Vec<f32> = (0..n * n).map(|_| rng.normal() as f32).collect();
+        let b = Mat::from_vec(n, n, raw);
+        let mut m = b.transpose().matmul(&b).scale(1.0 / n as f32);
+        m.symmetrize();
+        let fast = ns_inverse(&m, 0.05, 20);
+        let naive = ns_inverse_ref(&m, 0.05, 20);
+        assert!(fast.max_abs_diff(&naive) < 1e-5, "diff {}", fast.max_abs_diff(&naive));
     }
 
     #[test]

@@ -12,6 +12,7 @@ pub mod kernels;
 pub mod model;
 mod net;
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -22,6 +23,8 @@ use anyhow::{Context, Result};
 use self::model::{LayerGeo, NativeModelCfg};
 use super::manifest::{KfacLayer, Manifest, ModelManifest, OutputSpec, ParamSpec};
 use super::{Executor, HostTensor};
+use crate::linalg::Scratch;
+use crate::util::pool;
 
 /// Newton-Schulz iteration count — matches `NS_ITERS` in the AOT
 /// pipeline, where 20 iterations reach f32 tolerance at the damping
@@ -77,13 +80,16 @@ struct NativeModel {
     geo: Vec<LayerGeo>,
 }
 
-/// The native backend: model table + executable registry + counters.
+/// The native backend: model table + executable registry + counters,
+/// plus the scratch-buffer arena the per-step hot loop recycles matmul
+/// and patch buffers through (interior-mutable: `execute` takes `&self`).
 pub struct NativeBackend {
     models: BTreeMap<String, NativeModel>,
     execs: BTreeMap<String, ExecSpec>,
     ns_iters: usize,
     executions: AtomicU64,
     exec_nanos: AtomicU64,
+    scratch: RefCell<Scratch>,
 }
 
 /// Build manifests + backend for the default model set.
@@ -320,6 +326,7 @@ pub fn build(model_names: &[&str], seed: u64) -> Result<(Manifest, NativeBackend
         ns_iters: NS_ITERS,
         executions: AtomicU64::new(0),
         exec_nanos: AtomicU64::new(0),
+        scratch: RefCell::new(Scratch::new()),
     };
     Ok((manifest, backend))
 }
@@ -355,29 +362,38 @@ impl Executor for NativeBackend {
             .get(name)
             .with_context(|| format!("executable '{name}' not in manifest"))?;
         let t0 = Instant::now();
+        let mut scratch_guard = self.scratch.borrow_mut();
+        let scratch = &mut *scratch_guard;
         let out = match spec {
             ExecSpec::Step { model, one_mc } => {
                 let m = self.model(model)?;
-                net::run_step(&m.cfg, &m.param_names, &m.geo, inputs, *one_mc, seed)
+                net::run_step(&m.cfg, &m.param_names, &m.geo, inputs, *one_mc, seed, scratch)
                     .with_context(|| format!("native step {name}"))?
             }
             ExecSpec::Eval { model } => {
                 let m = self.model(model)?;
-                net::run_eval(&m.cfg, &m.param_names, &m.geo, inputs)
+                net::run_eval(&m.cfg, &m.param_names, &m.geo, inputs, scratch)
                     .with_context(|| format!("native eval {name}"))?
             }
             ExecSpec::FactorConvA { cin, h, w, k, stride, pad, batch } => {
                 anyhow::ensure!(inputs.len() == 1, "{name}: expects the a_tap input");
                 check_shape(inputs[0], &[*batch, *cin, *h, *w], name)?;
-                let (patches, ho, wo) = kernels::im2col(inputs[0], *k, *stride, *pad);
+                let (kk, ss, pp) = (*k, *stride, *pad);
+                let (ho, wo) = kernels::conv_out_dims(*h, *w, kk, ss, pp);
+                let mut patches = scratch.mat_spare(*batch * ho * wo, *cin * kk * kk);
+                kernels::im2col_into_with(pool::global(), inputs[0], kk, ss, pp, &mut patches);
                 let scale = 1.0 / (*batch * ho * wo) as f32;
-                vec![HostTensor::from_mat(&kernels::syrk(&patches, scale))]
+                let s = kernels::syrk(&patches, scale);
+                scratch.recycle_mat(patches);
+                vec![HostTensor::new(vec![s.rows, s.cols], s.data)]
             }
             ExecSpec::FactorSyrk { rows, cols, scale_rows } => {
                 anyhow::ensure!(inputs.len() == 1, "{name}: expects the tap input");
                 check_shape(inputs[0], &[*rows, *cols], name)?;
                 let scale = 1.0 / *scale_rows as f32;
-                vec![HostTensor::from_mat(&kernels::syrk(&inputs[0].as_mat(), scale))]
+                let p = pool::global();
+                let s = kernels::syrk_slice_with(p, &inputs[0].data, *rows, *cols, scale);
+                vec![HostTensor::new(vec![s.rows, s.cols], s.data)]
             }
             ExecSpec::BnInv => {
                 anyhow::ensure!(inputs.len() == 3, "{name}: expects (g_gamma, g_beta, damping)");
@@ -391,20 +407,24 @@ impl Executor for NativeBackend {
                 anyhow::ensure!(inputs.len() == 2, "{name}: expects (matrix, damping)");
                 check_shape(inputs[0], &[*n, *n], name)?;
                 let damping = inputs[1].data[0];
-                let inv = kernels::ns_inverse(&inputs[0].as_mat(), damping, self.ns_iters);
-                vec![HostTensor::from_mat(&inv)]
+                let p = pool::global();
+                let data = &inputs[0].data;
+                let inv = kernels::ns_inverse_with(p, scratch, data, *n, damping, self.ns_iters);
+                vec![HostTensor::new(vec![inv.rows, inv.cols], inv.data)]
             }
             ExecSpec::Precond { m, n } => {
                 anyhow::ensure!(inputs.len() == 3, "{name}: expects (g_inv, grad, a_inv)");
                 check_shape(inputs[0], &[*m, *m], name)?;
                 check_shape(inputs[1], &[*m, *n], name)?;
                 check_shape(inputs[2], &[*n, *n], name)?;
-                let u = kernels::precondition(
-                    &inputs[0].as_mat(),
-                    &inputs[1].as_mat(),
-                    &inputs[2].as_mat(),
-                );
-                vec![HostTensor::from_mat(&u)]
+                let gi = scratch.mat_from(*m, *m, &inputs[0].data);
+                let gr = scratch.mat_from(*m, *n, &inputs[1].data);
+                let ai = scratch.mat_from(*n, *n, &inputs[2].data);
+                let u = kernels::precondition_with(pool::global(), scratch, &gi, &gr, &ai);
+                scratch.recycle_mat(gi);
+                scratch.recycle_mat(gr);
+                scratch.recycle_mat(ai);
+                vec![HostTensor::new(vec![u.rows, u.cols], u.data)]
             }
         };
         self.executions.fetch_add(1, Ordering::Relaxed);

@@ -21,10 +21,7 @@ pub struct ConvSpec {
 
 impl ConvSpec {
     pub fn spatial_out(&self, h: usize, w: usize) -> (usize, usize) {
-        (
-            (h + 2 * self.pad - self.k) / self.stride + 1,
-            (w + 2 * self.pad - self.k) / self.stride + 1,
-        )
+        super::kernels::conv_out_dims(h, w, self.k, self.stride, self.pad)
     }
 }
 

@@ -8,15 +8,22 @@
 //! B recovers the per-sample d log p / ds taps. This implementation is
 //! validated against the JAX reference (f64) to ~3e-7 max relative error
 //! across all step outputs of `convnet_small`.
+//!
+//! The per-step hot loop runs on the blocked pool-parallel linalg
+//! substrate and a [`Scratch`] arena owned by the backend: conv/fc
+//! products use the fused `matmul_transposed` form, patch matrices and
+//! flow tensors come from recycled buffers, and the tape returns its
+//! buffers to the arena at the end of every step.
 
 use std::collections::BTreeMap;
 
 use anyhow::{Context, Result};
 
-use super::kernels::{col2im, im2col};
+use super::kernels::{col2im_into_with, im2col_into_with};
 use super::model::{BnSpec, ConvSpec, FcSpec, LayerGeo, NativeModelCfg, Op};
-use crate::linalg::Mat;
+use crate::linalg::{Mat, Scratch};
 use crate::runtime::HostTensor;
+use crate::util::pool;
 use crate::util::rng::Rng;
 
 const BN_EPS: f32 = 1e-5;
@@ -54,15 +61,43 @@ enum Tape {
     Fc { spec: FcSpec, a: Mat },
 }
 
+/// Return every tape-held buffer to the arena (end of step, after the
+/// backward pass(es) have consumed the records).
+fn recycle_tape(tape: Vec<Tape>, scratch: &mut Scratch) {
+    for entry in tape {
+        match entry {
+            Tape::Conv(rec) => scratch.recycle_mat(rec.patches),
+            Tape::Bn(rec) => scratch.recycle(rec.xhat.data),
+            Tape::Relu { out } => scratch.recycle(out.data),
+            Tape::Fc { a, .. } => scratch.recycle_mat(a),
+            Tape::Add { proj: Some(p), .. } => {
+                let (crec, brec) = *p;
+                scratch.recycle_mat(crec.patches);
+                scratch.recycle(brec.xhat.data);
+            }
+            _ => {}
+        }
+    }
+}
+
 // ------------------------------------------------------------- forward
 
-fn conv_fwd(x: &HostTensor, w: &HostTensor, spec: &ConvSpec) -> (HostTensor, ConvRec) {
+fn conv_fwd(
+    x: &HostTensor,
+    w: &HostTensor,
+    spec: &ConvSpec,
+    scratch: &mut Scratch,
+) -> (HostTensor, ConvRec) {
     let (b, h, wd) = (x.shape[0], x.shape[2], x.shape[3]);
-    let (patches, ho, wo) = im2col(x, spec.k, spec.stride, spec.pad);
+    let (ho, wo) = spec.spatial_out(h, wd);
     let ckk = spec.cin * spec.k * spec.k;
-    let wm = Mat::from_vec(spec.cout, ckk, w.data.clone());
-    let s_rows = patches.matmul(&wm.transpose()); // (B*ho*wo, cout)
-    let mut out = vec![0.0f32; b * spec.cout * ho * wo];
+    let mut patches = scratch.mat_spare(b * ho * wo, ckk);
+    im2col_into_with(pool::global(), x, spec.k, spec.stride, spec.pad, &mut patches);
+    let wm = scratch.mat_from(spec.cout, ckk, &w.data);
+    let mut s_rows = scratch.mat_spare(b * ho * wo, spec.cout);
+    patches.matmul_transposed_into(&wm, &mut s_rows); // (B*ho*wo, cout)
+    scratch.recycle_mat(wm);
+    let mut out = scratch.take(b * spec.cout * ho * wo);
     for bi in 0..b {
         for oy in 0..ho {
             for ox in 0..wo {
@@ -73,6 +108,7 @@ fn conv_fwd(x: &HostTensor, w: &HostTensor, spec: &ConvSpec) -> (HostTensor, Con
             }
         }
     }
+    scratch.recycle_mat(s_rows);
     let rec = ConvRec { spec: spec.clone(), patches, xshape: [b, spec.cin, h, wd], ho, wo };
     (HostTensor::new(vec![b, spec.cout, ho, wo], out), rec)
 }
@@ -83,6 +119,7 @@ fn bn_fwd_train(
     gamma: &HostTensor,
     beta: &HostTensor,
     spec: &BnSpec,
+    scratch: &mut Scratch,
 ) -> (HostTensor, BnRec, Vec<f32>, Vec<f32>) {
     let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     let n = (b * h * w) as f64;
@@ -109,8 +146,8 @@ fn bn_fwd_train(
         }
         var[ci] = (vacc / n) as f32;
     }
-    let mut xhat = vec![0.0f32; x.data.len()];
-    let mut out = vec![0.0f32; x.data.len()];
+    let mut xhat = scratch.take(x.data.len());
+    let mut out = scratch.take(x.data.len());
     for ci in 0..c {
         let rstd = 1.0 / (var[ci] + BN_EPS).sqrt();
         let (g, bt) = (gamma.data[ci], beta.data[ci]);
@@ -139,9 +176,10 @@ fn bn_fwd_eval(
     beta: &HostTensor,
     mean: &HostTensor,
     var: &HostTensor,
+    scratch: &mut Scratch,
 ) -> HostTensor {
     let (b, c, hw) = (x.shape[0], x.shape[1], x.shape[2] * x.shape[3]);
-    let mut out = vec![0.0f32; x.data.len()];
+    let mut out = scratch.take(x.data.len());
     for ci in 0..c {
         let rstd = 1.0 / (var.data[ci] + BN_EPS).sqrt();
         let (g, bt) = (gamma.data[ci], beta.data[ci]);
@@ -170,13 +208,25 @@ fn apply_conv(
     pdict: &PDict,
     train: bool,
     a_taps: &mut BTreeMap<String, HostTensor>,
+    scratch: &mut Scratch,
 ) -> Result<(HostTensor, Option<ConvRec>)> {
     let w = param(pdict, &format!("{}.w", cs.name))?;
     if train {
         a_taps.insert(cs.name.clone(), flow.clone());
     }
-    let (out, rec) = conv_fwd(flow, w, cs);
-    Ok((out, train.then_some(rec)))
+    let (out, rec) = conv_fwd(flow, w, cs, scratch);
+    if train {
+        Ok((out, Some(rec)))
+    } else {
+        scratch.recycle_mat(rec.patches);
+        Ok((out, None))
+    }
+}
+
+/// Replace `flow` with `next`, returning the dead buffer to the arena.
+fn advance(flow: &mut HostTensor, next: HostTensor, scratch: &mut Scratch) {
+    let prev = std::mem::replace(flow, next);
+    scratch.recycle(prev.data);
 }
 
 /// Run the op program. `bn_running` selects eval mode (running BN stats,
@@ -186,6 +236,7 @@ fn forward(
     pdict: &PDict,
     x: &HostTensor,
     bn_running: Option<&BTreeMap<&str, (&HostTensor, &HostTensor)>>,
+    scratch: &mut Scratch,
 ) -> Result<Forward> {
     let train = bn_running.is_none();
     let mut flow = x.clone();
@@ -203,11 +254,11 @@ fn forward(
                 }
             }
             Op::Conv(cs) => {
-                let (out, rec) = apply_conv(&flow, cs, pdict, train, &mut a_taps)?;
+                let (out, rec) = apply_conv(&flow, cs, pdict, train, &mut a_taps, scratch)?;
                 if let Some(rec) = rec {
                     tape.push(Tape::Conv(rec));
                 }
-                flow = out;
+                advance(&mut flow, out, scratch);
             }
             Op::Bn(bs) => {
                 let gamma = param(pdict, &format!("{}.gamma", bs.name))?;
@@ -217,27 +268,29 @@ fn forward(
                         let (m, v) = *run
                             .get(bs.name.as_str())
                             .with_context(|| format!("missing running stats for {}", bs.name))?;
-                        flow = bn_fwd_eval(&flow, gamma, beta, m, v);
+                        let out = bn_fwd_eval(&flow, gamma, beta, m, v, scratch);
+                        advance(&mut flow, out, scratch);
                     }
                     None => {
-                        let (out, rec, mean, var) = bn_fwd_train(&flow, gamma, beta, bs);
+                        let (out, rec, mean, var) = bn_fwd_train(&flow, gamma, beta, bs, scratch);
                         bn_stats.insert(bs.name.clone(), (mean, var));
                         tape.push(Tape::Bn(rec));
-                        flow = out;
+                        advance(&mut flow, out, scratch);
                     }
                 }
             }
             Op::Relu => {
-                let mut out = flow.clone();
+                let mut out = HostTensor::new(flow.shape.clone(), scratch.take_from(&flow.data));
                 for v in out.data.iter_mut() {
                     if *v < 0.0 {
                         *v = 0.0;
                     }
                 }
                 if train {
-                    tape.push(Tape::Relu { out: out.clone() });
+                    let copy = HostTensor::new(out.shape.clone(), scratch.take_from(&out.data));
+                    tape.push(Tape::Relu { out: copy });
                 }
-                flow = out;
+                advance(&mut flow, out, scratch);
             }
             Op::Add { from_save, proj } => {
                 let mut shortcut = saved
@@ -249,18 +302,21 @@ fn forward(
                     .clone();
                 let mut tape_proj = None;
                 if let Some(p) = proj {
-                    let (out, crec) = apply_conv(&shortcut, &p.0, pdict, train, &mut a_taps)?;
+                    let (out, crec) =
+                        apply_conv(&shortcut, &p.0, pdict, train, &mut a_taps, scratch)?;
                     let gamma = param(pdict, &format!("{}.gamma", p.1.name))?;
                     let beta = param(pdict, &format!("{}.beta", p.1.name))?;
-                    shortcut = match bn_running {
+                    scratch.recycle(std::mem::replace(&mut shortcut, out).data);
+                    let bn_out = match bn_running {
                         Some(run) => {
                             let (m, v) = *run.get(p.1.name.as_str()).with_context(|| {
                                 format!("missing running stats for {}", p.1.name)
                             })?;
-                            bn_fwd_eval(&out, gamma, beta, m, v)
+                            bn_fwd_eval(&shortcut, gamma, beta, m, v, scratch)
                         }
                         None => {
-                            let (bn_out, brec, mean, var) = bn_fwd_train(&out, gamma, beta, &p.1);
+                            let (bn_out, brec, mean, var) =
+                                bn_fwd_train(&shortcut, gamma, beta, &p.1, scratch);
                             bn_stats.insert(p.1.name.clone(), (mean, var));
                             tape_proj = Some(Box::new((
                                 crec.expect("training mode records conv"),
@@ -269,8 +325,10 @@ fn forward(
                             bn_out
                         }
                     };
+                    scratch.recycle(std::mem::replace(&mut shortcut, bn_out).data);
                 }
                 flow.axpy_inplace(1.0, &shortcut);
+                scratch.recycle(shortcut.data);
                 if train {
                     tape.push(Tape::Add { from_save: from_save.clone(), proj: tape_proj });
                 }
@@ -278,7 +336,7 @@ fn forward(
             Op::GlobalPool => {
                 let (b, c, h, w) = (flow.shape[0], flow.shape[1], flow.shape[2], flow.shape[3]);
                 let inv = 1.0 / (h * w) as f32;
-                let mut out = vec![0.0f32; b * c];
+                let mut out = scratch.take(b * c);
                 for bi in 0..b {
                     for ci in 0..c {
                         let base = (bi * c + ci) * h * w;
@@ -292,7 +350,7 @@ fn forward(
                 if train {
                     tape.push(Tape::GlobalPool { h, w });
                 }
-                flow = HostTensor::new(vec![b, c, 1, 1], out);
+                advance(&mut flow, HostTensor::new(vec![b, c, 1, 1], out), scratch);
             }
             Op::Flatten => {
                 if train {
@@ -304,14 +362,19 @@ fn forward(
             }
             Op::Fc(fs) => {
                 let w = param(pdict, &format!("{}.w", fs.name))?;
-                let a = flow.as_mat();
-                let wm = Mat::from_vec(fs.dout, fs.din, w.data.clone());
-                let out = a.matmul(&wm.transpose()); // (B, dout)
+                let a = scratch.mat_from(flow.shape[0], flow.shape[1], &flow.data);
+                let wm = scratch.mat_from(fs.dout, fs.din, &w.data);
+                let mut out = scratch.mat_spare(a.rows, fs.dout);
+                a.matmul_transposed_into(&wm, &mut out); // (B, dout)
+                scratch.recycle_mat(wm);
                 if train {
                     a_taps.insert(fs.name.clone(), flow.clone());
                     tape.push(Tape::Fc { spec: fs.clone(), a });
+                } else {
+                    scratch.recycle_mat(a);
                 }
-                flow = HostTensor::new(vec![out.rows, out.cols], out.data);
+                let next = HostTensor::new(vec![out.rows, out.cols], out.data);
+                advance(&mut flow, next, scratch);
             }
         }
     }
@@ -339,21 +402,27 @@ fn scaled(t: &HostTensor, s: f32) -> HostTensor {
     out
 }
 
-fn conv_bwd_step(
-    rec: &ConvRec,
-    g: &HostTensor,
-    pdict: &PDict,
+/// Shared read-only context of one backward pass.
+struct BwdCtx<'a, 'p> {
+    pdict: &'a PDict<'p>,
     batch: usize,
     record_grads: bool,
     record_taps: bool,
+}
+
+fn conv_bwd_step(
+    rec: &ConvRec,
+    g: &HostTensor,
+    ctx: &BwdCtx,
     cap: &mut Captured,
+    scratch: &mut Scratch,
 ) -> Result<HostTensor> {
     let spec = &rec.spec;
-    if record_taps {
-        cap.g_taps.insert(spec.name.clone(), scaled(g, batch as f32));
+    if ctx.record_taps {
+        cap.g_taps.insert(spec.name.clone(), scaled(g, ctx.batch as f32));
     }
     let (b, ho, wo) = (rec.xshape[0], rec.ho, rec.wo);
-    let mut g_rows = Mat::zeros(b * ho * wo, spec.cout);
+    let mut g_rows = scratch.mat(b * ho * wo, spec.cout);
     for bi in 0..b {
         for co in 0..spec.cout {
             let src = ((bi * spec.cout + co) * ho) * wo;
@@ -365,33 +434,43 @@ fn conv_bwd_step(
             }
         }
     }
-    let w = param(pdict, &format!("{}.w", spec.name))?;
+    let w = param(ctx.pdict, &format!("{}.w", spec.name))?;
     let ckk = spec.cin * spec.k * spec.k;
-    if record_grads {
-        let dw = g_rows.transpose().matmul(&rec.patches); // (cout, ckk)
+    if ctx.record_grads {
+        let mut gt = scratch.mat_spare(g_rows.cols, g_rows.rows);
+        g_rows.transpose_into(&mut gt);
+        let mut dw = scratch.mat_spare(spec.cout, ckk);
+        gt.matmul_into(&rec.patches, &mut dw); // (cout, ckk)
+        scratch.recycle_mat(gt);
         cap.grads.insert(
             format!("{}.w", spec.name),
             HostTensor::new(vec![spec.cout, spec.cin, spec.k, spec.k], dw.data),
         );
     }
-    let wm = Mat::from_vec(spec.cout, ckk, w.data.clone());
-    let dpatches = g_rows.matmul(&wm);
-    Ok(col2im(&dpatches, &rec.xshape, spec.k, spec.stride, spec.pad, ho, wo))
+    let wm = scratch.mat_from(spec.cout, ckk, &w.data);
+    let mut dpatches = scratch.mat_spare(b * ho * wo, ckk);
+    g_rows.matmul_into(&wm, &mut dpatches);
+    scratch.recycle_mat(wm);
+    scratch.recycle_mat(g_rows);
+    let [xb, xc, xh, xw] = rec.xshape;
+    let mut dx = HostTensor::new(vec![xb, xc, xh, xw], scratch.take(xb * xc * xh * xw));
+    let (k, s, p) = (spec.k, spec.stride, spec.pad);
+    col2im_into_with(pool::global(), &dpatches, &rec.xshape, k, s, p, ho, wo, &mut dx);
+    scratch.recycle_mat(dpatches);
+    Ok(dx)
 }
 
 fn bn_bwd_step(
     rec: &BnRec,
     g: &HostTensor,
-    pdict: &PDict,
-    batch: usize,
-    record_grads: bool,
-    record_taps: bool,
+    ctx: &BwdCtx,
     cap: &mut Captured,
+    scratch: &mut Scratch,
 ) -> Result<HostTensor> {
     let spec = &rec.spec;
     let (b, c, hw) = (g.shape[0], g.shape[1], g.shape[2] * g.shape[3]);
     let n = (b * hw) as f64;
-    let gamma = param(pdict, &format!("{}.gamma", spec.name))?;
+    let gamma = param(ctx.pdict, &format!("{}.gamma", spec.name))?;
 
     // one pass over g/xhat: per-sample spatial partials, from which both
     // the (B, C) taps and the per-channel reductions derive
@@ -410,8 +489,8 @@ fn bn_bwd_step(
             part_g[bi * c + ci] = ab;
         }
     }
-    if record_taps {
-        let scale = batch as f32;
+    if ctx.record_taps {
+        let scale = ctx.batch as f32;
         let gg: Vec<f32> = part_g_xhat.iter().map(|&v| v as f32 * scale).collect();
         let gb: Vec<f32> = part_g.iter().map(|&v| v as f32 * scale).collect();
         cap.bn_taps.insert(
@@ -427,7 +506,7 @@ fn bn_bwd_step(
             sum_g_xhat[ci] += part_g_xhat[bi * c + ci];
         }
     }
-    if record_grads {
+    if ctx.record_grads {
         let dgamma: Vec<f32> = sum_g_xhat.iter().map(|&v| v as f32).collect();
         let dbeta: Vec<f32> = sum_g.iter().map(|&v| v as f32).collect();
         cap.grads
@@ -436,7 +515,7 @@ fn bn_bwd_step(
     }
 
     // dxhat = g * gamma; dx = rstd/n * (n*dxhat - Σdxhat - xhat * Σ(dxhat·xhat))
-    let mut dx = vec![0.0f32; g.data.len()];
+    let mut dx = scratch.take(g.data.len());
     for ci in 0..c {
         let gm = gamma.data[ci] as f64;
         let rstd = 1.0 / ((rec.var[ci] + BN_EPS) as f64).sqrt();
@@ -463,7 +542,9 @@ fn backward(
     batch: usize,
     record_grads: bool,
     record_taps: bool,
+    scratch: &mut Scratch,
 ) -> Result<Captured> {
+    let ctx = BwdCtx { pdict, batch, record_grads, record_taps };
     let mut cap = Captured::default();
     let mut g = HostTensor::new(vec![dlogits.rows, dlogits.cols], dlogits.data.clone());
     let mut saved_grads: BTreeMap<String, HostTensor> = BTreeMap::new();
@@ -474,18 +555,26 @@ fn backward(
                 if record_taps {
                     cap.g_taps.insert(spec.name.clone(), scaled(&g, batch as f32));
                 }
-                let gm = g.as_mat(); // (B, dout)
+                let gm = scratch.mat_from(g.shape[0], g.shape[1], &g.data); // (B, dout)
                 if record_grads {
-                    let dw = gm.transpose().matmul(a); // (dout, din)
+                    let mut gt = scratch.mat_spare(gm.cols, gm.rows);
+                    gm.transpose_into(&mut gt);
+                    let mut dw = scratch.mat_spare(spec.dout, spec.din);
+                    gt.matmul_into(a, &mut dw); // (dout, din)
+                    scratch.recycle_mat(gt);
                     cap.grads.insert(
                         format!("{}.w", spec.name),
                         HostTensor::new(vec![spec.dout, spec.din], dw.data),
                     );
                 }
                 let w = param(pdict, &format!("{}.w", spec.name))?;
-                let wm = Mat::from_vec(spec.dout, spec.din, w.data.clone());
-                let da = gm.matmul(&wm); // (B, din)
-                g = HostTensor::new(vec![batch, spec.din], da.data);
+                let wm = scratch.mat_from(spec.dout, spec.din, &w.data);
+                let mut da = scratch.mat_spare(gm.rows, spec.din);
+                gm.matmul_into(&wm, &mut da); // (B, din)
+                scratch.recycle_mat(wm);
+                scratch.recycle_mat(gm);
+                let next = HostTensor::new(vec![batch, spec.din], da.data);
+                scratch.recycle(std::mem::replace(&mut g, next).data);
             }
             Tape::Flatten { shape } => {
                 g = g.reshape(shape.clone());
@@ -493,7 +582,7 @@ fn backward(
             Tape::GlobalPool { h, w } => {
                 let (b, c) = (g.shape[0], g.shape[1]);
                 let inv = 1.0 / (h * w) as f32;
-                let mut out = vec![0.0f32; b * c * h * w];
+                let mut out = scratch.take(b * c * h * w);
                 for bi in 0..b {
                     for ci in 0..c {
                         let v = g.data[bi * c + ci] * inv;
@@ -503,7 +592,8 @@ fn backward(
                         }
                     }
                 }
-                g = HostTensor::new(vec![b, c, *h, *w], out);
+                let next = HostTensor::new(vec![b, c, *h, *w], out);
+                scratch.recycle(std::mem::replace(&mut g, next).data);
             }
             Tape::Relu { out } => {
                 for (gv, ov) in g.data.iter_mut().zip(out.data.iter()) {
@@ -513,17 +603,18 @@ fn backward(
                 }
             }
             Tape::Add { from_save, proj } => {
-                let mut branch = g.clone();
+                let mut branch = HostTensor::new(g.shape.clone(), scratch.take_from(&g.data));
                 if let Some(p) = proj {
-                    branch = bn_bwd_step(
-                        &p.1, &branch, pdict, batch, record_grads, record_taps, &mut cap,
-                    )?;
-                    branch = conv_bwd_step(
-                        &p.0, &branch, pdict, batch, record_grads, record_taps, &mut cap,
-                    )?;
+                    let b2 = bn_bwd_step(&p.1, &branch, &ctx, &mut cap, scratch)?;
+                    scratch.recycle(std::mem::replace(&mut branch, b2).data);
+                    let b3 = conv_bwd_step(&p.0, &branch, &ctx, &mut cap, scratch)?;
+                    scratch.recycle(std::mem::replace(&mut branch, b3).data);
                 }
                 match saved_grads.get_mut(from_save) {
-                    Some(acc) => acc.axpy_inplace(1.0, &branch),
+                    Some(acc) => {
+                        acc.axpy_inplace(1.0, &branch);
+                        scratch.recycle(branch.data);
+                    }
                     None => {
                         saved_grads.insert(from_save.clone(), branch);
                     }
@@ -532,16 +623,20 @@ fn backward(
             Tape::Save(name) => {
                 if let Some(extra) = saved_grads.remove(name) {
                     g.axpy_inplace(1.0, &extra);
+                    scratch.recycle(extra.data);
                 }
             }
             Tape::Bn(rec) => {
-                g = bn_bwd_step(rec, &g, pdict, batch, record_grads, record_taps, &mut cap)?;
+                let next = bn_bwd_step(rec, &g, &ctx, &mut cap, scratch)?;
+                scratch.recycle(std::mem::replace(&mut g, next).data);
             }
             Tape::Conv(rec) => {
-                g = conv_bwd_step(rec, &g, pdict, batch, record_grads, record_taps, &mut cap)?;
+                let next = conv_bwd_step(rec, &g, &ctx, &mut cap, scratch)?;
+                scratch.recycle(std::mem::replace(&mut g, next).data);
             }
         }
     }
+    scratch.recycle(g.data);
     Ok(cap)
 }
 
@@ -643,6 +738,7 @@ pub fn run_step(
     inputs: &[&HostTensor],
     one_mc: bool,
     seed: Option<u32>,
+    scratch: &mut Scratch,
 ) -> Result<Vec<HostTensor>> {
     let np = param_names.len();
     anyhow::ensure!(
@@ -657,23 +753,24 @@ pub fn run_step(
     let t = inputs[np + 1];
     check_batch_shapes(cfg, x, t)?;
 
-    let fwd = forward(cfg, &pdict, x, None)?;
+    let fwd = forward(cfg, &pdict, x, None, scratch)?;
     let (loss, ncorrect, p) = softmax_xent(&fwd.logits, t);
     let dl = dlogits_from(&p, &t.data, cfg.batch);
 
     let cap = if one_mc {
         // backward 1: param grads for the true labels; backward 2: taps
         // for the sampled labels (extra backward pass, §4.1)
-        let mut cap = backward(&fwd.tape, &pdict, &dl, cfg.batch, true, false)?;
+        let mut cap = backward(&fwd.tape, &pdict, &dl, cfg.batch, true, false, scratch)?;
         let t_mc = sample_labels(&p, seed.unwrap_or(0));
         let dl_mc = dlogits_from(&p, &t_mc, cfg.batch);
-        let taps = backward(&fwd.tape, &pdict, &dl_mc, cfg.batch, false, true)?;
+        let taps = backward(&fwd.tape, &pdict, &dl_mc, cfg.batch, false, true, scratch)?;
         cap.g_taps = taps.g_taps;
         cap.bn_taps = taps.bn_taps;
         cap
     } else {
-        backward(&fwd.tape, &pdict, &dl, cfg.batch, true, true)?
+        backward(&fwd.tape, &pdict, &dl, cfg.batch, true, true, scratch)?
     };
+    recycle_tape(fwd.tape, scratch);
 
     let mut outs = Vec::with_capacity(2 + np + 2 * geo.len());
     outs.push(HostTensor::scalar(loss));
@@ -713,6 +810,7 @@ pub fn run_eval(
     param_names: &[String],
     geo: &[LayerGeo],
     inputs: &[&HostTensor],
+    scratch: &mut Scratch,
 ) -> Result<Vec<HostTensor>> {
     let np = param_names.len();
     let bn_names: Vec<&str> =
@@ -734,7 +832,7 @@ pub fn run_eval(
         .enumerate()
         .map(|(i, &n)| (n, (inputs[np + 2 + i], inputs[np + 2 + nb + i])))
         .collect();
-    let fwd = forward(cfg, &pdict, x, Some(&bn_running))?;
+    let fwd = forward(cfg, &pdict, x, Some(&bn_running), scratch)?;
     let (loss, ncorrect, _) = softmax_xent(&fwd.logits, t);
     Ok(vec![HostTensor::scalar(loss), HostTensor::scalar(ncorrect)])
 }

@@ -1,18 +1,41 @@
 //! Scoped thread pool — substrate replacing `rayon` for the coordinator's
-//! parallel worker execution (Stage 1/2/4 per-process work).
+//! parallel worker execution (Stage 1/2/4 per-process work) and for the
+//! blocked linalg kernels (`linalg::mat`, `runtime::native::kernels`).
+//!
+//! The linalg hot paths go through [`global`], a process-wide pool sized
+//! from `SPNGD_THREADS` (default: available parallelism), and its chunked
+//! [`Pool::parallel_for`] / [`Pool::parallel_for_mut`] scope APIs. Both
+//! let tasks borrow caller stack data: the calling thread participates in
+//! the work and blocks until every chunk has run, so borrows outlive all
+//! jobs. A call made from inside a pool worker runs serially instead of
+//! re-entering the queue — nested parallelism can neither deadlock nor
+//! oversubscribe.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 struct Shared {
-    queue: Mutex<Vec<Job>>,
+    /// FIFO job queue. Submission order is preserved (a LIFO here makes
+    /// scoped waits straggle: large tail chunks would run last).
+    queue: Mutex<VecDeque<Job>>,
     cv: Condvar,
     shutdown: Mutex<bool>,
     outstanding: AtomicUsize,
     done_cv: Condvar,
     done_mx: Mutex<()>,
+    /// Sticky flag: some submitted job panicked. `wait` re-raises it so
+    /// `submit`/`for_each` callers never see silent partial results.
+    job_panicked: AtomicBool,
+}
+
+thread_local! {
+    /// True on pool worker threads — used to serialize nested
+    /// `parallel_for` calls instead of deadlocking on the queue.
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
 }
 
 /// A fixed-size thread pool with a `scope`-style parallel-for.
@@ -26,38 +49,49 @@ impl Pool {
     pub fn new(size: usize) -> Self {
         let size = size.max(1);
         let shared = Arc::new(Shared {
-            queue: Mutex::new(Vec::new()),
+            queue: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
             shutdown: Mutex::new(false),
             outstanding: AtomicUsize::new(0),
             done_cv: Condvar::new(),
             done_mx: Mutex::new(()),
+            job_panicked: AtomicBool::new(false),
         });
         let workers = (0..size)
             .map(|_| {
                 let sh = shared.clone();
-                std::thread::spawn(move || loop {
-                    let job = {
-                        let mut q = sh.queue.lock().unwrap();
-                        loop {
-                            if let Some(j) = q.pop() {
-                                break Some(j);
+                std::thread::spawn(move || {
+                    IN_POOL_WORKER.with(|f| f.set(true));
+                    loop {
+                        let job = {
+                            let mut q = sh.queue.lock().unwrap();
+                            loop {
+                                if let Some(j) = q.pop_front() {
+                                    break Some(j);
+                                }
+                                if *sh.shutdown.lock().unwrap() {
+                                    break None;
+                                }
+                                q = sh.cv.wait(q).unwrap();
                             }
-                            if *sh.shutdown.lock().unwrap() {
-                                break None;
+                        };
+                        match job {
+                            Some(j) => {
+                                // isolate panics: a panicking job must not kill
+                                // the worker or leak the outstanding count
+                                // (parallel_for re-raises via its latch flag,
+                                // submit/for_each via wait's sticky flag)
+                                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(j));
+                                if r.is_err() {
+                                    sh.job_panicked.store(true, Ordering::Relaxed);
+                                }
+                                if sh.outstanding.fetch_sub(1, Ordering::AcqRel) == 1 {
+                                    let _g = sh.done_mx.lock().unwrap();
+                                    sh.done_cv.notify_all();
+                                }
                             }
-                            q = sh.cv.wait(q).unwrap();
+                            None => return,
                         }
-                    };
-                    match job {
-                        Some(j) => {
-                            j();
-                            if sh.outstanding.fetch_sub(1, Ordering::AcqRel) == 1 {
-                                let _g = sh.done_mx.lock().unwrap();
-                                sh.done_cv.notify_all();
-                            }
-                        }
-                        None => return,
                     }
                 })
             })
@@ -72,15 +106,21 @@ impl Pool {
     /// Submit a job; does not wait.
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
         self.shared.outstanding.fetch_add(1, Ordering::AcqRel);
-        self.shared.queue.lock().unwrap().push(Box::new(f));
+        self.shared.queue.lock().unwrap().push_back(Box::new(f));
         self.shared.cv.notify_one();
     }
 
-    /// Wait until every submitted job has completed.
+    /// Wait until every submitted job has completed. Panics if any job
+    /// panicked since the last wait — a failed job must not read as
+    /// success.
     pub fn wait(&self) {
         let mut g = self.shared.done_mx.lock().unwrap();
         while self.shared.outstanding.load(Ordering::Acquire) != 0 {
             g = self.shared.done_cv.wait(g).unwrap();
+        }
+        drop(g);
+        if self.shared.job_panicked.swap(false, Ordering::Relaxed) {
+            panic!("a pool job panicked");
         }
     }
 
@@ -99,16 +139,197 @@ impl Pool {
         }
         self.wait();
     }
+
+    /// Chunked parallel-for over `0..n`: splits the index range into
+    /// contiguous chunks of `grain` items (the last may be short) and runs
+    /// `f(start, end)` on each across the pool. `f` may borrow caller
+    /// stack data — the call blocks until every chunk has run. The calling
+    /// thread claims chunks too, so the loop completes even when all
+    /// workers are busy; calls from inside a pool worker run serially.
+    pub fn parallel_for<F>(&self, n: usize, grain: usize, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let grain = grain.max(1);
+        let nchunks = n.div_ceil(grain);
+        if nchunks <= 1 || self.size <= 1 || IN_POOL_WORKER.with(|w| w.get()) {
+            f(0, n);
+            return;
+        }
+        let work = ForWork { f: &f, next: AtomicUsize::new(0), n, grain, nchunks };
+        let helpers = self.size.min(nchunks - 1);
+        let latch = Arc::new(Latch::new(helpers));
+        // SAFETY: the pointer round-trip erases the borrow of `work` (and
+        // of everything `f` captures) so the jobs can be 'static. Every
+        // helper counts its latch down before the wait below returns —
+        // `CountGuard` guarantees that even if `f` panics, and `WaitGuard`
+        // keeps the frame alive through the wait even if the calling
+        // thread's own chunk loop panics — so no job dereferences a dead
+        // pointer. `F: Sync` makes the shared `&F` sound across threads.
+        let wp = &work as *const ForWork<'_, F> as usize;
+        for _ in 0..helpers {
+            let guard = CountGuard(latch.clone());
+            self.submit(move || {
+                let w = unsafe { &*(wp as *const ForWork<'_, F>) };
+                let run = std::panic::AssertUnwindSafe(|| w.run());
+                if std::panic::catch_unwind(run).is_err() {
+                    guard.0.panicked.store(true, Ordering::Relaxed);
+                }
+            });
+        }
+        let wait_guard = WaitGuard(&latch);
+        work.run();
+        drop(wait_guard);
+        assert!(!latch.panicked.load(Ordering::Relaxed), "a parallel_for worker panicked");
+    }
+
+    /// Split `data` into contiguous chunks of `chunk` elements (the last
+    /// may be short) and run `f(chunk_index, chunk_slice)` across the
+    /// pool. The chunks are disjoint `&mut` views, so each invocation may
+    /// write freely; the call blocks until every chunk has run.
+    pub fn parallel_for_mut<T, F>(&self, data: &mut [T], chunk: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        let len = data.len();
+        if len == 0 {
+            return;
+        }
+        let chunk = chunk.max(1);
+        let nchunks = len.div_ceil(chunk);
+        let base = data.as_mut_ptr() as usize;
+        self.parallel_for(nchunks, 1, |c0, c1| {
+            for c in c0..c1 {
+                let s = c * chunk;
+                let e = (s + chunk).min(len);
+                // SAFETY: chunk index `c` is claimed by exactly one task,
+                // ranges [s, e) are pairwise disjoint across indices, and
+                // parallel_for joins before `data`'s borrow ends — so each
+                // reconstructed slice is a unique &mut view.
+                let sl = unsafe { std::slice::from_raw_parts_mut((base as *mut T).add(s), e - s) };
+                f(c, sl);
+            }
+        });
+    }
+}
+
+/// Shared state of one `parallel_for` call: chunk cursor + the borrowed
+/// body. Claimed chunk-by-chunk via an atomic, so load imbalance between
+/// chunks self-schedules.
+struct ForWork<'a, F: Fn(usize, usize) + Sync> {
+    f: &'a F,
+    next: AtomicUsize,
+    n: usize,
+    grain: usize,
+    nchunks: usize,
+}
+
+impl<F: Fn(usize, usize) + Sync> ForWork<'_, F> {
+    fn run(&self) {
+        loop {
+            let c = self.next.fetch_add(1, Ordering::Relaxed);
+            if c >= self.nchunks {
+                return;
+            }
+            let s = c * self.grain;
+            let e = (s + self.grain).min(self.n);
+            (self.f)(s, e);
+        }
+    }
+}
+
+/// Per-call completion latch: `parallel_for` waits on its own latch (not
+/// the pool-wide outstanding counter) so concurrent scoped calls from
+/// different threads never wait on each other's jobs. `panicked` carries
+/// a helper's panic back to the calling thread.
+struct Latch {
+    mx: Mutex<usize>,
+    cv: Condvar,
+    panicked: AtomicBool,
+}
+
+impl Latch {
+    fn new(n: usize) -> Self {
+        Latch { mx: Mutex::new(n), cv: Condvar::new(), panicked: AtomicBool::new(false) }
+    }
+
+    fn count_down(&self) {
+        let mut g = self.mx.lock().unwrap();
+        *g -= 1;
+        if *g == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut g = self.mx.lock().unwrap();
+        while *g > 0 {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+/// Counts its latch down when dropped — a helper job holds one so the
+/// count happens even if the job body panics.
+struct CountGuard(Arc<Latch>);
+
+impl Drop for CountGuard {
+    fn drop(&mut self) {
+        self.0.count_down();
+    }
+}
+
+/// Waits on the latch when dropped — the `parallel_for` caller holds one
+/// so the borrowed chunk state stays alive past every helper even if its
+/// own chunk loop panics mid-unwind.
+struct WaitGuard<'a>(&'a Latch);
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        self.0.wait();
+    }
 }
 
 impl Drop for Pool {
     fn drop(&mut self) {
-        *self.shared.shutdown.lock().unwrap() = true;
+        {
+            // Hold the queue lock while raising the flag: a worker holds it
+            // from its empty-pop through the shutdown check to cv.wait, so
+            // this ordering makes the notify impossible to miss.
+            let _q = self.shared.queue.lock().unwrap();
+            *self.shared.shutdown.lock().unwrap() = true;
+        }
         self.shared.cv.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
+}
+
+/// Thread count for the process-wide pool: `SPNGD_THREADS` if set to a
+/// positive integer, otherwise the machine's available parallelism.
+pub fn configured_threads() -> usize {
+    if let Ok(v) = std::env::var("SPNGD_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+static GLOBAL: OnceLock<Pool> = OnceLock::new();
+
+/// The process-wide pool the linalg hot paths run on. Created on first
+/// use with [`configured_threads`] threads; `SPNGD_THREADS=1` forces the
+/// whole training path serial.
+pub fn global() -> &'static Pool {
+    GLOBAL.get_or_init(|| Pool::new(configured_threads()))
 }
 
 /// Scoped parallel map over indices using std::thread::scope — for cases
@@ -180,6 +401,22 @@ mod tests {
     }
 
     #[test]
+    fn queue_is_fifo() {
+        // With a single worker, execution order must equal submission
+        // order — the regression test for the old LIFO Vec queue.
+        let pool = Pool::new(1);
+        let order = Arc::new(Mutex::new(Vec::new()));
+        for i in 0..64 {
+            let o = order.clone();
+            pool.submit(move || {
+                o.lock().unwrap().push(i);
+            });
+        }
+        pool.wait();
+        assert_eq!(*order.lock().unwrap(), (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
     fn for_each_covers_indices() {
         let pool = Pool::new(3);
         let hits = Arc::new(Mutex::new(vec![0u8; 50]));
@@ -188,6 +425,89 @@ mod tests {
             h.lock().unwrap()[i] += 1;
         });
         assert!(hits.lock().unwrap().iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn parallel_for_covers_range_once() {
+        let pool = Pool::new(4);
+        let hits: Vec<AtomicU64> = (0..103).map(|_| AtomicU64::new(0)).collect();
+        pool.parallel_for(103, 7, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_borrows_stack() {
+        let pool = Pool::new(4);
+        let data: Vec<u64> = (0..1000).collect();
+        let sum = AtomicU64::new(0);
+        pool.parallel_for(data.len(), 13, |s, e| {
+            let part: u64 = data[s..e].iter().sum();
+            sum.fetch_add(part, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), (0..1000).sum::<u64>());
+    }
+
+    #[test]
+    fn parallel_for_mut_chunks_disjoint() {
+        let pool = Pool::new(4);
+        let mut data = vec![0usize; 101];
+        pool.parallel_for_mut(&mut data, 8, |ci, chunk| {
+            for (k, v) in chunk.iter_mut().enumerate() {
+                *v = ci * 8 + k;
+            }
+        });
+        let want: Vec<usize> = (0..101).collect();
+        assert_eq!(data, want);
+    }
+
+    #[test]
+    #[should_panic(expected = "a pool job panicked")]
+    fn wait_surfaces_submitted_job_panic() {
+        let pool = Pool::new(1);
+        pool.submit(|| panic!("boom"));
+        pool.wait();
+    }
+
+    #[test]
+    #[should_panic]
+    fn parallel_for_surfaces_panics_instead_of_hanging() {
+        // whichever thread hits the bad chunk, the call must panic (via
+        // direct unwind or the latch flag), never deadlock or corrupt
+        let pool = Pool::new(2);
+        pool.parallel_for(64, 1, |s, _| {
+            if s >= 32 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn parallel_for_nested_runs_serially() {
+        // A parallel_for issued from inside a pool job must not deadlock.
+        let pool = Arc::new(Pool::new(1));
+        let done = Arc::new(AtomicU64::new(0));
+        let (p, d) = (pool.clone(), done.clone());
+        pool.submit(move || {
+            p.parallel_for(32, 4, |s, e| {
+                d.fetch_add((e - s) as u64, Ordering::Relaxed);
+            });
+        });
+        pool.wait();
+        assert_eq!(done.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn global_pool_is_usable() {
+        let sum = AtomicU64::new(0);
+        global().parallel_for(100, 9, |s, e| {
+            sum.fetch_add((e - s) as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 100);
+        assert!(global().size() >= 1);
     }
 
     #[test]

@@ -1,0 +1,197 @@
+//! Differential tests for the blocked/parallel linalg substrate: every
+//! parallel kernel against its retained single-threaded `*_ref` oracle,
+//! across odd shapes (non-multiples of the k-block, fewer rows than
+//! threads, 1×N / N×1, padded convs) and pool sizes 1 / 2 / 8.
+
+use spngd::linalg::{Mat, Scratch};
+use spngd::runtime::native::kernels;
+use spngd::runtime::{native, Executor, HostTensor};
+use spngd::util::pool::Pool;
+use spngd::util::rng::Rng;
+
+const POOL_SIZES: [usize; 3] = [1, 2, 8];
+
+fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+    Mat::from_vec(r, c, (0..r * c).map(|_| rng.normal() as f32).collect())
+}
+
+fn rand_tensor(rng: &mut Rng, shape: Vec<usize>) -> HostTensor {
+    let n: usize = shape.iter().product();
+    HostTensor::new(shape, (0..n).map(|_| rng.normal() as f32).collect())
+}
+
+#[test]
+fn matmul_matches_ref_across_pools_and_shapes() {
+    let shapes = [
+        (1, 1, 1),
+        (1, 17, 5),
+        (5, 17, 1),
+        (2, 300, 2),
+        (31, 257, 33),
+        (64, 64, 64),
+        (2, 40, 40),
+        (129, 7, 65),
+    ];
+    for &threads in &POOL_SIZES {
+        let pool = Pool::new(threads);
+        let mut rng = Rng::new(7);
+        for &(m, k, n) in &shapes {
+            let a = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, k, n);
+            let got = a.matmul_with(&pool, &b);
+            let want = a.matmul_ref(&b);
+            let tol = 1e-5 * k as f32;
+            let d = got.max_abs_diff(&want);
+            assert!(d <= tol, "matmul {m}x{k}x{n} @ {threads} threads: diff {d}");
+        }
+    }
+}
+
+#[test]
+fn matmul_transposed_matches_ref_across_pools_and_shapes() {
+    let shapes = [(1, 3, 1), (4, 27, 7), (19, 64, 33), (3, 301, 2), (65, 8, 129)];
+    for &threads in &POOL_SIZES {
+        let pool = Pool::new(threads);
+        let mut rng = Rng::new(11);
+        for &(m, k, n) in &shapes {
+            let a = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, n, k);
+            let got = a.matmul_transposed_with(&pool, &b);
+            let want = a.matmul_ref(&b.transpose());
+            let tol = 1e-5 * k as f32;
+            let d = got.max_abs_diff(&want);
+            assert!(d <= tol, "matmul_t {m}x{k}x{n} @ {threads} threads: diff {d}");
+        }
+    }
+}
+
+#[test]
+fn syrk_matches_ref_across_pools_and_shapes() {
+    // rows < threads, rows < min-band, long-thin and short-wide taps
+    let shapes = [(1, 1), (3, 5), (7, 3), (100, 17), (1000, 7), (64, 33), (5, 64), (513, 48)];
+    for &threads in &POOL_SIZES {
+        let pool = Pool::new(threads);
+        let mut rng = Rng::new(13);
+        for &(r, c) in &shapes {
+            let x = rand_mat(&mut rng, r, c);
+            let scale = 1.0 / r as f32;
+            let got = kernels::syrk_with(&pool, &x, scale);
+            let want = kernels::syrk_ref(&x, scale);
+            let d = got.max_abs_diff(&want);
+            assert!(d <= 1e-5, "syrk {r}x{c} @ {threads} threads: diff {d}");
+            for i in 0..c {
+                for j in 0..c {
+                    assert_eq!(got.at(i, j), got.at(j, i), "syrk symmetry {r}x{c}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn im2col_matches_ref_exactly_across_pools() {
+    // (shape, k, stride, pad) — includes b=1, pad > spatial dim, stride 2
+    let cases = [
+        (vec![1, 1, 3, 3], 1, 1, 0),
+        (vec![2, 3, 5, 5], 3, 2, 1),
+        (vec![3, 2, 4, 4], 2, 1, 0),
+        (vec![2, 1, 2, 2], 3, 1, 2),
+        (vec![9, 4, 6, 6], 3, 1, 1),
+    ];
+    for &threads in &POOL_SIZES {
+        let pool = Pool::new(threads);
+        let mut rng = Rng::new(17);
+        for (shape, k, s, p) in &cases {
+            let x = rand_tensor(&mut rng, shape.clone());
+            let (got, ho, wo) = kernels::im2col_with(&pool, &x, *k, *s, *p);
+            let (want, ho_r, wo_r) = kernels::im2col_ref(&x, *k, *s, *p);
+            assert_eq!((ho, wo), (ho_r, wo_r));
+            assert_eq!(got.data, want.data, "im2col {shape:?} k{k} s{s} p{p} @ {threads}");
+        }
+    }
+}
+
+#[test]
+fn col2im_matches_ref_exactly_across_pools() {
+    let cases = [
+        ([1, 1, 3, 3], 1, 1, 0),
+        ([2, 3, 5, 5], 3, 2, 1),
+        ([3, 2, 4, 4], 2, 1, 0),
+        ([2, 1, 2, 2], 3, 1, 2),
+        ([9, 4, 6, 6], 3, 1, 1),
+    ];
+    for &threads in &POOL_SIZES {
+        let pool = Pool::new(threads);
+        let mut rng = Rng::new(19);
+        for (shape, k, s, p) in &cases {
+            let [b, c, h, w] = *shape;
+            let (ho, wo) = kernels::conv_out_dims(h, w, *k, *s, *p);
+            let dp = rand_mat(&mut rng, b * ho * wo, c * k * k);
+            let got = kernels::col2im_with(&pool, &dp, shape, *k, *s, *p, ho, wo);
+            let want = kernels::col2im_ref(&dp, shape, *k, *s, *p, ho, wo);
+            assert_eq!(got.data, want.data, "col2im {shape:?} k{k} s{s} p{p} @ {threads}");
+        }
+    }
+}
+
+#[test]
+fn ns_inverse_matches_ref_across_pools() {
+    for &threads in &POOL_SIZES {
+        let pool = Pool::new(threads);
+        let mut rng = Rng::new(23);
+        for &n in &[5usize, 16, 33, 48] {
+            let b = rand_mat(&mut rng, n, n);
+            let mut m = b.matmul_ref(&b.transpose()).scale(1.0 / n as f32);
+            m.symmetrize();
+            let mut scratch = Scratch::new();
+            let got = kernels::ns_inverse_with(&pool, &mut scratch, &m.data, n, 0.05, 20);
+            let want = kernels::ns_inverse_ref(&m, 0.05, 20);
+            let d = got.max_abs_diff(&want);
+            assert!(d <= 1e-4, "ns_inverse {n} @ {threads} threads: diff {d}");
+        }
+    }
+}
+
+#[test]
+fn matmul_nan_propagates_through_zero_rows() {
+    // regression: the old kernel skipped `a == 0.0` and silently dropped
+    // NaN/Inf from the other operand
+    for &threads in &POOL_SIZES {
+        let pool = Pool::new(threads);
+        let a = Mat::zeros(3, 4);
+        let mut b = Mat::zeros(4, 2);
+        b.data[0] = f32::NAN;
+        b.data[3] = f32::INFINITY;
+        let out = a.matmul_with(&pool, &b);
+        assert!(out.data[0].is_nan(), "NaN must propagate @ {threads} threads");
+        assert!(out.data[1].is_nan(), "0 * inf must be NaN @ {threads} threads");
+    }
+}
+
+#[test]
+fn scratch_reuse_keeps_step_outputs_identical() {
+    // two executions of the same step through one backend (shared scratch
+    // arena) must be bit-identical — recycled buffers cannot leak state
+    let (manifest, backend) = native::build(&["convnet_tiny"], 3).unwrap();
+    let model = manifest.model("convnet_tiny").unwrap();
+    let params = manifest.load_init_params(model).unwrap();
+    let mut rng = Rng::new(31);
+    let n_in: usize = model.input_shape.iter().product();
+    let x = HostTensor::new(
+        model.input_shape.clone(),
+        (0..n_in).map(|_| rng.f32() * 2.0 - 1.0).collect(),
+    );
+    let mut t = HostTensor::zeros(vec![model.batch, model.num_classes]);
+    for b in 0..model.batch {
+        t.data[b * model.num_classes + rng.below_usize(model.num_classes)] = 1.0;
+    }
+    let mut inputs: Vec<&HostTensor> = params.iter().collect();
+    inputs.push(&x);
+    inputs.push(&t);
+    let o1 = backend.execute(&model.step_emp, &inputs).unwrap();
+    let o2 = backend.execute(&model.step_emp, &inputs).unwrap();
+    assert_eq!(o1.len(), o2.len());
+    for (a, b) in o1.iter().zip(o2.iter()) {
+        assert_eq!(a.data, b.data, "step outputs must be reproducible");
+    }
+}
