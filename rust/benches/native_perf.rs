@@ -17,6 +17,7 @@
 //! `linalg::set_reference_kernels(true)` routing every product to the
 //! pre-refactor naive loops, `speedup` their ratio.
 
+use spngd::coordinator::{DistMode, Optim};
 use spngd::harness::{self, bench};
 use spngd::linalg::{self, Mat};
 use spngd::runtime::native::kernels;
@@ -64,6 +65,7 @@ fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
 fn main() {
     let parsed = Args::new("native_perf", "native-backend bench runner (BENCH_native.json)")
         .opt("model", "convnet_small", "model for the end-to-end step")
+        .opt("workers", "1,4", "dist-engine worker counts for the trainer-step sweep")
         .opt("out", "BENCH_native.json", "output path for the JSON report")
         .flag("quick", "smoke mode: 1 warmup / 1 timed iteration")
         .flag("bench", "ignored (cargo bench passes it)")
@@ -143,6 +145,42 @@ fn main() {
         let _ = kernels::ns_inverse(&spd, 0.05, 20);
     }));
 
+    // ---- dist engine: end-to-end trainer step across worker counts.
+    // `speedup_vs_serialized` compares against workers × the 1-worker
+    // step time (what the sequential coordinator's fan-out would cost);
+    // > 1 means worker threads + comm/compute overlap are engaged.
+    let mut workers_list = parsed.get_usize_list("workers");
+    if !workers_list.contains(&1) {
+        workers_list.push(1);
+    }
+    // the serialized baseline is defined against a real 1-worker
+    // measurement, so it must run first — never extrapolate it
+    workers_list.sort_unstable();
+    workers_list.dedup();
+    let mut base_ns = 0.0f64;
+    let mut dist_entries: Vec<Json> = Vec::new();
+    for &wk in &workers_list {
+        let mut cfg = harness::default_cfg("convnet_tiny", Optim::SpNgd);
+        cfg.workers = wk;
+        cfg.grad_accum = 1;
+        cfg.dist = DistMode::Threaded;
+        let mut tr = harness::make_trainer(cfg, 2048, 7).expect("dist trainer");
+        let s = bench(&format!("dist step convnet_tiny workers={wk}"), wu, it, || {
+            tr.step().expect("dist step");
+        });
+        let ns = s.median() * 1e9;
+        if wk == 1 {
+            base_ns = ns;
+        }
+        let serialized = base_ns * wk as f64;
+        dist_entries.push(obj(vec![
+            ("workers", Json::from(wk)),
+            ("threads", Json::from(threads)),
+            ("step_ns", Json::from(ns)),
+            ("speedup_vs_serialized", Json::from(serialized / ns.max(1e-9))),
+        ]));
+    }
+
     let report = obj(vec![
         ("schema", Json::from("spngd-bench-native/1")),
         ("model", Json::from(model_name.clone())),
@@ -150,6 +188,7 @@ fn main() {
         ("quick", Json::from(quick)),
         ("step", step.json()),
         ("kernels", Json::Arr(entries.iter().map(Entry::json).collect())),
+        ("workers", Json::Arr(dist_entries)),
     ]);
     let out_path = parsed.get("out");
     std::fs::write(out_path, report.to_string_pretty()).expect("write bench report");

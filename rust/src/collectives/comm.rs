@@ -1,8 +1,96 @@
 //! In-process collective implementations with byte accounting.
+//!
+//! Reduction contract (shared with `dist::RingComm`, which the threaded
+//! engine uses): collectives operate on *lanes* — one buffer per
+//! (micro-step, worker) contribution, passed in canonical global lane
+//! order `g = m·W + w` — and reduce in lane order with f64 accumulators.
+//! The canonical order makes results bit-identical for every worker
+//! count that factorizes the same lane total, which is what lets the
+//! threaded dist engine be differentially tested against the sequential
+//! coordinator (and both against a single-worker run).
 
 use std::sync::Mutex;
 
 use crate::linalg::{packed_len, Mat};
+
+/// Per-GPU wire bytes of an N-element ring collective: `(p−1)/p · N ·
+/// wire_elem_bytes`, rounded once — THE byte formula every
+/// [`Collective`] charges, so `SimComm` and `dist::RingComm` accounting
+/// can never drift apart.
+pub fn ring_wire_bytes(world: usize, wire_elem_bytes: u64, elems: usize) -> u64 {
+    let p = world.max(1) as f64;
+    (elems as f64 * ((p - 1.0) / p) * wire_elem_bytes as f64).round() as u64
+}
+
+/// Canonical lane-order mean of f32 values — THE per-element reduction
+/// op sequence every [`Collective`] runs (f64 accumulation in iteration
+/// order, one divide, one rounding to f32). Shared so the bitwise-parity
+/// contract between `SimComm` and `dist::RingComm` is enforced by code,
+/// not by convention.
+#[inline]
+pub fn lane_mean<I: Iterator<Item = f32>>(vals: I, lanes: usize) -> f32 {
+    let mut acc = 0.0f64;
+    for v in vals {
+        acc += v as f64;
+    }
+    (acc / lanes as f64) as f32
+}
+
+/// Canonical lane-order mean of one statistic's lane matrices (see
+/// [`lane_mean`]; the multiplication-by-reciprocal form is part of the
+/// contract and must match on every implementation).
+pub fn lane_mean_mats(lanes: &[&Mat]) -> Mat {
+    let (rows, cols) = (lanes[0].rows, lanes[0].cols);
+    for m in lanes {
+        assert_eq!((m.rows, m.cols), (rows, cols), "lane shape mismatch");
+    }
+    let inv_l = 1.0 / lanes.len() as f64;
+    let mut out = Mat::zeros(rows, cols);
+    for (j, v) in out.data.iter_mut().enumerate() {
+        let mut s = 0.0f64;
+        for m in lanes {
+            s += m.data[j] as f64;
+        }
+        *v = (s * inv_l) as f32;
+    }
+    out
+}
+
+/// The collective-communication seam between the coordinator and a
+/// communicator backend: [`SimComm`] (sequential, byte accounting over
+/// in-place reductions) and `dist::RingComm` (concurrent chunked
+/// shared-memory collectives with the same byte accounting) both
+/// implement it, so the α-β cost model and the Fig. 5/6 accounting are
+/// backend-independent.
+///
+/// All reductions follow the canonical-lane contract described in the
+/// module docs: lanes in global order, f64 accumulation in lane order,
+/// mean over the lane count.
+pub trait Collective: Send + Sync {
+    /// Data-parallel world size (simulated GPUs) used for wire-byte
+    /// accounting — independent of the lane count (lanes = world ×
+    /// grad-accumulation micro-steps).
+    fn world(&self) -> usize;
+
+    /// AllReduce (mean) over equal-length lanes; the mean is written back
+    /// to every lane.
+    fn all_reduce_mean(&self, lanes: &mut [Vec<f32>]);
+
+    /// ReduceScatterV of statistic matrices: `lanes[g][i]` is lane g's
+    /// local matrix for statistic i; returns the lane-mean per statistic
+    /// (conceptually landing on the statistic's model-parallel owner).
+    fn reduce_scatter_v(&self, lanes: &[Vec<Mat>], classes: &[StatClass]) -> Vec<Mat>;
+
+    /// AllGatherV of updated parameters (accounting; parameters are
+    /// shared in-process).
+    fn all_gather_v_params(&self, total_elems: usize);
+
+    /// Snapshot cumulative byte counters.
+    fn stats(&self) -> CommStats;
+
+    /// Take and reset the per-step byte counters.
+    fn take_step_stats(&self) -> CommStats;
+}
 
 /// Per-GPU communication byte counters (f32 payloads).
 #[derive(Clone, Debug, Default)]
@@ -69,27 +157,21 @@ impl SimComm {
         self.p
     }
 
-    /// Per-GPU ring traffic for an N-element ReduceScatter (or AllGather).
-    fn ring_factor(&self) -> f64 {
-        (self.p as f64 - 1.0) / self.p as f64
-    }
-
     fn elems_to_bytes(&self, elems: usize) -> u64 {
-        (elems as f64 * self.ring_factor() * self.wire_elem_bytes as f64).round() as u64
+        ring_wire_bytes(self.p, self.wire_elem_bytes, elems)
     }
 
-    /// AllReduce (mean) of equal-shaped per-worker buffers; result is
-    /// written back to every worker. Ring AR = RS + AG.
+    /// AllReduce (mean) of equal-shaped lane buffers (canonical lane
+    /// order, one per micro-step × worker); the mean is written back to
+    /// every lane. Ring AR = RS + AG; wire bytes are charged per GPU.
     pub fn all_reduce_mean(&self, bufs: &mut [Vec<f32>]) {
-        assert_eq!(bufs.len(), self.p, "one buffer per worker");
+        assert!(!bufs.is_empty(), "at least one lane");
         let n = bufs[0].len();
-        // reduce into worker 0 (f64 accumulation for order-stable means)
+        let nlanes = bufs.len();
+        // reduce into lane 0 (f64 accumulation in canonical lane order)
         for i in 0..n {
-            let mut acc = 0.0f64;
-            for b in bufs.iter() {
-                acc += b[i] as f64;
-            }
-            bufs[0][i] = (acc / self.p as f64) as f32;
+            let m = lane_mean(bufs.iter().map(|b| b[i]), nlanes);
+            bufs[0][i] = m;
         }
         let (first, rest) = bufs.split_first_mut().unwrap();
         for b in rest {
@@ -104,33 +186,27 @@ impl SimComm {
         ss.num_ops += 1;
     }
 
-    /// ReduceScatterV for symmetric statistic matrices: `items[w][i]` is
-    /// worker w's local matrix for statistic i; the mean lands on the
-    /// owner of statistic i (model-parallel hand-off). Returns the
-    /// reduced matrices (one per statistic). Byte accounting uses the
-    /// packed (upper-triangular) size when enabled.
+    /// ReduceScatterV for symmetric statistic matrices: `items[g][i]` is
+    /// lane g's local matrix for statistic i (canonical lane order); the
+    /// lane mean lands on the owner of statistic i (model-parallel
+    /// hand-off). Returns the reduced matrices (one per statistic).
+    /// Reduction is f64 in lane order — the shared contract with
+    /// `dist::RingComm`. Byte accounting uses the packed
+    /// (upper-triangular) size when enabled.
     pub fn reduce_scatter_v(
         &self,
         items: &[Vec<Mat>],
         classes: &[StatClass],
     ) -> Vec<Mat> {
-        assert_eq!(items.len(), self.p);
+        assert!(!items.is_empty(), "at least one lane");
         let n_items = items[0].len();
         assert_eq!(classes.len(), n_items);
         let mut out = Vec::with_capacity(n_items);
-        let inv_p = 1.0 / self.p as f32;
         let mut elems_a = 0usize;
         let mut elems_g = 0usize;
         for i in 0..n_items {
-            let mut acc = items[0][i].clone();
-            for w in 1..self.p {
-                let m = &items[w][i];
-                assert_eq!((m.rows, m.cols), (acc.rows, acc.cols));
-                for (a, b) in acc.data.iter_mut().zip(m.data.iter()) {
-                    *a += *b;
-                }
-            }
-            acc = acc.scale(inv_p);
+            let lane_mats: Vec<&Mat> = items.iter().map(|lane| &lane[i]).collect();
+            let acc = lane_mean_mats(&lane_mats);
             let elems = if self.symmetric_packing && acc.is_square() {
                 packed_len(acc.rows)
             } else {
@@ -178,6 +254,32 @@ impl SimComm {
         let out = ss.clone();
         *ss = CommStats::default();
         out
+    }
+}
+
+impl Collective for SimComm {
+    fn world(&self) -> usize {
+        SimComm::world(self)
+    }
+
+    fn all_reduce_mean(&self, lanes: &mut [Vec<f32>]) {
+        SimComm::all_reduce_mean(self, lanes)
+    }
+
+    fn reduce_scatter_v(&self, lanes: &[Vec<Mat>], classes: &[StatClass]) -> Vec<Mat> {
+        SimComm::reduce_scatter_v(self, lanes, classes)
+    }
+
+    fn all_gather_v_params(&self, total_elems: usize) {
+        SimComm::all_gather_v_params(self, total_elems)
+    }
+
+    fn stats(&self) -> CommStats {
+        SimComm::stats(self)
+    }
+
+    fn take_step_stats(&self) -> CommStats {
+        SimComm::take_step_stats(self)
     }
 }
 

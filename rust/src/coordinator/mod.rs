@@ -14,8 +14,14 @@
 //! plus the practical-NGD machinery: empirical-vs-1mc Fisher, unit-wise
 //! BatchNorm Fisher, and the adaptive stale-statistics scheduler.
 
+//! The step runs on one of two engines sharing the same math path:
+//! sequential (workers iterated in the coordinator thread, `SimComm`
+//! accounting) or threaded (`dist` subsystem: one OS thread per worker,
+//! real ring collectives, comm/compute overlap per Alg. 3) — selected by
+//! [`trainer::DistMode`].
+
 pub mod stale;
 pub mod trainer;
 
 pub use stale::StaleState;
-pub use trainer::{BnMode, Fisher, Optim, Trainer, TrainerCfg};
+pub use trainer::{BnMode, DistMode, Fisher, Optim, Trainer, TrainerCfg};

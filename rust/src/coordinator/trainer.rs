@@ -1,13 +1,33 @@
-//! The SP-NGD trainer: Algorithm 3 over simulated GPU workers.
+//! The SP-NGD trainer: Algorithm 3 over data-parallel workers.
+//!
+//! The step pipeline is *lane-canonical*: the global batch is drawn in
+//! global lane order `g = m·W + w` (micro-step major) from one data RNG,
+//! every per-lane computation is independent, and every cross-lane
+//! reduction runs in canonical lane order with f64 accumulators (the
+//! [`Collective`] contract). Consequences the test suite asserts:
+//!
+//! - the same seed produces bit-identical batches, losses and updates
+//!   for every worker count that factorizes the same lane total
+//!   (`workers × grad_accum`), and
+//! - the threaded dist engine ([`DistMode::Threaded`], real OS threads +
+//!   `dist::RingComm`) is bit-identical to the sequential coordinator,
+//!   so it can be differentially tested against it.
+//!
+//! Sequential and threaded modes share the same per-lane compute
+//! ([`run_lane`]), per-layer inversion ([`refresh_and_invert_layer`])
+//! and per-layer update ([`update_layer`]) helpers — one math path,
+//! two schedules.
 
-use std::rc::Rc;
+use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::collectives::comm::{SimComm, StatClass};
+use crate::collectives::comm::{Collective, SimComm, StatClass};
 use crate::collectives::cost::StepProfile;
 use crate::data::{Augment, AugmentCfg, Batch, SynthDataset};
+use crate::dist::{DistEngine, RingComm};
 use crate::kfac::bn::{BnFisher, BnFullFisher};
 use crate::kfac::damping::pi_split;
 use crate::linalg::Mat;
@@ -41,10 +61,33 @@ pub enum Optim {
     Sgd,
 }
 
+/// How the data-parallel workers execute (§5, Alg. 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DistMode {
+    /// iterate workers in the coordinator thread, `SimComm` accounting
+    Sequential,
+    /// one OS thread per worker, `dist::RingComm` collectives, factor
+    /// communication and inversion overlapped with slower workers'
+    /// compute (Alg. 3's schedule)
+    Threaded,
+}
+
+impl DistMode {
+    /// `SPNGD_DIST=threads|threaded|1` selects the threaded engine;
+    /// anything else (or unset) stays sequential.
+    pub fn from_env() -> DistMode {
+        match std::env::var("SPNGD_DIST") {
+            Ok(v) if matches!(v.trim(), "threads" | "threaded" | "1") => DistMode::Threaded,
+            _ => DistMode::Sequential,
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct TrainerCfg {
     pub model: String,
-    /// simulated GPUs (data-parallel workers)
+    /// data-parallel workers (simulated GPUs; real OS threads under
+    /// [`DistMode::Threaded`])
     pub workers: usize,
     /// micro-steps accumulated per update (extreme-BS mimicry, §7.1)
     pub grad_accum: usize,
@@ -71,6 +114,8 @@ pub struct TrainerCfg {
     /// mixed-precision communication) — affects byte accounting only;
     /// reductions stay f32 in this in-process simulation
     pub fp16_comm: bool,
+    /// worker execution engine (sequential coordinator vs threaded dist)
+    pub dist: DistMode,
     pub seed: u64,
 }
 
@@ -107,18 +152,43 @@ struct LayerState {
 
 type StaleStateOpt = super::stale::StaleState;
 
+/// Per-lane scalar results of one step-executable run.
+#[derive(Default)]
+struct LaneOut {
+    loss: f64,
+    ncorrect: f64,
+    /// per BN layer (bn_order): this lane's (batch mean, batch var)
+    bn_stats: Vec<(Vec<f32>, Vec<f32>)>,
+    t_exec: f64,
+    t_factors: f64,
+}
+
+/// What one threaded worker hands back to the coordinator.
+struct WorkerYield {
+    lane_outs: Vec<(usize, LaneOut)>,
+    /// this rank's (post-AllReduce) mean gradient vector
+    grads: Vec<f32>,
+    t_inverse: f64,
+}
+
 pub struct Trainer {
     pub cfg: TrainerCfg,
     model: ModelManifest,
-    engine: Rc<dyn Executor>,
+    engine: Arc<dyn Executor>,
+    /// sequential-mode communicator (byte accounting + reductions)
     comm: SimComm,
+    /// threaded mode: per-worker executors + the ring communicator
+    dist: Option<DistEngine>,
     pub params: Vec<HostTensor>,
     velocity: Vec<HostTensor>,
     layers: Vec<LayerState>,
     bn_running: Vec<(HostTensor, HostTensor)>, // (mean, var) per bn_order
     dataset: SynthDataset,
+    /// per-lane augmentation pipelines (lane-keyed so the augment stream
+    /// is invariant to the worker count)
     augments: Vec<Augment>,
-    worker_rngs: Vec<Rng>,
+    /// single data stream: batches are drawn in canonical lane order
+    data_rng: Rng,
     val_rng: Rng,
     step: u64,
     pub log: RunLog,
@@ -132,8 +202,8 @@ pub struct Trainer {
 
 impl Trainer {
     pub fn new(
-        manifest: Rc<Manifest>,
-        engine: Rc<dyn Executor>,
+        manifest: Arc<Manifest>,
+        engine: Arc<dyn Executor>,
         cfg: TrainerCfg,
         dataset: SynthDataset,
     ) -> Result<Trainer> {
@@ -147,9 +217,9 @@ impl Trainer {
         let params = manifest.load_init_params(&model)?;
         let velocity = params.iter().map(|p| HostTensor::zeros(p.shape.clone())).collect();
         let mut rng = Rng::new(cfg.seed);
-        let worker_rngs: Vec<Rng> = (0..cfg.workers).map(|w| rng.fork(w as u64)).collect();
-        let augments = (0..cfg.workers)
-            .map(|w| Augment::new(cfg.augment.clone(), cfg.seed ^ (w as u64) << 8))
+        let lanes = cfg.workers.max(1) * cfg.grad_accum.max(1);
+        let augments = (0..lanes)
+            .map(|g| Augment::new(cfg.augment.clone(), cfg.seed ^ (g as u64) << 8))
             .collect();
         let layers = model
             .kfac_layers
@@ -179,19 +249,31 @@ impl Trainer {
         if cfg.fp16_comm {
             comm.wire_elem_bytes = 2;
         }
+        let dist = match cfg.dist {
+            DistMode::Threaded => {
+                let mut de = DistEngine::new(&engine, cfg.workers);
+                if cfg.fp16_comm {
+                    let ring = Arc::get_mut(&mut de.ring).expect("fresh ring communicator");
+                    ring.wire_elem_bytes = 2;
+                }
+                Some(de)
+            }
+            DistMode::Sequential => None,
+        };
         Ok(Trainer {
+            data_rng: rng.fork(0xDA7A),
             val_rng: rng.fork(0xEA1),
             cfg,
             model,
             engine,
             comm,
+            dist,
             params,
             velocity,
             layers,
             bn_running,
             dataset,
             augments,
-            worker_rngs,
             step: 0,
             log: RunLog::default(),
             prof_exec_samples: Vec::new(),
@@ -206,8 +288,13 @@ impl Trainer {
         self.step
     }
 
-    pub fn comm(&self) -> &SimComm {
-        &self.comm
+    /// The active communicator's byte accounting (SimComm sequentially,
+    /// RingComm under the threaded dist engine).
+    pub fn comm(&self) -> &dyn Collective {
+        match &self.dist {
+            Some(d) => d.ring.as_ref(),
+            None => &self.comm,
+        }
     }
 
     fn step_exe(&self) -> &str {
@@ -217,18 +304,25 @@ impl Trainer {
         }
     }
 
-    /// Is an NGD statistic refresh due this step for a given scheduler?
     fn ngd(&self) -> bool {
         self.cfg.optimizer == Optim::SpNgd
     }
 
     /// One SP-NGD training step (Alg. 3 + grad accumulation).
+    ///
+    /// An `Err` from a threaded step leaves the trainer poisoned: healthy
+    /// workers may already have folded the failing worker's zero-payload
+    /// keep-alive lanes into their owned factor caches and scheduler
+    /// state (the protocol stays alive so peers never deadlock, see
+    /// [`worker_step`]). Treat a step error as fatal for this trainer —
+    /// don't retry-loop over it.
     pub fn step(&mut self) -> Result<StepRecord> {
         self.step += 1;
         let t = self.step;
         let t_start = Instant::now();
-        let w = self.cfg.workers;
-        let nparams = self.params.len();
+        let w = self.cfg.workers.max(1);
+        let micro = self.cfg.grad_accum.max(1);
+        let lanes_n = w * micro;
 
         // ------------------------------------------------ refresh plan
         // Which statistics get refreshed this step (Alg. 1's `t == t_X`)?
@@ -258,305 +352,62 @@ impl Trainer {
             }
         }
 
-        // ------------------------------------ Stages 1-2: compute (data ∥)
-        let mut grad_accum: Vec<Vec<f32>> = vec![Vec::new(); w];
-        let mut factor_accum: Vec<Vec<Mat>> = vec![Vec::new(); w];
+        // ------------------- draw the global batch (canonical lane order)
+        let seeds: Vec<Option<u32>> = (0..lanes_n)
+            .map(|g| match self.cfg.fisher {
+                Fisher::OneMc => Some(((t as u32) << 8) ^ (g as u32).wrapping_mul(0x9E37)),
+                Fisher::Emp => None,
+            })
+            .collect();
+        let batches: Vec<Batch> = (0..lanes_n)
+            .map(|g| {
+                let b = self.dataset.batch(self.model.batch, &mut self.data_rng);
+                self.augments[g].apply(b)
+            })
+            .collect();
+        let exe = self.step_exe().to_string();
+        let lr = self.cfg.schedule.lr(t) as f32;
+        let mom = self.cfg.schedule.momentum(t) as f32;
+
+        // ------------------------------ Stages 1-4 on the active engine
+        let (lane_outs, t_inverse, t_update) = if self.dist.is_some() {
+            self.stages_threaded(t, &plan, batches, &seeds, &exe, lr, mom)?
+        } else {
+            self.stages_sequential(t, &plan, batches, &seeds, &exe, lr, mom)?
+        };
+
+        // --------------------------------- Stage 5: AllGatherV(params)
+        self.comm().all_gather_v_params(self.model.total_param_count());
+
+        // ------------------- loss / BN reductions (canonical lane order)
         let mut loss_sum = 0.0f64;
         let mut ncorrect_sum = 0.0f64;
         let mut bn_mean_acc: Vec<Vec<f32>> = Vec::new();
         let mut bn_var_acc: Vec<Vec<f32>> = Vec::new();
         let mut t_step_exec = 0.0f64;
         let mut t_factors = 0.0f64;
-
-        let micro = self.cfg.grad_accum.max(1);
-        for m in 0..micro {
-            // draw per-worker batches through the augmentation pipeline
-            let batches: Vec<Batch> = (0..w)
-                .map(|wi| {
-                    let b = self.dataset.batch(self.model.batch, &mut self.worker_rngs[wi]);
-                    self.augments[wi].apply(b)
-                })
-                .collect();
-
-            // Stage 1+2 compute: every worker runs the step executable.
-            // Simulated GPUs share this CPU, so execution is sequential;
-            // per-worker durations are recorded individually and the
-            // cluster cost model supplies the parallel semantics.
-            let exe = self.step_exe().to_string();
-            let seed_base = (t as u32) << 8 | m as u32;
-            let mut outs: Vec<Vec<HostTensor>> = Vec::with_capacity(w);
-            for wi in 0..w {
-                let mut inputs: Vec<&HostTensor> = self.params.iter().collect();
-                inputs.push(&batches[wi].x);
-                inputs.push(&batches[wi].t);
-                let seed = match self.cfg.fisher {
-                    Fisher::OneMc => Some(seed_base ^ (wi as u32).wrapping_mul(0x9E37)),
-                    Fisher::Emp => None,
-                };
-                let te = Instant::now();
-                let o = self
-                    .engine
-                    .execute_seeded(&exe, &inputs, seed)
-                    .context("step exec")?;
-                let dt = te.elapsed().as_secs_f64();
-                t_step_exec += dt;
-                self.prof_exec_samples.push(dt);
-                outs.push(o);
-            }
-
-            // accumulate loss/acc/grads
-            for (wi, o) in outs.iter().enumerate() {
-                loss_sum += o[0].data[0] as f64;
-                ncorrect_sum += o[1].data[0] as f64;
-                // flatten grads (outputs 2..2+nparams)
-                if grad_accum[wi].is_empty() {
-                    grad_accum[wi] = vec![0.0; self.model.total_param_count()];
-                }
-                let mut off = 0;
-                for pi in 0..nparams {
-                    let g = &o[2 + pi];
-                    for (dst, src) in
-                        grad_accum[wi][off..off + g.data.len()].iter_mut().zip(g.data.iter())
-                    {
-                        *dst += *src;
-                    }
-                    off += g.data.len();
-                }
-            }
-
-            // BN batch stats (mean over workers, accumulated over micro)
-            for (bi, bname) in self.model.bn_order.clone().iter().enumerate() {
-                let mi = self.model.output_index("bn_mean", Some(bname)).unwrap();
-                let vi = self.model.output_index("bn_var", Some(bname)).unwrap();
-                let c = outs[0][mi].data.len();
+        for lo in &lane_outs {
+            loss_sum += lo.loss;
+            ncorrect_sum += lo.ncorrect;
+            t_step_exec += lo.t_exec;
+            t_factors += lo.t_factors;
+            self.prof_exec_samples.push(lo.t_exec);
+            for (bi, (m, v)) in lo.bn_stats.iter().enumerate() {
                 if bn_mean_acc.len() <= bi {
-                    bn_mean_acc.push(vec![0.0; c]);
-                    bn_var_acc.push(vec![0.0; c]);
+                    bn_mean_acc.push(vec![0.0; m.len()]);
+                    bn_var_acc.push(vec![0.0; v.len()]);
                 }
-                for o in &outs {
-                    for i in 0..c {
-                        bn_mean_acc[bi][i] += o[mi].data[i];
-                        bn_var_acc[bi][i] += o[vi].data[i];
-                    }
+                for (acc, x) in bn_mean_acc[bi].iter_mut().zip(m.iter()) {
+                    *acc += *x;
                 }
-            }
-
-            // statistics construction for planned refreshes (per worker)
-            if !plan.is_empty() {
-                let tf = Instant::now();
-                let plan_ref = &plan;
-                let model = &self.model;
-                let engine2 = self.engine.clone();
-                let bn_mode = self.cfg.bn_mode;
-                let outs_ref = &outs;
-                let per_worker: Vec<Result<Vec<Mat>>> = (0..w).map(|wi| {
-                    let o = &outs_ref[wi];
-                    let mut mats = Vec::with_capacity(plan_ref.len());
-                    for &(li, kind) in plan_ref {
-                        let ml = &model.kfac_layers[li];
-                        let mat = match kind {
-                            StatKind::A => {
-                                let ti = model
-                                    .output_index("a_tap", Some(&ml.name))
-                                    .context("a_tap index")?;
-                                let f = engine2.execute(&ml.factor_a, &[&o[ti]])?;
-                                f[0].as_mat()
-                            }
-                            StatKind::G => {
-                                let ti = model
-                                    .output_index("g_tap", Some(&ml.name))
-                                    .context("g_tap index")?;
-                                let tap = &o[ti];
-                                let f = if ml.kind == "conv" {
-                                    let t2 = tap.nchw_to_rows_channels();
-                                    engine2.execute(&ml.factor_g, &[&t2])?
-                                } else {
-                                    engine2.execute(&ml.factor_g, &[tap])?
-                                };
-                                f[0].as_mat()
-                            }
-                            StatKind::BnF => {
-                                let gi = model
-                                    .output_index("g_gamma", Some(&ml.name))
-                                    .context("g_gamma index")?;
-                                let bi = model
-                                    .output_index("g_beta", Some(&ml.name))
-                                    .context("g_beta index")?;
-                                match bn_mode {
-                                    BnMode::Unit => BnFisher::from_taps(
-                                        &o[gi].data,
-                                        &o[bi].data,
-                                        model.batch,
-                                        ml.channels,
-                                    )
-                                    .as_mat(),
-                                    BnMode::Full => {
-                                        let f = engine2
-                                            .execute(&ml.bn_full, &[&o[gi], &o[bi]])?;
-                                        f[0].as_mat()
-                                    }
-                                }
-                            }
-                        };
-                        mats.push(mat);
-                    }
-                    Ok(mats)
-                }).collect();
-                t_factors += tf.elapsed().as_secs_f64();
-                for (wi, mats) in per_worker.into_iter().enumerate() {
-                    let mats = mats.context("factor construction")?;
-                    if factor_accum[wi].is_empty() {
-                        factor_accum[wi] = mats;
-                    } else {
-                        for (acc, m2) in factor_accum[wi].iter_mut().zip(mats) {
-                            for (a, b) in acc.data.iter_mut().zip(m2.data.iter()) {
-                                *a += *b;
-                            }
-                        }
-                    }
+                for (acc, x) in bn_var_acc[bi].iter_mut().zip(v.iter()) {
+                    *acc += *x;
                 }
             }
         }
-
-        // average accumulations over micro-steps
-        let inv_micro = 1.0 / micro as f32;
-        for g in grad_accum.iter_mut() {
-            for v in g.iter_mut() {
-                *v *= inv_micro;
-            }
-        }
-        for mats in factor_accum.iter_mut() {
-            for m in mats.iter_mut() {
-                for v in m.data.iter_mut() {
-                    *v *= inv_micro;
-                }
-            }
-        }
-
-        // ------------------------- Stage 3: gradient AllReduce (mean)
-        self.comm.all_reduce_mean(&mut grad_accum);
-        let grads_flat = std::mem::take(&mut grad_accum[0]);
-        let grads = self.unflatten_grads(&grads_flat);
-
-        // ----------------- Stages 2-3: ReduceScatterV of the statistics
-        let reduced: Vec<Mat> = if plan.is_empty() {
-            Vec::new()
-        } else {
-            let classes: Vec<StatClass> = plan
-                .iter()
-                .map(|&(_, kind)| match kind {
-                    StatKind::A => StatClass::A,
-                    _ => StatClass::GorF,
-                })
-                .collect();
-            self.comm.reduce_scatter_v(&factor_accum, &classes)
-        };
-
-        // ------------------- Stage 4a: model-parallel factor inversion
-        let t_inv_start = Instant::now();
-        let mut inversion_jobs: Vec<(usize, StatKind, Mat)> = Vec::new();
-        for (&(li, kind), mat) in plan.iter().zip(reduced.into_iter()) {
-            // scheduler update (Alg. 2) happens at the owner
-            let l = &mut self.layers[li];
-            match kind {
-                StatKind::A => {
-                    l.a_stale.refresh(t, &mat);
-                    l.a = Some(mat.clone());
-                }
-                StatKind::G => {
-                    l.g_stale.refresh(t, &mat);
-                    l.g = Some(mat.clone());
-                }
-                StatKind::BnF => {
-                    l.a_stale.refresh(t, &mat);
-                }
-            }
-            inversion_jobs.push((li, kind, mat));
-        }
-        // parallel inversion across owners (min(workers, jobs) threads —
-        // the model-parallel Stage 4)
-        {
-            let engine = self.engine.clone();
-            let model = &self.model;
-            let lambda = self.cfg.lambda;
-            let bn_mode = self.cfg.bn_mode;
-            // snapshot traces for the π split
-            let traces: Vec<(f32, f32)> = inversion_jobs
-                .iter()
-                .map(|&(li, _, _)| {
-                    let l = &self.layers[li];
-                    (
-                        l.a.as_ref().map(|m| m.trace()).unwrap_or(0.0),
-                        l.g.as_ref().map(|m| m.trace()).unwrap_or(0.0),
-                    )
-                })
-                .collect();
-            let jobs = &inversion_jobs;
-            let results: Vec<Result<InvResult>> = (0..jobs.len()).map(|ji| {
-                let (li, kind, ref mat) = jobs[ji];
-                let ml = &model.kfac_layers[li];
-                match kind {
-                    StatKind::BnF if bn_mode == BnMode::Unit => {
-                        // closed-form per-channel blocks — nothing to invert
-                        let fisher = BnFisher {
-                            channels: ml.channels,
-                            blocks: (0..ml.channels)
-                                .map(|c| {
-                                    [mat.data[c * 3], mat.data[c * 3 + 1], mat.data[c * 3 + 2]]
-                                })
-                                .collect(),
-                        };
-                        Ok(InvResult::BnUnit(li, fisher))
-                    }
-                    StatKind::BnF => {
-                        let padded =
-                            HostTensor::from_mat(mat).pad_square(ml.full_bucket);
-                        let damp = HostTensor::scalar(lambda);
-                        let out = engine.execute(&ml.invert_full, &[&padded, &damp])?;
-                        let inv = out[0].slice_square(2 * ml.channels);
-                        Ok(InvResult::BnFull(li, inv.as_mat()))
-                    }
-                    StatKind::A | StatKind::G => {
-                        let (tr_a, tr_g) = traces[ji];
-                        let dims = (ml.a_dim as f32, ml.g_dim as f32);
-                        let (da, dg) = pi_split_traces(tr_a, dims.0, tr_g, dims.1, lambda);
-                        let (exe, bucket, dim, damp) = match kind {
-                            StatKind::A => (&ml.invert_a, ml.a_bucket, ml.a_dim, da),
-                            _ => (&ml.invert_g, ml.g_bucket, ml.g_dim, dg),
-                        };
-                        let padded = HostTensor::from_mat(mat).pad_square(bucket);
-                        let damp = HostTensor::scalar(damp);
-                        let out = engine.execute(exe, &[&padded, &damp])?;
-                        let inv = out[0].slice_square(dim);
-                        Ok(InvResult::Factor(li, kind, inv))
-                    }
-                }
-            }).collect();
-            for r in results {
-                match r.context("inversion")? {
-                    InvResult::BnUnit(li, f) => self.layers[li].bn_fisher = Some(f),
-                    InvResult::BnFull(li, inv) => self.layers[li].bn_full_inv = Some(inv),
-                    InvResult::Factor(li, StatKind::A, inv) => {
-                        self.layers[li].a_inv = Some(inv)
-                    }
-                    InvResult::Factor(li, _, inv) => self.layers[li].g_inv = Some(inv),
-                }
-            }
-        }
-        let t_inverse = t_inv_start.elapsed().as_secs_f64();
-
-        // ------------------- Stage 4b: preconditioning + weight update
-        let t_upd_start = Instant::now();
-        let lr = self.cfg.schedule.lr(t) as f32;
-        let mom = self.cfg.schedule.momentum(t) as f32;
-        self.apply_updates(&grads, lr, mom)?;
-        let t_update = t_upd_start.elapsed().as_secs_f64();
-
-        // --------------------------------- Stage 5: AllGatherV(params)
-        self.comm.all_gather_v_params(self.model.total_param_count());
 
         // BN running stats EMA
-        let denom = (w * micro) as f32;
+        let denom = lanes_n as f32;
         for (bi, (rm, rv)) in self.bn_running.iter_mut().enumerate() {
             if bn_mean_acc.is_empty() {
                 break;
@@ -569,8 +420,8 @@ impl Trainer {
         }
 
         // ------------------------------------------------- bookkeeping
-        let comm_step = self.comm.take_step_stats();
-        let denom_samples = (w * micro) as f64 * self.model.batch as f64;
+        let comm_step = self.comm().take_step_stats();
+        let denom_samples = lanes_n as f64 * self.model.batch as f64;
         let total_stats = self.total_stats();
         let times = StageTimes {
             t_step_exec,
@@ -582,7 +433,7 @@ impl Trainer {
         // profile capture
         self.prof_update.push(t_update);
         if self.ngd() && plan.len() == total_stats {
-            self.prof_full_factors.push(t_factors / (micro * w) as f64);
+            self.prof_full_factors.push(t_factors / lanes_n as f64);
             self.prof_full_inverse.push(t_inverse);
             self.prof_full_stats_bytes
                 .push(comm_step.stats_total() as f64 / micro as f64);
@@ -590,7 +441,7 @@ impl Trainer {
         let rec = StepRecord {
             step: t,
             epoch: self.epoch(),
-            loss: (loss_sum / (w * micro) as f64) as f32,
+            loss: (loss_sum / lanes_n as f64) as f32,
             train_acc: (ncorrect_sum / denom_samples) as f32,
             lr: lr as f64,
             momentum: mom as f64,
@@ -601,6 +452,260 @@ impl Trainer {
         };
         self.log.push(rec.clone());
         Ok(rec)
+    }
+
+    /// Stages 1-4, sequential engine: lanes iterated in canonical order
+    /// on the coordinator thread, reductions through `SimComm`.
+    #[allow(clippy::too_many_arguments)]
+    fn stages_sequential(
+        &mut self,
+        t: u64,
+        plan: &[(usize, StatKind)],
+        batches: Vec<Batch>,
+        seeds: &[Option<u32>],
+        exe: &str,
+        lr: f32,
+        mom: f32,
+    ) -> Result<(Vec<LaneOut>, f64, f64)> {
+        let lanes_n = batches.len();
+        let mut lane_outs: Vec<LaneOut> = Vec::with_capacity(lanes_n);
+        let mut grad_lanes: Vec<Vec<f32>> = Vec::with_capacity(lanes_n);
+        let mut factor_lanes: Vec<Vec<Mat>> = Vec::with_capacity(lanes_n);
+        for (g, batch) in batches.iter().enumerate() {
+            let mut factors: Vec<Mat> = Vec::with_capacity(plan.len());
+            let (lo, grads) = run_lane(
+                self.engine.as_ref(),
+                &self.model,
+                exe,
+                self.cfg.bn_mode,
+                plan,
+                &self.params,
+                batch,
+                seeds[g],
+                |_, m| factors.push(m),
+            )?;
+            lane_outs.push(lo);
+            grad_lanes.push(grads);
+            factor_lanes.push(factors);
+        }
+
+        // ------------------------- Stage 3: gradient AllReduce (mean)
+        self.comm.all_reduce_mean(&mut grad_lanes);
+        let grads_flat = std::mem::take(&mut grad_lanes[0]);
+
+        // ----------------- Stages 2-3: ReduceScatterV of the statistics
+        let reduced: Vec<Mat> = if plan.is_empty() {
+            Vec::new()
+        } else {
+            let classes: Vec<StatClass> = plan.iter().map(|&(_, k)| stat_class(k)).collect();
+            self.comm.reduce_scatter_v(&factor_lanes, &classes)
+        };
+
+        // ------------------- Stage 4a: model-parallel factor inversion
+        let t_inv_start = Instant::now();
+        let mut layer_jobs: Vec<(usize, Vec<(StatKind, Mat)>)> = Vec::new();
+        for (&(li, kind), m) in plan.iter().zip(reduced.into_iter()) {
+            match layer_jobs.last_mut() {
+                Some((last, items)) if *last == li => items.push((kind, m)),
+                _ => layer_jobs.push((li, vec![(kind, m)])),
+            }
+        }
+        for (li, items) in layer_jobs {
+            refresh_and_invert_layer(
+                self.engine.as_ref(),
+                &self.model,
+                self.cfg.lambda,
+                self.cfg.bn_mode,
+                t,
+                li,
+                &mut self.layers[li],
+                items,
+            )?;
+        }
+        let t_inverse = t_inv_start.elapsed().as_secs_f64();
+
+        // ------------------- Stage 4b: preconditioning + weight update
+        let t_upd_start = Instant::now();
+        let mut slots: BTreeMap<usize, ParamSlot> = self
+            .params
+            .iter_mut()
+            .zip(self.velocity.iter_mut())
+            .enumerate()
+            .map(|(i, (p, v))| (i, ParamSlot { p, v }))
+            .collect();
+        for li in 0..self.model.kfac_layers.len() {
+            update_layer(
+                self.engine.as_ref(),
+                &self.model,
+                &self.cfg,
+                li,
+                &self.layers[li],
+                &mut slots,
+                &grads_flat,
+                lr,
+                mom,
+            )?;
+        }
+        let t_update = t_upd_start.elapsed().as_secs_f64();
+        Ok((lane_outs, t_inverse, t_update))
+    }
+
+    /// Stages 1-4, threaded dist engine: one OS thread per worker, ring
+    /// collectives, factor publish + gradient send overlapped with
+    /// compute, owner-parallel inversion and updates.
+    #[allow(clippy::too_many_arguments)]
+    fn stages_threaded(
+        &mut self,
+        t: u64,
+        plan: &[(usize, StatKind)],
+        batches: Vec<Batch>,
+        seeds: &[Option<u32>],
+        exe: &str,
+        lr: f32,
+        mom: f32,
+    ) -> Result<(Vec<LaneOut>, f64, f64)> {
+        let w = self.cfg.workers.max(1);
+        let lanes_n = batches.len();
+        let nlayers = self.model.kfac_layers.len();
+        let dist = self.dist.as_ref().expect("threaded mode has a dist engine");
+        let ring = dist.ring.as_ref();
+        ring.begin_stats(plan.len(), lanes_n);
+
+        // distribute lanes (g mod W) and layer ownership across workers
+        let mut per_worker: Vec<Vec<(usize, Batch)>> = (0..w).map(|_| Vec::new()).collect();
+        for (g, b) in batches.into_iter().enumerate() {
+            per_worker[g % w].push((g, b));
+        }
+        let mut layer_groups: Vec<Vec<(usize, &mut LayerState)>> =
+            (0..w).map(|_| Vec::new()).collect();
+        for (li, l) in self.layers.iter_mut().enumerate() {
+            let o = l.owner % w;
+            layer_groups[o].push((li, l));
+        }
+        let mut layer_items: Vec<Vec<(usize, StatKind)>> = vec![Vec::new(); nlayers];
+        for (idx, &(li, kind)) in plan.iter().enumerate() {
+            layer_items[li].push((idx, kind));
+        }
+
+        let model = &self.model;
+        let cfg = &self.cfg;
+        let params = &self.params;
+        let nparams_total = model.total_param_count();
+        let layer_items = &layer_items;
+
+        // -------- scope 1: Stage 1-2 compute + publish, Stage 3 send,
+        // Stage 4a owner reduce+invert, Stage 3 finish
+        let mut yields: Vec<Result<WorkerYield>> = Vec::with_capacity(w);
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(w);
+            for rank in 0..w {
+                let my_batches = std::mem::take(&mut per_worker[rank]);
+                let group = std::mem::take(&mut layer_groups[rank]);
+                let engine = dist.engine(rank).clone();
+                handles.push(s.spawn(move || {
+                    worker_step(
+                        engine.as_ref(),
+                        ring,
+                        model,
+                        cfg,
+                        t,
+                        plan,
+                        layer_items,
+                        params,
+                        nparams_total,
+                        lanes_n,
+                        exe,
+                        seeds,
+                        my_batches,
+                        group,
+                    )
+                }));
+            }
+            for h in handles {
+                yields.push(match h.join() {
+                    Ok(r) => r,
+                    Err(_) => Err(anyhow::anyhow!("dist worker panicked")),
+                });
+            }
+        });
+        drop(layer_groups); // release the &mut borrows of self.layers
+        let mut workers_out: Vec<WorkerYield> = Vec::with_capacity(w);
+        for y in yields {
+            workers_out.push(y?);
+        }
+        let t_inverse = workers_out.iter().map(|y| y.t_inverse).fold(0.0f64, f64::max);
+        let grads_flat = std::mem::take(&mut workers_out[0].grads);
+        let mut lane_outs_tagged: Vec<(usize, LaneOut)> = Vec::with_capacity(lanes_n);
+        for y in workers_out {
+            lane_outs_tagged.extend(y.lane_outs);
+        }
+        lane_outs_tagged.sort_by_key(|(g, _)| *g);
+        let lane_outs: Vec<LaneOut> = lane_outs_tagged.into_iter().map(|(_, lo)| lo).collect();
+
+        // -------- scope 2: Stage 4b owner-parallel updates (disjoint
+        // parameter partition, layers now read-only)
+        let t_upd_start = Instant::now();
+        let mut powner = vec![usize::MAX; self.params.len()];
+        for (li, ml) in self.model.kfac_layers.iter().enumerate() {
+            let o = self.layers[li].owner % w;
+            if ml.is_bn() {
+                powner[self.model.param_index(&ml.gamma_param).context("gamma param")?] = o;
+                powner[self.model.param_index(&ml.beta_param).context("beta param")?] = o;
+            } else {
+                powner[self.model.param_index(&ml.weight_param).context("weight param")?] = o;
+            }
+        }
+        let mut slot_groups: Vec<BTreeMap<usize, ParamSlot>> =
+            (0..w).map(|_| BTreeMap::new()).collect();
+        for (pi, (p, v)) in self.params.iter_mut().zip(self.velocity.iter_mut()).enumerate() {
+            let o = powner[pi];
+            if o != usize::MAX {
+                slot_groups[o].insert(pi, ParamSlot { p, v });
+            }
+        }
+        let layers = &self.layers;
+        let model = &self.model;
+        let cfg = &self.cfg;
+        let grads_ref = &grads_flat;
+        let mut upd_results: Vec<Result<()>> = Vec::with_capacity(w);
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(w);
+            for rank in 0..w {
+                let slots = std::mem::take(&mut slot_groups[rank]);
+                let engine = dist.engine(rank).clone();
+                handles.push(s.spawn(move || -> Result<()> {
+                    let mut slots = slots;
+                    for (li, layer) in layers.iter().enumerate() {
+                        if layer.owner % w != rank {
+                            continue;
+                        }
+                        update_layer(
+                            engine.as_ref(),
+                            model,
+                            cfg,
+                            li,
+                            layer,
+                            &mut slots,
+                            grads_ref,
+                            lr,
+                            mom,
+                        )?;
+                    }
+                    Ok(())
+                }));
+            }
+            for h in handles {
+                upd_results.push(match h.join() {
+                    Ok(r) => r,
+                    Err(_) => Err(anyhow::anyhow!("dist update worker panicked")),
+                });
+            }
+        });
+        for r in upd_results {
+            r?;
+        }
+        let t_update = t_upd_start.elapsed().as_secs_f64();
+        Ok((lane_outs, t_inverse, t_update))
     }
 
     /// Stage-4 layer→process ownership (round-robin, as in §5.1 when
@@ -619,111 +724,6 @@ impl Trainer {
 
     pub fn epoch(&self) -> f64 {
         self.cfg.schedule.epoch_of(self.step)
-    }
-
-    fn unflatten_grads(&self, flat: &[f32]) -> Vec<HostTensor> {
-        let mut out = Vec::with_capacity(self.params.len());
-        let mut off = 0;
-        for p in &self.model.params {
-            let n: usize = p.shape.iter().product();
-            out.push(HostTensor::new(p.shape.clone(), flat[off..off + n].to_vec()));
-            off += n;
-        }
-        out
-    }
-
-    /// Stage 4b: per-layer preconditioned updates + momentum + rescale.
-    fn apply_updates(&mut self, grads: &[HostTensor], lr: f32, mom: f32) -> Result<()> {
-        let nlayers = self.model.kfac_layers.len();
-        for li in 0..nlayers {
-            let ml = self.model.kfac_layers[li].clone();
-            if ml.is_bn() {
-                let gi = self.model.param_index(&ml.gamma_param).context("gamma param")?;
-                let bi = self.model.param_index(&ml.beta_param).context("beta param")?;
-                let (dir_g, dir_b) = if self.ngd() {
-                    match self.cfg.bn_mode {
-                        BnMode::Unit => {
-                            let f = self.layers[li]
-                                .bn_fisher
-                                .as_ref()
-                                .context("bn fisher missing")?;
-                            let (g, b) = f.precondition(
-                                &grads[gi].data,
-                                &grads[bi].data,
-                                self.cfg.lambda,
-                            );
-                            (g, b)
-                        }
-                        BnMode::Full => {
-                            let inv = self.layers[li]
-                                .bn_full_inv
-                                .as_ref()
-                                .context("bn full inverse missing")?;
-                            BnFullFisher::apply_inverse(inv, &grads[gi].data, &grads[bi].data)
-                        }
-                    }
-                } else {
-                    (grads[gi].data.clone(), grads[bi].data.clone())
-                };
-                let mut dg = HostTensor::new(grads[gi].shape.clone(), dir_g);
-                let mut db = HostTensor::new(grads[bi].shape.clone(), dir_b);
-                if !dg.norm().is_finite() {
-                    dg = grads[gi].clone();
-                }
-                if !db.norm().is_finite() {
-                    db = grads[bi].clone();
-                }
-                self.clip_direction(&mut dg, &self.params[gi].clone(), lr);
-                self.clip_direction(&mut db, &self.params[bi].clone(), lr);
-                spngd_update(&mut self.params[gi], &mut self.velocity[gi], &dg, lr, mom);
-                spngd_update(&mut self.params[bi], &mut self.velocity[bi], &db, lr, mom);
-            } else {
-                let wi = self.model.param_index(&ml.weight_param).context("weight param")?;
-                let (m, n) = ml.grad_shape;
-                let gmat = grads[wi].clone().reshape(vec![m, n]);
-                let mut dir = if self.ngd() {
-                    let (ainv, ginv) = {
-                        let l = &self.layers[li];
-                        (
-                            l.a_inv.clone().context("A inverse missing")?,
-                            l.g_inv.clone().context("G inverse missing")?,
-                        )
-                    };
-                    let out = self.engine.execute(&ml.precond, &[&ginv, &gmat, &ainv])?;
-                    out[0].clone().reshape(grads[wi].shape.clone())
-                } else {
-                    grads[wi].clone()
-                };
-                // numerical guard: a degenerate Fisher (possible when the
-                // loss approaches zero) can blow up the inverse — fall
-                // back to the raw gradient for this step
-                if !dir.norm().is_finite() {
-                    dir = grads[wi].clone();
-                }
-                self.clip_direction(&mut dir, &self.params[wi].clone(), lr);
-                spngd_update(&mut self.params[wi], &mut self.velocity[wi], &dir, lr, mom);
-                // Normalizing Weights (Eq. 24) — conv layers (BN-covered);
-                // the FC head keeps its scale (no BN follows it here).
-                if self.cfg.weight_rescale && ml.kind == "conv" {
-                    rescale_weight(&mut self.params[wi], m);
-                }
-            }
-        }
-        Ok(())
-    }
-
-    /// Trust-ratio clip (applied to the *preconditioned* direction):
-    /// ensures ||lr * dir|| <= clip_update_ratio * ||w||.
-    fn clip_direction(&self, dir: &mut HostTensor, w: &HostTensor, lr: f32) {
-        let clip = self.cfg.clip_update_ratio;
-        if clip <= 0.0 || lr <= 0.0 {
-            return;
-        }
-        let wn = w.norm().max(1e-3);
-        let dn = dir.norm() * lr;
-        if dn > clip * wn {
-            dir.scale_inplace(clip * wn / dn);
-        }
     }
 
     /// Validation over `batches` held-out batches: (loss, accuracy).
@@ -820,10 +820,432 @@ impl Trainer {
     }
 }
 
-enum InvResult {
-    Factor(usize, StatKind, HostTensor),
-    BnUnit(usize, BnFisher),
-    BnFull(usize, Mat),
+// ------------------------------------------------------ shared helpers
+// One math path for both engines: these free functions are called by the
+// sequential coordinator loop and by the dist worker threads, so the
+// two schedules produce bit-identical results by construction.
+
+fn stat_class(kind: StatKind) -> StatClass {
+    match kind {
+        StatKind::A => StatClass::A,
+        _ => StatClass::GorF,
+    }
+}
+
+/// Reduced-mat shape of a planned statistic — used to keep the collective
+/// protocol alive with zero payloads when a worker errors mid-step.
+fn stat_shape(model: &ModelManifest, li: usize, kind: StatKind, bn_mode: BnMode) -> (usize, usize) {
+    let ml = &model.kfac_layers[li];
+    match kind {
+        StatKind::A => (ml.a_dim, ml.a_dim),
+        StatKind::G => (ml.g_dim, ml.g_dim),
+        StatKind::BnF => match bn_mode {
+            BnMode::Unit => (ml.channels, 3),
+            BnMode::Full => (2 * ml.channels, 2 * ml.channels),
+        },
+    }
+}
+
+/// Stage 1-2 for one lane: run the step executable, flatten the lane's
+/// gradients, construct the planned statistics in plan order and hand
+/// each to `on_factor` the moment it is ready (the threaded engine
+/// publishes them to the ring there — Alg. 3's overlap point).
+#[allow(clippy::too_many_arguments)]
+fn run_lane(
+    engine: &dyn Executor,
+    model: &ModelManifest,
+    exe: &str,
+    bn_mode: BnMode,
+    plan: &[(usize, StatKind)],
+    params: &[HostTensor],
+    batch: &Batch,
+    seed: Option<u32>,
+    mut on_factor: impl FnMut(usize, Mat),
+) -> Result<(LaneOut, Vec<f32>)> {
+    let mut inputs: Vec<&HostTensor> = params.iter().collect();
+    inputs.push(&batch.x);
+    inputs.push(&batch.t);
+    let te = Instant::now();
+    let outs = engine.execute_seeded(exe, &inputs, seed).context("step exec")?;
+    let t_exec = te.elapsed().as_secs_f64();
+
+    // flatten grads (outputs 2..2+nparams) in canonical param order
+    let nparams = params.len();
+    let mut grads: Vec<f32> = Vec::with_capacity(model.total_param_count());
+    for pi in 0..nparams {
+        grads.extend_from_slice(&outs[2 + pi].data);
+    }
+
+    // BN batch statistics per bn_order entry
+    let mut bn_stats = Vec::with_capacity(model.bn_order.len());
+    for bname in &model.bn_order {
+        let mi = model.output_index("bn_mean", Some(bname)).context("bn_mean index")?;
+        let vi = model.output_index("bn_var", Some(bname)).context("bn_var index")?;
+        bn_stats.push((outs[mi].data.clone(), outs[vi].data.clone()));
+    }
+
+    // statistics construction for planned refreshes
+    let tf = Instant::now();
+    for (item, &(li, kind)) in plan.iter().enumerate() {
+        let ml = &model.kfac_layers[li];
+        let mat = match kind {
+            StatKind::A => {
+                let ti = model
+                    .output_index("a_tap", Some(&ml.name))
+                    .context("a_tap index")?;
+                let f = engine.execute(&ml.factor_a, &[&outs[ti]])?;
+                f[0].as_mat()
+            }
+            StatKind::G => {
+                let ti = model
+                    .output_index("g_tap", Some(&ml.name))
+                    .context("g_tap index")?;
+                let tap = &outs[ti];
+                let f = if ml.kind == "conv" {
+                    let t2 = tap.nchw_to_rows_channels();
+                    engine.execute(&ml.factor_g, &[&t2])?
+                } else {
+                    engine.execute(&ml.factor_g, &[tap])?
+                };
+                f[0].as_mat()
+            }
+            StatKind::BnF => {
+                let gi = model
+                    .output_index("g_gamma", Some(&ml.name))
+                    .context("g_gamma index")?;
+                let bi = model
+                    .output_index("g_beta", Some(&ml.name))
+                    .context("g_beta index")?;
+                match bn_mode {
+                    BnMode::Unit => BnFisher::from_taps(
+                        &outs[gi].data,
+                        &outs[bi].data,
+                        model.batch,
+                        ml.channels,
+                    )
+                    .as_mat(),
+                    BnMode::Full => {
+                        let f = engine.execute(&ml.bn_full, &[&outs[gi], &outs[bi]])?;
+                        f[0].as_mat()
+                    }
+                }
+            }
+        };
+        on_factor(item, mat);
+    }
+    let t_factors = tf.elapsed().as_secs_f64();
+
+    let lo = LaneOut {
+        loss: outs[0].data[0] as f64,
+        ncorrect: outs[1].data[0] as f64,
+        bn_stats,
+        t_exec,
+        t_factors,
+    };
+    Ok((lo, grads))
+}
+
+/// Stage 4a for one layer at its owner: Alg. 2 scheduler refresh, owner
+/// factor-cache update, then damped inversion of the freshly reduced
+/// statistics (π-split damping from the cached traces).
+fn refresh_and_invert_layer(
+    engine: &dyn Executor,
+    model: &ModelManifest,
+    lambda: f32,
+    bn_mode: BnMode,
+    t: u64,
+    li: usize,
+    layer: &mut LayerState,
+    items: Vec<(StatKind, Mat)>,
+) -> Result<()> {
+    let ml = &model.kfac_layers[li];
+    for (kind, m) in &items {
+        match kind {
+            StatKind::A => {
+                layer.a_stale.refresh(t, m);
+                layer.a = Some(m.clone());
+            }
+            StatKind::G => {
+                layer.g_stale.refresh(t, m);
+                layer.g = Some(m.clone());
+            }
+            StatKind::BnF => {
+                layer.a_stale.refresh(t, m);
+            }
+        }
+    }
+    // traces for the π split (both factors' traces are known even when
+    // only one refreshed this step)
+    let tr_a = layer.a.as_ref().map(|m| m.trace()).unwrap_or(0.0);
+    let tr_g = layer.g.as_ref().map(|m| m.trace()).unwrap_or(0.0);
+    for (kind, mat) in items {
+        match kind {
+            StatKind::BnF if bn_mode == BnMode::Unit => {
+                // closed-form per-channel blocks — nothing to invert
+                layer.bn_fisher = Some(BnFisher {
+                    channels: ml.channels,
+                    blocks: (0..ml.channels)
+                        .map(|c| [mat.data[c * 3], mat.data[c * 3 + 1], mat.data[c * 3 + 2]])
+                        .collect(),
+                });
+            }
+            StatKind::BnF => {
+                let padded = HostTensor::from_mat(&mat).pad_square(ml.full_bucket);
+                let damp = HostTensor::scalar(lambda);
+                let out = engine.execute(&ml.invert_full, &[&padded, &damp])?;
+                let inv = out[0].slice_square(2 * ml.channels);
+                layer.bn_full_inv = Some(inv.as_mat());
+            }
+            StatKind::A | StatKind::G => {
+                let (da, dg) =
+                    pi_split_traces(tr_a, ml.a_dim as f32, tr_g, ml.g_dim as f32, lambda);
+                let (exe, bucket, dim, damp) = match kind {
+                    StatKind::A => (&ml.invert_a, ml.a_bucket, ml.a_dim, da),
+                    _ => (&ml.invert_g, ml.g_bucket, ml.g_dim, dg),
+                };
+                let padded = HostTensor::from_mat(&mat).pad_square(bucket);
+                let damp = HostTensor::scalar(damp);
+                let out = engine.execute(exe, &[&padded, &damp])?;
+                let inv = out[0].slice_square(dim);
+                match kind {
+                    StatKind::A => layer.a_inv = Some(inv),
+                    _ => layer.g_inv = Some(inv),
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// One parameter's update slot (weight + velocity), partitioned by layer
+/// owner so dist workers update disjoint parameters concurrently.
+struct ParamSlot<'a> {
+    p: &'a mut HostTensor,
+    v: &'a mut HostTensor,
+}
+
+/// The lane-mean gradient of parameter `pi`, sliced from the flat
+/// all-reduced vector.
+fn grad_tensor(model: &ModelManifest, flat: &[f32], pi: usize) -> HostTensor {
+    let mut off = 0usize;
+    for p in &model.params[..pi] {
+        off += p.shape.iter().product::<usize>();
+    }
+    let n: usize = model.params[pi].shape.iter().product();
+    HostTensor::new(model.params[pi].shape.clone(), flat[off..off + n].to_vec())
+}
+
+/// Trust-ratio clip (applied to the *preconditioned* direction):
+/// ensures ||lr * dir|| <= clip * ||w||.
+fn clip_direction(clip: f32, dir: &mut HostTensor, w: &HostTensor, lr: f32) {
+    if clip <= 0.0 || lr <= 0.0 {
+        return;
+    }
+    let wn = w.norm().max(1e-3);
+    let dn = dir.norm() * lr;
+    if dn > clip * wn {
+        dir.scale_inplace(clip * wn / dn);
+    }
+}
+
+/// Stage 4b for one layer at its owner: preconditioned direction,
+/// numerical guard, trust-ratio clip, momentum update (+ Normalizing
+/// Weights for conv layers).
+#[allow(clippy::too_many_arguments)]
+fn update_layer(
+    engine: &dyn Executor,
+    model: &ModelManifest,
+    cfg: &TrainerCfg,
+    li: usize,
+    layer: &LayerState,
+    slots: &mut BTreeMap<usize, ParamSlot>,
+    grads_flat: &[f32],
+    lr: f32,
+    mom: f32,
+) -> Result<()> {
+    let ngd = cfg.optimizer == Optim::SpNgd;
+    let ml = &model.kfac_layers[li];
+    if ml.is_bn() {
+        let gi = model.param_index(&ml.gamma_param).context("gamma param")?;
+        let bi = model.param_index(&ml.beta_param).context("beta param")?;
+        let g_gamma = grad_tensor(model, grads_flat, gi);
+        let g_beta = grad_tensor(model, grads_flat, bi);
+        let (dir_g, dir_b) = if ngd {
+            match cfg.bn_mode {
+                BnMode::Unit => {
+                    let f = layer.bn_fisher.as_ref().context("bn fisher missing")?;
+                    f.precondition(&g_gamma.data, &g_beta.data, cfg.lambda)
+                }
+                BnMode::Full => {
+                    let inv = layer.bn_full_inv.as_ref().context("bn full inverse missing")?;
+                    BnFullFisher::apply_inverse(inv, &g_gamma.data, &g_beta.data)
+                }
+            }
+        } else {
+            (g_gamma.data.clone(), g_beta.data.clone())
+        };
+        let mut dg = HostTensor::new(g_gamma.shape.clone(), dir_g);
+        let mut db = HostTensor::new(g_beta.shape.clone(), dir_b);
+        if !dg.norm().is_finite() {
+            dg = g_gamma.clone();
+        }
+        if !db.norm().is_finite() {
+            db = g_beta.clone();
+        }
+        {
+            let slot = slots.get_mut(&gi).context("gamma slot")?;
+            clip_direction(cfg.clip_update_ratio, &mut dg, slot.p, lr);
+            spngd_update(slot.p, slot.v, &dg, lr, mom);
+        }
+        {
+            let slot = slots.get_mut(&bi).context("beta slot")?;
+            clip_direction(cfg.clip_update_ratio, &mut db, slot.p, lr);
+            spngd_update(slot.p, slot.v, &db, lr, mom);
+        }
+    } else {
+        let wi = model.param_index(&ml.weight_param).context("weight param")?;
+        let gw = grad_tensor(model, grads_flat, wi);
+        let (m, n) = ml.grad_shape;
+        let gmat = gw.clone().reshape(vec![m, n]);
+        let mut dir = if ngd {
+            let ainv = layer.a_inv.as_ref().context("A inverse missing")?;
+            let ginv = layer.g_inv.as_ref().context("G inverse missing")?;
+            let out = engine.execute(&ml.precond, &[ginv, &gmat, ainv])?;
+            out[0].clone().reshape(gw.shape.clone())
+        } else {
+            gw.clone()
+        };
+        // numerical guard: a degenerate Fisher (possible when the loss
+        // approaches zero) can blow up the inverse — fall back to the
+        // raw gradient for this step
+        if !dir.norm().is_finite() {
+            dir = gw.clone();
+        }
+        let slot = slots.get_mut(&wi).context("weight slot")?;
+        clip_direction(cfg.clip_update_ratio, &mut dir, slot.p, lr);
+        spngd_update(slot.p, slot.v, &dir, lr, mom);
+        // Normalizing Weights (Eq. 24) — conv layers (BN-covered);
+        // the FC head keeps its scale (no BN follows it here).
+        if cfg.weight_rescale && ml.kind == "conv" {
+            rescale_weight(slot.p, m);
+        }
+    }
+    Ok(())
+}
+
+/// The body of one dist worker thread: Stage 1-2 compute with
+/// publish-as-ready factor statistics, the gradient AllReduce send,
+/// Stage 4a reduce+invert for owned layers (overlapping slower workers'
+/// compute), then the AllReduce finish. On error the worker keeps the
+/// collective protocol alive with zero payloads so its peers never
+/// deadlock — the step then fails cleanly at the join.
+#[allow(clippy::too_many_arguments)]
+fn worker_step(
+    engine: &dyn Executor,
+    ring: &RingComm,
+    model: &ModelManifest,
+    cfg: &TrainerCfg,
+    t: u64,
+    plan: &[(usize, StatKind)],
+    layer_items: &[Vec<(usize, StatKind)>],
+    params: &[HostTensor],
+    nparams_total: usize,
+    lanes_n: usize,
+    exe: &str,
+    seeds: &[Option<u32>],
+    my_batches: Vec<(usize, Batch)>,
+    group: Vec<(usize, &mut LayerState)>,
+) -> Result<WorkerYield> {
+    let mut first_err: Option<anyhow::Error> = None;
+    let mut lane_outs: Vec<(usize, LaneOut)> = Vec::with_capacity(my_batches.len());
+    let mut grad_lanes: Vec<(usize, Vec<f32>)> = Vec::with_capacity(my_batches.len());
+
+    // Stage 1-2: compute lanes, publishing each factor as it is built
+    for (g, batch) in my_batches {
+        let mut published = 0usize;
+        let res = if first_err.is_none() {
+            Some(run_lane(
+                engine,
+                model,
+                exe,
+                cfg.bn_mode,
+                plan,
+                params,
+                &batch,
+                seeds[g],
+                |item, m| {
+                    ring.publish_stat(item, g, m);
+                    published += 1;
+                },
+            ))
+        } else {
+            None
+        };
+        match res {
+            Some(Ok((lo, grads))) => {
+                lane_outs.push((g, lo));
+                grad_lanes.push((g, grads));
+            }
+            other => {
+                if let Some(Err(e)) = other {
+                    first_err = Some(e);
+                }
+                // keep peers unblocked: zero payloads for this lane
+                for (item, &(li, kind)) in plan.iter().enumerate().skip(published) {
+                    let (r, c) = stat_shape(model, li, kind, cfg.bn_mode);
+                    ring.publish_stat(item, g, Mat::zeros(r, c));
+                }
+                lane_outs.push((g, LaneOut::default()));
+                grad_lanes.push((g, vec![0.0; nparams_total]));
+            }
+        }
+    }
+
+    // Stage 3 send: gradient lanes into the AllReduce round
+    {
+        let posts: Vec<(usize, &Vec<f32>)> = grad_lanes.iter().map(|(g, b)| (*g, b)).collect();
+        ring.grad_post(&posts, lanes_n);
+    }
+
+    // Stage 4a: reduce + invert owned layers (overlaps peers' compute)
+    let t_inv0 = Instant::now();
+    for (li, layer) in group {
+        let items = &layer_items[li];
+        if items.is_empty() {
+            continue;
+        }
+        let mut mats: Vec<(StatKind, Mat)> = Vec::with_capacity(items.len());
+        for &(idx, kind) in items {
+            mats.push((kind, ring.reduce_stat(idx, stat_class(kind))));
+        }
+        if first_err.is_none() {
+            if let Err(e) = refresh_and_invert_layer(
+                engine,
+                model,
+                cfg.lambda,
+                cfg.bn_mode,
+                t,
+                li,
+                layer,
+                mats,
+            ) {
+                first_err = Some(e);
+            }
+        }
+    }
+    let t_inverse = t_inv0.elapsed().as_secs_f64();
+
+    // Stage 3 finish: chunked reduce + drain the mean into our lanes
+    {
+        let mut finishes: Vec<(usize, &mut Vec<f32>)> =
+            grad_lanes.iter_mut().map(|(g, b)| (*g, b)).collect();
+        ring.grad_finish(&mut finishes);
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    let grads = grad_lanes.into_iter().next().map(|(_, b)| b).unwrap_or_default();
+    Ok(WorkerYield { lane_outs, grads, t_inverse })
 }
 
 /// π split from cached traces (both factors' traces are known even when

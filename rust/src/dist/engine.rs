@@ -1,0 +1,41 @@
+//! Per-worker execution resources for the threaded dist engine.
+//!
+//! The step pipeline itself lives in `coordinator::trainer` (it is the
+//! same Stage 1–5 math whichever engine runs it); this module owns what
+//! is *per worker*: one forked [`Executor`] per data-parallel worker
+//! (own scratch arena — the per-step hot loops never contend) and the
+//! [`RingComm`] the worker threads communicate through.
+
+use std::sync::Arc;
+
+use crate::dist::ring::RingComm;
+use crate::runtime::Executor;
+
+/// One communicator + one executor per data-parallel worker thread.
+pub struct DistEngine {
+    pub ring: Arc<RingComm>,
+    engines: Vec<Arc<dyn Executor>>,
+}
+
+impl DistEngine {
+    /// Fork `workers` executor instances off a prototype. Backends that
+    /// cannot provide isolated instances (`fork_worker() == None`, e.g.
+    /// the PJRT engine, whose compiled-executable cache is thread-safe
+    /// and worth sharing) are shared across workers instead.
+    pub fn new(prototype: &Arc<dyn Executor>, workers: usize) -> Self {
+        let workers = workers.max(1);
+        let engines = (0..workers)
+            .map(|_| prototype.fork_worker().unwrap_or_else(|| prototype.clone()))
+            .collect();
+        DistEngine { ring: Arc::new(RingComm::new(workers)), engines }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// The executor dedicated to worker `rank`.
+    pub fn engine(&self, rank: usize) -> &Arc<dyn Executor> {
+        &self.engines[rank]
+    }
+}

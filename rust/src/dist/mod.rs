@@ -1,0 +1,33 @@
+//! `dist` — the shared-memory multi-worker execution engine.
+//!
+//! The sequential coordinator iterates simulated GPUs in one thread, so
+//! its Stage 1/2 wall-clock scales linearly with the worker count. This
+//! subsystem makes each data-parallel worker a real OS thread with its
+//! own [`crate::runtime::Executor`] instance (forked via
+//! `Executor::fork_worker`, so scratch arenas never contend) and real
+//! shared-memory collectives:
+//!
+//! ```text
+//! coordinator   draw global batch (canonical lane order), plan refreshes
+//! worker w      Stage 1+2: exec lanes g ≡ w (mod W); publish each factor
+//!               to the statistic board the moment it is built  ── overlap
+//! worker w      grad_post (the AllReduce send)                 ── overlap
+//! worker w      Stage 4a: reduce + invert owned layers while slower
+//!               workers are still in their backward/factor phase
+//! worker w      grad_finish (chunked reduce + drain)
+//! worker w      Stage 4b: precondition + update owned layers
+//! coordinator   Stage 5 AllGatherV accounting, loss/BN reductions, log
+//! ```
+//!
+//! [`ring::RingComm`] implements the collectives behind the shared
+//! [`crate::collectives::Collective`] trait, byte-for-byte compatible
+//! with `SimComm`'s accounting and bit-for-bit compatible with its
+//! canonical-lane reductions — the threaded engine therefore produces
+//! the same step-by-step losses as the sequential coordinator (see
+//! `tests/dist_engine.rs`).
+
+pub mod engine;
+pub mod ring;
+
+pub use engine::DistEngine;
+pub use ring::RingComm;

@@ -1,0 +1,603 @@
+//! Shared-memory ring collectives for the threaded dist engine.
+//!
+//! [`RingComm`] is the concurrent counterpart of `collectives::SimComm`:
+//! every data-parallel worker is a real OS thread, and the collectives
+//! actually move data between them through chunked shared rounds —
+//! publish-as-ready statistic slots (ReduceScatterV), a chunk-striped
+//! gradient AllReduce, and an owner-segment AllGatherV. Byte accounting
+//! is formula-identical to `SimComm` (per-GPU ring traffic, packed
+//! symmetric sizes, fp16 wire toggle), so the α-β cost model and the
+//! Fig. 5/6 series keep working unchanged whichever communicator runs.
+//!
+//! ## Determinism contract
+//!
+//! A textbook ring reduce-scatter accumulates partial sums in ring-hop
+//! order, which makes results depend on the worker count and the segment
+//! rotation. Here the *movement* is concurrent and chunked, but every
+//! reduction is performed by the receiving owner in canonical lane order
+//! with f64 accumulators — the exact operation sequence `SimComm` runs.
+//! That buys two properties the test suite asserts:
+//!
+//! - the threaded engine is bit-identical to the sequential coordinator
+//!   at every step, and
+//! - results are invariant to the worker count for a fixed global lane
+//!   total (workers × grad-accumulation), so `workers=1` runs are ground
+//!   truth for `workers=4` runs.
+//!
+//! Wire bytes are still charged at the ideal ring's `(p−1)/p` per-GPU
+//! traffic — the accounting models the cluster, not the in-process copy.
+//!
+//! ## Overlap
+//!
+//! Statistic slots are published the moment a worker finishes each
+//! factor product (`publish_stat`), so owners start reducing and
+//! inverting early layers while slower workers are still in their
+//! backward/factor phase — Alg. 3's comm/compute overlap. The gradient
+//! AllReduce is split into [`RingComm::grad_post`] (the send, issued
+//! right after the backward pass) and [`RingComm::grad_finish`] (the
+//! reduce + drain, issued after the owner's inversions), so gradient
+//! communication overlaps Stage-4a factor inversion.
+
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+use crate::collectives::comm::{
+    lane_mean, lane_mean_mats, ring_wire_bytes, Collective, CommStats, StatClass,
+};
+use crate::linalg::{packed_len, Mat};
+
+/// Default AllReduce chunk granularity (elements).
+pub const DEFAULT_CHUNK_ELEMS: usize = 4096;
+
+/// Upper bound on any intra-round wait. A peer thread that died (e.g.
+/// panicked in a kernel) can never satisfy the round, so rather than
+/// hanging the step forever, waits convert to a loud panic after this
+/// long. The error path proper never needs it — `worker_step` keeps the
+/// protocol alive with zero payloads on `Err` — this is the backstop
+/// for unwinds.
+const STALL_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// `Condvar::wait` with the stall backstop: panics (instead of hanging)
+/// when no progress signal arrives for [`STALL_TIMEOUT`].
+fn wait_round<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>, what: &str) -> MutexGuard<'a, T> {
+    let (g, timeout) = cv.wait_timeout(g, STALL_TIMEOUT).unwrap();
+    assert!(
+        !timeout.timed_out(),
+        "dist collective stalled waiting for {what} — a peer worker thread likely died"
+    );
+    g
+}
+
+// ----------------------------------------------------------- rounds
+
+/// Statistic board: `slots[item][lane]` published as factors finish,
+/// reduced once per item by its owner.
+#[derive(Default)]
+struct StatCtl {
+    active: bool,
+    lanes: usize,
+    n_items: usize,
+    slots: Vec<Vec<Option<Mat>>>,
+    posted: Vec<usize>,
+    reduced_items: usize,
+    elems_a: usize,
+    elems_g: usize,
+}
+
+/// Gradient AllReduce round: lanes posted whole, the element range
+/// reduced in chunks claimed off a self-scheduling cursor, the mean
+/// drained back into every lane.
+#[derive(Default)]
+struct GradCtl {
+    active: bool,
+    n: usize,
+    total_lanes: usize,
+    posted: usize,
+    lanes: Vec<Option<Vec<f32>>>,
+    /// posted lanes frozen behind an Arc once complete (shared read-only
+    /// by the concurrent chunk reducers)
+    frozen: Option<Arc<Vec<Option<Vec<f32>>>>>,
+    reduced: Vec<f32>,
+    /// self-scheduling chunk cursor (any participating rank claims the
+    /// next unreduced chunk — no rank is load-bearing, so a rank with no
+    /// lanes may skip the round entirely)
+    next_chunk: usize,
+    done_chunks: usize,
+    nchunks: usize,
+    drained: usize,
+}
+
+/// AllGatherV round: owners post their segments, everyone copies out.
+#[derive(Default)]
+struct GatherCtl {
+    active: bool,
+    n_segs: usize,
+    posted: usize,
+    segs: Vec<Option<Vec<f32>>>,
+    /// ranks that entered this round (an ownerless rank must still join
+    /// the *current* round during its drain phase, not queue for the next)
+    joined: usize,
+    drained: usize,
+}
+
+/// Reusable sense barrier.
+#[derive(Default)]
+struct BarCtl {
+    count: usize,
+    generation: u64,
+}
+
+/// Concurrent shared-memory communicator over `p` worker threads with
+/// `SimComm`-parity byte accounting. See the module docs for the
+/// determinism and overlap contracts.
+pub struct RingComm {
+    p: usize,
+    /// AllReduce chunk granularity (elements); odd sizes are fine.
+    pub chunk_elems: usize,
+    /// communicate only the upper triangle of symmetric matrices (§5.2)
+    pub symmetric_packing: bool,
+    /// bytes per element on the wire (4 = f32, 2 = fp16 communication)
+    pub wire_elem_bytes: u64,
+    stats: Mutex<CommStats>,
+    step_stats: Mutex<CommStats>,
+    stat: Mutex<StatCtl>,
+    stat_cv: Condvar,
+    grad: Mutex<GradCtl>,
+    grad_cv: Condvar,
+    gather: Mutex<GatherCtl>,
+    gather_cv: Condvar,
+    bar: Mutex<BarCtl>,
+    bar_cv: Condvar,
+}
+
+impl RingComm {
+    pub fn new(p: usize) -> Self {
+        RingComm {
+            p: p.max(1),
+            chunk_elems: DEFAULT_CHUNK_ELEMS,
+            symmetric_packing: true,
+            wire_elem_bytes: 4,
+            stats: Mutex::new(CommStats::default()),
+            step_stats: Mutex::new(CommStats::default()),
+            stat: Mutex::new(StatCtl::default()),
+            stat_cv: Condvar::new(),
+            grad: Mutex::new(GradCtl::default()),
+            grad_cv: Condvar::new(),
+            gather: Mutex::new(GatherCtl::default()),
+            gather_cv: Condvar::new(),
+            bar: Mutex::new(BarCtl::default()),
+            bar_cv: Condvar::new(),
+        }
+    }
+
+    pub fn world(&self) -> usize {
+        self.p
+    }
+
+    fn elems_to_bytes(&self, elems: usize) -> u64 {
+        ring_wire_bytes(self.p, self.wire_elem_bytes, elems)
+    }
+
+    fn charge<F: Fn(&mut CommStats)>(&self, f: F) {
+        f(&mut self.stats.lock().unwrap());
+        f(&mut self.step_stats.lock().unwrap());
+    }
+
+    /// Block until all `p` workers arrive (reusable).
+    pub fn barrier(&self) {
+        let mut g = self.bar.lock().unwrap();
+        let gen = g.generation;
+        g.count += 1;
+        if g.count == self.p {
+            g.count = 0;
+            g.generation += 1;
+            self.bar_cv.notify_all();
+        } else {
+            while g.generation == gen {
+                g = wait_round(&self.bar_cv, g, "barrier peers");
+            }
+        }
+    }
+
+    // ------------------------------------------- ReduceScatterV (stats)
+
+    /// Open a statistic round: `n_items` statistics, each with `lanes`
+    /// per-(micro-step × worker) contributions. Called once per step by
+    /// the coordinator before the worker fan-out; a no-op when the step
+    /// refreshes nothing.
+    pub fn begin_stats(&self, n_items: usize, lanes: usize) {
+        if n_items == 0 {
+            return;
+        }
+        let mut st = self.stat.lock().unwrap();
+        assert!(!st.active, "previous statistic round still open");
+        st.active = true;
+        st.lanes = lanes;
+        st.n_items = n_items;
+        st.slots = (0..n_items).map(|_| (0..lanes).map(|_| None).collect()).collect();
+        st.posted = vec![0; n_items];
+        st.reduced_items = 0;
+        st.elems_a = 0;
+        st.elems_g = 0;
+    }
+
+    /// Publish lane `lane`'s contribution to statistic `item` — called by
+    /// a worker the moment the factor product finishes, which is what
+    /// lets owners start reducing while other workers still compute.
+    pub fn publish_stat(&self, item: usize, lane: usize, m: Mat) {
+        let mut st = self.stat.lock().unwrap();
+        assert!(st.active, "publish_stat outside a statistic round");
+        assert!(st.slots[item][lane].is_none(), "duplicate publish for (item, lane)");
+        st.slots[item][lane] = Some(m);
+        st.posted[item] += 1;
+        if st.posted[item] == st.lanes {
+            self.stat_cv.notify_all();
+        }
+    }
+
+    /// Owner-side reduction of statistic `item`: waits until every lane
+    /// has published, then reduces in canonical lane order (f64). The
+    /// last reduced item of the round closes it and charges the ring's
+    /// ReduceScatterV wire bytes (packed symmetric sizes per class).
+    pub fn reduce_stat(&self, item: usize, class: StatClass) -> Mat {
+        let taken: Vec<Mat> = {
+            let mut st = self.stat.lock().unwrap();
+            assert!(st.active, "reduce_stat outside a statistic round");
+            while st.posted[item] < st.lanes {
+                st = wait_round(&self.stat_cv, st, "statistic lanes");
+            }
+            let slot = std::mem::take(&mut st.slots[item]);
+            slot.into_iter().map(|m| m.expect("lane posted")).collect()
+        };
+        let lane_refs: Vec<&Mat> = taken.iter().collect();
+        let reduced = lane_mean_mats(&lane_refs);
+        let elems = if self.symmetric_packing && reduced.is_square() {
+            packed_len(reduced.rows)
+        } else {
+            reduced.rows * reduced.cols
+        };
+        let mut st = self.stat.lock().unwrap();
+        match class {
+            StatClass::A => st.elems_a += elems,
+            StatClass::GorF => st.elems_g += elems,
+        }
+        st.reduced_items += 1;
+        if st.reduced_items == st.n_items {
+            let (ea, eg) = (st.elems_a, st.elems_g);
+            st.active = false;
+            st.slots = Vec::new();
+            drop(st);
+            self.charge(|s| {
+                s.rs_stats_a += self.elems_to_bytes(ea);
+                s.rs_stats_g += self.elems_to_bytes(eg);
+                s.num_ops += 2;
+            });
+        }
+        reduced
+    }
+
+    // ----------------------------------------------- AllReduce (grads)
+
+    /// Post this worker's gradient lanes (`(global_lane, buffer)` pairs)
+    /// into the AllReduce round — the "send" half, issued right after the
+    /// backward pass so gradient communication overlaps Stage-4a
+    /// inversion. `total_lanes` is the global lane count (identical on
+    /// every rank). Non-blocking.
+    pub fn grad_post(&self, my_lanes: &[(usize, &Vec<f32>)], total_lanes: usize) {
+        if my_lanes.is_empty() {
+            return; // nothing to contribute — other ranks carry the round
+        }
+        let n = my_lanes[0].1.len();
+        // copy the lanes (the "send") before taking the round lock, so
+        // concurrent senders don't serialize on full-gradient memcpys
+        let mut copies: Vec<(usize, Vec<f32>)> =
+            my_lanes.iter().map(|(g, b)| (*g, (*b).clone())).collect();
+        let mut st = self.grad.lock().unwrap();
+        loop {
+            if !st.active {
+                st.active = true;
+                st.n = n;
+                st.total_lanes = total_lanes;
+                st.posted = 0;
+                st.lanes = (0..total_lanes).map(|_| None).collect();
+                st.frozen = None;
+                st.reduced = vec![0.0; n];
+                st.next_chunk = 0;
+                st.done_chunks = 0;
+                st.nchunks = if n == 0 { 0 } else { n.div_ceil(self.chunk_elems.max(1)) };
+                st.drained = 0;
+                break;
+            }
+            if st.posted < st.total_lanes {
+                break; // joining the posting phase of the open round
+            }
+            // previous round still draining — wait for it to close
+            st = wait_round(&self.grad_cv, st, "previous AllReduce round to close");
+        }
+        assert_eq!(st.total_lanes, total_lanes, "lane total mismatch across ranks");
+        for (g, buf) in copies.drain(..) {
+            assert_eq!(buf.len(), st.n, "lane length mismatch");
+            assert!(st.lanes[g].is_none(), "duplicate lane {g}");
+            st.lanes[g] = Some(buf);
+            st.posted += 1;
+        }
+        if st.posted == st.total_lanes {
+            self.grad_cv.notify_all();
+        }
+    }
+
+    /// Finish the AllReduce: wait for every lane, claim and reduce chunks
+    /// (self-scheduling cursor; each chunk reduced once, in canonical
+    /// lane order with f64 accumulators), then drain the mean back into
+    /// this worker's lane buffers. The last lane drained closes the round
+    /// and charges the ring AllReduce's wire bytes.
+    pub fn grad_finish(&self, my_lanes: &mut [(usize, &mut Vec<f32>)]) {
+        if my_lanes.is_empty() {
+            return;
+        }
+        let (frozen, n, total_lanes) = {
+            let mut st = self.grad.lock().unwrap();
+            assert!(st.active, "grad_finish without grad_post");
+            while st.posted < st.total_lanes {
+                st = wait_round(&self.grad_cv, st, "gradient lanes");
+            }
+            if st.frozen.is_none() {
+                let lanes = std::mem::take(&mut st.lanes);
+                st.frozen = Some(Arc::new(lanes));
+            }
+            (st.frozen.clone().unwrap(), st.n, st.total_lanes)
+        };
+        // claim + reduce chunks outside the lock (the concurrent part);
+        // per element, the shared `lane_mean` op sequence — bitwise
+        // parity with SimComm::all_reduce_mean.
+        let chunk = self.chunk_elems.max(1);
+        loop {
+            let c = {
+                let mut st = self.grad.lock().unwrap();
+                if st.next_chunk >= st.nchunks {
+                    break;
+                }
+                st.next_chunk += 1;
+                st.next_chunk - 1
+            };
+            let s = c * chunk;
+            let e = (s + chunk).min(n);
+            let mut out = vec![0.0f32; e - s];
+            for (i, o) in out.iter_mut().enumerate() {
+                let vals = frozen.iter().map(|lane| lane.as_ref().expect("lane posted")[s + i]);
+                *o = lane_mean(vals, total_lanes);
+            }
+            let mut st = self.grad.lock().unwrap();
+            st.reduced[s..e].copy_from_slice(&out);
+            st.done_chunks += 1;
+            if st.done_chunks == st.nchunks {
+                self.grad_cv.notify_all();
+            }
+        }
+        drop(frozen);
+        let mut st = self.grad.lock().unwrap();
+        while st.done_chunks < st.nchunks {
+            st = wait_round(&self.grad_cv, st, "AllReduce chunk reduction");
+        }
+        for (_, buf) in my_lanes.iter_mut() {
+            buf.copy_from_slice(&st.reduced);
+            st.drained += 1;
+        }
+        if st.drained == st.total_lanes {
+            st.active = false;
+            st.frozen = None;
+            st.reduced = Vec::new();
+            drop(st);
+            self.charge(|s| {
+                s.ar_grads += 2 * self.elems_to_bytes(n);
+                s.num_ops += 1;
+            });
+            self.grad_cv.notify_all();
+        }
+    }
+
+    // ---------------------------------------------- AllGatherV (params)
+
+    /// Rank-level AllGatherV over variable-size segments: each rank
+    /// passes the full segment list and the owner map; owned segments are
+    /// posted (the send), then every rank copies every segment back out.
+    /// After the call all ranks hold identical segment contents.
+    pub fn all_gather_v(&self, rank: usize, segs: &mut [Vec<f32>], owner_of: &[usize]) {
+        assert_eq!(segs.len(), owner_of.len());
+        let n_segs = segs.len();
+        let mut st = self.gather.lock().unwrap();
+        loop {
+            if !st.active {
+                st.active = true;
+                st.n_segs = n_segs;
+                st.posted = 0;
+                st.segs = (0..n_segs).map(|_| None).collect();
+                st.joined = 1;
+                st.drained = 0;
+                break;
+            }
+            if st.joined < self.p {
+                st.joined += 1;
+                break;
+            }
+            st = wait_round(&self.gather_cv, st, "previous AllGatherV round to close");
+        }
+        assert_eq!(st.n_segs, n_segs, "segment count mismatch across ranks");
+        for (i, seg) in segs.iter().enumerate() {
+            if owner_of[i] % self.p == rank {
+                assert!(st.segs[i].is_none(), "segment {i} posted twice");
+                st.segs[i] = Some(seg.clone());
+                st.posted += 1;
+            }
+        }
+        if st.posted == st.n_segs {
+            self.gather_cv.notify_all();
+        }
+        while st.posted < st.n_segs {
+            st = wait_round(&self.gather_cv, st, "owner segments");
+        }
+        let mut total_elems = 0usize;
+        for (i, seg) in segs.iter_mut().enumerate() {
+            let src = st.segs[i].as_ref().expect("segment posted");
+            seg.resize(src.len(), 0.0);
+            seg.copy_from_slice(src);
+            total_elems += src.len();
+        }
+        st.drained += 1;
+        if st.drained == self.p {
+            st.active = false;
+            st.segs = Vec::new();
+            drop(st);
+            self.charge(|s| {
+                s.ag_params += self.elems_to_bytes(total_elems);
+                s.num_ops += 1;
+            });
+            self.gather_cv.notify_all();
+        }
+    }
+}
+
+/// God-view [`Collective`] adapter: the same lane-level semantics as
+/// `SimComm`, executed by `p` scoped worker threads through the
+/// rank-level ring entry points — one lane group per rank, lanes
+/// assigned `g mod p` (the dist engine's canonical lane layout).
+impl Collective for RingComm {
+    fn world(&self) -> usize {
+        self.p
+    }
+
+    fn all_reduce_mean(&self, lanes: &mut [Vec<f32>]) {
+        if lanes.is_empty() {
+            return;
+        }
+        let total = lanes.len();
+        let mut groups: Vec<Vec<(usize, &mut Vec<f32>)>> =
+            (0..self.p).map(|_| Vec::new()).collect();
+        for (g, lane) in lanes.iter_mut().enumerate() {
+            groups[g % self.p].push((g, lane));
+        }
+        std::thread::scope(|s| {
+            for group in groups {
+                s.spawn(move || {
+                    let mut group = group;
+                    {
+                        let posts: Vec<(usize, &Vec<f32>)> =
+                            group.iter().map(|(g, b)| (*g, &**b)).collect();
+                        self.grad_post(&posts, total);
+                    }
+                    self.grad_finish(&mut group);
+                });
+            }
+        });
+    }
+
+    fn reduce_scatter_v(&self, lanes: &[Vec<Mat>], classes: &[StatClass]) -> Vec<Mat> {
+        assert!(!lanes.is_empty());
+        let n_items = lanes[0].len();
+        assert_eq!(classes.len(), n_items);
+        if n_items == 0 {
+            return Vec::new();
+        }
+        self.begin_stats(n_items, lanes.len());
+        let results: Vec<Mutex<Option<Mat>>> = (0..n_items).map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|s| {
+            for rank in 0..self.p {
+                let results = &results;
+                s.spawn(move || {
+                    for (g, lane) in lanes.iter().enumerate() {
+                        if g % self.p != rank {
+                            continue;
+                        }
+                        for (i, m) in lane.iter().enumerate() {
+                            self.publish_stat(i, g, m.clone());
+                        }
+                    }
+                    let mut i = rank;
+                    while i < n_items {
+                        let m = self.reduce_stat(i, classes[i]);
+                        *results[i].lock().unwrap() = Some(m);
+                        i += self.p;
+                    }
+                });
+            }
+        });
+        results.into_iter().map(|m| m.into_inner().unwrap().expect("item reduced")).collect()
+    }
+
+    fn all_gather_v_params(&self, total_elems: usize) {
+        // parameters are shared in-process (owners write their layers in
+        // place); this is the accounting-only form, parity with SimComm
+        self.charge(|s| {
+            s.ag_params += self.elems_to_bytes(total_elems);
+            s.num_ops += 1;
+        });
+    }
+
+    fn stats(&self) -> CommStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    fn take_step_stats(&self) -> CommStats {
+        let mut ss = self.step_stats.lock().unwrap();
+        let out = ss.clone();
+        *ss = CommStats::default();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn barrier_reusable() {
+        let c = Arc::new(RingComm::new(3));
+        let hits = Arc::new(Mutex::new(0usize));
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                let c = c.clone();
+                let hits = hits.clone();
+                s.spawn(move || {
+                    for _ in 0..5 {
+                        c.barrier();
+                        *hits.lock().unwrap() += 1;
+                    }
+                });
+            }
+        });
+        assert_eq!(*hits.lock().unwrap(), 15);
+    }
+
+    #[test]
+    fn grad_allreduce_means_lanes() {
+        let c = RingComm::new(2);
+        let mut lanes: Vec<Vec<f32>> = vec![
+            vec![1.0, 2.0, 3.0],
+            vec![3.0, 4.0, 5.0],
+            vec![5.0, 6.0, 7.0],
+            vec![7.0, 8.0, 9.0],
+        ];
+        Collective::all_reduce_mean(&c, &mut lanes);
+        for lane in &lanes {
+            assert_eq!(lane, &vec![4.0, 5.0, 6.0]);
+        }
+        // ring AR bytes: 2 * (1/2) * 3 elems * 4 bytes = 12
+        assert_eq!(Collective::stats(&c).ar_grads, 12);
+    }
+
+    #[test]
+    fn stat_board_publish_out_of_order() {
+        let c = RingComm::new(1);
+        c.begin_stats(2, 3);
+        c.publish_stat(1, 2, Mat::from_vec(1, 2, vec![3.0, 3.0]));
+        c.publish_stat(0, 1, Mat::eye(2));
+        c.publish_stat(1, 0, Mat::from_vec(1, 2, vec![0.0, 3.0]));
+        c.publish_stat(0, 0, Mat::eye(2));
+        c.publish_stat(1, 1, Mat::from_vec(1, 2, vec![0.0, 3.0]));
+        c.publish_stat(0, 2, Mat::eye(2));
+        let m0 = c.reduce_stat(0, StatClass::A);
+        let m1 = c.reduce_stat(1, StatClass::GorF);
+        assert_eq!(m0.data, Mat::eye(2).data);
+        assert_eq!(m1.data, vec![1.0, 3.0]);
+    }
+}

@@ -3,12 +3,12 @@
 //! (criterion replacement — criterion is not available offline).
 
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{BnMode, Fisher, Optim, Trainer, TrainerCfg};
+use crate::coordinator::{BnMode, DistMode, Fisher, Optim, Trainer, TrainerCfg};
 use crate::data::{AugmentCfg, SynthDataset};
 use crate::optim::{HyperParams, Schedule};
 use crate::runtime::{native, Executor, Manifest};
@@ -27,7 +27,7 @@ pub fn artifacts_dir() -> Result<PathBuf> {
 /// Load the default runtime: the native CPU backend, or — when the
 /// `SPNGD_BACKEND=pjrt` environment variable is set — the PJRT engine
 /// over the AOT artifacts (requires the `pjrt` cargo feature).
-pub fn load_runtime() -> Result<(Rc<Manifest>, Rc<dyn Executor>)> {
+pub fn load_runtime() -> Result<(Arc<Manifest>, Arc<dyn Executor>)> {
     match std::env::var("SPNGD_BACKEND") {
         Ok(b) if b == "pjrt" => load_runtime_pjrt(),
         Ok(b) if !b.is_empty() && b != "native" => {
@@ -38,38 +38,38 @@ pub fn load_runtime() -> Result<(Rc<Manifest>, Rc<dyn Executor>)> {
 }
 
 /// The hermetic native CPU runtime (default model set).
-pub fn load_runtime_native() -> Result<(Rc<Manifest>, Rc<dyn Executor>)> {
+pub fn load_runtime_native() -> Result<(Arc<Manifest>, Arc<dyn Executor>)> {
     let (manifest, backend) = native::build_default()?;
-    Ok((Rc::new(manifest), Rc::new(backend) as Rc<dyn Executor>))
+    Ok((Arc::new(manifest), Arc::new(backend) as Arc<dyn Executor>))
 }
 
 /// The PJRT runtime over the crate-root `artifacts/` (feature `pjrt`).
 #[cfg(feature = "pjrt")]
-pub fn load_runtime_pjrt() -> Result<(Rc<Manifest>, Rc<dyn Executor>)> {
+pub fn load_runtime_pjrt() -> Result<(Arc<Manifest>, Arc<dyn Executor>)> {
     load_runtime_pjrt_at(&artifacts_dir()?)
 }
 
 /// The PJRT runtime over the crate-root `artifacts/` (feature `pjrt`).
 #[cfg(not(feature = "pjrt"))]
-pub fn load_runtime_pjrt() -> Result<(Rc<Manifest>, Rc<dyn Executor>)> {
+pub fn load_runtime_pjrt() -> Result<(Arc<Manifest>, Arc<dyn Executor>)> {
     load_runtime_pjrt_at(std::path::Path::new("artifacts"))
 }
 
 /// The PJRT runtime over an explicit artifact directory.
 #[cfg(feature = "pjrt")]
-pub fn load_runtime_pjrt_at(dir: &std::path::Path) -> Result<(Rc<Manifest>, Rc<dyn Executor>)> {
+pub fn load_runtime_pjrt_at(dir: &std::path::Path) -> Result<(Arc<Manifest>, Arc<dyn Executor>)> {
     anyhow::ensure!(
         dir.join("manifest.json").exists(),
         "no manifest in {} — run `make artifacts` first",
         dir.display()
     );
-    let manifest = Rc::new(Manifest::load(dir)?);
-    let engine = Rc::new(crate::runtime::Engine::new(&manifest)?);
-    Ok((manifest, engine as Rc<dyn Executor>))
+    let manifest = Arc::new(Manifest::load(dir)?);
+    let engine = Arc::new(crate::runtime::Engine::new(&manifest)?);
+    Ok((manifest, engine as Arc<dyn Executor>))
 }
 
 #[cfg(not(feature = "pjrt"))]
-pub fn load_runtime_pjrt_at(dir: &std::path::Path) -> Result<(Rc<Manifest>, Rc<dyn Executor>)> {
+pub fn load_runtime_pjrt_at(dir: &std::path::Path) -> Result<(Arc<Manifest>, Arc<dyn Executor>)> {
     let _ = dir;
     anyhow::bail!("this build has no PJRT support — rebuild with `--features pjrt`")
 }
@@ -87,12 +87,27 @@ pub fn default_hp(optimizer: Optim) -> HyperParams {
     }
 }
 
-/// Default trainer config for a model/optimizer pair.
+/// Worker count for examples/benches: `SPNGD_WORKERS` if set to a
+/// positive integer, otherwise 2.
+pub fn configured_workers() -> usize {
+    if let Ok(v) = std::env::var("SPNGD_WORKERS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    2
+}
+
+/// Default trainer config for a model/optimizer pair. `SPNGD_WORKERS`
+/// sets the worker count and `SPNGD_DIST=threads` selects the threaded
+/// dist engine (one OS thread per worker).
 pub fn default_cfg(model: &str, optimizer: Optim) -> TrainerCfg {
     let hp = default_hp(optimizer);
     TrainerCfg {
         model: model.to_string(),
-        workers: 2,
+        workers: configured_workers(),
         grad_accum: 1,
         fisher: Fisher::Emp,
         bn_mode: BnMode::Unit,
@@ -106,6 +121,7 @@ pub fn default_cfg(model: &str, optimizer: Optim) -> TrainerCfg {
         augment: AugmentCfg::disabled(),
         bn_momentum: 0.9,
         fp16_comm: false,
+        dist: DistMode::from_env(),
         seed: 7,
     }
 }

@@ -23,6 +23,7 @@
 pub mod collectives;
 pub mod coordinator;
 pub mod data;
+pub mod dist;
 pub mod harness;
 pub mod kfac;
 pub mod metrics;

@@ -9,12 +9,12 @@
 //! backend is self-contained; `--backend pjrt` additionally needs the
 //! `pjrt` cargo feature and `make artifacts`.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use spngd::collectives::cost::ClusterModel;
-use spngd::coordinator::{BnMode, Fisher, Optim, Trainer, TrainerCfg};
+use spngd::coordinator::{BnMode, DistMode, Fisher, Optim, Trainer, TrainerCfg};
 use spngd::data::{AugmentCfg, SynthDataset};
 use spngd::optim::{HyperParams, Schedule};
 use spngd::runtime::{Executor, Manifest};
@@ -43,7 +43,7 @@ fn main() {
     }
 }
 
-fn load(backend: &str, artifacts: &str) -> Result<(Rc<Manifest>, Rc<dyn Executor>)> {
+fn load(backend: &str, artifacts: &str) -> Result<(Arc<Manifest>, Arc<dyn Executor>)> {
     match backend {
         "native" => spngd::harness::load_runtime_native(),
         "pjrt" => spngd::harness::load_runtime_pjrt_at(std::path::Path::new(artifacts)),
@@ -136,6 +136,7 @@ fn trainer_from_args(parsed: &spngd::util::cli::Parsed) -> Result<Trainer> {
         augment,
         bn_momentum: 0.9,
         fp16_comm: parsed.get_bool("fp16-comm"),
+        dist: if parsed.get_bool("dist") { DistMode::Threaded } else { DistMode::from_env() },
         seed: parsed.get_u64("seed"),
     };
     let (c, h, w) = (m.input_shape[1], m.input_shape[2], m.input_shape[3]);
@@ -154,6 +155,7 @@ fn train_args() -> Args {
         .flag("stale", "enable the adaptive stale-statistics scheduler")
         .opt("stale-alpha", "0.1", "similarity threshold α")
         .opt("workers", "4", "simulated GPUs")
+        .flag("dist", "threaded dist engine: one OS thread per worker (or SPNGD_DIST=threads)")
         .opt("accum", "1", "gradient accumulation micro-steps")
         .opt("steps", "200", "training steps")
         .opt("dataset", "8192", "synthetic corpus size")
@@ -256,6 +258,7 @@ fn cmd_simulate() -> Result<()> {
         augment: AugmentCfg::disabled(),
         bn_momentum: 0.9,
         fp16_comm: parsed.get_bool("fp16-comm"),
+        dist: DistMode::Sequential,
         seed: 7,
     };
     let mut tr = Trainer::new(manifest, engine, cfg, ds)?;

@@ -24,12 +24,16 @@ pub use manifest::{KfacLayer, Manifest, ModelManifest, OutputSpec};
 pub use native::NativeBackend;
 pub use tensor::HostTensor;
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 /// Execute-by-name over [`HostTensor`]s — the seam between the
 /// coordinator (L3) and whichever kernel substrate (L1/L2) is compiled
-/// in. Object-safe so the trainer can hold an `Rc<dyn Executor>`.
-pub trait Executor {
+/// in. Object-safe so the trainer can hold an `Arc<dyn Executor>`;
+/// `Send + Sync` so the `dist` engine can drive one executor per worker
+/// OS thread.
+pub trait Executor: Send + Sync {
     /// Backend identifier (e.g. "native-cpu", PJRT platform name).
     fn platform(&self) -> String;
 
@@ -55,4 +59,12 @@ pub trait Executor {
 
     /// Cumulative seconds spent executing (perf instrumentation).
     fn exec_seconds(&self) -> f64;
+
+    /// A backend instance dedicated to one `dist` worker thread (own
+    /// scratch arena / caches, zero shared mutable state with `self`).
+    /// `None` means the backend has no per-worker state worth isolating —
+    /// callers then share `self` across workers (it is `Sync`).
+    fn fork_worker(&self) -> Option<Arc<dyn Executor>> {
+        None
+    }
 }

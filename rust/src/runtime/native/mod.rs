@@ -12,10 +12,10 @@ pub mod kernels;
 pub mod model;
 mod net;
 
-use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -74,6 +74,7 @@ enum ExecSpec {
     },
 }
 
+#[derive(Clone)]
 struct NativeModel {
     cfg: NativeModelCfg,
     param_names: Vec<String>,
@@ -82,14 +83,16 @@ struct NativeModel {
 
 /// The native backend: model table + executable registry + counters,
 /// plus the scratch-buffer arena the per-step hot loop recycles matmul
-/// and patch buffers through (interior-mutable: `execute` takes `&self`).
+/// and patch buffers through (interior-mutable: `execute` takes `&self`;
+/// the mutex is uncontended in the intended one-thread-per-backend use —
+/// the `dist` engine forks one backend per worker via [`Executor::fork_worker`]).
 pub struct NativeBackend {
     models: BTreeMap<String, NativeModel>,
     execs: BTreeMap<String, ExecSpec>,
     ns_iters: usize,
     executions: AtomicU64,
     exec_nanos: AtomicU64,
-    scratch: RefCell<Scratch>,
+    scratch: Mutex<Scratch>,
 }
 
 /// Build manifests + backend for the default model set.
@@ -326,7 +329,7 @@ pub fn build(model_names: &[&str], seed: u64) -> Result<(Manifest, NativeBackend
         ns_iters: NS_ITERS,
         executions: AtomicU64::new(0),
         exec_nanos: AtomicU64::new(0),
-        scratch: RefCell::new(Scratch::new()),
+        scratch: Mutex::new(Scratch::new()),
     };
     Ok((manifest, backend))
 }
@@ -338,6 +341,20 @@ impl NativeBackend {
 
     pub fn executions(&self) -> u64 {
         self.executions.load(Ordering::Relaxed)
+    }
+
+    /// An isolated copy of this backend (same model/executable tables,
+    /// fresh scratch arena and counters) — one per `dist` worker thread,
+    /// so per-worker hot loops never contend on the scratch mutex.
+    pub fn fork(&self) -> NativeBackend {
+        NativeBackend {
+            models: self.models.clone(),
+            execs: self.execs.clone(),
+            ns_iters: self.ns_iters,
+            executions: AtomicU64::new(0),
+            exec_nanos: AtomicU64::new(0),
+            scratch: Mutex::new(Scratch::new()),
+        }
     }
 }
 
@@ -362,7 +379,7 @@ impl Executor for NativeBackend {
             .get(name)
             .with_context(|| format!("executable '{name}' not in manifest"))?;
         let t0 = Instant::now();
-        let mut scratch_guard = self.scratch.borrow_mut();
+        let mut scratch_guard = self.scratch.lock().unwrap();
         let scratch = &mut *scratch_guard;
         let out = match spec {
             ExecSpec::Step { model, one_mc } => {
@@ -439,6 +456,10 @@ impl Executor for NativeBackend {
 
     fn exec_seconds(&self) -> f64 {
         self.exec_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    fn fork_worker(&self) -> Option<Arc<dyn Executor>> {
+        Some(Arc::new(self.fork()))
     }
 }
 

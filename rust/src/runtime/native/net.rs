@@ -21,12 +21,36 @@ use anyhow::{Context, Result};
 
 use super::kernels::{col2im_into_with, im2col_into_with};
 use super::model::{BnSpec, ConvSpec, FcSpec, LayerGeo, NativeModelCfg, Op};
-use crate::linalg::{Mat, Scratch};
+use crate::linalg::{self, Mat, Scratch};
 use crate::runtime::HostTensor;
 use crate::util::pool;
 use crate::util::rng::Rng;
 
 const BN_EPS: f32 = 1e-5;
+
+/// Elementwise work below which the channel-parallel BN paths dispatch
+/// serially (pool fan-out costs more than it saves).
+const BN_PAR_CUTOFF: usize = 1 << 14;
+
+/// Run `f(ci)` for every channel 0..c — in parallel on the global pool
+/// when the total elementwise `work` is large enough. Channels are
+/// independent, so the parallel path is bit-identical to the serial one;
+/// `linalg::set_reference_kernels` still forces the serial path so the
+/// naive bench baseline stays single-threaded.
+fn for_each_channel<F: Fn(usize) + Sync>(work: usize, c: usize, f: F) {
+    let pool = pool::global();
+    if c <= 1 || pool.size() <= 1 || work < BN_PAR_CUTOFF || linalg::reference_kernels() {
+        for ci in 0..c {
+            f(ci);
+        }
+    } else {
+        pool.parallel_for(c, 1, |c0, c1| {
+            for ci in c0..c1 {
+                f(ci);
+            }
+        });
+    }
+}
 
 type PDict<'a> = BTreeMap<&'a str, &'a HostTensor>;
 
@@ -97,16 +121,27 @@ fn conv_fwd(
     let mut s_rows = scratch.mat_spare(b * ho * wo, spec.cout);
     patches.matmul_transposed_into(&wm, &mut s_rows); // (B*ho*wo, cout)
     scratch.recycle_mat(wm);
+    // rows→NCHW transpose, parallel over the batch axis (per-image
+    // chunks are contiguous and disjoint)
     let mut out = scratch.take(b * spec.cout * ho * wo);
-    for bi in 0..b {
+    let per_image = spec.cout * ho * wo;
+    let rows_to_nchw = |bi: usize, chunk: &mut [f32]| {
         for oy in 0..ho {
             for ox in 0..wo {
                 let row = ((bi * ho + oy) * wo + ox) * spec.cout;
                 for co in 0..spec.cout {
-                    out[((bi * spec.cout + co) * ho + oy) * wo + ox] = s_rows.data[row + co];
+                    chunk[(co * ho + oy) * wo + ox] = s_rows.data[row + co];
                 }
             }
         }
+    };
+    let pool = pool::global();
+    if b <= 1 || pool.size() <= 1 || linalg::reference_kernels() {
+        for (bi, chunk) in out.chunks_mut(per_image.max(1)).enumerate() {
+            rows_to_nchw(bi, chunk);
+        }
+    } else {
+        pool.parallel_for_mut(&mut out, per_image, rows_to_nchw);
     }
     scratch.recycle_mat(s_rows);
     let rec = ConvRec { spec: spec.clone(), patches, xshape: [b, spec.cin, h, wd], ho, wo };
@@ -126,39 +161,52 @@ fn bn_fwd_train(
     let hw = h * w;
     let mut mean = vec![0.0f32; c];
     let mut var = vec![0.0f32; c];
-    for ci in 0..c {
-        let mut acc = 0.0f64;
-        for bi in 0..b {
-            let base = (bi * c + ci) * hw;
-            for i in 0..hw {
-                acc += x.data[base + i] as f64;
-            }
-        }
-        mean[ci] = (acc / n) as f32;
-        let m = mean[ci] as f64;
-        let mut vacc = 0.0f64;
-        for bi in 0..b {
-            let base = (bi * c + ci) * hw;
-            for i in 0..hw {
-                let d = x.data[base + i] as f64 - m;
-                vacc += d * d;
-            }
-        }
-        var[ci] = (vacc / n) as f32;
-    }
     let mut xhat = scratch.take(x.data.len());
     let mut out = scratch.take(x.data.len());
-    for ci in 0..c {
-        let rstd = 1.0 / (var[ci] + BN_EPS).sqrt();
-        let (g, bt) = (gamma.data[ci], beta.data[ci]);
-        for bi in 0..b {
-            let base = (bi * c + ci) * hw;
-            for i in 0..hw {
-                let xh = (x.data[base + i] - mean[ci]) * rstd;
-                xhat[base + i] = xh;
-                out[base + i] = g * xh + bt;
+    {
+        let meanp = mean.as_mut_ptr() as usize;
+        let varp = var.as_mut_ptr() as usize;
+        let xhatp = xhat.as_mut_ptr() as usize;
+        let outp = out.as_mut_ptr() as usize;
+        let xd = &x.data;
+        for_each_channel(b * c * hw, c, |ci| {
+            let mut acc = 0.0f64;
+            for bi in 0..b {
+                let base = (bi * c + ci) * hw;
+                for i in 0..hw {
+                    acc += xd[base + i] as f64;
+                }
             }
-        }
+            let mf = (acc / n) as f32;
+            let m = mf as f64;
+            let mut vacc = 0.0f64;
+            for bi in 0..b {
+                let base = (bi * c + ci) * hw;
+                for i in 0..hw {
+                    let d = xd[base + i] as f64 - m;
+                    vacc += d * d;
+                }
+            }
+            let vf = (vacc / n) as f32;
+            let rstd = 1.0 / (vf + BN_EPS).sqrt();
+            let (g, bt) = (gamma.data[ci], beta.data[ci]);
+            // SAFETY: channel ci is visited by exactly one task; the
+            // per-channel scalar slots and the (bi, ci, ·) strides are
+            // pairwise disjoint across channels, and for_each_channel
+            // joins before the enclosing borrows end.
+            unsafe {
+                *(meanp as *mut f32).add(ci) = mf;
+                *(varp as *mut f32).add(ci) = vf;
+                for bi in 0..b {
+                    let base = (bi * c + ci) * hw;
+                    for i in 0..hw {
+                        let xh = (xd[base + i] - mf) * rstd;
+                        *(xhatp as *mut f32).add(base + i) = xh;
+                        *(outp as *mut f32).add(base + i) = g * xh + bt;
+                    }
+                }
+            }
+        });
     }
     let shape = x.shape.clone();
     let rec = BnRec {
@@ -180,15 +228,25 @@ fn bn_fwd_eval(
 ) -> HostTensor {
     let (b, c, hw) = (x.shape[0], x.shape[1], x.shape[2] * x.shape[3]);
     let mut out = scratch.take(x.data.len());
-    for ci in 0..c {
-        let rstd = 1.0 / (var.data[ci] + BN_EPS).sqrt();
-        let (g, bt) = (gamma.data[ci], beta.data[ci]);
-        for bi in 0..b {
-            let base = (bi * c + ci) * hw;
-            for i in 0..hw {
-                out[base + i] = g * (x.data[base + i] - mean.data[ci]) * rstd + bt;
+    {
+        let outp = out.as_mut_ptr() as usize;
+        let xd = &x.data;
+        for_each_channel(b * c * hw, c, |ci| {
+            let rstd = 1.0 / (var.data[ci] + BN_EPS).sqrt();
+            let (g, bt) = (gamma.data[ci], beta.data[ci]);
+            let m = mean.data[ci];
+            // SAFETY: the (bi, ci, ·) strides are pairwise disjoint
+            // across channels; for_each_channel joins before `out` is
+            // used again.
+            unsafe {
+                for bi in 0..b {
+                    let base = (bi * c + ci) * hw;
+                    for i in 0..hw {
+                        *(outp as *mut f32).add(base + i) = g * (xd[base + i] - m) * rstd + bt;
+                    }
+                }
             }
-        }
+        });
     }
     HostTensor::new(x.shape.clone(), out)
 }
@@ -422,17 +480,27 @@ fn conv_bwd_step(
         cap.g_taps.insert(spec.name.clone(), scaled(g, ctx.batch as f32));
     }
     let (b, ho, wo) = (rec.xshape[0], rec.ho, rec.wo);
+    // NCHW→rows transpose, parallel over the batch axis (per-image
+    // chunks are contiguous and disjoint)
     let mut g_rows = scratch.mat(b * ho * wo, spec.cout);
-    for bi in 0..b {
+    let per_image = ho * wo * spec.cout;
+    let nchw_to_rows = |bi: usize, chunk: &mut [f32]| {
         for co in 0..spec.cout {
             let src = ((bi * spec.cout + co) * ho) * wo;
             for oy in 0..ho {
                 for ox in 0..wo {
-                    g_rows.data[((bi * ho + oy) * wo + ox) * spec.cout + co] =
-                        g.data[src + oy * wo + ox];
+                    chunk[(oy * wo + ox) * spec.cout + co] = g.data[src + oy * wo + ox];
                 }
             }
         }
+    };
+    let pool = pool::global();
+    if b <= 1 || pool.size() <= 1 || linalg::reference_kernels() {
+        for (bi, chunk) in g_rows.data.chunks_mut(per_image.max(1)).enumerate() {
+            nchw_to_rows(bi, chunk);
+        }
+    } else {
+        pool.parallel_for_mut(&mut g_rows.data, per_image, nchw_to_rows);
     }
     let w = param(ctx.pdict, &format!("{}.w", spec.name))?;
     let ckk = spec.cin * spec.k * spec.k;
@@ -473,21 +541,33 @@ fn bn_bwd_step(
     let gamma = param(ctx.pdict, &format!("{}.gamma", spec.name))?;
 
     // one pass over g/xhat: per-sample spatial partials, from which both
-    // the (B, C) taps and the per-channel reductions derive
+    // the (B, C) taps and the per-channel reductions derive — channel-
+    // parallel, each (bi, ci) partial is independent
     let mut part_g = vec![0.0f64; b * c];
     let mut part_g_xhat = vec![0.0f64; b * c];
-    for bi in 0..b {
-        for ci in 0..c {
-            let base = (bi * c + ci) * hw;
-            let (mut ag, mut ab) = (0.0f64, 0.0f64);
-            for i in 0..hw {
-                let gv = g.data[base + i] as f64;
-                ag += gv * rec.xhat.data[base + i] as f64;
-                ab += gv;
+    {
+        let pg = part_g.as_mut_ptr() as usize;
+        let pgx = part_g_xhat.as_mut_ptr() as usize;
+        let gd = &g.data;
+        let xh = &rec.xhat.data;
+        for_each_channel(b * c * hw, c, |ci| {
+            for bi in 0..b {
+                let base = (bi * c + ci) * hw;
+                let (mut ag, mut ab) = (0.0f64, 0.0f64);
+                for i in 0..hw {
+                    let gv = gd[base + i] as f64;
+                    ag += gv * xh[base + i] as f64;
+                    ab += gv;
+                }
+                // SAFETY: slot (bi, ci) is written only by channel ci's
+                // task; for_each_channel joins before the partials are
+                // read below.
+                unsafe {
+                    *(pgx as *mut f64).add(bi * c + ci) = ag;
+                    *(pg as *mut f64).add(bi * c + ci) = ab;
+                }
             }
-            part_g_xhat[bi * c + ci] = ag;
-            part_g[bi * c + ci] = ab;
-        }
+        });
     }
     if ctx.record_taps {
         let scale = ctx.batch as f32;
@@ -516,20 +596,32 @@ fn bn_bwd_step(
 
     // dxhat = g * gamma; dx = rstd/n * (n*dxhat - Σdxhat - xhat * Σ(dxhat·xhat))
     let mut dx = scratch.take(g.data.len());
-    for ci in 0..c {
-        let gm = gamma.data[ci] as f64;
-        let rstd = 1.0 / ((rec.var[ci] + BN_EPS) as f64).sqrt();
-        let sum_dxhat = sum_g[ci] * gm;
-        let sum_dxhat_xhat = sum_g_xhat[ci] * gm;
-        for bi in 0..b {
-            let base = (bi * c + ci) * hw;
-            for i in 0..hw {
-                let dxhat = g.data[base + i] as f64 * gm;
-                let xh = rec.xhat.data[base + i] as f64;
-                dx[base + i] =
-                    ((rstd / n) * (n * dxhat - sum_dxhat - xh * sum_dxhat_xhat)) as f32;
+    {
+        let dxp = dx.as_mut_ptr() as usize;
+        let gd = &g.data;
+        let xhd = &rec.xhat.data;
+        let sum_g = &sum_g;
+        let sum_g_xhat = &sum_g_xhat;
+        for_each_channel(b * c * hw, c, |ci| {
+            let gm = gamma.data[ci] as f64;
+            let rstd = 1.0 / ((rec.var[ci] + BN_EPS) as f64).sqrt();
+            let sum_dxhat = sum_g[ci] * gm;
+            let sum_dxhat_xhat = sum_g_xhat[ci] * gm;
+            // SAFETY: the (bi, ci, ·) strides are pairwise disjoint
+            // across channels; for_each_channel joins before `dx` is
+            // used again.
+            unsafe {
+                for bi in 0..b {
+                    let base = (bi * c + ci) * hw;
+                    for i in 0..hw {
+                        let dxhat = gd[base + i] as f64 * gm;
+                        let xh = xhd[base + i] as f64;
+                        *(dxp as *mut f32).add(base + i) =
+                            ((rstd / n) * (n * dxhat - sum_dxhat - xh * sum_dxhat_xhat)) as f32;
+                    }
+                }
             }
-        }
+        });
     }
     Ok(HostTensor::new(g.shape.clone(), dx))
 }

@@ -56,21 +56,30 @@ impl HostTensor {
 
     /// Flatten a 4-D (B, C, H, W) tap into (B*H*W, C) — the layout the
     /// conv-G factor executable's syrk consumed at build time (transpose
-    /// to channel-last then collapse).
+    /// to channel-last then collapse). Parallel over the batch axis on
+    /// the global pool (per-image chunks are contiguous and disjoint).
     pub fn nchw_to_rows_channels(&self) -> HostTensor {
         assert_eq!(self.rank(), 4);
         let (b, c, h, w) = (self.shape[0], self.shape[1], self.shape[2], self.shape[3]);
         let mut out = vec![0.0f32; b * h * w * c];
-        for bi in 0..b {
+        let per_image = h * w * c;
+        let image = |bi: usize, chunk: &mut [f32]| {
             for ci in 0..c {
                 for hi in 0..h {
                     for wi in 0..w {
                         let src = ((bi * c + ci) * h + hi) * w + wi;
-                        let dst = ((bi * h + hi) * w + wi) * c + ci;
-                        out[dst] = self.data[src];
+                        chunk[(hi * w + wi) * c + ci] = self.data[src];
                     }
                 }
             }
+        };
+        let pool = crate::util::pool::global();
+        if b <= 1 || pool.size() <= 1 || crate::linalg::reference_kernels() {
+            for (bi, chunk) in out.chunks_mut(per_image.max(1)).enumerate() {
+                image(bi, chunk);
+            }
+        } else {
+            pool.parallel_for_mut(&mut out, per_image, image);
         }
         HostTensor::new(vec![b * h * w, c], out)
     }

@@ -1,0 +1,248 @@
+//! Differential suite for the `dist` ring collectives: the concurrent
+//! shared-memory ReduceScatterV / AllGatherV / AllReduce must be
+//! bit-identical to single-threaded reference reductions (canonical lane
+//! order, f64 accumulators) across worker counts and odd chunk sizes,
+//! and their byte accounting must match `SimComm` exactly.
+
+use std::sync::Arc;
+
+use spngd::collectives::comm::{Collective, SimComm, StatClass};
+use spngd::dist::RingComm;
+use spngd::linalg::Mat;
+use spngd::util::rng::Rng;
+
+fn rand_lanes(rng: &mut Rng, lanes: usize, n: usize) -> Vec<Vec<f32>> {
+    (0..lanes)
+        .map(|_| (0..n).map(|_| (rng.f32() * 2.0 - 1.0) * 3.0).collect())
+        .collect()
+}
+
+/// Single-threaded reference: mean over lanes in canonical order, f64.
+fn reference_mean(lanes: &[Vec<f32>]) -> Vec<f32> {
+    let n = lanes[0].len();
+    let inv = 1.0 / lanes.len() as f64;
+    (0..n)
+        .map(|i| {
+            let mut acc = 0.0f64;
+            for l in lanes {
+                acc += l[i] as f64;
+            }
+            (acc * inv) as f32
+        })
+        .collect()
+}
+
+fn rand_mats(rng: &mut Rng, lanes: usize, dims: &[(usize, usize)]) -> Vec<Vec<Mat>> {
+    (0..lanes)
+        .map(|_| {
+            dims.iter()
+                .map(|&(r, c)| {
+                    Mat::from_vec(r, c, (0..r * c).map(|_| rng.normal() as f32).collect())
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn all_reduce_matches_reference_across_workers_and_chunks() {
+    let mut rng = Rng::new(11);
+    // odd element counts × odd chunk sizes × worker counts 1/2/3/8
+    for &n in &[1usize, 17, 257, 1031] {
+        for &chunk in &[1usize, 7, 129, 100_000] {
+            for &p in &[1usize, 2, 3, 8] {
+                let lanes_n = p * 2; // two micro-lanes per worker
+                let lanes = rand_lanes(&mut rng, lanes_n, n);
+                let want = reference_mean(&lanes);
+                let mut got = lanes.clone();
+                let mut ring = RingComm::new(p);
+                ring.chunk_elems = chunk;
+                Collective::all_reduce_mean(&ring, &mut got);
+                for lane in &got {
+                    assert_eq!(lane, &want, "n={n} chunk={chunk} p={p}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn all_reduce_matches_simcomm_bitwise_and_bytewise() {
+    let mut rng = Rng::new(23);
+    for &p in &[1usize, 2, 3, 8] {
+        let lanes = rand_lanes(&mut rng, p * 3, 401);
+        let sim = SimComm::new(p);
+        let mut ring = RingComm::new(p);
+        ring.chunk_elems = 13;
+        let mut a = lanes.clone();
+        let mut b = lanes.clone();
+        sim.all_reduce_mean(&mut a);
+        Collective::all_reduce_mean(&ring, &mut b);
+        assert_eq!(a, b, "p={p}");
+        let ss = Collective::stats(&sim);
+        let rs = Collective::stats(&ring);
+        assert_eq!(ss.ar_grads, rs.ar_grads, "p={p}");
+        assert_eq!(ss.num_ops, rs.num_ops, "p={p}");
+    }
+}
+
+#[test]
+fn reduce_scatter_v_matches_simcomm_bitwise_and_bytewise() {
+    let mut rng = Rng::new(31);
+    // odd square dims (packed accounting) + one non-square (dense)
+    let dims = [(5, 5), (3, 3), (17, 17), (4, 3)];
+    let classes = [StatClass::A, StatClass::GorF, StatClass::A, StatClass::GorF];
+    for &p in &[1usize, 2, 3, 8] {
+        let lanes = rand_mats(&mut rng, p * 2, &dims);
+        let sim = SimComm::new(p);
+        let ring = RingComm::new(p);
+        let want = sim.reduce_scatter_v(&lanes, &classes);
+        let got = Collective::reduce_scatter_v(&ring, &lanes, &classes);
+        assert_eq!(want.len(), got.len());
+        for (wm, gm) in want.iter().zip(got.iter()) {
+            assert_eq!(wm.data, gm.data, "p={p}");
+        }
+        let ss = Collective::stats(&sim);
+        let rs = Collective::stats(&ring);
+        assert_eq!(ss.rs_stats_a, rs.rs_stats_a, "p={p}");
+        assert_eq!(ss.rs_stats_g, rs.rs_stats_g, "p={p}");
+        assert_eq!(ss.num_ops, rs.num_ops, "p={p}");
+    }
+}
+
+#[test]
+fn reduce_scatter_v_concurrent_publish_out_of_order() {
+    // workers publish their statistics in reverse item order and at
+    // different times; owners must still reduce every item correctly
+    let p = 4;
+    let lanes_n = 4;
+    let n_items = 6;
+    let mut rng = Rng::new(41);
+    let dims: Vec<(usize, usize)> = (0..n_items).map(|i| (i + 2, i + 2)).collect();
+    let lanes = rand_mats(&mut rng, lanes_n, &dims);
+    // reference through SimComm (canonical semantics)
+    let classes = vec![StatClass::A; n_items];
+    let want = SimComm::new(p).reduce_scatter_v(&lanes, &classes);
+
+    let ring = Arc::new(RingComm::new(p));
+    ring.begin_stats(n_items, lanes_n);
+    let results: Vec<std::sync::Mutex<Option<Mat>>> =
+        (0..n_items).map(|_| std::sync::Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for rank in 0..p {
+            let ring = ring.clone();
+            let lanes = &lanes;
+            let results = &results;
+            s.spawn(move || {
+                // publish own lane's items in reverse order
+                for (i, m) in lanes[rank].iter().enumerate().rev() {
+                    ring.publish_stat(i, rank, m.clone());
+                }
+                // reduce owned items (round-robin)
+                let mut i = rank;
+                while i < n_items {
+                    let m = ring.reduce_stat(i, StatClass::A);
+                    *results[i].lock().unwrap() = Some(m);
+                    i += p;
+                }
+            });
+        }
+    });
+    for (i, w) in want.iter().enumerate() {
+        let got = results[i].lock().unwrap().take().expect("item reduced");
+        assert_eq!(w.data, got.data, "item {i}");
+    }
+}
+
+#[test]
+fn all_gather_v_moves_owner_segments() {
+    let p = 3;
+    let owner_of: Vec<usize> = (0..7).map(|i| i % p).collect();
+    let ring = Arc::new(RingComm::new(p));
+    // each rank starts with authoritative data only for its own segments
+    let make_segs = |rank: usize| -> Vec<Vec<f32>> {
+        owner_of
+            .iter()
+            .enumerate()
+            .map(|(i, &o)| {
+                if o == rank {
+                    vec![(i * 10 + o) as f32; i + 1]
+                } else {
+                    vec![0.0; i + 1]
+                }
+            })
+            .collect()
+    };
+    let mut all: Vec<Vec<Vec<f32>>> = (0..p).map(make_segs).collect();
+    std::thread::scope(|s| {
+        for (rank, segs) in all.iter_mut().enumerate() {
+            let ring = ring.clone();
+            let owner_of = &owner_of;
+            s.spawn(move || {
+                ring.all_gather_v(rank, segs, owner_of);
+            });
+        }
+    });
+    // every rank now holds every owner's segment
+    for rank in 0..p {
+        for (i, &o) in owner_of.iter().enumerate() {
+            assert_eq!(all[rank][i], vec![(i * 10 + o) as f32; i + 1], "rank {rank} seg {i}");
+        }
+    }
+    // bytes: total elems 1+2+..+7 = 28, ring factor 2/3, f32 wire
+    let total: usize = (1..=7).sum();
+    let want_bytes = (total as f64 * (2.0 / 3.0) * 4.0).round() as u64;
+    assert_eq!(Collective::stats(ring.as_ref()).ag_params, want_bytes);
+}
+
+#[test]
+fn all_gather_accounting_matches_simcomm() {
+    for &p in &[1usize, 2, 5] {
+        let sim = SimComm::new(p);
+        let ring = RingComm::new(p);
+        sim.all_gather_v_params(12_345);
+        Collective::all_gather_v_params(&ring, 12_345);
+        assert_eq!(
+            Collective::stats(&sim).ag_params,
+            Collective::stats(&ring).ag_params,
+            "p={p}"
+        );
+    }
+}
+
+#[test]
+fn fp16_wire_halves_ring_bytes() {
+    let mut lanes = rand_lanes(&mut Rng::new(7), 4, 100);
+    let mut ring16 = RingComm::new(2);
+    ring16.wire_elem_bytes = 2;
+    let ring32 = RingComm::new(2);
+    Collective::all_reduce_mean(&ring16, &mut lanes);
+    let mut lanes2 = rand_lanes(&mut Rng::new(7), 4, 100);
+    Collective::all_reduce_mean(&ring32, &mut lanes2);
+    assert_eq!(
+        2 * Collective::stats(&ring16).ar_grads,
+        Collective::stats(&ring32).ar_grads
+    );
+}
+
+#[test]
+fn rounds_are_reusable_across_steps() {
+    let p = 3;
+    let ring = RingComm::new(p);
+    let mut rng = Rng::new(53);
+    for _ in 0..5 {
+        let lanes = rand_lanes(&mut rng, p, 37);
+        let want = reference_mean(&lanes);
+        let mut got = lanes.clone();
+        Collective::all_reduce_mean(&ring, &mut got);
+        assert_eq!(got[0], want);
+        let mats = rand_mats(&mut rng, p, &[(4, 4), (6, 6)]);
+        let classes = [StatClass::A, StatClass::GorF];
+        let want_m = SimComm::new(p).reduce_scatter_v(&mats, &classes);
+        let got_m = Collective::reduce_scatter_v(&ring, &mats, &classes);
+        for (a, b) in want_m.iter().zip(got_m.iter()) {
+            assert_eq!(a.data, b.data);
+        }
+        assert!(Collective::take_step_stats(&ring).total() > 0);
+    }
+}

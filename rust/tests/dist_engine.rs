@@ -1,0 +1,236 @@
+//! Differential tests for the threaded dist engine and the trainer's
+//! worker-count determinism:
+//!
+//! - the threaded engine (real OS worker threads + `RingComm`) must
+//!   produce bit-identical losses, parameters and byte accounting to the
+//!   sequential coordinator at every step;
+//! - for a fixed global lane total (workers × grad_accum) the
+//!   synthesized global batch, losses and updates must be bit-identical
+//!   across worker counts — the property that makes `workers=1` runs
+//!   ground truth for `workers=4` runs.
+
+use std::sync::Arc;
+
+use spngd::collectives::Collective;
+use spngd::coordinator::{BnMode, DistMode, Fisher, Optim, Trainer, TrainerCfg};
+use spngd::data::{AugmentCfg, SynthDataset};
+use spngd::optim::{HyperParams, Schedule};
+use spngd::runtime::native;
+
+fn base_cfg(model: &str) -> TrainerCfg {
+    let hp = HyperParams {
+        alpha_mixup: 0.0,
+        p_decay: 2.0,
+        e_start: 100.0,
+        e_end: 200.0,
+        eta0: 0.02,
+        m0: 0.018,
+        lambda: 2.5e-3,
+    };
+    TrainerCfg {
+        model: model.to_string(),
+        workers: 2,
+        grad_accum: 1,
+        fisher: Fisher::Emp,
+        bn_mode: BnMode::Unit,
+        stale: false,
+        stale_alpha: 0.1,
+        lambda: hp.lambda,
+        schedule: Schedule::new(hp, 50),
+        optimizer: Optim::SpNgd,
+        weight_rescale: false,
+        clip_update_ratio: 0.3,
+        augment: AugmentCfg::disabled(),
+        bn_momentum: 0.9,
+        fp16_comm: false,
+        dist: DistMode::Sequential,
+        seed: 7,
+    }
+}
+
+fn make_trainer(cfg: TrainerCfg) -> Trainer {
+    let (manifest, engine) = native::build_default().unwrap();
+    let manifest = Arc::new(manifest);
+    let m = manifest.model(&cfg.model).unwrap();
+    let (c, h, w) = (m.input_shape[1], m.input_shape[2], m.input_shape[3]);
+    let ds = SynthDataset::new(m.num_classes, c, h, w, 4000, 42);
+    Trainer::new(manifest, Arc::new(engine), cfg, ds).unwrap()
+}
+
+fn flat_params(tr: &Trainer) -> Vec<f32> {
+    tr.params.iter().flat_map(|p| p.data.clone()).collect()
+}
+
+/// The core differential: threaded == sequential, step by step, bitwise.
+#[test]
+fn threaded_engine_matches_sequential_bitwise() {
+    let mut seq = make_trainer(base_cfg("mlp"));
+    let mut cfg = base_cfg("mlp");
+    cfg.dist = DistMode::Threaded;
+    let mut thr = make_trainer(cfg);
+    for i in 0..6 {
+        let rs = seq.step().unwrap();
+        let rt = thr.step().unwrap();
+        assert_eq!(rs.loss, rt.loss, "loss diverged at step {i}");
+        assert_eq!(rs.train_acc, rt.train_acc, "acc diverged at step {i}");
+        assert_eq!(rs.refreshed, rt.refreshed, "plan diverged at step {i}");
+        // byte accounting parity (SimComm vs RingComm formulas)
+        assert_eq!(rs.comm.rs_stats_a, rt.comm.rs_stats_a, "step {i}");
+        assert_eq!(rs.comm.rs_stats_g, rt.comm.rs_stats_g, "step {i}");
+        assert_eq!(rs.comm.ar_grads, rt.comm.ar_grads, "step {i}");
+        assert_eq!(rs.comm.ag_params, rt.comm.ag_params, "step {i}");
+        assert_eq!(flat_params(&seq), flat_params(&thr), "params diverged at step {i}");
+    }
+}
+
+#[test]
+fn threaded_engine_matches_sequential_on_convnet() {
+    let mut cfg = base_cfg("convnet_tiny");
+    cfg.dist = DistMode::Threaded;
+    cfg.workers = 4;
+    let mut seq4 = base_cfg("convnet_tiny");
+    seq4.workers = 4;
+    let mut seq = make_trainer(seq4);
+    let mut thr = make_trainer(cfg);
+    for i in 0..3 {
+        let rs = seq.step().unwrap();
+        let rt = thr.step().unwrap();
+        assert_eq!(rs.loss, rt.loss, "loss diverged at step {i}");
+        assert_eq!(flat_params(&seq), flat_params(&thr), "params diverged at step {i}");
+    }
+}
+
+/// Fixed lane total, varying worker count: (W=1, accum=4), (2, 2), (4, 1)
+/// must synthesize the same global batch and produce identical training.
+#[test]
+fn worker_count_invariance_sequential() {
+    let mk = |workers: usize, accum: usize| {
+        let mut cfg = base_cfg("mlp");
+        cfg.workers = workers;
+        cfg.grad_accum = accum;
+        make_trainer(cfg)
+    };
+    let mut a = mk(1, 4);
+    let mut b = mk(2, 2);
+    let mut c = mk(4, 1);
+    for i in 0..5 {
+        let ra = a.step().unwrap();
+        let rb = b.step().unwrap();
+        let rc = c.step().unwrap();
+        assert_eq!(ra.loss, rb.loss, "W=1 vs W=2 loss at step {i}");
+        assert_eq!(ra.loss, rc.loss, "W=1 vs W=4 loss at step {i}");
+        assert_eq!(ra.train_acc, rc.train_acc, "acc at step {i}");
+        let (pa, pb, pc) = (flat_params(&a), flat_params(&b), flat_params(&c));
+        assert_eq!(pa, pb, "W=1 vs W=2 params at step {i}");
+        assert_eq!(pa, pc, "W=1 vs W=4 params at step {i}");
+    }
+}
+
+/// Worker-count invariance holds for the threaded engine too, which is
+/// exactly why a W=1 sequential run is ground truth for a W=4 dist run.
+#[test]
+fn worker_count_invariance_threaded_vs_single_sequential() {
+    let mut seq = {
+        let mut cfg = base_cfg("mlp");
+        cfg.workers = 1;
+        cfg.grad_accum = 4;
+        make_trainer(cfg)
+    };
+    let mut thr = {
+        let mut cfg = base_cfg("mlp");
+        cfg.workers = 4;
+        cfg.grad_accum = 1;
+        cfg.dist = DistMode::Threaded;
+        make_trainer(cfg)
+    };
+    for i in 0..5 {
+        let rs = seq.step().unwrap();
+        let rt = thr.step().unwrap();
+        assert_eq!(rs.loss, rt.loss, "loss diverged at step {i}");
+        assert_eq!(flat_params(&seq), flat_params(&thr), "params diverged at step {i}");
+    }
+}
+
+/// The stale-statistics scheduler lives at the owners; its refresh plans
+/// must evolve identically under both engines.
+#[test]
+fn threaded_stale_scheduler_matches_sequential() {
+    // same stale config the sequential suite proves skips under
+    // (trainer_integration::stale_scheduler_reduces_refreshes)
+    let mk = |dist: DistMode| {
+        let mut cfg = base_cfg("mlp");
+        cfg.stale = true;
+        cfg.stale_alpha = 0.3;
+        cfg.grad_accum = 4;
+        cfg.dist = dist;
+        make_trainer(cfg)
+    };
+    let mut seq = mk(DistMode::Sequential);
+    let mut thr = mk(DistMode::Threaded);
+    let mut skipped_any = false;
+    for i in 0..30 {
+        let rs = seq.step().unwrap();
+        let rt = thr.step().unwrap();
+        assert_eq!(rs.refreshed, rt.refreshed, "refresh plan diverged at step {i}");
+        assert_eq!(rs.loss, rt.loss, "loss diverged at step {i}");
+        skipped_any |= rs.refreshed < rs.total_stats;
+    }
+    assert!(skipped_any, "stale scheduler never skipped — test exercises nothing");
+}
+
+/// All practical-NGD modes run (and train) under the threaded engine.
+#[test]
+fn threaded_all_modes_one_step() {
+    for (fisher, bn) in [
+        (Fisher::Emp, BnMode::Unit),
+        (Fisher::Emp, BnMode::Full),
+        (Fisher::OneMc, BnMode::Unit),
+    ] {
+        let mut cfg = base_cfg("convnet_tiny");
+        cfg.fisher = fisher;
+        cfg.bn_mode = bn;
+        cfg.dist = DistMode::Threaded;
+        cfg.workers = 3;
+        let mut tr = make_trainer(cfg);
+        let rec = tr.step().unwrap();
+        assert!(rec.loss.is_finite(), "{fisher:?}/{bn:?}");
+        assert!(rec.comm.stats_total() > 0);
+        assert_eq!(rec.refreshed, rec.total_stats, "first step refreshes all");
+    }
+}
+
+#[test]
+fn threaded_sgd_baseline() {
+    let mut cfg = base_cfg("mlp");
+    cfg.optimizer = Optim::Sgd;
+    cfg.dist = DistMode::Threaded;
+    let mut tr = make_trainer(cfg);
+    let first = tr.step().unwrap().loss;
+    let mut last = first;
+    for _ in 0..9 {
+        last = tr.step().unwrap().loss;
+    }
+    assert!(last < first, "threaded sgd loss should drop: {first} -> {last}");
+    assert_eq!(tr.comm().stats().stats_total(), 0, "SGD moves no statistics");
+}
+
+#[test]
+fn threaded_loss_decreases_and_evaluates() {
+    let mut cfg = base_cfg("mlp");
+    cfg.dist = DistMode::Threaded;
+    cfg.workers = 4;
+    let mut tr = make_trainer(cfg);
+    let mut first = 0.0;
+    let mut last = 0.0;
+    for i in 0..20 {
+        let rec = tr.step().unwrap();
+        assert!(rec.loss.is_finite(), "loss diverged at step {i}");
+        if i == 0 {
+            first = rec.loss;
+        }
+        last = rec.loss;
+    }
+    assert!(last < first, "threaded loss should drop: {first} -> {last}");
+    let (vl, va) = tr.evaluate(4).unwrap();
+    assert!(vl.is_finite() && (0.0..=1.0).contains(&va));
+}

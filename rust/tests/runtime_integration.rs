@@ -7,15 +7,15 @@
 //! the `pjrt`-gated module at the bottom (`cargo test --features pjrt`
 //! after `make artifacts`).
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use spngd::linalg::{solve, Mat};
 use spngd::runtime::{native, Executor, HostTensor, Manifest};
 use spngd::util::rng::Rng;
 
-fn runtime() -> (Rc<Manifest>, Rc<dyn Executor>) {
+fn runtime() -> (Arc<Manifest>, Arc<dyn Executor>) {
     let (manifest, backend) = native::build_default().unwrap();
-    (Rc::new(manifest), Rc::new(backend) as Rc<dyn Executor>)
+    (Arc::new(manifest), Arc::new(backend) as Arc<dyn Executor>)
 }
 
 fn rand_tensor(rng: &mut Rng, shape: Vec<usize>, scale: f32) -> HostTensor {

@@ -4,9 +4,10 @@
 //! artifacts, no network (the `data/synth` corpus is generated
 //! in-process).
 
-use std::rc::Rc;
+use std::sync::Arc;
 
-use spngd::coordinator::{BnMode, Fisher, Optim, Trainer, TrainerCfg};
+use spngd::collectives::Collective;
+use spngd::coordinator::{BnMode, DistMode, Fisher, Optim, Trainer, TrainerCfg};
 use spngd::data::{AugmentCfg, SynthDataset};
 use spngd::optim::{HyperParams, Schedule};
 use spngd::runtime::native;
@@ -37,17 +38,18 @@ fn base_cfg(model: &str, optimizer: Optim) -> TrainerCfg {
         augment: AugmentCfg::disabled(),
         bn_momentum: 0.9,
         fp16_comm: false,
+        dist: DistMode::Sequential,
         seed: 7,
     }
 }
 
 fn make_trainer(cfg: TrainerCfg) -> Trainer {
     let (manifest, engine) = native::build_default().unwrap();
-    let manifest = Rc::new(manifest);
+    let manifest = Arc::new(manifest);
     let m = manifest.model(&cfg.model).unwrap();
     let (c, h, w) = (m.input_shape[1], m.input_shape[2], m.input_shape[3]);
     let ds = SynthDataset::new(m.num_classes, c, h, w, 4000, 42);
-    Trainer::new(manifest, Rc::new(engine), cfg, ds).unwrap()
+    Trainer::new(manifest, Arc::new(engine), cfg, ds).unwrap()
 }
 
 #[test]
