@@ -53,7 +53,7 @@ class RingComm:
                 st['active'] = False
         return red
 
-    # ---- grad AllReduce
+    # ---- grad AllReduce (post-by-move; one mean copy per rank drain)
     def grad_post(self, my_lanes, total):
         if not my_lanes:
             return
@@ -64,6 +64,7 @@ class RingComm:
                 if not st['active']:
                     nch = 0 if n == 0 else -(-n // self.chunk)
                     self.g = dict(active=True, n=n, total=total, posted=0,
+                                  participants=0,
                                   lanes=[None] * total, frozen=None,
                                   reduced=[0.0] * n, next_chunk=0,
                                   done=0, nchunks=nch, drained=0)
@@ -73,16 +74,15 @@ class RingComm:
                     break
                 self.cv.wait()
             assert st['total'] == total
+            st['participants'] += 1
             for g_idx, buf in my_lanes:
                 assert st['lanes'][g_idx] is None
-                st['lanes'][g_idx] = list(buf)
+                st['lanes'][g_idx] = buf  # moved, not copied
                 st['posted'] += 1
             if st['posted'] == st['total']:
                 self.cv.notify_all()
 
-    def grad_finish(self, my_lanes):
-        if not my_lanes:
-            return
+    def grad_finish(self):
         with self.cv:
             st = self.g
             assert st['active'], "finish without post"
@@ -113,13 +113,14 @@ class RingComm:
             st = self.g
             while st['done'] < st['nchunks']:
                 self.cv.wait()
-            for g_idx, buf in my_lanes:
-                buf[:] = st['reduced']
-                st['drained'] += 1
-            if st['drained'] == st['total']:
+            st['drained'] += 1
+            if st['drained'] == st['participants']:
+                out = st['reduced']
                 st['active'] = False
                 self.bytes += 2 * n
                 self.cv.notify_all()
+                return out
+            return list(st['reduced'])
 
     # ---- gather
     def all_gather_v(self, rank, segs, owner_of):
@@ -178,14 +179,14 @@ def run_case(p, micro, n_items, n, steps, chunk, seed):
             for i in range(n_items):
                 if owners[i] == rank:
                     red[i] = ring.reduce_stat(i)
-            ring.grad_finish(lanes)
+            mean = ring.grad_finish() if my_lanes else []
             segs = [[float(rank)] * (i + 1) if owners[i] % p == rank
                     else [0.0] * (i + 1) for i in range(n_items)]
             ring.all_gather_v(rank, segs, owners)
             with lock:
                 for i, v in red.items():
                     results[(step, i)] = v
-                results[(step, 'grad', rank)] = [list(b) for _, b in lanes]
+                results[(step, 'grad', rank)] = [list(mean)]
                 results[(step, 'ag', rank)] = segs
         except Exception as e:  # noqa
             with lock:

@@ -7,24 +7,34 @@
 //! inversion, near-ideal 128→1024 scaling for emp+unitBN+stale, and the
 //! technique ordering (1mc+fullBN slowest … emp+unitBN+stale fastest).
 
+use std::sync::Arc;
+
 use spngd::collectives::cost::ClusterModel;
-use spngd::coordinator::{Fisher, Optim};
 use spngd::harness;
+use spngd::optim::{Fisher, SpNgd};
 use spngd::simulator;
 
 fn main() {
-    let mut cfg = harness::default_cfg("convnet_small", Optim::SpNgd);
-    cfg.workers = 2;
-    let mut tr = harness::make_trainer(cfg, 4096, 7).expect("artifacts");
+    let mut tr = harness::builder("convnet_small", Arc::new(SpNgd::default()))
+        .expect("runtime")
+        .workers(2)
+        .dataset_len(4096)
+        .data_seed(7)
+        .build()
+        .expect("trainer");
     for _ in 0..6 {
         tr.step().unwrap();
     }
     let base = tr.profile();
 
-    let mut cfg1 = harness::default_cfg("convnet_small", Optim::SpNgd);
-    cfg1.workers = 2;
-    cfg1.fisher = Fisher::OneMc;
-    let mut tr1 = harness::make_trainer(cfg1, 4096, 7).expect("artifacts");
+    let opt1 = Arc::new(SpNgd { fisher: Fisher::OneMc, ..SpNgd::default() });
+    let mut tr1 = harness::builder("convnet_small", opt1)
+        .expect("runtime")
+        .workers(2)
+        .dataset_len(4096)
+        .data_seed(7)
+        .build()
+        .expect("trainer");
     for _ in 0..6 {
         tr1.step().unwrap();
     }
@@ -33,12 +43,15 @@ fn main() {
 
     // stale fraction from a longer accumulation run (statistics at our
     // batch scale need α=0.3; the paper's α=0.1 applies at BS≥4K)
-    let mut cfg_s = harness::default_cfg("convnet_small", Optim::SpNgd);
-    cfg_s.workers = 2;
-    cfg_s.grad_accum = 2;
-    cfg_s.stale = true;
-    cfg_s.stale_alpha = 0.3;
-    let mut tr_s = harness::make_trainer(cfg_s, 4096, 7).expect("artifacts");
+    let opt_s = Arc::new(SpNgd { stale: true, stale_alpha: 0.3, ..SpNgd::default() });
+    let mut tr_s = harness::builder("convnet_small", opt_s)
+        .expect("runtime")
+        .workers(2)
+        .grad_accum(2)
+        .dataset_len(4096)
+        .data_seed(7)
+        .build()
+        .expect("trainer");
     for _ in 0..30 {
         tr_s.step().unwrap();
     }

@@ -7,18 +7,23 @@
 //! series at two accumulation levels and prints the stacked A and G/F
 //! byte columns for representative steps.
 
-use spngd::coordinator::Optim;
+use std::sync::Arc;
+
 use spngd::harness;
+use spngd::optim::SpNgd;
 use spngd::util::stats::fmt_bytes;
 
 fn main() {
     for &(accum, steps) in &[(1usize, 50usize), (4, 30)] {
-        let mut cfg = harness::default_cfg("convnet_small", Optim::SpNgd);
-        cfg.workers = 2;
-        cfg.grad_accum = accum;
-        cfg.stale = true;
-        cfg.stale_alpha = 0.3;
-        let mut tr = harness::make_trainer(cfg, 8192, 17).expect("artifacts");
+        let opt = Arc::new(SpNgd { stale: true, stale_alpha: 0.3, ..SpNgd::default() });
+        let mut tr = harness::builder("convnet_small", opt)
+            .expect("runtime")
+            .workers(2)
+            .grad_accum(accum)
+            .dataset_len(8192)
+            .data_seed(17)
+            .build()
+            .expect("trainer");
 
         let mut series: Vec<(u64, u64, u64)> = Vec::new(); // (step, A bytes, G/F bytes)
         for _ in 0..steps {

@@ -10,15 +10,19 @@
 //! SPNGD_THREADS=4 cargo bench --bench native_perf    # pin the pool size
 //! ```
 //!
-//! JSON schema (`spngd-bench-native/1`): `{schema, model, threads, quick,
+//! JSON schema (`spngd-bench-native/2`): `{schema, model, threads, quick,
 //! step: {name, ns, naive_ns, speedup}, kernels: [{name, ns, naive_ns,
-//! speedup}, ...]}` — `ns` is the median per-iteration wall time of the
-//! parallel kernel, `naive_ns` the same measurement with
+//! speedup}, ...], workers: [...], optimizers: [{name, step_ns}, ...]}` —
+//! `ns` is the median per-iteration wall time of the parallel kernel,
+//! `naive_ns` the same measurement with
 //! `linalg::set_reference_kernels(true)` routing every product to the
-//! pre-refactor naive loops, `speedup` their ratio.
+//! pre-refactor naive loops, `speedup` their ratio. `optimizers` is the
+//! end-to-end trainer step time once per registered optimizer
+//! (spngd | sgd | lars), so optimizer-level perf is tracked per PR.
 
-use spngd::coordinator::{DistMode, Optim};
+use spngd::coordinator::DistMode;
 use spngd::harness::{self, bench};
+use spngd::optim;
 use spngd::linalg::{self, Mat};
 use spngd::runtime::native::kernels;
 use spngd::runtime::{Executor, HostTensor};
@@ -160,11 +164,15 @@ fn main() {
     let mut base_ns = 0.0f64;
     let mut dist_entries: Vec<Json> = Vec::new();
     for &wk in &workers_list {
-        let mut cfg = harness::default_cfg("convnet_tiny", Optim::SpNgd);
-        cfg.workers = wk;
-        cfg.grad_accum = 1;
-        cfg.dist = DistMode::Threaded;
-        let mut tr = harness::make_trainer(cfg, 2048, 7).expect("dist trainer");
+        let mut tr = harness::builder("convnet_tiny", optim::spngd())
+            .expect("runtime")
+            .workers(wk)
+            .grad_accum(1)
+            .dist(DistMode::Threaded)
+            .dataset_len(2048)
+            .data_seed(7)
+            .build()
+            .expect("dist trainer");
         let s = bench(&format!("dist step convnet_tiny workers={wk}"), wu, it, || {
             tr.step().expect("dist step");
         });
@@ -181,14 +189,36 @@ fn main() {
         ]));
     }
 
+    // ---- per-optimizer end-to-end step time (same model/shape for all,
+    // resolved through the registry so new optimizers appear here free)
+    let mut optim_entries: Vec<Json> = Vec::new();
+    for &name in optim::OPTIMIZER_NAMES {
+        let opt = optim::by_name(name).expect("registered optimizer");
+        let mut tr = harness::builder("convnet_tiny", opt)
+            .expect("runtime")
+            .workers(2)
+            .dataset_len(2048)
+            .data_seed(7)
+            .build()
+            .expect("optimizer trainer");
+        let s = bench(&format!("step convnet_tiny optim={name}"), wu, it, || {
+            tr.step().expect("optimizer step");
+        });
+        optim_entries.push(obj(vec![
+            ("name", Json::from(name)),
+            ("step_ns", Json::from(s.median() * 1e9)),
+        ]));
+    }
+
     let report = obj(vec![
-        ("schema", Json::from("spngd-bench-native/1")),
+        ("schema", Json::from("spngd-bench-native/2")),
         ("model", Json::from(model_name.clone())),
         ("threads", Json::from(threads)),
         ("quick", Json::from(quick)),
         ("step", step.json()),
         ("kernels", Json::Arr(entries.iter().map(Entry::json).collect())),
         ("workers", Json::Arr(dist_entries)),
+        ("optimizers", Json::Arr(optim_entries)),
     ]);
     let out_path = parsed.get("out");
     std::fs::write(out_path, report.to_string_pretty()).expect("write bench report");

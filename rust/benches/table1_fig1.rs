@@ -9,9 +9,11 @@
 //! of reach (see DESIGN.md §4); the *shape* — NGD needs roughly half the
 //! steps of SGD at the same batch size — is the reproduction target.
 
+use std::sync::Arc;
+
 use spngd::collectives::cost::{predict_step_time, ClusterModel};
-use spngd::coordinator::Optim;
 use spngd::harness;
+use spngd::optim::{Preconditioner, SpNgd};
 
 /// Paper Table 1 rows (reference constants for the printed comparison).
 const PAPER_ROWS: &[(&str, usize, &str, usize, f64)] = &[
@@ -24,12 +26,18 @@ const PAPER_ROWS: &[(&str, usize, &str, usize, f64)] = &[
     ("This work (paper)", 131_072, "SP-NGD", 873, 74.9),
 ];
 
-fn run(optimizer: Optim, target_acc: f32, max_steps: usize) -> (Option<u64>, f32, f64) {
-    let mut cfg = harness::default_cfg("convnet_small", optimizer);
-    cfg.workers = 2;
-    cfg.stale = optimizer == Optim::SpNgd;
-    cfg.stale_alpha = 0.3;
-    let mut tr = harness::make_trainer(cfg, 8192, 11).expect("artifacts");
+fn run(
+    optimizer: Arc<dyn Preconditioner>,
+    target_acc: f32,
+    max_steps: usize,
+) -> (Option<u64>, f32, f64) {
+    let mut tr = harness::builder("convnet_small", optimizer)
+        .expect("runtime")
+        .workers(2)
+        .dataset_len(8192)
+        .data_seed(11)
+        .build()
+        .expect("trainer");
     let mut steps_to = None;
     let mut final_acc = 0.0f32;
     for i in 1..=max_steps {
@@ -57,8 +65,9 @@ fn main() {
     let target = 0.93f32;
     println!("\n=== This reproduction (synthetic corpus, target {:.0}% val acc) ===", target * 100.0);
     let t0 = std::time::Instant::now();
-    let (sgd_steps, sgd_acc, sgd_tstep) = run(Optim::Sgd, target, 256);
-    let (ngd_steps, ngd_acc, ngd_tstep) = run(Optim::SpNgd, target, 256);
+    let (sgd_steps, sgd_acc, sgd_tstep) = run(spngd::optim::sgd(), target, 256);
+    let ngd = Arc::new(SpNgd { stale: true, stale_alpha: 0.3, ..SpNgd::default() });
+    let (ngd_steps, ngd_acc, ngd_tstep) = run(ngd, target, 256);
     println!(
         "{:<22} {:>8} {:>9} {:>8} {:>9}  t/step@1024GPU {:.0}ms",
         "SGD baseline",

@@ -8,8 +8,10 @@
 //! paper's own method for BS≥65K) and both variants train the same number
 //! of updates.
 
-use spngd::coordinator::Optim;
+use std::sync::Arc;
+
 use spngd::harness;
+use spngd::optim::SpNgd;
 use spngd::util::stats::fmt_duration;
 
 /// paper's Table 2 stale-statistics columns (reference)
@@ -21,12 +23,15 @@ const PAPER: &[(usize, f64, f64)] = &[
 ];
 
 fn run(accum: usize, stale: bool, steps: usize) -> (f64, f64, f32) {
-    let mut cfg = harness::default_cfg("convnet_small", Optim::SpNgd);
-    cfg.workers = 2;
-    cfg.grad_accum = accum;
-    cfg.stale = stale;
-    cfg.stale_alpha = 0.3;
-    let mut tr = harness::make_trainer(cfg, 8192, 13).expect("artifacts");
+    let opt = Arc::new(SpNgd { stale, stale_alpha: 0.3, ..SpNgd::default() });
+    let mut tr = harness::builder("convnet_small", opt)
+        .expect("runtime")
+        .workers(2)
+        .grad_accum(accum)
+        .dataset_len(8192)
+        .data_seed(13)
+        .build()
+        .expect("trainer");
     for _ in 0..steps {
         tr.step().unwrap();
     }

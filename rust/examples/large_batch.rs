@@ -6,9 +6,11 @@
 //!
 //!     cargo run --release --example large_batch [steps_budget]
 
+use std::sync::Arc;
+
 use anyhow::Result;
-use spngd::coordinator::Optim;
 use spngd::harness;
+use spngd::optim::{Preconditioner, SpNgd};
 use spngd::util::stats::fmt_duration;
 
 fn main() -> Result<()> {
@@ -23,21 +25,24 @@ fn main() -> Result<()> {
         "BS", "workers", "accum", "steps@tgt", "final acc", "mean step", "comm kept"
     );
     for (workers, accum) in settings {
-        let mut cfg = harness::default_cfg("mlp", Optim::SpNgd);
-        cfg.workers = workers;
-        cfg.grad_accum = accum;
-        cfg.stale = true;
-        cfg.stale_alpha = 0.1;
+        let opt = Arc::new(SpNgd { stale: true, stale_alpha: 0.1, ..SpNgd::default() });
         // LR scaling with batch size (the paper tunes η₀ per Table 2 row;
-        // we use sqrt scaling from the base)
+        // we use sqrt scaling from the optimizer's base)
         let scale = (accum as f64).sqrt();
-        cfg.schedule.hp.eta0 *= scale;
-        cfg.schedule.hp.m0 *= scale;
+        let mut hp = opt.default_hparams();
+        hp.eta0 *= scale;
+        hp.m0 *= scale;
         let eff_bs = workers * accum * 32;
         // same #samples budget for every BS: fewer steps at bigger BS
         let steps = budget / accum;
 
-        let mut tr = harness::make_trainer(cfg, 8192, 11)?;
+        let mut tr = harness::builder("mlp", opt)?
+            .hyperparams(hp)
+            .workers(workers)
+            .grad_accum(accum)
+            .dataset_len(8192)
+            .data_seed(11)
+            .build()?;
         let mut steps_to_target = None;
         for i in 1..=steps {
             tr.step()?;

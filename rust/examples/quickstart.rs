@@ -5,26 +5,30 @@
 //! ```
 //!
 //! Runs end-to-end on the native CPU backend — no artifacts needed.
-//! Demonstrates the minimal public API: load the runtime, build a
-//! trainer, step it, evaluate. (`SPNGD_BACKEND=pjrt` switches to the
-//! PJRT engine when built with `--features pjrt`.)
+//! Demonstrates the minimal public API: compose a trainer with the
+//! builder, step it, evaluate. (`SPNGD_BACKEND=pjrt` switches to the
+//! PJRT engine when built with `--features pjrt`; `--optim`-style
+//! swaps are one `optim::by_name` call away.)
+
+use std::sync::Arc;
 
 use anyhow::Result;
-use spngd::coordinator::Optim;
 use spngd::harness;
+use spngd::optim::SpNgd;
 
 fn main() -> Result<()> {
     // SP-NGD with every practical technique on: empirical Fisher,
     // unit-wise BN (no BN in the MLP, but the mode is set), stale stats.
-    let mut cfg = harness::default_cfg("mlp", Optim::SpNgd);
-    cfg.stale = true;
-    // small-batch statistics fluctuate (the paper's own observation, §4.3)
-    // so the quickstart uses a looser similarity threshold + accumulation
-    cfg.stale_alpha = 0.3;
-    cfg.grad_accum = 2;
-    cfg.workers = 2;
-
-    let mut trainer = harness::make_trainer(cfg, 4096, 7)?;
+    // Small-batch statistics fluctuate (the paper's own observation,
+    // §4.3) so the quickstart uses a looser similarity threshold +
+    // accumulation.
+    let opt = Arc::new(SpNgd { stale: true, stale_alpha: 0.3, ..SpNgd::default() });
+    let mut trainer = harness::builder("mlp", opt)?
+        .workers(2)
+        .grad_accum(2)
+        .dataset_len(4096)
+        .data_seed(7)
+        .build()?;
     println!("SP-NGD quickstart: mlp on the synthetic corpus");
     for i in 1..=60 {
         let rec = trainer.step()?;

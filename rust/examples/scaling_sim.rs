@@ -4,27 +4,33 @@
 //!
 //!     cargo run --release --example scaling_sim
 
+use std::sync::Arc;
+
 use anyhow::Result;
 use spngd::collectives::cost::ClusterModel;
-use spngd::coordinator::{Fisher, Optim};
 use spngd::harness;
+use spngd::optim::{Fisher, SpNgd};
 use spngd::simulator;
 
 fn main() -> Result<()> {
     // --- measure the emp+unitBN base profile on real steps
-    let mut cfg = harness::default_cfg("convnet_small", Optim::SpNgd);
-    cfg.workers = 2;
-    let mut tr = harness::make_trainer(cfg, 4096, 7)?;
+    let mut tr = harness::builder("convnet_small", Arc::new(SpNgd::default()))?
+        .workers(2)
+        .dataset_len(4096)
+        .data_seed(7)
+        .build()?;
     for _ in 0..4 {
         tr.step()?;
     }
     let base = tr.profile();
 
     // --- measure the 1mc extra-backward delta on real steps
-    let mut cfg1 = harness::default_cfg("convnet_small", Optim::SpNgd);
-    cfg1.workers = 2;
-    cfg1.fisher = Fisher::OneMc;
-    let mut tr1 = harness::make_trainer(cfg1, 4096, 7)?;
+    let opt1 = Arc::new(SpNgd { fisher: Fisher::OneMc, ..SpNgd::default() });
+    let mut tr1 = harness::builder("convnet_small", opt1)?
+        .workers(2)
+        .dataset_len(4096)
+        .data_seed(7)
+        .build()?;
     for _ in 0..4 {
         tr1.step()?;
     }
@@ -33,11 +39,13 @@ fn main() -> Result<()> {
         ((base1.t_forward + base1.t_backward) - (base.t_forward + base.t_backward)).max(0.0);
 
     // --- measure the stale refresh fraction on a longer stale run
-    let mut cfg_s = harness::default_cfg("convnet_small", Optim::SpNgd);
-    cfg_s.workers = 2;
-    cfg_s.stale = true;
-    cfg_s.grad_accum = 2;
-    let mut tr_s = harness::make_trainer(cfg_s, 4096, 7)?;
+    let opt_s = Arc::new(SpNgd { stale: true, ..SpNgd::default() });
+    let mut tr_s = harness::builder("convnet_small", opt_s)?
+        .workers(2)
+        .grad_accum(2)
+        .dataset_len(4096)
+        .data_seed(7)
+        .build()?;
     for _ in 0..20 {
         tr_s.step()?;
     }

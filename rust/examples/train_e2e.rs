@@ -12,10 +12,13 @@
 //!
 //!     cargo run --release --example train_e2e [steps] [target_acc]
 
+use std::sync::Arc;
+
 use anyhow::Result;
-use spngd::coordinator::{Optim, Trainer};
+use spngd::coordinator::Trainer;
 use spngd::data::AugmentCfg;
 use spngd::harness;
+use spngd::optim::{self, Preconditioner, SpNgd};
 use spngd::util::stats::{fmt_bytes, fmt_duration};
 
 struct Outcome {
@@ -29,23 +32,23 @@ struct Outcome {
 
 fn run(
     name: &'static str,
-    optimizer: Optim,
+    optimizer: Arc<dyn Preconditioner>,
     steps: usize,
     target_acc: f32,
     csv: &str,
 ) -> Result<Outcome> {
-    let mut cfg = harness::default_cfg("convnet_small", optimizer);
-    cfg.workers = 2;
-    cfg.stale = optimizer == Optim::SpNgd;
-    cfg.weight_rescale = false;
-    cfg.augment = AugmentCfg {
-        alpha_mixup: 0.2,
-        erase_p: 0.25,
-        ..AugmentCfg::default()
-    };
     // steps-per-epoch for the schedule: corpus 8192 / eff-batch 64 = 128
     let dataset_len = 8192;
-    let mut trainer: Trainer = harness::make_trainer(cfg, dataset_len, 7)?;
+    let mut trainer: Trainer = harness::builder("convnet_small", optimizer)?
+        .workers(2)
+        .augment(AugmentCfg {
+            alpha_mixup: 0.2,
+            erase_p: 0.25,
+            ..AugmentCfg::default()
+        })
+        .dataset_len(dataset_len)
+        .data_seed(7)
+        .build()?;
     let steps_per_epoch =
         dataset_len / (trainer.cfg.workers * trainer.cfg.grad_accum * 32);
 
@@ -102,10 +105,10 @@ fn main() -> Result<()> {
     let target: f32 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(0.80);
 
     std::fs::create_dir_all("results")?;
-    let sgd = run("SGD baseline", Optim::Sgd, steps, target, "results/e2e_sgd.csv")?;
+    let sgd = run("SGD baseline", optim::sgd(), steps, target, "results/e2e_sgd.csv")?;
     let ngd = run(
         "SP-NGD (emp+unitBN+stale)",
-        Optim::SpNgd,
+        Arc::new(SpNgd { stale: true, ..SpNgd::default() }),
         steps,
         target,
         "results/e2e_spngd.csv",

@@ -1,0 +1,241 @@
+//! [`TrainerBuilder`] — composes a model, a [`Preconditioner`], an
+//! [`UpdateRule`], a [`SchedulePolicy`] and a dist engine into a
+//! [`Trainer`]. This replaces raw `TrainerCfg` construction: execution
+//! shape (workers, accumulation, dist mode, augment, seed) stays in the
+//! slim [`TrainerCfg`], while everything optimizer-flavored lives behind
+//! the optim traits.
+//!
+//! ```no_run
+//! # fn main() -> anyhow::Result<()> {
+//! use spngd::coordinator::TrainerBuilder;
+//! use spngd::optim;
+//!
+//! let mut trainer = TrainerBuilder::new("mlp")
+//!     .optimizer(optim::by_name("lars")?)
+//!     .workers(4)
+//!     .build()?;
+//! trainer.step()?;
+//! # Ok(())
+//! # }
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::trainer::{DistMode, Trainer, TrainerCfg};
+use crate::data::{AugmentCfg, SynthDataset};
+use crate::optim::{
+    HyperParams, MomentumRule, Preconditioner, Schedule, SchedulePolicy, UpdateRule,
+};
+use crate::runtime::{native, Executor, Manifest};
+
+pub struct TrainerBuilder {
+    model: String,
+    workers: usize,
+    grad_accum: usize,
+    augment: AugmentCfg,
+    bn_momentum: f32,
+    fp16_comm: bool,
+    dist: DistMode,
+    seed: u64,
+    opt: Option<Arc<dyn Preconditioner>>,
+    rule: Option<Arc<dyn UpdateRule>>,
+    clip_update_ratio: f32,
+    weight_rescale: bool,
+    schedule: Option<Arc<dyn SchedulePolicy>>,
+    hyperparams: Option<HyperParams>,
+    steps_per_epoch: usize,
+    dataset: Option<SynthDataset>,
+    dataset_len: usize,
+    data_seed: u64,
+    runtime: Option<(Arc<Manifest>, Arc<dyn Executor>)>,
+}
+
+impl TrainerBuilder {
+    /// A builder with the stock composition: SP-NGD (emp Fisher, unitBN,
+    /// no stale scheduler), [`MomentumRule`] with a 0.3 trust-ratio clip,
+    /// the optimizer's default polynomial schedule, 2 sequential workers,
+    /// and the hermetic native runtime over a synthetic dataset.
+    pub fn new(model: &str) -> Self {
+        TrainerBuilder {
+            model: model.to_string(),
+            workers: 2,
+            grad_accum: 1,
+            augment: AugmentCfg::disabled(),
+            bn_momentum: 0.9,
+            fp16_comm: false,
+            dist: DistMode::Sequential,
+            seed: 7,
+            opt: None,
+            rule: None,
+            clip_update_ratio: 0.3,
+            weight_rescale: false,
+            schedule: None,
+            hyperparams: None,
+            steps_per_epoch: 64,
+            dataset: None,
+            dataset_len: 4000,
+            data_seed: 42,
+            runtime: None,
+        }
+    }
+
+    /// The preconditioner (default: `optim::spngd()`).
+    pub fn optimizer(mut self, opt: Arc<dyn Preconditioner>) -> Self {
+        self.opt = Some(opt);
+        self
+    }
+
+    /// A custom update rule. Overrides
+    /// [`clip_update_ratio`](Self::clip_update_ratio) /
+    /// [`weight_rescale`](Self::weight_rescale), which configure the
+    /// stock [`MomentumRule`].
+    pub fn update_rule(mut self, rule: Arc<dyn UpdateRule>) -> Self {
+        self.rule = Some(rule);
+        self
+    }
+
+    /// Trust-ratio update clip for the stock rule (0 = off; default 0.3).
+    pub fn clip_update_ratio(mut self, clip: f32) -> Self {
+        self.clip_update_ratio = clip;
+        self
+    }
+
+    /// Normalizing-Weights rescale (Eq. 24) in the stock rule.
+    pub fn weight_rescale(mut self, on: bool) -> Self {
+        self.weight_rescale = on;
+        self
+    }
+
+    /// A fully custom lr/momentum policy. Overrides
+    /// [`hyperparams`](Self::hyperparams) /
+    /// [`steps_per_epoch`](Self::steps_per_epoch), which configure the
+    /// stock polynomial [`Schedule`].
+    pub fn schedule<S: SchedulePolicy + 'static>(mut self, schedule: S) -> Self {
+        self.schedule = Some(Arc::new(schedule));
+        self
+    }
+
+    /// Hyperparameters for the stock polynomial schedule (default: the
+    /// optimizer's [`Preconditioner::default_hparams`]).
+    pub fn hyperparams(mut self, hp: HyperParams) -> Self {
+        self.hyperparams = Some(hp);
+        self
+    }
+
+    /// Steps per epoch for the stock schedule's epoch clock (default 64).
+    pub fn steps_per_epoch(mut self, steps: usize) -> Self {
+        self.steps_per_epoch = steps;
+        self
+    }
+
+    /// Data-parallel workers (default 2).
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    /// Gradient-accumulation micro-steps (default 1).
+    pub fn grad_accum(mut self, accum: usize) -> Self {
+        self.grad_accum = accum;
+        self
+    }
+
+    /// Augmentation pipeline (default disabled).
+    pub fn augment(mut self, augment: AugmentCfg) -> Self {
+        self.augment = augment;
+        self
+    }
+
+    /// BN running-stat EMA momentum (default 0.9).
+    pub fn bn_momentum(mut self, bn_momentum: f32) -> Self {
+        self.bn_momentum = bn_momentum;
+        self
+    }
+
+    /// Half-precision wire format for collectives (§5.2).
+    pub fn fp16_comm(mut self, on: bool) -> Self {
+        self.fp16_comm = on;
+        self
+    }
+
+    /// Worker execution engine (default sequential).
+    pub fn dist(mut self, dist: DistMode) -> Self {
+        self.dist = dist;
+        self
+    }
+
+    /// Trainer RNG seed (default 7).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Synthetic-corpus size (default 4000) for the default dataset.
+    pub fn dataset_len(mut self, len: usize) -> Self {
+        self.dataset_len = len;
+        self
+    }
+
+    /// Synthetic-corpus seed (default 42) for the default dataset.
+    pub fn data_seed(mut self, seed: u64) -> Self {
+        self.data_seed = seed;
+        self
+    }
+
+    /// An explicit dataset (overrides dataset_len/data_seed).
+    pub fn dataset(mut self, dataset: SynthDataset) -> Self {
+        self.dataset = Some(dataset);
+        self
+    }
+
+    /// An explicit runtime (default: the hermetic native CPU backend).
+    pub fn runtime(mut self, manifest: Arc<Manifest>, engine: Arc<dyn Executor>) -> Self {
+        self.runtime = Some((manifest, engine));
+        self
+    }
+
+    pub fn build(self) -> Result<Trainer> {
+        let opt = self.opt.unwrap_or_else(crate::optim::spngd);
+        let rule: Arc<dyn UpdateRule> = self.rule.unwrap_or_else(|| {
+            Arc::new(MomentumRule {
+                clip_update_ratio: self.clip_update_ratio,
+                weight_rescale: self.weight_rescale,
+            })
+        });
+        let schedule: Arc<dyn SchedulePolicy> = match self.schedule {
+            Some(s) => s,
+            None => {
+                let hp = self.hyperparams.unwrap_or_else(|| opt.default_hparams());
+                Arc::new(Schedule::new(hp, self.steps_per_epoch))
+            }
+        };
+        let (manifest, engine) = match self.runtime {
+            Some(r) => r,
+            None => {
+                let (m, e) = native::build_default()?;
+                (Arc::new(m), Arc::new(e) as Arc<dyn Executor>)
+            }
+        };
+        let m = manifest.model(&self.model)?;
+        let dataset = match self.dataset {
+            Some(d) => d,
+            None => {
+                let (c, h, w) = (m.input_shape[1], m.input_shape[2], m.input_shape[3]);
+                SynthDataset::new(m.num_classes, c, h, w, self.dataset_len, self.data_seed)
+            }
+        };
+        let cfg = TrainerCfg {
+            model: self.model,
+            workers: self.workers,
+            grad_accum: self.grad_accum,
+            augment: self.augment,
+            bn_momentum: self.bn_momentum,
+            fp16_comm: self.fp16_comm,
+            dist: self.dist,
+            seed: self.seed,
+        };
+        Trainer::new(manifest, engine, cfg, opt, rule, schedule, dataset)
+    }
+}

@@ -7,12 +7,14 @@
 //! Stage 1  workers run fwd (+ A-statistics construction)          [data ||]
 //! Stage 2  ReduceScatterV(A) overlapped with bwd (+ G, F_unitBN)  [data ||]
 //! Stage 3  ReduceScatterV(G, F, grad L)
-//! Stage 4  owners invert factors + apply NGD update               [model ||]
+//! Stage 4  owners invert factors + apply the update               [model ||]
 //! Stage 5  AllGatherV(w)
 //! ```
 //!
-//! plus the practical-NGD machinery: empirical-vs-1mc Fisher, unit-wise
-//! BatchNorm Fisher, and the adaptive stale-statistics scheduler.
+//! The optimizer behind Stage 4 is pluggable: the trainer drives a
+//! [`crate::optim::Preconditioner`] trait object (SP-NGD with all its
+//! practical machinery, the SGD baseline, LARS, …) composed with an
+//! update rule and a schedule by [`TrainerBuilder`].
 
 //! The step runs on one of two engines sharing the same math path:
 //! sequential (workers iterated in the coordinator thread, `SimComm`
@@ -20,8 +22,12 @@
 //! real ring collectives, comm/compute overlap per Alg. 3) — selected by
 //! [`trainer::DistMode`].
 
-pub mod stale;
+pub mod builder;
 pub mod trainer;
 
-pub use stale::StaleState;
-pub use trainer::{BnMode, DistMode, Fisher, Optim, Trainer, TrainerCfg};
+pub use builder::TrainerBuilder;
+pub use trainer::{DistMode, Trainer, TrainerCfg};
+
+// re-exported for compatibility: these types moved into `optim` with the
+// composable optimizer API
+pub use crate::optim::{BnMode, Fisher, StaleState};

@@ -1,4 +1,12 @@
-//! The SP-NGD trainer: Algorithm 3 over data-parallel workers.
+//! The SP-NGD trainer: Algorithm 3 over data-parallel workers, driving a
+//! pluggable optimizer.
+//!
+//! The optimizer is a composed triple (see [`crate::optim`]):
+//! a [`Preconditioner`] trait object owning per-layer second-order state
+//! (SP-NGD, SGD, LARS, …), an [`UpdateRule`] applying directions to
+//! weights, and a [`SchedulePolicy`] for η(t)/m(t). The trainer itself
+//! only knows the Stage pipeline; every `match` on optimizer behavior
+//! lives behind the trait in `optim/`.
 //!
 //! The step pipeline is *lane-canonical*: the global batch is drawn in
 //! global lane order `g = m·W + w` (micro-step major) from one data RNG,
@@ -14,9 +22,9 @@
 //!   so it can be differentially tested against it.
 //!
 //! Sequential and threaded modes share the same per-lane compute
-//! ([`run_lane`]), per-layer inversion ([`refresh_and_invert_layer`])
-//! and per-layer update ([`update_layer`]) helpers — one math path,
-//! two schedules.
+//! ([`run_lane`]), and both call `Preconditioner::refresh` /
+//! `optim::apply_layer_update` through the same trait object — one math
+//! path, two schedules.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -24,42 +32,17 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::collectives::comm::{Collective, SimComm, StatClass};
+use crate::collectives::comm::{Collective, SimComm};
 use crate::collectives::cost::StepProfile;
 use crate::data::{Augment, AugmentCfg, Batch, SynthDataset};
 use crate::dist::{DistEngine, RingComm};
-use crate::kfac::bn::{BnFisher, BnFullFisher};
-use crate::kfac::damping::pi_split;
 use crate::linalg::Mat;
 use crate::metrics::{RunLog, StageTimes, StepRecord};
-use crate::optim::{rescale_weight, spngd_update, Schedule};
+use crate::optim::{
+    self, Fisher, LayerStateBox, ParamSlot, Preconditioner, SchedulePolicy, StatKind, UpdateRule,
+};
 use crate::runtime::{Executor, HostTensor, Manifest, ModelManifest};
 use crate::util::rng::Rng;
-
-/// Fisher estimation mode (§4.1).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Fisher {
-    /// empirical Fisher captured in the ordinary bwd pass (`emp`)
-    Emp,
-    /// one-sample Monte-Carlo Fisher — extra backward pass (`1mc`)
-    OneMc,
-}
-
-/// BatchNorm Fisher mode (§4.2).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum BnMode {
-    /// unit-wise 2×2 blocks, closed-form inverse (`unitBN`)
-    Unit,
-    /// full (2C)² Fisher inverted like any factor (`fullBN`)
-    Full,
-}
-
-/// Optimizer selection.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Optim {
-    SpNgd,
-    Sgd,
-}
 
 /// How the data-parallel workers execute (§5, Alg. 3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -83,6 +66,9 @@ impl DistMode {
     }
 }
 
+/// Execution-shape configuration — the part of a training run that is
+/// *not* the optimizer. Optimizer, update rule and schedule are composed
+/// separately by [`super::TrainerBuilder`].
 #[derive(Clone, Debug)]
 pub struct TrainerCfg {
     pub model: String,
@@ -91,22 +77,6 @@ pub struct TrainerCfg {
     pub workers: usize,
     /// micro-steps accumulated per update (extreme-BS mimicry, §7.1)
     pub grad_accum: usize,
-    pub fisher: Fisher,
-    pub bn_mode: BnMode,
-    /// adaptive stale-statistics scheduler (§4.3); false = refresh every step
-    pub stale: bool,
-    /// similarity threshold α (paper: 0.1)
-    pub stale_alpha: f32,
-    /// base damping λ
-    pub lambda: f32,
-    pub schedule: Schedule,
-    pub optimizer: Optim,
-    /// Normalizing-Weights rescale (Eq. 24) for conv layers
-    pub weight_rescale: bool,
-    /// trust-ratio clip: per-layer update norm <= clip * ||w|| (0 = off).
-    /// Stabilizes the preconditioner when the Fisher collapses near zero
-    /// training loss (a regime ImageNet-scale runs never reach).
-    pub clip_update_ratio: f32,
     pub augment: AugmentCfg,
     /// BN running-stat EMA momentum
     pub bn_momentum: f32,
@@ -125,32 +95,13 @@ impl TrainerCfg {
     }
 }
 
-/// Which statistic of a layer a stale-scheduler entry tracks.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum StatKind {
-    A,
-    G,
-    BnF,
-}
-
-/// Per-layer coordinator state (owned by `owner` in Stage 4).
-struct LayerState {
+/// Per-layer coordinator slot: Stage-4 ownership plus the optimizer's
+/// per-layer state (owned by `owner`, mutated only there).
+struct LayerSlot {
     /// owning process for the model-parallel Stage 4 (round-robin)
     owner: usize,
-    a_stale: StaleStateOpt,
-    g_stale: StaleStateOpt,
-    /// current reduced factors (owner's copy)
-    a: Option<Mat>,
-    g: Option<Mat>,
-    /// cached damped inverses (padded-bucket sliced back)
-    a_inv: Option<HostTensor>,
-    g_inv: Option<HostTensor>,
-    /// BN state
-    bn_fisher: Option<BnFisher>,
-    bn_full_inv: Option<Mat>,
+    state: LayerStateBox,
 }
-
-type StaleStateOpt = super::stale::StaleState;
 
 /// Per-lane scalar results of one step-executable run.
 #[derive(Default)]
@@ -166,7 +117,7 @@ struct LaneOut {
 /// What one threaded worker hands back to the coordinator.
 struct WorkerYield {
     lane_outs: Vec<(usize, LaneOut)>,
-    /// this rank's (post-AllReduce) mean gradient vector
+    /// this rank's copy of the (post-AllReduce) mean gradient vector
     grads: Vec<f32>,
     t_inverse: f64,
 }
@@ -175,13 +126,19 @@ pub struct Trainer {
     pub cfg: TrainerCfg,
     model: ModelManifest,
     engine: Arc<dyn Executor>,
+    opt: Arc<dyn Preconditioner>,
+    rule: Arc<dyn UpdateRule>,
+    schedule: Arc<dyn SchedulePolicy>,
+    /// gradient estimator (cached from the preconditioner: picks the
+    /// step executable and the 1mc sampling seeds)
+    fisher: Fisher,
     /// sequential-mode communicator (byte accounting + reductions)
     comm: SimComm,
     /// threaded mode: per-worker executors + the ring communicator
     dist: Option<DistEngine>,
     pub params: Vec<HostTensor>,
     velocity: Vec<HostTensor>,
-    layers: Vec<LayerState>,
+    layers: Vec<LayerSlot>,
     bn_running: Vec<(HostTensor, HostTensor)>, // (mean, var) per bn_order
     dataset: SynthDataset,
     /// per-lane augmentation pipelines (lane-keyed so the augment stream
@@ -201,10 +158,15 @@ pub struct Trainer {
 }
 
 impl Trainer {
+    /// Low-level constructor — prefer [`super::TrainerBuilder`], which
+    /// composes the optimizer triple and defaults for you.
     pub fn new(
         manifest: Arc<Manifest>,
         engine: Arc<dyn Executor>,
         cfg: TrainerCfg,
+        opt: Arc<dyn Preconditioner>,
+        rule: Arc<dyn UpdateRule>,
+        schedule: Arc<dyn SchedulePolicy>,
         dataset: SynthDataset,
     ) -> Result<Trainer> {
         let model = manifest.model(&cfg.model)?.clone();
@@ -225,16 +187,9 @@ impl Trainer {
             .kfac_layers
             .iter()
             .enumerate()
-            .map(|(i, _)| LayerState {
+            .map(|(i, _)| LayerSlot {
                 owner: i % cfg.workers.max(1),
-                a_stale: StaleStateOpt::new(cfg.stale_alpha),
-                g_stale: StaleStateOpt::new(cfg.stale_alpha),
-                a: None,
-                g: None,
-                a_inv: None,
-                g_inv: None,
-                bn_fisher: None,
-                bn_full_inv: None,
+                state: opt.init_layer(&model, i),
             })
             .collect();
         let bn_running = model
@@ -260,12 +215,17 @@ impl Trainer {
             }
             DistMode::Sequential => None,
         };
+        let fisher = opt.fisher();
         Ok(Trainer {
             data_rng: rng.fork(0xDA7A),
             val_rng: rng.fork(0xEA1),
             cfg,
             model,
             engine,
+            opt,
+            rule,
+            schedule,
+            fisher,
             comm,
             dist,
             params,
@@ -288,6 +248,16 @@ impl Trainer {
         self.step
     }
 
+    /// The composed preconditioner (registry name via `.name()`).
+    pub fn optimizer(&self) -> &dyn Preconditioner {
+        self.opt.as_ref()
+    }
+
+    /// The composed lr/momentum policy.
+    pub fn schedule(&self) -> &dyn SchedulePolicy {
+        self.schedule.as_ref()
+    }
+
     /// The active communicator's byte accounting (SimComm sequentially,
     /// RingComm under the threaded dist engine).
     pub fn comm(&self) -> &dyn Collective {
@@ -298,17 +268,13 @@ impl Trainer {
     }
 
     fn step_exe(&self) -> &str {
-        match self.cfg.fisher {
+        match self.fisher {
             Fisher::Emp => &self.model.step_emp,
             Fisher::OneMc => &self.model.step_1mc,
         }
     }
 
-    fn ngd(&self) -> bool {
-        self.cfg.optimizer == Optim::SpNgd
-    }
-
-    /// One SP-NGD training step (Alg. 3 + grad accumulation).
+    /// One training step (Alg. 3 + grad accumulation).
     ///
     /// An `Err` from a threaded step leaves the trainer poisoned: healthy
     /// workers may already have folded the failing worker's zero-payload
@@ -326,35 +292,18 @@ impl Trainer {
 
         // ------------------------------------------------ refresh plan
         // Which statistics get refreshed this step (Alg. 1's `t == t_X`)?
+        // The preconditioner consults its per-layer scheduler; first-order
+        // optimizers plan nothing.
         let mut plan: Vec<(usize, StatKind)> = Vec::new();
-        if self.ngd() {
-            for (li, l) in self.layers.iter_mut().enumerate() {
-                let ml = &self.model.kfac_layers[li];
-                let due_always = !self.cfg.stale;
-                if ml.is_bn() {
-                    if due_always || l.a_stale.due(t) {
-                        plan.push((li, StatKind::BnF));
-                    } else {
-                        l.a_stale.note_skip();
-                    }
-                } else {
-                    if due_always || l.a_stale.due(t) {
-                        plan.push((li, StatKind::A));
-                    } else {
-                        l.a_stale.note_skip();
-                    }
-                    if due_always || l.g_stale.due(t) {
-                        plan.push((li, StatKind::G));
-                    } else {
-                        l.g_stale.note_skip();
-                    }
-                }
+        for (li, slot) in self.layers.iter_mut().enumerate() {
+            for kind in self.opt.plan(&self.model, li, &mut slot.state, t) {
+                plan.push((li, kind));
             }
         }
 
         // ------------------- draw the global batch (canonical lane order)
         let seeds: Vec<Option<u32>> = (0..lanes_n)
-            .map(|g| match self.cfg.fisher {
+            .map(|g| match self.fisher {
                 Fisher::OneMc => Some(((t as u32) << 8) ^ (g as u32).wrapping_mul(0x9E37)),
                 Fisher::Emp => None,
             })
@@ -366,8 +315,8 @@ impl Trainer {
             })
             .collect();
         let exe = self.step_exe().to_string();
-        let lr = self.cfg.schedule.lr(t) as f32;
-        let mom = self.cfg.schedule.momentum(t) as f32;
+        let lr = self.schedule.lr(t) as f32;
+        let mom = self.schedule.momentum(t) as f32;
 
         // ------------------------------ Stages 1-4 on the active engine
         let (lane_outs, t_inverse, t_update) = if self.dist.is_some() {
@@ -432,7 +381,7 @@ impl Trainer {
         };
         // profile capture
         self.prof_update.push(t_update);
-        if self.ngd() && plan.len() == total_stats {
+        if total_stats > 0 && plan.len() == total_stats {
             self.prof_full_factors.push(t_factors / lanes_n as f64);
             self.prof_full_inverse.push(t_inverse);
             self.prof_full_stats_bytes
@@ -477,7 +426,7 @@ impl Trainer {
                 self.engine.as_ref(),
                 &self.model,
                 exe,
-                self.cfg.bn_mode,
+                self.opt.as_ref(),
                 plan,
                 &self.params,
                 batch,
@@ -497,7 +446,7 @@ impl Trainer {
         let reduced: Vec<Mat> = if plan.is_empty() {
             Vec::new()
         } else {
-            let classes: Vec<StatClass> = plan.iter().map(|&(_, k)| stat_class(k)).collect();
+            let classes: Vec<_> = plan.iter().map(|&(_, k)| k.class()).collect();
             self.comm.reduce_scatter_v(&factor_lanes, &classes)
         };
 
@@ -511,16 +460,9 @@ impl Trainer {
             }
         }
         for (li, items) in layer_jobs {
-            refresh_and_invert_layer(
-                self.engine.as_ref(),
-                &self.model,
-                self.cfg.lambda,
-                self.cfg.bn_mode,
-                t,
-                li,
-                &mut self.layers[li],
-                items,
-            )?;
+            let slot = &mut self.layers[li];
+            self.opt
+                .refresh(self.engine.as_ref(), &self.model, li, &mut slot.state, t, items)?;
         }
         let t_inverse = t_inv_start.elapsed().as_secs_f64();
 
@@ -534,12 +476,13 @@ impl Trainer {
             .map(|(i, (p, v))| (i, ParamSlot { p, v }))
             .collect();
         for li in 0..self.model.kfac_layers.len() {
-            update_layer(
+            optim::apply_layer_update(
                 self.engine.as_ref(),
                 &self.model,
-                &self.cfg,
+                self.opt.as_ref(),
+                self.rule.as_ref(),
                 li,
-                &self.layers[li],
+                &self.layers[li].state,
                 &mut slots,
                 &grads_flat,
                 lr,
@@ -552,7 +495,9 @@ impl Trainer {
 
     /// Stages 1-4, threaded dist engine: one OS thread per worker, ring
     /// collectives, factor publish + gradient send overlapped with
-    /// compute, owner-parallel inversion and updates.
+    /// compute, owner-parallel inversion and updates. Owner threads call
+    /// `refresh`/`direction` through the same trait object the
+    /// sequential engine uses.
     #[allow(clippy::too_many_arguments)]
     fn stages_threaded(
         &mut self,
@@ -576,7 +521,7 @@ impl Trainer {
         for (g, b) in batches.into_iter().enumerate() {
             per_worker[g % w].push((g, b));
         }
-        let mut layer_groups: Vec<Vec<(usize, &mut LayerState)>> =
+        let mut layer_groups: Vec<Vec<(usize, &mut LayerSlot)>> =
             (0..w).map(|_| Vec::new()).collect();
         for (li, l) in self.layers.iter_mut().enumerate() {
             let o = l.owner % w;
@@ -588,7 +533,7 @@ impl Trainer {
         }
 
         let model = &self.model;
-        let cfg = &self.cfg;
+        let opt = self.opt.as_ref();
         let params = &self.params;
         let nparams_total = model.total_param_count();
         let layer_items = &layer_items;
@@ -607,7 +552,7 @@ impl Trainer {
                         engine.as_ref(),
                         ring,
                         model,
-                        cfg,
+                        opt,
                         t,
                         plan,
                         layer_items,
@@ -665,7 +610,8 @@ impl Trainer {
         }
         let layers = &self.layers;
         let model = &self.model;
-        let cfg = &self.cfg;
+        let opt = self.opt.as_ref();
+        let rule = self.rule.as_ref();
         let grads_ref = &grads_flat;
         let mut upd_results: Vec<Result<()>> = Vec::with_capacity(w);
         std::thread::scope(|s| {
@@ -679,12 +625,13 @@ impl Trainer {
                         if layer.owner % w != rank {
                             continue;
                         }
-                        update_layer(
+                        optim::apply_layer_update(
                             engine.as_ref(),
                             model,
-                            cfg,
+                            opt,
+                            rule,
                             li,
-                            layer,
+                            &layer.state,
                             &mut slots,
                             grads_ref,
                             lr,
@@ -714,16 +661,16 @@ impl Trainer {
         self.layers.iter().map(|l| l.owner).collect()
     }
 
+    /// Total statistics this optimizer refreshes at full cadence (0 for
+    /// first-order optimizers, which publish nothing).
     fn total_stats(&self) -> usize {
-        self.model
-            .kfac_layers
-            .iter()
-            .map(|l| if l.is_bn() { 1 } else { 2 })
+        (0..self.model.kfac_layers.len())
+            .map(|li| self.opt.stats_spec(&self.model, li).len())
             .sum()
     }
 
     pub fn epoch(&self) -> f64 {
-        self.cfg.schedule.epoch_of(self.step)
+        self.schedule.epoch_of(self.step)
     }
 
     /// Validation over `batches` held-out batches: (loss, accuracy).
@@ -796,20 +743,21 @@ impl Trainer {
     }
 
     /// Per-statistic refresh fractions (for Table 2's reduction metric),
-    /// weighted by communicated matrix size.
+    /// weighted by communicated matrix size. 1.0 for optimizers that
+    /// publish no statistics.
     pub fn comm_reduction(&self) -> f64 {
         let mut sent = 0.0f64;
         let mut full = 0.0f64;
-        for (l, ml) in self.layers.iter().zip(self.model.kfac_layers.iter()) {
-            if ml.is_bn() {
-                let sz = (3 * ml.channels) as f64;
-                sent += sz * l.a_stale.refresh_fraction();
+        for (li, slot) in self.layers.iter().enumerate() {
+            let spec = self.opt.stats_spec(&self.model, li);
+            if spec.is_empty() {
+                continue;
+            }
+            let fractions = self.opt.refresh_fractions(&self.model, li, &slot.state);
+            for (&kind, f) in spec.iter().zip(fractions.into_iter()) {
+                let sz = optim::stat_elems(&self.model, li, kind) as f64;
+                sent += sz * f;
                 full += sz;
-            } else {
-                let sa = (ml.a_dim * (ml.a_dim + 1) / 2) as f64;
-                let sg = (ml.g_dim * (ml.g_dim + 1) / 2) as f64;
-                sent += sa * l.a_stale.refresh_fraction() + sg * l.g_stale.refresh_fraction();
-                full += sa + sg;
             }
         }
         if full == 0.0 {
@@ -821,41 +769,21 @@ impl Trainer {
 }
 
 // ------------------------------------------------------ shared helpers
-// One math path for both engines: these free functions are called by the
-// sequential coordinator loop and by the dist worker threads, so the
-// two schedules produce bit-identical results by construction.
-
-fn stat_class(kind: StatKind) -> StatClass {
-    match kind {
-        StatKind::A => StatClass::A,
-        _ => StatClass::GorF,
-    }
-}
-
-/// Reduced-mat shape of a planned statistic — used to keep the collective
-/// protocol alive with zero payloads when a worker errors mid-step.
-fn stat_shape(model: &ModelManifest, li: usize, kind: StatKind, bn_mode: BnMode) -> (usize, usize) {
-    let ml = &model.kfac_layers[li];
-    match kind {
-        StatKind::A => (ml.a_dim, ml.a_dim),
-        StatKind::G => (ml.g_dim, ml.g_dim),
-        StatKind::BnF => match bn_mode {
-            BnMode::Unit => (ml.channels, 3),
-            BnMode::Full => (2 * ml.channels, 2 * ml.channels),
-        },
-    }
-}
+// One math path for both engines: run_lane is called by the sequential
+// coordinator loop and by the dist worker threads, so the two schedules
+// produce bit-identical results by construction.
 
 /// Stage 1-2 for one lane: run the step executable, flatten the lane's
-/// gradients, construct the planned statistics in plan order and hand
-/// each to `on_factor` the moment it is ready (the threaded engine
-/// publishes them to the ring there — Alg. 3's overlap point).
+/// gradients, construct the planned statistics in plan order (via
+/// `Preconditioner::build_stat`) and hand each to `on_factor` the moment
+/// it is ready (the threaded engine publishes them to the ring there —
+/// Alg. 3's overlap point).
 #[allow(clippy::too_many_arguments)]
 fn run_lane(
     engine: &dyn Executor,
     model: &ModelManifest,
     exe: &str,
-    bn_mode: BnMode,
+    opt: &dyn Preconditioner,
     plan: &[(usize, StatKind)],
     params: &[HostTensor],
     batch: &Batch,
@@ -887,50 +815,7 @@ fn run_lane(
     // statistics construction for planned refreshes
     let tf = Instant::now();
     for (item, &(li, kind)) in plan.iter().enumerate() {
-        let ml = &model.kfac_layers[li];
-        let mat = match kind {
-            StatKind::A => {
-                let ti = model
-                    .output_index("a_tap", Some(&ml.name))
-                    .context("a_tap index")?;
-                let f = engine.execute(&ml.factor_a, &[&outs[ti]])?;
-                f[0].as_mat()
-            }
-            StatKind::G => {
-                let ti = model
-                    .output_index("g_tap", Some(&ml.name))
-                    .context("g_tap index")?;
-                let tap = &outs[ti];
-                let f = if ml.kind == "conv" {
-                    let t2 = tap.nchw_to_rows_channels();
-                    engine.execute(&ml.factor_g, &[&t2])?
-                } else {
-                    engine.execute(&ml.factor_g, &[tap])?
-                };
-                f[0].as_mat()
-            }
-            StatKind::BnF => {
-                let gi = model
-                    .output_index("g_gamma", Some(&ml.name))
-                    .context("g_gamma index")?;
-                let bi = model
-                    .output_index("g_beta", Some(&ml.name))
-                    .context("g_beta index")?;
-                match bn_mode {
-                    BnMode::Unit => BnFisher::from_taps(
-                        &outs[gi].data,
-                        &outs[bi].data,
-                        model.batch,
-                        ml.channels,
-                    )
-                    .as_mat(),
-                    BnMode::Full => {
-                        let f = engine.execute(&ml.bn_full, &[&outs[gi], &outs[bi]])?;
-                        f[0].as_mat()
-                    }
-                }
-            }
-        };
+        let mat = opt.build_stat(engine, model, li, kind, &outs)?;
         on_factor(item, mat);
     }
     let t_factors = tf.elapsed().as_secs_f64();
@@ -945,206 +830,19 @@ fn run_lane(
     Ok((lo, grads))
 }
 
-/// Stage 4a for one layer at its owner: Alg. 2 scheduler refresh, owner
-/// factor-cache update, then damped inversion of the freshly reduced
-/// statistics (π-split damping from the cached traces).
-fn refresh_and_invert_layer(
-    engine: &dyn Executor,
-    model: &ModelManifest,
-    lambda: f32,
-    bn_mode: BnMode,
-    t: u64,
-    li: usize,
-    layer: &mut LayerState,
-    items: Vec<(StatKind, Mat)>,
-) -> Result<()> {
-    let ml = &model.kfac_layers[li];
-    for (kind, m) in &items {
-        match kind {
-            StatKind::A => {
-                layer.a_stale.refresh(t, m);
-                layer.a = Some(m.clone());
-            }
-            StatKind::G => {
-                layer.g_stale.refresh(t, m);
-                layer.g = Some(m.clone());
-            }
-            StatKind::BnF => {
-                layer.a_stale.refresh(t, m);
-            }
-        }
-    }
-    // traces for the π split (both factors' traces are known even when
-    // only one refreshed this step)
-    let tr_a = layer.a.as_ref().map(|m| m.trace()).unwrap_or(0.0);
-    let tr_g = layer.g.as_ref().map(|m| m.trace()).unwrap_or(0.0);
-    for (kind, mat) in items {
-        match kind {
-            StatKind::BnF if bn_mode == BnMode::Unit => {
-                // closed-form per-channel blocks — nothing to invert
-                layer.bn_fisher = Some(BnFisher {
-                    channels: ml.channels,
-                    blocks: (0..ml.channels)
-                        .map(|c| [mat.data[c * 3], mat.data[c * 3 + 1], mat.data[c * 3 + 2]])
-                        .collect(),
-                });
-            }
-            StatKind::BnF => {
-                let padded = HostTensor::from_mat(&mat).pad_square(ml.full_bucket);
-                let damp = HostTensor::scalar(lambda);
-                let out = engine.execute(&ml.invert_full, &[&padded, &damp])?;
-                let inv = out[0].slice_square(2 * ml.channels);
-                layer.bn_full_inv = Some(inv.as_mat());
-            }
-            StatKind::A | StatKind::G => {
-                let (da, dg) =
-                    pi_split_traces(tr_a, ml.a_dim as f32, tr_g, ml.g_dim as f32, lambda);
-                let (exe, bucket, dim, damp) = match kind {
-                    StatKind::A => (&ml.invert_a, ml.a_bucket, ml.a_dim, da),
-                    _ => (&ml.invert_g, ml.g_bucket, ml.g_dim, dg),
-                };
-                let padded = HostTensor::from_mat(&mat).pad_square(bucket);
-                let damp = HostTensor::scalar(damp);
-                let out = engine.execute(exe, &[&padded, &damp])?;
-                let inv = out[0].slice_square(dim);
-                match kind {
-                    StatKind::A => layer.a_inv = Some(inv),
-                    _ => layer.g_inv = Some(inv),
-                }
-            }
-        }
-    }
-    Ok(())
-}
-
-/// One parameter's update slot (weight + velocity), partitioned by layer
-/// owner so dist workers update disjoint parameters concurrently.
-struct ParamSlot<'a> {
-    p: &'a mut HostTensor,
-    v: &'a mut HostTensor,
-}
-
-/// The lane-mean gradient of parameter `pi`, sliced from the flat
-/// all-reduced vector.
-fn grad_tensor(model: &ModelManifest, flat: &[f32], pi: usize) -> HostTensor {
-    let mut off = 0usize;
-    for p in &model.params[..pi] {
-        off += p.shape.iter().product::<usize>();
-    }
-    let n: usize = model.params[pi].shape.iter().product();
-    HostTensor::new(model.params[pi].shape.clone(), flat[off..off + n].to_vec())
-}
-
-/// Trust-ratio clip (applied to the *preconditioned* direction):
-/// ensures ||lr * dir|| <= clip * ||w||.
-fn clip_direction(clip: f32, dir: &mut HostTensor, w: &HostTensor, lr: f32) {
-    if clip <= 0.0 || lr <= 0.0 {
-        return;
-    }
-    let wn = w.norm().max(1e-3);
-    let dn = dir.norm() * lr;
-    if dn > clip * wn {
-        dir.scale_inplace(clip * wn / dn);
-    }
-}
-
-/// Stage 4b for one layer at its owner: preconditioned direction,
-/// numerical guard, trust-ratio clip, momentum update (+ Normalizing
-/// Weights for conv layers).
-#[allow(clippy::too_many_arguments)]
-fn update_layer(
-    engine: &dyn Executor,
-    model: &ModelManifest,
-    cfg: &TrainerCfg,
-    li: usize,
-    layer: &LayerState,
-    slots: &mut BTreeMap<usize, ParamSlot>,
-    grads_flat: &[f32],
-    lr: f32,
-    mom: f32,
-) -> Result<()> {
-    let ngd = cfg.optimizer == Optim::SpNgd;
-    let ml = &model.kfac_layers[li];
-    if ml.is_bn() {
-        let gi = model.param_index(&ml.gamma_param).context("gamma param")?;
-        let bi = model.param_index(&ml.beta_param).context("beta param")?;
-        let g_gamma = grad_tensor(model, grads_flat, gi);
-        let g_beta = grad_tensor(model, grads_flat, bi);
-        let (dir_g, dir_b) = if ngd {
-            match cfg.bn_mode {
-                BnMode::Unit => {
-                    let f = layer.bn_fisher.as_ref().context("bn fisher missing")?;
-                    f.precondition(&g_gamma.data, &g_beta.data, cfg.lambda)
-                }
-                BnMode::Full => {
-                    let inv = layer.bn_full_inv.as_ref().context("bn full inverse missing")?;
-                    BnFullFisher::apply_inverse(inv, &g_gamma.data, &g_beta.data)
-                }
-            }
-        } else {
-            (g_gamma.data.clone(), g_beta.data.clone())
-        };
-        let mut dg = HostTensor::new(g_gamma.shape.clone(), dir_g);
-        let mut db = HostTensor::new(g_beta.shape.clone(), dir_b);
-        if !dg.norm().is_finite() {
-            dg = g_gamma.clone();
-        }
-        if !db.norm().is_finite() {
-            db = g_beta.clone();
-        }
-        {
-            let slot = slots.get_mut(&gi).context("gamma slot")?;
-            clip_direction(cfg.clip_update_ratio, &mut dg, slot.p, lr);
-            spngd_update(slot.p, slot.v, &dg, lr, mom);
-        }
-        {
-            let slot = slots.get_mut(&bi).context("beta slot")?;
-            clip_direction(cfg.clip_update_ratio, &mut db, slot.p, lr);
-            spngd_update(slot.p, slot.v, &db, lr, mom);
-        }
-    } else {
-        let wi = model.param_index(&ml.weight_param).context("weight param")?;
-        let gw = grad_tensor(model, grads_flat, wi);
-        let (m, n) = ml.grad_shape;
-        let gmat = gw.clone().reshape(vec![m, n]);
-        let mut dir = if ngd {
-            let ainv = layer.a_inv.as_ref().context("A inverse missing")?;
-            let ginv = layer.g_inv.as_ref().context("G inverse missing")?;
-            let out = engine.execute(&ml.precond, &[ginv, &gmat, ainv])?;
-            out[0].clone().reshape(gw.shape.clone())
-        } else {
-            gw.clone()
-        };
-        // numerical guard: a degenerate Fisher (possible when the loss
-        // approaches zero) can blow up the inverse — fall back to the
-        // raw gradient for this step
-        if !dir.norm().is_finite() {
-            dir = gw.clone();
-        }
-        let slot = slots.get_mut(&wi).context("weight slot")?;
-        clip_direction(cfg.clip_update_ratio, &mut dir, slot.p, lr);
-        spngd_update(slot.p, slot.v, &dir, lr, mom);
-        // Normalizing Weights (Eq. 24) — conv layers (BN-covered);
-        // the FC head keeps its scale (no BN follows it here).
-        if cfg.weight_rescale && ml.kind == "conv" {
-            rescale_weight(slot.p, m);
-        }
-    }
-    Ok(())
-}
-
 /// The body of one dist worker thread: Stage 1-2 compute with
-/// publish-as-ready factor statistics, the gradient AllReduce send,
-/// Stage 4a reduce+invert for owned layers (overlapping slower workers'
-/// compute), then the AllReduce finish. On error the worker keeps the
-/// collective protocol alive with zero payloads so its peers never
-/// deadlock — the step then fails cleanly at the join.
+/// publish-as-ready factor statistics, the gradient AllReduce post
+/// (lanes moved into the ring — no copy), Stage 4a reduce+invert for
+/// owned layers (overlapping slower workers' compute), then the
+/// AllReduce finish (one mean copy back per rank). On error the worker
+/// keeps the collective protocol alive with zero payloads so its peers
+/// never deadlock — the step then fails cleanly at the join.
 #[allow(clippy::too_many_arguments)]
 fn worker_step(
     engine: &dyn Executor,
     ring: &RingComm,
     model: &ModelManifest,
-    cfg: &TrainerCfg,
+    opt: &dyn Preconditioner,
     t: u64,
     plan: &[(usize, StatKind)],
     layer_items: &[Vec<(usize, StatKind)>],
@@ -1154,7 +852,7 @@ fn worker_step(
     exe: &str,
     seeds: &[Option<u32>],
     my_batches: Vec<(usize, Batch)>,
-    group: Vec<(usize, &mut LayerState)>,
+    group: Vec<(usize, &mut LayerSlot)>,
 ) -> Result<WorkerYield> {
     let mut first_err: Option<anyhow::Error> = None;
     let mut lane_outs: Vec<(usize, LaneOut)> = Vec::with_capacity(my_batches.len());
@@ -1168,7 +866,7 @@ fn worker_step(
                 engine,
                 model,
                 exe,
-                cfg.bn_mode,
+                opt,
                 plan,
                 params,
                 &batch,
@@ -1192,7 +890,7 @@ fn worker_step(
                 }
                 // keep peers unblocked: zero payloads for this lane
                 for (item, &(li, kind)) in plan.iter().enumerate().skip(published) {
-                    let (r, c) = stat_shape(model, li, kind, cfg.bn_mode);
+                    let (r, c) = opt.stat_shape(model, li, kind);
                     ring.publish_stat(item, g, Mat::zeros(r, c));
                 }
                 lane_outs.push((g, LaneOut::default()));
@@ -1201,57 +899,33 @@ fn worker_step(
         }
     }
 
-    // Stage 3 send: gradient lanes into the AllReduce round
-    {
-        let posts: Vec<(usize, &Vec<f32>)> = grad_lanes.iter().map(|(g, b)| (*g, b)).collect();
-        ring.grad_post(&posts, lanes_n);
-    }
+    // Stage 3 send: move gradient lanes into the AllReduce round
+    let participating = !grad_lanes.is_empty();
+    ring.grad_post(std::mem::take(&mut grad_lanes), lanes_n);
 
     // Stage 4a: reduce + invert owned layers (overlaps peers' compute)
     let t_inv0 = Instant::now();
-    for (li, layer) in group {
+    for (li, slot) in group {
         let items = &layer_items[li];
         if items.is_empty() {
             continue;
         }
         let mut mats: Vec<(StatKind, Mat)> = Vec::with_capacity(items.len());
         for &(idx, kind) in items {
-            mats.push((kind, ring.reduce_stat(idx, stat_class(kind))));
+            mats.push((kind, ring.reduce_stat(idx, kind.class())));
         }
         if first_err.is_none() {
-            if let Err(e) = refresh_and_invert_layer(
-                engine,
-                model,
-                cfg.lambda,
-                cfg.bn_mode,
-                t,
-                li,
-                layer,
-                mats,
-            ) {
+            if let Err(e) = opt.refresh(engine, model, li, &mut slot.state, t, mats) {
                 first_err = Some(e);
             }
         }
     }
     let t_inverse = t_inv0.elapsed().as_secs_f64();
 
-    // Stage 3 finish: chunked reduce + drain the mean into our lanes
-    {
-        let mut finishes: Vec<(usize, &mut Vec<f32>)> =
-            grad_lanes.iter_mut().map(|(g, b)| (*g, b)).collect();
-        ring.grad_finish(&mut finishes);
-    }
+    // Stage 3 finish: chunked reduce, then this rank's mean copy
+    let grads = if participating { ring.grad_finish() } else { Vec::new() };
     if let Some(e) = first_err {
         return Err(e);
     }
-    let grads = grad_lanes.into_iter().next().map(|(_, b)| b).unwrap_or_default();
     Ok(WorkerYield { lane_outs, grads, t_inverse })
-}
-
-/// π split from cached traces (both factors' traces are known even when
-/// only one refreshed this step).
-fn pi_split_traces(tr_a: f32, dim_a: f32, tr_g: f32, dim_g: f32, lambda: f32) -> (f32, f32) {
-    let a = Mat::from_vec(1, 1, vec![tr_a / dim_a.max(1.0)]);
-    let g = Mat::from_vec(1, 1, vec![tr_g / dim_g.max(1.0)]);
-    pi_split(&a, &g, lambda)
 }

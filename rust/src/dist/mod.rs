@@ -11,10 +11,10 @@
 //! coordinator   draw global batch (canonical lane order), plan refreshes
 //! worker w      Stage 1+2: exec lanes g ≡ w (mod W); publish each factor
 //!               to the statistic board the moment it is built  ── overlap
-//! worker w      grad_post (the AllReduce send)                 ── overlap
+//! worker w      grad_post (the AllReduce send, lanes moved in) ── overlap
 //! worker w      Stage 4a: reduce + invert owned layers while slower
 //!               workers are still in their backward/factor phase
-//! worker w      grad_finish (chunked reduce + drain)
+//! worker w      grad_finish (chunked reduce → one mean copy per rank)
 //! worker w      Stage 4b: precondition + update owned layers
 //! coordinator   Stage 5 AllGatherV accounting, loss/BN reductions, log
 //! ```

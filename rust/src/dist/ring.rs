@@ -33,10 +33,15 @@
 //! factor product (`publish_stat`), so owners start reducing and
 //! inverting early layers while slower workers are still in their
 //! backward/factor phase — Alg. 3's comm/compute overlap. The gradient
-//! AllReduce is split into [`RingComm::grad_post`] (the send, issued
-//! right after the backward pass) and [`RingComm::grad_finish`] (the
-//! reduce + drain, issued after the owner's inversions), so gradient
-//! communication overlaps Stage-4a factor inversion.
+//! AllReduce is split into [`RingComm::grad_post`] (the send — lane
+//! buffers are **moved** into the round, issued right after the backward
+//! pass) and [`RingComm::grad_finish`] (the chunked reduce, issued after
+//! the owner's inversions, returning one mean copy per participating
+//! rank), so gradient communication overlaps Stage-4a factor inversion.
+//! Post-by-move plus the per-rank (not per-lane) drain cuts ~2× lanes of
+//! full-gradient memcpys per threaded step relative to the original
+//! clone-in/drain-back protocol; the wire-byte accounting is unchanged
+//! (asserted against `SimComm` in `tests/dist_collectives.rs`).
 
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::Duration;
@@ -84,15 +89,20 @@ struct StatCtl {
     elems_g: usize,
 }
 
-/// Gradient AllReduce round: lanes posted whole, the element range
-/// reduced in chunks claimed off a self-scheduling cursor, the mean
-/// drained back into every lane.
+/// Gradient AllReduce round: lanes posted by move, the element range
+/// reduced in chunks claimed off a self-scheduling cursor, then one mean
+/// copy handed back per participating rank (the trainer consumes a
+/// single copy — draining the mean into every lane would redo the full
+/// per-lane memcpys the move-in already saved).
 #[derive(Default)]
 struct GradCtl {
     active: bool,
     n: usize,
     total_lanes: usize,
     posted: usize,
+    /// ranks that posted lanes this round (each calls `grad_finish`
+    /// exactly once, so the round closes at `drained == participants`)
+    participants: usize,
     lanes: Vec<Option<Vec<f32>>>,
     /// posted lanes frozen behind an Arc once complete (shared read-only
     /// by the concurrent chunk reducers)
@@ -278,20 +288,17 @@ impl RingComm {
 
     // ----------------------------------------------- AllReduce (grads)
 
-    /// Post this worker's gradient lanes (`(global_lane, buffer)` pairs)
-    /// into the AllReduce round — the "send" half, issued right after the
-    /// backward pass so gradient communication overlaps Stage-4a
-    /// inversion. `total_lanes` is the global lane count (identical on
-    /// every rank). Non-blocking.
-    pub fn grad_post(&self, my_lanes: &[(usize, &Vec<f32>)], total_lanes: usize) {
+    /// Post this worker's gradient lanes (`(global_lane, buffer)` pairs,
+    /// **moved** into the round — no copy) — the "send" half, issued
+    /// right after the backward pass so gradient communication overlaps
+    /// Stage-4a inversion. `total_lanes` is the global lane count
+    /// (identical on every rank). Non-blocking. A rank that posts must
+    /// call [`RingComm::grad_finish`] exactly once this round.
+    pub fn grad_post(&self, my_lanes: Vec<(usize, Vec<f32>)>, total_lanes: usize) {
         if my_lanes.is_empty() {
             return; // nothing to contribute — other ranks carry the round
         }
         let n = my_lanes[0].1.len();
-        // copy the lanes (the "send") before taking the round lock, so
-        // concurrent senders don't serialize on full-gradient memcpys
-        let mut copies: Vec<(usize, Vec<f32>)> =
-            my_lanes.iter().map(|(g, b)| (*g, (*b).clone())).collect();
         let mut st = self.grad.lock().unwrap();
         loop {
             if !st.active {
@@ -299,6 +306,7 @@ impl RingComm {
                 st.n = n;
                 st.total_lanes = total_lanes;
                 st.posted = 0;
+                st.participants = 0;
                 st.lanes = (0..total_lanes).map(|_| None).collect();
                 st.frozen = None;
                 st.reduced = vec![0.0; n];
@@ -315,7 +323,8 @@ impl RingComm {
             st = wait_round(&self.grad_cv, st, "previous AllReduce round to close");
         }
         assert_eq!(st.total_lanes, total_lanes, "lane total mismatch across ranks");
-        for (g, buf) in copies.drain(..) {
+        st.participants += 1;
+        for (g, buf) in my_lanes {
             assert_eq!(buf.len(), st.n, "lane length mismatch");
             assert!(st.lanes[g].is_none(), "duplicate lane {g}");
             st.lanes[g] = Some(buf);
@@ -328,13 +337,13 @@ impl RingComm {
 
     /// Finish the AllReduce: wait for every lane, claim and reduce chunks
     /// (self-scheduling cursor; each chunk reduced once, in canonical
-    /// lane order with f64 accumulators), then drain the mean back into
-    /// this worker's lane buffers. The last lane drained closes the round
-    /// and charges the ring AllReduce's wire bytes.
-    pub fn grad_finish(&self, my_lanes: &mut [(usize, &mut Vec<f32>)]) {
-        if my_lanes.is_empty() {
-            return;
-        }
+    /// lane order with f64 accumulators), then return this rank's copy of
+    /// the lane-mean gradient (the last participant takes the reduction
+    /// buffer by move). The last participant closes the round and charges
+    /// the ring AllReduce's wire bytes — every lane was posted before any
+    /// finisher can pass the posted-lanes wait, so `participants` is
+    /// final by then.
+    pub fn grad_finish(&self) -> Vec<f32> {
         let (frozen, n, total_lanes) = {
             let mut st = self.grad.lock().unwrap();
             assert!(st.active, "grad_finish without grad_post");
@@ -379,20 +388,20 @@ impl RingComm {
         while st.done_chunks < st.nchunks {
             st = wait_round(&self.grad_cv, st, "AllReduce chunk reduction");
         }
-        for (_, buf) in my_lanes.iter_mut() {
-            buf.copy_from_slice(&st.reduced);
-            st.drained += 1;
-        }
-        if st.drained == st.total_lanes {
+        st.drained += 1;
+        if st.drained == st.participants {
+            let out = std::mem::take(&mut st.reduced);
             st.active = false;
             st.frozen = None;
-            st.reduced = Vec::new();
             drop(st);
             self.charge(|s| {
                 s.ar_grads += 2 * self.elems_to_bytes(n);
                 s.num_ops += 1;
             });
             self.grad_cv.notify_all();
+            out
+        } else {
+            st.reduced.clone()
         }
     }
 
@@ -480,12 +489,18 @@ impl Collective for RingComm {
             for group in groups {
                 s.spawn(move || {
                     let mut group = group;
-                    {
-                        let posts: Vec<(usize, &Vec<f32>)> =
-                            group.iter().map(|(g, b)| (*g, &**b)).collect();
-                        self.grad_post(&posts, total);
+                    let posts: Vec<(usize, Vec<f32>)> =
+                        group.iter_mut().map(|(g, b)| (*g, std::mem::take(*b))).collect();
+                    if posts.is_empty() {
+                        return; // rank with no lanes skips the round
                     }
-                    self.grad_finish(&mut group);
+                    self.grad_post(posts, total);
+                    // the trait contract fills every lane with the mean —
+                    // copy this rank's finish result back out
+                    let mean = self.grad_finish();
+                    for (_, buf) in group.iter_mut() {
+                        buf.extend_from_slice(&mean);
+                    }
                 });
             }
         });

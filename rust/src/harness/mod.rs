@@ -6,11 +6,10 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-use crate::coordinator::{BnMode, DistMode, Fisher, Optim, Trainer, TrainerCfg};
-use crate::data::{AugmentCfg, SynthDataset};
-use crate::optim::{HyperParams, Schedule};
+use crate::coordinator::{DistMode, TrainerBuilder};
+use crate::optim::{self, Preconditioner};
 use crate::runtime::{native, Executor, Manifest};
 use crate::util::stats::Summary;
 
@@ -74,19 +73,6 @@ pub fn load_runtime_pjrt_at(dir: &std::path::Path) -> Result<(Arc<Manifest>, Arc
     anyhow::bail!("this build has no PJRT support — rebuild with `--features pjrt`")
 }
 
-/// Default hyperparameters for short synthetic-corpus runs.
-pub fn default_hp(optimizer: Optim) -> HyperParams {
-    HyperParams {
-        alpha_mixup: 0.0,
-        p_decay: 3.5,
-        e_start: 2.0,
-        e_end: 60.0,
-        eta0: if optimizer == Optim::Sgd { 0.05 } else { 0.02 },
-        m0: if optimizer == Optim::Sgd { 0.045 } else { 0.018 },
-        lambda: 2.5e-3,
-    }
-}
-
 /// Worker count for examples/benches: `SPNGD_WORKERS` if set to a
 /// positive integer, otherwise 2.
 pub fn configured_workers() -> usize {
@@ -100,39 +86,29 @@ pub fn configured_workers() -> usize {
     2
 }
 
-/// Default trainer config for a model/optimizer pair. `SPNGD_WORKERS`
-/// sets the worker count and `SPNGD_DIST=threads` selects the threaded
-/// dist engine (one OS thread per worker).
-pub fn default_cfg(model: &str, optimizer: Optim) -> TrainerCfg {
-    let hp = default_hp(optimizer);
-    TrainerCfg {
-        model: model.to_string(),
-        workers: configured_workers(),
-        grad_accum: 1,
-        fisher: Fisher::Emp,
-        bn_mode: BnMode::Unit,
-        stale: false,
-        stale_alpha: 0.1,
-        lambda: hp.lambda,
-        schedule: Schedule::new(hp, 64),
-        optimizer,
-        weight_rescale: false,
-        clip_update_ratio: 0.3,
-        augment: AugmentCfg::disabled(),
-        bn_momentum: 0.9,
-        fp16_comm: false,
-        dist: DistMode::from_env(),
-        seed: 7,
+/// The optimizer selected by `SPNGD_OPTIM` (registry name; default
+/// `spngd`). Unknown names are a hard error listing the valid choices —
+/// the CI matrix runs the suite once per registered optimizer through
+/// this hook.
+pub fn env_optimizer() -> Result<Arc<dyn Preconditioner>> {
+    match std::env::var("SPNGD_OPTIM") {
+        Ok(v) if !v.trim().is_empty() => optim::by_name(v.trim()),
+        _ => Ok(optim::spngd()),
     }
 }
 
-/// Build a trainer with a dataset matched to the model's input shape.
-pub fn make_trainer(cfg: TrainerCfg, dataset_len: usize, seed: u64) -> Result<Trainer> {
+/// An environment-aware [`TrainerBuilder`] for examples and benches:
+/// runtime from `SPNGD_BACKEND`, worker count from `SPNGD_WORKERS`, dist
+/// engine from `SPNGD_DIST`, schedule defaulted from the optimizer's
+/// [`Preconditioner::default_hparams`] (so adding an optimizer never
+/// edits the harness).
+pub fn builder(model: &str, opt: Arc<dyn Preconditioner>) -> Result<TrainerBuilder> {
     let (manifest, engine) = load_runtime()?;
-    let m = manifest.model(&cfg.model).context("model lookup")?;
-    let (c, h, w) = (m.input_shape[1], m.input_shape[2], m.input_shape[3]);
-    let ds = SynthDataset::new(m.num_classes, c, h, w, dataset_len, seed);
-    Trainer::new(manifest, engine, cfg, ds)
+    Ok(TrainerBuilder::new(model)
+        .runtime(manifest, engine)
+        .optimizer(opt)
+        .workers(configured_workers())
+        .dist(DistMode::from_env()))
 }
 
 /// Minimal bench runner: warmup + timed iterations, prints a stats row.

@@ -2,7 +2,7 @@
 //!
 //! Subcommands:
 //!   info      print the manifest summary
-//!   train     run SP-NGD (or SGD) training on the synthetic corpus
+//!   train     train on the synthetic corpus (--optim spngd | sgd | lars)
 //!   simulate  sweep the cluster cost model over GPU counts (Fig. 5)
 //!
 //! Every subcommand takes `--backend native|pjrt`. The default native
@@ -14,9 +14,9 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use spngd::collectives::cost::ClusterModel;
-use spngd::coordinator::{BnMode, DistMode, Fisher, Optim, Trainer, TrainerCfg};
-use spngd::data::{AugmentCfg, SynthDataset};
-use spngd::optim::{HyperParams, Schedule};
+use spngd::coordinator::{DistMode, Trainer, TrainerBuilder};
+use spngd::data::AugmentCfg;
+use spngd::optim::{self, BnMode, Fisher, HyperParams, Preconditioner, Schedule, SpNgd};
 use spngd::runtime::{Executor, Manifest};
 use spngd::simulator;
 use spngd::util::cli::Args;
@@ -79,7 +79,33 @@ fn cmd_info() -> Result<()> {
         });
         println!("  layer mix: {conv} conv, {fc} fc, {bn} bn");
     }
+    println!("optimizers: {}", optim::OPTIMIZER_NAMES.join(" | "));
     Ok(())
+}
+
+/// Resolve `--optim` through the registry; SP-NGD additionally picks up
+/// the NGD-specific flags (--fisher/--bn/--stale*/--lambda). Unknown
+/// names are a hard error listing the valid choices.
+fn optimizer_from_args(
+    parsed: &spngd::util::cli::Parsed,
+    lambda: f32,
+) -> Result<Arc<dyn Preconditioner>> {
+    match parsed.get("optim") {
+        "spngd" => Ok(Arc::new(SpNgd {
+            fisher: match parsed.get("fisher") {
+                "1mc" => Fisher::OneMc,
+                _ => Fisher::Emp,
+            },
+            bn_mode: match parsed.get("bn") {
+                "full" => BnMode::Full,
+                _ => BnMode::Unit,
+            },
+            stale: parsed.get_bool("stale"),
+            stale_alpha: parsed.get_f64("stale-alpha") as f32,
+            lambda,
+        })),
+        other => optim::by_name(other),
+    }
 }
 
 fn trainer_from_args(parsed: &spngd::util::cli::Parsed) -> Result<Trainer> {
@@ -89,6 +115,15 @@ fn trainer_from_args(parsed: &spngd::util::cli::Parsed) -> Result<Trainer> {
     let workers = parsed.get_usize("workers");
     let accum = parsed.get_usize("accum");
     let eff_bs = workers * accum * m.batch;
+    // the optimizer's own defaults fill any hyperparameter the user
+    // didn't pass — adding an optimizer never edits this harness code
+    let defaults = optimizer_from_args(parsed, 0.0)?.default_hparams();
+    let num_or = |key: &str, dflt: f64| -> f64 {
+        match parsed.get(key) {
+            "" => dflt,
+            s => s.parse().unwrap_or_else(|_| panic!("--{key} expects a number")),
+        }
+    };
     let hp = if parsed.get_bool("table2-hp") {
         // map the effective batch onto the paper's Table 2 rows: our
         // corpus is ~1/128 the scale of ImageNet, so scale BS accordingly
@@ -99,11 +134,12 @@ fn trainer_from_args(parsed: &spngd::util::cli::Parsed) -> Result<Trainer> {
             p_decay: parsed.get_f64("p-decay"),
             e_start: parsed.get_f64("e-start"),
             e_end: parsed.get_f64("e-end"),
-            eta0: parsed.get_f64("lr"),
-            m0: parsed.get_f64("momentum"),
-            lambda: parsed.get_f64("lambda") as f32,
+            eta0: num_or("lr", defaults.eta0),
+            m0: num_or("momentum", defaults.m0),
+            lambda: num_or("lambda", defaults.lambda as f64) as f32,
         }
     };
+    let opt = optimizer_from_args(parsed, hp.lambda)?;
     let dataset_len = parsed.get_usize("dataset");
     let steps_per_epoch = (dataset_len / eff_bs).max(1);
     let augment = if parsed.get_bool("augment") {
@@ -111,37 +147,22 @@ fn trainer_from_args(parsed: &spngd::util::cli::Parsed) -> Result<Trainer> {
     } else {
         AugmentCfg::disabled()
     };
-    let cfg = TrainerCfg {
-        model,
-        workers,
-        grad_accum: accum,
-        fisher: match parsed.get("fisher") {
-            "1mc" => Fisher::OneMc,
-            _ => Fisher::Emp,
-        },
-        bn_mode: match parsed.get("bn") {
-            "full" => BnMode::Full,
-            _ => BnMode::Unit,
-        },
-        stale: parsed.get_bool("stale"),
-        stale_alpha: parsed.get_f64("stale-alpha") as f32,
-        lambda: hp.lambda,
-        schedule: Schedule::new(hp, steps_per_epoch),
-        optimizer: match parsed.get("optimizer") {
-            "sgd" => Optim::Sgd,
-            _ => Optim::SpNgd,
-        },
-        weight_rescale: parsed.get_bool("rescale"),
-        clip_update_ratio: parsed.get_f64("clip") as f32,
-        augment,
-        bn_momentum: 0.9,
-        fp16_comm: parsed.get_bool("fp16-comm"),
-        dist: if parsed.get_bool("dist") { DistMode::Threaded } else { DistMode::from_env() },
-        seed: parsed.get_u64("seed"),
-    };
-    let (c, h, w) = (m.input_shape[1], m.input_shape[2], m.input_shape[3]);
-    let ds = SynthDataset::new(m.num_classes, c, h, w, dataset_len, parsed.get_u64("seed"));
-    Trainer::new(manifest, engine, cfg, ds)
+    TrainerBuilder::new(&model)
+        .runtime(manifest, engine)
+        .optimizer(opt)
+        .hyperparams(hp)
+        .steps_per_epoch(steps_per_epoch)
+        .workers(workers)
+        .grad_accum(accum)
+        .augment(augment)
+        .weight_rescale(parsed.get_bool("rescale"))
+        .clip_update_ratio(parsed.get_f64("clip") as f32)
+        .fp16_comm(parsed.get_bool("fp16-comm"))
+        .dist(if parsed.get_bool("dist") { DistMode::Threaded } else { DistMode::from_env() })
+        .seed(parsed.get_u64("seed"))
+        .dataset_len(dataset_len)
+        .data_seed(parsed.get_u64("seed"))
+        .build()
 }
 
 fn train_args() -> Args {
@@ -149,19 +170,19 @@ fn train_args() -> Args {
         .opt("backend", "native", "execution backend: native | pjrt")
         .opt("artifacts", "artifacts", "artifact directory (pjrt backend)")
         .opt("model", "convnet_small", "model name (mlp | convnet_small)")
-        .opt("optimizer", "spngd", "spngd | sgd")
-        .opt("fisher", "emp", "Fisher estimation: emp | 1mc")
-        .opt("bn", "unit", "BatchNorm Fisher: unit | full")
-        .flag("stale", "enable the adaptive stale-statistics scheduler")
+        .opt("optim", "spngd", "optimizer: spngd | sgd | lars")
+        .opt("fisher", "emp", "Fisher estimation: emp | 1mc (spngd only)")
+        .opt("bn", "unit", "BatchNorm Fisher: unit | full (spngd only)")
+        .flag("stale", "enable the adaptive stale-statistics scheduler (spngd only)")
         .opt("stale-alpha", "0.1", "similarity threshold α")
         .opt("workers", "4", "simulated GPUs")
         .flag("dist", "threaded dist engine: one OS thread per worker (or SPNGD_DIST=threads)")
         .opt("accum", "1", "gradient accumulation micro-steps")
         .opt("steps", "200", "training steps")
         .opt("dataset", "8192", "synthetic corpus size")
-        .opt("lr", "0.02", "initial learning rate η₀")
-        .opt("momentum", "0.018", "initial momentum m₀")
-        .opt("lambda", "0.0025", "damping λ")
+        .opt("lr", "", "initial learning rate η₀ (default: the optimizer's)")
+        .opt("momentum", "", "initial momentum m₀ (default: the optimizer's)")
+        .opt("lambda", "", "damping λ (default: the optimizer's)")
         .opt("mixup", "0.4", "mixup α (with --augment)")
         .opt("p-decay", "3.5", "polynomial decay exponent")
         .opt("e-start", "1.0", "decay start epoch")
@@ -184,7 +205,7 @@ fn cmd_train() -> Result<()> {
     println!(
         "training {} with {} (workers={}, accum={}, effective batch={})",
         tr.cfg.model,
-        parsed.get("optimizer"),
+        tr.optimizer().name(),
         tr.cfg.workers,
         tr.cfg.grad_accum,
         tr.cfg.effective_batch(32)
@@ -238,30 +259,17 @@ fn cmd_simulate() -> Result<()> {
         .map_err(|u| anyhow::anyhow!("{u}"))?;
     let (manifest, engine) = load(parsed.get("backend"), parsed.get("artifacts"))?;
     let model = parsed.get("model").to_string();
-    let m = manifest.model(&model)?;
-    let (c, h, w) = (m.input_shape[1], m.input_shape[2], m.input_shape[3]);
-    let ds = SynthDataset::new(m.num_classes, c, h, w, 4096, 7);
     let hp = HyperParams::table2(32_768);
-    let cfg = TrainerCfg {
-        model,
-        workers: 2,
-        grad_accum: 1,
-        fisher: Fisher::Emp,
-        bn_mode: BnMode::Unit,
-        stale: false,
-        stale_alpha: 0.1,
-        lambda: hp.lambda,
-        schedule: Schedule::new(hp, 100),
-        optimizer: Optim::SpNgd,
-        weight_rescale: false,
-        clip_update_ratio: 0.3,
-        augment: AugmentCfg::disabled(),
-        bn_momentum: 0.9,
-        fp16_comm: parsed.get_bool("fp16-comm"),
-        dist: DistMode::Sequential,
-        seed: 7,
-    };
-    let mut tr = Trainer::new(manifest, engine, cfg, ds)?;
+    let lambda = hp.lambda;
+    let mut tr = TrainerBuilder::new(&model)
+        .runtime(manifest, engine)
+        .optimizer(Arc::new(SpNgd { lambda, ..SpNgd::default() }))
+        .schedule(Schedule::new(hp, 100))
+        .workers(2)
+        .fp16_comm(parsed.get_bool("fp16-comm"))
+        .dataset_len(4096)
+        .data_seed(7)
+        .build()?;
     let probe = parsed.get_usize("probe-steps");
     for _ in 0..probe {
         tr.step()?;

@@ -1,0 +1,174 @@
+//! First-order optimizers on the [`Preconditioner`] API: the SGD
+//! baseline (identity preconditioner) and LARS (layer-wise adaptive rate
+//! scaling, You et al. 2017) — the highly-tuned large-batch first-order
+//! family the paper compares SP-NGD against. Neither publishes
+//! statistics, so the collectives move zero statistic bytes.
+
+use anyhow::Result;
+
+use crate::optim::precond::{LayerStateBox, Preconditioner};
+use crate::optim::schedule::HyperParams;
+use crate::runtime::{Executor, HostTensor, ModelManifest};
+
+/// SGD with momentum: direction = raw lane-mean gradient.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Sgd;
+
+impl Preconditioner for Sgd {
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn default_hparams(&self) -> HyperParams {
+        HyperParams {
+            alpha_mixup: 0.0,
+            p_decay: 3.5,
+            e_start: 2.0,
+            e_end: 60.0,
+            eta0: 0.05,
+            m0: 0.045,
+            lambda: 2.5e-3,
+        }
+    }
+
+    fn init_layer(&self, _model: &ModelManifest, _li: usize) -> LayerStateBox {
+        Box::new(())
+    }
+
+    fn direction(
+        &self,
+        _engine: &dyn Executor,
+        _model: &ModelManifest,
+        _li: usize,
+        _state: &LayerStateBox,
+        grads: &[HostTensor],
+        _weights: &[&HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        Ok(grads.to_vec())
+    }
+}
+
+/// LARS (You et al., *Large Batch Training of Convolutional Networks*):
+/// per-layer trust ratio
+///
+/// ```text
+/// λ_l = trust_coefficient · ‖w_l‖ / (‖∇L_l‖ + wd·‖w_l‖ + ε)
+/// dir  = λ_l · (∇L_l + wd·w_l)
+/// ```
+///
+/// so every layer moves a fixed *relative* amount per step regardless of
+/// its gradient scale — the adaptation that makes first-order large-batch
+/// training stable. BatchNorm γ/β are excluded from the adaptation (the
+/// standard LARS formulation) and take the raw gradient.
+///
+/// ‖dir‖ ≤ trust_coefficient·‖w‖ by construction, so the update is
+/// self-bounding even for vanishing gradients.
+#[derive(Clone, Copy, Debug)]
+pub struct Lars {
+    /// trust coefficient (relative per-step movement at λ_l·η = η)
+    pub trust_coefficient: f32,
+    /// decoupled L2 term folded into the trust denominator and direction
+    pub weight_decay: f32,
+    /// numerical floor for the trust denominator
+    pub eps: f32,
+}
+
+impl Default for Lars {
+    fn default() -> Self {
+        Lars { trust_coefficient: 1.0, weight_decay: 0.0, eps: 1e-9 }
+    }
+}
+
+impl Preconditioner for Lars {
+    fn name(&self) -> &'static str {
+        "lars"
+    }
+
+    fn default_hparams(&self) -> HyperParams {
+        // with trust_coefficient 1, η is the relative per-step movement:
+        // 2% of each layer's norm per step, momentum-coupled like the rest
+        HyperParams {
+            alpha_mixup: 0.0,
+            p_decay: 3.5,
+            e_start: 2.0,
+            e_end: 60.0,
+            eta0: 0.02,
+            m0: 0.018,
+            lambda: 2.5e-3,
+        }
+    }
+
+    fn init_layer(&self, _model: &ModelManifest, _li: usize) -> LayerStateBox {
+        Box::new(())
+    }
+
+    fn direction(
+        &self,
+        _engine: &dyn Executor,
+        model: &ModelManifest,
+        li: usize,
+        _state: &LayerStateBox,
+        grads: &[HostTensor],
+        weights: &[&HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let ml = &model.kfac_layers[li];
+        if ml.is_bn() {
+            // BN parameters are excluded from layer-wise adaptation
+            return Ok(grads.to_vec());
+        }
+        let mut dirs = Vec::with_capacity(grads.len());
+        for (g, w) in grads.iter().zip(weights.iter()) {
+            // λ_l from the *raw* gradient norm (wd enters the denominator
+            // exactly once), applied to the decayed direction g + wd·w
+            let wn = w.norm();
+            let gn = g.norm();
+            let trust =
+                self.trust_coefficient * wn / (gn + self.weight_decay * wn + self.eps);
+            let mut d = g.clone();
+            if self.weight_decay > 0.0 {
+                d.axpy_inplace(self.weight_decay, w);
+            }
+            d.scale_inplace(trust);
+            dirs.push(d);
+        }
+        Ok(dirs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ht(data: Vec<f32>) -> HostTensor {
+        let n = data.len();
+        HostTensor::new(vec![n], data)
+    }
+
+    #[test]
+    fn lars_direction_norm_is_trust_bounded() {
+        // ‖dir‖ = tc·‖w‖·‖g‖/(‖g‖+ε) ≤ tc·‖w‖, and ≈ tc·‖w‖ for healthy g
+        let lars = Lars::default();
+        let w = ht(vec![3.0, 4.0]); // ‖w‖ = 5
+        for scale in [1e-6f32, 1.0, 1e6] {
+            let g = ht(vec![scale, 0.0]);
+            let wn = w.norm();
+            let gn = g.norm();
+            let trust = lars.trust_coefficient * wn / (gn + lars.eps);
+            let dir_norm = trust * gn;
+            assert!(dir_norm <= lars.trust_coefficient * wn * 1.0001, "scale {scale}");
+            if scale >= 1.0 {
+                assert!(dir_norm > 0.99 * lars.trust_coefficient * wn, "scale {scale}");
+            }
+        }
+    }
+
+    #[test]
+    fn per_optimizer_default_hparams() {
+        // the harness satellite: η₀/m₀ defaults live with each optimizer
+        // instead of being special-cased at call sites
+        assert_eq!(Sgd.default_hparams().eta0, 0.05);
+        assert_eq!(Sgd.default_hparams().m0, 0.045);
+        assert_eq!(Lars::default().default_hparams().eta0, 0.02);
+        assert_eq!(crate::optim::SpNgd::default().default_hparams().eta0, 0.02);
+    }
+}

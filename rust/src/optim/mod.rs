@@ -1,7 +1,37 @@
-//! Optimizer schedules and update rules (§6.2-6.3).
+//! The composable optimizer API (§4, §6.2-6.3).
+//!
+//! An optimizer is three orthogonal pieces, each swappable:
+//!
+//! - [`Preconditioner`] — per-layer second-order state and the
+//!   gradient→direction map, split along the trainer's Stage boundaries
+//!   (`stats_spec`/`plan` → `build_stat` → `refresh` → `direction`);
+//!   implementations: [`SpNgd`] (the paper), [`Sgd`], [`Lars`].
+//! - [`UpdateRule`] — how a direction hits the weights (trust-ratio
+//!   clip, Eq. 23 momentum, Normalizing Weights); stock: [`MomentumRule`].
+//! - [`SchedulePolicy`] — η(t)/m(t); stock: [`Schedule`] (Eqs. 21-22).
+//!
+//! `coordinator::TrainerBuilder` composes the three with a model and a
+//! dist engine. The [`registry`] maps `--optim` names to
+//! preconditioners; unknown names are a hard error.
 
+pub mod first_order;
+pub mod precond;
+pub mod registry;
 pub mod schedule;
+pub mod spngd;
+pub mod stale;
 pub mod update;
 
-pub use schedule::{HyperParams, Schedule};
-pub use update::{sgd_update, spngd_update, rescale_weight, Velocity};
+pub use first_order::{Lars, Sgd};
+pub use precond::{
+    apply_layer_update, grad_tensor, stat_elems, BnMode, Fisher, LayerStateBox, ParamSlot,
+    Preconditioner, StatKind,
+};
+pub use registry::{by_name, lars, sgd, spngd, OPTIMIZER_NAMES};
+pub use schedule::{HyperParams, Schedule, SchedulePolicy};
+pub use spngd::{SpNgd, SpNgdLayer};
+pub use stale::StaleState;
+pub use update::{
+    clip_direction, rescale_weight, sgd_update, spngd_update, MomentumRule, ParamCtx, UpdateRule,
+    Velocity,
+};

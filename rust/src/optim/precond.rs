@@ -1,0 +1,293 @@
+//! The composable optimizer API: [`Preconditioner`] owns the per-layer
+//! second-order state and splits along the trainer's Stage boundaries.
+//!
+//! One training step touches an optimizer at four points:
+//!
+//! ```text
+//! plan(t)        coordinator, before the worker fan-out: consult the
+//!                per-layer scheduler — which of stats_spec() is due
+//! build_stat     Stage 1-2, every lane: construct one planned statistic
+//!                from the step executable's taps (published to the
+//!                collective the moment it is ready)
+//! refresh        Stage 4a, the layer's owner only: fold the reduced
+//!                statistics into the layer state (scheduler update,
+//!                damping, inversion)
+//! direction      Stage 4b, once per layer: turn the lane-mean gradient
+//!                into an update direction (the preconditioning)
+//! ```
+//!
+//! The [`UpdateRule`](super::update::UpdateRule) then applies the
+//! direction to the weights (trust-ratio clip, momentum, Normalizing
+//! Weights), and a [`SchedulePolicy`](super::schedule::SchedulePolicy)
+//! supplies η(t)/m(t). Both dist engines (sequential coordinator and the
+//! threaded `dist` workers) drive the same trait object; per-layer state
+//! lives in a [`LayerStateBox`] owned by the layer's Stage-4 owner, so
+//! owner threads mutate disjoint state without locks.
+//!
+//! First-order optimizers publish no statistics: `stats_spec()` returns
+//! an empty vec, `plan`/`refresh` never fire, and the statistics
+//! collectives move zero bytes.
+
+use std::any::Any;
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::collectives::comm::StatClass;
+use crate::linalg::Mat;
+use crate::optim::schedule::HyperParams;
+use crate::optim::update::{ParamCtx, UpdateRule};
+use crate::runtime::{Executor, HostTensor, ModelManifest};
+
+/// Fisher estimation mode (§4.1). Selected by the preconditioner
+/// ([`Preconditioner::fisher`]) since only NGD-family optimizers care.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fisher {
+    /// empirical Fisher captured in the ordinary bwd pass (`emp`)
+    Emp,
+    /// one-sample Monte-Carlo Fisher — extra backward pass (`1mc`)
+    OneMc,
+}
+
+/// BatchNorm Fisher mode (§4.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BnMode {
+    /// unit-wise 2×2 blocks, closed-form inverse (`unitBN`)
+    Unit,
+    /// full (2C)² Fisher inverted like any factor (`fullBN`)
+    Full,
+}
+
+/// Which statistic of a layer an entry in the refresh plan tracks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StatKind {
+    /// input-activation factor A
+    A,
+    /// output-gradient factor G
+    G,
+    /// BatchNorm Fisher (unit-wise blocks or the full (2C)² matrix)
+    BnF,
+}
+
+impl StatKind {
+    /// Collective accounting class (A vs G/F payload split of Fig. 6).
+    pub fn class(self) -> StatClass {
+        match self {
+            StatKind::A => StatClass::A,
+            _ => StatClass::GorF,
+        }
+    }
+}
+
+/// Per-layer optimizer state, owned by the layer's Stage-4 owner. Each
+/// preconditioner downcasts to its own concrete type; stateless
+/// optimizers store `()`.
+pub type LayerStateBox = Box<dyn Any + Send + Sync>;
+
+/// A pluggable optimizer: the per-layer second-order machinery behind
+/// one training step. See the module docs for the call protocol; the
+/// Stage 4a/4b contract (refresh at most once per layer per step, at the
+/// owner; direction exactly once per layer per step) is asserted by
+/// `tests/optim_api.rs`'s `MockPreconditioner`.
+pub trait Preconditioner: Send + Sync {
+    /// Registry name (`--optim` value).
+    fn name(&self) -> &'static str;
+
+    /// Which gradient estimator Stage 1 runs (step executable + seeds).
+    fn fisher(&self) -> Fisher {
+        Fisher::Emp
+    }
+
+    /// This optimizer's default hyperparameters for short synthetic-corpus
+    /// runs — the harness consults this instead of special-casing η₀/m₀
+    /// per optimizer.
+    fn default_hparams(&self) -> HyperParams;
+
+    /// Fresh per-layer state (called once per layer at trainer build).
+    fn init_layer(&self, model: &ModelManifest, li: usize) -> LayerStateBox;
+
+    /// Which statistics layer `li` publishes on a full refresh step.
+    /// Empty (the default) = this optimizer needs no reduced statistics.
+    fn stats_spec(&self, model: &ModelManifest, li: usize) -> Vec<StatKind> {
+        let _ = (model, li);
+        Vec::new()
+    }
+
+    /// Reduced-mat shape of one planned statistic — used to keep the
+    /// collective protocol alive with zero payloads when a worker errors
+    /// mid-step.
+    fn stat_shape(&self, model: &ModelManifest, li: usize, kind: StatKind) -> (usize, usize) {
+        let ml = &model.kfac_layers[li];
+        match kind {
+            StatKind::A => (ml.a_dim, ml.a_dim),
+            StatKind::G => (ml.g_dim, ml.g_dim),
+            StatKind::BnF => (ml.channels, 3),
+        }
+    }
+
+    /// Coordinator-side scheduler consult (Alg. 1's `t == t_X`): the
+    /// subset of [`Preconditioner::stats_spec`] due for refresh at step
+    /// `t`. May mutate the layer state (skip counters, intervals).
+    fn plan(
+        &self,
+        model: &ModelManifest,
+        li: usize,
+        state: &mut LayerStateBox,
+        t: u64,
+    ) -> Vec<StatKind> {
+        let _ = (model, li, state, t);
+        Vec::new()
+    }
+
+    /// Stage 1-2 on every lane: construct one planned statistic from the
+    /// step executable's outputs. Default: a zero payload of
+    /// [`Preconditioner::stat_shape`] (useful for mocks).
+    fn build_stat(
+        &self,
+        engine: &dyn Executor,
+        model: &ModelManifest,
+        li: usize,
+        kind: StatKind,
+        outs: &[HostTensor],
+    ) -> Result<Mat> {
+        let _ = (engine, outs);
+        let (r, c) = self.stat_shape(model, li, kind);
+        Ok(Mat::zeros(r, c))
+    }
+
+    /// Stage 4a at the layer's owner: fold the freshly reduced statistics
+    /// into the layer state (scheduler refresh, damping, inversion).
+    /// Called at most once per layer per step, only with a non-empty
+    /// `items`, only by the owner (which holds the `&mut`).
+    fn refresh(
+        &self,
+        engine: &dyn Executor,
+        model: &ModelManifest,
+        li: usize,
+        state: &mut LayerStateBox,
+        t: u64,
+        items: Vec<(StatKind, Mat)>,
+    ) -> Result<()> {
+        let _ = (engine, model, li, state, t, items);
+        Ok(())
+    }
+
+    /// Stage 4b, once per layer per step: map the lane-mean gradients of
+    /// the layer's parameters (canonical order: `[weight]` or
+    /// `[gamma, beta]`) to update directions, one per parameter.
+    /// `weights` are the current parameter values (read-only), for
+    /// optimizers whose direction depends on them (e.g. LARS).
+    fn direction(
+        &self,
+        engine: &dyn Executor,
+        model: &ModelManifest,
+        li: usize,
+        state: &LayerStateBox,
+        grads: &[HostTensor],
+        weights: &[&HostTensor],
+    ) -> Result<Vec<HostTensor>>;
+
+    /// Per-statistic refresh fractions, one entry per
+    /// [`Preconditioner::stats_spec`] item in the same order (the
+    /// Table 2 reduction metric). Empty = no statistics, reduction
+    /// reported as 1.
+    fn refresh_fractions(
+        &self,
+        model: &ModelManifest,
+        li: usize,
+        state: &LayerStateBox,
+    ) -> Vec<f64> {
+        let _ = (model, li, state);
+        Vec::new()
+    }
+}
+
+/// Communicated element count of one statistic (packed symmetric for
+/// square factors, 3 per channel for unit-BN blocks) — the weights of
+/// the Table-2 comm-reduction metric.
+pub fn stat_elems(model: &ModelManifest, li: usize, kind: StatKind) -> usize {
+    let ml = &model.kfac_layers[li];
+    match kind {
+        StatKind::A => ml.a_dim * (ml.a_dim + 1) / 2,
+        StatKind::G => ml.g_dim * (ml.g_dim + 1) / 2,
+        StatKind::BnF => 3 * ml.channels,
+    }
+}
+
+/// One parameter's update slot (weight + velocity), partitioned by layer
+/// owner so dist workers update disjoint parameters concurrently.
+pub struct ParamSlot<'a> {
+    pub p: &'a mut HostTensor,
+    pub v: &'a mut HostTensor,
+}
+
+/// The lane-mean gradient of parameter `pi`, sliced from the flat
+/// all-reduced vector.
+pub fn grad_tensor(model: &ModelManifest, flat: &[f32], pi: usize) -> HostTensor {
+    let mut off = 0usize;
+    for p in &model.params[..pi] {
+        off += p.shape.iter().product::<usize>();
+    }
+    let n: usize = model.params[pi].shape.iter().product();
+    HostTensor::new(model.params[pi].shape.clone(), flat[off..off + n].to_vec())
+}
+
+/// Stage 4b for one layer at its owner: preconditioned directions from
+/// the trait object, the numerical guard (a degenerate Fisher — possible
+/// when the loss approaches zero — can blow up the inverse; fall back to
+/// the raw gradient for this step), then the update rule per parameter
+/// in canonical order. The one code path both dist engines run.
+#[allow(clippy::too_many_arguments)]
+pub fn apply_layer_update(
+    engine: &dyn Executor,
+    model: &ModelManifest,
+    opt: &dyn Preconditioner,
+    rule: &dyn UpdateRule,
+    li: usize,
+    state: &LayerStateBox,
+    slots: &mut BTreeMap<usize, ParamSlot>,
+    grads_flat: &[f32],
+    lr: f32,
+    mom: f32,
+) -> Result<()> {
+    let ml = &model.kfac_layers[li];
+    let (pis, ctx) = if ml.is_bn() {
+        (
+            vec![
+                model.param_index(&ml.gamma_param).context("gamma param")?,
+                model.param_index(&ml.beta_param).context("beta param")?,
+            ],
+            ParamCtx { layer_kind: "bn", d_out: ml.channels },
+        )
+    } else {
+        (
+            vec![model.param_index(&ml.weight_param).context("weight param")?],
+            ParamCtx { layer_kind: ml.kind.as_str(), d_out: ml.grad_shape.0 },
+        )
+    };
+    let grads: Vec<HostTensor> =
+        pis.iter().map(|&pi| grad_tensor(model, grads_flat, pi)).collect();
+    let mut dirs = {
+        let weights: Vec<&HostTensor> = pis
+            .iter()
+            .map(|&pi| slots.get(&pi).map(|s| &*s.p).context("param slot"))
+            .collect::<Result<_>>()?;
+        opt.direction(engine, model, li, state, &grads, &weights)?
+    };
+    anyhow::ensure!(
+        dirs.len() == grads.len(),
+        "direction() returned {} dirs for {} params (layer {})",
+        dirs.len(),
+        grads.len(),
+        ml.name
+    );
+    for (i, &pi) in pis.iter().enumerate() {
+        let mut dir = std::mem::replace(&mut dirs[i], HostTensor::zeros(vec![0]));
+        if !dir.norm().is_finite() {
+            dir = grads[i].clone();
+        }
+        let slot = slots.get_mut(&pi).context("param slot")?;
+        rule.apply(slot.p, slot.v, &mut dir, lr, mom, &ctx);
+    }
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Optimizer registry: the single place that maps `--optim` names to
+//! [`Preconditioner`] implementations. Adding an optimizer = implement
+//! the trait + add one row here; the CLI, harness (`SPNGD_OPTIM`), CI
+//! matrix and benches all resolve through this lookup, and unknown names
+//! are a hard error listing the valid choices.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::optim::first_order::{Lars, Sgd};
+use crate::optim::precond::Preconditioner;
+use crate::optim::spngd::SpNgd;
+
+/// Registered optimizer names, in presentation order.
+pub const OPTIMIZER_NAMES: &[&str] = &["spngd", "sgd", "lars"];
+
+/// Default-configured optimizer by registry name. Unknown names are a
+/// hard error listing the valid choices.
+pub fn by_name(name: &str) -> Result<Arc<dyn Preconditioner>> {
+    match name {
+        "spngd" => Ok(Arc::new(SpNgd::default())),
+        "sgd" => Ok(Arc::new(Sgd)),
+        "lars" => Ok(Arc::new(Lars::default())),
+        other => bail!(
+            "unknown optimizer '{other}' (valid choices: {})",
+            OPTIMIZER_NAMES.join(" | ")
+        ),
+    }
+}
+
+/// Default SP-NGD (emp Fisher, unitBN, no stale scheduler).
+pub fn spngd() -> Arc<dyn Preconditioner> {
+    Arc::new(SpNgd::default())
+}
+
+/// The SGD-with-momentum baseline.
+pub fn sgd() -> Arc<dyn Preconditioner> {
+    Arc::new(Sgd)
+}
+
+/// Default LARS.
+pub fn lars() -> Arc<dyn Preconditioner> {
+    Arc::new(Lars::default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_registered_name_resolves() {
+        for name in OPTIMIZER_NAMES {
+            let opt = by_name(name).unwrap();
+            assert_eq!(&opt.name(), name);
+        }
+    }
+
+    #[test]
+    fn unknown_name_is_hard_error_listing_choices() {
+        let err = by_name("adam").unwrap_err().to_string();
+        assert!(err.contains("unknown optimizer 'adam'"), "{err}");
+        for name in OPTIMIZER_NAMES {
+            assert!(err.contains(name), "error must list '{name}': {err}");
+        }
+    }
+}

@@ -48,6 +48,33 @@ impl HyperParams {
     }
 }
 
+/// Per-step learning-rate/momentum policy — the schedule half of the
+/// composable optimizer API. [`Schedule`] (polynomial decay + coupled
+/// momentum, Eqs. 21-22) is the stock implementation; custom policies
+/// plug into `TrainerBuilder::schedule`.
+pub trait SchedulePolicy: Send + Sync {
+    /// η at a step.
+    fn lr(&self, step: u64) -> f64;
+    /// m at a step.
+    fn momentum(&self, step: u64) -> f64;
+    /// Fractional epoch of a step (for logging and epoch-based decay).
+    fn epoch_of(&self, step: u64) -> f64;
+}
+
+impl SchedulePolicy for Schedule {
+    fn lr(&self, step: u64) -> f64 {
+        Schedule::lr(self, step)
+    }
+
+    fn momentum(&self, step: u64) -> f64 {
+        Schedule::momentum(self, step)
+    }
+
+    fn epoch_of(&self, step: u64) -> f64 {
+        Schedule::epoch_of(self, step)
+    }
+}
+
 /// Stateful schedule evaluated per step.
 #[derive(Clone, Debug)]
 pub struct Schedule {

@@ -1,0 +1,354 @@
+//! SP-NGD as a [`Preconditioner`]: K-FAC factors with π-split damping,
+//! unit-wise/full BatchNorm Fisher, and the adaptive stale-statistics
+//! scheduler — the paper's optimizer, ported onto the composable API
+//! bit-identically to the pre-refactor trainer path (asserted by
+//! `tests/optim_api.rs`).
+
+use anyhow::{Context, Result};
+
+use crate::kfac::bn::{BnFisher, BnFullFisher};
+use crate::kfac::damping::pi_split;
+use crate::linalg::Mat;
+use crate::optim::precond::{BnMode, Fisher, LayerStateBox, Preconditioner, StatKind};
+use crate::optim::schedule::HyperParams;
+use crate::optim::stale::StaleState;
+use crate::runtime::{Executor, HostTensor, ModelManifest};
+
+/// SP-NGD configuration — what used to be the NGD half of `TrainerCfg`.
+#[derive(Clone, Debug)]
+pub struct SpNgd {
+    /// Fisher estimation mode (§4.1)
+    pub fisher: Fisher,
+    /// BatchNorm Fisher mode (§4.2)
+    pub bn_mode: BnMode,
+    /// adaptive stale-statistics scheduler (§4.3); false = refresh every step
+    pub stale: bool,
+    /// similarity threshold α (paper: 0.1)
+    pub stale_alpha: f32,
+    /// base damping λ
+    pub lambda: f32,
+}
+
+impl Default for SpNgd {
+    fn default() -> Self {
+        SpNgd {
+            fisher: Fisher::Emp,
+            bn_mode: BnMode::Unit,
+            stale: false,
+            stale_alpha: 0.1,
+            lambda: 2.5e-3,
+        }
+    }
+}
+
+/// Per-layer SP-NGD state: the stale schedulers, the owner's factor
+/// cache, and the damped inverses.
+pub struct SpNgdLayer {
+    pub a_stale: StaleState,
+    pub g_stale: StaleState,
+    /// current reduced factors (owner's copy)
+    a: Option<Mat>,
+    g: Option<Mat>,
+    /// cached damped inverses (padded-bucket sliced back)
+    a_inv: Option<HostTensor>,
+    g_inv: Option<HostTensor>,
+    /// BN state
+    bn_fisher: Option<BnFisher>,
+    bn_full_inv: Option<Mat>,
+}
+
+impl SpNgdLayer {
+    fn new(alpha: f32) -> Self {
+        SpNgdLayer {
+            a_stale: StaleState::new(alpha),
+            g_stale: StaleState::new(alpha),
+            a: None,
+            g: None,
+            a_inv: None,
+            g_inv: None,
+            bn_fisher: None,
+            bn_full_inv: None,
+        }
+    }
+}
+
+fn layer_state(state: &LayerStateBox) -> Result<&SpNgdLayer> {
+    state.downcast_ref::<SpNgdLayer>().context("layer state is not SpNgdLayer")
+}
+
+fn layer_state_mut(state: &mut LayerStateBox) -> Result<&mut SpNgdLayer> {
+    state.downcast_mut::<SpNgdLayer>().context("layer state is not SpNgdLayer")
+}
+
+/// π split from cached traces (both factors' traces are known even when
+/// only one refreshed this step).
+fn pi_split_traces(tr_a: f32, dim_a: f32, tr_g: f32, dim_g: f32, lambda: f32) -> (f32, f32) {
+    let a = Mat::from_vec(1, 1, vec![tr_a / dim_a.max(1.0)]);
+    let g = Mat::from_vec(1, 1, vec![tr_g / dim_g.max(1.0)]);
+    pi_split(&a, &g, lambda)
+}
+
+impl Preconditioner for SpNgd {
+    fn name(&self) -> &'static str {
+        "spngd"
+    }
+
+    fn fisher(&self) -> Fisher {
+        self.fisher
+    }
+
+    fn default_hparams(&self) -> HyperParams {
+        HyperParams {
+            alpha_mixup: 0.0,
+            p_decay: 3.5,
+            e_start: 2.0,
+            e_end: 60.0,
+            eta0: 0.02,
+            m0: 0.018,
+            lambda: 2.5e-3,
+        }
+    }
+
+    fn init_layer(&self, _model: &ModelManifest, _li: usize) -> LayerStateBox {
+        Box::new(SpNgdLayer::new(self.stale_alpha))
+    }
+
+    fn stats_spec(&self, model: &ModelManifest, li: usize) -> Vec<StatKind> {
+        if model.kfac_layers[li].is_bn() {
+            vec![StatKind::BnF]
+        } else {
+            vec![StatKind::A, StatKind::G]
+        }
+    }
+
+    fn stat_shape(&self, model: &ModelManifest, li: usize, kind: StatKind) -> (usize, usize) {
+        let ml = &model.kfac_layers[li];
+        match kind {
+            StatKind::A => (ml.a_dim, ml.a_dim),
+            StatKind::G => (ml.g_dim, ml.g_dim),
+            StatKind::BnF => match self.bn_mode {
+                BnMode::Unit => (ml.channels, 3),
+                BnMode::Full => (2 * ml.channels, 2 * ml.channels),
+            },
+        }
+    }
+
+    /// Alg. 1's per-statistic schedule: everything is due when the stale
+    /// scheduler is off; otherwise each statistic consults its own
+    /// interval (and records skips for the reduction metric).
+    fn plan(
+        &self,
+        model: &ModelManifest,
+        li: usize,
+        state: &mut LayerStateBox,
+        t: u64,
+    ) -> Vec<StatKind> {
+        let st = layer_state_mut(state).expect("spngd layer state");
+        let due_always = !self.stale;
+        let mut due = Vec::new();
+        if model.kfac_layers[li].is_bn() {
+            if due_always || st.a_stale.due(t) {
+                due.push(StatKind::BnF);
+            } else {
+                st.a_stale.note_skip();
+            }
+        } else {
+            if due_always || st.a_stale.due(t) {
+                due.push(StatKind::A);
+            } else {
+                st.a_stale.note_skip();
+            }
+            if due_always || st.g_stale.due(t) {
+                due.push(StatKind::G);
+            } else {
+                st.g_stale.note_skip();
+            }
+        }
+        due
+    }
+
+    /// Stage 1-2: one statistic from the step executable's taps (SYRK
+    /// factor products; unit-BN blocks are built host-side).
+    fn build_stat(
+        &self,
+        engine: &dyn Executor,
+        model: &ModelManifest,
+        li: usize,
+        kind: StatKind,
+        outs: &[HostTensor],
+    ) -> Result<Mat> {
+        let ml = &model.kfac_layers[li];
+        let mat = match kind {
+            StatKind::A => {
+                let ti = model
+                    .output_index("a_tap", Some(&ml.name))
+                    .context("a_tap index")?;
+                let f = engine.execute(&ml.factor_a, &[&outs[ti]])?;
+                f[0].as_mat()
+            }
+            StatKind::G => {
+                let ti = model
+                    .output_index("g_tap", Some(&ml.name))
+                    .context("g_tap index")?;
+                let tap = &outs[ti];
+                let f = if ml.kind == "conv" {
+                    let t2 = tap.nchw_to_rows_channels();
+                    engine.execute(&ml.factor_g, &[&t2])?
+                } else {
+                    engine.execute(&ml.factor_g, &[tap])?
+                };
+                f[0].as_mat()
+            }
+            StatKind::BnF => {
+                let gi = model
+                    .output_index("g_gamma", Some(&ml.name))
+                    .context("g_gamma index")?;
+                let bi = model
+                    .output_index("g_beta", Some(&ml.name))
+                    .context("g_beta index")?;
+                match self.bn_mode {
+                    BnMode::Unit => BnFisher::from_taps(
+                        &outs[gi].data,
+                        &outs[bi].data,
+                        model.batch,
+                        ml.channels,
+                    )
+                    .as_mat(),
+                    BnMode::Full => {
+                        let f = engine.execute(&ml.bn_full, &[&outs[gi], &outs[bi]])?;
+                        f[0].as_mat()
+                    }
+                }
+            }
+        };
+        Ok(mat)
+    }
+
+    /// Stage 4a: Alg. 2 scheduler refresh, owner factor-cache update,
+    /// then damped inversion of the freshly reduced statistics (π-split
+    /// damping from the cached traces).
+    fn refresh(
+        &self,
+        engine: &dyn Executor,
+        model: &ModelManifest,
+        li: usize,
+        state: &mut LayerStateBox,
+        t: u64,
+        items: Vec<(StatKind, Mat)>,
+    ) -> Result<()> {
+        let layer = layer_state_mut(state)?;
+        let ml = &model.kfac_layers[li];
+        for (kind, m) in &items {
+            match kind {
+                StatKind::A => {
+                    layer.a_stale.refresh(t, m);
+                    layer.a = Some(m.clone());
+                }
+                StatKind::G => {
+                    layer.g_stale.refresh(t, m);
+                    layer.g = Some(m.clone());
+                }
+                StatKind::BnF => {
+                    layer.a_stale.refresh(t, m);
+                }
+            }
+        }
+        // traces for the π split (both factors' traces are known even when
+        // only one refreshed this step)
+        let tr_a = layer.a.as_ref().map(|m| m.trace()).unwrap_or(0.0);
+        let tr_g = layer.g.as_ref().map(|m| m.trace()).unwrap_or(0.0);
+        for (kind, mat) in items {
+            match kind {
+                StatKind::BnF if self.bn_mode == BnMode::Unit => {
+                    // closed-form per-channel blocks — nothing to invert
+                    layer.bn_fisher = Some(BnFisher {
+                        channels: ml.channels,
+                        blocks: (0..ml.channels)
+                            .map(|c| [mat.data[c * 3], mat.data[c * 3 + 1], mat.data[c * 3 + 2]])
+                            .collect(),
+                    });
+                }
+                StatKind::BnF => {
+                    let padded = HostTensor::from_mat(&mat).pad_square(ml.full_bucket);
+                    let damp = HostTensor::scalar(self.lambda);
+                    let out = engine.execute(&ml.invert_full, &[&padded, &damp])?;
+                    let inv = out[0].slice_square(2 * ml.channels);
+                    layer.bn_full_inv = Some(inv.as_mat());
+                }
+                StatKind::A | StatKind::G => {
+                    let (da, dg) =
+                        pi_split_traces(tr_a, ml.a_dim as f32, tr_g, ml.g_dim as f32, self.lambda);
+                    let (exe, bucket, dim, damp) = match kind {
+                        StatKind::A => (&ml.invert_a, ml.a_bucket, ml.a_dim, da),
+                        _ => (&ml.invert_g, ml.g_bucket, ml.g_dim, dg),
+                    };
+                    let padded = HostTensor::from_mat(&mat).pad_square(bucket);
+                    let damp = HostTensor::scalar(damp);
+                    let out = engine.execute(exe, &[&padded, &damp])?;
+                    let inv = out[0].slice_square(dim);
+                    match kind {
+                        StatKind::A => layer.a_inv = Some(inv),
+                        _ => layer.g_inv = Some(inv),
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Stage 4b: (F̂+λI)⁻¹∇L through the cached Kronecker-factor inverses
+    /// (the `precond` executable) or the BN Fisher blocks.
+    fn direction(
+        &self,
+        engine: &dyn Executor,
+        model: &ModelManifest,
+        li: usize,
+        state: &LayerStateBox,
+        grads: &[HostTensor],
+        _weights: &[&HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let layer = layer_state(state)?;
+        let ml = &model.kfac_layers[li];
+        if ml.is_bn() {
+            let g_gamma = &grads[0];
+            let g_beta = &grads[1];
+            let (dir_g, dir_b) = match self.bn_mode {
+                BnMode::Unit => {
+                    let f = layer.bn_fisher.as_ref().context("bn fisher missing")?;
+                    f.precondition(&g_gamma.data, &g_beta.data, self.lambda)
+                }
+                BnMode::Full => {
+                    let inv = layer.bn_full_inv.as_ref().context("bn full inverse missing")?;
+                    BnFullFisher::apply_inverse(inv, &g_gamma.data, &g_beta.data)
+                }
+            };
+            Ok(vec![
+                HostTensor::new(g_gamma.shape.clone(), dir_g),
+                HostTensor::new(g_beta.shape.clone(), dir_b),
+            ])
+        } else {
+            let gw = &grads[0];
+            let (m, n) = ml.grad_shape;
+            let gmat = gw.clone().reshape(vec![m, n]);
+            let ainv = layer.a_inv.as_ref().context("A inverse missing")?;
+            let ginv = layer.g_inv.as_ref().context("G inverse missing")?;
+            let out = engine.execute(&ml.precond, &[ginv, &gmat, ainv])?;
+            Ok(vec![out[0].clone().reshape(gw.shape.clone())])
+        }
+    }
+
+    fn refresh_fractions(
+        &self,
+        model: &ModelManifest,
+        li: usize,
+        state: &LayerStateBox,
+    ) -> Vec<f64> {
+        let st = state.downcast_ref::<SpNgdLayer>().expect("spngd layer state");
+        if model.kfac_layers[li].is_bn() {
+            // BN layers track their single statistic on the A slot
+            vec![st.a_stale.refresh_fraction()]
+        } else {
+            vec![st.a_stale.refresh_fraction(), st.g_stale.refresh_fraction()]
+        }
+    }
+}

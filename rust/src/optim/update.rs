@@ -1,7 +1,85 @@
 //! Parameter update rules: SP-NGD momentum update (Eq. 23), Normalizing
-//! Weights rescaling (Eq. 24), and the SGD baseline.
+//! Weights rescaling (Eq. 24), the SGD baseline, and the [`UpdateRule`]
+//! stage that applies a preconditioned direction to a weight (trust-ratio
+//! clip → momentum step → optional Normalizing-Weights rescale).
 
 use crate::runtime::HostTensor;
+
+/// What the update rule knows about the parameter being updated.
+pub struct ParamCtx<'a> {
+    /// owning layer kind: "conv" | "fc" | "bn"
+    pub layer_kind: &'a str,
+    /// layer output dimension (Normalizing Weights target norm √(2·d_out))
+    pub d_out: usize,
+}
+
+/// Stage 4b's final step: apply a direction to one parameter. Shared by
+/// every [`Preconditioner`](super::Preconditioner) so optimizers compose
+/// with clipping/momentum/rescale policies instead of reimplementing
+/// them.
+pub trait UpdateRule: Send + Sync {
+    fn apply(
+        &self,
+        w: &mut HostTensor,
+        v: &mut HostTensor,
+        dir: &mut HostTensor,
+        lr: f32,
+        momentum: f32,
+        ctx: &ParamCtx,
+    );
+}
+
+/// The default rule — what the pre-refactor trainer hardcoded:
+/// trust-ratio clip of the preconditioned direction, the Eq. 23 momentum
+/// update, and (optionally) Normalizing Weights for conv layers.
+#[derive(Clone, Copy, Debug)]
+pub struct MomentumRule {
+    /// per-layer update-norm clip: ||lr·dir|| ≤ clip·||w|| (0 = off).
+    /// Stabilizes the preconditioner when the Fisher collapses near zero
+    /// training loss (a regime ImageNet-scale runs never reach).
+    pub clip_update_ratio: f32,
+    /// Normalizing-Weights rescale (Eq. 24) for conv layers
+    pub weight_rescale: bool,
+}
+
+impl Default for MomentumRule {
+    fn default() -> Self {
+        MomentumRule { clip_update_ratio: 0.3, weight_rescale: false }
+    }
+}
+
+impl UpdateRule for MomentumRule {
+    fn apply(
+        &self,
+        w: &mut HostTensor,
+        v: &mut HostTensor,
+        dir: &mut HostTensor,
+        lr: f32,
+        momentum: f32,
+        ctx: &ParamCtx,
+    ) {
+        clip_direction(self.clip_update_ratio, dir, w, lr);
+        spngd_update(w, v, dir, lr, momentum);
+        // Normalizing Weights (Eq. 24) — conv layers (BN-covered);
+        // the FC head keeps its scale (no BN follows it here).
+        if self.weight_rescale && ctx.layer_kind == "conv" {
+            rescale_weight(w, ctx.d_out);
+        }
+    }
+}
+
+/// Trust-ratio clip (applied to the *preconditioned* direction):
+/// ensures ||lr * dir|| <= clip * ||w||.
+pub fn clip_direction(clip: f32, dir: &mut HostTensor, w: &HostTensor, lr: f32) {
+    if clip <= 0.0 || lr <= 0.0 {
+        return;
+    }
+    let wn = w.norm().max(1e-3);
+    let dn = dir.norm() * lr;
+    if dn > clip * wn {
+        dir.scale_inplace(clip * wn / dn);
+    }
+}
 
 /// Momentum state: v(t) = w(t) − w(t−1) per parameter (Eq. 23 defines the
 /// momentum term from the previous update).
@@ -58,6 +136,49 @@ pub fn rescale_weight(w: &mut HostTensor, d_out: usize) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn momentum_rule_matches_clip_then_update_then_rescale() {
+        // the rule must reproduce the exact pre-refactor op sequence
+        let mut w1 = HostTensor::new(vec![2, 2], vec![1.0, 2.0, -1.0, 0.5]);
+        let mut v1 = HostTensor::zeros(vec![2, 2]);
+        let mut d1 = HostTensor::new(vec![2, 2], vec![10.0, -10.0, 5.0, 5.0]);
+        let (lr, mom) = (0.1f32, 0.9f32);
+        let rule = MomentumRule { clip_update_ratio: 0.3, weight_rescale: true };
+        let ctx = ParamCtx { layer_kind: "conv", d_out: 2 };
+        rule.apply(&mut w1, &mut v1, &mut d1, lr, mom, &ctx);
+
+        let mut w2 = HostTensor::new(vec![2, 2], vec![1.0, 2.0, -1.0, 0.5]);
+        let mut v2 = HostTensor::zeros(vec![2, 2]);
+        let mut d2 = HostTensor::new(vec![2, 2], vec![10.0, -10.0, 5.0, 5.0]);
+        clip_direction(0.3, &mut d2, &w2, lr);
+        spngd_update(&mut w2, &mut v2, &d2, lr, mom);
+        rescale_weight(&mut w2, 2);
+        assert_eq!(w1.data, w2.data);
+        assert_eq!(v1.data, v2.data);
+    }
+
+    #[test]
+    fn momentum_rule_skips_rescale_for_non_conv() {
+        let mut w = HostTensor::new(vec![2], vec![1.0, 1.0]);
+        let mut v = HostTensor::zeros(vec![2]);
+        let mut d = HostTensor::new(vec![2], vec![0.5, -0.5]);
+        let rule = MomentumRule { clip_update_ratio: 0.0, weight_rescale: true };
+        rule.apply(&mut w, &mut v, &mut d, 0.1, 0.0, &ParamCtx { layer_kind: "fc", d_out: 2 });
+        assert_eq!(w.data, vec![0.95, 1.05]); // no rescale applied
+    }
+
+    #[test]
+    fn clip_caps_update_norm() {
+        let w = HostTensor::new(vec![2], vec![3.0, 4.0]); // ||w|| = 5
+        let mut d = HostTensor::new(vec![2], vec![30.0, 40.0]); // ||d|| = 50
+        clip_direction(0.3, &mut d, &w, 1.0);
+        assert!((d.norm() - 1.5).abs() < 1e-5); // 0.3 * 5
+        // under the cap: untouched
+        let mut d2 = HostTensor::new(vec![2], vec![0.1, 0.0]);
+        clip_direction(0.3, &mut d2, &w, 1.0);
+        assert_eq!(d2.data, vec![0.1, 0.0]);
+    }
 
     fn t(data: Vec<f32>) -> HostTensor {
         let n = data.len();

@@ -210,6 +210,80 @@ fn all_gather_accounting_matches_simcomm() {
     }
 }
 
+/// The rank-level post-by-move entry points: each rank moves its lanes
+/// in and takes one mean copy out. Results must match the reference
+/// reduction and the byte accounting must be unchanged from `SimComm`
+/// (post-by-move is a memcpy optimization, not a protocol change).
+#[test]
+fn grad_post_by_move_per_rank_drain_matches_reference_and_bytes() {
+    let mut rng = Rng::new(61);
+    for &p in &[1usize, 2, 3, 8] {
+        for &chunk in &[1usize, 13, 100_000] {
+            let total = p * 2;
+            let n = 257;
+            let lanes = rand_lanes(&mut rng, total, n);
+            let want = reference_mean(&lanes);
+            let mut ring = RingComm::new(p);
+            ring.chunk_elems = chunk;
+            let ring = Arc::new(ring);
+            let means: Vec<std::sync::Mutex<Vec<f32>>> =
+                (0..p).map(|_| std::sync::Mutex::new(Vec::new())).collect();
+            std::thread::scope(|s| {
+                for rank in 0..p {
+                    let ring = ring.clone();
+                    let lanes = &lanes;
+                    let means = &means;
+                    s.spawn(move || {
+                        let my: Vec<(usize, Vec<f32>)> = (0..total)
+                            .filter(|g| g % p == rank)
+                            .map(|g| (g, lanes[g].clone()))
+                            .collect();
+                        ring.grad_post(my, total);
+                        *means[rank].lock().unwrap() = ring.grad_finish();
+                    });
+                }
+            });
+            for (rank, m) in means.iter().enumerate() {
+                assert_eq!(*m.lock().unwrap(), want, "rank {rank} p={p} chunk={chunk}");
+            }
+            // byte accounting identical to SimComm's AllReduce formula
+            let sim = SimComm::new(p);
+            sim.all_reduce_mean(&mut lanes.clone());
+            assert_eq!(
+                Collective::stats(ring.as_ref()).ar_grads,
+                Collective::stats(&sim).ar_grads,
+                "p={p} chunk={chunk}"
+            );
+            assert_eq!(Collective::stats(ring.as_ref()).num_ops, 1, "one AllReduce op");
+        }
+    }
+}
+
+/// Post/finish rounds must be reusable back-to-back (the trainer runs
+/// one per step) with the per-rank drain count resetting each round.
+#[test]
+fn grad_rounds_reusable_with_rank_drains() {
+    let p = 3;
+    let ring = Arc::new(RingComm::new(p));
+    let mut rng = Rng::new(67);
+    for _ in 0..5 {
+        let total = p;
+        let lanes = rand_lanes(&mut rng, total, 41);
+        let want = reference_mean(&lanes);
+        std::thread::scope(|s| {
+            for rank in 0..p {
+                let ring = ring.clone();
+                let lanes = &lanes;
+                let want = &want;
+                s.spawn(move || {
+                    ring.grad_post(vec![(rank, lanes[rank].clone())], total);
+                    assert_eq!(ring.grad_finish(), *want, "rank {rank}");
+                });
+            }
+        });
+    }
+}
+
 #[test]
 fn fp16_wire_halves_ring_bytes() {
     let mut lanes = rand_lanes(&mut Rng::new(7), 4, 100);

@@ -12,12 +12,10 @@
 use std::sync::Arc;
 
 use spngd::collectives::Collective;
-use spngd::coordinator::{BnMode, DistMode, Fisher, Optim, Trainer, TrainerCfg};
-use spngd::data::{AugmentCfg, SynthDataset};
-use spngd::optim::{HyperParams, Schedule};
-use spngd::runtime::native;
+use spngd::coordinator::{DistMode, Trainer, TrainerBuilder};
+use spngd::optim::{self, BnMode, Fisher, HyperParams, Preconditioner, SpNgd};
 
-fn base_cfg(model: &str) -> TrainerCfg {
+fn base_builder(model: &str, opt: Arc<dyn Preconditioner>) -> TrainerBuilder {
     let hp = HyperParams {
         alpha_mixup: 0.0,
         p_decay: 2.0,
@@ -27,34 +25,14 @@ fn base_cfg(model: &str) -> TrainerCfg {
         m0: 0.018,
         lambda: 2.5e-3,
     };
-    TrainerCfg {
-        model: model.to_string(),
-        workers: 2,
-        grad_accum: 1,
-        fisher: Fisher::Emp,
-        bn_mode: BnMode::Unit,
-        stale: false,
-        stale_alpha: 0.1,
-        lambda: hp.lambda,
-        schedule: Schedule::new(hp, 50),
-        optimizer: Optim::SpNgd,
-        weight_rescale: false,
-        clip_update_ratio: 0.3,
-        augment: AugmentCfg::disabled(),
-        bn_momentum: 0.9,
-        fp16_comm: false,
-        dist: DistMode::Sequential,
-        seed: 7,
-    }
-}
-
-fn make_trainer(cfg: TrainerCfg) -> Trainer {
-    let (manifest, engine) = native::build_default().unwrap();
-    let manifest = Arc::new(manifest);
-    let m = manifest.model(&cfg.model).unwrap();
-    let (c, h, w) = (m.input_shape[1], m.input_shape[2], m.input_shape[3]);
-    let ds = SynthDataset::new(m.num_classes, c, h, w, 4000, 42);
-    Trainer::new(manifest, Arc::new(engine), cfg, ds).unwrap()
+    TrainerBuilder::new(model)
+        .optimizer(opt)
+        .hyperparams(hp)
+        .steps_per_epoch(50)
+        .workers(2)
+        .dataset_len(4000)
+        .data_seed(42)
+        .seed(7)
 }
 
 fn flat_params(tr: &Trainer) -> Vec<f32> {
@@ -64,10 +42,8 @@ fn flat_params(tr: &Trainer) -> Vec<f32> {
 /// The core differential: threaded == sequential, step by step, bitwise.
 #[test]
 fn threaded_engine_matches_sequential_bitwise() {
-    let mut seq = make_trainer(base_cfg("mlp"));
-    let mut cfg = base_cfg("mlp");
-    cfg.dist = DistMode::Threaded;
-    let mut thr = make_trainer(cfg);
+    let mut seq = base_builder("mlp", optim::spngd()).build().unwrap();
+    let mut thr = base_builder("mlp", optim::spngd()).dist(DistMode::Threaded).build().unwrap();
     for i in 0..6 {
         let rs = seq.step().unwrap();
         let rt = thr.step().unwrap();
@@ -85,13 +61,12 @@ fn threaded_engine_matches_sequential_bitwise() {
 
 #[test]
 fn threaded_engine_matches_sequential_on_convnet() {
-    let mut cfg = base_cfg("convnet_tiny");
-    cfg.dist = DistMode::Threaded;
-    cfg.workers = 4;
-    let mut seq4 = base_cfg("convnet_tiny");
-    seq4.workers = 4;
-    let mut seq = make_trainer(seq4);
-    let mut thr = make_trainer(cfg);
+    let mut seq = base_builder("convnet_tiny", optim::spngd()).workers(4).build().unwrap();
+    let mut thr = base_builder("convnet_tiny", optim::spngd())
+        .workers(4)
+        .dist(DistMode::Threaded)
+        .build()
+        .unwrap();
     for i in 0..3 {
         let rs = seq.step().unwrap();
         let rt = thr.step().unwrap();
@@ -105,10 +80,11 @@ fn threaded_engine_matches_sequential_on_convnet() {
 #[test]
 fn worker_count_invariance_sequential() {
     let mk = |workers: usize, accum: usize| {
-        let mut cfg = base_cfg("mlp");
-        cfg.workers = workers;
-        cfg.grad_accum = accum;
-        make_trainer(cfg)
+        base_builder("mlp", optim::spngd())
+            .workers(workers)
+            .grad_accum(accum)
+            .build()
+            .unwrap()
     };
     let mut a = mk(1, 4);
     let mut b = mk(2, 2);
@@ -130,19 +106,14 @@ fn worker_count_invariance_sequential() {
 /// exactly why a W=1 sequential run is ground truth for a W=4 dist run.
 #[test]
 fn worker_count_invariance_threaded_vs_single_sequential() {
-    let mut seq = {
-        let mut cfg = base_cfg("mlp");
-        cfg.workers = 1;
-        cfg.grad_accum = 4;
-        make_trainer(cfg)
-    };
-    let mut thr = {
-        let mut cfg = base_cfg("mlp");
-        cfg.workers = 4;
-        cfg.grad_accum = 1;
-        cfg.dist = DistMode::Threaded;
-        make_trainer(cfg)
-    };
+    let mut seq =
+        base_builder("mlp", optim::spngd()).workers(1).grad_accum(4).build().unwrap();
+    let mut thr = base_builder("mlp", optim::spngd())
+        .workers(4)
+        .grad_accum(1)
+        .dist(DistMode::Threaded)
+        .build()
+        .unwrap();
     for i in 0..5 {
         let rs = seq.step().unwrap();
         let rt = thr.step().unwrap();
@@ -158,12 +129,8 @@ fn threaded_stale_scheduler_matches_sequential() {
     // same stale config the sequential suite proves skips under
     // (trainer_integration::stale_scheduler_reduces_refreshes)
     let mk = |dist: DistMode| {
-        let mut cfg = base_cfg("mlp");
-        cfg.stale = true;
-        cfg.stale_alpha = 0.3;
-        cfg.grad_accum = 4;
-        cfg.dist = dist;
-        make_trainer(cfg)
+        let opt = Arc::new(SpNgd { stale: true, stale_alpha: 0.3, ..SpNgd::default() });
+        base_builder("mlp", opt).grad_accum(4).dist(dist).build().unwrap()
     };
     let mut seq = mk(DistMode::Sequential);
     let mut thr = mk(DistMode::Threaded);
@@ -186,12 +153,12 @@ fn threaded_all_modes_one_step() {
         (Fisher::Emp, BnMode::Full),
         (Fisher::OneMc, BnMode::Unit),
     ] {
-        let mut cfg = base_cfg("convnet_tiny");
-        cfg.fisher = fisher;
-        cfg.bn_mode = bn;
-        cfg.dist = DistMode::Threaded;
-        cfg.workers = 3;
-        let mut tr = make_trainer(cfg);
+        let opt = Arc::new(SpNgd { fisher, bn_mode: bn, ..SpNgd::default() });
+        let mut tr = base_builder("convnet_tiny", opt)
+            .workers(3)
+            .dist(DistMode::Threaded)
+            .build()
+            .unwrap();
         let rec = tr.step().unwrap();
         assert!(rec.loss.is_finite(), "{fisher:?}/{bn:?}");
         assert!(rec.comm.stats_total() > 0);
@@ -201,10 +168,7 @@ fn threaded_all_modes_one_step() {
 
 #[test]
 fn threaded_sgd_baseline() {
-    let mut cfg = base_cfg("mlp");
-    cfg.optimizer = Optim::Sgd;
-    cfg.dist = DistMode::Threaded;
-    let mut tr = make_trainer(cfg);
+    let mut tr = base_builder("mlp", optim::sgd()).dist(DistMode::Threaded).build().unwrap();
     let first = tr.step().unwrap().loss;
     let mut last = first;
     for _ in 0..9 {
@@ -216,10 +180,11 @@ fn threaded_sgd_baseline() {
 
 #[test]
 fn threaded_loss_decreases_and_evaluates() {
-    let mut cfg = base_cfg("mlp");
-    cfg.dist = DistMode::Threaded;
-    cfg.workers = 4;
-    let mut tr = make_trainer(cfg);
+    let mut tr = base_builder("mlp", optim::spngd())
+        .workers(4)
+        .dist(DistMode::Threaded)
+        .build()
+        .unwrap();
     let mut first = 0.0;
     let mut last = 0.0;
     for i in 0..20 {

@@ -194,12 +194,16 @@ fn step_gradients_match_directional_derivative() {
 /// training path).
 #[test]
 fn trainer_smoke_on_synth_data() {
-    use spngd::coordinator::Optim;
-    use spngd::harness;
+    use spngd::coordinator::TrainerBuilder;
+    use spngd::optim;
 
-    let mut cfg = harness::default_cfg("convnet_tiny", Optim::SpNgd);
-    cfg.workers = 2;
-    let mut tr = harness::make_trainer(cfg, 2048, 5).unwrap();
+    let mut tr = TrainerBuilder::new("convnet_tiny")
+        .optimizer(optim::spngd())
+        .workers(2)
+        .dataset_len(2048)
+        .data_seed(5)
+        .build()
+        .unwrap();
     let w0: Vec<f32> = tr.params.iter().flat_map(|p| p.data.clone()).collect();
     let first = tr.step().unwrap();
     let w1: Vec<f32> = tr.params.iter().flat_map(|p| p.data.clone()).collect();

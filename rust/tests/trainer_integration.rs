@@ -2,59 +2,40 @@
 //! training decreases the loss, the stale scheduler skips refreshes, the
 //! SGD baseline works, and all practical-NGD modes run. Hermetic — no
 //! artifacts, no network (the `data/synth` corpus is generated
-//! in-process).
+//! in-process). Trainers are composed through `TrainerBuilder`.
 
 use std::sync::Arc;
 
 use spngd::collectives::Collective;
-use spngd::coordinator::{BnMode, DistMode, Fisher, Optim, Trainer, TrainerCfg};
-use spngd::data::{AugmentCfg, SynthDataset};
-use spngd::optim::{HyperParams, Schedule};
-use spngd::runtime::native;
+use spngd::coordinator::{Trainer, TrainerBuilder};
+use spngd::optim::{self, BnMode, Fisher, HyperParams, Preconditioner, SpNgd};
 
-fn base_cfg(model: &str, optimizer: Optim) -> TrainerCfg {
+/// The suites' standard composition: flat LR (decay far beyond the test
+/// horizon), 2 workers, the 4000-sample corpus at data seed 42.
+fn base_builder(model: &str, opt: Arc<dyn Preconditioner>) -> TrainerBuilder {
     let hp = HyperParams {
-        alpha_mixup: 0.0,
         p_decay: 2.0,
         e_start: 100.0, // effectively flat LR for these short runs
         e_end: 200.0,
-        eta0: if optimizer == Optim::Sgd { 0.05 } else { 0.02 },
-        m0: if optimizer == Optim::Sgd { 0.045 } else { 0.018 },
-        lambda: 2.5e-3,
+        ..opt.default_hparams()
     };
-    TrainerCfg {
-        model: model.to_string(),
-        workers: 2,
-        grad_accum: 1,
-        fisher: Fisher::Emp,
-        bn_mode: BnMode::Unit,
-        stale: false,
-        stale_alpha: 0.1,
-        lambda: hp.lambda,
-        schedule: Schedule::new(hp, 50),
-        optimizer,
-        weight_rescale: false,
-        clip_update_ratio: 0.3,
-        augment: AugmentCfg::disabled(),
-        bn_momentum: 0.9,
-        fp16_comm: false,
-        dist: DistMode::Sequential,
-        seed: 7,
-    }
+    TrainerBuilder::new(model)
+        .optimizer(opt)
+        .hyperparams(hp)
+        .steps_per_epoch(50)
+        .workers(2)
+        .dataset_len(4000)
+        .data_seed(42)
+        .seed(7)
 }
 
-fn make_trainer(cfg: TrainerCfg) -> Trainer {
-    let (manifest, engine) = native::build_default().unwrap();
-    let manifest = Arc::new(manifest);
-    let m = manifest.model(&cfg.model).unwrap();
-    let (c, h, w) = (m.input_shape[1], m.input_shape[2], m.input_shape[3]);
-    let ds = SynthDataset::new(m.num_classes, c, h, w, 4000, 42);
-    Trainer::new(manifest, Arc::new(engine), cfg, ds).unwrap()
+fn make_trainer(b: TrainerBuilder) -> Trainer {
+    b.build().unwrap()
 }
 
 #[test]
 fn spngd_mlp_loss_decreases() {
-    let mut tr = make_trainer(base_cfg("mlp", Optim::SpNgd));
+    let mut tr = make_trainer(base_builder("mlp", optim::spngd()));
     let mut first = 0.0;
     let mut last = 0.0;
     for i in 0..25 {
@@ -70,7 +51,7 @@ fn spngd_mlp_loss_decreases() {
 
 #[test]
 fn one_step_changes_weights() {
-    let mut tr = make_trainer(base_cfg("mlp", Optim::SpNgd));
+    let mut tr = make_trainer(base_builder("mlp", optim::spngd()));
     let before: Vec<f32> = tr.params.iter().flat_map(|p| p.data.clone()).collect();
     tr.step().unwrap();
     let after: Vec<f32> = tr.params.iter().flat_map(|p| p.data.clone()).collect();
@@ -81,27 +62,25 @@ fn one_step_changes_weights() {
 
 #[test]
 fn sgd_baseline_trains() {
-    let mut tr = make_trainer(base_cfg("mlp", Optim::Sgd));
+    let mut tr = make_trainer(base_builder("mlp", optim::sgd()));
     let first = tr.step().unwrap().loss;
     let mut last = first;
     for _ in 0..24 {
         last = tr.step().unwrap().loss;
     }
     assert!(last < first, "sgd loss should drop: {first} -> {last}");
-    // SGD moves zero statistics bytes
+    // SGD moves zero statistics bytes and plans zero refreshes
     assert_eq!(tr.comm().stats().stats_total(), 0);
+    assert_eq!(tr.log.records[0].total_stats, 0);
 }
 
 #[test]
 fn stale_scheduler_reduces_refreshes() {
-    let mut cfg = base_cfg("mlp", Optim::SpNgd);
-    cfg.stale = true;
     // small per-step statistics batches fluctuate strongly (the paper's
     // own observation); grad accumulation stabilizes them enough for the
     // scheduler to start stretching intervals within the test budget.
-    cfg.grad_accum = 4;
-    cfg.stale_alpha = 0.3;
-    let mut tr = make_trainer(cfg);
+    let opt = Arc::new(SpNgd { stale: true, stale_alpha: 0.3, ..SpNgd::default() });
+    let mut tr = make_trainer(base_builder("mlp", opt).grad_accum(4));
     let mut refreshed = 0usize;
     let mut total = 0usize;
     for _ in 0..30 {
@@ -123,11 +102,8 @@ fn convnet_all_modes_one_step() {
         (Fisher::Emp, BnMode::Full),
         (Fisher::OneMc, BnMode::Unit),
     ] {
-        let mut cfg = base_cfg("convnet_tiny", Optim::SpNgd);
-        cfg.fisher = fisher;
-        cfg.bn_mode = bn;
-        cfg.workers = 2;
-        let mut tr = make_trainer(cfg);
+        let opt = Arc::new(SpNgd { fisher, bn_mode: bn, ..SpNgd::default() });
+        let mut tr = make_trainer(base_builder("convnet_tiny", opt));
         let rec = tr.step().unwrap();
         assert!(rec.loss.is_finite(), "{fisher:?}/{bn:?}");
         assert!(rec.comm.stats_total() > 0);
@@ -137,7 +113,7 @@ fn convnet_all_modes_one_step() {
 
 #[test]
 fn convnet_small_spngd_step_runs() {
-    let mut tr = make_trainer(base_cfg("convnet_small", Optim::SpNgd));
+    let mut tr = make_trainer(base_builder("convnet_small", optim::spngd()));
     let rec = tr.step().unwrap();
     assert!(rec.loss.is_finite());
     assert_eq!(rec.refreshed, rec.total_stats);
@@ -147,10 +123,9 @@ fn convnet_small_spngd_step_runs() {
 
 #[test]
 fn grad_accumulation_mimics_larger_batch() {
-    let mut cfg = base_cfg("mlp", Optim::SpNgd);
-    cfg.grad_accum = 4;
-    assert_eq!(cfg.effective_batch(32), 2 * 4 * 32);
-    let mut tr = make_trainer(cfg);
+    let b = base_builder("mlp", optim::spngd()).grad_accum(4);
+    let mut tr = make_trainer(b);
+    assert_eq!(tr.cfg.effective_batch(32), 2 * 4 * 32);
     let rec = tr.step().unwrap();
     assert!(rec.loss.is_finite());
     let rec2 = tr.step().unwrap();
@@ -159,7 +134,7 @@ fn grad_accumulation_mimics_larger_batch() {
 
 #[test]
 fn evaluation_reports_sane_accuracy() {
-    let mut tr = make_trainer(base_cfg("mlp", Optim::SpNgd));
+    let mut tr = make_trainer(base_builder("mlp", optim::spngd()));
     let (l0, a0) = tr.evaluate(4).unwrap();
     assert!(l0 > 0.0 && (0.0..=1.0).contains(&a0));
     for _ in 0..30 {
@@ -172,7 +147,7 @@ fn evaluation_reports_sane_accuracy() {
 
 #[test]
 fn profile_has_all_components() {
-    let mut tr = make_trainer(base_cfg("mlp", Optim::SpNgd));
+    let mut tr = make_trainer(base_builder("mlp", optim::spngd()));
     for _ in 0..3 {
         tr.step().unwrap();
     }
@@ -187,11 +162,8 @@ fn profile_has_all_components() {
 
 #[test]
 fn fp16_comm_halves_statistics_bytes() {
-    let cfg32 = base_cfg("mlp", Optim::SpNgd);
-    let mut cfg16 = base_cfg("mlp", Optim::SpNgd);
-    cfg16.fp16_comm = true;
-    let mut a = make_trainer(cfg32);
-    let mut b = make_trainer(cfg16);
+    let mut a = make_trainer(base_builder("mlp", optim::spngd()));
+    let mut b = make_trainer(base_builder("mlp", optim::spngd()).fp16_comm(true));
     let ra = a.step().unwrap();
     let rb = b.step().unwrap();
     assert!(
@@ -206,7 +178,7 @@ fn fp16_comm_halves_statistics_bytes() {
 
 #[test]
 fn layer_ownership_round_robin() {
-    let tr = make_trainer(base_cfg("convnet_small", Optim::SpNgd));
+    let tr = make_trainer(base_builder("convnet_small", optim::spngd()));
     let owners = tr.layer_owners();
     assert_eq!(owners.len(), 21);
     // round-robin across 2 workers
@@ -217,8 +189,8 @@ fn layer_ownership_round_robin() {
 
 #[test]
 fn deterministic_given_seed() {
-    let mut t1 = make_trainer(base_cfg("mlp", Optim::SpNgd));
-    let mut t2 = make_trainer(base_cfg("mlp", Optim::SpNgd));
+    let mut t1 = make_trainer(base_builder("mlp", optim::spngd()));
+    let mut t2 = make_trainer(base_builder("mlp", optim::spngd()));
     for _ in 0..3 {
         let r1 = t1.step().unwrap();
         let r2 = t2.step().unwrap();
