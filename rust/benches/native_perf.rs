@@ -10,15 +10,20 @@
 //! SPNGD_THREADS=4 cargo bench --bench native_perf    # pin the pool size
 //! ```
 //!
-//! JSON schema (`spngd-bench-native/2`): `{schema, model, threads, quick,
+//! JSON schema (`spngd-bench-native/3`): `{schema, model, threads, quick,
 //! step: {name, ns, naive_ns, speedup}, kernels: [{name, ns, naive_ns,
-//! speedup}, ...], workers: [...], optimizers: [{name, step_ns}, ...]}` —
-//! `ns` is the median per-iteration wall time of the parallel kernel,
-//! `naive_ns` the same measurement with
+//! speedup}, ...], workers: [...], optimizers: [{name, step_ns}, ...],
+//! data: [...]}` — `ns` is the median per-iteration wall time of the
+//! parallel kernel, `naive_ns` the same measurement with
 //! `linalg::set_reference_kernels(true)` routing every product to the
 //! pre-refactor naive loops, `speedup` their ratio. `optimizers` is the
 //! end-to-end trainer step time once per registered optimizer
 //! (spngd | sgd | lars), so optimizer-level perf is tracked per PR.
+//! `data` (new in /3) measures the input pipeline per prefetch mode:
+//! per-global-batch prep time (sampling + transforms), how long the
+//! trainer actually waited for it, and the fraction of prep hidden
+//! behind the step (`hidden_fraction` — 0 with prefetch off by
+//! construction, ideally → 1 with prefetch on).
 
 use spngd::coordinator::DistMode;
 use spngd::harness::{self, bench};
@@ -189,6 +194,41 @@ fn main() {
         ]));
     }
 
+    // ---- data pipeline: per-batch prep cost and how much of it the
+    // double-buffered prefetch hides behind the step (augment on so the
+    // transform chain is part of the measured prep, like a real run)
+    let mut data_entries: Vec<Json> = Vec::new();
+    for prefetch in [false, true] {
+        let mut tr = harness::builder("convnet_tiny", optim::spngd())
+            .expect("runtime")
+            .workers(2)
+            .augment(spngd::data::AugmentCfg::default())
+            .prefetch(prefetch)
+            .dataset_len(2048)
+            .data_seed(7)
+            .build()
+            .expect("data trainer");
+        let steps = if quick { 3 } else { 12 };
+        for _ in 0..steps {
+            tr.step().expect("data step");
+        }
+        let s = tr.data_stats();
+        let prep_ns = s.prep_per_batch() * 1e9;
+        let wait_ns = s.wait_per_batch() * 1e9;
+        println!(
+            "data prep (prefetch={prefetch}): {prep_ns:.0} ns/batch, waited {wait_ns:.0} ns \
+             ({:.0}% hidden)",
+            s.hidden_fraction() * 100.0
+        );
+        data_entries.push(obj(vec![
+            ("prefetch", Json::from(prefetch)),
+            ("source", Json::from(tr.loader().source().name())),
+            ("prep_ns_per_batch", Json::from(prep_ns)),
+            ("wait_ns_per_batch", Json::from(wait_ns)),
+            ("hidden_fraction", Json::from(s.hidden_fraction())),
+        ]));
+    }
+
     // ---- per-optimizer end-to-end step time (same model/shape for all,
     // resolved through the registry so new optimizers appear here free)
     let mut optim_entries: Vec<Json> = Vec::new();
@@ -211,7 +251,7 @@ fn main() {
     }
 
     let report = obj(vec![
-        ("schema", Json::from("spngd-bench-native/2")),
+        ("schema", Json::from("spngd-bench-native/3")),
         ("model", Json::from(model_name.clone())),
         ("threads", Json::from(threads)),
         ("quick", Json::from(quick)),
@@ -219,6 +259,7 @@ fn main() {
         ("kernels", Json::Arr(entries.iter().map(Entry::json).collect())),
         ("workers", Json::Arr(dist_entries)),
         ("optimizers", Json::Arr(optim_entries)),
+        ("data", Json::Arr(data_entries)),
     ]);
     let out_path = parsed.get("out");
     std::fs::write(out_path, report.to_string_pretty()).expect("write bench report");

@@ -7,7 +7,7 @@ use spngd::util::rng::Rng;
 
 fn main() -> Result<()> {
     let (manifest, engine) = harness::load_runtime()?;
-    let model = manifest.model("convnet_small")?;
+    let model = manifest.model(&harness::env_model("convnet_small")?)?;
     let params = manifest.load_init_params(model)?;
     let mut rng = Rng::new(1);
     let n_in: usize = model.input_shape.iter().product();

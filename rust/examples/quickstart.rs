@@ -23,13 +23,14 @@ fn main() -> Result<()> {
     // §4.3) so the quickstart uses a looser similarity threshold +
     // accumulation.
     let opt = Arc::new(SpNgd { stale: true, stale_alpha: 0.3, ..SpNgd::default() });
-    let mut trainer = harness::builder("mlp", opt)?
+    let model = harness::env_model("mlp")?;
+    let mut trainer = harness::builder(&model, opt)?
         .workers(2)
         .grad_accum(2)
         .dataset_len(4096)
         .data_seed(7)
         .build()?;
-    println!("SP-NGD quickstart: mlp on the synthetic corpus");
+    println!("SP-NGD quickstart: {model} on the synthetic corpus");
     for i in 1..=60 {
         let rec = trainer.step()?;
         if i % 10 == 0 || i <= 2 {

@@ -13,8 +13,9 @@ use spngd::optim::{Fisher, SpNgd};
 use spngd::simulator;
 
 fn main() -> Result<()> {
+    let model = harness::env_model("convnet_small")?;
     // --- measure the emp+unitBN base profile on real steps
-    let mut tr = harness::builder("convnet_small", Arc::new(SpNgd::default()))?
+    let mut tr = harness::builder(&model, Arc::new(SpNgd::default()))?
         .workers(2)
         .dataset_len(4096)
         .data_seed(7)
@@ -26,7 +27,7 @@ fn main() -> Result<()> {
 
     // --- measure the 1mc extra-backward delta on real steps
     let opt1 = Arc::new(SpNgd { fisher: Fisher::OneMc, ..SpNgd::default() });
-    let mut tr1 = harness::builder("convnet_small", opt1)?
+    let mut tr1 = harness::builder(&model, opt1)?
         .workers(2)
         .dataset_len(4096)
         .data_seed(7)
@@ -40,7 +41,7 @@ fn main() -> Result<()> {
 
     // --- measure the stale refresh fraction on a longer stale run
     let opt_s = Arc::new(SpNgd { stale: true, ..SpNgd::default() });
-    let mut tr_s = harness::builder("convnet_small", opt_s)?
+    let mut tr_s = harness::builder(&model, opt_s)?
         .workers(2)
         .grad_accum(2)
         .dataset_len(4096)

@@ -39,7 +39,8 @@ fn run(
 ) -> Result<Outcome> {
     // steps-per-epoch for the schedule: corpus 8192 / eff-batch 64 = 128
     let dataset_len = 8192;
-    let mut trainer: Trainer = harness::builder("convnet_small", optimizer)?
+    let model = harness::env_model("convnet_small")?;
+    let mut trainer: Trainer = harness::builder(&model, optimizer)?
         .workers(2)
         .augment(AugmentCfg {
             alpha_mixup: 0.2,

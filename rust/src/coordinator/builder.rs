@@ -1,9 +1,11 @@
 //! [`TrainerBuilder`] — composes a model, a [`Preconditioner`], an
-//! [`UpdateRule`], a [`SchedulePolicy`] and a dist engine into a
-//! [`Trainer`]. This replaces raw `TrainerCfg` construction: execution
-//! shape (workers, accumulation, dist mode, augment, seed) stays in the
-//! slim [`TrainerCfg`], while everything optimizer-flavored lives behind
-//! the optim traits.
+//! [`UpdateRule`], a [`SchedulePolicy`], a data pipeline (a registered
+//! [`DataSource`] + per-lane [`TransformChain`]s behind a prefetching
+//! [`Loader`]) and a dist engine into a [`Trainer`]. This replaces raw
+//! `TrainerCfg` construction: execution shape (workers, accumulation,
+//! dist mode, seed) stays in the slim [`TrainerCfg`], while everything
+//! optimizer-flavored lives behind the optim traits and everything
+//! data-flavored behind the data traits.
 //!
 //! ```no_run
 //! # fn main() -> anyhow::Result<()> {
@@ -19,16 +21,22 @@
 //! # }
 //! ```
 
+use std::path::PathBuf;
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::coordinator::trainer::{DistMode, Trainer, TrainerCfg};
-use crate::data::{AugmentCfg, SynthDataset};
+use crate::data::{self, AugmentCfg, DataSource, Downsample, Loader, TransformChain};
 use crate::optim::{
     HyperParams, MomentumRule, Preconditioner, Schedule, SchedulePolicy, UpdateRule,
 };
 use crate::runtime::{native, Executor, Manifest};
+
+/// Per-lane chain customization hook: receives the lane index and the
+/// standard chain (geometry fit + configured augmentations) and returns
+/// the chain that lane will run.
+type TransformHook = Box<dyn Fn(usize, TransformChain) -> TransformChain>;
 
 pub struct TrainerBuilder {
     model: String,
@@ -46,7 +54,11 @@ pub struct TrainerBuilder {
     schedule: Option<Arc<dyn SchedulePolicy>>,
     hyperparams: Option<HyperParams>,
     steps_per_epoch: usize,
-    dataset: Option<SynthDataset>,
+    data: Option<String>,
+    data_path: Option<PathBuf>,
+    source: Option<Arc<dyn DataSource>>,
+    transforms: Option<TransformHook>,
+    prefetch: Option<bool>,
     dataset_len: usize,
     data_seed: u64,
     runtime: Option<(Arc<Manifest>, Arc<dyn Executor>)>,
@@ -56,7 +68,8 @@ impl TrainerBuilder {
     /// A builder with the stock composition: SP-NGD (emp Fisher, unitBN,
     /// no stale scheduler), [`MomentumRule`] with a 0.3 trust-ratio clip,
     /// the optimizer's default polynomial schedule, 2 sequential workers,
-    /// and the hermetic native runtime over a synthetic dataset.
+    /// and the hermetic native runtime over the `synth` data source with
+    /// prefetch on.
     pub fn new(model: &str) -> Self {
         TrainerBuilder {
             model: model.to_string(),
@@ -74,7 +87,11 @@ impl TrainerBuilder {
             schedule: None,
             hyperparams: None,
             steps_per_epoch: 64,
-            dataset: None,
+            data: None,
+            data_path: None,
+            source: None,
+            transforms: None,
+            prefetch: None,
             dataset_len: 4000,
             data_seed: 42,
             runtime: None,
@@ -184,9 +201,42 @@ impl TrainerBuilder {
         self
     }
 
-    /// An explicit dataset (overrides dataset_len/data_seed).
-    pub fn dataset(mut self, dataset: SynthDataset) -> Self {
-        self.dataset = Some(dataset);
+    /// A data source by registry name (`synth` | `tensor` | `cifar10`,
+    /// see [`data::by_name`]; default `synth`). Unknown names are a hard
+    /// error at `build`.
+    pub fn data(mut self, name: &str) -> Self {
+        self.data = Some(name.to_string());
+        self
+    }
+
+    /// Backing file for disk sources (`--data-path` / `SPNGD_DATA_PATH`).
+    pub fn data_path<P: Into<PathBuf>>(mut self, path: P) -> Self {
+        self.data_path = Some(path.into());
+        self
+    }
+
+    /// An explicit [`DataSource`] (overrides `data`/`data_path`/
+    /// `dataset_len`/`data_seed`).
+    pub fn source(mut self, source: Arc<dyn DataSource>) -> Self {
+        self.source = Some(source);
+        self
+    }
+
+    /// Customize the per-lane transform chain: the hook receives each
+    /// lane's standard chain (geometry fit + the configured
+    /// [`augment`](Self::augment) stages) and returns the chain to use.
+    pub fn transforms<F>(mut self, hook: F) -> Self
+    where
+        F: Fn(usize, TransformChain) -> TransformChain + 'static,
+    {
+        self.transforms = Some(Box::new(hook));
+        self
+    }
+
+    /// Double-buffered batch prefetch on the process pool (default: on,
+    /// or `SPNGD_PREFETCH`). Bitwise-neutral — only scheduling changes.
+    pub fn prefetch(mut self, on: bool) -> Self {
+        self.prefetch = Some(on);
         self
     }
 
@@ -219,23 +269,72 @@ impl TrainerBuilder {
             }
         };
         let m = manifest.model(&self.model)?;
-        let dataset = match self.dataset {
-            Some(d) => d,
-            None => {
-                let (c, h, w) = (m.input_shape[1], m.input_shape[2], m.input_shape[3]);
-                SynthDataset::new(m.num_classes, c, h, w, self.dataset_len, self.data_seed)
-            }
+        let (mc, mh, mw) = (m.input_shape[1], m.input_shape[2], m.input_shape[3]);
+        let source: Arc<dyn DataSource> = match self.source {
+            Some(s) => s,
+            None => data::by_name(
+                self.data.as_deref().unwrap_or("synth"),
+                &data::SourceParams {
+                    classes: m.num_classes,
+                    channels: mc,
+                    h: mh,
+                    w: mw,
+                    len: self.dataset_len,
+                    seed: self.data_seed,
+                    path: self.data_path.clone(),
+                },
+            )?,
         };
+
+        // geometry fit: identical grids pass through; an integer-multiple
+        // grid (e.g. CIFAR-10's 32×32 onto a 16×16 model) gets an
+        // average-pool Downsample prepended to every lane chain
+        let spec = source.spec();
+        let fit: Option<usize> = if spec.shape() == (mc, mh, mw) {
+            None
+        } else if spec.channels == mc
+            && mh > 0
+            && mw > 0
+            && spec.h % mh == 0
+            && spec.w % mw == 0
+            && spec.h / mh == spec.w / mw
+        {
+            Some(spec.h / mh)
+        } else {
+            bail!(
+                "data source '{}' geometry {:?} does not fit model input {:?} \
+                 (needs equal grids or an integer common downsample factor)",
+                source.name(),
+                spec.shape(),
+                (mc, mh, mw),
+            )
+        };
+
+        let lanes = self.workers.max(1) * self.grad_accum.max(1);
+        let chains: Vec<TransformChain> = (0..lanes)
+            .map(|g| {
+                let mut chain = TransformChain::standard_for_lane(&self.augment, self.seed, g);
+                if let Some(k) = fit {
+                    chain.push_front(Box::new(Downsample::new(k)));
+                }
+                match &self.transforms {
+                    Some(hook) => hook(g, chain),
+                    None => chain,
+                }
+            })
+            .collect();
+        let prefetch = self.prefetch.unwrap_or_else(data::prefetch_from_env);
+        let loader = Loader::new(source, chains, m.batch, self.seed, prefetch)?;
+
         let cfg = TrainerCfg {
             model: self.model,
             workers: self.workers,
             grad_accum: self.grad_accum,
-            augment: self.augment,
             bn_momentum: self.bn_momentum,
             fp16_comm: self.fp16_comm,
             dist: self.dist,
             seed: self.seed,
         };
-        Trainer::new(manifest, engine, cfg, opt, rule, schedule, dataset)
+        Trainer::new(manifest, engine, cfg, opt, rule, schedule, loader)
     }
 }

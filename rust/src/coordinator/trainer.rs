@@ -34,7 +34,7 @@ use anyhow::{Context, Result};
 
 use crate::collectives::comm::{Collective, SimComm};
 use crate::collectives::cost::StepProfile;
-use crate::data::{Augment, AugmentCfg, Batch, SynthDataset};
+use crate::data::{Batch, IoStats, Loader};
 use crate::dist::{DistEngine, RingComm};
 use crate::linalg::Mat;
 use crate::metrics::{RunLog, StageTimes, StepRecord};
@@ -42,7 +42,6 @@ use crate::optim::{
     self, Fisher, LayerStateBox, ParamSlot, Preconditioner, SchedulePolicy, StatKind, UpdateRule,
 };
 use crate::runtime::{Executor, HostTensor, Manifest, ModelManifest};
-use crate::util::rng::Rng;
 
 /// How the data-parallel workers execute (§5, Alg. 3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -77,7 +76,6 @@ pub struct TrainerCfg {
     pub workers: usize,
     /// micro-steps accumulated per update (extreme-BS mimicry, §7.1)
     pub grad_accum: usize,
-    pub augment: AugmentCfg,
     /// BN running-stat EMA momentum
     pub bn_momentum: f32,
     /// half-precision (fp16) wire format for collectives (§5.2's
@@ -140,13 +138,9 @@ pub struct Trainer {
     velocity: Vec<HostTensor>,
     layers: Vec<LayerSlot>,
     bn_running: Vec<(HostTensor, HostTensor)>, // (mean, var) per bn_order
-    dataset: SynthDataset,
-    /// per-lane augmentation pipelines (lane-keyed so the augment stream
-    /// is invariant to the worker count)
-    augments: Vec<Augment>,
-    /// single data stream: batches are drawn in canonical lane order
-    data_rng: Rng,
-    val_rng: Rng,
+    /// the data pipeline: lane-canonical sharded batches with prefetch
+    /// (owns the data/validation RNG streams and per-lane transforms)
+    loader: Loader,
     step: u64,
     pub log: RunLog,
     // cumulative profile accumulators (full-refresh steps only)
@@ -167,22 +161,33 @@ impl Trainer {
         opt: Arc<dyn Preconditioner>,
         rule: Arc<dyn UpdateRule>,
         schedule: Arc<dyn SchedulePolicy>,
-        dataset: SynthDataset,
+        loader: Loader,
     ) -> Result<Trainer> {
         let model = manifest.model(&cfg.model)?.clone();
+        let (classes, (c, h, w)) = loader.out_spec();
         anyhow::ensure!(
-            model.input_shape[1..] == [dataset.channels, dataset.h, dataset.w],
-            "dataset dims {:?} do not match model input {:?}",
-            (dataset.channels, dataset.h, dataset.w),
+            model.input_shape[1..] == [c, h, w],
+            "data pipeline output {:?} does not match model input {:?} \
+             (source '{}' after transforms)",
+            (c, h, w),
             model.input_shape,
+            loader.source().name(),
+        );
+        anyhow::ensure!(
+            classes == model.num_classes,
+            "data source '{}' has {classes} classes, model '{}' expects {}",
+            loader.source().name(),
+            model.name,
+            model.num_classes,
+        );
+        let lanes = cfg.workers.max(1) * cfg.grad_accum.max(1);
+        anyhow::ensure!(
+            loader.lanes() == lanes,
+            "loader has {} lane chains, trainer shape needs {lanes} (workers × accum)",
+            loader.lanes(),
         );
         let params = manifest.load_init_params(&model)?;
         let velocity = params.iter().map(|p| HostTensor::zeros(p.shape.clone())).collect();
-        let mut rng = Rng::new(cfg.seed);
-        let lanes = cfg.workers.max(1) * cfg.grad_accum.max(1);
-        let augments = (0..lanes)
-            .map(|g| Augment::new(cfg.augment.clone(), cfg.seed ^ (g as u64) << 8))
-            .collect();
         let layers = model
             .kfac_layers
             .iter()
@@ -217,8 +222,6 @@ impl Trainer {
         };
         let fisher = opt.fisher();
         Ok(Trainer {
-            data_rng: rng.fork(0xDA7A),
-            val_rng: rng.fork(0xEA1),
             cfg,
             model,
             engine,
@@ -232,8 +235,7 @@ impl Trainer {
             velocity,
             layers,
             bn_running,
-            dataset,
-            augments,
+            loader,
             step: 0,
             log: RunLog::default(),
             prof_exec_samples: Vec::new(),
@@ -256,6 +258,17 @@ impl Trainer {
     /// The composed lr/momentum policy.
     pub fn schedule(&self) -> &dyn SchedulePolicy {
         self.schedule.as_ref()
+    }
+
+    /// The composed data pipeline (source + transforms + prefetch).
+    pub fn loader(&self) -> &Loader {
+        &self.loader
+    }
+
+    /// Cumulative data-path timing: per-batch prep cost and how much of
+    /// it prefetch hid behind compute.
+    pub fn data_stats(&self) -> IoStats {
+        self.loader.io_stats()
     }
 
     /// The active communicator's byte accounting (SimComm sequentially,
@@ -301,19 +314,15 @@ impl Trainer {
             }
         }
 
-        // ------------------- draw the global batch (canonical lane order)
+        // ---- the global batch, canonical lane order (usually prefetched
+        // while the previous step computed — the loader's overlap)
         let seeds: Vec<Option<u32>> = (0..lanes_n)
             .map(|g| match self.fisher {
                 Fisher::OneMc => Some(((t as u32) << 8) ^ (g as u32).wrapping_mul(0x9E37)),
                 Fisher::Emp => None,
             })
             .collect();
-        let batches: Vec<Batch> = (0..lanes_n)
-            .map(|g| {
-                let b = self.dataset.batch(self.model.batch, &mut self.data_rng);
-                self.augments[g].apply(b)
-            })
-            .collect();
+        let batches: Vec<Batch> = self.loader.next()?;
         let exe = self.step_exe().to_string();
         let lr = self.schedule.lr(t) as f32;
         let mom = self.schedule.momentum(t) as f32;
@@ -679,7 +688,7 @@ impl Trainer {
         let mut correct = 0.0f64;
         let mut total = 0.0f64;
         for _ in 0..batches {
-            let b = self.dataset.val_batch(self.model.batch, &mut self.val_rng);
+            let b = self.loader.val_batch();
             let mut inputs: Vec<&HostTensor> = self.params.iter().collect();
             inputs.push(&b.x);
             inputs.push(&b.t);

@@ -1,0 +1,146 @@
+//! Disk-backed CIFAR-10-binary-format reader — the repo's first
+//! real-file workload.
+//!
+//! Format (the canonical `data_batch_*.bin` layout): a flat stream of
+//! fixed-size records, each `1 + 3*32*32` bytes — one label byte
+//! (`0..=9`) followed by the red, green and blue planes row-major. The
+//! whole file is loaded into memory at `open` (a full CIFAR-10 batch file
+//! is ~30 MB); decoding to f32 happens per sample, on the loader's prep
+//! path, so it lands in the prefetch overlap window like every other
+//! per-sample cost.
+//!
+//! Pixels are mapped `byte/127.5 - 1` into `[-1, 1]` (zero-centered, the
+//! same scale regime as the synthetic corpus). 32×32 sources train
+//! smaller models through the loader's automatic average-pool
+//! downsampling (see `data::Loader`).
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::data::source::{DataSource, DataSpec};
+use crate::util::rng::Rng;
+
+pub const CIFAR_CLASSES: usize = 10;
+pub const CIFAR_CHANNELS: usize = 3;
+pub const CIFAR_DIM: usize = 32;
+/// Bytes per record: 1 label byte + the 3×32×32 image.
+pub const CIFAR_RECORD: usize = 1 + CIFAR_CHANNELS * CIFAR_DIM * CIFAR_DIM;
+
+pub struct CifarBin {
+    /// raw records, validated at load
+    data: Vec<u8>,
+    n: usize,
+}
+
+impl CifarBin {
+    /// Load a CIFAR-10 binary file. Fails on truncated files, empty
+    /// files, or out-of-range label bytes.
+    pub fn open(path: &Path) -> Result<Self> {
+        let data = std::fs::read(path)
+            .with_context(|| format!("reading CIFAR-10 binary file {}", path.display()))?;
+        Self::from_bytes(data).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// Parse an in-memory CIFAR-10 binary image (the `open` body, split
+    /// for round-trip tests).
+    pub fn from_bytes(data: Vec<u8>) -> Result<Self> {
+        ensure!(!data.is_empty(), "CIFAR-10 file is empty");
+        if data.len() % CIFAR_RECORD != 0 {
+            bail!(
+                "CIFAR-10 file is {} bytes — not a multiple of the {CIFAR_RECORD}-byte record",
+                data.len()
+            );
+        }
+        let n = data.len() / CIFAR_RECORD;
+        for i in 0..n {
+            let label = data[i * CIFAR_RECORD];
+            ensure!(
+                (label as usize) < CIFAR_CLASSES,
+                "record {i}: label byte {label} out of range (0..{CIFAR_CLASSES})"
+            );
+        }
+        Ok(CifarBin { data, n })
+    }
+
+    /// Serialize `(label, pixels)` records into the binary format — the
+    /// inverse of [`CifarBin::from_bytes`], used to build fixtures and in
+    /// the round-trip test.
+    pub fn write_records(path: &Path, records: &[(u8, Vec<u8>)]) -> Result<()> {
+        let mut out = Vec::with_capacity(records.len() * CIFAR_RECORD);
+        for (i, (label, px)) in records.iter().enumerate() {
+            ensure!((*label as usize) < CIFAR_CLASSES, "record {i}: label {label} out of range");
+            ensure!(
+                px.len() == CIFAR_RECORD - 1,
+                "record {i}: {} pixel bytes, expected {}",
+                px.len(),
+                CIFAR_RECORD - 1
+            );
+            out.push(*label);
+            out.extend_from_slice(px);
+        }
+        std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Decode one record's raw bytes (label, pixel plane) — for tests.
+    pub fn record_bytes(&self, index: usize) -> (u8, &[u8]) {
+        let off = (index % self.n) * CIFAR_RECORD;
+        (self.data[off], &self.data[off + 1..off + CIFAR_RECORD])
+    }
+}
+
+impl DataSource for CifarBin {
+    fn name(&self) -> &'static str {
+        "cifar10"
+    }
+
+    fn spec(&self) -> DataSpec {
+        DataSpec {
+            classes: CIFAR_CLASSES,
+            channels: CIFAR_CHANNELS,
+            h: CIFAR_DIM,
+            w: CIFAR_DIM,
+            len: self.n,
+        }
+    }
+
+    fn sample(&self, index: usize, _rng: &mut Rng) -> (Vec<f32>, usize) {
+        let (label, px) = self.record_bytes(index);
+        let img = px.iter().map(|&b| b as f32 / 127.5 - 1.0).collect();
+        (img, label as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_malformed_files() {
+        assert!(CifarBin::from_bytes(vec![]).is_err());
+        assert!(CifarBin::from_bytes(vec![0u8; CIFAR_RECORD - 1]).is_err());
+        let mut bad_label = vec![0u8; CIFAR_RECORD];
+        bad_label[0] = 10;
+        assert!(CifarBin::from_bytes(bad_label).is_err());
+    }
+
+    #[test]
+    fn decodes_labels_and_normalizes_pixels() {
+        let mut rec = vec![0u8; CIFAR_RECORD * 2];
+        rec[0] = 3;
+        rec[1] = 255; // first red pixel of record 0
+        rec[CIFAR_RECORD] = 7;
+        let d = CifarBin::from_bytes(rec).unwrap();
+        assert_eq!(d.spec().len, 2);
+        let mut rng = Rng::new(0);
+        let (img, label) = d.sample(0, &mut rng);
+        assert_eq!(label, 3);
+        assert!((img[0] - 1.0).abs() < 1e-6);
+        assert!((img[1] + 1.0).abs() < 1e-6);
+        let (_, label1) = d.sample(1, &mut rng);
+        assert_eq!(label1, 7);
+        // index wraps modulo len
+        let (_, label2) = d.sample(2, &mut rng);
+        assert_eq!(label2, 3);
+    }
+}

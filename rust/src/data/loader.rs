@@ -1,0 +1,362 @@
+//! The [`Loader`]: lane-canonical batch materialization with pool-driven
+//! double-buffered prefetch.
+//!
+//! ## Sharding
+//!
+//! The loader owns the global-lane order the trainer used to open-code:
+//! one data RNG (forked `0xDA7A` off the trainer seed, exactly as
+//! before), batches drawn for lanes `g = 0..W·M` in order (`g = m·W + w`,
+//! micro-step major), each lane's batch then run through that lane's
+//! [`TransformChain`]. Because the stream is single and lane-keyed, the
+//! synthesized global batch is bit-identical across worker counts at a
+//! fixed lane total, and identical between the sequential and threaded
+//! dist engines — the properties `tests/dist_engine.rs` asserts.
+//!
+//! ## Prefetch
+//!
+//! With prefetch on (the default; `SPNGD_PREFETCH=0` or
+//! `TrainerBuilder::prefetch(false)` disables), [`Loader::next`] returns
+//! the ready buffer and immediately submits materialization of the *next*
+//! global batch to the process-wide [`pool`](crate::util::pool) — the
+//! paper's "Data I/O" overlap alongside Alg. 3's comm/compute overlap:
+//! step `t+1`'s sampling + transforms run while step `t` computes. The
+//! jobs are strictly serialized (one in flight, double-buffered), so the
+//! RNG/transform state advances in exactly the same order as the inline
+//! path and the produced batches are **bitwise identical** with prefetch
+//! on or off — asserted by `tests/data_pipeline.rs`.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::data::source::{draw_batch, Batch, DataSource, DataSpec};
+use crate::data::transform::TransformChain;
+use crate::util::pool;
+use crate::util::rng::Rng;
+
+/// `SPNGD_PREFETCH` knob: `0 | off | false` disables, anything else (or
+/// unset) keeps the default double-buffered prefetch.
+pub fn prefetch_from_env() -> bool {
+    match std::env::var("SPNGD_PREFETCH") {
+        Ok(v) => !matches!(v.trim(), "0" | "off" | "false"),
+        Err(_) => true,
+    }
+}
+
+/// Cumulative data-path timing: how much batch prep cost, and how much of
+/// it the trainer actually waited for (the rest ran hidden behind
+/// compute). With prefetch on, `prepped` can exceed `batches` by the one
+/// in-flight buffer — compare the per-batch means, not the raw sums.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IoStats {
+    /// global batches handed to the trainer
+    pub batches: u64,
+    /// global batches materialized (includes an in-flight prefetch)
+    pub prepped: u64,
+    /// seconds spent materializing (sampling + transforms), wherever run
+    pub prep_seconds: f64,
+    /// seconds `next()` blocked the trainer (inline prep or prefetch wait)
+    pub wait_seconds: f64,
+}
+
+impl IoStats {
+    /// Mean materialization seconds per global batch.
+    pub fn prep_per_batch(&self) -> f64 {
+        if self.prepped == 0 {
+            0.0
+        } else {
+            self.prep_seconds / self.prepped as f64
+        }
+    }
+
+    /// Mean seconds the trainer blocked per consumed global batch.
+    pub fn wait_per_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.wait_seconds / self.batches as f64
+        }
+    }
+
+    /// Fraction of prep time hidden behind the step (0 with prefetch
+    /// off — the trainer waits for all of it).
+    pub fn hidden_fraction(&self) -> f64 {
+        let prep = self.prep_per_batch();
+        if prep <= 0.0 {
+            return 0.0;
+        }
+        (1.0 - self.wait_per_batch() / prep).clamp(0.0, 1.0)
+    }
+}
+
+/// Train-stream state a prefetch job needs: the per-lane chains and the
+/// single data RNG, plus prep accounting. Behind one mutex so a job and
+/// the loader never race; jobs are serialized (double buffering) so the
+/// lock is uncontended.
+struct TrainState {
+    chains: Vec<TransformChain>,
+    rng: Rng,
+    prep_seconds: f64,
+    /// global batches materialized (prefetch included)
+    prepped: u64,
+}
+
+/// Single-slot handoff between a prefetch job and `next()`.
+struct Slot {
+    full: Mutex<Option<Result<Vec<Batch>, ()>>>,
+    cv: Condvar,
+}
+
+impl Slot {
+    fn new() -> Self {
+        Slot { full: Mutex::new(None), cv: Condvar::new() }
+    }
+
+    fn put(&self, v: Result<Vec<Batch>, ()>) {
+        *self.full.lock().unwrap() = Some(v);
+        self.cv.notify_all();
+    }
+
+    fn take(&self) -> Result<Vec<Batch>, ()> {
+        let mut g = self.full.lock().unwrap();
+        loop {
+            if let Some(v) = g.take() {
+                return v;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+pub struct Loader {
+    source: Arc<dyn DataSource>,
+    /// per-lane (= per-worker-micro-step) batch size
+    batch: usize,
+    lanes: usize,
+    out_shape: (usize, usize, usize),
+    prefetch: bool,
+    state: Arc<Mutex<TrainState>>,
+    val_rng: Rng,
+    pending: Option<Arc<Slot>>,
+    /// sticky failure: a prefetch job panicked, so the RNG/transform
+    /// state is partially advanced and the stream can never be trusted
+    /// again — every further `next()` fails
+    poisoned: bool,
+    wait_seconds: f64,
+    batches: u64,
+}
+
+impl Loader {
+    /// `seed` is the trainer seed; the data/validation RNG forks are
+    /// derived exactly as the pre-refactor trainer did, so `synth` runs
+    /// are bit-identical to the old inline path. `chains` must hold one
+    /// transform chain per global lane, and every chain must map the
+    /// source geometry to the same output geometry.
+    pub fn new(
+        source: Arc<dyn DataSource>,
+        chains: Vec<TransformChain>,
+        batch: usize,
+        seed: u64,
+        prefetch: bool,
+    ) -> Result<Loader> {
+        ensure!(!chains.is_empty(), "loader needs at least one lane chain");
+        let spec = source.spec();
+        ensure!(spec.len > 0, "data source '{}' is empty", source.name());
+        let out_shape = chains[0].out_shape(spec.shape());
+        for (g, c) in chains.iter().enumerate() {
+            ensure!(
+                c.out_shape(spec.shape()) == out_shape,
+                "lane {g}'s transform chain maps to a different geometry"
+            );
+        }
+        let lanes = chains.len();
+        let mut rng = Rng::new(seed);
+        let data_rng = rng.fork(0xDA7A);
+        let val_rng = rng.fork(0xEA1);
+        Ok(Loader {
+            source,
+            batch,
+            lanes,
+            out_shape,
+            prefetch,
+            state: Arc::new(Mutex::new(TrainState {
+                chains,
+                rng: data_rng,
+                prep_seconds: 0.0,
+                prepped: 0,
+            })),
+            val_rng,
+            pending: None,
+            poisoned: false,
+            wait_seconds: 0.0,
+            batches: 0,
+        })
+    }
+
+    pub fn source(&self) -> &dyn DataSource {
+        self.source.as_ref()
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    pub fn prefetch_enabled(&self) -> bool {
+        self.prefetch
+    }
+
+    /// Post-transform geometry: `(classes, (C, H, W))` the model sees.
+    pub fn out_spec(&self) -> (usize, (usize, usize, usize)) {
+        (self.source.spec().classes, self.out_shape)
+    }
+
+    /// The next global batch, one `Batch` per lane in canonical order.
+    /// With prefetch on this usually returns a buffer prepared while the
+    /// previous step computed, and immediately schedules the next one.
+    pub fn next(&mut self) -> Result<Vec<Batch>> {
+        ensure!(
+            !self.poisoned,
+            "data pipeline poisoned by an earlier prefetch panic — rebuild the trainer"
+        );
+        let t0 = Instant::now();
+        let cur = match self.pending.take() {
+            Some(slot) => match slot.take() {
+                Ok(b) => b,
+                Err(()) => {
+                    // the job died mid-materialize: the RNG/transform state
+                    // is partially advanced, so the stream is unrecoverable
+                    self.poisoned = true;
+                    return Err(anyhow!("data prefetch job panicked — pipeline state is lost"));
+                }
+            },
+            None => {
+                let mut st = self.state.lock().unwrap();
+                materialize(self.source.as_ref(), &mut st, self.batch, self.lanes)
+            }
+        };
+        self.wait_seconds += t0.elapsed().as_secs_f64();
+        self.batches += 1;
+        if self.prefetch {
+            self.spawn_prefetch();
+        }
+        Ok(cur)
+    }
+
+    /// A held-out batch (validation stream: own RNG fork, no transforms).
+    pub fn val_batch(&mut self) -> Batch {
+        draw_batch(self.source.as_ref(), self.batch, &mut self.val_rng)
+    }
+
+    pub fn io_stats(&self) -> IoStats {
+        let st = self.state.lock().unwrap();
+        IoStats {
+            batches: self.batches,
+            prepped: st.prepped,
+            prep_seconds: st.prep_seconds,
+            wait_seconds: self.wait_seconds,
+        }
+    }
+
+    fn spawn_prefetch(&mut self) {
+        let slot = Arc::new(Slot::new());
+        let job_slot = slot.clone();
+        let source = self.source.clone();
+        let state = self.state.clone();
+        let (batch, lanes) = (self.batch, self.lanes);
+        pool::global().submit(move || {
+            // tolerate a poisoned mutex (a previous panic already surfaced
+            // as Err through the slot) and convert panics into an Err the
+            // consumer can report — never leave `take()` waiting forever
+            let mut st = state.lock().unwrap_or_else(|p| p.into_inner());
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                materialize(source.as_ref(), &mut st, batch, lanes)
+            }));
+            job_slot.put(r.map_err(|_| ()));
+        });
+        self.pending = Some(slot);
+    }
+}
+
+/// Materialize one global batch: draw + transform every lane in canonical
+/// order from the single data stream. Runs inline (prefetch off) or on a
+/// pool worker (prefetch on) — same math, same state, bitwise-identical
+/// output either way.
+fn materialize(
+    source: &dyn DataSource,
+    st: &mut TrainState,
+    batch: usize,
+    lanes: usize,
+) -> Vec<Batch> {
+    let t0 = Instant::now();
+    let out = (0..lanes)
+        .map(|g| {
+            let raw = draw_batch(source, batch, &mut st.rng);
+            st.chains[g].apply(raw)
+        })
+        .collect();
+    st.prep_seconds += t0.elapsed().as_secs_f64();
+    st.prepped += 1;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::transform::{lane_chain_seed, AugmentCfg};
+    use crate::data::SynthDataset;
+
+    fn mk_loader(lanes: usize, prefetch: bool) -> Loader {
+        let src = Arc::new(SynthDataset::new(4, 1, 4, 4, 128, 11));
+        let chains = (0..lanes)
+            .map(|g| TransformChain::standard(&AugmentCfg::default(), 7 ^ ((g as u64) << 8)))
+            .collect();
+        Loader::new(src, chains, 4, 7, prefetch).unwrap()
+    }
+
+    #[test]
+    fn prefetch_stream_is_bitwise_identical_to_inline() {
+        let mut a = mk_loader(3, false);
+        let mut b = mk_loader(3, true);
+        for step in 0..5 {
+            let ba = a.next().unwrap();
+            let bb = b.next().unwrap();
+            assert_eq!(ba.len(), 3);
+            for (la, lb) in ba.iter().zip(bb.iter()) {
+                assert_eq!(la.x.data, lb.x.data, "x diverged at step {step}");
+                assert_eq!(la.t.data, lb.t.data, "t diverged at step {step}");
+            }
+        }
+        // and the validation stream is unaffected by the train prefetch
+        assert_eq!(a.val_batch().x.data, b.val_batch().x.data);
+    }
+
+    #[test]
+    fn io_stats_accumulate_and_hidden_fraction_bounded() {
+        let mut l = mk_loader(2, true);
+        for _ in 0..4 {
+            l.next().unwrap();
+        }
+        let s = l.io_stats();
+        assert_eq!(s.batches, 4);
+        assert!(s.prep_seconds > 0.0);
+        assert!((0.0..=1.0).contains(&s.hidden_fraction()));
+    }
+
+    #[test]
+    fn mismatched_lane_geometry_is_rejected() {
+        let src = Arc::new(SynthDataset::new(4, 1, 8, 8, 64, 1));
+        let c0 = TransformChain::new(1);
+        let mut c1 = TransformChain::new(2);
+        c1.push(Box::new(crate::data::transform::Downsample::new(2)));
+        assert!(Loader::new(src, vec![c0, c1], 4, 7, false).is_err());
+    }
+
+    #[test]
+    fn lane_seed_formula_is_stable() {
+        // the derivation the builder relies on for bit-parity with the
+        // pre-refactor per-lane Augment seeding
+        assert_eq!(lane_chain_seed(7, 0), 7 ^ 0xA06_3E27);
+        assert_eq!(lane_chain_seed(7, 2), (7u64 ^ (2 << 8)) ^ 0xA06_3E27);
+    }
+}

@@ -1,8 +1,127 @@
-//! Data substrate: synthetic ImageNet-stand-in corpus + the augmentation
-//! pipeline (§6.1 — running mixup, zero-valued random erasing).
+//! The data axis as a first-class API — the input-pipeline counterpart
+//! of the composable optimizer API in [`crate::optim`]:
+//!
+//! - [`DataSource`] — deterministic, sample-addressable corpora
+//!   ([`SynthDataset`], [`TensorDataset`], [`CifarBin`]), resolved by
+//!   registry name through [`by_name`] (CLI `--data`, harness
+//!   `SPNGD_DATA`);
+//! - [`Transform`] / [`TransformChain`] — composable per-lane batch
+//!   transforms (running mixup, random erasing, downsampling) replacing
+//!   the old fixed `Augment` struct;
+//! - [`Loader`] — lane-canonical sharded batch materialization with
+//!   pool-driven double-buffered prefetch (§5's "Data I/O" overlap).
 
-pub mod augment;
+pub mod cifar;
+pub mod loader;
+pub mod source;
 pub mod synth;
+pub mod tensor;
+pub mod transform;
 
-pub use augment::{Augment, AugmentCfg};
-pub use synth::{Batch, SynthDataset};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+pub use cifar::CifarBin;
+pub use loader::{prefetch_from_env, IoStats, Loader};
+pub use source::{draw_batch, Batch, DataSource, DataSpec};
+pub use synth::SynthDataset;
+pub use tensor::TensorDataset;
+pub use transform::{
+    lane_chain_seed, AugmentCfg, Downsample, RandomErase, RunningMixup, Transform, TransformChain,
+};
+
+/// Registered data-source names, in presentation order.
+pub const DATA_NAMES: &[&str] = &["synth", "tensor", "cifar10"];
+
+/// Everything a registry entry may need to construct itself: the model's
+/// input geometry (procedural sources synthesize to fit), the corpus
+/// size/seed knobs, and an optional backing file (disk sources).
+#[derive(Clone, Debug)]
+pub struct SourceParams {
+    pub classes: usize,
+    pub channels: usize,
+    pub h: usize,
+    pub w: usize,
+    /// corpus size for procedural sources (file sources use the file's)
+    pub len: usize,
+    pub seed: u64,
+    /// backing file (`--data-path` / `SPNGD_DATA_PATH`) for disk sources
+    pub path: Option<PathBuf>,
+}
+
+/// Construct a data source by registry name. Unknown names are a hard
+/// error listing the valid choices.
+///
+/// - `synth` — the procedural class-conditional corpus (bit-identical to
+///   the pre-refactor generator);
+/// - `tensor` — the same corpus, fully materialized in memory at
+///   construction (O(1) RNG-free sampling);
+/// - `cifar10` — a CIFAR-10-binary-format file (requires a path).
+pub fn by_name(name: &str, p: &SourceParams) -> Result<Arc<dyn DataSource>> {
+    match name {
+        "synth" => {
+            Ok(Arc::new(SynthDataset::new(p.classes, p.channels, p.h, p.w, p.len, p.seed)))
+        }
+        "tensor" => {
+            let synth = SynthDataset::new(p.classes, p.channels, p.h, p.w, p.len, p.seed);
+            Ok(Arc::new(TensorDataset::cache(&synth, p.len, p.seed)?))
+        }
+        "cifar10" => match &p.path {
+            Some(path) => Ok(Arc::new(CifarBin::open(path)?)),
+            None => bail!(
+                "data source 'cifar10' needs a backing file — pass --data-path \
+                 (or set SPNGD_DATA_PATH) to a CIFAR-10 binary batch file"
+            ),
+        },
+        other => {
+            bail!("unknown data source '{other}' (valid choices: {})", DATA_NAMES.join(" | "))
+        }
+    }
+}
+
+/// Name validation without construction — for env/CLI front-ends that
+/// want to reject `SPNGD_DATA` typos before a model is even resolved.
+pub fn validate_name(name: &str) -> Result<()> {
+    if DATA_NAMES.contains(&name) {
+        Ok(())
+    } else {
+        bail!("unknown data source '{name}' (valid choices: {})", DATA_NAMES.join(" | "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> SourceParams {
+        SourceParams { classes: 4, channels: 1, h: 4, w: 4, len: 32, seed: 5, path: None }
+    }
+
+    #[test]
+    fn every_registered_name_resolves_or_demands_a_path() {
+        for &name in DATA_NAMES {
+            match by_name(name, &params()) {
+                Ok(src) => assert_eq!(src.name(), name),
+                // cifar10 without a path must fail with guidance
+                Err(e) => {
+                    assert_eq!(name, "cifar10", "{name}: {e}");
+                    assert!(e.to_string().contains("--data-path"), "{e}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_name_is_hard_error_listing_choices() {
+        let err =
+            by_name("imagenet", &params()).err().expect("unknown name must fail").to_string();
+        assert!(err.contains("unknown data source 'imagenet'"), "{err}");
+        for name in DATA_NAMES {
+            assert!(err.contains(name), "error must list '{name}': {err}");
+        }
+        assert!(validate_name("imagenet").is_err());
+        assert!(validate_name("synth").is_ok());
+    }
+}

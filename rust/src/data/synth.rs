@@ -7,17 +7,8 @@
 //! shifts force the model to learn spatial structure), which is enough to
 //! observe optimizer convergence behaviour (NGD vs SGD step counts).
 
-use crate::runtime::HostTensor;
+use crate::data::source::{draw_batch, Batch, DataSource, DataSpec};
 use crate::util::rng::Rng;
-
-/// One host-side mini-batch.
-#[derive(Clone, Debug)]
-pub struct Batch {
-    /// (B, C, H, W)
-    pub x: HostTensor,
-    /// (B, K) soft labels
-    pub t: HostTensor,
-}
 
 pub struct SynthDataset {
     pub classes: usize,
@@ -83,25 +74,33 @@ impl SynthDataset {
 
     /// Draw a batch of B samples (x: (B,C,H,W), t: one-hot (B,K)).
     pub fn batch(&self, b: usize, rng: &mut Rng) -> Batch {
-        let (c, h, w, k) = (self.channels, self.h, self.w, self.classes);
-        let mut x = vec![0.0f32; b * c * h * w];
-        let mut t = vec![0.0f32; b * k];
-        for i in 0..b {
-            let idx = rng.below_usize(self.len);
-            let (img, class) = self.sample(idx, rng);
-            x[i * c * h * w..(i + 1) * c * h * w].copy_from_slice(&img);
-            t[i * k + class] = 1.0;
-        }
-        Batch {
-            x: HostTensor::new(vec![b, c, h, w], x),
-            t: HostTensor::new(vec![b, k], t),
-        }
+        draw_batch(self, b, rng)
     }
 
     /// A held-out batch stream with a different index parity (validation).
     pub fn val_batch(&self, b: usize, rng: &mut Rng) -> Batch {
         // same generator, distinct RNG stream suffices at our scale
         self.batch(b, rng)
+    }
+}
+
+impl DataSource for SynthDataset {
+    fn name(&self) -> &'static str {
+        "synth"
+    }
+
+    fn spec(&self) -> DataSpec {
+        DataSpec {
+            classes: self.classes,
+            channels: self.channels,
+            h: self.h,
+            w: self.w,
+            len: self.len,
+        }
+    }
+
+    fn sample(&self, index: usize, rng: &mut Rng) -> (Vec<f32>, usize) {
+        SynthDataset::sample(self, index, rng)
     }
 }
 

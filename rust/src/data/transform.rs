@@ -1,0 +1,404 @@
+//! Composable input transforms (§6.1): the [`Transform`] trait and the
+//! per-lane [`TransformChain`] replacing the old fixed `Augment` struct.
+//!
+//! A chain owns **one** RNG and threads it through every transform in
+//! order, so the standard chain built from [`AugmentCfg`] (erase → running
+//! mixup) consumes the exact RNG stream the pre-refactor `Augment` did —
+//! `tests/data_pipeline.rs` pins that bit-parity. Transforms keep their
+//! non-RNG state (e.g. the running-mixup virtual batch) in `&mut self`,
+//! which is per-lane state: the loader builds one chain per global lane,
+//! keyed by the lane index, so the augment stream is invariant to the
+//! worker count.
+
+use crate::data::source::Batch;
+use crate::util::rng::Rng;
+
+/// Configuration of the standard augmentation chain: running mixup
+/// (Eqs. 18-19) and zero-valued random erasing, as the paper's DALI
+/// pipeline applied them.
+#[derive(Clone, Debug)]
+pub struct AugmentCfg {
+    /// Beta(α, α) parameter for mixup; 0 disables mixup.
+    pub alpha_mixup: f64,
+    /// random-erasing probability (paper: 0.5); 0 disables erasing.
+    pub erase_p: f64,
+    /// erasing area ratio range (paper: [0.02, 0.25])
+    pub erase_area: (f64, f64),
+    /// erasing aspect ratio range (paper: [0.3, 1.0])
+    pub erase_aspect: (f64, f64),
+}
+
+impl Default for AugmentCfg {
+    fn default() -> Self {
+        AugmentCfg {
+            alpha_mixup: 0.4,
+            erase_p: 0.5,
+            erase_area: (0.02, 0.25),
+            erase_aspect: (0.3, 1.0),
+        }
+    }
+}
+
+impl AugmentCfg {
+    pub fn disabled() -> Self {
+        AugmentCfg { alpha_mixup: 0.0, erase_p: 0.0, ..Default::default() }
+    }
+}
+
+/// One composable batch transform. `apply` receives the chain's RNG; a
+/// transform must consume it deterministically (same draws for the same
+/// input shape) or not at all — that is what keeps the pipeline bitwise
+/// reproducible and prefetch-schedule-independent.
+pub trait Transform: Send {
+    fn name(&self) -> &'static str;
+
+    /// Output (C, H, W) for a given input geometry (identity by default;
+    /// geometry-changing transforms like [`Downsample`] override).
+    fn out_shape(&self, shape: (usize, usize, usize)) -> (usize, usize, usize) {
+        shape
+    }
+
+    fn apply(&mut self, batch: Batch, rng: &mut Rng) -> Batch;
+}
+
+/// An ordered chain of transforms sharing one RNG stream. Built per lane
+/// (see [`lane_chain_seed`]).
+pub struct TransformChain {
+    rng: Rng,
+    items: Vec<Box<dyn Transform>>,
+}
+
+/// The per-lane chain seed derivation — identical to the pre-refactor
+/// per-lane `Augment` seeding (`(trainer_seed ^ lane<<8) ^ 0xA06_3E27`),
+/// so `synth` training streams are unchanged by the redesign.
+pub fn lane_chain_seed(trainer_seed: u64, lane: usize) -> u64 {
+    (trainer_seed ^ ((lane as u64) << 8)) ^ 0xA06_3E27
+}
+
+impl TransformChain {
+    /// An empty (identity) chain with its RNG seeded directly.
+    pub fn new(seed: u64) -> Self {
+        TransformChain { rng: Rng::new(seed), items: Vec::new() }
+    }
+
+    /// The standard augmentation chain for `cfg`: random erasing then
+    /// running mixup, each included only when enabled (a disabled stage
+    /// consumes no RNG draws — matching the old `Augment` exactly).
+    /// `seed` is the lane seed *before* the legacy `^ 0xA06_3E27` mix,
+    /// i.e. pass `trainer_seed ^ (lane << 8)` or use [`lane_chain_seed`]
+    /// via [`TransformChain::standard_for_lane`].
+    pub fn standard(cfg: &AugmentCfg, seed: u64) -> Self {
+        let mut chain = TransformChain::new(seed ^ 0xA06_3E27);
+        chain.extend_standard(cfg);
+        chain
+    }
+
+    /// The standard chain for global lane `lane` of a trainer seeded with
+    /// `trainer_seed`.
+    pub fn standard_for_lane(cfg: &AugmentCfg, trainer_seed: u64, lane: usize) -> Self {
+        let rng = Rng::new(lane_chain_seed(trainer_seed, lane));
+        let mut chain = TransformChain { rng, items: Vec::new() };
+        chain.extend_standard(cfg);
+        chain
+    }
+
+    /// Append the standard augmentation stages enabled in `cfg`.
+    pub fn extend_standard(&mut self, cfg: &AugmentCfg) {
+        if cfg.erase_p > 0.0 {
+            self.push(Box::new(RandomErase {
+                p: cfg.erase_p,
+                area: cfg.erase_area,
+                aspect: cfg.erase_aspect,
+            }));
+        }
+        if cfg.alpha_mixup > 0.0 {
+            self.push(Box::new(RunningMixup { alpha: cfg.alpha_mixup, prev: None }));
+        }
+    }
+
+    /// Append a transform to the end of the chain.
+    pub fn push(&mut self, t: Box<dyn Transform>) {
+        self.items.push(t);
+    }
+
+    /// Insert a transform at the front (runs before everything else —
+    /// used for geometry adapters like [`Downsample`]).
+    pub fn push_front(&mut self, t: Box<dyn Transform>) {
+        self.items.insert(0, t);
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// The chain's output geometry for a given source geometry.
+    pub fn out_shape(&self, mut shape: (usize, usize, usize)) -> (usize, usize, usize) {
+        for t in &self.items {
+            shape = t.out_shape(shape);
+        }
+        shape
+    }
+
+    /// Run the batch through every transform in order, sharing the
+    /// chain's RNG stream.
+    pub fn apply(&mut self, mut batch: Batch) -> Batch {
+        for t in self.items.iter_mut() {
+            batch = t.apply(batch, &mut self.rng);
+        }
+        batch
+    }
+}
+
+/// Zero-valued random erasing (paper's variant): per sample, with
+/// probability `p`, zero a rectangle whose area/aspect are drawn from the
+/// configured ranges.
+pub struct RandomErase {
+    pub p: f64,
+    pub area: (f64, f64),
+    pub aspect: (f64, f64),
+}
+
+impl Transform for RandomErase {
+    fn name(&self) -> &'static str {
+        "random_erase"
+    }
+
+    fn apply(&mut self, mut batch: Batch, rng: &mut Rng) -> Batch {
+        let dims = batch.x.shape.clone();
+        let (b, c, h, w) = (dims[0], dims[1], dims[2], dims[3]);
+        for i in 0..b {
+            if !rng.bool(self.p) {
+                continue;
+            }
+            let area = h as f64 * w as f64 * rng.range_f64(self.area.0, self.area.1);
+            let mut aspect = rng.range_f64(self.aspect.0, self.aspect.1);
+            // paper: randomly swap (He, We) -> (We, He)
+            if rng.bool(0.5) {
+                aspect = 1.0 / aspect;
+            }
+            let he = ((area * aspect).sqrt().round() as usize).clamp(1, h);
+            let we = ((area / aspect).sqrt().round() as usize).clamp(1, w);
+            let y0 = rng.below_usize(h - he + 1);
+            let x0 = rng.below_usize(w - we + 1);
+            for ch in 0..c {
+                for y in y0..y0 + he {
+                    let base = ((i * c + ch) * h + y) * w;
+                    // zero value, not random (paper's variant)
+                    for x in x0..x0 + we {
+                        batch.x.data[base + x] = 0.0;
+                    }
+                }
+            }
+        }
+        batch
+    }
+}
+
+/// *Running* mixup (Eqs. 18-19): keeps the previous step's virtual batch
+/// and mixes the raw batch against it, extending mixup's regularization
+/// across steps.
+pub struct RunningMixup {
+    pub alpha: f64,
+    prev: Option<Batch>,
+}
+
+impl RunningMixup {
+    pub fn new(alpha: f64) -> Self {
+        RunningMixup { alpha, prev: None }
+    }
+}
+
+impl Transform for RunningMixup {
+    fn name(&self) -> &'static str {
+        "running_mixup"
+    }
+
+    fn apply(&mut self, raw: Batch, rng: &mut Rng) -> Batch {
+        let out = match &self.prev {
+            None => raw.clone(),
+            Some(prev) if prev.x.shape == raw.x.shape => {
+                let lam = rng.beta_symmetric(self.alpha) as f32;
+                let mut x = raw.x.clone();
+                let mut t = raw.t.clone();
+                for (o, p) in x.data.iter_mut().zip(prev.x.data.iter()) {
+                    *o = lam * *o + (1.0 - lam) * p;
+                }
+                for (o, p) in t.data.iter_mut().zip(prev.t.data.iter()) {
+                    *o = lam * *o + (1.0 - lam) * p;
+                }
+                Batch { x, t }
+            }
+            Some(_) => raw.clone(), // shape change (e.g. last partial batch)
+        };
+        self.prev = Some(out.clone());
+        out
+    }
+}
+
+/// `k×k` average-pool downsampling — the geometry adapter the loader
+/// inserts when a source's image grid is an integer multiple of the
+/// model's input grid (e.g. CIFAR-10's 32×32 onto a 16×16 or 8×8 model).
+/// Stateless and RNG-free, so prepending it never perturbs the
+/// augmentation stream.
+pub struct Downsample {
+    pub k: usize,
+}
+
+impl Downsample {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1, "downsample factor must be >= 1");
+        Downsample { k }
+    }
+}
+
+impl Transform for Downsample {
+    fn name(&self) -> &'static str {
+        "downsample"
+    }
+
+    fn out_shape(&self, (c, h, w): (usize, usize, usize)) -> (usize, usize, usize) {
+        (c, h / self.k, w / self.k)
+    }
+
+    fn apply(&mut self, batch: Batch, _rng: &mut Rng) -> Batch {
+        if self.k == 1 {
+            return batch;
+        }
+        let dims = batch.x.shape.clone();
+        let (b, c, h, w) = (dims[0], dims[1], dims[2], dims[3]);
+        let (ho, wo) = (h / self.k, w / self.k);
+        let inv = 1.0 / (self.k * self.k) as f32;
+        let mut out = vec![0.0f32; b * c * ho * wo];
+        for i in 0..b {
+            for ch in 0..c {
+                let src = &batch.x.data[(i * c + ch) * h * w..(i * c + ch + 1) * h * w];
+                let dst = &mut out[(i * c + ch) * ho * wo..(i * c + ch + 1) * ho * wo];
+                for y in 0..ho {
+                    for x in 0..wo {
+                        let mut s = 0.0f32;
+                        for dy in 0..self.k {
+                            for dx in 0..self.k {
+                                s += src[(y * self.k + dy) * w + x * self.k + dx];
+                            }
+                        }
+                        dst[y * wo + x] = s * inv;
+                    }
+                }
+            }
+        }
+        Batch {
+            x: crate::runtime::HostTensor::new(vec![b, c, ho, wo], out),
+            t: batch.t,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::HostTensor;
+
+    fn ones_batch(b: usize) -> Batch {
+        Batch {
+            x: HostTensor::new(vec![b, 1, 8, 8], vec![1.0; b * 64]),
+            t: {
+                let mut t = HostTensor::zeros(vec![b, 4]);
+                for i in 0..b {
+                    t.data[i * 4] = 1.0;
+                }
+                t
+            },
+        }
+    }
+
+    #[test]
+    fn disabled_is_identity() {
+        let mut chain = TransformChain::standard(&AugmentCfg::disabled(), 1);
+        assert!(chain.is_empty());
+        let b = ones_batch(4);
+        let out = chain.apply(b.clone());
+        assert_eq!(out.x.data, b.x.data);
+        assert_eq!(out.t.data, b.t.data);
+    }
+
+    #[test]
+    fn erasing_zeroes_a_rectangle() {
+        let cfg = AugmentCfg { alpha_mixup: 0.0, erase_p: 1.0, ..Default::default() };
+        let mut chain = TransformChain::standard(&cfg, 2);
+        let out = chain.apply(ones_batch(8));
+        let zeros = out.x.data.iter().filter(|&&v| v == 0.0).count();
+        assert!(zeros > 0, "some pixels erased");
+        // bounded by max area ratio (plus rounding slack)
+        assert!(zeros <= 8 * 64 * 40 / 100, "erased too much: {zeros}");
+    }
+
+    #[test]
+    fn mixup_produces_convex_labels() {
+        let cfg = AugmentCfg { alpha_mixup: 0.4, erase_p: 0.0, ..Default::default() };
+        let mut chain = TransformChain::standard(&cfg, 3);
+        // first batch: class 0; second: class 1
+        let b1 = ones_batch(2);
+        let mut b2 = ones_batch(2);
+        for i in 0..2 {
+            b2.t.data[i * 4] = 0.0;
+            b2.t.data[i * 4 + 1] = 1.0;
+        }
+        chain.apply(b1);
+        let out = chain.apply(b2);
+        for i in 0..2 {
+            let row = &out.t.data[i * 4..(i + 1) * 4];
+            assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-5, "labels stay a distribution");
+            assert!(row[0] >= 0.0 && row[1] >= 0.0);
+        }
+    }
+
+    #[test]
+    fn running_mixup_chains_history() {
+        // after two steps, the virtual batch contains traces of step-1
+        // inputs (running variant vs vanilla): feed constant 0 images then
+        // constant 1; the second output is strictly between unless λ=1
+        let cfg = AugmentCfg { alpha_mixup: 10.0, erase_p: 0.0, ..Default::default() };
+        let mut chain = TransformChain::standard(&cfg, 4);
+        let mut zeros = ones_batch(1);
+        zeros.x.data.iter_mut().for_each(|v| *v = 0.0);
+        chain.apply(zeros);
+        let out = chain.apply(ones_batch(1));
+        let m: f32 = out.x.data.iter().sum::<f32>() / 64.0;
+        assert!(m > 0.05 && m < 0.999, "mixed value {m}");
+    }
+
+    #[test]
+    fn downsample_average_pools_and_maps_shape() {
+        let mut ds = Downsample::new(2);
+        assert_eq!(ds.out_shape((3, 8, 8)), (3, 4, 4));
+        // a 4x4 checkerboard of 0/2 average-pools to all-ones at k=2
+        let mut x = vec![0.0f32; 16];
+        for y in 0..4 {
+            for xx in 0..4 {
+                if (y + xx) % 2 == 0 {
+                    x[y * 4 + xx] = 2.0;
+                }
+            }
+        }
+        let b = Batch {
+            x: HostTensor::new(vec![1, 1, 4, 4], x),
+            t: HostTensor::new(vec![1, 1], vec![1.0]),
+        };
+        let mut rng = Rng::new(0);
+        let out = ds.apply(b, &mut rng);
+        assert_eq!(out.x.shape, vec![1, 1, 2, 2]);
+        assert!(out.x.data.iter().all(|&v| (v - 1.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn chain_out_shape_composes() {
+        let mut chain = TransformChain::new(1);
+        chain.push(Box::new(Downsample::new(2)));
+        chain.push(Box::new(Downsample::new(2)));
+        assert_eq!(chain.out_shape((3, 32, 32)), (3, 8, 8));
+    }
+}

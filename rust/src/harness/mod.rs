@@ -9,6 +9,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::coordinator::{DistMode, TrainerBuilder};
+use crate::data;
 use crate::optim::{self, Preconditioner};
 use crate::runtime::{native, Executor, Manifest};
 use crate::util::stats::Summary;
@@ -97,18 +98,58 @@ pub fn env_optimizer() -> Result<Arc<dyn Preconditioner>> {
     }
 }
 
+/// The model selected by `SPNGD_MODEL` (native registry name; falls back
+/// to `default`). Unknown names are a hard error listing the valid
+/// choices — examples and benches resolve their model through this hook,
+/// so the registry is the single source of truth.
+pub fn env_model(default: &str) -> Result<String> {
+    match std::env::var("SPNGD_MODEL") {
+        Ok(v) if !v.trim().is_empty() => {
+            let name = v.trim().to_string();
+            native::model::by_name(&name)?;
+            Ok(name)
+        }
+        _ => Ok(default.to_string()),
+    }
+}
+
+/// The data source selected by `SPNGD_DATA` (registry name; `None` when
+/// unset — the builder's `synth` default applies). Unknown names are a
+/// hard error listing the valid choices, mirroring `SPNGD_OPTIM`.
+pub fn env_data() -> Result<Option<String>> {
+    match std::env::var("SPNGD_DATA") {
+        Ok(v) if !v.trim().is_empty() => {
+            let name = v.trim().to_string();
+            data::validate_name(&name)?;
+            Ok(Some(name))
+        }
+        _ => Ok(None),
+    }
+}
+
 /// An environment-aware [`TrainerBuilder`] for examples and benches:
 /// runtime from `SPNGD_BACKEND`, worker count from `SPNGD_WORKERS`, dist
-/// engine from `SPNGD_DIST`, schedule defaulted from the optimizer's
-/// [`Preconditioner::default_hparams`] (so adding an optimizer never
-/// edits the harness).
+/// engine from `SPNGD_DIST`, data source from `SPNGD_DATA` (+
+/// `SPNGD_DATA_PATH` for disk sources; prefetch from `SPNGD_PREFETCH`
+/// inside the loader), schedule defaulted from the optimizer's
+/// [`Preconditioner::default_hparams`] (so adding an optimizer or a data
+/// source never edits the harness).
 pub fn builder(model: &str, opt: Arc<dyn Preconditioner>) -> Result<TrainerBuilder> {
     let (manifest, engine) = load_runtime()?;
-    Ok(TrainerBuilder::new(model)
+    let mut b = TrainerBuilder::new(model)
         .runtime(manifest, engine)
         .optimizer(opt)
         .workers(configured_workers())
-        .dist(DistMode::from_env()))
+        .dist(DistMode::from_env());
+    if let Some(name) = env_data()? {
+        b = b.data(&name);
+    }
+    if let Ok(path) = std::env::var("SPNGD_DATA_PATH") {
+        if !path.trim().is_empty() {
+            b = b.data_path(path.trim());
+        }
+    }
+    Ok(b)
 }
 
 /// Minimal bench runner: warmup + timed iterations, prints a stats row.

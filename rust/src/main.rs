@@ -2,7 +2,8 @@
 //!
 //! Subcommands:
 //!   info      print the manifest summary
-//!   train     train on the synthetic corpus (--optim spngd | sgd | lars)
+//!   train     train a registered data source (--data) with a registered
+//!             optimizer (--optim spngd | sgd | lars)
 //!   simulate  sweep the cluster cost model over GPU counts (Fig. 5)
 //!
 //! Every subcommand takes `--backend native|pjrt`. The default native
@@ -15,9 +16,9 @@ use anyhow::{bail, Result};
 
 use spngd::collectives::cost::ClusterModel;
 use spngd::coordinator::{DistMode, Trainer, TrainerBuilder};
-use spngd::data::AugmentCfg;
+use spngd::data::{self, AugmentCfg};
 use spngd::optim::{self, BnMode, Fisher, HyperParams, Preconditioner, Schedule, SpNgd};
-use spngd::runtime::{Executor, Manifest};
+use spngd::runtime::{native, Executor, Manifest};
 use spngd::simulator;
 use spngd::util::cli::Args;
 use spngd::util::stats::{fmt_bytes, fmt_duration};
@@ -80,6 +81,7 @@ fn cmd_info() -> Result<()> {
         println!("  layer mix: {conv} conv, {fc} fc, {bn} bn");
     }
     println!("optimizers: {}", optim::OPTIMIZER_NAMES.join(" | "));
+    println!("data sources: {}", data::DATA_NAMES.join(" | "));
     Ok(())
 }
 
@@ -109,8 +111,12 @@ fn optimizer_from_args(
 }
 
 fn trainer_from_args(parsed: &spngd::util::cli::Parsed) -> Result<Trainer> {
-    let (manifest, engine) = load(parsed.get("backend"), parsed.get("artifacts"))?;
     let model = parsed.get("model").to_string();
+    if parsed.get("backend") == "native" {
+        // registry check first: unknown --model errors listing choices
+        native::model::by_name(&model)?;
+    }
+    let (manifest, engine) = load(parsed.get("backend"), parsed.get("artifacts"))?;
     let m = manifest.model(&model)?;
     let workers = parsed.get_usize("workers");
     let accum = parsed.get_usize("accum");
@@ -147,7 +153,7 @@ fn trainer_from_args(parsed: &spngd::util::cli::Parsed) -> Result<Trainer> {
     } else {
         AugmentCfg::disabled()
     };
-    TrainerBuilder::new(&model)
+    let mut b = TrainerBuilder::new(&model)
         .runtime(manifest, engine)
         .optimizer(opt)
         .hyperparams(hp)
@@ -160,17 +166,32 @@ fn trainer_from_args(parsed: &spngd::util::cli::Parsed) -> Result<Trainer> {
         .fp16_comm(parsed.get_bool("fp16-comm"))
         .dist(if parsed.get_bool("dist") { DistMode::Threaded } else { DistMode::from_env() })
         .seed(parsed.get_u64("seed"))
+        .data(parsed.get("data"))
         .dataset_len(dataset_len)
-        .data_seed(parsed.get_u64("seed"))
-        .build()
+        .data_seed(parsed.get_u64("seed"));
+    if !parsed.get("data-path").is_empty() {
+        b = b.data_path(parsed.get("data-path"));
+    }
+    match parsed.get("prefetch") {
+        "" => {} // loader default: SPNGD_PREFETCH, else on
+        v => b = b.prefetch(!matches!(v, "0" | "off" | "false")),
+    }
+    b.build()
 }
 
 fn train_args() -> Args {
-    Args::new("spngd train", "train on the synthetic corpus")
+    // help text joins the registries so it can never go stale
+    let model_help = format!("model name: {}", native::model::MODEL_NAMES.join(" | "));
+    let optim_help = format!("optimizer: {}", optim::OPTIMIZER_NAMES.join(" | "));
+    let data_help = format!("data source: {}", data::DATA_NAMES.join(" | "));
+    Args::new("spngd train", "train on a registered data source")
         .opt("backend", "native", "execution backend: native | pjrt")
         .opt("artifacts", "artifacts", "artifact directory (pjrt backend)")
-        .opt("model", "convnet_small", "model name (mlp | convnet_small)")
-        .opt("optim", "spngd", "optimizer: spngd | sgd | lars")
+        .opt("model", "convnet_small", &model_help)
+        .opt("optim", "spngd", &optim_help)
+        .opt("data", "synth", &data_help)
+        .opt("data-path", "", "backing file for disk sources (cifar10)")
+        .opt("prefetch", "", "1|0 — batch prefetch (default: SPNGD_PREFETCH, else on)")
         .opt("fisher", "emp", "Fisher estimation: emp | 1mc (spngd only)")
         .opt("bn", "unit", "BatchNorm Fisher: unit | full (spngd only)")
         .flag("stale", "enable the adaptive stale-statistics scheduler (spngd only)")

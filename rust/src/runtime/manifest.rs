@@ -154,34 +154,82 @@ impl Manifest {
             }
             let mut kfac_layers = Vec::new();
             for l in m.get("kfac_layers").as_arr().context("kfac_layers")? {
+                let name = as_str(l.get("name"), "layer name")?;
                 let kind = as_str(l.get("kind"), "kind")?;
-                let gs = l.get("grad_shape");
-                kfac_layers.push(KfacLayer {
-                    name: as_str(l.get("name"), "layer name")?,
-                    kind: kind.clone(),
-                    a_dim: l.get("a_dim").as_usize().unwrap_or(0),
-                    g_dim: l.get("g_dim").as_usize().unwrap_or(0),
-                    a_bucket: l.get("a_bucket").as_usize().unwrap_or(0),
-                    g_bucket: l.get("g_bucket").as_usize().unwrap_or(0),
-                    grad_shape: if kind == "bn" {
-                        (0, 0)
-                    } else {
-                        (as_usize(gs.at(0), "grad rows")?, as_usize(gs.at(1), "grad cols")?)
+                // required-per-kind fields: a missing or mistyped one is a
+                // hard parse error naming the layer and the field — never
+                // a silent 0 / "" that fails later at execution time
+                let req_usize = |field: &str| -> Result<usize> {
+                    l.get(field).as_usize().with_context(|| {
+                        format!("manifest: layer '{name}' ({kind}): missing field '{field}'")
+                    })
+                };
+                let req_str = |field: &str| -> Result<String> {
+                    match l.get(field).as_str() {
+                        Some(s) if !s.is_empty() => Ok(s.to_string()),
+                        _ => bail!("manifest: layer '{name}' ({kind}): missing field '{field}'"),
+                    }
+                };
+                let layer = match kind.as_str() {
+                    "bn" => KfacLayer {
+                        name: name.clone(),
+                        kind: kind.clone(),
+                        a_dim: 0,
+                        g_dim: 0,
+                        a_bucket: 0,
+                        g_bucket: 0,
+                        grad_shape: (0, 0),
+                        factor_a: String::new(),
+                        factor_g: String::new(),
+                        invert_a: String::new(),
+                        invert_g: String::new(),
+                        precond: String::new(),
+                        weight_param: String::new(),
+                        channels: req_usize("channels")?,
+                        bn_inv: req_str("bn_inv")?,
+                        bn_full: req_str("bn_full")?,
+                        invert_full: req_str("invert_full")?,
+                        full_bucket: req_usize("full_bucket")?,
+                        gamma_param: req_str("gamma_param")?,
+                        beta_param: req_str("beta_param")?,
                     },
-                    factor_a: l.get("factor_a").as_str().unwrap_or("").to_string(),
-                    factor_g: l.get("factor_g").as_str().unwrap_or("").to_string(),
-                    invert_a: l.get("invert_a").as_str().unwrap_or("").to_string(),
-                    invert_g: l.get("invert_g").as_str().unwrap_or("").to_string(),
-                    precond: l.get("precond").as_str().unwrap_or("").to_string(),
-                    weight_param: l.get("weight_param").as_str().unwrap_or("").to_string(),
-                    channels: l.get("channels").as_usize().unwrap_or(0),
-                    bn_inv: l.get("bn_inv").as_str().unwrap_or("").to_string(),
-                    bn_full: l.get("bn_full").as_str().unwrap_or("").to_string(),
-                    invert_full: l.get("invert_full").as_str().unwrap_or("").to_string(),
-                    full_bucket: l.get("full_bucket").as_usize().unwrap_or(0),
-                    gamma_param: l.get("gamma_param").as_str().unwrap_or("").to_string(),
-                    beta_param: l.get("beta_param").as_str().unwrap_or("").to_string(),
-                });
+                    "conv" | "fc" => {
+                        let gs = l.get("grad_shape");
+                        KfacLayer {
+                            name: name.clone(),
+                            kind: kind.clone(),
+                            a_dim: req_usize("a_dim")?,
+                            g_dim: req_usize("g_dim")?,
+                            a_bucket: req_usize("a_bucket")?,
+                            g_bucket: req_usize("g_bucket")?,
+                            grad_shape: (
+                                as_usize(gs.at(0), "grad rows").with_context(|| {
+                                    format!("manifest: layer '{name}' ({kind}): grad_shape")
+                                })?,
+                                as_usize(gs.at(1), "grad cols").with_context(|| {
+                                    format!("manifest: layer '{name}' ({kind}): grad_shape")
+                                })?,
+                            ),
+                            factor_a: req_str("factor_a")?,
+                            factor_g: req_str("factor_g")?,
+                            invert_a: req_str("invert_a")?,
+                            invert_g: req_str("invert_g")?,
+                            precond: req_str("precond")?,
+                            weight_param: req_str("weight_param")?,
+                            channels: 0,
+                            bn_inv: String::new(),
+                            bn_full: String::new(),
+                            invert_full: String::new(),
+                            full_bucket: 0,
+                            gamma_param: String::new(),
+                            beta_param: String::new(),
+                        }
+                    }
+                    other => bail!(
+                        "manifest: layer '{name}': unknown kind '{other}' (expected conv | fc | bn)"
+                    ),
+                };
+                kfac_layers.push(layer);
             }
             let mut step_outputs = Vec::new();
             for o in m.get("step_outputs").as_arr().context("step_outputs")? {
@@ -313,6 +361,35 @@ mod tests {
         assert_eq!(model.output_index("g_tap", Some("fc")), Some(4));
         assert_eq!(model.output_index("grad", Some("fc.w")), Some(2));
         assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn missing_required_layer_field_is_hard_error_naming_it() {
+        // drop a required conv/fc field: the parse must fail and the
+        // error must name both the layer and the field
+        let broken = sample().replace(r#""precond":"precond_10x192","#, "");
+        let dir = std::env::temp_dir().join("spngd_manifest_test_neg");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), broken).unwrap();
+        let err = format!("{:#}", Manifest::load(&dir).unwrap_err());
+        assert!(err.contains("layer 'fc'"), "{err}");
+        assert!(err.contains("'precond'"), "{err}");
+
+        // a bn layer with no channels is equally fatal
+        let bn_broken = sample().replace(
+            r#""kfac_layers": [{"name":"fc","kind":"fc""#,
+            r#""kfac_layers": [{"name":"bad_bn","kind":"bn"}, {"name":"fc","kind":"fc""#,
+        );
+        std::fs::write(dir.join("manifest.json"), bn_broken).unwrap();
+        let err = format!("{:#}", Manifest::load(&dir).unwrap_err());
+        assert!(err.contains("layer 'bad_bn'"), "{err}");
+        assert!(err.contains("'channels'"), "{err}");
+
+        // unknown layer kinds are rejected, not defaulted
+        let kind_broken = sample().replace(r#""kind":"fc""#, r#""kind":"dense""#);
+        std::fs::write(dir.join("manifest.json"), kind_broken).unwrap();
+        let err = format!("{:#}", Manifest::load(&dir).unwrap_err());
+        assert!(err.contains("unknown kind 'dense'"), "{err}");
     }
 
     #[test]

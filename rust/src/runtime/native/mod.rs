@@ -95,9 +95,10 @@ pub struct NativeBackend {
     scratch: Mutex<Scratch>,
 }
 
-/// Build manifests + backend for the default model set.
+/// Build manifests + backend for every registered model
+/// ([`model::MODEL_NAMES`]).
 pub fn build_default() -> Result<(Manifest, NativeBackend)> {
-    build(&["mlp", "convnet_small", "convnet_tiny"], 0)
+    build(model::MODEL_NAMES, 0)
 }
 
 /// Build an in-memory [`Manifest`] (same contract as the AOT
@@ -110,7 +111,7 @@ pub fn build(model_names: &[&str], seed: u64) -> Result<(Manifest, NativeBackend
     let mut init_params = BTreeMap::new();
 
     for &mname in model_names {
-        let cfg = model::by_name(mname).with_context(|| format!("unknown model '{mname}'"))?;
+        let cfg = model::by_name(mname)?;
         let geo = cfg.layer_geometry();
         let pshapes = cfg.param_shapes();
         let b = cfg.batch;

@@ -335,13 +335,21 @@ pub fn mlp() -> NativeModelCfg {
     }
 }
 
-/// Look up a built-in model config by name.
-pub fn by_name(name: &str) -> Option<NativeModelCfg> {
+/// Registered model names, in presentation order — the single source for
+/// the CLI (`--model`), harness (`SPNGD_MODEL`), examples and benches.
+pub const MODEL_NAMES: &[&str] = &["mlp", "convnet_small", "convnet_tiny"];
+
+/// Look up a built-in model config by registry name. Unknown names are a
+/// hard error listing the valid choices (mirroring `optim::by_name`).
+pub fn by_name(name: &str) -> anyhow::Result<NativeModelCfg> {
     match name {
-        "mlp" => Some(mlp()),
-        "convnet_small" => Some(convnet_small()),
-        "convnet_tiny" => Some(convnet_tiny()),
-        _ => None,
+        "mlp" => Ok(mlp()),
+        "convnet_small" => Ok(convnet_small()),
+        "convnet_tiny" => Ok(convnet_tiny()),
+        other => anyhow::bail!(
+            "unknown model '{other}' (valid choices: {})",
+            MODEL_NAMES.join(" | ")
+        ),
     }
 }
 
@@ -404,6 +412,19 @@ mod tests {
         let gi = shapes.iter().position(|(n, _)| n.ends_with(".gamma")).unwrap();
         assert!(p1[gi].data.iter().all(|&v| v == 1.0));
         assert!(p1[gi + 1].data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn registry_resolves_every_name_and_rejects_unknown() {
+        for name in MODEL_NAMES {
+            let cfg = by_name(name).unwrap();
+            assert_eq!(&cfg.name, name);
+        }
+        let err = by_name("resnet50").unwrap_err().to_string();
+        assert!(err.contains("unknown model 'resnet50'"), "{err}");
+        for name in MODEL_NAMES {
+            assert!(err.contains(name), "error must list '{name}': {err}");
+        }
     }
 
     #[test]

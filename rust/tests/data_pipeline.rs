@@ -1,0 +1,378 @@
+//! Differential + end-to-end suite for the first-class data pipeline:
+//!
+//! (a) **pin**: `--data synth` training through the new
+//!     `DataSource`/`TransformChain`/`Loader` stack is bit-identical with
+//!     prefetch on and off, under both dist engines, and the registry
+//!     default is bit-identical to naming `synth` explicitly (together
+//!     with `tests/optim_api.rs`'s frozen pre-refactor `RefTrainer` —
+//!     which pins the same composition against the pre-refactor step
+//!     math — this proves the redesign changed no numerics);
+//! (b) the transform chain reproduces the legacy fixed `Augment`
+//!     pipeline bit-for-bit at a fixed seed (frozen in-test copy);
+//! (c) loader sharding invariance: fixed lane total, varying worker
+//!     count / engine, bitwise-equal training for the new sources too;
+//! (d) the CIFAR-10-binary reader round-trips and the in-repo fixture
+//!     trains end to end (32×32 auto-downsampled onto the 8×8 model);
+//! (e) every registered source trains through `TrainerBuilder`, and
+//!     unknown `--data` names are a hard registry error listing choices.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use spngd::coordinator::{DistMode, Trainer, TrainerBuilder};
+use spngd::data::{self, AugmentCfg, Batch, CifarBin, DataSource, SynthDataset, TransformChain};
+use spngd::optim::{self, HyperParams, Preconditioner};
+use spngd::util::rng::Rng;
+
+fn fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/cifar10_tiny.bin")
+}
+
+fn base_builder(model: &str, opt: Arc<dyn Preconditioner>) -> TrainerBuilder {
+    let hp = HyperParams {
+        alpha_mixup: 0.0,
+        p_decay: 2.0,
+        e_start: 100.0,
+        e_end: 200.0,
+        eta0: 0.02,
+        m0: 0.018,
+        lambda: 2.5e-3,
+    };
+    TrainerBuilder::new(model)
+        .optimizer(opt)
+        .hyperparams(hp)
+        .steps_per_epoch(50)
+        .workers(2)
+        .dataset_len(4000)
+        .data_seed(42)
+        .seed(7)
+}
+
+fn flat_params(tr: &Trainer) -> Vec<f32> {
+    tr.params.iter().flat_map(|p| p.data.clone()).collect()
+}
+
+// ------------------------------------------------------------------
+// (a) pin: prefetch is bitwise-neutral, registry default == synth
+
+#[test]
+fn prefetch_on_equals_off_bitwise_both_engines() {
+    for dist in [DistMode::Sequential, DistMode::Threaded] {
+        let mut on =
+            base_builder("mlp", optim::spngd()).dist(dist).prefetch(true).build().unwrap();
+        let mut off =
+            base_builder("mlp", optim::spngd()).dist(dist).prefetch(false).build().unwrap();
+        assert!(on.loader().prefetch_enabled());
+        assert!(!off.loader().prefetch_enabled());
+        for i in 0..5 {
+            let ra = on.step().unwrap();
+            let rb = off.step().unwrap();
+            assert_eq!(
+                ra.loss.to_bits(),
+                rb.loss.to_bits(),
+                "loss diverged at step {i} ({dist:?})"
+            );
+            assert_eq!(
+                flat_params(&on),
+                flat_params(&off),
+                "params diverged at step {i} ({dist:?})"
+            );
+        }
+        // validation stream unaffected by the prefetch schedule
+        let va = on.evaluate(2).unwrap();
+        let vb = off.evaluate(2).unwrap();
+        assert_eq!(va.0.to_bits(), vb.0.to_bits());
+    }
+}
+
+#[test]
+fn named_synth_matches_registry_default_bitwise() {
+    let mut dflt = base_builder("mlp", optim::spngd()).build().unwrap();
+    let mut named = base_builder("mlp", optim::spngd()).data("synth").build().unwrap();
+    assert_eq!(named.loader().source().name(), "synth");
+    for i in 0..4 {
+        let ra = dflt.step().unwrap();
+        let rb = named.step().unwrap();
+        assert_eq!(ra.loss.to_bits(), rb.loss.to_bits(), "step {i}");
+        assert_eq!(flat_params(&dflt), flat_params(&named), "step {i}");
+    }
+}
+
+/// Augmentation enabled (mixup + erasing, the paper's §6.1 pipeline) is
+/// equally schedule-independent — the per-lane chain state advances
+/// identically inline and on the prefetch pool.
+#[test]
+fn prefetch_neutral_with_augmentation_enabled() {
+    let mk = |prefetch: bool| {
+        base_builder("mlp", optim::spngd())
+            .augment(AugmentCfg::default())
+            .grad_accum(2)
+            .prefetch(prefetch)
+            .build()
+            .unwrap()
+    };
+    let mut on = mk(true);
+    let mut off = mk(false);
+    for i in 0..5 {
+        let ra = on.step().unwrap();
+        let rb = off.step().unwrap();
+        assert_eq!(ra.loss.to_bits(), rb.loss.to_bits(), "step {i}");
+        assert_eq!(flat_params(&on), flat_params(&off), "step {i}");
+    }
+}
+
+// ------------------------------------------------------------------
+// (b) transform chain == legacy Augment, bitwise
+//
+// Frozen copy of the pre-refactor `data::augment::Augment` (one RNG
+// shared by erase + mixup, erase first). Do NOT "clean this up" to call
+// the new transforms — its value is being the original op sequence.
+
+struct LegacyAugment {
+    cfg: AugmentCfg,
+    prev: Option<Batch>,
+    rng: Rng,
+}
+
+impl LegacyAugment {
+    fn new(cfg: AugmentCfg, seed: u64) -> Self {
+        LegacyAugment { cfg, prev: None, rng: Rng::new(seed ^ 0xA06_3E27) }
+    }
+
+    fn apply(&mut self, mut batch: Batch) -> Batch {
+        if self.cfg.erase_p > 0.0 {
+            self.random_erase(&mut batch);
+        }
+        if self.cfg.alpha_mixup > 0.0 {
+            batch = self.running_mixup(batch);
+        }
+        batch
+    }
+
+    fn running_mixup(&mut self, raw: Batch) -> Batch {
+        let out = match &self.prev {
+            None => raw.clone(),
+            Some(prev) if prev.x.shape == raw.x.shape => {
+                let lam = self.rng.beta_symmetric(self.cfg.alpha_mixup) as f32;
+                let mut x = raw.x.clone();
+                let mut t = raw.t.clone();
+                for (o, p) in x.data.iter_mut().zip(prev.x.data.iter()) {
+                    *o = lam * *o + (1.0 - lam) * p;
+                }
+                for (o, p) in t.data.iter_mut().zip(prev.t.data.iter()) {
+                    *o = lam * *o + (1.0 - lam) * p;
+                }
+                Batch { x, t }
+            }
+            Some(_) => raw.clone(),
+        };
+        self.prev = Some(out.clone());
+        out
+    }
+
+    fn random_erase(&mut self, batch: &mut Batch) {
+        let dims = batch.x.shape.clone();
+        let (b, c, h, w) = (dims[0], dims[1], dims[2], dims[3]);
+        for i in 0..b {
+            if !self.rng.bool(self.cfg.erase_p) {
+                continue;
+            }
+            let area = h as f64 * w as f64
+                * self.rng.range_f64(self.cfg.erase_area.0, self.cfg.erase_area.1);
+            let mut aspect =
+                self.rng.range_f64(self.cfg.erase_aspect.0, self.cfg.erase_aspect.1);
+            if self.rng.bool(0.5) {
+                aspect = 1.0 / aspect;
+            }
+            let he = ((area * aspect).sqrt().round() as usize).clamp(1, h);
+            let we = ((area / aspect).sqrt().round() as usize).clamp(1, w);
+            let y0 = self.rng.below_usize(h - he + 1);
+            let x0 = self.rng.below_usize(w - we + 1);
+            for ch in 0..c {
+                for y in y0..y0 + he {
+                    let base = ((i * c + ch) * h + y) * w;
+                    for x in x0..x0 + we {
+                        batch.x.data[base + x] = 0.0;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn transform_chain_matches_legacy_augment_bitwise() {
+    for cfg in [
+        AugmentCfg::default(),
+        AugmentCfg { alpha_mixup: 0.0, ..AugmentCfg::default() },
+        AugmentCfg { erase_p: 0.0, ..AugmentCfg::default() },
+        AugmentCfg::disabled(),
+    ] {
+        let source = SynthDataset::new(10, 3, 8, 8, 256, 11);
+        let seed = 0xF00D;
+        let mut legacy = LegacyAugment::new(cfg.clone(), seed);
+        let mut chain = TransformChain::standard(&cfg, seed);
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        for step in 0..6 {
+            let a = legacy.apply(source.batch(4, &mut r1));
+            let b = chain.apply(source.batch(4, &mut r2));
+            assert_eq!(a.x.data, b.x.data, "x diverged at step {step} (cfg {cfg:?})");
+            assert_eq!(a.t.data, b.t.data, "t diverged at step {step} (cfg {cfg:?})");
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// (c) sharding invariance for the new sources
+
+#[test]
+fn tensor_source_worker_invariance_across_engines() {
+    let mk = |workers: usize, accum: usize, dist: DistMode| {
+        base_builder("mlp", optim::spngd())
+            .data("tensor")
+            .workers(workers)
+            .grad_accum(accum)
+            .dist(dist)
+            .build()
+            .unwrap()
+    };
+    let mut a = mk(1, 4, DistMode::Sequential);
+    let mut b = mk(2, 2, DistMode::Sequential);
+    let mut c = mk(4, 1, DistMode::Threaded);
+    for i in 0..3 {
+        let ra = a.step().unwrap();
+        let rb = b.step().unwrap();
+        let rc = c.step().unwrap();
+        assert_eq!(ra.loss.to_bits(), rb.loss.to_bits(), "W=1 vs W=2 at step {i}");
+        assert_eq!(ra.loss.to_bits(), rc.loss.to_bits(), "W=1 vs threaded W=4 at step {i}");
+        assert_eq!(flat_params(&a), flat_params(&b), "params W=1 vs W=2 at step {i}");
+        assert_eq!(flat_params(&a), flat_params(&c), "params W=1 vs threaded at step {i}");
+    }
+}
+
+// ------------------------------------------------------------------
+// (d) CIFAR-10 binary format
+
+#[test]
+fn cifar_binary_round_trip() {
+    let dir = std::env::temp_dir().join("spngd_cifar_rt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("rt.bin");
+    // deterministic records: label i%10, pixels (i*31 + j) % 256
+    let records: Vec<(u8, Vec<u8>)> = (0..5u8)
+        .map(|i| {
+            let px: Vec<u8> =
+                (0..3072u32).map(|j| ((i as u32 * 31 + j) % 256) as u8).collect();
+            (i % 10, px)
+        })
+        .collect();
+    CifarBin::write_records(&path, &records).unwrap();
+    let ds = CifarBin::open(&path).unwrap();
+    let spec = ds.spec();
+    assert_eq!((spec.classes, spec.channels, spec.h, spec.w, spec.len), (10, 3, 32, 32, 5));
+    for (i, (label, px)) in records.iter().enumerate() {
+        let (l, p) = ds.record_bytes(i);
+        assert_eq!(l, *label, "label {i}");
+        assert_eq!(p, &px[..], "pixels {i}");
+        // normalization contract: byte/127.5 - 1
+        let mut rng = Rng::new(0);
+        let (img, _) = DataSource::sample(&ds, i, &mut rng);
+        assert_eq!(img[0].to_bits(), (px[0] as f32 / 127.5 - 1.0).to_bits());
+    }
+}
+
+#[test]
+fn cifar_fixture_parses_and_has_expected_content() {
+    let ds = CifarBin::open(&fixture_path()).unwrap();
+    assert_eq!(ds.spec().len, 16, "fixture has 16 records");
+    // the fixture's deterministic pattern: label = r % 10,
+    // pixel(r, c, y, x) = (r*37 + c*11 + y*5 + x*3) % 256
+    for r in [0usize, 7, 15] {
+        let (label, px) = ds.record_bytes(r);
+        assert_eq!(label as usize, r % 10, "record {r} label");
+        for (c, y, x) in [(0usize, 0usize, 0usize), (1, 3, 5), (2, 31, 31)] {
+            let want = ((r * 37 + c * 11 + y * 5 + x * 3) % 256) as u8;
+            assert_eq!(px[(c * 32 + y) * 32 + x], want, "record {r} pixel ({c},{y},{x})");
+        }
+    }
+}
+
+#[test]
+fn cifar_fixture_trains_convnet_tiny_end_to_end() {
+    // 32×32 source onto the 8×8 model: the builder auto-fits a 4×4
+    // average-pool Downsample into every lane chain
+    let mut tr = base_builder("convnet_tiny", optim::spngd())
+        .data("cifar10")
+        .data_path(fixture_path())
+        .build()
+        .unwrap();
+    assert_eq!(tr.loader().source().name(), "cifar10");
+    assert_eq!(tr.loader().out_spec(), (10, (3, 8, 8)));
+    for i in 0..2 {
+        let rec = tr.step().unwrap();
+        assert!(rec.loss.is_finite(), "step {i}");
+    }
+    let (vl, va) = tr.evaluate(2).unwrap();
+    assert!(vl.is_finite() && (0.0..=1.0).contains(&va));
+}
+
+#[test]
+fn cifar_without_path_is_actionable_error() {
+    let err = base_builder("convnet_tiny", optim::spngd())
+        .data("cifar10")
+        .build()
+        .err()
+        .expect("cifar10 without a path must fail")
+        .to_string();
+    assert!(err.contains("--data-path"), "{err}");
+}
+
+// ------------------------------------------------------------------
+// (e) registry end-to-end
+
+#[test]
+fn every_registered_source_trains_through_the_builder() {
+    for &name in data::DATA_NAMES {
+        // cifar10 is 32×32/10-class: pair each source with a model its
+        // geometry reaches (equal grid or integer downsample)
+        let mut b = base_builder("mlp", optim::spngd()).data(name);
+        if name == "cifar10" {
+            b = b.data_path(fixture_path());
+        }
+        let mut tr = b.build().unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        assert_eq!(tr.loader().source().name(), name);
+        for i in 0..3 {
+            let rec = tr.step().unwrap_or_else(|e| panic!("{name} step {i}: {e:#}"));
+            assert!(rec.loss.is_finite(), "{name} diverged at step {i}");
+        }
+    }
+}
+
+#[test]
+fn unknown_data_name_is_hard_error_listing_choices() {
+    let err = base_builder("mlp", optim::spngd())
+        .data("imagenet")
+        .build()
+        .err()
+        .expect("unknown data name must fail")
+        .to_string();
+    assert!(err.contains("unknown data source 'imagenet'"), "{err}");
+    for name in data::DATA_NAMES {
+        assert!(err.contains(name), "error must list '{name}': {err}");
+    }
+}
+
+#[test]
+fn data_stats_track_prep_and_wait() {
+    let mut tr = base_builder("mlp", optim::spngd()).prefetch(true).build().unwrap();
+    for _ in 0..4 {
+        tr.step().unwrap();
+    }
+    let s = tr.data_stats();
+    assert_eq!(s.batches, 4);
+    // with prefetch on, at most one extra in-flight buffer is prepped
+    assert!(s.prepped >= 4 && s.prepped <= 5, "prepped={}", s.prepped);
+    assert!(s.prep_seconds > 0.0 && s.prep_per_batch() > 0.0);
+    assert!((0.0..=1.0).contains(&s.hidden_fraction()));
+}
