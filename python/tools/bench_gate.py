@@ -1,0 +1,307 @@
+#!/usr/bin/env python3
+"""Bench-regression gate for BENCH_native.json (schema spngd-bench-native/4).
+
+CI runs `cargo bench --bench native_perf -- --quick`, then this gate
+compares the report against the committed baseline
+(rust/benches/baseline/BENCH_baseline.json) and exits nonzero on
+regression. Three independent checks, ordered from robust to advisory:
+
+1. **Speedup floors** (primary ratchet, machine-independent): every
+   report entry carries `speedup` = naive_ns / ns measured *in the same
+   process on the same machine*, so the ratio survives CI hardware
+   churn. Each baseline rule `{section, match, min_speedup}` must match
+   at least one report entry (prefix match on `name`) and every matched
+   entry must clear the floor. SIMD entries that resolved to the
+   `scalar` kernel (no vector unit on the runner) are exempt from their
+   floor — there is nothing to gate.
+
+2. **Structural gates** (exact, deterministic): the mixed-precision
+   wire format must actually shrink the gradient/statistics payloads
+   (byte counters, not timings — ratio <= 0.55 vs f32 at 2 workers,
+   where halving is exact) while parameters stay f32 (ratio == 1).
+
+3. **Provisional absolute-ns** (advisory ratchet): if the baseline's
+   `provisional_ns.entries` is non-empty (populated by
+   `--update-baseline` on a quiet reference machine), each entry's `ns`
+   must stay under baseline * tolerance. Empty by default because
+   absolute times are machine-bound; enable deliberately.
+
+Usage:
+    python3 python/tools/bench_gate.py --report BENCH_native.json
+    python3 python/tools/bench_gate.py --report ... --update-baseline
+    python3 python/tools/bench_gate.py --self-test
+
+`--update-baseline` re-ratchets: floors rise to measured/1.15 (never
+loosen without --allow-loosen) and provisional ns entries are refreshed.
+`--self-test` needs no report: it synthesizes a conforming report from
+the baseline (must PASS), then a 10x-slowed / non-shrinking variant
+(must FAIL) — the negative test CI runs to prove the gate has teeth.
+"""
+
+import argparse
+import copy
+import json
+import sys
+
+DEFAULT_BASELINE = "rust/benches/baseline/BENCH_baseline.json"
+REPORT_SCHEMA = "spngd-bench-native/4"
+REQUIRED_SECTIONS = ["kernels", "workers", "optimizers", "data", "simd", "precision"]
+RATCHET_MARGIN = 1.15  # floors sit measured/1.15 below the reference run
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def section_entries(report, section):
+    """Entries of a report section as a list ('step' is a single object)."""
+    if section == "step":
+        return [report["step"]]
+    return list(report.get(section, []))
+
+
+def check_schema(report, errors):
+    if report.get("schema") != REPORT_SCHEMA:
+        errors.append(
+            f"schema: expected {REPORT_SCHEMA!r}, got {report.get('schema')!r} "
+            "(bench runner and gate disagree — update both together)"
+        )
+        return False
+    if "step" not in report:
+        errors.append("schema: missing 'step' section")
+    for s in REQUIRED_SECTIONS:
+        if not report.get(s):
+            errors.append(f"schema: section '{s}' missing or empty")
+    return not errors
+
+
+def check_floors(report, baseline, errors):
+    for rule in baseline.get("speedup_floors", []):
+        section, prefix, floor = rule["section"], rule["match"], rule["min_speedup"]
+        matched = [e for e in section_entries(report, section) if e["name"].startswith(prefix)]
+        if not matched:
+            errors.append(
+                f"floor[{section}/{prefix!r}]: no report entry matches — "
+                "kernel renamed or dropped without updating the baseline"
+            )
+            continue
+        for e in matched:
+            if section == "simd" and e.get("kernel") == "scalar":
+                continue  # no vector unit on this runner: nothing to ratchet
+            sp = e["speedup"]
+            if sp < floor:
+                errors.append(
+                    f"floor[{section}/{e['name']}]: speedup {sp:.3f} < floor {floor:.2f} "
+                    f"(ns={e.get('ns', 0):.0f})"
+                )
+
+
+def precision_rows(report):
+    rows = {e["precision"]: e for e in report.get("precision", [])}
+    return rows.get("f32"), rows.get("mixed")
+
+
+def check_structural(report, baseline, errors):
+    st = baseline.get("structural", {})
+    f32, mixed = precision_rows(report)
+    if f32 is None or mixed is None:
+        errors.append("structural: precision section must contain both 'f32' and 'mixed' rows")
+        return
+    for field, key in [
+        ("grad_bytes_per_step", "mixed_grad_ratio_max"),
+        ("stats_bytes_per_step", "mixed_stats_ratio_max"),
+    ]:
+        cap = st.get(key)
+        if cap is None:
+            continue
+        denom = f32[field]
+        ratio = mixed[field] / denom if denom else 1.0
+        if ratio > cap:
+            errors.append(
+                f"structural: mixed {field} ratio {ratio:.3f} > {cap} — "
+                "the f16 wire format is not shrinking the payload"
+            )
+    lo, hi = st.get("param_ratio_min", 0.0), st.get("param_ratio_max", float("inf"))
+    denom = f32["param_bytes_per_step"]
+    pr = mixed["param_bytes_per_step"] / denom if denom else 1.0
+    if not lo <= pr <= hi:
+        errors.append(
+            f"structural: param byte ratio {pr:.3f} outside [{lo}, {hi}] — "
+            "parameters must keep travelling f32 under mixed"
+        )
+
+
+def check_provisional_ns(report, baseline, errors):
+    prov = baseline.get("provisional_ns", {})
+    tol = prov.get("tolerance", 3.0)
+    entries = prov.get("entries", {})
+    by_name = {}
+    for section in ["step"] + REQUIRED_SECTIONS:
+        for e in section_entries(report, section):
+            if "name" in e and "ns" in e:
+                by_name[e["name"]] = e["ns"]
+    for name, base_ns in entries.items():
+        got = by_name.get(name)
+        if got is None:
+            errors.append(f"provisional[{name}]: entry vanished from the report")
+        elif got > base_ns * tol:
+            errors.append(
+                f"provisional[{name}]: {got:.0f} ns > {base_ns:.0f} * {tol} — "
+                "absolute regression beyond tolerance"
+            )
+
+
+def run_gate(report, baseline):
+    errors = []
+    if check_schema(report, errors):
+        check_floors(report, baseline, errors)
+        check_structural(report, baseline, errors)
+        check_provisional_ns(report, baseline, errors)
+    return errors
+
+
+def update_baseline(report, baseline, allow_loosen):
+    """Re-ratchet floors to measured/RATCHET_MARGIN; refresh provisional ns."""
+    changed = []
+    for rule in baseline.get("speedup_floors", []):
+        section, prefix = rule["section"], rule["match"]
+        matched = [e for e in section_entries(report, section) if e["name"].startswith(prefix)]
+        gateable = [
+            e for e in matched if not (section == "simd" and e.get("kernel") == "scalar")
+        ]
+        if not gateable:
+            continue
+        measured = min(e["speedup"] for e in gateable)
+        proposed = round(measured / RATCHET_MARGIN, 2)
+        old = rule["min_speedup"]
+        if proposed > old or allow_loosen:
+            rule["min_speedup"] = proposed
+            changed.append(f"floor[{section}/{prefix!r}]: {old:.2f} -> {proposed:.2f}")
+    prov = baseline.setdefault("provisional_ns", {"tolerance": 3.0, "entries": {}})
+    entries = {}
+    for section in ["step"] + REQUIRED_SECTIONS:
+        for e in section_entries(report, section):
+            if "name" in e and "ns" in e:
+                entries[e["name"]] = round(e["ns"], 1)
+    prov["entries"] = entries
+    changed.append(f"provisional_ns: {len(entries)} entries refreshed")
+    return changed
+
+
+def synth_report(baseline, slowed=False):
+    """Fabricate a report straight from the baseline's own rules.
+
+    The healthy variant clears every floor by 1.5x and halves the mixed
+    byte counters; the slowed variant multiplies ns by 10 (speedup /10)
+    and ships mixed bytes at the f32 size — the gate must reject it.
+    """
+    factor = 10.0 if slowed else 1.0
+    report = {"schema": REPORT_SCHEMA, "step": None}
+    for s in REQUIRED_SECTIONS:
+        report[s] = []
+    for rule in baseline.get("speedup_floors", []):
+        section, prefix, floor = rule["section"], rule["match"], rule["min_speedup"]
+        speedup = floor * 1.5 / factor
+        entry = {
+            "name": prefix + " synthetic",
+            "ns": 1000.0 * factor,
+            "naive_ns": 1000.0 * floor * 1.5,
+            "speedup": speedup,
+        }
+        if section == "simd":
+            entry["kernel"] = "avx2"
+            entry["scalar_ns"] = entry.pop("naive_ns")
+        if section == "step":
+            report["step"] = entry
+        else:
+            report[section].append(entry)
+    if report["step"] is None:
+        report["step"] = {"name": "step synthetic", "ns": 1.0, "naive_ns": 2.0, "speedup": 2.0}
+    shrink = 1.0 if slowed else 0.5
+    report["precision"] = [
+        {
+            "precision": "f32",
+            "step_ns": 1000.0,
+            "grad_bytes_per_step": 1.0e6,
+            "stats_bytes_per_step": 4.0e5,
+            "param_bytes_per_step": 2.0e6,
+        },
+        {
+            "precision": "mixed",
+            "step_ns": 900.0,
+            "grad_bytes_per_step": 1.0e6 * shrink,
+            "stats_bytes_per_step": 4.0e5 * shrink,
+            "param_bytes_per_step": 2.0e6,
+        },
+    ]
+    for s in ["workers", "optimizers", "data"]:
+        if not report[s]:
+            report[s] = [{"name": f"{s} synthetic", "step_ns": 1.0}]
+    return report
+
+
+def self_test(baseline):
+    ok = run_gate(synth_report(baseline, slowed=False), baseline)
+    if ok:
+        print("self-test FAILED: healthy synthetic report was rejected:")
+        for e in ok:
+            print(f"  - {e}")
+        return 1
+    print("self-test: healthy synthetic report PASSES the gate (as it must)")
+    bad = run_gate(synth_report(baseline, slowed=True), copy.deepcopy(baseline))
+    if not bad:
+        print("self-test FAILED: 10x-slowed report sailed through — the gate has no teeth")
+        return 1
+    print(f"self-test: slowed/non-shrinking report FAILS the gate with {len(bad)} errors (good):")
+    for e in bad[:4]:
+        print(f"  - {e}")
+    print("self-test OK")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--report", default="BENCH_native.json")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--update-baseline", action="store_true")
+    ap.add_argument("--allow-loosen", action="store_true",
+                    help="with --update-baseline, let floors drop (default: ratchet only)")
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify the gate accepts a healthy report and rejects a slowed one")
+    args = ap.parse_args()
+
+    baseline = load(args.baseline)
+    if args.self_test:
+        sys.exit(self_test(baseline))
+
+    report = load(args.report)
+    if args.update_baseline:
+        errors = run_gate(report, copy.deepcopy(baseline))
+        structural = [e for e in errors if e.startswith(("structural", "schema"))]
+        if structural:
+            print("refusing to ratchet from a structurally broken report:")
+            for e in structural:
+                print(f"  - {e}")
+            sys.exit(1)
+        for line in update_baseline(report, baseline, args.allow_loosen):
+            print(line)
+        with open(args.baseline, "w") as f:
+            json.dump(baseline, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.baseline}")
+        sys.exit(0)
+
+    errors = run_gate(report, baseline)
+    if errors:
+        print(f"bench gate: FAIL ({len(errors)} regression(s) vs {args.baseline})")
+        for e in errors:
+            print(f"  - {e}")
+        sys.exit(1)
+    n_floors = len(baseline.get("speedup_floors", []))
+    print(f"bench gate: PASS ({n_floors} speedup floors, structural byte gates, "
+          f"{len(baseline.get('provisional_ns', {}).get('entries', {}))} provisional ns entries)")
+
+
+if __name__ == "__main__":
+    main()

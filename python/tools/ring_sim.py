@@ -1,12 +1,30 @@
 """Python port of dist::RingComm's round state machines, stress-tested
 with real threads to validate the synchronization protocol (deadlock
-freedom, round reuse, canonical reduction results)."""
-import threading, random, sys
+freedom, round reuse, canonical reduction results) AND the wire-byte
+accounting: every round charges the same per-GPU ring formula as
+rust/src/collectives/comm.rs::ring_wire_bytes, and run_case asserts the
+counters against closed-form expectations per step — for the f32 wire
+(elem_bytes=4) and the mixed/f16 wire (elem_bytes=2), where gradient and
+statistics bytes halve while parameters stay f32. CI runs this file as
+the `python-protocol` job."""
+import math, threading, random, sys
+
+
+def ring_wire_bytes(p, elem_bytes, elems):
+    """Per-GPU wire bytes of an N-element ring collective — the exact
+    mirror of comm.rs: round(elems * (p-1)/p * elem_bytes) with Rust's
+    f64::round (half away from zero; Python's round() is half-to-even,
+    which disagrees at e.g. p=4, elem_bytes=2, elems=3 -> 4.5)."""
+    p = max(p, 1)
+    x = elems * (p - 1) / p * elem_bytes
+    return int(math.floor(x + 0.5))
+
 
 class RingComm:
-    def __init__(self, p, chunk=7):
+    def __init__(self, p, chunk=7, elem_bytes=4):
         self.p = max(p, 1)
         self.chunk = max(chunk, 1)
+        self.elem_bytes = elem_bytes  # grad/stat wire width: 4=f32, 2=f16
         self.lock = threading.Lock()
         self.cv = threading.Condition(self.lock)
         # grad round state
@@ -15,15 +33,19 @@ class RingComm:
         self.s = dict(active=False)
         # gather round
         self.ga = dict(active=False)
-        self.bytes = 0
+        # per-GPU wire-byte counters, same split as CommStats
+        self.rs_stats = 0
+        self.ar_grads = 0
+        self.ag_params = 0
 
     # ---- stat board
-    def begin_stats(self, n_items, lanes):
+    def begin_stats(self, n_items, lanes, stat_len=3):
         if n_items == 0:
             return
         with self.cv:
             assert not self.s['active'], "stat round still open"
             self.s = dict(active=True, lanes=lanes, n_items=n_items,
+                          stat_len=stat_len,
                           slots=[[None] * lanes for _ in range(n_items)],
                           posted=[0] * n_items, reduced=0)
 
@@ -51,6 +73,10 @@ class RingComm:
             st['reduced'] += 1
             if st['reduced'] == st['n_items']:
                 st['active'] = False
+                # ReduceScatterV: one charge per round over the packed
+                # payload (here: n_items stat vectors of 3 elements)
+                self.rs_stats += ring_wire_bytes(
+                    self.p, self.elem_bytes, st['n_items'] * st['stat_len'])
         return red
 
     # ---- grad AllReduce (post-by-move; one mean copy per rank drain)
@@ -117,7 +143,8 @@ class RingComm:
             if st['drained'] == st['participants']:
                 out = st['reduced']
                 st['active'] = False
-                self.bytes += 2 * n
+                # AllReduce = ReduceScatter + AllGather: 2x the ring bytes
+                self.ar_grads += 2 * ring_wire_bytes(self.p, self.elem_bytes, n)
                 self.cv.notify_all()
                 return out
             return list(st['reduced'])
@@ -151,12 +178,15 @@ class RingComm:
             st['drained'] += 1
             if st['drained'] == self.p:
                 st['active'] = False
+                # parameters always travel f32, whatever the grad wire is
+                self.ag_params += ring_wire_bytes(
+                    self.p, 4, sum(len(s) for s in segs))
                 self.cv.notify_all()
 
 
-def run_case(p, micro, n_items, n, steps, chunk, seed):
+def run_case(p, micro, n_items, n, steps, chunk, seed, elem_bytes=4):
     rng = random.Random(seed)
-    ring = RingComm(p, chunk)
+    ring = RingComm(p, chunk, elem_bytes)
     total = p * micro
     lane_data = [[rng.uniform(-1, 1) for _ in range(n)] for _ in range(total)]
     stat_data = [[rng.uniform(-1, 1) for _ in range(3)] for _ in range(total * n_items)]
@@ -218,15 +248,61 @@ def run_case(p, micro, n_items, n, steps, chunk, seed):
             segs = results[(step, 'ag', r)]
             for i in range(n_items):
                 assert segs[i] == [float(owners[i])] * (i + 1), (step, r, i)
-    print(f"OK p={p} micro={micro} items={n_items} n={n} chunk={chunk} steps={steps}")
+
+    # ---- byte accounting vs the closed-form ring formula (one grad
+    # round, one stat round, one gather round per step)
+    exp_ar = steps * 2 * ring_wire_bytes(p, elem_bytes, n)
+    exp_rs = steps * ring_wire_bytes(p, elem_bytes, n_items * 3)
+    seg_elems = sum(i + 1 for i in range(n_items))
+    exp_ag = steps * ring_wire_bytes(p, 4, seg_elems)
+    assert ring.ar_grads == exp_ar, (ring.ar_grads, exp_ar)
+    assert ring.rs_stats == exp_rs, (ring.rs_stats, exp_rs)
+    assert ring.ag_params == exp_ag, (ring.ag_params, exp_ag)
+    print(f"OK p={p} micro={micro} items={n_items} n={n} chunk={chunk} "
+          f"steps={steps} wire={elem_bytes}B "
+          f"(ar={ring.ar_grads} rs={ring.rs_stats} ag={ring.ag_params})")
+    return ring
+
+
+def check_wire_formula():
+    """Pin ring_wire_bytes to the vectors asserted by the Rust unit tests
+    (collectives/comm.rs + tests/dist_collectives.rs) so the Python and
+    Rust accounting cannot drift apart silently."""
+    # p=4, AllReduce of 2 f32 elems: 2 * round(2 * 3/4 * 4) = 12
+    assert 2 * ring_wire_bytes(4, 4, 2) == 12
+    # p=2, packed 2x2 stat (3 elems), f32: round(3 * 1/2 * 4) = 6
+    assert ring_wire_bytes(2, 4, 3) == 6
+    # same payload on the f16 wire: exactly half
+    assert ring_wire_bytes(2, 2, 3) == 3
+    # Rust f64::round is half-away-from-zero: 3 * 3/4 * 2 = 4.5 -> 5
+    # (Python's builtin round() would give 4 here)
+    assert ring_wire_bytes(4, 2, 3) == 5
+    # single worker moves nothing
+    assert ring_wire_bytes(1, 4, 10 ** 6) == 0
+    # f16 halves the grad wire exactly whenever the f32 count is even
+    for p in (2, 3, 8):
+        for n in (23, 100):
+            f32b = 2 * ring_wire_bytes(p, 4, n)
+            f16b = 2 * ring_wire_bytes(p, 2, n)
+            assert abs(2 * f16b - f32b) <= 2, (p, n, f32b, f16b)
+    print("wire formula matches rust/src/collectives/comm.rs vectors")
 
 
 if __name__ == '__main__':
+    check_wire_formula()
     for p in (1, 2, 3, 8):
         for micro in (1, 2):
             for chunk in (1, 7, 1000):
                 run_case(p, micro, n_items=5, n=23, steps=4, chunk=chunk, seed=p * 10 + micro)
     # worker with no owned layers / no items
     run_case(4, 1, n_items=2, n=9, steps=6, chunk=3, seed=99)
+    # mixed/f16 wire: same protocol, grad+stat counters shrink, params
+    # stay f32 — compare against an identical f32 run
+    for p in (2, 3, 8):
+        r32 = run_case(p, 2, n_items=5, n=23, steps=4, chunk=7, seed=p, elem_bytes=4)
+        r16 = run_case(p, 2, n_items=5, n=23, steps=4, chunk=7, seed=p, elem_bytes=2)
+        assert r16.ar_grads * 2 <= r32.ar_grads + 2 * 4, (p, r16.ar_grads, r32.ar_grads)
+        assert r16.rs_stats * 2 <= r32.rs_stats + 2 * 4, (p, r16.rs_stats, r32.rs_stats)
+        assert r16.ag_params == r32.ag_params, (p, r16.ag_params, r32.ag_params)
     # zero items handled by caller skipping begin/reduce; grad+gather only
     print("ALL PROTOCOL CASES PASS")

@@ -10,21 +10,29 @@
 //! SPNGD_THREADS=4 cargo bench --bench native_perf    # pin the pool size
 //! ```
 //!
-//! JSON schema (`spngd-bench-native/3`): `{schema, model, threads, quick,
+//! JSON schema (`spngd-bench-native/4`): `{schema, model, threads, quick,
 //! step: {name, ns, naive_ns, speedup}, kernels: [{name, ns, naive_ns,
 //! speedup}, ...], workers: [...], optimizers: [{name, step_ns}, ...],
-//! data: [...]}` — `ns` is the median per-iteration wall time of the
-//! parallel kernel, `naive_ns` the same measurement with
-//! `linalg::set_reference_kernels(true)` routing every product to the
-//! pre-refactor naive loops, `speedup` their ratio. `optimizers` is the
-//! end-to-end trainer step time once per registered optimizer
-//! (spngd | sgd | lars), so optimizer-level perf is tracked per PR.
-//! `data` (new in /3) measures the input pipeline per prefetch mode:
+//! data: [...], simd: [...], precision: [...]}` — `ns` is the median
+//! per-iteration wall time of the parallel kernel, `naive_ns` the same
+//! measurement with `linalg::set_reference_kernels(true)` routing every
+//! product to the pre-refactor naive loops, `speedup` their ratio.
+//! `optimizers` is the end-to-end trainer step time once per registered
+//! optimizer (spngd | sgd | lars), so optimizer-level perf is tracked
+//! per PR. `data` measures the input pipeline per prefetch mode:
 //! per-global-batch prep time (sampling + transforms), how long the
 //! trainer actually waited for it, and the fraction of prep hidden
 //! behind the step (`hidden_fraction` — 0 with prefetch off by
-//! construction, ideally → 1 with prefetch on).
+//! construction, ideally → 1 with prefetch on). `simd` (new in /4) times
+//! the blocked kernels under the forced-scalar vs native vector dispatch
+//! (`{name, kernel, ns, scalar_ns, speedup}` — bit-identical outputs,
+//! different speed), and `precision` (new in /4) records the threaded
+//! step time plus the per-step comm bytes for each wire precision
+//! (`{precision, step_ns, grad_bytes_per_step, stats_bytes_per_step,
+//! param_bytes_per_step}` — mixed must move ~half the grad/stat bytes,
+//! which `bench_gate.py` asserts structurally).
 
+use spngd::collectives::Precision;
 use spngd::coordinator::DistMode;
 use spngd::harness::{self, bench};
 use spngd::optim;
@@ -35,6 +43,7 @@ use spngd::util::cli::Args;
 use spngd::util::json::{obj, Json};
 use spngd::util::pool;
 use spngd::util::rng::Rng;
+use spngd::util::simd;
 
 struct Entry {
     name: String,
@@ -229,6 +238,70 @@ fn main() {
         ]));
     }
 
+    // ---- SIMD dispatch: the same blocked kernels under forced-scalar
+    // vs the native vector path — identical bits (the dispatch test pins
+    // that), so this is purely the vectorization speedup
+    let mut simd_entries: Vec<Json> = Vec::new();
+    {
+        let mut simd_bench = |name: &str, f: &mut dyn FnMut()| {
+            simd::force("scalar");
+            let s = bench(&format!("{name} [scalar]"), wu, it, &mut *f);
+            simd::force("native");
+            let kernel = simd::kernel_name();
+            let v = bench(&format!("{name} [{kernel}]"), wu, it, &mut *f);
+            let scalar_ns = s.median() * 1e9;
+            let ns = v.median() * 1e9;
+            simd_entries.push(obj(vec![
+                ("name", Json::from(name)),
+                ("kernel", Json::from(kernel)),
+                ("ns", Json::from(ns)),
+                ("scalar_ns", Json::from(scalar_ns)),
+                ("speedup", Json::from(scalar_ns / ns.max(1e-9))),
+            ]));
+        };
+        let mm_name = format!("matmul {}x{}x64", patches.rows, patches.cols);
+        simd_bench(&mm_name, &mut || {
+            let _ = patches.matmul(&wmat);
+        });
+        simd_bench(&mm_t_name, &mut || {
+            let _ = patches.matmul_transposed(&wt);
+        });
+        let syrk_name = format!("syrk {}x{}", patches.rows, patches.cols);
+        simd_bench(&syrk_name, &mut || {
+            let _ = kernels::syrk(&patches, 0.01);
+        });
+        simd::force("auto"); // back to runtime detection
+    }
+
+    // ---- wire precision: threaded end-to-end step + per-step comm
+    // bytes for each precision (grad/stat payloads halve under mixed;
+    // parameters stay f32 — bench_gate.py asserts the ratio)
+    let mut precision_entries: Vec<Json> = Vec::new();
+    for prec in [Precision::F32, Precision::Mixed] {
+        let mut tr = harness::builder("convnet_tiny", optim::spngd())
+            .expect("runtime")
+            .workers(2)
+            .precision(prec)
+            .dist(DistMode::Threaded)
+            .dataset_len(2048)
+            .data_seed(7)
+            .build()
+            .expect("precision trainer");
+        // counters from the first step: full statistics refresh, so the
+        // byte mix is identical across precisions
+        let rec = tr.step().expect("precision step");
+        let s = bench(&format!("dist step convnet_tiny precision={}", prec.name()), wu, it, || {
+            tr.step().expect("precision step");
+        });
+        precision_entries.push(obj(vec![
+            ("precision", Json::from(prec.name())),
+            ("step_ns", Json::from(s.median() * 1e9)),
+            ("grad_bytes_per_step", Json::from(rec.comm.ar_grads as f64)),
+            ("stats_bytes_per_step", Json::from(rec.comm.stats_total() as f64)),
+            ("param_bytes_per_step", Json::from(rec.comm.ag_params as f64)),
+        ]));
+    }
+
     // ---- per-optimizer end-to-end step time (same model/shape for all,
     // resolved through the registry so new optimizers appear here free)
     let mut optim_entries: Vec<Json> = Vec::new();
@@ -251,7 +324,7 @@ fn main() {
     }
 
     let report = obj(vec![
-        ("schema", Json::from("spngd-bench-native/3")),
+        ("schema", Json::from("spngd-bench-native/4")),
         ("model", Json::from(model_name.clone())),
         ("threads", Json::from(threads)),
         ("quick", Json::from(quick)),
@@ -260,6 +333,8 @@ fn main() {
         ("workers", Json::Arr(dist_entries)),
         ("optimizers", Json::Arr(optim_entries)),
         ("data", Json::Arr(data_entries)),
+        ("simd", Json::Arr(simd_entries)),
+        ("precision", Json::Arr(precision_entries)),
     ]);
     let out_path = parsed.get("out");
     std::fs::write(out_path, report.to_string_pretty()).expect("write bench report");

@@ -12,6 +12,7 @@
 use std::sync::Mutex;
 
 use crate::linalg::{packed_len, Mat};
+use crate::util::f16;
 
 /// Per-GPU wire bytes of an N-element ring collective: `(p−1)/p · N ·
 /// wire_elem_bytes`, rounded once — THE byte formula every
@@ -20,6 +21,81 @@ use crate::linalg::{packed_len, Mat};
 pub fn ring_wire_bytes(world: usize, wire_elem_bytes: u64, elems: usize) -> u64 {
     let p = world.max(1) as f64;
     (elems as f64 * ((p - 1.0) / p) * wire_elem_bytes as f64).round() as u64
+}
+
+/// Wire precision of the gradient/statistics collective payloads (§5.2).
+///
+/// `Mixed` moves the gradient AllReduce and the statistics
+/// ReduceScatterV as IEEE f16 while every master copy stays f32 and
+/// reductions still accumulate in f64 in canonical lane order; updated
+/// parameters always travel f32. Numerically this is modeled by pushing
+/// each payload element through the exact f16 round-trip at
+/// serialization points — the same per-element op sequence on `SimComm`
+/// and `dist::RingComm`, so the two engines stay bit-identical to each
+/// other within a mode (and worker-count-invariant, since every lane is
+/// quantized symmetrically).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Precision {
+    /// f32 wire format (4 bytes/element) — the default.
+    #[default]
+    F32,
+    /// f16 wire for gradients + statistics (2 bytes/element), f32 master
+    /// copies, f64 reductions.
+    Mixed,
+}
+
+impl Precision {
+    /// Bytes per element on the wire for gradient/statistics payloads.
+    pub fn wire_elem_bytes(self) -> u64 {
+        match self {
+            Precision::F32 => 4,
+            Precision::Mixed => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Mixed => "mixed",
+        }
+    }
+
+    /// Parse a CLI/env spelling; `fp16`/`f16` are accepted as aliases
+    /// for `mixed`.
+    pub fn parse(s: &str) -> Result<Precision, String> {
+        match s {
+            "f32" | "fp32" => Ok(Precision::F32),
+            "mixed" | "f16" | "fp16" => Ok(Precision::Mixed),
+            other => Err(format!("unknown precision '{other}' (expected f32 | mixed)")),
+        }
+    }
+
+    /// Resolve from `SPNGD_PRECISION` (default `F32`; invalid values are
+    /// a hard error, mirroring the optimizer/model registries).
+    pub fn from_env() -> Precision {
+        match std::env::var("SPNGD_PRECISION") {
+            Ok(v) => Precision::parse(&v).unwrap_or_else(|e| panic!("SPNGD_PRECISION: {e}")),
+            Err(_) => Precision::F32,
+        }
+    }
+}
+
+/// One payload element as it comes off the wire: the exact f16
+/// round-trip under `Mixed`, the identity under `F32`. Shared by both
+/// `Collective` implementations — part of the parity contract.
+#[inline]
+pub fn wire_quantize(p: Precision, x: f32) -> f32 {
+    match p {
+        Precision::F32 => x,
+        Precision::Mixed => f16::round_trip(x),
+    }
+}
+
+/// Serialize a whole buffer to the wire format in place (no-op for f32).
+pub fn wire_quantize_slice(p: Precision, buf: &mut [f32]) {
+    if p == Precision::Mixed {
+        f16::quantize_slice(buf);
+    }
 }
 
 /// Canonical lane-order mean of f32 values — THE per-element reduction
@@ -40,6 +116,16 @@ pub fn lane_mean<I: Iterator<Item = f32>>(vals: I, lanes: usize) -> f32 {
 /// [`lane_mean`]; the multiplication-by-reciprocal form is part of the
 /// contract and must match on every implementation).
 pub fn lane_mean_mats(lanes: &[&Mat]) -> Mat {
+    lane_mean_mats_wire(lanes, Precision::F32)
+}
+
+/// [`lane_mean_mats`] with the lane payloads read through the wire
+/// format: under `Mixed`, each element is f16-quantized as it enters the
+/// f64 accumulator — numerically identical to quantizing the published
+/// copies in place (what `dist::RingComm` does) and then reducing, so
+/// the engines stay bit-parity-checked per mode. The mean itself is NOT
+/// quantized: it lands on the owning worker's f32 master statistics.
+pub fn lane_mean_mats_wire(lanes: &[&Mat], p: Precision) -> Mat {
     let (rows, cols) = (lanes[0].rows, lanes[0].cols);
     for m in lanes {
         assert_eq!((m.rows, m.cols), (rows, cols), "lane shape mismatch");
@@ -49,7 +135,7 @@ pub fn lane_mean_mats(lanes: &[&Mat]) -> Mat {
     for (j, v) in out.data.iter_mut().enumerate() {
         let mut s = 0.0f64;
         for m in lanes {
-            s += m.data[j] as f64;
+            s += wire_quantize(p, m.data[j]) as f64;
         }
         *v = (s * inv_l) as f32;
     }
@@ -136,8 +222,8 @@ pub struct SimComm {
     p: usize,
     /// communicate only the upper triangle of symmetric matrices (§5.2)
     pub symmetric_packing: bool,
-    /// bytes per element on the wire (4 = f32, 2 = fp16 communication)
-    pub wire_elem_bytes: u64,
+    /// wire precision for gradient/statistics payloads (§5.2)
+    pub precision: Precision,
     stats: Mutex<CommStats>,
     step_stats: Mutex<CommStats>,
 }
@@ -147,7 +233,7 @@ impl SimComm {
         SimComm {
             p: p.max(1),
             symmetric_packing: true,
-            wire_elem_bytes: 4,
+            precision: Precision::F32,
             stats: Mutex::new(CommStats::default()),
             step_stats: Mutex::new(CommStats::default()),
         }
@@ -158,20 +244,26 @@ impl SimComm {
     }
 
     fn elems_to_bytes(&self, elems: usize) -> u64 {
-        ring_wire_bytes(self.p, self.wire_elem_bytes, elems)
+        ring_wire_bytes(self.p, self.precision.wire_elem_bytes(), elems)
     }
 
     /// AllReduce (mean) of equal-shaped lane buffers (canonical lane
     /// order, one per micro-step × worker); the mean is written back to
     /// every lane. Ring AR = RS + AG; wire bytes are charged per GPU.
+    /// Under `Mixed` each lane is serialized to f16 at post time and the
+    /// reduced mean travels the AllGather half as f16 too, so every lane
+    /// receives the quantized mean (f64 accumulation is unchanged).
     pub fn all_reduce_mean(&self, bufs: &mut [Vec<f32>]) {
         assert!(!bufs.is_empty(), "at least one lane");
         let n = bufs[0].len();
         let nlanes = bufs.len();
+        for b in bufs.iter_mut() {
+            wire_quantize_slice(self.precision, b);
+        }
         // reduce into lane 0 (f64 accumulation in canonical lane order)
         for i in 0..n {
             let m = lane_mean(bufs.iter().map(|b| b[i]), nlanes);
-            bufs[0][i] = m;
+            bufs[0][i] = wire_quantize(self.precision, m);
         }
         let (first, rest) = bufs.split_first_mut().unwrap();
         for b in rest {
@@ -206,7 +298,7 @@ impl SimComm {
         let mut elems_g = 0usize;
         for i in 0..n_items {
             let lane_mats: Vec<&Mat> = items.iter().map(|lane| &lane[i]).collect();
-            let acc = lane_mean_mats(&lane_mats);
+            let acc = lane_mean_mats_wire(&lane_mats, self.precision);
             let elems = if self.symmetric_packing && acc.is_square() {
                 packed_len(acc.rows)
             } else {
@@ -232,8 +324,10 @@ impl SimComm {
 
     /// AllGatherV of updated parameters (owners broadcast their layers).
     /// Parameters are shared in-process, so this is accounting-only.
+    /// Parameters always travel f32 — `Mixed` is scoped to gradients and
+    /// statistics (§5.2).
     pub fn all_gather_v_params(&self, total_elems: usize) {
-        let bytes = self.elems_to_bytes(total_elems);
+        let bytes = ring_wire_bytes(self.p, 4, total_elems);
         let mut s = self.stats.lock().unwrap();
         s.ag_params += bytes;
         s.num_ops += 1;
@@ -342,12 +436,86 @@ mod tests {
     }
 
     #[test]
-    fn fp16_wire_halves_bytes() {
+    fn mixed_wire_halves_grad_and_stat_bytes() {
         let mut c = SimComm::new(2);
-        c.wire_elem_bytes = 2;
+        c.precision = Precision::Mixed;
         let mut bufs = vec![vec![0.0f32; 100], vec![0.0; 100]];
         c.all_reduce_mean(&mut bufs);
         assert_eq!(c.stats().ar_grads, 2 * 50 * 2);
+        let m = vec![Mat::eye(2)];
+        c.reduce_scatter_v(&[m.clone(), m], &[StatClass::A]);
+        // packed 2x2 = 3 elems; ring factor 1/2; 2 bytes => 3 bytes
+        assert_eq!(c.stats().rs_stats_a, 3);
+    }
+
+    #[test]
+    fn mixed_params_still_travel_f32() {
+        let mk = |p: Precision| {
+            let mut c = SimComm::new(2);
+            c.precision = p;
+            c.all_gather_v_params(1000);
+            c.stats().ag_params
+        };
+        assert_eq!(mk(Precision::F32), mk(Precision::Mixed));
+    }
+
+    #[test]
+    fn mixed_all_reduce_quantizes_payload_and_result() {
+        let c32 = SimComm::new(2);
+        let mut c16 = SimComm::new(2);
+        c16.precision = Precision::Mixed;
+        // 0.1 is not representable in f16: the quantized mean must differ
+        // from the f32 mean, and must equal the mean of the quantized lanes.
+        let lanes = || vec![vec![0.1f32, 1.0, -3.0], vec![0.3, 1.0, 5.0]];
+        let mut a = lanes();
+        let mut b = lanes();
+        c32.all_reduce_mean(&mut a);
+        c16.all_reduce_mean(&mut b);
+        assert_ne!(a[0][0], b[0][0], "f16 wire must perturb 0.1/0.3");
+        let expect = f16::round_trip(lane_mean(
+            [f16::round_trip(0.1), f16::round_trip(0.3)].into_iter(),
+            2,
+        ));
+        assert_eq!(b[0][0], expect);
+        assert_eq!(b[0], b[1], "every lane receives the same mean");
+        // exactly representable values pass through unchanged
+        assert_eq!(b[0][1], 1.0);
+        assert_eq!(b[0][2], 1.0);
+    }
+
+    #[test]
+    fn mixed_reduce_scatter_quantizes_lanes_not_result() {
+        let mut c = SimComm::new(2);
+        c.precision = Precision::Mixed;
+        let w0 = mats(&[&[0.1, 0., 0., 0.1]], 2);
+        let w1 = mats(&[&[0.3, 0., 0., 0.3]], 2);
+        let out = c.reduce_scatter_v(&[w0, w1], &[StatClass::A]);
+        // lanes quantize; the owner-side mean stays full f32 (master copy)
+        let expect = lane_mean(
+            [f16::round_trip(0.1), f16::round_trip(0.3)].into_iter(),
+            2,
+        );
+        assert_eq!(out[0].data[0], expect);
+        assert_ne!(out[0].data[0], 0.2, "f16 wire must perturb the mean");
+        assert_ne!(
+            out[0].data[0],
+            f16::round_trip(expect),
+            "owner-side result is NOT re-quantized"
+        );
+    }
+
+    #[test]
+    fn precision_parse_and_names() {
+        assert_eq!(Precision::parse("f32").unwrap(), Precision::F32);
+        assert_eq!(Precision::parse("fp32").unwrap(), Precision::F32);
+        assert_eq!(Precision::parse("mixed").unwrap(), Precision::Mixed);
+        assert_eq!(Precision::parse("fp16").unwrap(), Precision::Mixed);
+        assert_eq!(Precision::parse("f16").unwrap(), Precision::Mixed);
+        assert!(Precision::parse("bf16").is_err());
+        assert_eq!(Precision::F32.name(), "f32");
+        assert_eq!(Precision::Mixed.name(), "mixed");
+        assert_eq!(Precision::F32.wire_elem_bytes(), 4);
+        assert_eq!(Precision::Mixed.wire_elem_bytes(), 2);
     }
 
     #[test]

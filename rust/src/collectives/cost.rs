@@ -233,6 +233,29 @@ mod tests {
     }
 
     #[test]
+    fn mixed_precision_wire_shrinks_predicted_time() {
+        // the mixed wire format halves grad + stat payloads (params stay
+        // f32) — exactly what `Trainer::profile` reports under `Mixed`.
+        // The cost model prices real serialized bytes, so prediction must
+        // drop at every comm-bound scale.
+        let cm = ClusterModel::default();
+        let full = profile();
+        let mut mixed = profile();
+        mixed.stats_bytes *= 0.5;
+        mixed.grad_bytes *= 0.5;
+        for p in [4, 64, 256, 1024] {
+            let t32 = predict_step_time(&full, p, &cm);
+            let t16 = predict_step_time(&mixed, p, &cm);
+            assert!(t16 < t32, "p={p}: mixed {t16} vs f32 {t32}");
+        }
+        // at p=1 there is no wire, so precision cannot change the time
+        assert_eq!(
+            predict_step_time(&mixed, 1, &cm),
+            predict_step_time(&full, 1, &cm)
+        );
+    }
+
+    #[test]
     fn stale_stats_shrink_predicted_time() {
         // zeroing the stats bytes + inversion (the stale-step fast path)
         // must reduce the predicted step time at comm-bound scales.

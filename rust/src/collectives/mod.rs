@@ -16,5 +16,5 @@
 pub mod comm;
 pub mod cost;
 
-pub use comm::{Collective, CommStats, SimComm};
+pub use comm::{Collective, CommStats, Precision, SimComm};
 pub use cost::{ClusterModel, CollectiveKind};

@@ -26,6 +26,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use crate::collectives::comm::Precision;
 use crate::coordinator::trainer::{DistMode, Trainer, TrainerCfg};
 use crate::data::{self, AugmentCfg, DataSource, Downsample, Loader, TransformChain};
 use crate::optim::{
@@ -44,7 +45,7 @@ pub struct TrainerBuilder {
     grad_accum: usize,
     augment: AugmentCfg,
     bn_momentum: f32,
-    fp16_comm: bool,
+    precision: Precision,
     dist: DistMode,
     seed: u64,
     opt: Option<Arc<dyn Preconditioner>>,
@@ -77,7 +78,7 @@ impl TrainerBuilder {
             grad_accum: 1,
             augment: AugmentCfg::disabled(),
             bn_momentum: 0.9,
-            fp16_comm: false,
+            precision: Precision::F32,
             dist: DistMode::Sequential,
             seed: 7,
             opt: None,
@@ -171,9 +172,17 @@ impl TrainerBuilder {
         self
     }
 
-    /// Half-precision wire format for collectives (§5.2).
+    /// Wire precision for the gradient/statistics collectives (§5.2's
+    /// mixed-precision communication, default [`Precision::F32`]).
+    pub fn precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
+    }
+
+    /// Back-compat alias for [`precision`](Self::precision):
+    /// `fp16_comm(true)` selects [`Precision::Mixed`].
     pub fn fp16_comm(mut self, on: bool) -> Self {
-        self.fp16_comm = on;
+        self.precision = if on { Precision::Mixed } else { Precision::F32 };
         self
     }
 
@@ -331,7 +340,7 @@ impl TrainerBuilder {
             workers: self.workers,
             grad_accum: self.grad_accum,
             bn_momentum: self.bn_momentum,
-            fp16_comm: self.fp16_comm,
+            precision: self.precision,
             dist: self.dist,
             seed: self.seed,
         };

@@ -32,7 +32,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::collectives::comm::{Collective, SimComm};
+use crate::collectives::comm::{Collective, Precision, SimComm};
 use crate::collectives::cost::StepProfile;
 use crate::data::{Batch, IoStats, Loader};
 use crate::dist::{DistEngine, RingComm};
@@ -78,10 +78,12 @@ pub struct TrainerCfg {
     pub grad_accum: usize,
     /// BN running-stat EMA momentum
     pub bn_momentum: f32,
-    /// half-precision (fp16) wire format for collectives (§5.2's
-    /// mixed-precision communication) — affects byte accounting only;
-    /// reductions stay f32 in this in-process simulation
-    pub fp16_comm: bool,
+    /// wire precision for the gradient/statistics collectives (§5.2's
+    /// mixed-precision communication): `Mixed` moves those payloads as
+    /// f16 (halved wire bytes, values pass through the exact f16
+    /// round-trip) while parameters and every master copy stay f32 and
+    /// reductions accumulate in f64
+    pub precision: Precision,
     /// worker execution engine (sequential coordinator vs threaded dist)
     pub dist: DistMode,
     pub seed: u64,
@@ -206,16 +208,12 @@ impl Trainer {
             })
             .collect();
         let mut comm = SimComm::new(cfg.workers);
-        if cfg.fp16_comm {
-            comm.wire_elem_bytes = 2;
-        }
+        comm.precision = cfg.precision;
         let dist = match cfg.dist {
             DistMode::Threaded => {
                 let mut de = DistEngine::new(&engine, cfg.workers);
-                if cfg.fp16_comm {
-                    let ring = Arc::get_mut(&mut de.ring).expect("fresh ring communicator");
-                    ring.wire_elem_bytes = 2;
-                }
+                let ring = Arc::get_mut(&mut de.ring).expect("fresh ring communicator");
+                ring.precision = cfg.precision;
                 Some(de)
             }
             DistMode::Sequential => None,
@@ -721,7 +719,10 @@ impl Trainer {
             }
         };
         let t_fwd_bwd = mean(&self.prof_exec_samples);
-        let param_bytes = self.model.total_param_count() as f64 * 4.0;
+        let n_params = self.model.total_param_count() as f64;
+        // parameters always travel f32; gradients travel at the wire width
+        let param_bytes = n_params * 4.0;
+        let grad_bytes = n_params * self.cfg.precision.wire_elem_bytes() as f64;
         StepProfile {
             // fwd:bwd ≈ 1:2 for conv nets
             t_forward: t_fwd_bwd / 3.0,
@@ -731,13 +732,14 @@ impl Trainer {
             t_update: mean(&self.prof_update),
             t_extra_bwd: 0.0,
             stats_bytes: mean(&self.prof_full_stats_bytes).max(self.full_stats_bytes()),
-            grad_bytes: param_bytes,
+            grad_bytes,
             param_bytes,
             n_stats: self.total_stats(),
         }
     }
 
-    /// Analytic per-GPU statistics payload at full refresh (packed f32).
+    /// Analytic per-GPU statistics payload at full refresh (packed
+    /// elements × the configured wire width).
     pub fn full_stats_bytes(&self) -> f64 {
         let mut elems = 0usize;
         for l in &self.model.kfac_layers {
@@ -748,7 +750,7 @@ impl Trainer {
                 elems += l.g_dim * (l.g_dim + 1) / 2;
             }
         }
-        elems as f64 * 4.0
+        elems as f64 * self.cfg.precision.wire_elem_bytes() as f64
     }
 
     /// Per-statistic refresh fractions (for Table 2's reduction metric),

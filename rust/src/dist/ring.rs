@@ -6,7 +6,7 @@
 //! publish-as-ready statistic slots (ReduceScatterV), a chunk-striped
 //! gradient AllReduce, and an owner-segment AllGatherV. Byte accounting
 //! is formula-identical to `SimComm` (per-GPU ring traffic, packed
-//! symmetric sizes, fp16 wire toggle), so the α-β cost model and the
+//! symmetric sizes, wire precision), so the α-β cost model and the
 //! Fig. 5/6 series keep working unchanged whichever communicator runs.
 //!
 //! ## Determinism contract
@@ -47,7 +47,8 @@ use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::Duration;
 
 use crate::collectives::comm::{
-    lane_mean, lane_mean_mats, ring_wire_bytes, Collective, CommStats, StatClass,
+    lane_mean, lane_mean_mats, ring_wire_bytes, wire_quantize_slice, Collective, CommStats,
+    Precision, StatClass,
 };
 use crate::linalg::{packed_len, Mat};
 
@@ -146,8 +147,13 @@ pub struct RingComm {
     pub chunk_elems: usize,
     /// communicate only the upper triangle of symmetric matrices (§5.2)
     pub symmetric_packing: bool,
-    /// bytes per element on the wire (4 = f32, 2 = fp16 communication)
-    pub wire_elem_bytes: u64,
+    /// wire precision for gradient/statistics payloads (§5.2): under
+    /// `Mixed`, published statistic mats and posted gradient lanes are
+    /// f16-quantized at serialization time and the reduced gradient mean
+    /// travels the AllGather half quantized — the same per-element op
+    /// sequence `SimComm` runs, so the engines stay bit-identical per
+    /// mode. Parameters always travel f32.
+    pub precision: Precision,
     stats: Mutex<CommStats>,
     step_stats: Mutex<CommStats>,
     stat: Mutex<StatCtl>,
@@ -166,7 +172,7 @@ impl RingComm {
             p: p.max(1),
             chunk_elems: DEFAULT_CHUNK_ELEMS,
             symmetric_packing: true,
-            wire_elem_bytes: 4,
+            precision: Precision::F32,
             stats: Mutex::new(CommStats::default()),
             step_stats: Mutex::new(CommStats::default()),
             stat: Mutex::new(StatCtl::default()),
@@ -185,7 +191,7 @@ impl RingComm {
     }
 
     fn elems_to_bytes(&self, elems: usize) -> u64 {
-        ring_wire_bytes(self.p, self.wire_elem_bytes, elems)
+        ring_wire_bytes(self.p, self.precision.wire_elem_bytes(), elems)
     }
 
     fn charge<F: Fn(&mut CommStats)>(&self, f: F) {
@@ -234,7 +240,9 @@ impl RingComm {
     /// Publish lane `lane`'s contribution to statistic `item` — called by
     /// a worker the moment the factor product finishes, which is what
     /// lets owners start reducing while other workers still compute.
-    pub fn publish_stat(&self, item: usize, lane: usize, m: Mat) {
+    pub fn publish_stat(&self, item: usize, lane: usize, mut m: Mat) {
+        // serialization point: the published copy is what travels the wire
+        wire_quantize_slice(self.precision, &mut m.data);
         let mut st = self.stat.lock().unwrap();
         assert!(st.active, "publish_stat outside a statistic round");
         assert!(st.slots[item][lane].is_none(), "duplicate publish for (item, lane)");
@@ -294,9 +302,13 @@ impl RingComm {
     /// Stage-4a inversion. `total_lanes` is the global lane count
     /// (identical on every rank). Non-blocking. A rank that posts must
     /// call [`RingComm::grad_finish`] exactly once this round.
-    pub fn grad_post(&self, my_lanes: Vec<(usize, Vec<f32>)>, total_lanes: usize) {
+    pub fn grad_post(&self, mut my_lanes: Vec<(usize, Vec<f32>)>, total_lanes: usize) {
         if my_lanes.is_empty() {
             return; // nothing to contribute — other ranks carry the round
+        }
+        // serialization point: posted lanes travel the wire
+        for (_, buf) in my_lanes.iter_mut() {
+            wire_quantize_slice(self.precision, buf);
         }
         let n = my_lanes[0].1.len();
         let mut st = self.grad.lock().unwrap();
@@ -376,6 +388,9 @@ impl RingComm {
                 let vals = frozen.iter().map(|lane| lane.as_ref().expect("lane posted")[s + i]);
                 *o = lane_mean(vals, total_lanes);
             }
+            // the mean travels the AllGather half of the ring AR —
+            // per-element quantization, so chunking can't perturb it
+            wire_quantize_slice(self.precision, &mut out);
             let mut st = self.grad.lock().unwrap();
             st.reduced[s..e].copy_from_slice(&out);
             st.done_chunks += 1;
@@ -458,7 +473,8 @@ impl RingComm {
             st.segs = Vec::new();
             drop(st);
             self.charge(|s| {
-                s.ag_params += self.elems_to_bytes(total_elems);
+                // parameters always travel f32 (§5.2)
+                s.ag_params += ring_wire_bytes(self.p, 4, total_elems);
                 s.num_ops += 1;
             });
             self.gather_cv.notify_all();
@@ -541,9 +557,10 @@ impl Collective for RingComm {
 
     fn all_gather_v_params(&self, total_elems: usize) {
         // parameters are shared in-process (owners write their layers in
-        // place); this is the accounting-only form, parity with SimComm
+        // place); this is the accounting-only form, parity with SimComm.
+        // Parameters always travel f32 (§5.2).
         self.charge(|s| {
-            s.ag_params += self.elems_to_bytes(total_elems);
+            s.ag_params += ring_wire_bytes(self.p, 4, total_elems);
             s.num_ops += 1;
         });
     }

@@ -129,17 +129,18 @@ pub fn env_data() -> Result<Option<String>> {
 
 /// An environment-aware [`TrainerBuilder`] for examples and benches:
 /// runtime from `SPNGD_BACKEND`, worker count from `SPNGD_WORKERS`, dist
-/// engine from `SPNGD_DIST`, data source from `SPNGD_DATA` (+
-/// `SPNGD_DATA_PATH` for disk sources; prefetch from `SPNGD_PREFETCH`
-/// inside the loader), schedule defaulted from the optimizer's
-/// [`Preconditioner::default_hparams`] (so adding an optimizer or a data
-/// source never edits the harness).
+/// engine from `SPNGD_DIST`, wire precision from `SPNGD_PRECISION`, data
+/// source from `SPNGD_DATA` (+ `SPNGD_DATA_PATH` for disk sources;
+/// prefetch from `SPNGD_PREFETCH` inside the loader), schedule defaulted
+/// from the optimizer's [`Preconditioner::default_hparams`] (so adding
+/// an optimizer or a data source never edits the harness).
 pub fn builder(model: &str, opt: Arc<dyn Preconditioner>) -> Result<TrainerBuilder> {
     let (manifest, engine) = load_runtime()?;
     let mut b = TrainerBuilder::new(model)
         .runtime(manifest, engine)
         .optimizer(opt)
         .workers(configured_workers())
+        .precision(crate::collectives::comm::Precision::from_env())
         .dist(DistMode::from_env());
     if let Some(name) = env_data()? {
         b = b.data(&name);

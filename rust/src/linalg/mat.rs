@@ -9,8 +9,14 @@
 //! loop there is no `a == 0.0` skip: the branch cost more than the
 //! multiplies on real factor data and silently dropped NaN/Inf
 //! propagation from the other operand.
+//!
+//! The register-tile inner loops run through [`crate::util::simd`]
+//! (AVX2/NEON with a scalar fallback, selected at runtime); every path
+//! keeps the per-element accumulation order, so the blocked kernels stay
+//! bit-exact against the references on every CPU.
 
 use crate::util::pool::{self, Pool};
+use crate::util::simd;
 
 /// k-block edge for the blocked matmul: one block of the B operand's rows
 /// (KC·n floats) stays L1/L2-resident while a row band streams past it.
@@ -316,12 +322,8 @@ fn mm_tile2(
     let o0 = &mut o0[..n];
     let o1 = &mut o1[..n];
     for p in p0..p1 {
-        let (x0, x1) = (a0[p], a1[p]);
         let brow = &b[p * n..p * n + n];
-        for j in 0..n {
-            o0[j] += x0 * brow[j];
-            o1[j] += x1 * brow[j];
-        }
+        simd::axpy2(a0[p], a1[p], brow, o0, o1);
     }
 }
 
@@ -330,11 +332,8 @@ fn mm_tile2(
 fn mm_tile1(a0: &[f32], b: &[f32], p0: usize, p1: usize, n: usize, o0: &mut [f32]) {
     let o0 = &mut o0[..n];
     for p in p0..p1 {
-        let x0 = a0[p];
         let brow = &b[p * n..p * n + n];
-        for j in 0..n {
-            o0[j] += x0 * brow[j];
-        }
+        simd::axpy(a0[p], brow, o0);
     }
 }
 
@@ -346,32 +345,9 @@ fn mm_tb_rows(a: &[f32], b: &[f32], out: &mut [f32], i0: usize, i1: usize, k: us
         let arow = &a[i * k..(i + 1) * k];
         let orow = &mut out[(i - i0) * n..(i - i0 + 1) * n];
         for j in 0..n {
-            orow[j] = dot8(arow, &b[j * k..(j + 1) * k]);
+            orow[j] = simd::dot(arow, &b[j * k..(j + 1) * k]);
         }
     }
-}
-
-/// Dot product with 8 independent accumulator lanes (vectorizable without
-/// reassociating the whole sum).
-#[inline]
-fn dot8(a: &[f32], b: &[f32]) -> f32 {
-    let k = a.len();
-    let lanes = k / 8 * 8;
-    let mut acc = [0.0f32; 8];
-    let mut p = 0;
-    while p < lanes {
-        let av = &a[p..p + 8];
-        let bv = &b[p..p + 8];
-        for l in 0..8 {
-            acc[l] += av[l] * bv[l];
-        }
-        p += 8;
-    }
-    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]) + (acc[4] + acc[5]) + (acc[6] + acc[7]);
-    for t in lanes..k {
-        s += a[t] * b[t];
-    }
-    s
 }
 
 #[cfg(test)]

@@ -44,6 +44,28 @@ pub fn packed_savings_bytes(n: usize) -> usize {
     (n * n - packed_len(n)) * std::mem::size_of::<f32>()
 }
 
+/// Copy the column panel [j0, j1) of rows [t0, t1) of a row-major slice
+/// with leading dimension `c` into a dense (t1−t0) × (j1−j0) panel,
+/// reusing `out`'s allocation. The SYRK tile loop packs the active
+/// j-tile once per row block so its inner axpy streams a contiguous,
+/// cache-resident operand instead of striding by the full factor width.
+pub fn pack_panel(
+    x: &[f32],
+    c: usize,
+    t0: usize,
+    t1: usize,
+    j0: usize,
+    j1: usize,
+    out: &mut Vec<f32>,
+) {
+    debug_assert!(j1 <= c && t1 * c <= x.len());
+    out.clear();
+    out.reserve((t1 - t0) * (j1 - j0));
+    for t in t0..t1 {
+        out.extend_from_slice(&x[t * c + j0..t * c + j1]);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -90,5 +112,16 @@ mod tests {
     fn savings_grow_quadratically() {
         assert_eq!(packed_savings_bytes(1), 0);
         assert!(packed_savings_bytes(256) > packed_savings_bytes(128) * 3);
+    }
+
+    #[test]
+    fn pack_panel_extracts_tile() {
+        // 3 rows × 4 cols, values encode (row, col) as 10·t + j
+        let x: Vec<f32> = (0..12).map(|i| (10 * (i / 4) + i % 4) as f32).collect();
+        let mut panel = vec![99.0; 3]; // stale contents must be dropped
+        pack_panel(&x, 4, 1, 3, 1, 3, &mut panel);
+        assert_eq!(panel, vec![11., 12., 21., 22.]);
+        pack_panel(&x, 4, 0, 1, 0, 4, &mut panel);
+        assert_eq!(panel, vec![0., 1., 2., 3.]);
     }
 }

@@ -14,6 +14,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use spngd::collectives::comm::Precision;
 use spngd::collectives::cost::ClusterModel;
 use spngd::coordinator::{DistMode, Trainer, TrainerBuilder};
 use spngd::data::{self, AugmentCfg};
@@ -110,6 +111,15 @@ fn optimizer_from_args(
     }
 }
 
+/// Resolve the wire precision: `--precision f32|mixed`, with the legacy
+/// `--fp16-comm` flag as an alias for `--precision mixed`.
+fn precision_from_args(parsed: &spngd::util::cli::Parsed) -> Result<Precision> {
+    if parsed.get_bool("fp16-comm") {
+        return Ok(Precision::Mixed);
+    }
+    Precision::parse(parsed.get("precision")).map_err(|e| anyhow::anyhow!("--precision: {e}"))
+}
+
 fn trainer_from_args(parsed: &spngd::util::cli::Parsed) -> Result<Trainer> {
     let model = parsed.get("model").to_string();
     if parsed.get("backend") == "native" {
@@ -163,7 +173,7 @@ fn trainer_from_args(parsed: &spngd::util::cli::Parsed) -> Result<Trainer> {
         .augment(augment)
         .weight_rescale(parsed.get_bool("rescale"))
         .clip_update_ratio(parsed.get_f64("clip") as f32)
-        .fp16_comm(parsed.get_bool("fp16-comm"))
+        .precision(precision_from_args(parsed)?)
         .dist(if parsed.get_bool("dist") { DistMode::Threaded } else { DistMode::from_env() })
         .seed(parsed.get_u64("seed"))
         .data(parsed.get("data"))
@@ -211,7 +221,8 @@ fn train_args() -> Args {
         .flag("table2-hp", "use the paper's Table 2 hyperparameters")
         .flag("augment", "enable running mixup + random erasing")
         .flag("rescale", "enable Normalizing Weights (Eq. 24)")
-        .flag("fp16-comm", "half-precision wire format for collectives (§5.2)")
+        .opt("precision", "f32", "wire precision for grad/stat collectives: f32 | mixed (§5.2)")
+        .flag("fp16-comm", "alias for --precision mixed")
         .opt("clip", "0.3", "trust-ratio update clip (0 = off)")
         .opt("eval-every", "0", "evaluate every N steps (0 = only at end)")
         .opt("csv", "", "write per-step CSV to this path")
@@ -275,7 +286,8 @@ fn cmd_simulate() -> Result<()> {
         .opt("probe-steps", "4", "steps to measure the profile")
         .opt("gpus", "1,4,16,64,128,256,512,1024", "GPU counts")
         .opt("stale-fraction", "0.08", "assumed stale refresh fraction")
-        .flag("fp16-comm", "half-precision wire format for collectives (§5.2)")
+        .opt("precision", "f32", "wire precision for grad/stat collectives: f32 | mixed (§5.2)")
+        .flag("fp16-comm", "alias for --precision mixed")
         .parse_env(2)
         .map_err(|u| anyhow::anyhow!("{u}"))?;
     let (manifest, engine) = load(parsed.get("backend"), parsed.get("artifacts"))?;
@@ -287,7 +299,7 @@ fn cmd_simulate() -> Result<()> {
         .optimizer(Arc::new(SpNgd { lambda, ..SpNgd::default() }))
         .schedule(Schedule::new(hp, 100))
         .workers(2)
-        .fp16_comm(parsed.get_bool("fp16-comm"))
+        .precision(precision_from_args(&parsed)?)
         .dataset_len(4096)
         .data_seed(7)
         .build()?;

@@ -9,10 +9,18 @@
 //! `*_ref` oracle for differential tests and the naive bench baseline
 //! (`linalg::set_reference_kernels` routes the default entry points back
 //! to them).
+//!
+//! Inner loops are vectorized through [`crate::util::simd`] and the
+//! im2col/col2im bodies move whole valid kw-spans with `copy_from_slice`
+//! / zipped adds; wide SYRK factors additionally tile the j axis over a
+//! packed panel ([`crate::linalg::packed::pack_panel`]). Every fast path
+//! keeps the per-element accumulation order of its `*_ref` oracle, so
+//! the differential suite pins them bit-for-bit.
 
-use crate::linalg::{self, Mat, Scratch};
+use crate::linalg::{self, packed, Mat, Scratch};
 use crate::runtime::HostTensor;
 use crate::util::pool::{self, Pool};
+use crate::util::simd;
 
 /// SYRK row-band work (rows · cols²) below which parallel dispatch costs
 /// more than it saves.
@@ -67,7 +75,11 @@ pub fn im2col_into_with(
     let ckk = c * k * k;
     out.reset(b * ho * wo, ckk);
     let per_image = ho * wo * ckk;
-    if b <= 1 || pool.size() <= 1 || linalg::reference_kernels() {
+    if linalg::reference_kernels() {
+        for (bi, chunk) in out.data.chunks_mut(per_image.max(1)).enumerate() {
+            im2col_image_ref(x, bi, k, stride, pad, ho, wo, chunk);
+        }
+    } else if b <= 1 || pool.size() <= 1 {
         for (bi, chunk) in out.data.chunks_mut(per_image.max(1)).enumerate() {
             im2col_image(x, bi, k, stride, pad, ho, wo, chunk);
         }
@@ -88,14 +100,56 @@ pub fn im2col_ref(x: &HostTensor, k: usize, stride: usize, pad: usize) -> (Mat, 
     let mut out = Mat::zeros(b * ho * wo, ckk);
     let per_image = ho * wo * ckk;
     for (bi, chunk) in out.data.chunks_mut(per_image.max(1)).enumerate() {
-        im2col_image(x, bi, k, stride, pad, ho, wo, chunk);
+        im2col_image_ref(x, bi, k, stride, pad, ho, wo, chunk);
     }
     (out, ho, wo)
 }
 
 /// Fill the patch rows of one image: `chunk` is the (ho*wo, C*k*k) block
-/// of rows belonging to batch element `bi`, already zeroed.
+/// of rows belonging to batch element `bi`, already zeroed. Each valid
+/// kw-span is one contiguous `copy_from_slice` (a pure copy — identical
+/// bits to the per-element reference body).
 fn im2col_image(
+    x: &HostTensor,
+    bi: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    ho: usize,
+    wo: usize,
+    chunk: &mut [f32],
+) {
+    let (c, h, w) = (x.shape[1], x.shape[2], x.shape[3]);
+    let ckk = c * k * k;
+    for oy in 0..ho {
+        for ox in 0..wo {
+            let base = (oy * wo + ox) * ckk;
+            let x0 = ox * stride;
+            let kw_lo = pad.saturating_sub(x0);
+            let kw_hi = k.min((w + pad).saturating_sub(x0));
+            if kw_lo >= kw_hi {
+                continue;
+            }
+            let len = kw_hi - kw_lo;
+            let src_x = x0 + kw_lo - pad;
+            for ci in 0..c {
+                for kh in 0..k {
+                    let y = (oy * stride + kh) as isize - pad as isize;
+                    if y < 0 || y >= h as isize {
+                        continue;
+                    }
+                    let src = ((bi * c + ci) * h + y as usize) * w + src_x;
+                    let dst = base + (ci * k + kh) * k + kw_lo;
+                    chunk[dst..dst + len].copy_from_slice(&x.data[src..src + len]);
+                }
+            }
+        }
+    }
+}
+
+/// The pre-optimization per-element body of [`im2col_image`] — the naive
+/// baseline and differential oracle (bounds handled element-wise).
+fn im2col_image_ref(
     x: &HostTensor,
     bi: usize,
     k: usize,
@@ -184,7 +238,11 @@ pub fn col2im_into_with(
     assert_eq!(dx.shape, xshape, "col2im output shape mismatch");
     dx.data.fill(0.0);
     let per_image = c * h * w;
-    if b <= 1 || pool.size() <= 1 || linalg::reference_kernels() {
+    if linalg::reference_kernels() {
+        for (bi, img) in dx.data.chunks_mut(per_image.max(1)).enumerate() {
+            col2im_image_ref(dpatches, bi, c, h, w, k, stride, pad, ho, wo, img);
+        }
+    } else if b <= 1 || pool.size() <= 1 {
         for (bi, img) in dx.data.chunks_mut(per_image.max(1)).enumerate() {
             col2im_image(dpatches, bi, c, h, w, k, stride, pad, ho, wo, img);
         }
@@ -212,14 +270,61 @@ pub fn col2im_ref(
     let mut dx = HostTensor::zeros(vec![b, c, h, w]);
     let per_image = c * h * w;
     for (bi, img) in dx.data.chunks_mut(per_image.max(1)).enumerate() {
-        col2im_image(dpatches, bi, c, h, w, k, stride, pad, ho, wo, img);
+        col2im_image_ref(dpatches, bi, c, h, w, k, stride, pad, ho, wo, img);
     }
     dx
 }
 
 /// Fold the patch-gradient rows of one image: `img` is the (C, H, W)
-/// block of batch element `bi`, already zeroed.
+/// block of batch element `bi`, already zeroed. Each valid kw-span is
+/// one zipped add over contiguous slices; the per-element accumulation
+/// order matches the reference body exactly.
 fn col2im_image(
+    dpatches: &Mat,
+    bi: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    ho: usize,
+    wo: usize,
+    img: &mut [f32],
+) {
+    let ckk = c * k * k;
+    for oy in 0..ho {
+        for ox in 0..wo {
+            let base = ((bi * ho + oy) * wo + ox) * ckk;
+            let x0 = ox * stride;
+            let kw_lo = pad.saturating_sub(x0);
+            let kw_hi = k.min((w + pad).saturating_sub(x0));
+            if kw_lo >= kw_hi {
+                continue;
+            }
+            let len = kw_hi - kw_lo;
+            let dst_x = x0 + kw_lo - pad;
+            for ci in 0..c {
+                for kh in 0..k {
+                    let y = (oy * stride + kh) as isize - pad as isize;
+                    if y < 0 || y >= h as isize {
+                        continue;
+                    }
+                    let dst = (ci * h + y as usize) * w + dst_x;
+                    let src = base + (ci * k + kh) * k + kw_lo;
+                    let span = &dpatches.data[src..src + len];
+                    for (o, v) in img[dst..dst + len].iter_mut().zip(span) {
+                        *o += *v;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The pre-optimization per-element body of [`col2im_image`] — the naive
+/// baseline and differential oracle.
+fn col2im_image_ref(
     dpatches: &Mat,
     bi: usize,
     c: usize,
@@ -326,19 +431,58 @@ fn syrk_slice_ref(x: &[f32], rows: usize, cols: usize, scale: f32) -> Mat {
     out
 }
 
+/// Factor width at which the SYRK band switches to the packed j-tiled
+/// walk (below it the whole x row is L1-resident and direct is faster).
+const SYRK_PACK_MIN_C: usize = 160;
+
+/// j-tile width of the packed SYRK walk: one panel row (≤ 192 f32) plus
+/// the active accumulator span stay cache-resident.
+const SYRK_JT: usize = 192;
+
+/// Rows packed per panel in the tiled SYRK walk.
+const SYRK_TT: usize = 64;
+
 /// Accumulate the upper triangle of XᵀX over rows [t0, t1) into `acc`
-/// (c×c, row-major, only i ≤ j written) — the per-band body. Row-wise
-/// walk: one x row stays register/L1-resident per outer-product update.
+/// (c×c, row-major, only i ≤ j written) — the per-band body. Narrow
+/// factors use a direct row-wise walk (one x row register/L1-resident
+/// per outer-product update); wide factors tile the j axis over a packed
+/// panel. Both walks feed [`simd::axpy_widen`] and add t-ascending per
+/// element, so every path is bit-identical to the naive reference.
 fn syrk_band(x: &[f32], t0: usize, t1: usize, c: usize, acc: &mut [f64]) {
-    for t in t0..t1 {
-        let xrow = &x[t * c..(t + 1) * c];
-        for i in 0..c {
-            let xi = xrow[i] as f64;
-            let arow = &mut acc[i * c..(i + 1) * c];
-            for j in i..c {
-                arow[j] += xi * xrow[j] as f64;
+    if c < SYRK_PACK_MIN_C {
+        for t in t0..t1 {
+            let xrow = &x[t * c..(t + 1) * c];
+            for i in 0..c {
+                let xi = xrow[i] as f64;
+                simd::axpy_widen(xi, &xrow[i..], &mut acc[i * c + i..(i + 1) * c]);
             }
         }
+        return;
+    }
+    let mut panel = Vec::new();
+    let mut j0 = 0;
+    while j0 < c {
+        let j1 = (j0 + SYRK_JT).min(c);
+        let jw = j1 - j0;
+        let mut tb0 = t0;
+        while tb0 < t1 {
+            let tb1 = (tb0 + SYRK_TT).min(t1);
+            packed::pack_panel(x, c, tb0, tb1, j0, j1, &mut panel);
+            for (ti, t) in (tb0..tb1).enumerate() {
+                let xrow = &x[t * c..(t + 1) * c];
+                let prow = &panel[ti * jw..(ti + 1) * jw];
+                for i in 0..j1 {
+                    let xi = xrow[i] as f64;
+                    if i < j0 {
+                        simd::axpy_widen(xi, prow, &mut acc[i * c + j0..i * c + j1]);
+                    } else {
+                        simd::axpy_widen(xi, &prow[i - j0..], &mut acc[i * c + i..i * c + j1]);
+                    }
+                }
+            }
+            tb0 = tb1;
+        }
+        j0 = j1;
     }
 }
 

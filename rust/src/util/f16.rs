@@ -1,0 +1,205 @@
+//! Software IEEE 754 binary16 codec — the mixed-precision wire format.
+//!
+//! `SPNGD_PRECISION=mixed` moves gradient AllReduce and statistics
+//! ReduceScatterV payloads over the wire as f16 while every master copy
+//! stays f32 and every reduction accumulates in f64 (the paper's
+//! fp16-comm / fp32-master recipe, §5.2). No `half` crate is available
+//! offline, so the conversion is implemented here: round-to-nearest-even
+//! encode with gradual underflow (subnormals), overflow to ±inf, and
+//! NaN payload preservation — so the 16-bit space round-trips exactly
+//! (`f16 → f32 → f16` is the identity on all 65536 bit patterns,
+//! asserted exhaustively in the tests below).
+
+/// Encode an f32 to f16 bits, rounding to nearest-even.
+pub fn f16_from_f32(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let abs = bits & 0x7fff_ffff;
+    if abs > 0x7f80_0000 {
+        // NaN: keep the top 10 payload bits; force a nonzero payload so
+        // the result stays a NaN (never collapses to an infinity)
+        let mut p = ((abs >> 13) & 0x3ff) as u16;
+        if p == 0 {
+            p = 0x200;
+        }
+        return sign | 0x7c00 | p;
+    }
+    let exp = (abs >> 23) as i32 - 112; // biased f16 exponent
+    if exp >= 31 {
+        return sign | 0x7c00; // ±inf (and anything ≥ 2^16)
+    }
+    if exp >= 1 {
+        // normal: truncate 23 → 10 mantissa bits, then RNE on the 13
+        // dropped bits; a rounding carry walks into the exponent and
+        // correctly sends [65520, 65536) to +inf
+        let man = abs & 0x7f_ffff;
+        let mut h = sign | ((exp as u16) << 10) | ((man >> 13) as u16);
+        let rem = man & 0x1fff;
+        if rem > 0x1000 || (rem == 0x1000 && (h & 1) == 1) {
+            h += 1;
+        }
+        return h;
+    }
+    if exp < -10 {
+        return sign; // underflows past half the smallest subnormal
+    }
+    // subnormal: shift the 24-bit significand down to a 2^-24 ulp grid
+    let s = (abs & 0x7f_ffff) | 0x80_0000;
+    let shift = (14 - exp) as u32; // 14..=24
+    let r = (s >> shift) as u16;
+    let rem = s & ((1u32 << shift) - 1);
+    let half = 1u32 << (shift - 1);
+    let mut h = sign | r;
+    if rem > half || (rem == half && (r & 1) == 1) {
+        h += 1; // a carry lands on the smallest normal — still correct
+    }
+    h
+}
+
+/// Decode f16 bits to f32 (exact — every f16 value is representable).
+pub fn f32_from_f16(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13) // inf / NaN (payload preserved)
+    } else if exp == 0 {
+        if man == 0 {
+            sign // ±0
+        } else {
+            // subnormal: normalize into an f32 exponent
+            let mut e = 113u32;
+            let mut m = man;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x3ff) << 13)
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// The wire round-trip: what a value looks like after moving as f16.
+#[inline]
+pub fn round_trip(x: f32) -> f32 {
+    f32_from_f16(f16_from_f32(x))
+}
+
+/// Quantize a buffer in place through the f16 wire format.
+pub fn quantize_slice(buf: &mut [f32]) {
+    for v in buf.iter_mut() {
+        *v = round_trip(*v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn known_encodings() {
+        assert_eq!(f16_from_f32(0.0), 0x0000);
+        assert_eq!(f16_from_f32(-0.0), 0x8000);
+        assert_eq!(f16_from_f32(1.0), 0x3c00);
+        assert_eq!(f16_from_f32(-2.0), 0xc000);
+        assert_eq!(f16_from_f32(0.5), 0x3800);
+        assert_eq!(f16_from_f32(65504.0), 0x7bff); // f16 max
+        assert_eq!(f16_from_f32(f32::INFINITY), 0x7c00);
+        assert_eq!(f16_from_f32(f32::NEG_INFINITY), 0xfc00);
+        // smallest subnormal 2^-24, smallest normal 2^-14
+        assert_eq!(f16_from_f32(2.0f32.powi(-24)), 0x0001);
+        assert_eq!(f16_from_f32(2.0f32.powi(-14)), 0x0400);
+    }
+
+    #[test]
+    fn rounding_boundaries() {
+        // 65520 = midpoint between 65504 and 2^16 — ties-to-even → inf
+        assert_eq!(f16_from_f32(65520.0), 0x7c00);
+        assert_eq!(f16_from_f32(65519.9), 0x7bff);
+        assert_eq!(f16_from_f32(1e9), 0x7c00);
+        // half the smallest subnormal is a tie against zero (even) → 0
+        assert_eq!(f16_from_f32(2.0f32.powi(-25)), 0x0000);
+        assert_eq!(f16_from_f32(2.0f32.powi(-25) * 1.5), 0x0001);
+        // 1 + 2^-11 is the midpoint between 1.0 and 1+2^-10 → even (1.0)
+        assert_eq!(f16_from_f32(1.0 + 2.0f32.powi(-11)), 0x3c00);
+        assert_eq!(f16_from_f32(1.0 + 2.0f32.powi(-11) + 2.0f32.powi(-18)), 0x3c01);
+    }
+
+    #[test]
+    fn nan_stays_nan() {
+        let q = round_trip(f32::NAN);
+        assert!(q.is_nan());
+        // a NaN whose payload truncates to zero must not become inf
+        let evil = f32::from_bits(0x7f80_0001);
+        assert!(evil.is_nan());
+        assert!(f32_from_f16(f16_from_f32(evil)).is_nan());
+    }
+
+    #[test]
+    fn exhaustive_h2f2h_identity() {
+        // decode→encode is the identity on the entire 16-bit space: no
+        // panic, no drift, NaN payloads included
+        for h in 0..=u16::MAX {
+            let f = f32_from_f16(h);
+            let back = f16_from_f32(f);
+            assert_eq!(back, h, "h={h:#06x} f={f}");
+        }
+    }
+
+    #[test]
+    fn round_trip_is_idempotent_and_bounded() {
+        prop::check(
+            101,
+            500,
+            64,
+            |rng: &mut Rng, size| prop::gen::vec_f32(rng, size, 1000.0),
+            |v| {
+                v.iter().all(|&x| {
+                    let q = round_trip(x);
+                    // idempotent: a second trip changes nothing
+                    if round_trip(q).to_bits() != q.to_bits() {
+                        return false;
+                    }
+                    // relative error ≤ 2^-11 in the f16 normal range
+                    if x.abs() >= 6.2e-5 && x.abs() <= 65504.0 {
+                        return (q - x).abs() <= x.abs() * 1.0 / 2048.0;
+                    }
+                    true
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn arbitrary_f32_bits_never_panic() {
+        // fuzz the encoder over raw bit patterns (NaNs, subnormals, inf)
+        prop::check(
+            103,
+            2000,
+            16,
+            |rng: &mut Rng, _| f32::from_bits((rng.f64() * u32::MAX as f64) as u32),
+            |&x| {
+                let h = f16_from_f32(x);
+                let f = f32_from_f16(h);
+                // classes are preserved
+                (x.is_nan() && f.is_nan()) || (!x.is_nan() && !f.is_nan())
+            },
+        );
+    }
+
+    #[test]
+    fn quantize_slice_matches_elementwise() {
+        let mut rng = Rng::new(107);
+        let v: Vec<f32> = (0..100).map(|_| (rng.f32() * 2.0 - 1.0) * 50.0).collect();
+        let mut q = v.clone();
+        quantize_slice(&mut q);
+        for (a, b) in v.iter().zip(q.iter()) {
+            assert_eq!(round_trip(*a).to_bits(), b.to_bits());
+        }
+    }
+}

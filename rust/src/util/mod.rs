@@ -3,12 +3,15 @@
 //! Only the `xla` crate's vendored dependency closure is available offline,
 //! so each of these replaces a crate a production project would normally
 //! pull in: rng≈`rand`, json≈`serde_json`, cli≈`clap`, pool≈`rayon`,
-//! prop≈`proptest`, stats+bench≈`criterion`, log≈`tracing`.
+//! prop≈`proptest`, stats+bench≈`criterion`, log≈`tracing`,
+//! f16≈`half`, simd≈`wide`.
 
 pub mod cli;
+pub mod f16;
 pub mod json;
 pub mod log;
 pub mod pool;
 pub mod prop;
 pub mod rng;
+pub mod simd;
 pub mod stats;

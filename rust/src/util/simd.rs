@@ -1,0 +1,520 @@
+//! Runtime-dispatched SIMD microkernels for the hot inner loops.
+//!
+//! The blocked matmul/SYRK kernels in `linalg` and `runtime::native` are
+//! bit-exact against their naive `*_ref` oracles because they keep the
+//! per-element accumulation order. These vector paths preserve that
+//! contract: every operation is an element-wise multiply followed by an
+//! element-wise add (never a fused multiply-add, which would change the
+//! rounding), and the `dot` reduction stores its 8 vector lanes and
+//! applies the exact same pairwise reduce tree as the scalar tile. So
+//! scalar, AVX2 and NEON all produce identical bits — the dispatch mode
+//! is a pure performance knob, safe to flip at any time.
+//!
+//! Dispatch is resolved once (cached in an atomic): `SPNGD_SIMD=scalar`
+//! forces the fallback, `SPNGD_SIMD=native` (or unset) picks the best
+//! path the CPU supports — AVX2 on x86-64 (checked at runtime), NEON on
+//! aarch64 (baseline), scalar everywhere else. Tests and benches can
+//! override via [`force`].
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+const UNRESOLVED: u8 = 0;
+const SCALAR: u8 = 1;
+const NATIVE: u8 = 2;
+
+static MODE: AtomicU8 = AtomicU8::new(UNRESOLVED);
+
+#[cfg(target_arch = "x86_64")]
+const NATIVE_NAME: &str = "avx2";
+#[cfg(target_arch = "aarch64")]
+const NATIVE_NAME: &str = "neon";
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+const NATIVE_NAME: &str = "scalar";
+
+fn native_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        return std::is_x86_feature_detected!("avx2");
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return true;
+    }
+    #[allow(unreachable_code)]
+    false
+}
+
+fn resolve() -> u8 {
+    if let Ok(v) = std::env::var("SPNGD_SIMD") {
+        if v == "scalar" {
+            return SCALAR;
+        }
+    }
+    if native_available() {
+        NATIVE
+    } else {
+        SCALAR
+    }
+}
+
+#[inline]
+fn mode() -> u8 {
+    let m = MODE.load(Ordering::Relaxed);
+    if m != UNRESOLVED {
+        return m;
+    }
+    let r = resolve();
+    MODE.store(r, Ordering::Relaxed);
+    r
+}
+
+/// Force a dispatch mode: `"scalar"` or `"native"` (test/bench hook —
+/// the env override is `SPNGD_SIMD`). `"native"` resolves to the best
+/// path this CPU actually supports, so forcing it is always sound; and
+/// since all paths are bit-identical, flipping modes mid-run (even from
+/// concurrent tests) can never change results.
+pub fn force(mode: &str) {
+    let m = if mode == "scalar" || !native_available() { SCALAR } else { NATIVE };
+    MODE.store(m, Ordering::Relaxed);
+}
+
+/// Name of the active kernel path: `"avx2"`, `"neon"` or `"scalar"`
+/// (recorded in `BENCH_native.json`'s `simd` dimension).
+pub fn kernel_name() -> &'static str {
+    if mode() == NATIVE {
+        NATIVE_NAME
+    } else {
+        "scalar"
+    }
+}
+
+/// o[j] += x * b[j] over o.len() elements (b at least as long).
+#[inline]
+pub fn axpy(x: f32, b: &[f32], o: &mut [f32]) {
+    debug_assert!(b.len() >= o.len());
+    if mode() == NATIVE {
+        #[cfg(target_arch = "x86_64")]
+        {
+            unsafe { avx2::axpy(x, b, o) };
+            return;
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            unsafe { neon::axpy(x, b, o) };
+            return;
+        }
+    }
+    axpy_scalar(x, b, o);
+}
+
+/// Two-row axpy: o0[j] += x0 * b[j]; o1[j] += x1 * b[j]. The B row is
+/// loaded once and feeds both accumulator rows (the register tile of the
+/// blocked matmul).
+#[inline]
+pub fn axpy2(x0: f32, x1: f32, b: &[f32], o0: &mut [f32], o1: &mut [f32]) {
+    debug_assert!(b.len() >= o0.len() && o0.len() == o1.len());
+    if mode() == NATIVE {
+        #[cfg(target_arch = "x86_64")]
+        {
+            unsafe { avx2::axpy2(x0, x1, b, o0, o1) };
+            return;
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            unsafe { neon::axpy2(x0, x1, b, o0, o1) };
+            return;
+        }
+    }
+    axpy2_scalar(x0, x1, b, o0, o1);
+}
+
+/// Dot product with 8 independent accumulator lanes reduced by the fixed
+/// pairwise tree `(0+1)+(2+3) + (4+5)+(6+7)` plus a scalar tail — the
+/// exact summation order of the scalar 8-lane tile, on every path.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert!(b.len() >= a.len());
+    if mode() == NATIVE {
+        #[cfg(target_arch = "x86_64")]
+        {
+            return unsafe { avx2::dot(a, b) };
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            return unsafe { neon::dot(a, b) };
+        }
+    }
+    dot_scalar(a, b)
+}
+
+/// acc[j] += x * xs[j] as f64 over acc.len() elements — the widening
+/// accumulate of the SYRK factor path (f32 activations into the f64
+/// accumulator that keeps statistics bit-stable across thread counts).
+#[inline]
+pub fn axpy_widen(x: f64, xs: &[f32], acc: &mut [f64]) {
+    debug_assert!(xs.len() >= acc.len());
+    if mode() == NATIVE {
+        #[cfg(target_arch = "x86_64")]
+        {
+            unsafe { avx2::axpy_widen(x, xs, acc) };
+            return;
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            unsafe { neon::axpy_widen(x, xs, acc) };
+            return;
+        }
+    }
+    axpy_widen_scalar(x, xs, acc);
+}
+
+// ---- scalar fallback (and the semantic definition of each op) ----
+
+fn axpy_scalar(x: f32, b: &[f32], o: &mut [f32]) {
+    for (oj, bj) in o.iter_mut().zip(b) {
+        *oj += x * bj;
+    }
+}
+
+fn axpy2_scalar(x0: f32, x1: f32, b: &[f32], o0: &mut [f32], o1: &mut [f32]) {
+    let n = o0.len();
+    let o1 = &mut o1[..n];
+    let b = &b[..n];
+    for j in 0..n {
+        o0[j] += x0 * b[j];
+        o1[j] += x1 * b[j];
+    }
+}
+
+fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let k = a.len();
+    let lanes = k / 8 * 8;
+    let mut acc = [0.0f32; 8];
+    let mut p = 0;
+    while p < lanes {
+        let av = &a[p..p + 8];
+        let bv = &b[p..p + 8];
+        for l in 0..8 {
+            acc[l] += av[l] * bv[l];
+        }
+        p += 8;
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]) + (acc[4] + acc[5]) + (acc[6] + acc[7]);
+    for t in lanes..k {
+        s += a[t] * b[t];
+    }
+    s
+}
+
+fn axpy_widen_scalar(x: f64, xs: &[f32], acc: &mut [f64]) {
+    for (aj, xj) in acc.iter_mut().zip(xs) {
+        *aj += x * *xj as f64;
+    }
+}
+
+// ---- AVX2 (x86-64, runtime-detected) ----
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    // Callers guarantee AVX2 is available (dispatch only selects this
+    // module after `is_x86_feature_detected!("avx2")`). All loads/stores
+    // are unaligned and bounded by the slice lengths checked below.
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(x: f32, b: &[f32], o: &mut [f32]) {
+        let n = o.len();
+        let xv = _mm256_set1_ps(x);
+        let mut j = 0;
+        while j + 8 <= n {
+            let bv = _mm256_loadu_ps(b.as_ptr().add(j));
+            let ov = _mm256_loadu_ps(o.as_ptr().add(j));
+            _mm256_storeu_ps(o.as_mut_ptr().add(j), _mm256_add_ps(ov, _mm256_mul_ps(xv, bv)));
+            j += 8;
+        }
+        while j < n {
+            o[j] += x * b[j];
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy2(x0: f32, x1: f32, b: &[f32], o0: &mut [f32], o1: &mut [f32]) {
+        let n = o0.len();
+        let x0v = _mm256_set1_ps(x0);
+        let x1v = _mm256_set1_ps(x1);
+        let mut j = 0;
+        while j + 8 <= n {
+            let bv = _mm256_loadu_ps(b.as_ptr().add(j));
+            let o0v = _mm256_loadu_ps(o0.as_ptr().add(j));
+            let o1v = _mm256_loadu_ps(o1.as_ptr().add(j));
+            _mm256_storeu_ps(o0.as_mut_ptr().add(j), _mm256_add_ps(o0v, _mm256_mul_ps(x0v, bv)));
+            _mm256_storeu_ps(o1.as_mut_ptr().add(j), _mm256_add_ps(o1v, _mm256_mul_ps(x1v, bv)));
+            j += 8;
+        }
+        while j < n {
+            o0[j] += x0 * b[j];
+            o1[j] += x1 * b[j];
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let k = a.len();
+        let lanes = k / 8 * 8;
+        let mut accv = _mm256_setzero_ps();
+        let mut p = 0;
+        while p < lanes {
+            let av = _mm256_loadu_ps(a.as_ptr().add(p));
+            let bv = _mm256_loadu_ps(b.as_ptr().add(p));
+            accv = _mm256_add_ps(accv, _mm256_mul_ps(av, bv));
+            p += 8;
+        }
+        let mut acc = [0.0f32; 8];
+        _mm256_storeu_ps(acc.as_mut_ptr(), accv);
+        let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]) + (acc[4] + acc[5]) + (acc[6] + acc[7]);
+        for t in lanes..k {
+            s += a[t] * b[t];
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_widen(x: f64, xs: &[f32], acc: &mut [f64]) {
+        let n = acc.len();
+        let xv = _mm256_set1_pd(x);
+        let mut j = 0;
+        while j + 4 <= n {
+            let sv = _mm_loadu_ps(xs.as_ptr().add(j));
+            let wv = _mm256_cvtps_pd(sv);
+            let av = _mm256_loadu_pd(acc.as_ptr().add(j));
+            _mm256_storeu_pd(acc.as_mut_ptr().add(j), _mm256_add_pd(av, _mm256_mul_pd(xv, wv)));
+            j += 4;
+        }
+        while j < n {
+            acc[j] += x * xs[j] as f64;
+            j += 1;
+        }
+    }
+}
+
+// ---- NEON (aarch64 baseline) ----
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    // NEON is part of the aarch64 baseline; the intrinsics are still
+    // `unsafe fn` in std::arch. No `vmlaq_f32` anywhere — that is a
+    // fused FMLA and would break bit-parity with the scalar path.
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy(x: f32, b: &[f32], o: &mut [f32]) {
+        let n = o.len();
+        let xv = vdupq_n_f32(x);
+        let mut j = 0;
+        while j + 4 <= n {
+            let bv = vld1q_f32(b.as_ptr().add(j));
+            let ov = vld1q_f32(o.as_ptr().add(j));
+            vst1q_f32(o.as_mut_ptr().add(j), vaddq_f32(ov, vmulq_f32(xv, bv)));
+            j += 4;
+        }
+        while j < n {
+            o[j] += x * b[j];
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy2(x0: f32, x1: f32, b: &[f32], o0: &mut [f32], o1: &mut [f32]) {
+        let n = o0.len();
+        let x0v = vdupq_n_f32(x0);
+        let x1v = vdupq_n_f32(x1);
+        let mut j = 0;
+        while j + 4 <= n {
+            let bv = vld1q_f32(b.as_ptr().add(j));
+            let o0v = vld1q_f32(o0.as_ptr().add(j));
+            let o1v = vld1q_f32(o1.as_ptr().add(j));
+            vst1q_f32(o0.as_mut_ptr().add(j), vaddq_f32(o0v, vmulq_f32(x0v, bv)));
+            vst1q_f32(o1.as_mut_ptr().add(j), vaddq_f32(o1v, vmulq_f32(x1v, bv)));
+            j += 4;
+        }
+        while j < n {
+            o0[j] += x0 * b[j];
+            o1[j] += x1 * b[j];
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let k = a.len();
+        let lanes = k / 8 * 8;
+        // lanes 0..4 and 4..8 of the scalar tile live in two registers
+        let mut lo = vdupq_n_f32(0.0);
+        let mut hi = vdupq_n_f32(0.0);
+        let mut p = 0;
+        while p < lanes {
+            let a0 = vld1q_f32(a.as_ptr().add(p));
+            let b0 = vld1q_f32(b.as_ptr().add(p));
+            let a1 = vld1q_f32(a.as_ptr().add(p + 4));
+            let b1 = vld1q_f32(b.as_ptr().add(p + 4));
+            lo = vaddq_f32(lo, vmulq_f32(a0, b0));
+            hi = vaddq_f32(hi, vmulq_f32(a1, b1));
+            p += 8;
+        }
+        let mut acc = [0.0f32; 8];
+        vst1q_f32(acc.as_mut_ptr(), lo);
+        vst1q_f32(acc.as_mut_ptr().add(4), hi);
+        let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]) + (acc[4] + acc[5]) + (acc[6] + acc[7]);
+        for t in lanes..k {
+            s += a[t] * b[t];
+        }
+        s
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy_widen(x: f64, xs: &[f32], acc: &mut [f64]) {
+        let n = acc.len();
+        let xv = vdupq_n_f64(x);
+        let mut j = 0;
+        while j + 4 <= n {
+            let sv = vld1q_f32(xs.as_ptr().add(j));
+            let wlo = vcvt_f64_f32(vget_low_f32(sv));
+            let whi = vcvt_f64_f32(vget_high_f32(sv));
+            let a0 = vld1q_f64(acc.as_ptr().add(j));
+            let a1 = vld1q_f64(acc.as_ptr().add(j + 2));
+            vst1q_f64(acc.as_mut_ptr().add(j), vaddq_f64(a0, vmulq_f64(xv, wlo)));
+            vst1q_f64(acc.as_mut_ptr().add(j + 2), vaddq_f64(a1, vmulq_f64(xv, whi)));
+            j += 4;
+        }
+        while j < n {
+            acc[j] += x * xs[j] as f64;
+            j += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    // `force` is process-global, so tests that flip it serialize on this
+    // lock (results are mode-invariant by design, but `kernel_name`
+    // assertions are not).
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    // On a machine with a vector unit these pin native against scalar
+    // bit-for-bit; on anything else both paths are the scalar fallback
+    // and the tests are trivially green (the differential suite in
+    // tests/parallel_kernels.rs covers the full kernels either way).
+
+    #[test]
+    fn axpy_native_matches_scalar_bitwise() {
+        let _g = guard();
+        let mut rng = Rng::new(71);
+        for n in [0usize, 1, 3, 7, 8, 9, 31, 64, 257] {
+            let x = rng.normal() as f32;
+            let b = rand_vec(&mut rng, n);
+            let base = rand_vec(&mut rng, n);
+            let mut want = base.clone();
+            axpy_scalar(x, &b, &mut want);
+            let mut got = base.clone();
+            force("native");
+            axpy(x, &b, &mut got);
+            force("scalar");
+            assert_eq!(got, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy2_native_matches_scalar_bitwise() {
+        let _g = guard();
+        let mut rng = Rng::new(73);
+        for n in [1usize, 5, 8, 17, 100] {
+            let (x0, x1) = (rng.normal() as f32, rng.normal() as f32);
+            let b = rand_vec(&mut rng, n);
+            let base0 = rand_vec(&mut rng, n);
+            let base1 = rand_vec(&mut rng, n);
+            let (mut w0, mut w1) = (base0.clone(), base1.clone());
+            axpy2_scalar(x0, x1, &b, &mut w0, &mut w1);
+            let (mut g0, mut g1) = (base0.clone(), base1.clone());
+            force("native");
+            axpy2(x0, x1, &b, &mut g0, &mut g1);
+            force("scalar");
+            assert_eq!((g0, g1), (w0, w1), "n={n}");
+        }
+    }
+
+    #[test]
+    fn dot_native_matches_scalar_bitwise() {
+        let _g = guard();
+        let mut rng = Rng::new(79);
+        for n in [0usize, 1, 7, 8, 9, 16, 63, 64, 65, 300] {
+            let a = rand_vec(&mut rng, n);
+            let b = rand_vec(&mut rng, n);
+            let want = dot_scalar(&a, &b);
+            force("native");
+            let got = dot(&a, &b);
+            force("scalar");
+            assert_eq!(got.to_bits(), want.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_widen_native_matches_scalar_bitwise() {
+        let _g = guard();
+        let mut rng = Rng::new(83);
+        for n in [0usize, 1, 3, 4, 5, 13, 64, 201] {
+            let x = rng.normal();
+            let xs = rand_vec(&mut rng, n);
+            let base: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut want = base.clone();
+            axpy_widen_scalar(x, &xs, &mut want);
+            let mut got = base.clone();
+            force("native");
+            axpy_widen(x, &xs, &mut got);
+            force("scalar");
+            let wb: Vec<u64> = want.iter().map(|v| v.to_bits()).collect();
+            let gb: Vec<u64> = got.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(gb, wb, "n={n}");
+        }
+    }
+
+    #[test]
+    fn dot_propagates_nan() {
+        let _g = guard();
+        for m in ["scalar", "native"] {
+            force(m);
+            let mut a = vec![0.0f32; 12];
+            let b = vec![1.0f32; 12];
+            a[10] = f32::NAN; // lands in the scalar tail for k=12
+            assert!(dot(&a, &b).is_nan(), "{m}");
+            let mut a2 = vec![0.0f32; 12];
+            a2[2] = f32::NAN; // lands in the vector body
+            assert!(dot(&a2, &b).is_nan(), "{m}");
+        }
+        force("native");
+    }
+
+    #[test]
+    fn kernel_name_is_consistent() {
+        let _g = guard();
+        force("scalar");
+        assert_eq!(kernel_name(), "scalar");
+        force("native");
+        let n = kernel_name();
+        assert!(n == "avx2" || n == "neon" || n == "scalar");
+    }
+}

@@ -6,7 +6,7 @@
 
 use std::sync::Arc;
 
-use spngd::collectives::comm::{Collective, SimComm, StatClass};
+use spngd::collectives::comm::{Collective, Precision, SimComm, StatClass};
 use spngd::dist::RingComm;
 use spngd::linalg::Mat;
 use spngd::util::rng::Rng;
@@ -285,10 +285,10 @@ fn grad_rounds_reusable_with_rank_drains() {
 }
 
 #[test]
-fn fp16_wire_halves_ring_bytes() {
+fn mixed_wire_halves_ring_bytes() {
     let mut lanes = rand_lanes(&mut Rng::new(7), 4, 100);
     let mut ring16 = RingComm::new(2);
-    ring16.wire_elem_bytes = 2;
+    ring16.precision = Precision::Mixed;
     let ring32 = RingComm::new(2);
     Collective::all_reduce_mean(&ring16, &mut lanes);
     let mut lanes2 = rand_lanes(&mut Rng::new(7), 4, 100);
@@ -297,6 +297,70 @@ fn fp16_wire_halves_ring_bytes() {
         2 * Collective::stats(&ring16).ar_grads,
         Collective::stats(&ring32).ar_grads
     );
+}
+
+/// Under `Mixed`, RingComm quantizes at its serialization points
+/// (publish / post / chunked AG) while SimComm quantizes whole lanes up
+/// front — the per-element op sequence is identical, so the engines must
+/// stay bitwise- and bytewise-identical in mixed mode too, across worker
+/// counts and odd chunk sizes.
+#[test]
+fn mixed_mode_ring_matches_simcomm_bitwise_and_bytewise() {
+    let mut rng = Rng::new(97);
+    let dims = [(5, 5), (3, 3), (9, 9), (4, 3)];
+    let classes = [StatClass::A, StatClass::GorF, StatClass::A, StatClass::GorF];
+    for &p in &[1usize, 2, 3, 8] {
+        for &chunk in &[1usize, 13, 100_000] {
+            let mut sim = SimComm::new(p);
+            sim.precision = Precision::Mixed;
+            let mut ring = RingComm::new(p);
+            ring.precision = Precision::Mixed;
+            ring.chunk_elems = chunk;
+
+            let lanes = rand_lanes(&mut rng, p * 2, 401);
+            let mut a = lanes.clone();
+            let mut b = lanes;
+            sim.all_reduce_mean(&mut a);
+            Collective::all_reduce_mean(&ring, &mut b);
+            assert_eq!(a, b, "AR p={p} chunk={chunk}");
+
+            let mats = rand_mats(&mut rng, p * 2, &dims);
+            let want = sim.reduce_scatter_v(&mats, &classes);
+            let got = Collective::reduce_scatter_v(&ring, &mats, &classes);
+            for (wm, gm) in want.iter().zip(got.iter()) {
+                assert_eq!(wm.data, gm.data, "RS p={p} chunk={chunk}");
+            }
+
+            sim.all_gather_v_params(12_345);
+            Collective::all_gather_v_params(&ring, 12_345);
+            let ss = Collective::stats(&sim);
+            let rs = Collective::stats(&ring);
+            assert_eq!(ss.ar_grads, rs.ar_grads, "p={p} chunk={chunk}");
+            assert_eq!(ss.rs_stats_a, rs.rs_stats_a, "p={p} chunk={chunk}");
+            assert_eq!(ss.rs_stats_g, rs.rs_stats_g, "p={p} chunk={chunk}");
+            assert_eq!(ss.ag_params, rs.ag_params, "p={p} chunk={chunk}");
+        }
+    }
+}
+
+/// Mixed-mode results are invariant to the AllReduce chunk size: the
+/// mean is quantized per element, so where the chunk boundaries fall
+/// cannot change any value.
+#[test]
+fn mixed_mode_chunk_invariant() {
+    let lanes = rand_lanes(&mut Rng::new(101), 6, 257);
+    let mut base: Option<Vec<Vec<f32>>> = None;
+    for &chunk in &[1usize, 7, 129, 100_000] {
+        let mut ring = RingComm::new(3);
+        ring.precision = Precision::Mixed;
+        ring.chunk_elems = chunk;
+        let mut got = lanes.clone();
+        Collective::all_reduce_mean(&ring, &mut got);
+        match &base {
+            None => base = Some(got),
+            Some(b) => assert_eq!(&got, b, "chunk={chunk}"),
+        }
+    }
 }
 
 #[test]

@@ -1,0 +1,180 @@
+//! Deterministic fuzz/property smoke over the repo's byte-level parsers:
+//! random and mutated inputs through `Json::parse`, `CifarBin::from_bytes`
+//! and the f16 wire codec. Fixed seeds, bounded case counts — this is the
+//! CI fuzz job (`fuzz-smoke`), sized to finish in well under two minutes
+//! while still exercising both the accept and reject paths of every
+//! parser. A panic anywhere in a parser is a test failure by
+//! construction (`util::prop::check` runs the property in-process).
+
+use spngd::data::cifar::{CifarBin, CIFAR_CLASSES, CIFAR_RECORD};
+use spngd::data::DataSource;
+use spngd::util::f16;
+use spngd::util::json::Json;
+use spngd::util::prop::{check, gen};
+use spngd::util::rng::Rng;
+
+fn rand_bytes(rng: &mut Rng, n: usize) -> Vec<u8> {
+    (0..n).map(|_| rng.below(256) as u8).collect()
+}
+
+/// Arbitrary byte soup must never panic the JSON parser, and anything it
+/// accepts must survive a serialize → reparse round trip unchanged.
+#[test]
+fn json_parse_survives_byte_soup() {
+    check(
+        0xF00D,
+        400,
+        256,
+        rand_bytes,
+        |bytes| {
+            let s = String::from_utf8_lossy(bytes);
+            match Json::parse(&s) {
+                Ok(v) => Json::parse(&v.to_string()).map(|v2| v2 == v).unwrap_or(false),
+                Err(_) => true, // rejection is fine; panicking is not
+            }
+        },
+    );
+}
+
+/// Mutate a realistic manifest-shaped document byte-by-byte: the parser
+/// must reject or accept cleanly at every corruption, never crash, and
+/// accepted documents must still round-trip.
+#[test]
+fn json_parse_survives_mutated_manifest() {
+    const SEED_DOC: &str = r#"{"schema": "spngd/1", "models": [{"name": "convnet_tiny",
+        "batch": 32, "lr": 1.5e-2, "damping": 0.05, "stale": null, "emp": true,
+        "shape": [8, 3, 8, 8], "layers": [{"k": 3, "pad": 1}, {"k": 1, "pad": 0}]}]}"#;
+    check(
+        0xBADC0DE,
+        400,
+        24,
+        |rng, size| {
+            let mut b = SEED_DOC.as_bytes().to_vec();
+            for _ in 0..size {
+                let i = rng.below_usize(b.len());
+                b[i] = rng.below(256) as u8;
+            }
+            b
+        },
+        |bytes| {
+            let s = String::from_utf8_lossy(bytes);
+            match Json::parse(&s) {
+                Ok(v) => Json::parse(&v.to_string()).map(|v2| v2 == v).unwrap_or(false),
+                Err(_) => true,
+            }
+        },
+    );
+}
+
+/// CIFAR binary records: `from_bytes` must accept exactly the inputs the
+/// format documents (non-empty, whole 3073-byte records, labels < 10)
+/// and never panic on anything else. Half the cases are biased toward
+/// well-formed records so the accept path (and the decoder behind it)
+/// actually runs.
+#[test]
+fn cifar_from_bytes_accepts_exactly_the_documented_format() {
+    check(
+        0xC1FA2,
+        300,
+        4 * CIFAR_RECORD,
+        |rng, size| {
+            if rng.bool(0.5) {
+                // record-aligned candidate, labels mostly in range
+                let n = 1 + size / (CIFAR_RECORD / 2).max(1);
+                let mut b = rand_bytes(rng, n * CIFAR_RECORD);
+                for i in 0..n {
+                    let space = if rng.bool(0.9) { CIFAR_CLASSES as u64 } else { 256 };
+                    b[i * CIFAR_RECORD] = rng.below(space) as u8;
+                }
+                b
+            } else {
+                rand_bytes(rng, size) // unaligned soup: almost always rejected
+            }
+        },
+        |bytes| {
+            let valid = !bytes.is_empty()
+                && bytes.len() % CIFAR_RECORD == 0
+                && bytes.chunks(CIFAR_RECORD).all(|r| (r[0] as usize) < CIFAR_CLASSES);
+            match CifarBin::from_bytes(bytes.clone()) {
+                Err(_) => !valid,
+                Ok(d) => {
+                    if !valid || d.spec().len != bytes.len() / CIFAR_RECORD {
+                        return false;
+                    }
+                    // decoded pixels land in the documented [-1, 1] range
+                    let mut rng = Rng::new(0);
+                    let (img, label) = d.sample(0, &mut rng);
+                    label < CIFAR_CLASSES
+                        && img.len() == CIFAR_RECORD - 1
+                        && img.iter().all(|p| (-1.0..=1.0).contains(p))
+                }
+            }
+        },
+    );
+}
+
+/// f16 wire codec over ordinary magnitudes: slice quantization is exactly
+/// per-element round-trip, quantization is idempotent, preserves sign,
+/// and stays within the half-precision ulp bound across the normal range.
+#[test]
+fn f16_codec_properties_on_normal_range() {
+    check(
+        0x16F1,
+        400,
+        512,
+        |rng, size| gen::vec_f32(rng, size, 1.0e4),
+        |v| {
+            let mut q = v.clone();
+            f16::quantize_slice(&mut q);
+            v.iter().zip(q.iter()).all(|(&x, &y)| {
+                let rt = f16::round_trip(x);
+                if rt.to_bits() != y.to_bits() {
+                    return false; // slice path must equal the scalar path
+                }
+                if f16::round_trip(rt).to_bits() != rt.to_bits() {
+                    return false; // idempotent: f16 values are fixed points
+                }
+                if x != 0.0 && rt != 0.0 && x.signum() != rt.signum() {
+                    return false;
+                }
+                let ax = x.abs();
+                // normal f16 range: relative error ≤ 2^-10 (RNE gives 2^-11)
+                if (6.2e-5..6.5e4).contains(&ax) {
+                    ((rt - x) / x).abs() <= 1.0 / 1024.0
+                } else {
+                    true
+                }
+            })
+        },
+    );
+}
+
+/// f16 wire codec over adversarial bit patterns (NaN payloads, infinities,
+/// subnormals, overflow range): NaN stays NaN, infinities are exact,
+/// finite inputs never decode to NaN.
+#[test]
+fn f16_codec_survives_arbitrary_bit_patterns() {
+    check(
+        0x16F2,
+        300,
+        128,
+        |rng, size| {
+            (0..size)
+                .map(|_| f32::from_bits(rng.next_u64() as u32))
+                .collect::<Vec<f32>>()
+        },
+        |v| {
+            v.iter().all(|&x| {
+                let rt = f16::round_trip(x);
+                if x.is_nan() {
+                    rt.is_nan()
+                } else if x.is_infinite() {
+                    rt == x
+                } else {
+                    // finite input may overflow to ±inf but never to NaN
+                    !rt.is_nan()
+                }
+            })
+        },
+    );
+}

@@ -67,8 +67,20 @@ fn matmul_transposed_matches_ref_across_pools_and_shapes() {
 
 #[test]
 fn syrk_matches_ref_across_pools_and_shapes() {
-    // rows < threads, rows < min-band, long-thin and short-wide taps
-    let shapes = [(1, 1), (3, 5), (7, 3), (100, 17), (1000, 7), (64, 33), (5, 64), (513, 48)];
+    // rows < threads, rows < min-band, long-thin and short-wide taps,
+    // plus factors wide enough (c ≥ 160) to take the packed j-tile path
+    let shapes = [
+        (1, 1),
+        (3, 5),
+        (7, 3),
+        (100, 17),
+        (1000, 7),
+        (64, 33),
+        (5, 64),
+        (513, 48),
+        (64, 200),
+        (40, 513),
+    ];
     for &threads in &POOL_SIZES {
         let pool = Pool::new(threads);
         let mut rng = Rng::new(13);
@@ -149,6 +161,58 @@ fn ns_inverse_matches_ref_across_pools() {
             let d = got.max_abs_diff(&want);
             assert!(d <= 1e-4, "ns_inverse {n} @ {threads} threads: diff {d}");
         }
+    }
+}
+
+/// Force each SIMD dispatch path in turn (`SPNGD_SIMD` override hook)
+/// and assert (a) every kernel still agrees with its naive `*_ref`
+/// oracle, and (b) the scalar and native paths are **bit-identical** —
+/// the vector lanes replicate the scalar op sequence exactly (separate
+/// mul+add, scalar-equivalent reduce tree), so equality is `==`, not a
+/// tolerance.
+#[test]
+fn simd_dispatch_paths_agree_with_ref_and_each_other() {
+    use spngd::util::simd;
+    let mm_shapes = [(2, 300, 2), (31, 257, 33), (129, 7, 65)];
+    let syrk_shapes = [(100, 17), (64, 200), (40, 513)];
+    let mut per_mode: Vec<Vec<Vec<f32>>> = Vec::new();
+    for mode in ["scalar", "native"] {
+        simd::force(mode);
+        if mode == "scalar" {
+            assert_eq!(simd::kernel_name(), "scalar");
+        }
+        let pool = Pool::new(4);
+        let mut rng = Rng::new(43); // reseeded per mode: identical inputs
+        let mut outs: Vec<Vec<f32>> = Vec::new();
+        for &(m, k, n) in &mm_shapes {
+            let a = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, k, n);
+            let got = a.matmul_with(&pool, &b);
+            let want = a.matmul_ref(&b);
+            let d = got.max_abs_diff(&want);
+            assert!(d <= 1e-5 * k as f32, "matmul {m}x{k}x{n} [{mode}]: diff {d}");
+            outs.push(got.data);
+            let bt = rand_mat(&mut rng, n, k);
+            let got_t = a.matmul_transposed_with(&pool, &bt);
+            let want_t = a.matmul_ref(&bt.transpose());
+            let d = got_t.max_abs_diff(&want_t);
+            assert!(d <= 1e-5 * k as f32, "matmul_t {m}x{k}x{n} [{mode}]: diff {d}");
+            outs.push(got_t.data);
+        }
+        for &(r, c) in &syrk_shapes {
+            let x = rand_mat(&mut rng, r, c);
+            let got = kernels::syrk_with(&pool, &x, 1.0 / r as f32);
+            let want = kernels::syrk_ref(&x, 1.0 / r as f32);
+            let d = got.max_abs_diff(&want);
+            assert!(d <= 1e-5, "syrk {r}x{c} [{mode}]: diff {d}");
+            outs.push(got.data);
+        }
+        per_mode.push(outs);
+    }
+    simd::force("auto"); // back to runtime detection for other tests
+    assert!(["avx2", "neon", "scalar"].contains(&simd::kernel_name()));
+    for (i, (s, n)) in per_mode[0].iter().zip(per_mode[1].iter()).enumerate() {
+        assert_eq!(s, n, "output {i} differs bitwise between scalar and native paths");
     }
 }
 
