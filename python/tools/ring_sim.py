@@ -6,8 +6,14 @@ rust/src/collectives/comm.rs::ring_wire_bytes, and run_case asserts the
 counters against closed-form expectations per step — for the f32 wire
 (elem_bytes=4) and the mixed/f16 wire (elem_bytes=2), where gradient and
 statistics bytes halve while parameters stay f32. CI runs this file as
-the `python-protocol` job."""
-import math, threading, random, sys
+the `python-protocol` job.
+
+It also mirrors the *framed* multi-process wire protocol
+(rust/src/collectives/wire.rs): header layout, FNV-1a payload checksum,
+balanced segment splitting and the closed-form per-round byte counters,
+pinned to the same vectors as the Rust unit tests so ProcComm's
+`WireStats` accounting and this model cannot drift apart silently."""
+import math, struct, threading, random, sys
 
 
 def ring_wire_bytes(p, elem_bytes, elems):
@@ -264,6 +270,91 @@ def run_case(p, micro, n_items, n, steps, chunk, seed, elem_bytes=4):
     return ring
 
 
+# ---- framed multi-process wire (mirror of collectives/wire.rs) ----
+WIRE_HEADER = 16  # magic(4) + version(2) + kind(1) + flags(1) + len(4) + fnv(4)
+
+
+def fnv1a(data):
+    """FNV-1a 32 over the payload — the frame checksum."""
+    h = 0x811c9dc5
+    for b in data:
+        h = ((h ^ b) * 0x01000193) & 0xffffffff
+    return h
+
+
+def encode_frame(kind, flags, payload):
+    return (b"SPWF" + struct.pack('<HBB', 1, kind, flags)
+            + struct.pack('<II', len(payload), fnv1a(payload)) + payload)
+
+
+def split_segments(elems, parts):
+    """Balanced contiguous (start, len) split, empty segments dropped."""
+    parts = max(parts, 1)
+    base, rem = divmod(elems, parts)
+    out, start = [], 0
+    for i in range(parts):
+        ln = base + (1 if i < rem else 0)
+        if ln:
+            out.append((start, ln))
+            start += ln
+    return out
+
+
+def grad_round_tx_bytes(seg_lens, lanes, elem_bytes):
+    """Framed bytes the coordinator sends for one gradient AllReduce:
+    one ReduceGrad job per segment, payload [job][n_lanes][seg_len][pad]
+    (16 bytes) + lanes * seg_len elements."""
+    return sum(WIRE_HEADER + 16 + lanes * ln * elem_bytes for ln in seg_lens)
+
+
+def grad_round_rx_bytes(seg_lens, elem_bytes):
+    """One GradSeg reply per segment: [job][seg_len] (8) + elements."""
+    return sum(WIRE_HEADER + 8 + ln * elem_bytes for ln in seg_lens)
+
+
+def stat_item_tx_bytes(rows, cols, lanes, elem_bytes):
+    """One ReduceStats job: [item][rows][cols][lanes] (16) + lane mats."""
+    return WIRE_HEADER + 16 + lanes * rows * cols * elem_bytes
+
+
+def stat_item_rx_bytes(rows, cols):
+    """One StatResult reply — owner masters are always exact f32."""
+    return WIRE_HEADER + 16 + rows * cols * 4
+
+
+def check_proc_frame_bytes():
+    """Pin the framed-wire model to the vectors asserted by the Rust
+    unit tests (wire.rs::closed_form_byte_vectors_pinned and the frame
+    round-trip tests)."""
+    # checksum constants shared with wire.rs
+    assert fnv1a(b"") == 0x811c9dc5
+    assert fnv1a(b"SPWF") == 0x5ebb61ef
+    # Hello(uid=42): kind 1, 8-byte payload -> a 24-byte frame with the
+    # exact header prefix the Rust encoder emits
+    hello = encode_frame(1, 0, struct.pack('<Q', 42))
+    assert len(hello) == 24, len(hello)
+    assert hello.startswith(b"SPWF\x01\x00\x01\x00"), hello
+    # 10 elems over 3 workers -> balanced [4, 3, 3]
+    assert split_segments(10, 3) == [(0, 4), (4, 3), (7, 3)]
+    segs = [ln for _, ln in split_segments(10, 3)]
+    # gradient round, 4 lanes: f32 wire then the real-f16 wire
+    assert grad_round_tx_bytes(segs, 4, 4) == 256, grad_round_tx_bytes(segs, 4, 4)
+    assert grad_round_rx_bytes(segs, 4) == 112
+    assert grad_round_tx_bytes(segs, 4, 2) == 176
+    assert grad_round_rx_bytes(segs, 2) == 92
+    # one 8x8 statistic over 2 lanes; results always come back f32
+    assert stat_item_tx_bytes(8, 8, 2, 4) == 544
+    assert stat_item_tx_bytes(8, 8, 2, 2) == 288
+    assert stat_item_rx_bytes(8, 8) == 288
+    # f16 halves exactly the payload-element part of every data frame
+    for ln, lanes in ((23, 2), (100, 6)):
+        s = [l for _, l in split_segments(ln, 3)]
+        f32b = grad_round_tx_bytes(s, lanes, 4)
+        f16b = grad_round_tx_bytes(s, lanes, 2)
+        assert (f32b - f16b) * 2 == f32b - len(s) * (WIRE_HEADER + 16), (ln, lanes)
+    print("framed proc wire matches rust/src/collectives/wire.rs vectors")
+
+
 def check_wire_formula():
     """Pin ring_wire_bytes to the vectors asserted by the Rust unit tests
     (collectives/comm.rs + tests/dist_collectives.rs) so the Python and
@@ -290,6 +381,7 @@ def check_wire_formula():
 
 if __name__ == '__main__':
     check_wire_formula()
+    check_proc_frame_bytes()
     for p in (1, 2, 3, 8):
         for micro in (1, 2):
             for chunk in (1, 7, 1000):

@@ -1,0 +1,54 @@
+//! Throughput of the multi-process framed wire protocol's hot path:
+//! gradient/statistic job encoding (the coordinator's per-step serialize
+//! cost), frame parsing + payload decoding (the worker side), and the
+//! FNV-1a checksum that guards every payload — on both the f32 wire and
+//! the real-f16 mixed wire.
+
+use spngd::collectives::comm::Precision;
+use spngd::collectives::wire::{self, Frame};
+use spngd::harness::bench;
+use spngd::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(7);
+    // 4 lanes x 64k elements ~ a mid-size model's gradient AllReduce
+    let lanes: Vec<Vec<f32>> =
+        (0..4).map(|_| (0..65_536).map(|_| rng.normal() as f32).collect()).collect();
+    let slices: Vec<&[f32]> = lanes.iter().map(|l| l.as_slice()).collect();
+
+    for p in [Precision::F32, Precision::Mixed] {
+        let tag = match p {
+            Precision::F32 => "f32",
+            Precision::Mixed => "f16",
+        };
+        bench(&format!("wire encode grad job 4x64k {tag}"), 2, 20, || {
+            let _ = wire::encode_grad_job(p, 0, &slices);
+        });
+        let frame = wire::encode_grad_job(p, 0, &slices);
+        let bytes = frame.encode();
+        bench(&format!("wire parse+decode grad job 4x64k {tag}"), 2, 20, || {
+            let (f, used) = Frame::parse(&bytes).unwrap().unwrap();
+            assert_eq!(used, bytes.len());
+            let job = wire::decode_grad_job(&f).unwrap();
+            assert_eq!(job.seg_len, 65_536);
+        });
+        let reply = wire::encode_grad_seg(p, 0, &lanes[0]);
+        let reply_bytes = reply.encode();
+        bench(&format!("wire parse+decode grad seg 64k {tag}"), 2, 20, || {
+            let (f, _) = Frame::parse(&reply_bytes).unwrap().unwrap();
+            let (_, seg) = wire::decode_grad_seg(&f).unwrap();
+            assert_eq!(seg.len(), 65_536);
+        });
+        let mats: Vec<Vec<f32>> = (0..4).map(|_| lanes[0][..288 * 288].to_vec()).collect();
+        let mat_slices: Vec<&[f32]> = mats.iter().map(|m| m.as_slice()).collect();
+        bench(&format!("wire encode stat job 4x288^2 {tag}"), 2, 20, || {
+            let _ = wire::encode_stat_job(p, 0, 288, 288, &mat_slices);
+        });
+    }
+
+    let payload: Vec<u8> = (0..4 * 65_536).map(|_| (rng.next_u64() & 0xff) as u8).collect();
+    bench("wire fnv1a checksum 256 KiB", 5, 50, || {
+        let _ = wire::checksum(&payload);
+    });
+    println!("\nproc wire bench done");
+}

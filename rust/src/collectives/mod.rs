@@ -13,8 +13,14 @@
 //! sizes for the statistics, §5.2) and the α-β cost model in
 //! [`cost`] converts byte/latency counts into cluster step times.
 
+//! The multi-process transport (`dist::ProcComm`) speaks the framed
+//! [`wire`] protocol over Unix-domain sockets: same `Collective` trait,
+//! same byte accounting, but payloads are *actually serialized* (f32 or
+//! real f16 bytes) rather than shared in memory.
+
 pub mod comm;
 pub mod cost;
+pub mod wire;
 
 pub use comm::{Collective, CommStats, Precision, SimComm};
 pub use cost::{ClusterModel, CollectiveKind};

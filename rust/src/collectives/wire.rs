@@ -1,0 +1,721 @@
+//! Framed wire protocol for the multi-process transport (`dist::ProcComm`).
+//!
+//! Every message between the coordinator and a `spngd worker` process is
+//! one length-prefixed frame:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  b"SPWF"
+//! 4       2     version (LE, currently 1)
+//! 6       1     kind (see [`Kind`])
+//! 7       1     flags (bit 0: payload elements are f16 on the wire)
+//! 8       4     payload length (LE; hard-capped, checked BEFORE allocation)
+//! 12      4     FNV-1a checksum of the payload (LE)
+//! 16      len   payload
+//! ```
+//!
+//! Payload element buffers travel at the wire precision of the run:
+//! `f32` as little-endian f32 bytes, `mixed` as real little-endian IEEE
+//! f16 bytes through `util::f16` — this module is where the f16 wire
+//! format finally meets actual serialization rather than in-place
+//! quantization. Decoding at the receiver is the exact
+//! `wire_quantize` round trip, so process runs stay bit-identical to the
+//! in-process engines. The parser ([`Frame::parse`]) is total: malformed
+//! input yields a structured [`WireError`], never a panic — it is a
+//! fuzz target in `tests/fuzz_smoke.rs`.
+
+use crate::collectives::comm::Precision;
+use crate::util::f16;
+
+/// Frame magic: "SPWF" = SP-NGD wire frame.
+pub const MAGIC: [u8; 4] = *b"SPWF";
+/// Protocol version spoken by this build.
+pub const VERSION: u16 = 1;
+/// Fixed header size in bytes.
+pub const HEADER_BYTES: usize = 16;
+/// Hard cap on a payload length, enforced before any allocation.
+pub const MAX_PAYLOAD: u32 = 64 * 1024 * 1024;
+/// Flags bit 0: element payloads are f16 on the wire.
+pub const FLAG_F16: u8 = 1;
+
+/// Message kinds. Values are part of the wire contract.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Kind {
+    /// worker → coordinator: first frame after connect; payload = uid u64.
+    Hello = 1,
+    /// coordinator → worker: admission; rank/world/step/heartbeat_ms.
+    Welcome = 2,
+    /// worker → coordinator: liveness beacon; payload = step u64.
+    Heartbeat = 3,
+    /// coordinator → worker: warmup liveness probe; empty payload.
+    Ping = 4,
+    /// worker → coordinator: warmup probe reply; empty payload.
+    Pong = 5,
+    /// coordinator → worker: a training round begins; payload = step u64.
+    RoundStart = 6,
+    /// coordinator → worker: the round is done; payload = step u64.
+    RoundEnd = 7,
+    /// coordinator → worker: reduce a gradient segment across lanes.
+    ReduceGrad = 8,
+    /// worker → coordinator: the reduced (mean) gradient segment.
+    GradSeg = 9,
+    /// coordinator → worker: reduce one statistic's lane matrices.
+    ReduceStats = 10,
+    /// worker → coordinator: the reduced statistic matrix (always f32).
+    StatResult = 11,
+    /// coordinator → worker: exit cleanly; empty payload.
+    Shutdown = 12,
+}
+
+impl Kind {
+    fn from_u8(b: u8) -> Option<Kind> {
+        Some(match b {
+            1 => Kind::Hello,
+            2 => Kind::Welcome,
+            3 => Kind::Heartbeat,
+            4 => Kind::Ping,
+            5 => Kind::Pong,
+            6 => Kind::RoundStart,
+            7 => Kind::RoundEnd,
+            8 => Kind::ReduceGrad,
+            9 => Kind::GradSeg,
+            10 => Kind::ReduceStats,
+            11 => Kind::StatResult,
+            12 => Kind::Shutdown,
+            _ => return None,
+        })
+    }
+}
+
+/// Structured parse/decode failure — every variant names what broke, so
+/// the coordinator's diagnostics can say *why* a peer was dropped.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    BadMagic([u8; 4]),
+    BadVersion(u16),
+    BadKind(u8),
+    Oversized(u32),
+    BadChecksum { want: u32, got: u32 },
+    BadPayload(&'static str),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::BadMagic(m) => write!(f, "bad frame magic {m:02x?}"),
+            WireError::BadVersion(v) => write!(f, "unsupported wire version {v} (want {VERSION})"),
+            WireError::BadKind(k) => write!(f, "unknown frame kind {k}"),
+            WireError::Oversized(n) => {
+                write!(f, "payload length {n} exceeds cap {MAX_PAYLOAD}")
+            }
+            WireError::BadChecksum { want, got } => {
+                write!(f, "payload checksum mismatch (header {want:#010x}, payload {got:#010x})")
+            }
+            WireError::BadPayload(what) => write!(f, "malformed payload: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// FNV-1a over the payload — cheap, dependency-free corruption tripwire.
+pub fn checksum(bytes: &[u8]) -> u32 {
+    let mut h = 0x811c_9dc5u32;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// One decoded frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub kind: Kind,
+    pub flags: u8,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    pub fn new(kind: Kind, flags: u8, payload: Vec<u8>) -> Frame {
+        Frame { kind, flags, payload }
+    }
+
+    /// An empty-payload control frame.
+    pub fn control(kind: Kind) -> Frame {
+        Frame::new(kind, 0, Vec::new())
+    }
+
+    /// Serialize to header + payload bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(HEADER_BYTES + self.payload.len());
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.push(self.kind as u8);
+        out.push(self.flags);
+        out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&checksum(&self.payload).to_le_bytes());
+        out.extend_from_slice(&self.payload);
+        out
+    }
+
+    /// Total encoded size of a frame carrying `payload_len` bytes.
+    pub fn encoded_len(payload_len: usize) -> u64 {
+        (HEADER_BYTES + payload_len) as u64
+    }
+
+    /// Try to parse one frame from the front of `buf`.
+    ///
+    /// `Ok(None)` means the buffer holds a prefix of a valid frame — read
+    /// more bytes. `Ok(Some((frame, consumed)))` hands back the frame and
+    /// how many bytes it occupied. Errors are unrecoverable for the
+    /// stream (framing is lost); the connection should be dropped with
+    /// the error as the diagnostic.
+    pub fn parse(buf: &[u8]) -> Result<Option<(Frame, usize)>, WireError> {
+        if buf.len() < HEADER_BYTES {
+            return Ok(None);
+        }
+        let magic = [buf[0], buf[1], buf[2], buf[3]];
+        if magic != MAGIC {
+            return Err(WireError::BadMagic(magic));
+        }
+        let version = u16::from_le_bytes([buf[4], buf[5]]);
+        if version != VERSION {
+            return Err(WireError::BadVersion(version));
+        }
+        let kind = Kind::from_u8(buf[6]).ok_or(WireError::BadKind(buf[6]))?;
+        let flags = buf[7];
+        let len = u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]);
+        if len > MAX_PAYLOAD {
+            return Err(WireError::Oversized(len)); // reject BEFORE allocating
+        }
+        let want = u32::from_le_bytes([buf[12], buf[13], buf[14], buf[15]]);
+        let total = HEADER_BYTES + len as usize;
+        if buf.len() < total {
+            return Ok(None);
+        }
+        let payload = buf[HEADER_BYTES..total].to_vec();
+        let got = checksum(&payload);
+        if got != want {
+            return Err(WireError::BadChecksum { want, got });
+        }
+        Ok(Some((Frame { kind, flags, payload }, total)))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// element buffers at wire precision
+
+fn precision_flags(p: Precision) -> u8 {
+    match p {
+        Precision::F32 => 0,
+        Precision::Mixed => FLAG_F16,
+    }
+}
+
+/// Append `vals` to `out` at the wire precision: LE f32 bytes, or real
+/// LE f16 bytes (RNE-encoded through `util::f16`) under `Mixed`.
+pub fn encode_elems(p: Precision, vals: &[f32], out: &mut Vec<u8>) {
+    match p {
+        Precision::F32 => {
+            out.reserve(vals.len() * 4);
+            for &v in vals {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Precision::Mixed => f16::encode_le(vals, out),
+    }
+}
+
+/// Decode a wire-precision element buffer. Under `Mixed` the result is
+/// exactly `wire_quantize` of the sender's values — the parity contract
+/// with the in-process engines.
+pub fn decode_elems(p: Precision, bytes: &[u8]) -> Result<Vec<f32>, WireError> {
+    match p {
+        Precision::F32 => {
+            if bytes.len() % 4 != 0 {
+                return Err(WireError::BadPayload("f32 buffer not a multiple of 4 bytes"));
+            }
+            Ok(bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect())
+        }
+        Precision::Mixed => {
+            f16::decode_le(bytes).ok_or(WireError::BadPayload("f16 buffer has odd byte count"))
+        }
+    }
+}
+
+/// Wire precision implied by a frame's flags (receiver side).
+pub fn flags_precision(flags: u8) -> Precision {
+    if flags & FLAG_F16 != 0 {
+        Precision::Mixed
+    } else {
+        Precision::F32
+    }
+}
+
+// ---------------------------------------------------------------------------
+// control payload codecs
+
+fn rd_u32(b: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
+}
+
+fn rd_u64(b: &[u8], off: usize) -> u64 {
+    let mut v = [0u8; 8];
+    v.copy_from_slice(&b[off..off + 8]);
+    u64::from_le_bytes(v)
+}
+
+/// worker → coordinator introduction. `uid` is the worker's stable
+/// identity across reconnects (its pid).
+pub fn encode_hello(uid: u64) -> Frame {
+    Frame::new(Kind::Hello, 0, uid.to_le_bytes().to_vec())
+}
+
+pub fn decode_hello(f: &Frame) -> Result<u64, WireError> {
+    if f.payload.len() != 8 {
+        return Err(WireError::BadPayload("hello wants 8 bytes"));
+    }
+    Ok(rd_u64(&f.payload, 0))
+}
+
+/// Admission parameters a worker needs to serve: its rank, the world
+/// size, the coordinator's current step (resync point for late joiners)
+/// and the heartbeat cadence it must keep.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WelcomeMsg {
+    pub rank: u32,
+    pub world: u32,
+    pub step: u64,
+    pub heartbeat_ms: u32,
+}
+
+pub fn encode_welcome(w: WelcomeMsg) -> Frame {
+    let mut p = Vec::with_capacity(20);
+    p.extend_from_slice(&w.rank.to_le_bytes());
+    p.extend_from_slice(&w.world.to_le_bytes());
+    p.extend_from_slice(&w.step.to_le_bytes());
+    p.extend_from_slice(&w.heartbeat_ms.to_le_bytes());
+    Frame::new(Kind::Welcome, 0, p)
+}
+
+pub fn decode_welcome(f: &Frame) -> Result<WelcomeMsg, WireError> {
+    if f.payload.len() != 20 {
+        return Err(WireError::BadPayload("welcome wants 20 bytes"));
+    }
+    Ok(WelcomeMsg {
+        rank: rd_u32(&f.payload, 0),
+        world: rd_u32(&f.payload, 4),
+        step: rd_u64(&f.payload, 8),
+        heartbeat_ms: rd_u32(&f.payload, 16),
+    })
+}
+
+/// Heartbeat / RoundStart / RoundEnd all carry one step counter.
+pub fn encode_step(kind: Kind, step: u64) -> Frame {
+    Frame::new(kind, 0, step.to_le_bytes().to_vec())
+}
+
+pub fn decode_step(f: &Frame) -> Result<u64, WireError> {
+    if f.payload.len() != 8 {
+        return Err(WireError::BadPayload("step payload wants 8 bytes"));
+    }
+    Ok(rd_u64(&f.payload, 0))
+}
+
+// ---------------------------------------------------------------------------
+// reduction job codecs
+
+/// A gradient-segment reduction job: all lanes' values for one
+/// contiguous element range, to be lane-mean-reduced by a worker.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GradJob {
+    pub job: u32,
+    pub seg_len: u32,
+    /// lane-major: `lanes[g]` is lane g's segment (len = seg_len).
+    pub lanes: Vec<Vec<f32>>,
+}
+
+pub fn encode_grad_job(p: Precision, job: u32, lanes: &[&[f32]]) -> Frame {
+    let seg_len = lanes.first().map_or(0, |l| l.len()) as u32;
+    let mut pl = Vec::with_capacity(16 + lanes.len() * seg_len as usize * 4);
+    pl.extend_from_slice(&job.to_le_bytes());
+    pl.extend_from_slice(&(lanes.len() as u32).to_le_bytes());
+    pl.extend_from_slice(&seg_len.to_le_bytes());
+    pl.extend_from_slice(&0u32.to_le_bytes());
+    for lane in lanes {
+        encode_elems(p, lane, &mut pl);
+    }
+    Frame::new(Kind::ReduceGrad, precision_flags(p), pl)
+}
+
+pub fn decode_grad_job(f: &Frame) -> Result<GradJob, WireError> {
+    if f.payload.len() < 16 {
+        return Err(WireError::BadPayload("grad job header wants 16 bytes"));
+    }
+    let job = rd_u32(&f.payload, 0);
+    let n_lanes = rd_u32(&f.payload, 4) as usize;
+    let seg_len = rd_u32(&f.payload, 8) as usize;
+    let p = flags_precision(f.flags);
+    let elem = p.wire_elem_bytes() as usize;
+    let body = &f.payload[16..];
+    if n_lanes == 0 || body.len() != n_lanes * seg_len * elem {
+        return Err(WireError::BadPayload("grad job body length mismatch"));
+    }
+    let mut lanes = Vec::with_capacity(n_lanes);
+    for g in 0..n_lanes {
+        lanes.push(decode_elems(p, &body[g * seg_len * elem..(g + 1) * seg_len * elem])?);
+    }
+    Ok(GradJob { job, seg_len: seg_len as u32, lanes })
+}
+
+/// Worker's reply: the lane-mean gradient segment, at wire precision
+/// (the AllGather half of a ring AllReduce also travels quantized).
+pub fn encode_grad_seg(p: Precision, job: u32, seg: &[f32]) -> Frame {
+    let mut pl = Vec::with_capacity(8 + seg.len() * 4);
+    pl.extend_from_slice(&job.to_le_bytes());
+    pl.extend_from_slice(&(seg.len() as u32).to_le_bytes());
+    encode_elems(p, seg, &mut pl);
+    Frame::new(Kind::GradSeg, precision_flags(p), pl)
+}
+
+pub fn decode_grad_seg(f: &Frame) -> Result<(u32, Vec<f32>), WireError> {
+    if f.payload.len() < 8 {
+        return Err(WireError::BadPayload("grad seg header wants 8 bytes"));
+    }
+    let job = rd_u32(&f.payload, 0);
+    let seg_len = rd_u32(&f.payload, 4) as usize;
+    let p = flags_precision(f.flags);
+    let body = &f.payload[8..];
+    if body.len() != seg_len * p.wire_elem_bytes() as usize {
+        return Err(WireError::BadPayload("grad seg body length mismatch"));
+    }
+    Ok((job, decode_elems(p, body)?))
+}
+
+/// One statistic's lane matrices, to be lane-mean-reduced by a worker.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StatJob {
+    pub item: u32,
+    pub rows: u32,
+    pub cols: u32,
+    /// lane-major flattened matrices, each rows·cols long.
+    pub lanes: Vec<Vec<f32>>,
+}
+
+pub fn encode_stat_job(
+    p: Precision,
+    item: u32,
+    rows: u32,
+    cols: u32,
+    lanes: &[&[f32]],
+) -> Frame {
+    let mut pl = Vec::with_capacity(16 + lanes.len() * (rows * cols) as usize * 4);
+    pl.extend_from_slice(&item.to_le_bytes());
+    pl.extend_from_slice(&rows.to_le_bytes());
+    pl.extend_from_slice(&cols.to_le_bytes());
+    pl.extend_from_slice(&(lanes.len() as u32).to_le_bytes());
+    for lane in lanes {
+        encode_elems(p, lane, &mut pl);
+    }
+    Frame::new(Kind::ReduceStats, precision_flags(p), pl)
+}
+
+pub fn decode_stat_job(f: &Frame) -> Result<StatJob, WireError> {
+    if f.payload.len() < 16 {
+        return Err(WireError::BadPayload("stat job header wants 16 bytes"));
+    }
+    let item = rd_u32(&f.payload, 0);
+    let rows = rd_u32(&f.payload, 4);
+    let cols = rd_u32(&f.payload, 8);
+    let n_lanes = rd_u32(&f.payload, 12) as usize;
+    let p = flags_precision(f.flags);
+    let elem = p.wire_elem_bytes() as usize;
+    let mat = (rows as usize).saturating_mul(cols as usize);
+    let body = &f.payload[16..];
+    if n_lanes == 0 || mat == 0 || body.len() != n_lanes * mat * elem {
+        return Err(WireError::BadPayload("stat job body length mismatch"));
+    }
+    let mut lanes = Vec::with_capacity(n_lanes);
+    for g in 0..n_lanes {
+        lanes.push(decode_elems(p, &body[g * mat * elem..(g + 1) * mat * elem])?);
+    }
+    Ok(StatJob { item, rows, cols, lanes })
+}
+
+/// Worker's reply: the owner-side statistic mean. ALWAYS f32 — the mean
+/// lands on an f32 master copy and is never re-quantized (§5.2).
+pub fn encode_stat_result(item: u32, rows: u32, cols: u32, mat: &[f32]) -> Frame {
+    let mut pl = Vec::with_capacity(16 + mat.len() * 4);
+    pl.extend_from_slice(&item.to_le_bytes());
+    pl.extend_from_slice(&rows.to_le_bytes());
+    pl.extend_from_slice(&cols.to_le_bytes());
+    pl.extend_from_slice(&0u32.to_le_bytes());
+    encode_elems(Precision::F32, mat, &mut pl);
+    Frame::new(Kind::StatResult, 0, pl)
+}
+
+pub fn decode_stat_result(f: &Frame) -> Result<(u32, u32, u32, Vec<f32>), WireError> {
+    if f.payload.len() < 16 {
+        return Err(WireError::BadPayload("stat result header wants 16 bytes"));
+    }
+    let item = rd_u32(&f.payload, 0);
+    let rows = rd_u32(&f.payload, 4);
+    let cols = rd_u32(&f.payload, 8);
+    let body = &f.payload[16..];
+    if body.len() != (rows as usize).saturating_mul(cols as usize) * 4 {
+        return Err(WireError::BadPayload("stat result body length mismatch"));
+    }
+    Ok((item, rows, cols, decode_elems(Precision::F32, body)?))
+}
+
+// ---------------------------------------------------------------------------
+// segment partitioning + closed-form framed-byte accounting
+
+/// Balanced contiguous partition of `elems` into at most `parts` ranges:
+/// the first `elems % parts` segments get one extra element. Returns
+/// `(start, len)` pairs; empty segments are dropped, so fewer workers
+/// than elements always means every worker gets work.
+pub fn split_segments(elems: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.max(1);
+    let base = elems / parts;
+    let rem = elems % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < rem);
+        if len > 0 {
+            out.push((start, len));
+            start += len;
+        }
+    }
+    out
+}
+
+/// Closed-form framed bytes the coordinator SENDS for one gradient
+/// AllReduce round (one `ReduceGrad` frame per segment, all lanes).
+pub fn grad_round_tx_bytes(seg_lens: &[usize], lanes: usize, elem_bytes: u64) -> u64 {
+    seg_lens
+        .iter()
+        .map(|&len| Frame::encoded_len(16 + lanes * len * elem_bytes as usize))
+        .sum()
+}
+
+/// Closed-form framed bytes the coordinator RECEIVES for one gradient
+/// AllReduce round (one `GradSeg` reply per segment).
+pub fn grad_round_rx_bytes(seg_lens: &[usize], elem_bytes: u64) -> u64 {
+    seg_lens.iter().map(|&len| Frame::encoded_len(8 + len * elem_bytes as usize)).sum()
+}
+
+/// Closed-form framed bytes to SEND one statistic reduction job.
+pub fn stat_item_tx_bytes(rows: usize, cols: usize, lanes: usize, elem_bytes: u64) -> u64 {
+    Frame::encoded_len(16 + lanes * rows * cols * elem_bytes as usize)
+}
+
+/// Closed-form framed bytes of one statistic result (always f32).
+pub fn stat_item_rx_bytes(rows: usize, cols: usize) -> u64 {
+    Frame::encoded_len(16 + rows * cols * 4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::comm::{lane_mean, wire_quantize};
+
+    #[test]
+    fn frame_round_trip_all_kinds() {
+        for kind in [
+            Kind::Hello,
+            Kind::Welcome,
+            Kind::Heartbeat,
+            Kind::Ping,
+            Kind::Pong,
+            Kind::RoundStart,
+            Kind::RoundEnd,
+            Kind::ReduceGrad,
+            Kind::GradSeg,
+            Kind::ReduceStats,
+            Kind::StatResult,
+            Kind::Shutdown,
+        ] {
+            let f = Frame::new(kind, FLAG_F16, vec![1, 2, 3]);
+            let bytes = f.encode();
+            let (back, used) = Frame::parse(&bytes).unwrap().unwrap();
+            assert_eq!(back, f);
+            assert_eq!(used, bytes.len());
+        }
+    }
+
+    #[test]
+    fn parse_wants_more_bytes_on_truncation() {
+        let bytes = encode_hello(42).encode();
+        for cut in 0..bytes.len() {
+            let r = Frame::parse(&bytes[..cut]);
+            assert_eq!(r, Ok(None), "prefix of {cut} bytes must ask for more");
+        }
+        // two concatenated frames: first parse consumes exactly one
+        let mut two = bytes.clone();
+        two.extend_from_slice(&encode_step(Kind::Heartbeat, 7).encode());
+        let (f, used) = Frame::parse(&two).unwrap().unwrap();
+        assert_eq!(f.kind, Kind::Hello);
+        let (g, _) = Frame::parse(&two[used..]).unwrap().unwrap();
+        assert_eq!(g.kind, Kind::Heartbeat);
+        assert_eq!(decode_step(&g).unwrap(), 7);
+    }
+
+    #[test]
+    fn parse_rejects_structured() {
+        let good = encode_hello(1).encode();
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(matches!(Frame::parse(&bad), Err(WireError::BadMagic(_))));
+        let mut bad = good.clone();
+        bad[4] = 9;
+        assert!(matches!(Frame::parse(&bad), Err(WireError::BadVersion(_))));
+        let mut bad = good.clone();
+        bad[6] = 200;
+        assert_eq!(Frame::parse(&bad), Err(WireError::BadKind(200)));
+        let mut bad = good.clone();
+        bad[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(Frame::parse(&bad), Err(WireError::Oversized(_))));
+        let mut bad = good.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0xff; // flip a payload byte: checksum trips
+        assert!(matches!(Frame::parse(&bad), Err(WireError::BadChecksum { .. })));
+    }
+
+    #[test]
+    fn oversized_is_rejected_even_without_payload_bytes() {
+        // a 16-byte header announcing a huge payload must error immediately
+        // (no allocation, no Ok(None) wait-for-64MiB)
+        let mut hdr = Vec::new();
+        hdr.extend_from_slice(&MAGIC);
+        hdr.extend_from_slice(&VERSION.to_le_bytes());
+        hdr.push(Kind::Heartbeat as u8);
+        hdr.push(0);
+        hdr.extend_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        hdr.extend_from_slice(&0u32.to_le_bytes());
+        assert_eq!(Frame::parse(&hdr), Err(WireError::Oversized(MAX_PAYLOAD + 1)));
+    }
+
+    #[test]
+    fn control_codecs_round_trip() {
+        assert_eq!(decode_hello(&encode_hello(0xdead_beef)).unwrap(), 0xdead_beef);
+        let w = WelcomeMsg { rank: 3, world: 5, step: 17, heartbeat_ms: 50 };
+        assert_eq!(decode_welcome(&encode_welcome(w)).unwrap(), w);
+        for kind in [Kind::Heartbeat, Kind::RoundStart, Kind::RoundEnd] {
+            assert_eq!(decode_step(&encode_step(kind, 99)).unwrap(), 99);
+        }
+        assert!(decode_hello(&Frame::control(Kind::Hello)).is_err());
+        assert!(decode_welcome(&Frame::control(Kind::Welcome)).is_err());
+    }
+
+    #[test]
+    fn grad_job_round_trip_both_precisions() {
+        let l0 = [0.1f32, -2.5, 3.0];
+        let l1 = [4.0f32, 0.3, -1.0];
+        for p in [Precision::F32, Precision::Mixed] {
+            let f = encode_grad_job(p, 7, &[&l0, &l1]);
+            let job = decode_grad_job(&f).unwrap();
+            assert_eq!(job.job, 7);
+            assert_eq!(job.seg_len, 3);
+            for (wire, sent) in job.lanes.iter().zip([&l0, &l1]) {
+                for (w, &s) in wire.iter().zip(sent.iter()) {
+                    assert_eq!(w.to_bits(), wire_quantize(p, s).to_bits());
+                }
+            }
+            // a worker reduces with the shared lane_mean and replies
+            let mean: Vec<f32> = (0..3)
+                .map(|i| {
+                    wire_quantize(p, lane_mean(job.lanes.iter().map(|l| l[i]), job.lanes.len()))
+                })
+                .collect();
+            let (jid, back) = decode_grad_seg(&encode_grad_seg(p, 7, &mean)).unwrap();
+            assert_eq!(jid, 7);
+            // the mean is already at wire precision: serialization is exact
+            assert_eq!(back, mean);
+        }
+    }
+
+    #[test]
+    fn stat_job_round_trip_and_f32_result() {
+        let l0 = [0.1f32, 0.0, 0.0, 0.1];
+        let l1 = [0.3f32, 0.0, 0.0, 0.3];
+        for p in [Precision::F32, Precision::Mixed] {
+            let f = encode_stat_job(p, 2, 2, 2, &[&l0, &l1]);
+            let job = decode_stat_job(&f).unwrap();
+            assert_eq!((job.item, job.rows, job.cols), (2, 2, 2));
+            assert_eq!(job.lanes[0][0].to_bits(), wire_quantize(p, 0.1).to_bits());
+            // owner-side mean is f32 — result serialization must be exact
+            let mean = [0.12345678f32, 0.0, 0.0, 0.2];
+            let rf = encode_stat_result(2, 2, 2, &mean);
+            assert_eq!(rf.flags, 0, "stat results always travel f32");
+            let (item, r, c, back) = decode_stat_result(&rf).unwrap();
+            assert_eq!((item, r, c), (2, 2, 2));
+            for (a, b) in mean.iter().zip(back.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn reduction_payloads_reject_length_lies() {
+        let f = encode_grad_job(Precision::F32, 0, &[&[1.0, 2.0]]);
+        let mut lie = f.clone();
+        lie.payload[4..8].copy_from_slice(&3u32.to_le_bytes()); // claim 3 lanes
+        assert!(decode_grad_job(&lie).is_err());
+        let mut zero = f.clone();
+        zero.payload[4..8].copy_from_slice(&0u32.to_le_bytes());
+        assert!(decode_grad_job(&zero).is_err());
+        let s = encode_stat_job(Precision::F32, 0, 2, 2, &[&[1.0; 4]]);
+        let mut lie = s.clone();
+        lie.payload[4..8].copy_from_slice(&u32::MAX.to_le_bytes()); // rows lie
+        assert!(decode_stat_job(&lie).is_err(), "saturating mul must not wrap");
+    }
+
+    #[test]
+    fn split_segments_is_balanced_and_total() {
+        assert_eq!(split_segments(10, 3), vec![(0, 4), (4, 3), (7, 3)]);
+        assert_eq!(split_segments(2, 4), vec![(0, 1), (1, 1)]);
+        assert_eq!(split_segments(0, 3), Vec::<(usize, usize)>::new());
+        for (elems, parts) in [(1usize, 1usize), (7, 2), (100, 7), (5, 5), (3, 8)] {
+            let segs = split_segments(elems, parts);
+            assert!(segs.len() <= parts);
+            let mut at = 0;
+            for &(start, len) in &segs {
+                assert_eq!(start, at);
+                assert!(len > 0);
+                at += len;
+            }
+            assert_eq!(at, elems);
+        }
+    }
+
+    /// Pinned vectors shared with `python/tools/ring_sim.py`
+    /// (`check_proc_frame_bytes`) — the two accountings must agree.
+    #[test]
+    fn closed_form_byte_vectors_pinned() {
+        // 10 elems over 3 workers, 4 lanes, f32 wire:
+        // segs (4,3,3); tx = Σ 16+16+4·len·4 = 3·32 + 16·10·4/… = pinned
+        let segs: Vec<usize> = split_segments(10, 3).iter().map(|s| s.1).collect();
+        assert_eq!(grad_round_tx_bytes(&segs, 4, 4), 96 + 160);
+        assert_eq!(grad_round_rx_bytes(&segs, 4), 72 + 40);
+        // f16 wire halves only the element payload
+        assert_eq!(grad_round_tx_bytes(&segs, 4, 2), 96 + 80);
+        assert_eq!(grad_round_rx_bytes(&segs, 2), 72 + 20);
+        // one 8×8 statistic over 2 lanes
+        assert_eq!(stat_item_tx_bytes(8, 8, 2, 4), 32 + 512);
+        assert_eq!(stat_item_tx_bytes(8, 8, 2, 2), 32 + 256);
+        assert_eq!(stat_item_rx_bytes(8, 8), 32 + 256);
+        // byte-level frame pin: hello(42) encodes to exactly these bytes
+        let bytes = encode_hello(42).encode();
+        assert_eq!(bytes.len(), 24);
+        assert_eq!(&bytes[..8], b"SPWF\x01\x00\x01\x00");
+        assert_eq!(checksum(b""), 0x811c_9dc5);
+        assert_eq!(checksum(b"SPWF"), 0x5ebb_61ef);
+    }
+}

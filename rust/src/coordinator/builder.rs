@@ -28,6 +28,7 @@ use anyhow::{bail, Result};
 
 use crate::collectives::comm::Precision;
 use crate::coordinator::trainer::{DistMode, Trainer, TrainerCfg};
+use crate::dist::ProcCfg;
 use crate::data::{self, AugmentCfg, DataSource, Downsample, Loader, TransformChain};
 use crate::optim::{
     HyperParams, MomentumRule, Preconditioner, Schedule, SchedulePolicy, UpdateRule,
@@ -47,6 +48,7 @@ pub struct TrainerBuilder {
     bn_momentum: f32,
     precision: Precision,
     dist: DistMode,
+    proc: Option<ProcCfg>,
     seed: u64,
     opt: Option<Arc<dyn Preconditioner>>,
     rule: Option<Arc<dyn UpdateRule>>,
@@ -80,6 +82,7 @@ impl TrainerBuilder {
             bn_momentum: 0.9,
             precision: Precision::F32,
             dist: DistMode::Sequential,
+            proc: None,
             seed: 7,
             opt: None,
             rule: None,
@@ -189,6 +192,14 @@ impl TrainerBuilder {
     /// Worker execution engine (default sequential).
     pub fn dist(mut self, dist: DistMode) -> Self {
         self.dist = dist;
+        self
+    }
+
+    /// Multi-process transport knobs for [`DistMode::Proc`] (timeouts,
+    /// respawn policy, fault plan). Default: [`ProcCfg::from_env`], so
+    /// `SPNGD_FAULT_PLAN` / `SPNGD_PROC_*` work end-to-end.
+    pub fn proc_cfg(mut self, proc: ProcCfg) -> Self {
+        self.proc = Some(proc);
         self
     }
 
@@ -342,6 +353,7 @@ impl TrainerBuilder {
             bn_momentum: self.bn_momentum,
             precision: self.precision,
             dist: self.dist,
+            proc: self.proc.unwrap_or_else(ProcCfg::from_env),
             seed: self.seed,
         };
         Trainer::new(manifest, engine, cfg, opt, rule, schedule, loader)

@@ -35,7 +35,7 @@ use anyhow::{Context, Result};
 use crate::collectives::comm::{Collective, Precision, SimComm};
 use crate::collectives::cost::StepProfile;
 use crate::data::{Batch, IoStats, Loader};
-use crate::dist::{DistEngine, RingComm};
+use crate::dist::{DistEngine, ProcCfg, ProcComm, RingComm};
 use crate::linalg::Mat;
 use crate::metrics::{RunLog, StageTimes, StepRecord};
 use crate::optim::{
@@ -52,14 +52,21 @@ pub enum DistMode {
     /// communication and inversion overlapped with slower workers'
     /// compute (Alg. 3's schedule)
     Threaded,
+    /// worker *processes* over the Unix-socket framed wire protocol
+    /// (`dist::ProcComm`): the coordinator keeps the model and farms
+    /// reductions out to stateless `spngd worker` reducers, with
+    /// elastic membership and failure recovery
+    Proc,
 }
 
 impl DistMode {
-    /// `SPNGD_DIST=threads|threaded|1` selects the threaded engine;
-    /// anything else (or unset) stays sequential.
+    /// `SPNGD_DIST=threads|threaded|1` selects the threaded engine,
+    /// `SPNGD_DIST=proc` the multi-process transport; anything else
+    /// (or unset) stays sequential.
     pub fn from_env() -> DistMode {
         match std::env::var("SPNGD_DIST") {
             Ok(v) if matches!(v.trim(), "threads" | "threaded" | "1") => DistMode::Threaded,
+            Ok(v) if v.trim() == "proc" => DistMode::Proc,
             _ => DistMode::Sequential,
         }
     }
@@ -84,8 +91,11 @@ pub struct TrainerCfg {
     /// round-trip) while parameters and every master copy stay f32 and
     /// reductions accumulate in f64
     pub precision: Precision,
-    /// worker execution engine (sequential coordinator vs threaded dist)
+    /// worker execution engine (sequential coordinator vs threaded dist
+    /// vs multi-process transport)
     pub dist: DistMode,
+    /// multi-process transport knobs (used only under [`DistMode::Proc`])
+    pub proc: ProcCfg,
     pub seed: u64,
 }
 
@@ -136,6 +146,9 @@ pub struct Trainer {
     comm: SimComm,
     /// threaded mode: per-worker executors + the ring communicator
     dist: Option<DistEngine>,
+    /// proc mode: the multi-process transport (worker processes +
+    /// membership; reductions go over the framed Unix-socket wire)
+    proc: Option<ProcComm>,
     pub params: Vec<HostTensor>,
     velocity: Vec<HostTensor>,
     layers: Vec<LayerSlot>,
@@ -216,7 +229,13 @@ impl Trainer {
                 ring.precision = cfg.precision;
                 Some(de)
             }
-            DistMode::Sequential => None,
+            DistMode::Sequential | DistMode::Proc => None,
+        };
+        let proc = match cfg.dist {
+            DistMode::Proc => {
+                Some(ProcComm::launch(cfg.workers.max(1), cfg.precision, &cfg.proc)?)
+            }
+            _ => None,
         };
         let fisher = opt.fisher();
         Ok(Trainer {
@@ -229,6 +248,7 @@ impl Trainer {
             fisher,
             comm,
             dist,
+            proc,
             params,
             velocity,
             layers,
@@ -270,12 +290,23 @@ impl Trainer {
     }
 
     /// The active communicator's byte accounting (SimComm sequentially,
-    /// RingComm under the threaded dist engine).
+    /// RingComm under the threaded dist engine, ProcComm under the
+    /// multi-process transport).
     pub fn comm(&self) -> &dyn Collective {
+        if let Some(p) = &self.proc {
+            return p;
+        }
         match &self.dist {
             Some(d) => d.ring.as_ref(),
             None => &self.comm,
         }
+    }
+
+    /// The multi-process transport, when running under
+    /// [`DistMode::Proc`] (tests inspect membership events and the
+    /// actual framed wire bytes through this).
+    pub fn proc(&self) -> Option<&ProcComm> {
+        self.proc.as_ref()
     }
 
     fn step_exe(&self) -> &str {
@@ -326,6 +357,9 @@ impl Trainer {
         let mom = self.schedule.momentum(t) as f32;
 
         // ------------------------------ Stages 1-4 on the active engine
+        if let Some(p) = &self.proc {
+            p.round_start(t)?;
+        }
         let (lane_outs, t_inverse, t_update) = if self.dist.is_some() {
             self.stages_threaded(t, &plan, batches, &seeds, &exe, lr, mom)?
         } else {
@@ -334,6 +368,13 @@ impl Trainer {
 
         // --------------------------------- Stage 5: AllGatherV(params)
         self.comm().all_gather_v_params(self.model.total_param_count());
+
+        // proc mode: close the round — the elastic window where late
+        // joiners are admitted and dead workers are respawned; a run
+        // that can no longer sustain membership fails here, loudly
+        if let Some(p) = &self.proc {
+            p.round_end(t)?;
+        }
 
         // ------------------- loss / BN reductions (canonical lane order)
         let mut loss_sum = 0.0f64;
@@ -446,7 +487,13 @@ impl Trainer {
         }
 
         // ------------------------- Stage 3: gradient AllReduce (mean)
-        self.comm.all_reduce_mean(&mut grad_lanes);
+        // (through ProcComm's worker processes under DistMode::Proc —
+        // same canonical-lane math, so the results are bit-identical)
+        let comm: &dyn Collective = match &self.proc {
+            Some(p) => p,
+            None => &self.comm,
+        };
+        comm.all_reduce_mean(&mut grad_lanes);
         let grads_flat = std::mem::take(&mut grad_lanes[0]);
 
         // ----------------- Stages 2-3: ReduceScatterV of the statistics
@@ -454,7 +501,7 @@ impl Trainer {
             Vec::new()
         } else {
             let classes: Vec<_> = plan.iter().map(|&(_, k)| k.class()).collect();
-            self.comm.reduce_scatter_v(&factor_lanes, &classes)
+            comm.reduce_scatter_v(&factor_lanes, &classes)
         };
 
         // ------------------- Stage 4a: model-parallel factor inversion
@@ -555,6 +602,10 @@ impl Trainer {
                 let group = std::mem::take(&mut layer_groups[rank]);
                 let engine = dist.engine(rank).clone();
                 handles.push(s.spawn(move || {
+                    // a panicking worker (e.g. inside a kernel) poisons
+                    // the ring so peers abort with its rank named
+                    // instead of hanging mid-collective
+                    let _poison = ring.poison_guard(rank);
                     worker_step(
                         engine.as_ref(),
                         ring,

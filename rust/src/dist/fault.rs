@@ -1,0 +1,199 @@
+//! Deterministic failure injection for the multi-process transport.
+//!
+//! A [`FaultPlan`] is a comma-separated list of `kind:step:rank[:ms]`
+//! directives parsed from `SPNGD_FAULT_PLAN` (or `--fault-plan`). The
+//! coordinator passes the plan to every worker it spawns through the
+//! environment; each worker keeps only the directives addressed to its
+//! rank and fires each one exactly once, at the first reduction job of
+//! the named step — so a test can script "worker 1 dies at step 3" and
+//! get the same failure on every run.
+//!
+//! Kinds:
+//! - `kill`   — `process::exit(9)` before replying (a hard crash)
+//! - `drop`   — swallow one job: never send the reply frame
+//! - `delay`  — sleep `ms` (default 200) before replying
+//! - `corrupt`— flip a payload byte after the checksum is computed, so
+//!   the coordinator sees a checksum mismatch
+//! - `mute`   — stop heartbeating and replying (a hung process)
+
+use std::fmt;
+
+/// What a directive does to the targeted worker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    Kill,
+    Drop,
+    Delay,
+    Corrupt,
+    Mute,
+}
+
+impl FaultKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::Kill => "kill",
+            FaultKind::Drop => "drop",
+            FaultKind::Delay => "delay",
+            FaultKind::Corrupt => "corrupt",
+            FaultKind::Mute => "mute",
+        }
+    }
+
+    fn parse(s: &str) -> Result<FaultKind, String> {
+        match s {
+            "kill" => Ok(FaultKind::Kill),
+            "drop" => Ok(FaultKind::Drop),
+            "delay" => Ok(FaultKind::Delay),
+            "corrupt" => Ok(FaultKind::Corrupt),
+            "mute" => Ok(FaultKind::Mute),
+            other => {
+                Err(format!("unknown fault kind '{other}' (kill | drop | delay | corrupt | mute)"))
+            }
+        }
+    }
+}
+
+/// One scripted fault: fire `kind` on worker `rank` at training `step`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fault {
+    pub kind: FaultKind,
+    pub step: u64,
+    pub rank: u32,
+    /// delay duration in ms (only meaningful for `Delay`).
+    pub ms: u64,
+}
+
+impl fmt::Display for Fault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}:{}", self.kind.name(), self.step, self.rank)?;
+        if self.kind == FaultKind::Delay {
+            write!(f, ":{}", self.ms)?;
+        }
+        Ok(())
+    }
+}
+
+/// A deterministic failure script, shared coordinator → workers via env.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Parse `kind:step:rank[:ms]` directives, comma-separated. Malformed
+    /// plans are a hard error — a fault test that silently runs healthy
+    /// is worse than one that fails to start.
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let mut faults = Vec::new();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let fields: Vec<&str> = part.split(':').collect();
+            if fields.len() < 3 || fields.len() > 4 {
+                return Err(format!("fault '{part}': want kind:step:rank[:ms]"));
+            }
+            let kind = FaultKind::parse(fields[0])?;
+            let step: u64 = fields[1]
+                .parse()
+                .map_err(|_| format!("fault '{part}': bad step '{}'", fields[1]))?;
+            let rank: u32 = fields[2]
+                .parse()
+                .map_err(|_| format!("fault '{part}': bad rank '{}'", fields[2]))?;
+            let ms = match fields.get(3) {
+                Some(v) => {
+                    v.parse().map_err(|_| format!("fault '{part}': bad ms '{v}'"))?
+                }
+                None => 200,
+            };
+            faults.push(Fault { kind, step, rank, ms });
+        }
+        Ok(FaultPlan { faults })
+    }
+
+    /// Resolve from `SPNGD_FAULT_PLAN` (empty plan when unset; malformed
+    /// values are a hard error, mirroring the other env registries).
+    pub fn from_env() -> FaultPlan {
+        match std::env::var("SPNGD_FAULT_PLAN") {
+            Ok(v) if !v.trim().is_empty() => {
+                FaultPlan::parse(&v).unwrap_or_else(|e| panic!("SPNGD_FAULT_PLAN: {e}"))
+            }
+            _ => FaultPlan::default(),
+        }
+    }
+
+    /// The env-var spelling of this plan (what the coordinator exports to
+    /// spawned workers).
+    pub fn to_env(&self) -> String {
+        self.faults.iter().map(|f| f.to_string()).collect::<Vec<_>>().join(",")
+    }
+
+    /// The directives addressed to one worker rank.
+    pub fn for_rank(&self, rank: u32) -> Vec<Fault> {
+        self.faults.iter().copied().filter(|f| f.rank == rank).collect()
+    }
+}
+
+/// A worker's armed directives: each fires at most once, at the first
+/// matching job of its step.
+#[derive(Debug, Default)]
+pub struct ArmedFaults {
+    pending: Vec<Fault>,
+}
+
+impl ArmedFaults {
+    pub fn new(faults: Vec<Fault>) -> ArmedFaults {
+        ArmedFaults { pending: faults }
+    }
+
+    /// Take the fault scheduled for `step`, if any (fire-once: the
+    /// directive is removed).
+    pub fn take(&mut self, step: u64) -> Option<Fault> {
+        let i = self.pending.iter().position(|f| f.step == step)?;
+        Some(self.pending.swap_remove(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_through_env_spelling() {
+        let p = FaultPlan::parse("kill:3:1, drop:2:0,delay:4:1:150,corrupt:5:0,mute:4:2").unwrap();
+        assert_eq!(p.faults.len(), 5);
+        assert_eq!(p.faults[0], Fault { kind: FaultKind::Kill, step: 3, rank: 1, ms: 200 });
+        assert_eq!(p.faults[2], Fault { kind: FaultKind::Delay, step: 4, rank: 1, ms: 150 });
+        let p2 = FaultPlan::parse(&p.to_env()).unwrap();
+        assert_eq!(p, p2);
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("  ,  ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_plans() {
+        for bad in [
+            "explode:1:0",
+            "kill:one:0",
+            "kill:1:two",
+            "kill:1",
+            "kill:1:0:5:9",
+            "delay:1:0:soon",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "'{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn rank_filter_and_fire_once() {
+        let p = FaultPlan::parse("kill:3:1,drop:2:0,delay:3:1:50").unwrap();
+        assert!(p.for_rank(2).is_empty());
+        let mut armed = ArmedFaults::new(p.for_rank(1));
+        assert!(armed.take(2).is_none());
+        let first = armed.take(3).unwrap();
+        let second = armed.take(3).unwrap();
+        assert_ne!(first.kind, second.kind, "both step-3 directives fire, once each");
+        assert!(armed.take(3).is_none(), "fire-once");
+    }
+}

@@ -1,0 +1,680 @@
+//! Coordinator-side membership for the multi-process transport: the
+//! explicit state machine (`WaitingForMembers → Warmup → RoundStart →
+//! RoundEnd`) that admits `spngd worker` processes over a Unix-domain
+//! socket, watches their heartbeats, detects deaths mid-step with a
+//! structured named-rank diagnostic, and re-admits late joiners or
+//! respawned replacements at round boundaries (with exponential
+//! backoff). Workers are stateless reducers, so "state resync" for a
+//! late joiner is exactly the `Welcome` frame: rank, world size, the
+//! coordinator's current step, and the heartbeat cadence.
+
+use std::io::{ErrorKind, Read, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use crate::collectives::wire::{self, Frame, Kind, WelcomeMsg};
+use crate::warn_;
+
+/// The coordinator's run state — driven explicitly, logged on every
+/// transition, and visible to tests through [`MemberEvent::State`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunState {
+    /// Waiting for the initial quorum to connect and handshake.
+    WaitingForMembers,
+    /// Quorum reached; ping/pong liveness probe before the first round.
+    Warmup,
+    /// A training round (one optimizer step) is in flight.
+    RoundStart,
+    /// Between rounds: the elastic window where joiners are admitted and
+    /// replacements are respawned.
+    RoundEnd,
+}
+
+impl RunState {
+    pub fn name(self) -> &'static str {
+        match self {
+            RunState::WaitingForMembers => "WaitingForMembers",
+            RunState::Warmup => "Warmup",
+            RunState::RoundStart => "RoundStart",
+            RunState::RoundEnd => "RoundEnd",
+        }
+    }
+}
+
+/// What to do when the membership drops below the target world size.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RespawnPolicy {
+    /// Spawn replacement workers at the next round boundary, with
+    /// exponential backoff, up to `max` attempts; then fail loudly.
+    Respawn { max: u32 },
+    /// Keep going with the surviving workers (reductions redistribute;
+    /// results are unchanged because lanes live on the coordinator).
+    Shrink,
+    /// Any death is fatal: terminate with the structured diagnostic.
+    Strict,
+}
+
+/// Membership happenings, drained by tests and surfaced in diagnostics.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum MemberEvent {
+    State { state: &'static str, step: u64 },
+    Joined { rank: u32, uid: u64, step: u64 },
+    Dead { rank: u32, step: u64, reason: String },
+    Respawned { rank: u32, attempt: u32 },
+}
+
+/// Knobs the membership machinery runs on (subset of `ProcCfg`).
+#[derive(Clone, Debug)]
+pub struct MembershipCfg {
+    /// Cadence workers must heartbeat at (told to them in `Welcome`).
+    pub heartbeat_ms: u64,
+    /// Silence longer than this marks a worker dead.
+    pub heartbeat_timeout_ms: u64,
+    /// A dispatched reduction job unanswered for this long (with
+    /// heartbeats still arriving) marks the worker dead — catches
+    /// drop-frame faults where the process is alive but useless.
+    pub job_timeout_ms: u64,
+    /// How long to wait for the initial quorum / respawned replacements.
+    pub join_timeout_ms: u64,
+    pub respawn: RespawnPolicy,
+    /// Backoff before respawn attempt k is `backoff_base_ms << k`.
+    pub backoff_base_ms: u64,
+}
+
+impl Default for MembershipCfg {
+    fn default() -> Self {
+        MembershipCfg {
+            heartbeat_ms: 50,
+            heartbeat_timeout_ms: 1000,
+            job_timeout_ms: 5000,
+            join_timeout_ms: 10_000,
+            respawn: RespawnPolicy::Respawn { max: 2 },
+            backoff_base_ms: 20,
+        }
+    }
+}
+
+/// A buffered framed connection to one worker.
+pub struct Conn {
+    stream: UnixStream,
+    buf: Vec<u8>,
+}
+
+/// Why a connection-level receive failed.
+#[derive(Debug)]
+pub enum ConnError {
+    /// Peer closed the stream (EOF) — the process exited.
+    Closed,
+    /// Framing/corruption error; the stream is unrecoverable.
+    Wire(wire::WireError),
+    Io(ErrorKind),
+}
+
+impl std::fmt::Display for ConnError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConnError::Closed => write!(f, "connection closed (process exited)"),
+            ConnError::Wire(e) => write!(f, "wire error: {e}"),
+            ConnError::Io(k) => write!(f, "io error: {k:?}"),
+        }
+    }
+}
+
+impl Conn {
+    pub fn new(stream: UnixStream) -> Conn {
+        Conn { stream, buf: Vec::new() }
+    }
+
+    pub fn send(&mut self, f: &Frame) -> std::io::Result<()> {
+        self.stream.write_all(&f.encode())
+    }
+
+    /// Pull one frame, waiting up to `wait` for bytes to arrive.
+    /// `Ok(None)` = nothing complete within the window.
+    pub fn poll_frame(&mut self, wait: Duration) -> Result<Option<Frame>, ConnError> {
+        let deadline = Instant::now() + wait;
+        loop {
+            match Frame::parse(&self.buf) {
+                Ok(Some((f, used))) => {
+                    self.buf.drain(..used);
+                    return Ok(Some(f));
+                }
+                Ok(None) => {}
+                Err(e) => return Err(ConnError::Wire(e)),
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            let slice = (deadline - now)
+                .min(Duration::from_millis(25))
+                .max(Duration::from_millis(1));
+            if let Err(e) = self.stream.set_read_timeout(Some(slice)) {
+                return Err(ConnError::Io(e.kind()));
+            }
+            let mut tmp = [0u8; 4096];
+            match self.stream.read(&mut tmp) {
+                Ok(0) => return Err(ConnError::Closed),
+                Ok(n) => self.buf.extend_from_slice(&tmp[..n]),
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
+                    ) => {}
+                Err(e) => return Err(ConnError::Io(e.kind())),
+            }
+        }
+    }
+}
+
+/// How the coordinator launches worker processes (`spngd worker`).
+#[derive(Clone, Debug)]
+pub struct Spawner {
+    /// Path to the `spngd` binary.
+    pub program: String,
+    pub socket: String,
+    /// `SPNGD_FAULT_PLAN` spelling exported to first-generation workers;
+    /// respawned replacements never inherit it (a replacement that
+    /// immediately re-dies would defeat the recovery it exists to test).
+    pub fault_env: String,
+}
+
+impl Spawner {
+    fn spawn(&self, with_faults: bool) -> std::io::Result<Child> {
+        let mut cmd = Command::new(&self.program);
+        cmd.arg("worker").arg("--socket").arg(&self.socket);
+        cmd.stdin(Stdio::null());
+        if with_faults && !self.fault_env.is_empty() {
+            cmd.env("SPNGD_FAULT_PLAN", &self.fault_env);
+        } else {
+            cmd.env_remove("SPNGD_FAULT_PLAN");
+        }
+        cmd.spawn()
+    }
+}
+
+/// One admitted worker.
+pub struct Member {
+    pub rank: u32,
+    pub uid: u64,
+    pub conn: Conn,
+    pub last_seen: Instant,
+    /// Present when the coordinator spawned this process itself.
+    pub child: Option<Child>,
+}
+
+/// The membership set + state machine. Owns the listening socket.
+pub struct Membership {
+    listener: UnixListener,
+    members: Vec<Member>,
+    state: RunState,
+    step: u64,
+    world: u32,
+    next_rank: u32,
+    free_ranks: Vec<u32>,
+    respawn_attempts: u32,
+    events: Vec<MemberEvent>,
+    fatal: Option<String>,
+    cfg: MembershipCfg,
+    spawner: Option<Spawner>,
+}
+
+const LOG: &str = "dist::membership";
+
+impl Membership {
+    /// Bind the coordinator socket. `world` is the target member count.
+    pub fn bind(
+        socket: &str,
+        world: u32,
+        cfg: MembershipCfg,
+        spawner: Option<Spawner>,
+    ) -> std::io::Result<Membership> {
+        let _ = std::fs::remove_file(socket);
+        let listener = UnixListener::bind(socket)?;
+        listener.set_nonblocking(true)?;
+        Ok(Membership {
+            listener,
+            members: Vec::new(),
+            state: RunState::WaitingForMembers,
+            step: 0,
+            world,
+            next_rank: 0,
+            free_ranks: Vec::new(),
+            respawn_attempts: 0,
+            events: vec![MemberEvent::State { state: RunState::WaitingForMembers.name(), step: 0 }],
+            fatal: None,
+            cfg,
+            spawner,
+        })
+    }
+
+    pub fn state(&self) -> RunState {
+        self.state
+    }
+
+    pub fn live(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn world(&self) -> u32 {
+        self.world
+    }
+
+    pub fn members(&self) -> &[Member] {
+        &self.members
+    }
+
+    /// Drain the event log (tests assert on this).
+    pub fn take_events(&mut self) -> Vec<MemberEvent> {
+        std::mem::take(&mut self.events)
+    }
+
+    /// The first fatal condition, if membership can no longer sustain
+    /// the run. The caller must surface this as a hard error.
+    pub fn fatal(&self) -> Option<&str> {
+        self.fatal.as_deref()
+    }
+
+    fn set_state(&mut self, s: RunState) {
+        if self.state != s {
+            self.state = s;
+            self.events.push(MemberEvent::State { state: s.name(), step: self.step });
+        }
+    }
+
+    fn next_free_rank(&mut self) -> u32 {
+        if let Some(r) = self.free_ranks.pop() {
+            return r;
+        }
+        let r = self.next_rank;
+        self.next_rank += 1;
+        r
+    }
+
+    /// Accept and handshake every pending connection. Joiners mid-round
+    /// simply wait in the accept queue until the next boundary calls
+    /// this. Returns how many members were admitted.
+    pub fn accept_pending(&mut self) -> usize {
+        let mut admitted = 0;
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    if self.admit(stream) {
+                        admitted += 1;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    warn_!(LOG, "accept failed: {e}");
+                    break;
+                }
+            }
+        }
+        admitted
+    }
+
+    /// Hello/Welcome handshake on a fresh connection.
+    fn admit(&mut self, stream: UnixStream) -> bool {
+        if stream.set_nonblocking(false).is_err() {
+            return false;
+        }
+        let mut conn = Conn::new(stream);
+        let hello = match conn.poll_frame(Duration::from_millis(self.cfg.join_timeout_ms.min(500)))
+        {
+            Ok(Some(f)) if f.kind == Kind::Hello => f,
+            Ok(_) => {
+                warn_!(LOG, "joiner sent no Hello; rejected");
+                return false;
+            }
+            Err(e) => {
+                warn_!(LOG, "joiner handshake failed: {e}");
+                return false;
+            }
+        };
+        let uid = match wire::decode_hello(&hello) {
+            Ok(u) => u,
+            Err(e) => {
+                warn_!(LOG, "joiner Hello malformed: {e}");
+                return false;
+            }
+        };
+        let rank = self.next_free_rank();
+        let welcome = wire::encode_welcome(WelcomeMsg {
+            rank,
+            world: self.world,
+            step: self.step,
+            heartbeat_ms: self.cfg.heartbeat_ms as u32,
+        });
+        if let Err(e) = conn.send(&welcome) {
+            warn_!(LOG, "welcome to rank {rank} failed: {e}");
+            self.free_ranks.push(rank);
+            return false;
+        }
+        self.events.push(MemberEvent::Joined { rank, uid, step: self.step });
+        self.members.push(Member { rank, uid, conn, last_seen: Instant::now(), child: None });
+        self.members.sort_by_key(|m| m.rank);
+        true
+    }
+
+    /// Spawn `n` worker processes through the configured spawner.
+    pub fn spawn_workers(&mut self, n: usize, with_faults: bool) -> std::io::Result<Vec<Child>> {
+        let spawner = self
+            .spawner
+            .clone()
+            .ok_or_else(|| std::io::Error::new(ErrorKind::NotFound, "no spawner configured"))?;
+        (0..n).map(|_| spawner.spawn(with_faults)).collect()
+    }
+
+    /// `WaitingForMembers`: block until the target world size is
+    /// reached or the join timeout expires (a structured error).
+    pub fn wait_for_members(&mut self, mut children: Vec<Child>) -> Result<(), String> {
+        self.set_state(RunState::WaitingForMembers);
+        let deadline = Instant::now() + Duration::from_millis(self.cfg.join_timeout_ms);
+        while self.live() < self.world as usize {
+            self.accept_pending();
+            if self.live() >= self.world as usize {
+                break;
+            }
+            if Instant::now() >= deadline {
+                for c in &mut children {
+                    let _ = c.kill();
+                }
+                return Err(format!(
+                    "WaitingForMembers: {}/{} workers joined within {} ms",
+                    self.live(),
+                    self.world,
+                    self.cfg.join_timeout_ms
+                ));
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // hand child ownership to the members that connected (uid = pid)
+        for child in children {
+            let pid = child.id() as u64;
+            if let Some(m) = self.members.iter_mut().find(|m| m.uid == pid) {
+                m.child = Some(child);
+            }
+        }
+        Ok(())
+    }
+
+    /// `Warmup`: ping/pong probe of every member; anyone that fails to
+    /// answer is marked dead before the first round starts.
+    pub fn warmup(&mut self) -> Result<(), String> {
+        self.set_state(RunState::Warmup);
+        let ping = Frame::control(Kind::Ping);
+        let timeout = Duration::from_millis(self.cfg.heartbeat_timeout_ms);
+        let mut dead: Vec<(u32, String)> = Vec::new();
+        for m in &mut self.members {
+            let r = match m.conn.send(&ping) {
+                Err(e) => Err(format!("ping send failed: {e}")),
+                Ok(()) => loop {
+                    match m.conn.poll_frame(timeout) {
+                        Ok(Some(f)) if f.kind == Kind::Pong => break Ok(()),
+                        Ok(Some(f)) if f.kind == Kind::Heartbeat => continue,
+                        Ok(Some(f)) => break Err(format!("unexpected {:?} during warmup", f.kind)),
+                        Ok(None) => break Err(format!("no Pong within {timeout:?}")),
+                        Err(e) => break Err(e.to_string()),
+                    }
+                },
+            };
+            if let Err(reason) = r {
+                dead.push((m.rank, reason));
+            } else {
+                m.last_seen = Instant::now();
+            }
+        }
+        for (rank, reason) in dead {
+            self.mark_dead(rank, &reason);
+        }
+        if self.live() == 0 {
+            return Err(self.fatal.clone().unwrap_or_else(|| "warmup lost all workers".into()));
+        }
+        Ok(())
+    }
+
+    /// Broadcast `RoundStart(step)`. Send failures mark the member dead.
+    pub fn round_start(&mut self, step: u64) {
+        self.step = step;
+        self.set_state(RunState::RoundStart);
+        self.broadcast(wire::encode_step(Kind::RoundStart, step));
+    }
+
+    /// Broadcast `RoundEnd(step)`, then run the elastic window: admit
+    /// late joiners and, if below target, apply the respawn policy.
+    pub fn round_end(&mut self, step: u64) {
+        self.step = step;
+        self.set_state(RunState::RoundEnd);
+        self.broadcast(wire::encode_step(Kind::RoundEnd, step));
+        self.accept_pending();
+        if self.live() < self.world as usize {
+            self.recover();
+        }
+    }
+
+    fn broadcast(&mut self, f: Frame) {
+        let mut dead: Vec<(u32, String)> = Vec::new();
+        for m in &mut self.members {
+            if let Err(e) = m.conn.send(&f) {
+                dead.push((m.rank, format!("send {:?} failed: {e}", f.kind)));
+            }
+        }
+        for (rank, reason) in dead {
+            self.mark_dead(rank, &reason);
+        }
+    }
+
+    /// Apply the respawn policy when membership is below target.
+    fn recover(&mut self) {
+        let missing = self.world as usize - self.live();
+        match self.cfg.respawn {
+            RespawnPolicy::Shrink => {
+                if self.live() == 0 {
+                    self.fatal =
+                        Some(format!("step {}: every worker is dead (policy Shrink)", self.step));
+                }
+            }
+            RespawnPolicy::Strict => {
+                self.fatal = Some(format!(
+                    "step {}: {missing} worker(s) dead under policy Strict",
+                    self.step
+                ));
+            }
+            RespawnPolicy::Respawn { max } => {
+                if self.spawner.is_none() {
+                    // externally-launched workers: wait for re-connects only
+                    if self.live() == 0 {
+                        self.fatal = Some(format!(
+                            "step {}: every worker is dead and no spawner is configured",
+                            self.step
+                        ));
+                    }
+                    return;
+                }
+                while self.live() < self.world as usize {
+                    if self.respawn_attempts >= max {
+                        self.fatal = Some(format!(
+                            "step {}: {} respawn attempt(s) exhausted, {}/{} workers live",
+                            self.step,
+                            max,
+                            self.live(),
+                            self.world
+                        ));
+                        return;
+                    }
+                    let attempt = self.respawn_attempts;
+                    self.respawn_attempts += 1;
+                    let backoff = self.cfg.backoff_base_ms.saturating_mul(1 << attempt.min(10));
+                    std::thread::sleep(Duration::from_millis(backoff));
+                    let need = self.world as usize - self.live();
+                    let children = match self.spawn_workers(need, false) {
+                        Ok(c) => c,
+                        Err(e) => {
+                            self.fatal =
+                                Some(format!("step {}: respawn spawn failed: {e}", self.step));
+                            return;
+                        }
+                    };
+                    let had: Vec<u32> = self.members.iter().map(|m| m.rank).collect();
+                    if self.wait_join(need).is_ok() {
+                        for child in children {
+                            let pid = child.id() as u64;
+                            if let Some(m) = self.members.iter_mut().find(|m| m.uid == pid) {
+                                m.child = Some(child);
+                            }
+                        }
+                        let fresh: Vec<u32> = self
+                            .members
+                            .iter()
+                            .map(|m| m.rank)
+                            .filter(|r| !had.contains(r))
+                            .collect();
+                        for rank in fresh {
+                            warn_!(LOG, "rank {rank} respawned (attempt {attempt})");
+                            self.events.push(MemberEvent::Respawned { rank, attempt });
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn wait_join(&mut self, need: usize) -> Result<(), String> {
+        let deadline = Instant::now() + Duration::from_millis(self.cfg.join_timeout_ms);
+        let target = self.live() + need;
+        while self.live() < target {
+            self.accept_pending();
+            if self.live() >= target {
+                return Ok(());
+            }
+            if Instant::now() >= deadline {
+                return Err(format!(
+                    "replacement join timeout: {}/{} members",
+                    self.live(),
+                    target
+                ));
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        Ok(())
+    }
+
+    /// Remove a member with a structured, named-rank diagnostic; its
+    /// rank returns to the free pool for a replacement to claim.
+    pub fn mark_dead(&mut self, rank: u32, what: &str) {
+        let Some(i) = self.members.iter().position(|m| m.rank == rank) else {
+            return;
+        };
+        let mut m = self.members.remove(i);
+        let reason = format!(
+            "worker rank {} (uid {}) died at step {} in {}: {what}",
+            m.rank,
+            m.uid,
+            self.step,
+            self.state.name()
+        );
+        warn_!(LOG, "{reason}");
+        if let Some(child) = m.child.as_mut() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+        self.free_ranks.push(rank);
+        self.free_ranks.sort_unstable_by(|a, b| b.cmp(a)); // pop() yields smallest
+        self.events.push(MemberEvent::Dead { rank, step: self.step, reason });
+    }
+
+    /// Rank of the member at position `i` (positions are rank-ordered
+    /// but ephemeral — re-query after any death).
+    pub fn rank_at(&self, i: usize) -> u32 {
+        self.members[i].rank
+    }
+
+    /// Send a frame to the member at position `i` in rank order.
+    pub fn send_to(&mut self, i: usize, f: &Frame) -> Result<(), String> {
+        match self.members[i].conn.send(f) {
+            Ok(()) => Ok(()),
+            Err(e) => Err(format!("send {:?} failed: {e}", f.kind)),
+        }
+    }
+
+    /// Wait for a *data* frame from member `i`: heartbeats are drained
+    /// (refreshing liveness), and the wait enforces both the heartbeat
+    /// timeout (process gone silent) and the job deadline (process alive
+    /// but not answering — e.g. a drop-frame fault).
+    pub fn recv_data(&mut self, i: usize, deadline: Instant) -> Result<Frame, String> {
+        let hb_timeout = Duration::from_millis(self.cfg.heartbeat_timeout_ms);
+        let m = &mut self.members[i];
+        loop {
+            match m.conn.poll_frame(Duration::from_millis(5)) {
+                Ok(Some(f)) => {
+                    m.last_seen = Instant::now();
+                    match f.kind {
+                        Kind::Heartbeat => continue,
+                        _ => return Ok(f),
+                    }
+                }
+                Ok(None) => {
+                    if m.last_seen.elapsed() > hb_timeout {
+                        return Err(format!(
+                            "heartbeat timeout ({} ms silent)",
+                            m.last_seen.elapsed().as_millis()
+                        ));
+                    }
+                    if Instant::now() >= deadline {
+                        return Err(format!(
+                            "job timeout ({} ms) with heartbeats still arriving",
+                            self.cfg.job_timeout_ms
+                        ));
+                    }
+                }
+                Err(e) => return Err(e.to_string()),
+            }
+        }
+    }
+
+    /// Job deadline helper for [`Membership::recv_data`].
+    pub fn job_deadline(&self) -> Instant {
+        Instant::now() + Duration::from_millis(self.cfg.job_timeout_ms)
+    }
+
+    /// Broadcast `Shutdown` and reap spawned children (bounded wait,
+    /// then kill). Called from `ProcComm::drop`.
+    pub fn shutdown(&mut self) {
+        let f = Frame::control(Kind::Shutdown);
+        for m in &mut self.members {
+            let _ = m.conn.send(&f);
+        }
+        let grace = Instant::now() + Duration::from_millis(500);
+        for m in &mut self.members {
+            if let Some(child) = m.child.as_mut() {
+                loop {
+                    match child.try_wait() {
+                        Ok(Some(_)) => break,
+                        Ok(None) if Instant::now() < grace => {
+                            std::thread::sleep(Duration::from_millis(5))
+                        }
+                        _ => {
+                            let _ = child.kill();
+                            let _ = child.wait();
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        self.members.clear();
+    }
+}
+
+impl Drop for Membership {
+    fn drop(&mut self) {
+        self.shutdown();
+        if let Ok(addr) = self.listener.local_addr() {
+            if let Some(p) = addr.as_pathname() {
+                let _ = std::fs::remove_file(p);
+            }
+        }
+    }
+}

@@ -26,8 +26,22 @@
 //! the same step-by-step losses as the sequential coordinator (see
 //! `tests/dist_engine.rs`).
 
+//! The process ladder (`proc`/`membership`/`worker`/`fault`) extends the
+//! same `Collective` seam across address spaces: a coordinator drives
+//! `spngd worker` processes over the framed Unix-socket wire protocol
+//! with explicit membership (`WaitingForMembers → Warmup → RoundStart →
+//! RoundEnd`), heartbeat-based death detection, round-boundary
+//! re-admission, and deterministic failure injection.
+
 pub mod engine;
+pub mod fault;
+pub mod membership;
+pub mod proc;
 pub mod ring;
+pub mod worker;
 
 pub use engine::DistEngine;
-pub use ring::RingComm;
+pub use fault::{Fault, FaultKind, FaultPlan};
+pub use membership::{MemberEvent, Membership, MembershipCfg, RespawnPolicy, RunState};
+pub use proc::{ProcCfg, ProcComm, WireStats};
+pub use ring::{PoisonGuard, RingComm};

@@ -1,0 +1,543 @@
+//! `ProcComm` — the multi-process [`Collective`] transport.
+//!
+//! Worker processes (`spngd worker`) are *stateless reducers*: the
+//! coordinator keeps the model, draws the lanes, and ships each
+//! reduction job (a gradient segment or one statistic's lane matrices)
+//! over the framed Unix-socket wire protocol (`collectives::wire`); a
+//! worker decodes at wire precision, reduces with the shared
+//! canonical-lane math, and replies. Because decoding real f16 bytes is
+//! exactly `wire_quantize`, and workers reuse the same `lane_mean` /
+//! reciprocal-multiply op sequence as `SimComm` and `RingComm`, the
+//! healthy multi-process path is bit-identical to both in-process
+//! engines — and stays bit-identical across worker deaths, because a
+//! dead worker's jobs are recomputed, not skipped.
+//!
+//! Byte accounting is dual: the modeled per-GPU `CommStats` charge the
+//! same `ring_wire_bytes` formulas as `SimComm` (the cost model must not
+//! care which transport ran), while [`WireStats`] counts the *actual*
+//! framed bytes moved, asserted against closed-form counters in tests
+//! and `python/tools/ring_sim.py`.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::collectives::comm::{
+    lane_mean, lane_mean_mats_wire, ring_wire_bytes, wire_quantize, wire_quantize_slice,
+    Collective, CommStats, Precision, StatClass,
+};
+use crate::collectives::wire::{self, Frame, Kind};
+use crate::dist::fault::FaultPlan;
+use crate::dist::membership::{
+    MemberEvent, Membership, MembershipCfg, RespawnPolicy, RunState, Spawner,
+};
+use crate::linalg::{packed_len, Mat};
+
+/// Configuration for the multi-process transport.
+#[derive(Clone, Debug)]
+pub struct ProcCfg {
+    /// Worker binary; defaults to the current executable.
+    pub worker_bin: Option<String>,
+    /// Spawn workers from the coordinator (default). When false, the
+    /// coordinator binds the socket and waits for external joiners.
+    pub spawn: bool,
+    /// Explicit socket path; default is a fresh temp-dir socket.
+    pub socket: Option<String>,
+    pub heartbeat_ms: u64,
+    pub heartbeat_timeout_ms: u64,
+    pub job_timeout_ms: u64,
+    pub join_timeout_ms: u64,
+    pub respawn: RespawnPolicy,
+    pub backoff_base_ms: u64,
+    /// Deterministic failure script exported to first-generation workers.
+    pub fault_plan: FaultPlan,
+}
+
+impl Default for ProcCfg {
+    fn default() -> Self {
+        ProcCfg {
+            worker_bin: None,
+            spawn: true,
+            socket: None,
+            heartbeat_ms: 50,
+            heartbeat_timeout_ms: 1000,
+            job_timeout_ms: 5000,
+            join_timeout_ms: 10_000,
+            respawn: RespawnPolicy::Respawn { max: 2 },
+            backoff_base_ms: 20,
+            fault_plan: FaultPlan::default(),
+        }
+    }
+}
+
+impl ProcCfg {
+    /// Resolve from the environment: `SPNGD_FAULT_PLAN` (failure script),
+    /// `SPNGD_PROC_RESPAWN` = `respawn` | `shrink` | `strict`, and
+    /// `SPNGD_PROC_*_MS` timeout overrides. Invalid values are hard
+    /// errors, mirroring the other env registries.
+    pub fn from_env() -> ProcCfg {
+        let mut cfg = ProcCfg { fault_plan: FaultPlan::from_env(), ..ProcCfg::default() };
+        if let Ok(v) = std::env::var("SPNGD_PROC_RESPAWN") {
+            cfg.respawn = Self::parse_respawn(&v)
+                .unwrap_or_else(|e| panic!("SPNGD_PROC_RESPAWN: {e}"));
+        }
+        let ms = |name: &str, dst: &mut u64| {
+            if let Ok(v) = std::env::var(name) {
+                *dst = v.parse().unwrap_or_else(|_| panic!("{name}: bad ms value '{v}'"));
+            }
+        };
+        ms("SPNGD_PROC_HEARTBEAT_MS", &mut cfg.heartbeat_ms);
+        ms("SPNGD_PROC_HEARTBEAT_TIMEOUT_MS", &mut cfg.heartbeat_timeout_ms);
+        ms("SPNGD_PROC_JOB_TIMEOUT_MS", &mut cfg.job_timeout_ms);
+        ms("SPNGD_PROC_JOIN_TIMEOUT_MS", &mut cfg.join_timeout_ms);
+        cfg
+    }
+
+    /// Parse a respawn-policy spelling: `respawn` (2 attempts),
+    /// `respawn:N`, `shrink`, or `strict`.
+    pub fn parse_respawn(s: &str) -> Result<RespawnPolicy, String> {
+        match s {
+            "respawn" => Ok(RespawnPolicy::Respawn { max: 2 }),
+            "shrink" => Ok(RespawnPolicy::Shrink),
+            "strict" => Ok(RespawnPolicy::Strict),
+            other => match other.strip_prefix("respawn:") {
+                Some(n) => n
+                    .parse()
+                    .map(|max| RespawnPolicy::Respawn { max })
+                    .map_err(|_| format!("bad respawn count '{n}'")),
+                None => Err(format!(
+                    "unknown policy '{other}' (respawn | respawn:N | shrink | strict)"
+                )),
+            },
+        }
+    }
+
+    fn membership_cfg(&self) -> MembershipCfg {
+        MembershipCfg {
+            heartbeat_ms: self.heartbeat_ms,
+            heartbeat_timeout_ms: self.heartbeat_timeout_ms,
+            job_timeout_ms: self.job_timeout_ms,
+            join_timeout_ms: self.join_timeout_ms,
+            respawn: self.respawn,
+            backoff_base_ms: self.backoff_base_ms,
+        }
+    }
+}
+
+/// Actual framed bytes moved on the process wire (data frames only —
+/// heartbeats/control are latency traffic, not payload). On the healthy
+/// path these match the closed-form counters in `collectives::wire`;
+/// fault recovery legitimately re-sends jobs, so faults inflate them.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct WireStats {
+    pub grad_tx: u64,
+    pub grad_rx: u64,
+    pub stat_tx: u64,
+    pub stat_rx: u64,
+    pub data_frames: u64,
+}
+
+static SOCKET_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// The multi-process transport. See the module docs for the contract.
+pub struct ProcComm {
+    p: usize,
+    pub symmetric_packing: bool,
+    precision: Precision,
+    stats: Mutex<CommStats>,
+    step_stats: Mutex<CommStats>,
+    wire_stats: Mutex<WireStats>,
+    membership: Mutex<Membership>,
+    fatal: Mutex<Option<String>>,
+    temp_dir: Option<PathBuf>,
+}
+
+const LOG: &str = "dist::proc";
+
+impl ProcComm {
+    /// Bind the coordinator socket, spawn (or await) `world` workers,
+    /// run `WaitingForMembers → Warmup`, and return a transport ready
+    /// for round 1.
+    pub fn launch(world: usize, precision: Precision, cfg: &ProcCfg) -> anyhow::Result<ProcComm> {
+        let world = world.max(1);
+        let (socket, temp_dir) = match &cfg.socket {
+            Some(s) => (s.clone(), None),
+            None => {
+                let dir = std::env::temp_dir().join(format!(
+                    "spngd-proc-{}-{}",
+                    std::process::id(),
+                    SOCKET_SEQ.fetch_add(1, Ordering::Relaxed)
+                ));
+                std::fs::create_dir_all(&dir)
+                    .map_err(|e| anyhow::anyhow!("create socket dir {dir:?}: {e}"))?;
+                (dir.join("coord.sock").to_string_lossy().into_owned(), Some(dir))
+            }
+        };
+        if socket.len() > 100 {
+            anyhow::bail!("socket path '{socket}' exceeds the unix socket path limit");
+        }
+        let program = match &cfg.worker_bin {
+            Some(p) => p.clone(),
+            None => std::env::current_exe()
+                .map_err(|e| anyhow::anyhow!("resolve worker binary: {e}"))?
+                .to_string_lossy()
+                .into_owned(),
+        };
+        let spawner = cfg.spawn.then(|| Spawner {
+            program,
+            socket: socket.clone(),
+            fault_env: cfg.fault_plan.to_env(),
+        });
+        let mut membership =
+            Membership::bind(&socket, world as u32, cfg.membership_cfg(), spawner)
+                .map_err(|e| anyhow::anyhow!("bind coordinator socket {socket}: {e}"))?;
+        let children = if cfg.spawn {
+            membership
+                .spawn_workers(world, true)
+                .map_err(|e| anyhow::anyhow!("spawn {world} workers: {e}"))?
+        } else {
+            Vec::new()
+        };
+        membership.wait_for_members(children).map_err(|e| anyhow::anyhow!("{e}"))?;
+        membership.warmup().map_err(|e| anyhow::anyhow!("{e}"))?;
+        crate::debug!(LOG, "{} workers admitted on {socket}", membership.live());
+        Ok(ProcComm {
+            p: world,
+            symmetric_packing: true,
+            precision,
+            stats: Mutex::new(CommStats::default()),
+            step_stats: Mutex::new(CommStats::default()),
+            wire_stats: Mutex::new(WireStats::default()),
+            membership: Mutex::new(membership),
+            fatal: Mutex::new(None),
+            temp_dir,
+        })
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Live worker count (shrinks on deaths, recovers on respawn).
+    pub fn live(&self) -> usize {
+        self.membership.lock().unwrap().live()
+    }
+
+    pub fn state(&self) -> RunState {
+        self.membership.lock().unwrap().state()
+    }
+
+    /// Drain membership events (tests assert Dead/Respawned sequences).
+    pub fn take_events(&self) -> Vec<MemberEvent> {
+        self.membership.lock().unwrap().take_events()
+    }
+
+    /// Snapshot the actual framed wire bytes.
+    pub fn wire_stats(&self) -> WireStats {
+        self.wire_stats.lock().unwrap().clone()
+    }
+
+    /// Enter a round: broadcast `RoundStart(step)`. Errors out if a
+    /// previous round left the run unsustainable.
+    pub fn round_start(&self, step: u64) -> anyhow::Result<()> {
+        self.check_fatal()?;
+        let mut m = self.membership.lock().unwrap();
+        m.round_start(step);
+        drop(m);
+        self.check_fatal()
+    }
+
+    /// Close a round: broadcast `RoundEnd(step)`, admit late joiners,
+    /// and run the respawn policy if membership shrank.
+    pub fn round_end(&self, step: u64) -> anyhow::Result<()> {
+        let mut m = self.membership.lock().unwrap();
+        m.round_end(step);
+        drop(m);
+        self.check_fatal()
+    }
+
+    /// Surface the first fatal membership condition as a structured
+    /// hard error (named ranks, step, reason).
+    pub fn check_fatal(&self) -> anyhow::Result<()> {
+        if let Some(f) = self.fatal.lock().unwrap().as_ref() {
+            anyhow::bail!("proc transport fatal: {f}");
+        }
+        if let Some(f) = self.membership.lock().unwrap().fatal() {
+            anyhow::bail!("proc transport fatal: {f}");
+        }
+        Ok(())
+    }
+
+    fn set_fatal(&self, msg: String) {
+        let mut f = self.fatal.lock().unwrap();
+        if f.is_none() {
+            *f = Some(msg);
+        }
+    }
+
+    fn elems_to_bytes(&self, elems: usize) -> u64 {
+        ring_wire_bytes(self.p, self.precision.wire_elem_bytes(), elems)
+    }
+
+    fn charge(&self, f: impl Fn(&mut CommStats)) {
+        f(&mut self.stats.lock().unwrap());
+        f(&mut self.step_stats.lock().unwrap());
+    }
+
+    fn count_tx(&self, grad: bool, payload_len: usize) {
+        let mut w = self.wire_stats.lock().unwrap();
+        let bytes = Frame::encoded_len(payload_len);
+        if grad {
+            w.grad_tx += bytes;
+        } else {
+            w.stat_tx += bytes;
+        }
+        w.data_frames += 1;
+    }
+
+    fn count_rx(&self, grad: bool, payload_len: usize) {
+        let mut w = self.wire_stats.lock().unwrap();
+        let bytes = Frame::encoded_len(payload_len);
+        if grad {
+            w.grad_rx += bytes;
+        } else {
+            w.stat_rx += bytes;
+        }
+        w.data_frames += 1;
+    }
+
+    /// Dispatch `frames[j]` one-per-live-worker in waves until every job
+    /// has a decoded reply (routed through `on_reply`). Worker deaths
+    /// re-queue the job; with zero workers left, `local[j]` computes the
+    /// result in-process (bit-identically) and the transport goes fatal.
+    fn run_jobs(
+        &self,
+        m: &mut Membership,
+        grad: bool,
+        frames: &[Frame],
+        mut on_reply: impl FnMut(usize, Frame) -> Result<(), String>,
+        mut local: impl FnMut(usize),
+    ) {
+        let want = if grad { Kind::GradSeg } else { Kind::StatResult };
+        let mut done = vec![false; frames.len()];
+        loop {
+            let todo: Vec<usize> = (0..frames.len()).filter(|&j| !done[j]).collect();
+            if todo.is_empty() {
+                return;
+            }
+            if m.live() == 0 {
+                for &j in &todo {
+                    local(j);
+                }
+                self.set_fatal(format!(
+                    "every worker died mid-step; {} job(s) finished locally \
+                     (see Dead events for per-rank reasons)",
+                    todo.len()
+                ));
+                return;
+            }
+            let ranks: Vec<u32> = m.members().iter().map(|mm| mm.rank).collect();
+            let wave: Vec<(usize, u32)> =
+                todo.iter().zip(ranks.iter()).map(|(&j, &r)| (j, r)).collect();
+            // send phase
+            for &(j, rank) in &wave {
+                let Some(i) = m.members().iter().position(|mm| mm.rank == rank) else {
+                    continue;
+                };
+                match m.send_to(i, &frames[j]) {
+                    Ok(()) => self.count_tx(grad, frames[j].payload.len()),
+                    Err(e) => m.mark_dead(rank, &e),
+                }
+            }
+            // receive phase
+            for &(j, rank) in &wave {
+                let Some(i) = m.members().iter().position(|mm| mm.rank == rank) else {
+                    continue; // died during send; job stays queued
+                };
+                let deadline = m.job_deadline();
+                match m.recv_data(i, deadline) {
+                    Ok(f) if f.kind == want => {
+                        let n = f.payload.len();
+                        match on_reply(j, f) {
+                            Ok(()) => {
+                                self.count_rx(grad, n);
+                                done[j] = true;
+                            }
+                            Err(e) => m.mark_dead(rank, &e),
+                        }
+                    }
+                    Ok(f) => m.mark_dead(rank, &format!("unexpected {:?} reply", f.kind)),
+                    Err(e) => m.mark_dead(rank, &e),
+                }
+            }
+        }
+    }
+}
+
+impl Collective for ProcComm {
+    fn world(&self) -> usize {
+        self.p
+    }
+
+    /// AllReduce(mean) with the reduction farmed out to worker
+    /// processes: lanes are quantized at serialization (really — the
+    /// encoder emits f16 bytes under `Mixed`), split into balanced
+    /// contiguous segments (one per live worker), reduced remotely with
+    /// the shared `lane_mean`, and the quantized mean lands back in
+    /// every lane. Byte charging is identical to `SimComm`.
+    fn all_reduce_mean(&self, lanes: &mut [Vec<f32>]) {
+        assert!(!lanes.is_empty(), "at least one lane");
+        let n = lanes[0].len();
+        let nlanes = lanes.len();
+        for b in lanes.iter_mut() {
+            wire_quantize_slice(self.precision, b);
+        }
+        let mut m = self.membership.lock().unwrap();
+        let segs = wire::split_segments(n, m.live().max(1));
+        let frames: Vec<Frame> = segs
+            .iter()
+            .enumerate()
+            .map(|(j, &(start, len))| {
+                let slices: Vec<&[f32]> =
+                    lanes.iter().map(|l| &l[start..start + len]).collect();
+                wire::encode_grad_job(self.precision, j as u32, &slices)
+            })
+            .collect();
+        let mut mean = vec![0.0f32; n];
+        // split the borrow: `lanes` is read by the local fallback while
+        // `mean` segments are written by replies
+        let mean_cell = std::cell::RefCell::new(&mut mean);
+        self.run_jobs(
+            &mut m,
+            true,
+            &frames,
+            |j, f| {
+                let (jid, seg) =
+                    wire::decode_grad_seg(&f).map_err(|e| format!("bad grad reply: {e}"))?;
+                let (start, len) = segs[j];
+                if jid as usize != j || seg.len() != len {
+                    return Err(format!(
+                        "grad reply mismatch: job {jid} len {} (want {j} len {len})",
+                        seg.len()
+                    ));
+                }
+                mean_cell.borrow_mut()[start..start + len].copy_from_slice(&seg);
+                Ok(())
+            },
+            |j| {
+                let (start, len) = segs[j];
+                let mut out = mean_cell.borrow_mut();
+                for i in start..start + len {
+                    out[i] = wire_quantize(
+                        self.precision,
+                        lane_mean(lanes.iter().map(|l| l[i]), nlanes),
+                    );
+                }
+            },
+        );
+        drop(m);
+        for b in lanes.iter_mut() {
+            b.copy_from_slice(&mean);
+        }
+        let bytes = 2 * self.elems_to_bytes(n);
+        self.charge(|s| {
+            s.ar_grads += bytes;
+            s.num_ops += 1;
+        });
+    }
+
+    /// ReduceScatterV with one job per statistic, round-robined over
+    /// live workers; owner-side means come back as exact f32 (master
+    /// copies are never re-quantized — §5.2).
+    fn reduce_scatter_v(&self, items: &[Vec<Mat>], classes: &[StatClass]) -> Vec<Mat> {
+        assert!(!items.is_empty(), "at least one lane");
+        let n_items = items[0].len();
+        assert_eq!(classes.len(), n_items);
+        let frames: Vec<Frame> = (0..n_items)
+            .map(|i| {
+                let (rows, cols) = (items[0][i].rows, items[0][i].cols);
+                let slices: Vec<&[f32]> =
+                    items.iter().map(|lane| lane[i].data.as_slice()).collect();
+                wire::encode_stat_job(self.precision, i as u32, rows as u32, cols as u32, &slices)
+            })
+            .collect();
+        let mut out: Vec<Option<Mat>> = (0..n_items).map(|_| None).collect();
+        let out_cell = std::cell::RefCell::new(&mut out);
+        let mut m = self.membership.lock().unwrap();
+        self.run_jobs(
+            &mut m,
+            false,
+            &frames,
+            |j, f| {
+                let (item, rows, cols, data) =
+                    wire::decode_stat_result(&f).map_err(|e| format!("bad stat reply: {e}"))?;
+                let (wr, wc) = (items[0][j].rows, items[0][j].cols);
+                if item as usize != j || (rows as usize, cols as usize) != (wr, wc) {
+                    return Err(format!(
+                        "stat reply mismatch: item {item} {rows}x{cols} (want {j} {wr}x{wc})"
+                    ));
+                }
+                out_cell.borrow_mut()[j] = Some(Mat::from_vec(wr, wc, data));
+                Ok(())
+            },
+            |j| {
+                let lane_mats: Vec<&Mat> = items.iter().map(|lane| &lane[j]).collect();
+                out_cell.borrow_mut()[j] = Some(lane_mean_mats_wire(&lane_mats, self.precision));
+            },
+        );
+        drop(m);
+        let out: Vec<Mat> = out.into_iter().map(|o| o.expect("every job resolved")).collect();
+        let mut elems_a = 0usize;
+        let mut elems_g = 0usize;
+        for (i, mat) in out.iter().enumerate() {
+            let elems = if self.symmetric_packing && mat.is_square() {
+                packed_len(mat.rows)
+            } else {
+                mat.rows * mat.cols
+            };
+            match classes[i] {
+                StatClass::A => elems_a += elems,
+                StatClass::GorF => elems_g += elems,
+            }
+        }
+        let (ba, bg) = (self.elems_to_bytes(elems_a), self.elems_to_bytes(elems_g));
+        self.charge(|s| {
+            s.rs_stats_a += ba;
+            s.rs_stats_g += bg;
+            s.num_ops += 2;
+        });
+        out
+    }
+
+    /// Parameters live in the coordinator (workers are stateless), so
+    /// this is accounting-only, exactly like `SimComm` — and always f32.
+    fn all_gather_v_params(&self, total_elems: usize) {
+        let bytes = ring_wire_bytes(self.p, 4, total_elems);
+        self.charge(|s| {
+            s.ag_params += bytes;
+            s.num_ops += 1;
+        });
+    }
+
+    fn stats(&self) -> CommStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    fn take_step_stats(&self) -> CommStats {
+        let mut ss = self.step_stats.lock().unwrap();
+        let out = ss.clone();
+        *ss = CommStats::default();
+        out
+    }
+}
+
+impl Drop for ProcComm {
+    fn drop(&mut self) {
+        if let Ok(mut m) = self.membership.lock() {
+            m.shutdown();
+        }
+        if let Some(dir) = &self.temp_dir {
+            let _ = std::fs::remove_dir_all(dir);
+        }
+    }
+}

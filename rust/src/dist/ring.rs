@@ -43,8 +43,8 @@
 //! clone-in/drain-back protocol; the wire-byte accounting is unchanged
 //! (asserted against `SimComm` in `tests/dist_collectives.rs`).
 
-use std::sync::{Arc, Condvar, Mutex, MutexGuard};
-use std::time::Duration;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::time::{Duration, Instant};
 
 use crate::collectives::comm::{
     lane_mean, lane_mean_mats, ring_wire_bytes, wire_quantize_slice, Collective, CommStats,
@@ -55,23 +55,23 @@ use crate::linalg::{packed_len, Mat};
 /// Default AllReduce chunk granularity (elements).
 pub const DEFAULT_CHUNK_ELEMS: usize = 4096;
 
-/// Upper bound on any intra-round wait. A peer thread that died (e.g.
-/// panicked in a kernel) can never satisfy the round, so rather than
-/// hanging the step forever, waits convert to a loud panic after this
-/// long. The error path proper never needs it — `worker_step` keeps the
-/// protocol alive with zero payloads on `Err` — this is the backstop
-/// for unwinds.
-const STALL_TIMEOUT: Duration = Duration::from_secs(120);
-
-/// `Condvar::wait` with the stall backstop: panics (instead of hanging)
-/// when no progress signal arrives for [`STALL_TIMEOUT`].
-fn wait_round<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>, what: &str) -> MutexGuard<'a, T> {
-    let (g, timeout) = cv.wait_timeout(g, STALL_TIMEOUT).unwrap();
-    assert!(
-        !timeout.timed_out(),
-        "dist collective stalled waiting for {what} — a peer worker thread likely died"
-    );
-    g
+/// Upper bound on any intra-round wait (`SPNGD_STALL_TIMEOUT_MS`,
+/// default 120 s). A peer thread that died can never satisfy the round,
+/// so rather than hanging the step forever, waits convert to a loud
+/// panic after this long. The error path proper never needs it —
+/// `worker_step` keeps the protocol alive with zero payloads on `Err` —
+/// this is the backstop of last resort; a panicking peer normally
+/// poisons the round first (see [`RingComm::poison`]) and waiters abort
+/// within one 50 ms wait slice with the dead rank named.
+fn stall_timeout() -> Duration {
+    static MS: OnceLock<u64> = OnceLock::new();
+    let ms = *MS.get_or_init(|| {
+        std::env::var("SPNGD_STALL_TIMEOUT_MS")
+            .ok()
+            .and_then(|v| v.trim().parse().ok())
+            .unwrap_or(120_000)
+    });
+    Duration::from_millis(ms.max(1))
 }
 
 // ----------------------------------------------------------- rounds
@@ -164,6 +164,10 @@ pub struct RingComm {
     gather_cv: Condvar,
     bar: Mutex<BarCtl>,
     bar_cv: Condvar,
+    /// Set when a worker dies mid-round (normally by a [`PoisonGuard`]
+    /// observing a panic). Every waiter re-checks it each wait slice and
+    /// converts the hang into a panic naming the dead rank.
+    poison: Mutex<Option<String>>,
 }
 
 impl RingComm {
@@ -183,6 +187,64 @@ impl RingComm {
             gather_cv: Condvar::new(),
             bar: Mutex::new(BarCtl::default()),
             bar_cv: Condvar::new(),
+            poison: Mutex::new(None),
+        }
+    }
+
+    /// Mark the communicator dead: `rank`'s worker can no longer satisfy
+    /// any round. Every blocked waiter wakes and panics with a diagnostic
+    /// naming the dead rank instead of deadlocking until the stall
+    /// backstop. First death wins; later ones keep the original reason.
+    pub fn poison(&self, rank: usize, what: &str) {
+        {
+            let mut p = self.poison.lock().unwrap();
+            if p.is_none() {
+                *p = Some(format!("worker rank {rank} died: {what}"));
+            }
+        }
+        self.stat_cv.notify_all();
+        self.grad_cv.notify_all();
+        self.gather_cv.notify_all();
+        self.bar_cv.notify_all();
+    }
+
+    /// An RAII guard for worker-thread bodies: if the thread unwinds
+    /// while the guard is live, the communicator is poisoned with the
+    /// rank's name so peers abort loudly instead of hanging.
+    pub fn poison_guard(&self, rank: usize) -> PoisonGuard<'_> {
+        PoisonGuard { comm: self, rank }
+    }
+
+    /// `Condvar::wait` with death detection: waits in 50 ms slices,
+    /// re-checking the poison flag each wakeup (so a peer's death cannot
+    /// be lost to a notify race), and panics after the stall backstop if
+    /// no progress signal ever arrives.
+    fn wait_round<'a, T>(
+        &self,
+        cv: &Condvar,
+        g: MutexGuard<'a, T>,
+        what: &str,
+    ) -> MutexGuard<'a, T> {
+        let stall = stall_timeout();
+        let start = Instant::now();
+        let mut g = g;
+        loop {
+            // clone + drop the poison lock before panicking, so the
+            // message survives for every other waiter
+            let dead: Option<String> = self.poison.lock().unwrap().clone();
+            if let Some(who) = dead {
+                panic!("dist collective aborted waiting for {what}: {who}");
+            }
+            let slice = Duration::from_millis(50).min(stall);
+            let (g2, timeout) = cv.wait_timeout(g, slice).unwrap();
+            g = g2;
+            if !timeout.timed_out() {
+                return g; // a real signal — the caller re-checks its predicate
+            }
+            assert!(
+                start.elapsed() < stall,
+                "dist collective stalled waiting for {what} — a peer worker thread likely died"
+            );
         }
     }
 
@@ -210,7 +272,7 @@ impl RingComm {
             self.bar_cv.notify_all();
         } else {
             while g.generation == gen {
-                g = wait_round(&self.bar_cv, g, "barrier peers");
+                g = self.wait_round(&self.bar_cv, g, "barrier peers");
             }
         }
     }
@@ -262,7 +324,7 @@ impl RingComm {
             let mut st = self.stat.lock().unwrap();
             assert!(st.active, "reduce_stat outside a statistic round");
             while st.posted[item] < st.lanes {
-                st = wait_round(&self.stat_cv, st, "statistic lanes");
+                st = self.wait_round(&self.stat_cv, st, "statistic lanes");
             }
             let slot = std::mem::take(&mut st.slots[item]);
             slot.into_iter().map(|m| m.expect("lane posted")).collect()
@@ -332,7 +394,7 @@ impl RingComm {
                 break; // joining the posting phase of the open round
             }
             // previous round still draining — wait for it to close
-            st = wait_round(&self.grad_cv, st, "previous AllReduce round to close");
+            st = self.wait_round(&self.grad_cv, st, "previous AllReduce round to close");
         }
         assert_eq!(st.total_lanes, total_lanes, "lane total mismatch across ranks");
         st.participants += 1;
@@ -360,7 +422,7 @@ impl RingComm {
             let mut st = self.grad.lock().unwrap();
             assert!(st.active, "grad_finish without grad_post");
             while st.posted < st.total_lanes {
-                st = wait_round(&self.grad_cv, st, "gradient lanes");
+                st = self.wait_round(&self.grad_cv, st, "gradient lanes");
             }
             if st.frozen.is_none() {
                 let lanes = std::mem::take(&mut st.lanes);
@@ -401,7 +463,7 @@ impl RingComm {
         drop(frozen);
         let mut st = self.grad.lock().unwrap();
         while st.done_chunks < st.nchunks {
-            st = wait_round(&self.grad_cv, st, "AllReduce chunk reduction");
+            st = self.wait_round(&self.grad_cv, st, "AllReduce chunk reduction");
         }
         st.drained += 1;
         if st.drained == st.participants {
@@ -444,7 +506,7 @@ impl RingComm {
                 st.joined += 1;
                 break;
             }
-            st = wait_round(&self.gather_cv, st, "previous AllGatherV round to close");
+            st = self.wait_round(&self.gather_cv, st, "previous AllGatherV round to close");
         }
         assert_eq!(st.n_segs, n_segs, "segment count mismatch across ranks");
         for (i, seg) in segs.iter().enumerate() {
@@ -458,7 +520,7 @@ impl RingComm {
             self.gather_cv.notify_all();
         }
         while st.posted < st.n_segs {
-            st = wait_round(&self.gather_cv, st, "owner segments");
+            st = self.wait_round(&self.gather_cv, st, "owner segments");
         }
         let mut total_elems = 0usize;
         for (i, seg) in segs.iter_mut().enumerate() {
@@ -478,6 +540,22 @@ impl RingComm {
                 s.num_ops += 1;
             });
             self.gather_cv.notify_all();
+        }
+    }
+}
+
+/// Poisons the communicator if the owning thread unwinds while the
+/// guard is live (see [`RingComm::poison_guard`]). A clean exit drops
+/// the guard silently.
+pub struct PoisonGuard<'a> {
+    comm: &'a RingComm,
+    rank: usize,
+}
+
+impl Drop for PoisonGuard<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.comm.poison(self.rank, "panicked mid-collective");
         }
     }
 }
@@ -502,8 +580,9 @@ impl Collective for RingComm {
             groups[g % self.p].push((g, lane));
         }
         std::thread::scope(|s| {
-            for group in groups {
+            for (rank, group) in groups.into_iter().enumerate() {
                 s.spawn(move || {
+                    let _poison = self.poison_guard(rank);
                     let mut group = group;
                     let posts: Vec<(usize, Vec<f32>)> =
                         group.iter_mut().map(|(g, b)| (*g, std::mem::take(*b))).collect();
@@ -535,6 +614,7 @@ impl Collective for RingComm {
             for rank in 0..self.p {
                 let results = &results;
                 s.spawn(move || {
+                    let _poison = self.poison_guard(rank);
                     for (g, lane) in lanes.iter().enumerate() {
                         if g % self.p != rank {
                             continue;
@@ -615,6 +695,41 @@ mod tests {
         }
         // ring AR bytes: 2 * (1/2) * 3 elems * 4 bytes = 12
         assert_eq!(Collective::stats(&c).ar_grads, 12);
+    }
+
+    #[test]
+    fn poison_converts_stall_into_named_panic() {
+        let c = Arc::new(RingComm::new(2));
+        let waiter = {
+            let c = c.clone();
+            std::thread::spawn(move || c.barrier()) // peer never arrives
+        };
+        std::thread::sleep(Duration::from_millis(30));
+        c.poison(1, "synthetic death");
+        let err = waiter.join().expect_err("waiter must panic, not hang");
+        let msg = err.downcast_ref::<String>().expect("formatted panic");
+        assert!(msg.contains("worker rank 1 died: synthetic death"), "got: {msg}");
+        assert!(msg.contains("barrier peers"), "got: {msg}");
+    }
+
+    #[test]
+    fn panicking_worker_poisons_the_round() {
+        let c = Arc::new(RingComm::new(2));
+        let waiter = {
+            let c = c.clone();
+            std::thread::spawn(move || c.barrier())
+        };
+        let dier = {
+            let c = c.clone();
+            std::thread::spawn(move || {
+                let _guard = c.poison_guard(1);
+                panic!("kernel exploded");
+            })
+        };
+        assert!(dier.join().is_err());
+        let err = waiter.join().expect_err("waiter must see the poison");
+        let msg = err.downcast_ref::<String>().expect("formatted panic");
+        assert!(msg.contains("worker rank 1 died: panicked mid-collective"), "got: {msg}");
     }
 
     #[test]

@@ -1,0 +1,195 @@
+//! The `spngd worker` process body: a stateless reducer.
+//!
+//! A worker never loads the model or the data — it connects to the
+//! coordinator socket, handshakes (`Hello` → `Welcome`), heartbeats on
+//! the cadence the coordinator dictates, and serves reduction jobs:
+//! decode lanes at wire precision, reduce with the *shared*
+//! canonical-lane math from `collectives::comm` (`lane_mean` for
+//! gradients, the reciprocal-multiply mean for statistics), reply.
+//! Statelessness is what makes elasticity cheap: a replacement worker
+//! is fully resynced by its `Welcome` frame.
+//!
+//! Deterministic faults (`SPNGD_FAULT_PLAN`, filtered to this worker's
+//! rank after admission) fire at the first reduction job of their step.
+
+use std::io::Write;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::collectives::comm::lane_mean;
+use crate::collectives::wire::{self, Frame, Kind};
+use crate::dist::fault::{ArmedFaults, Fault, FaultKind, FaultPlan};
+use crate::dist::membership::{Conn, ConnError};
+
+const LOG: &str = "dist::worker";
+
+/// Shared write half: the serve loop and the heartbeat thread both send.
+#[derive(Clone)]
+struct Writer {
+    stream: Arc<Mutex<UnixStream>>,
+    muted: Arc<AtomicBool>,
+}
+
+impl Writer {
+    fn send(&self, f: &Frame) -> std::io::Result<()> {
+        self.send_raw(&f.encode())
+    }
+
+    fn send_raw(&self, bytes: &[u8]) -> std::io::Result<()> {
+        if self.muted.load(Ordering::Relaxed) {
+            return Ok(()); // a "hung" worker: swallow everything
+        }
+        self.stream.lock().unwrap().write_all(bytes)
+    }
+}
+
+/// Run the worker against a coordinator socket until `Shutdown` or EOF.
+pub fn run(socket: &str, plan: FaultPlan) -> anyhow::Result<()> {
+    let stream = UnixStream::connect(socket)
+        .map_err(|e| anyhow::anyhow!("connect to coordinator {socket}: {e}"))?;
+    let write_half = stream
+        .try_clone()
+        .map_err(|e| anyhow::anyhow!("clone worker stream: {e}"))?;
+    let writer = Writer {
+        stream: Arc::new(Mutex::new(write_half)),
+        muted: Arc::new(AtomicBool::new(false)),
+    };
+    let mut conn = Conn::new(stream);
+
+    let uid = std::process::id() as u64;
+    writer
+        .send(&wire::encode_hello(uid))
+        .map_err(|e| anyhow::anyhow!("send hello: {e}"))?;
+    let welcome = match conn.poll_frame(Duration::from_secs(10)) {
+        Ok(Some(f)) if f.kind == Kind::Welcome => wire::decode_welcome(&f)
+            .map_err(|e| anyhow::anyhow!("malformed welcome: {e}"))?,
+        Ok(Some(f)) => anyhow::bail!("expected Welcome, got {:?}", f.kind),
+        Ok(None) => anyhow::bail!("no Welcome within 10s"),
+        Err(e) => anyhow::bail!("handshake failed: {e}"),
+    };
+    crate::debug!(
+        LOG,
+        "admitted as rank {}/{} at step {} (uid {uid})",
+        welcome.rank,
+        welcome.world,
+        welcome.step
+    );
+    let mut faults = ArmedFaults::new(plan.for_rank(welcome.rank));
+    let step = Arc::new(AtomicU64::new(welcome.step));
+
+    // heartbeat thread: fixed cadence from the Welcome frame
+    {
+        let writer = writer.clone();
+        let step = Arc::clone(&step);
+        let cadence = Duration::from_millis(welcome.heartbeat_ms.max(1) as u64);
+        std::thread::spawn(move || loop {
+            std::thread::sleep(cadence);
+            let f = wire::encode_step(Kind::Heartbeat, step.load(Ordering::Relaxed));
+            if writer.send(&f).is_err() {
+                return; // coordinator is gone; the serve loop will exit too
+            }
+        });
+    }
+
+    loop {
+        let frame = match conn.poll_frame(Duration::from_secs(60)) {
+            Ok(Some(f)) => f,
+            Ok(None) => continue,
+            Err(ConnError::Closed) => return Ok(()), // coordinator exited
+            Err(e) => anyhow::bail!("worker rank {} stream failed: {e}", welcome.rank),
+        };
+        match frame.kind {
+            Kind::Ping => {
+                let _ = writer.send(&Frame::control(Kind::Pong));
+            }
+            Kind::RoundStart => {
+                if let Ok(s) = wire::decode_step(&frame) {
+                    step.store(s, Ordering::Relaxed);
+                }
+            }
+            Kind::RoundEnd | Kind::Heartbeat => {}
+            Kind::Shutdown => return Ok(()),
+            Kind::ReduceGrad => {
+                let job = wire::decode_grad_job(&frame)
+                    .map_err(|e| anyhow::anyhow!("rank {}: bad grad job: {e}", welcome.rank))?;
+                let nlanes = job.lanes.len();
+                let mean: Vec<f32> = (0..job.seg_len as usize)
+                    .map(|i| lane_mean(job.lanes.iter().map(|l| l[i]), nlanes))
+                    .collect();
+                let reply = wire::encode_grad_seg(
+                    wire::flags_precision(frame.flags),
+                    job.job,
+                    &mean,
+                );
+                apply_fault(&mut faults, &step, &writer, &reply)?;
+            }
+            Kind::ReduceStats => {
+                let job = wire::decode_stat_job(&frame)
+                    .map_err(|e| anyhow::anyhow!("rank {}: bad stat job: {e}", welcome.rank))?;
+                // owner-side statistic mean: f64 accumulate in lane order,
+                // multiply by the reciprocal — the lane_mean_mats_wire op
+                // sequence (decoding already applied the wire quantization)
+                let inv_l = 1.0 / job.lanes.len() as f64;
+                let elems = (job.rows * job.cols) as usize;
+                let mut mean = vec![0.0f32; elems];
+                for (i, v) in mean.iter_mut().enumerate() {
+                    let mut s = 0.0f64;
+                    for lane in &job.lanes {
+                        s += lane[i] as f64;
+                    }
+                    *v = (s * inv_l) as f32;
+                }
+                let reply = wire::encode_stat_result(job.item, job.rows, job.cols, &mean);
+                apply_fault(&mut faults, &step, &writer, &reply)?;
+            }
+            Kind::Hello | Kind::Welcome | Kind::GradSeg | Kind::StatResult | Kind::Pong => {
+                anyhow::bail!("rank {}: unexpected {:?} from coordinator", welcome.rank, frame.kind)
+            }
+        }
+    }
+}
+
+/// Send a job reply, unless a scripted fault says otherwise. Faults
+/// fire once, at the first reduction job of their step.
+fn apply_fault(
+    faults: &mut ArmedFaults,
+    step: &AtomicU64,
+    writer: &Writer,
+    reply: &Frame,
+) -> anyhow::Result<()> {
+    let fault: Option<Fault> = faults.take(step.load(Ordering::Relaxed));
+    match fault.map(|f| f.kind) {
+        None => {
+            writer.send(reply).map_err(|e| anyhow::anyhow!("send reply: {e}"))?;
+        }
+        Some(FaultKind::Kill) => {
+            crate::warn_!(LOG, "fault: kill at step {}", step.load(Ordering::Relaxed));
+            std::process::exit(9);
+        }
+        Some(FaultKind::Drop) => {
+            crate::warn_!(LOG, "fault: dropping one reply frame");
+        }
+        Some(FaultKind::Delay) => {
+            let ms = fault.map(|f| f.ms).unwrap_or(200);
+            crate::warn_!(LOG, "fault: delaying reply by {ms} ms");
+            std::thread::sleep(Duration::from_millis(ms));
+            writer.send(reply).map_err(|e| anyhow::anyhow!("send reply: {e}"))?;
+        }
+        Some(FaultKind::Corrupt) => {
+            crate::warn_!(LOG, "fault: corrupting one reply frame");
+            let mut bytes = reply.encode();
+            // flip a payload byte AFTER the checksum was computed: the
+            // coordinator must detect this as a checksum mismatch
+            let i = wire::HEADER_BYTES.min(bytes.len() - 1);
+            bytes[i] ^= 0xff;
+            writer.send_raw(&bytes).map_err(|e| anyhow::anyhow!("send reply: {e}"))?;
+        }
+        Some(FaultKind::Mute) => {
+            crate::warn_!(LOG, "fault: going mute (no heartbeats, no replies)");
+            writer.muted.store(true, Ordering::Relaxed);
+        }
+    }
+    Ok(())
+}

@@ -5,6 +5,9 @@
 //!   train     train a registered data source (--data) with a registered
 //!             optimizer (--optim spngd | sgd | lars)
 //!   simulate  sweep the cluster cost model over GPU counts (Fig. 5)
+//!   worker    multi-process reducer body: connect to a coordinator
+//!             socket and serve reduction jobs (spawned by `train
+//!             --proc`; rarely invoked by hand)
 //!
 //! Every subcommand takes `--backend native|pjrt`. The default native
 //! backend is self-contained; `--backend pjrt` additionally needs the
@@ -18,6 +21,7 @@ use spngd::collectives::comm::Precision;
 use spngd::collectives::cost::ClusterModel;
 use spngd::coordinator::{DistMode, Trainer, TrainerBuilder};
 use spngd::data::{self, AugmentCfg};
+use spngd::dist::{FaultPlan, ProcCfg};
 use spngd::optim::{self, BnMode, Fisher, HyperParams, Preconditioner, Schedule, SpNgd};
 use spngd::runtime::{native, Executor, Manifest};
 use spngd::simulator;
@@ -31,9 +35,10 @@ fn main() {
         "info" => cmd_info(),
         "train" => cmd_train(),
         "simulate" => cmd_simulate(),
+        "worker" => cmd_worker(),
         _ => {
             eprintln!(
-                "usage: spngd <info|train|simulate> [options]\n\
+                "usage: spngd <info|train|simulate|worker> [options]\n\
                  run `spngd <cmd> --help` for per-command options"
             );
             std::process::exit(2);
@@ -174,13 +179,25 @@ fn trainer_from_args(parsed: &spngd::util::cli::Parsed) -> Result<Trainer> {
         .weight_rescale(parsed.get_bool("rescale"))
         .clip_update_ratio(parsed.get_f64("clip") as f32)
         .precision(precision_from_args(parsed)?)
-        .dist(if parsed.get_bool("dist") { DistMode::Threaded } else { DistMode::from_env() })
+        .dist(if parsed.get_bool("proc") {
+            DistMode::Proc
+        } else if parsed.get_bool("dist") {
+            DistMode::Threaded
+        } else {
+            DistMode::from_env()
+        })
         .seed(parsed.get_u64("seed"))
         .data(parsed.get("data"))
         .dataset_len(dataset_len)
         .data_seed(parsed.get_u64("seed"));
     if !parsed.get("data-path").is_empty() {
         b = b.data_path(parsed.get("data-path"));
+    }
+    if !parsed.get("fault-plan").is_empty() {
+        let mut pc = ProcCfg::from_env();
+        pc.fault_plan = FaultPlan::parse(parsed.get("fault-plan"))
+            .map_err(|e| anyhow::anyhow!("--fault-plan: {e}"))?;
+        b = b.proc_cfg(pc);
     }
     match parsed.get("prefetch") {
         "" => {} // loader default: SPNGD_PREFETCH, else on
@@ -208,6 +225,8 @@ fn train_args() -> Args {
         .opt("stale-alpha", "0.1", "similarity threshold α")
         .opt("workers", "4", "simulated GPUs")
         .flag("dist", "threaded dist engine: one OS thread per worker (or SPNGD_DIST=threads)")
+        .flag("proc", "multi-process dist engine: one spngd worker process per worker (or SPNGD_DIST=proc)")
+        .opt("fault-plan", "", "failure injection: kind:step:rank[:ms],... (kill|drop|delay|corrupt|mute)")
         .opt("accum", "1", "gradient accumulation micro-steps")
         .opt("steps", "200", "training steps")
         .opt("dataset", "8192", "synthetic corpus size")
@@ -276,6 +295,21 @@ fn cmd_train() -> Result<()> {
         println!("wrote {csv}");
     }
     Ok(())
+}
+
+/// The multi-process reducer body. Normally spawned by a `train --proc`
+/// coordinator, but invocable by hand against any coordinator socket —
+/// useful for attaching a replacement worker to a shrunken run.
+fn cmd_worker() -> Result<()> {
+    let parsed = Args::new("spngd worker", "serve reduction jobs for a proc coordinator")
+        .opt("socket", "", "coordinator unix socket path (required)")
+        .parse_env(2)
+        .map_err(|u| anyhow::anyhow!("{u}"))?;
+    let socket = parsed.get("socket");
+    if socket.is_empty() {
+        bail!("worker: --socket is required");
+    }
+    spngd::dist::worker::run(socket, FaultPlan::from_env())
 }
 
 fn cmd_simulate() -> Result<()> {

@@ -95,6 +95,29 @@ pub fn quantize_slice(buf: &mut [f32]) {
     }
 }
 
+/// Serialize f32 values as little-endian f16 bytes (2 bytes/element) —
+/// the real on-wire layout of the mixed-precision process transport.
+pub fn encode_le(vals: &[f32], out: &mut Vec<u8>) {
+    out.reserve(vals.len() * 2);
+    for &v in vals {
+        out.extend_from_slice(&f16_from_f32(v).to_le_bytes());
+    }
+}
+
+/// Decode little-endian f16 bytes back to f32 (exact per element).
+/// Returns `None` on an odd byte count — the caller's framing is broken.
+pub fn decode_le(bytes: &[u8]) -> Option<Vec<f32>> {
+    if bytes.len() % 2 != 0 {
+        return None;
+    }
+    Some(
+        bytes
+            .chunks_exact(2)
+            .map(|c| f32_from_f16(u16::from_le_bytes([c[0], c[1]])))
+            .collect(),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -190,6 +213,21 @@ mod tests {
                 (x.is_nan() && f.is_nan()) || (!x.is_nan() && !f.is_nan())
             },
         );
+    }
+
+    #[test]
+    fn byte_codec_round_trips_and_rejects_odd_lengths() {
+        let mut rng = Rng::new(109);
+        let v: Vec<f32> = (0..64).map(|_| (rng.f32() * 2.0 - 1.0) * 300.0).collect();
+        let mut bytes = Vec::new();
+        encode_le(&v, &mut bytes);
+        assert_eq!(bytes.len(), v.len() * 2);
+        let back = decode_le(&bytes).unwrap();
+        for (a, b) in v.iter().zip(back.iter()) {
+            assert_eq!(round_trip(*a).to_bits(), b.to_bits(), "wire = exact f16 round trip");
+        }
+        assert!(decode_le(&bytes[..bytes.len() - 1]).is_none(), "odd length rejected");
+        assert_eq!(decode_le(&[]).unwrap(), Vec::<f32>::new());
     }
 
     #[test]

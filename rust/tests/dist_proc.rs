@@ -1,0 +1,377 @@
+//! Integration tests for the multi-process transport (`dist::ProcComm`):
+//!
+//! - the healthy multi-process path must be bit-identical to the
+//!   sequential coordinator AND the threaded engine, in both `f32` and
+//!   `mixed` wire precision, with byte-identical `CommStats`;
+//! - the actual framed wire bytes must match the closed-form counters
+//!   in `collectives::wire`;
+//! - every injected fault (kill, drop, delay, corrupt, mute) either
+//!   recovers bit-identically via the membership state machine or fails
+//!   loudly with a structured diagnostic — never hangs (the CI job runs
+//!   this suite under a hard `timeout`).
+//!
+//! Worker processes are the test binary's sibling `spngd` executable
+//! (`CARGO_BIN_EXE_spngd`), spawned over a fresh temp-dir Unix socket
+//! per trainer, so tests are independent and parallel-safe.
+
+use std::sync::Arc;
+
+use spngd::collectives::comm::StatClass;
+use spngd::collectives::{wire, Collective, Precision, SimComm};
+use spngd::coordinator::{DistMode, Trainer, TrainerBuilder};
+use spngd::dist::{FaultPlan, MemberEvent, ProcCfg, ProcComm, RespawnPolicy};
+use spngd::linalg::Mat;
+use spngd::optim::{self, HyperParams, Preconditioner};
+
+/// Same run shape as `tests/dist_engine.rs` — W=1 sequential runs of
+/// this builder are the ground truth the proc engine must reproduce.
+fn base_builder(model: &str, opt: Arc<dyn Preconditioner>) -> TrainerBuilder {
+    let hp = HyperParams {
+        alpha_mixup: 0.0,
+        p_decay: 2.0,
+        e_start: 100.0,
+        e_end: 200.0,
+        eta0: 0.02,
+        m0: 0.018,
+        lambda: 2.5e-3,
+    };
+    TrainerBuilder::new(model)
+        .optimizer(opt)
+        .hyperparams(hp)
+        .steps_per_epoch(50)
+        .workers(2)
+        .dataset_len(4000)
+        .data_seed(42)
+        .seed(7)
+}
+
+/// Short-fuse transport knobs so fault tests finish in seconds, with a
+/// generous join timeout (worker spawn under test parallelism is slow).
+fn proc_cfg() -> ProcCfg {
+    ProcCfg {
+        worker_bin: Some(env!("CARGO_BIN_EXE_spngd").to_string()),
+        heartbeat_ms: 25,
+        join_timeout_ms: 20_000,
+        backoff_base_ms: 10,
+        ..ProcCfg::default()
+    }
+}
+
+fn proc_builder(model: &str, cfg: ProcCfg) -> TrainerBuilder {
+    base_builder(model, optim::spngd()).dist(DistMode::Proc).proc_cfg(cfg)
+}
+
+fn flat_params(tr: &Trainer) -> Vec<f32> {
+    tr.params.iter().flat_map(|p| p.data.clone()).collect()
+}
+
+fn assert_step_parity(seq: &mut Trainer, proc: &mut Trainer, steps: usize, tag: &str) {
+    for i in 0..steps {
+        let rs = seq.step().unwrap();
+        let rp = proc.step().unwrap();
+        assert_eq!(rs.loss, rp.loss, "{tag}: loss diverged at step {i}");
+        assert_eq!(rs.train_acc, rp.train_acc, "{tag}: acc diverged at step {i}");
+        assert_eq!(rs.refreshed, rp.refreshed, "{tag}: plan diverged at step {i}");
+        assert_eq!(rs.comm.rs_stats_a, rp.comm.rs_stats_a, "{tag}: step {i}");
+        assert_eq!(rs.comm.rs_stats_g, rp.comm.rs_stats_g, "{tag}: step {i}");
+        assert_eq!(rs.comm.ar_grads, rp.comm.ar_grads, "{tag}: step {i}");
+        assert_eq!(rs.comm.ag_params, rp.comm.ag_params, "{tag}: step {i}");
+        assert_eq!(rs.comm.num_ops, rp.comm.num_ops, "{tag}: step {i}");
+        assert_eq!(flat_params(seq), flat_params(proc), "{tag}: params diverged at step {i}");
+    }
+}
+
+fn dead_events(events: &[MemberEvent]) -> Vec<(u32, u64, String)> {
+    events
+        .iter()
+        .filter_map(|e| match e {
+            MemberEvent::Dead { rank, step, reason } => Some((*rank, *step, reason.clone())),
+            _ => None,
+        })
+        .collect()
+}
+
+fn respawned_ranks(events: &[MemberEvent]) -> Vec<u32> {
+    events
+        .iter()
+        .filter_map(|e| match e {
+            MemberEvent::Respawned { rank, .. } => Some(*rank),
+            _ => None,
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------- healthy
+
+/// The tentpole differential: multi-process == sequential == threaded,
+/// step by step, bitwise — losses, params and byte accounting.
+#[test]
+fn proc_engine_matches_sequential_and_threaded_bitwise_f32() {
+    let mut seq = base_builder("mlp", optim::spngd()).build().unwrap();
+    let mut thr = base_builder("mlp", optim::spngd()).dist(DistMode::Threaded).build().unwrap();
+    let mut proc = proc_builder("mlp", proc_cfg()).build().unwrap();
+    for i in 0..5 {
+        let rs = seq.step().unwrap();
+        let rt = thr.step().unwrap();
+        let rp = proc.step().unwrap();
+        assert_eq!(rs.loss, rp.loss, "seq vs proc loss diverged at step {i}");
+        assert_eq!(rt.loss, rp.loss, "threaded vs proc loss diverged at step {i}");
+        assert_eq!(rs.train_acc, rp.train_acc, "acc diverged at step {i}");
+        assert_eq!(rs.refreshed, rp.refreshed, "plan diverged at step {i}");
+        assert_eq!(rs.comm.rs_stats_a, rp.comm.rs_stats_a, "step {i}");
+        assert_eq!(rs.comm.rs_stats_g, rp.comm.rs_stats_g, "step {i}");
+        assert_eq!(rs.comm.ar_grads, rp.comm.ar_grads, "step {i}");
+        assert_eq!(rs.comm.ag_params, rp.comm.ag_params, "step {i}");
+        assert_eq!(flat_params(&seq), flat_params(&proc), "params diverged at step {i}");
+        assert_eq!(flat_params(&thr), flat_params(&proc), "thr params diverged at step {i}");
+    }
+    let pc = proc.proc().unwrap();
+    assert_eq!(pc.live(), 2, "healthy run keeps full membership");
+    let events = pc.take_events();
+    assert!(dead_events(&events).is_empty(), "healthy run saw deaths: {events:?}");
+}
+
+/// Same differential under f16 wire precision: the worker decodes real
+/// f16 payload bytes, which IS the wire quantization SimComm applies.
+#[test]
+fn proc_engine_matches_sequential_bitwise_mixed() {
+    let mut seq =
+        base_builder("mlp", optim::spngd()).precision(Precision::Mixed).build().unwrap();
+    let mut proc =
+        proc_builder("mlp", proc_cfg()).precision(Precision::Mixed).build().unwrap();
+    assert_step_parity(&mut seq, &mut proc, 4, "mixed");
+    assert!(dead_events(&proc.proc().unwrap().take_events()).is_empty());
+}
+
+/// The membership state machine walks WaitingForMembers → Warmup →
+/// (RoundStart → RoundEnd)* and admits exactly `world` workers.
+#[test]
+fn proc_membership_state_machine_sequence() {
+    let mut proc = proc_builder("mlp", proc_cfg()).build().unwrap();
+    for _ in 0..2 {
+        proc.step().unwrap();
+    }
+    let events = proc.proc().unwrap().take_events();
+    let states: Vec<&str> = events
+        .iter()
+        .filter_map(|e| match e {
+            MemberEvent::State { state, .. } => Some(*state),
+            _ => None,
+        })
+        .collect();
+    let joined = events
+        .iter()
+        .filter(|e| matches!(e, MemberEvent::Joined { .. }))
+        .count();
+    assert_eq!(joined, 2, "two workers admitted: {events:?}");
+    assert_eq!(states.first(), Some(&"WaitingForMembers"), "{states:?}");
+    assert!(states.contains(&"Warmup"), "{states:?}");
+    let starts = states.iter().filter(|s| **s == "RoundStart").count();
+    let ends = states.iter().filter(|s| **s == "RoundEnd").count();
+    assert_eq!((starts, ends), (2, 2), "{states:?}");
+}
+
+// ------------------------------------------------- wire-byte accounting
+
+/// Drive ProcComm directly as a `Collective` against SimComm on the same
+/// buffers: results bitwise equal, modeled `CommStats` byte-identical,
+/// and the actual framed wire bytes equal to the closed-form counters.
+#[test]
+fn proc_collective_matches_simcomm_and_closed_form_wire_bytes() {
+    for p in [Precision::F32, Precision::Mixed] {
+        let proc = ProcComm::launch(2, p, &proc_cfg()).unwrap();
+        let mut sim = SimComm::new(2);
+        sim.precision = p;
+
+        proc.round_start(1).unwrap();
+        // AllReduce: 4 lanes × 10 elems — splits into [5, 5] over 2 workers
+        let mk_lanes = || -> Vec<Vec<f32>> {
+            (0..4usize)
+                .map(|l| (0..10).map(|i| (i as f32 * 0.37 - 1.3) * (l as f32 + 0.5)).collect())
+                .collect()
+        };
+        let mut a = mk_lanes();
+        let mut b = mk_lanes();
+        proc.all_reduce_mean(&mut a);
+        sim.all_reduce_mean(&mut b);
+        assert_eq!(a, b, "{p:?}: AllReduce mean diverged from SimComm");
+
+        // ReduceScatterV: one square (symmetry-packed) + one rectangular
+        let mk_items = || -> Vec<Vec<Mat>> {
+            (0..4usize)
+                .map(|l| {
+                    let sq = Mat::from_vec(
+                        8,
+                        8,
+                        (0..64).map(|i| (i as f32 - 30.0) * 0.011 * (l as f32 + 1.0)).collect(),
+                    );
+                    let rect = Mat::from_vec(
+                        4,
+                        1,
+                        (0..4).map(|i| i as f32 * 0.2 + l as f32).collect(),
+                    );
+                    vec![sq, rect]
+                })
+                .collect()
+        };
+        let classes = [StatClass::A, StatClass::GorF];
+        let ra = proc.reduce_scatter_v(&mk_items(), &classes);
+        let rb = sim.reduce_scatter_v(&mk_items(), &classes);
+        for (i, (ma, mb)) in ra.iter().zip(rb.iter()).enumerate() {
+            assert_eq!(ma.data, mb.data, "{p:?}: stat {i} diverged from SimComm");
+        }
+        proc.all_gather_v_params(100);
+        sim.all_gather_v_params(100);
+        proc.round_end(1).unwrap();
+
+        // modeled accounting is byte-identical to SimComm
+        let (sp, ss) = (proc.stats(), sim.stats());
+        assert_eq!(sp.ar_grads, ss.ar_grads, "{p:?}");
+        assert_eq!(sp.rs_stats_a, ss.rs_stats_a, "{p:?}");
+        assert_eq!(sp.rs_stats_g, ss.rs_stats_g, "{p:?}");
+        assert_eq!(sp.ag_params, ss.ag_params, "{p:?}");
+        assert_eq!(sp.num_ops, ss.num_ops, "{p:?}");
+
+        // actual framed bytes match the closed-form counters
+        let e = p.wire_elem_bytes();
+        let segs: Vec<usize> =
+            wire::split_segments(10, 2).iter().map(|&(_, len)| len).collect();
+        assert_eq!(segs, vec![5, 5]);
+        let w = proc.wire_stats();
+        assert_eq!(w.grad_tx, wire::grad_round_tx_bytes(&segs, 4, e), "{p:?}");
+        assert_eq!(w.grad_rx, wire::grad_round_rx_bytes(&segs, e), "{p:?}");
+        let stat_tx =
+            wire::stat_item_tx_bytes(8, 8, 4, e) + wire::stat_item_tx_bytes(4, 1, 4, e);
+        let stat_rx = wire::stat_item_rx_bytes(8, 8) + wire::stat_item_rx_bytes(4, 1);
+        assert_eq!(w.stat_tx, stat_tx, "{p:?}");
+        assert_eq!(w.stat_rx, stat_rx, "{p:?}");
+        assert_eq!(w.data_frames, 8, "{p:?}: 2 grad jobs + 2 segs + 2 stat jobs + 2 results");
+    }
+}
+
+// ------------------------------------------------------ fault injection
+
+/// A worker killed mid-step is detected, its jobs re-queued to the
+/// survivor (bit-identically), and a replacement is re-admitted at the
+/// round boundary — the acceptance-criteria scenario.
+#[test]
+fn kill_mid_step_recovers_bitwise_and_respawns() {
+    let mut cfg = proc_cfg();
+    cfg.fault_plan = FaultPlan::parse("kill:2:1").unwrap();
+    let mut seq = base_builder("mlp", optim::spngd()).build().unwrap();
+    let mut proc = proc_builder("mlp", cfg).build().unwrap();
+    assert_step_parity(&mut seq, &mut proc, 4, "kill");
+    let pc = proc.proc().unwrap();
+    let events = pc.take_events();
+    let dead = dead_events(&events);
+    assert_eq!(dead.len(), 1, "exactly one death: {events:?}");
+    assert_eq!((dead[0].0, dead[0].1), (1, 2), "rank 1 died at step 2: {}", dead[0].2);
+    assert_eq!(respawned_ranks(&events), vec![1], "{events:?}");
+    assert_eq!(pc.live(), 2, "replacement re-admitted at the round boundary");
+}
+
+/// Under the shrink policy the run continues on the survivors — still
+/// bit-identical, because lane math never depended on the worker count.
+#[test]
+fn shrink_policy_continues_bitwise_on_survivors() {
+    let mut cfg = proc_cfg();
+    cfg.respawn = RespawnPolicy::Shrink;
+    cfg.fault_plan = FaultPlan::parse("kill:1:0").unwrap();
+    let mut seq = base_builder("mlp", optim::spngd()).build().unwrap();
+    let mut proc = proc_builder("mlp", cfg).build().unwrap();
+    assert_step_parity(&mut seq, &mut proc, 3, "shrink");
+    let pc = proc.proc().unwrap();
+    let events = pc.take_events();
+    assert_eq!(dead_events(&events).len(), 1, "{events:?}");
+    assert!(respawned_ranks(&events).is_empty(), "shrink never respawns: {events:?}");
+    assert_eq!(pc.live(), 1);
+}
+
+/// Strict policy: any death is fatal at the round boundary — the step
+/// fails loudly with a structured diagnostic instead of hanging.
+#[test]
+fn strict_policy_fails_loudly_on_death() {
+    let mut cfg = proc_cfg();
+    cfg.respawn = RespawnPolicy::Strict;
+    cfg.fault_plan = FaultPlan::parse("kill:2:0").unwrap();
+    let mut seq = base_builder("mlp", optim::spngd()).build().unwrap();
+    let mut proc = proc_builder("mlp", cfg).build().unwrap();
+    assert_step_parity(&mut seq, &mut proc, 1, "strict");
+    let err = proc.step().unwrap_err().to_string();
+    assert!(err.contains("proc transport fatal"), "unstructured error: {err}");
+}
+
+/// Respawn budget of zero behaves like strict-after-recovery: the death
+/// itself is survived bitwise, then the exhausted budget is fatal.
+#[test]
+fn respawn_budget_exhaustion_is_fatal() {
+    let mut cfg = proc_cfg();
+    cfg.respawn = RespawnPolicy::Respawn { max: 0 };
+    cfg.fault_plan = FaultPlan::parse("kill:1:1").unwrap();
+    let mut proc = proc_builder("mlp", cfg).build().unwrap();
+    let err = proc.step().unwrap_err().to_string();
+    assert!(err.contains("proc transport fatal"), "{err}");
+    assert!(err.contains("exhausted"), "should name the exhausted budget: {err}");
+}
+
+/// A dropped reply (process alive, heartbeats flowing, job never
+/// answered) is caught by the job timeout, not the heartbeat timeout.
+#[test]
+fn drop_fault_hits_job_timeout_and_recovers_bitwise() {
+    let mut cfg = proc_cfg();
+    cfg.job_timeout_ms = 1500;
+    cfg.fault_plan = FaultPlan::parse("drop:1:1").unwrap();
+    let mut seq = base_builder("mlp", optim::spngd()).build().unwrap();
+    let mut proc = proc_builder("mlp", cfg).build().unwrap();
+    assert_step_parity(&mut seq, &mut proc, 3, "drop");
+    let events = proc.proc().unwrap().take_events();
+    let dead = dead_events(&events);
+    assert_eq!(dead.len(), 1, "{events:?}");
+    assert!(dead[0].2.contains("job timeout"), "wrong diagnostic: {}", dead[0].2);
+    assert_eq!(respawned_ranks(&events), vec![1], "{events:?}");
+}
+
+/// A delayed reply inside the job timeout is tolerated: no deaths, no
+/// divergence — latency is not failure.
+#[test]
+fn delay_fault_inside_timeout_is_tolerated() {
+    let mut cfg = proc_cfg();
+    cfg.fault_plan = FaultPlan::parse("delay:1:0:300").unwrap();
+    let mut seq = base_builder("mlp", optim::spngd()).build().unwrap();
+    let mut proc = proc_builder("mlp", cfg).build().unwrap();
+    assert_step_parity(&mut seq, &mut proc, 2, "delay");
+    let events = proc.proc().unwrap().take_events();
+    assert!(dead_events(&events).is_empty(), "delay must not kill: {events:?}");
+}
+
+/// A corrupted frame breaks the payload checksum; the connection is
+/// dropped with the checksum diagnostic and the job re-queued.
+#[test]
+fn corrupt_fault_is_detected_by_checksum() {
+    let mut cfg = proc_cfg();
+    cfg.fault_plan = FaultPlan::parse("corrupt:1:0").unwrap();
+    let mut seq = base_builder("mlp", optim::spngd()).build().unwrap();
+    let mut proc = proc_builder("mlp", cfg).build().unwrap();
+    assert_step_parity(&mut seq, &mut proc, 3, "corrupt");
+    let events = proc.proc().unwrap().take_events();
+    let dead = dead_events(&events);
+    assert_eq!(dead.len(), 1, "{events:?}");
+    assert!(dead[0].2.contains("checksum"), "wrong diagnostic: {}", dead[0].2);
+    assert_eq!(respawned_ranks(&events), vec![0], "{events:?}");
+}
+
+/// A muted worker (alive but silent — no heartbeats, no replies) is
+/// caught by the heartbeat timeout.
+#[test]
+fn mute_fault_hits_heartbeat_timeout() {
+    let mut cfg = proc_cfg();
+    cfg.heartbeat_timeout_ms = 600;
+    cfg.fault_plan = FaultPlan::parse("mute:1:0").unwrap();
+    let mut seq = base_builder("mlp", optim::spngd()).build().unwrap();
+    let mut proc = proc_builder("mlp", cfg).build().unwrap();
+    assert_step_parity(&mut seq, &mut proc, 2, "mute");
+    let events = proc.proc().unwrap().take_events();
+    let dead = dead_events(&events);
+    assert_eq!(dead.len(), 1, "{events:?}");
+    assert!(dead[0].2.contains("heartbeat timeout"), "wrong diagnostic: {}", dead[0].2);
+}

@@ -6,6 +6,8 @@
 //! parser. A panic anywhere in a parser is a test failure by
 //! construction (`util::prop::check` runs the property in-process).
 
+use spngd::collectives::comm::Precision;
+use spngd::collectives::wire::{self, Frame, Kind};
 use spngd::data::cifar::{CifarBin, CIFAR_CLASSES, CIFAR_RECORD};
 use spngd::data::DataSource;
 use spngd::util::f16;
@@ -108,6 +110,172 @@ fn cifar_from_bytes_accepts_exactly_the_documented_format() {
                         && img.len() == CIFAR_RECORD - 1
                         && img.iter().all(|p| (-1.0..=1.0).contains(p))
                 }
+            }
+        },
+    );
+}
+
+const WIRE_KINDS: [Kind; 12] = [
+    Kind::Hello,
+    Kind::Welcome,
+    Kind::Heartbeat,
+    Kind::Ping,
+    Kind::Pong,
+    Kind::RoundStart,
+    Kind::RoundEnd,
+    Kind::ReduceGrad,
+    Kind::GradSeg,
+    Kind::ReduceStats,
+    Kind::StatResult,
+    Kind::Shutdown,
+];
+
+/// A random but well-formed wire frame (any kind, any flags, arbitrary
+/// payload bytes).
+fn rand_frame(rng: &mut Rng, max_payload: usize) -> Frame {
+    let kind = WIRE_KINDS[rng.below_usize(WIRE_KINDS.len())];
+    let flags = rng.below(2) as u8;
+    let payload = rand_bytes(rng, rng.below_usize(max_payload + 1));
+    Frame::new(kind, flags, payload)
+}
+
+/// Arbitrary byte soup through `Frame::parse`: never a panic, and
+/// anything accepted must be canonical — re-encoding the frame gives
+/// back exactly the bytes consumed.
+#[test]
+fn wire_frame_parse_survives_byte_soup() {
+    check(0x51F0, 500, 96, rand_bytes, |bytes| match Frame::parse(bytes) {
+        Err(_) | Ok(None) => true, // reject / ask-for-more are both fine
+        Ok(Some((f, used))) => used <= bytes.len() && f.encode() == bytes[..used],
+    });
+}
+
+/// Mutate valid frames byte-by-byte: the parser must reject or accept
+/// cleanly at every corruption, and a mutated frame it accepts must
+/// still be canonical. Payload corruption in particular must trip the
+/// checksum, never crash a downstream decoder.
+#[test]
+fn wire_frame_parse_survives_mutated_frames() {
+    check(
+        0x51F1,
+        500,
+        8,
+        |rng, size| {
+            let mut b = rand_frame(rng, 48).encode();
+            for _ in 0..1 + rng.below_usize(size.max(1)) {
+                let i = rng.below_usize(b.len());
+                b[i] = rng.below(256) as u8;
+            }
+            b
+        },
+        |bytes| match Frame::parse(bytes) {
+            Err(_) | Ok(None) => true,
+            Ok(Some((f, used))) => used <= bytes.len() && f.encode() == bytes[..used],
+        },
+    );
+}
+
+/// Every strict prefix of a valid frame is "read more bytes", never an
+/// error and never a short parse — framing over a stream depends on it.
+#[test]
+fn wire_frame_truncation_always_asks_for_more() {
+    check(
+        0x51F2,
+        200,
+        64,
+        |rng, size| rand_frame(rng, size).encode(),
+        |bytes| {
+            (0..bytes.len()).all(|cut| matches!(Frame::parse(&bytes[..cut]), Ok(None)))
+                && matches!(Frame::parse(bytes), Ok(Some((_, used))) if used == bytes.len())
+        },
+    );
+}
+
+/// A header announcing an oversized payload is rejected outright from
+/// the 16 header bytes alone — no allocation, no waiting for 64 MiB.
+#[test]
+fn wire_oversized_lengths_rejected_from_header_alone() {
+    check(
+        0x51F3,
+        300,
+        16,
+        |rng, _| {
+            let mut hdr = Vec::with_capacity(wire::HEADER_BYTES);
+            hdr.extend_from_slice(&wire::MAGIC);
+            hdr.extend_from_slice(&wire::VERSION.to_le_bytes());
+            hdr.push(WIRE_KINDS[rng.below_usize(WIRE_KINDS.len())] as u8);
+            hdr.push(rng.below(2) as u8);
+            let over = wire::MAX_PAYLOAD as u64 + 1 + rng.next_u64() % (u32::MAX as u64 / 2);
+            hdr.extend_from_slice(&(over.min(u32::MAX as u64) as u32).to_le_bytes());
+            hdr.extend_from_slice(&(rng.next_u64() as u32).to_le_bytes());
+            hdr
+        },
+        |hdr| matches!(Frame::parse(hdr), Err(wire::WireError::Oversized(_))),
+    );
+}
+
+/// Fuzzed payloads through every typed decoder (including corrupt f16
+/// element buffers under the mixed flag): decoders must accept or
+/// reject structurally, never panic, and accepted reduction jobs must
+/// be internally consistent.
+#[test]
+fn wire_payload_decoders_survive_fuzz() {
+    check(
+        0x51F4,
+        600,
+        80,
+        |rng, size| rand_frame(rng, size),
+        |f| {
+            let _ = wire::decode_hello(f);
+            let _ = wire::decode_welcome(f);
+            let _ = wire::decode_step(f);
+            if let Ok(job) = wire::decode_grad_job(f) {
+                if job.lanes.is_empty() || job.lanes.iter().any(|l| l.len() != job.seg_len as usize)
+                {
+                    return false;
+                }
+            }
+            if let Ok(job) = wire::decode_stat_job(f) {
+                let mat = (job.rows as usize) * (job.cols as usize);
+                if job.lanes.is_empty() || job.lanes.iter().any(|l| l.len() != mat) {
+                    return false;
+                }
+            }
+            if let Ok((_, seg)) = wire::decode_grad_seg(f) {
+                let elem = if f.flags & wire::FLAG_F16 != 0 { 2 } else { 4 };
+                if seg.len() * elem != f.payload.len() - 8 {
+                    return false;
+                }
+            }
+            let _ = wire::decode_stat_result(f);
+            true
+        },
+    );
+}
+
+/// Mixed-precision element buffers: any even-length byte soup decodes
+/// (every u16 is a valid f16 bit pattern), odd lengths are rejected,
+/// and decode is exactly the `wire_quantize` fixed point — re-encoding
+/// a decoded buffer reproduces the wire bytes.
+#[test]
+fn wire_f16_element_buffers_decode_totally() {
+    check(
+        0x51F5,
+        400,
+        128,
+        rand_bytes,
+        |bytes| match wire::decode_elems(Precision::Mixed, bytes) {
+            Err(_) => bytes.len() % 2 != 0,
+            Ok(vals) => {
+                if bytes.len() % 2 != 0 || vals.len() != bytes.len() / 2 {
+                    return false;
+                }
+                let mut back = Vec::new();
+                wire::encode_elems(Precision::Mixed, &vals, &mut back);
+                // decode→encode is the identity on the whole 16-bit
+                // space (NaN payloads included): the wire bytes ARE
+                // the quantized values
+                back == *bytes
             }
         },
     );
