@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""Bench-regression gate for BENCH_native.json (schema spngd-bench-native/4).
+"""Bench-regression gate for BENCH_native.json (schema spngd-bench-native/5).
 
 CI runs `cargo bench --bench native_perf -- --quick`, then this gate
 compares the report against the committed baseline
@@ -19,6 +19,12 @@ regression. Three independent checks, ordered from robust to advisory:
    wire format must actually shrink the gradient/statistics payloads
    (byte counters, not timings — ratio <= 0.55 vs f32 at 2 workers,
    where halving is exact) while parameters stay f32 (ratio == 1).
+   The `obs` section adds tracing gates: a disabled span must stay a
+   branch on an atomic (`disabled_span_ns` capped), tracing-on must not
+   balloon the step (`trace_overhead_ratio` capped), and the overlap
+   accountant's sums must be internally consistent (hidden <= comm,
+   max(comm, compute) <= critical path <= comm + compute, a traced
+   threaded run records both comm and compute spans).
 
 3. **Provisional absolute-ns** (advisory ratchet): if the baseline's
    `provisional_ns.entries` is non-empty (populated by
@@ -44,8 +50,8 @@ import json
 import sys
 
 DEFAULT_BASELINE = "rust/benches/baseline/BENCH_baseline.json"
-REPORT_SCHEMA = "spngd-bench-native/4"
-REQUIRED_SECTIONS = ["kernels", "workers", "optimizers", "data", "simd", "precision"]
+REPORT_SCHEMA = "spngd-bench-native/5"
+REQUIRED_SECTIONS = ["kernels", "workers", "optimizers", "data", "simd", "precision", "obs"]
 RATCHET_MARGIN = 1.15  # floors sit measured/1.15 below the reference run
 
 
@@ -55,9 +61,9 @@ def load(path):
 
 
 def section_entries(report, section):
-    """Entries of a report section as a list ('step' is a single object)."""
-    if section == "step":
-        return [report["step"]]
+    """Entries of a report section as a list ('step'/'obs' are single objects)."""
+    if section in ("step", "obs"):
+        return [report[section]] if report.get(section) else []
     return list(report.get(section, []))
 
 
@@ -132,6 +138,53 @@ def check_structural(report, baseline, errors):
         )
 
 
+def check_obs(report, baseline, errors):
+    obs = report.get("obs")
+    if not isinstance(obs, dict):
+        errors.append("obs: section must be a single object")
+        return
+    gate = baseline.get("obs_gate", {})
+    required = [
+        "disabled_span_ns", "step_ns", "step_ns_traced", "trace_overhead_ratio",
+        "events", "comm_ns", "compute_ns", "hidden_ns", "hidden_fraction",
+        "critical_path_ns",
+    ]
+    missing = [k for k in required if k not in obs]
+    if missing:
+        errors.append(f"obs: missing fields {missing}")
+        return
+    cap = gate.get("disabled_span_ns_max")
+    if cap is not None and obs["disabled_span_ns"] > cap:
+        errors.append(
+            f"obs: disabled span costs {obs['disabled_span_ns']:.1f} ns > {cap} — "
+            "the tracing-off fast path must stay a branch on an atomic"
+        )
+    cap = gate.get("trace_overhead_ratio_max")
+    if cap is not None and obs["trace_overhead_ratio"] > cap:
+        errors.append(
+            f"obs: traced/untraced step ratio {obs['trace_overhead_ratio']:.2f} > {cap} — "
+            "recording spans is slowing the step down"
+        )
+    # internal consistency of the overlap accountant (exact invariants)
+    comm, compute = obs["comm_ns"], obs["compute_ns"]
+    hidden, crit = obs["hidden_ns"], obs["critical_path_ns"]
+    if obs["events"] <= 0:
+        errors.append("obs: traced run recorded zero events — instrumentation is dark")
+    if comm <= 0 or compute <= 0:
+        errors.append(
+            f"obs: traced threaded run must record both comm ({comm:.0f} ns) and "
+            f"compute ({compute:.0f} ns) spans"
+        )
+    if hidden > min(comm, compute) + 1:
+        errors.append(f"obs: hidden {hidden:.0f} ns exceeds min(comm, compute)")
+    if not (max(comm, compute) - 1 <= crit <= comm + compute + 1):
+        errors.append(
+            f"obs: critical path {crit:.0f} ns outside [max(comm, compute), comm + compute]"
+        )
+    if not 0.0 <= obs["hidden_fraction"] <= 1.0:
+        errors.append(f"obs: hidden_fraction {obs['hidden_fraction']} outside [0, 1]")
+
+
 def check_provisional_ns(report, baseline, errors):
     prov = baseline.get("provisional_ns", {})
     tol = prov.get("tolerance", 3.0)
@@ -157,6 +210,7 @@ def run_gate(report, baseline):
     if check_schema(report, errors):
         check_floors(report, baseline, errors)
         check_structural(report, baseline, errors)
+        check_obs(report, baseline, errors)
         check_provisional_ns(report, baseline, errors)
     return errors
 
@@ -218,6 +272,22 @@ def synth_report(baseline, slowed=False):
             report[section].append(entry)
     if report["step"] is None:
         report["step"] = {"name": "step synthetic", "ns": 1.0, "naive_ns": 2.0, "speedup": 2.0}
+    # healthy obs: cheap disabled spans, near-free tracing, consistent
+    # overlap sums; slowed obs: a disabled span that costs a mutex and a
+    # traced step 5x the untraced one — both capped by obs_gate
+    report["obs"] = {
+        "disabled_span_ns": 2000.0 if slowed else 5.0,
+        "step_ns": 1.0e6,
+        "step_ns_traced": 5.0e6 if slowed else 1.05e6,
+        "trace_overhead_ratio": 5.0 if slowed else 1.05,
+        "events": 4000,
+        "dropped": 0,
+        "comm_ns": 1.0e6,
+        "compute_ns": 5.0e6,
+        "hidden_ns": 6.0e5,
+        "hidden_fraction": 0.6,
+        "critical_path_ns": 5.4e6,
+    }
     shrink = 1.0 if slowed else 0.5
     report["precision"] = [
         {
@@ -300,6 +370,7 @@ def main():
         sys.exit(1)
     n_floors = len(baseline.get("speedup_floors", []))
     print(f"bench gate: PASS ({n_floors} speedup floors, structural byte gates, "
+          f"obs tracing gates, "
           f"{len(baseline.get('provisional_ns', {}).get('entries', {}))} provisional ns entries)")
 
 

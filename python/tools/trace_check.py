@@ -1,0 +1,304 @@
+#!/usr/bin/env python3
+"""Validator for the observability layer's two export formats.
+
+Chrome traces (``--trace``, written by ``spngd train --trace-out`` /
+``SPNGD_TRACE``): the file must be a loadable trace-event JSON object —
+every event carries a known phase (``M``/``X``/``i``/``C``), integer
+pid/tid, and non-negative timestamps; span categories come from the
+fixed taxonomy (phase/compute/comm/wire/data/pool); every tid is
+labeled by a ``thread_name`` metadata event. ``--expect-comm``
+additionally requires both comm-category and compute-category spans on
+the trace (a threaded run that recorded neither is dark), recomputes
+the comm-hidden fraction from the span intervals exactly like
+``util::obs::overlap`` does, and prints it.
+
+JSONL event streams (``--events``, written by ``--events-out`` /
+``SPNGD_EVENTS``): every non-empty line must parse under the
+``spngd-events/1`` schema with a known kind and unique ``seq``
+(concurrent emitters may write out of order, so order is not checked).
+``--expect-kill-recovery`` asserts the membership machine streamed a
+``dead`` record followed (in seq order) by a ``respawned`` record for
+the same rank — the machine-readable form of the kill-fault
+acceptance scenario.
+
+Usage:
+    python3 python/tools/trace_check.py --trace trace.json [--expect-comm]
+    python3 python/tools/trace_check.py --events events.jsonl [--expect-kill-recovery]
+    python3 python/tools/trace_check.py --self-test
+"""
+
+import argparse
+import json
+import sys
+
+EVENT_SCHEMA = "spngd-events/1"
+PHASES = {"M", "X", "i", "C"}
+CATS = {"phase", "compute", "comm", "wire", "data", "pool"}
+COMM_CATS = {"comm", "wire"}
+COMPUTE_CATS = {"compute", "data", "pool"}
+EVENT_KINDS = {"state", "joined", "dead", "respawned", "poison", "fault_plan"}
+
+
+def union_len(intervals):
+    """Total length of the union of (start, end) intervals."""
+    total, last_end = 0.0, None
+    for a, b in sorted(intervals):
+        if b <= a:
+            continue
+        if last_end is None or a > last_end:
+            total += b - a
+            last_end = b
+        elif b > last_end:
+            total += b - last_end
+            last_end = b
+    return total
+
+
+def intersection_len(xs, ys):
+    xs, ys = sorted(xs), sorted(ys)
+    i = j = 0
+    total = 0.0
+    while i < len(xs) and j < len(ys):
+        lo = max(xs[i][0], ys[j][0])
+        hi = min(xs[i][1], ys[j][1])
+        if hi > lo:
+            total += hi - lo
+        if xs[i][1] < ys[j][1]:
+            i += 1
+        else:
+            j += 1
+    return total
+
+
+def check_trace(doc, expect_comm, errors):
+    evs = doc.get("traceEvents")
+    if not isinstance(evs, list) or not evs:
+        errors.append("trace: traceEvents missing or empty")
+        return
+    named_tids = set()
+    seen_tids = set()
+    comm_iv, compute_iv = [], []
+    n_spans = 0
+    for k, e in enumerate(evs):
+        ph = e.get("ph")
+        if ph not in PHASES:
+            errors.append(f"trace[{k}]: unknown ph {ph!r}")
+            continue
+        if not isinstance(e.get("pid"), int) or not isinstance(e.get("tid"), int):
+            errors.append(f"trace[{k}]: pid/tid must be integers")
+            continue
+        if ph == "M":
+            if e.get("name") != "thread_name":
+                errors.append(f"trace[{k}]: unexpected metadata event {e.get('name')!r}")
+            elif not e.get("args", {}).get("name"):
+                errors.append(f"trace[{k}]: thread_name metadata without a name")
+            else:
+                named_tids.add(e["tid"])
+            continue
+        seen_tids.add(e["tid"])
+        ts = e.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            errors.append(f"trace[{k}]: bad ts {ts!r}")
+            continue
+        if not e.get("name"):
+            errors.append(f"trace[{k}]: event without a name")
+        if ph == "X":
+            n_spans += 1
+            dur = e.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                errors.append(f"trace[{k}]: span {e.get('name')!r} with bad dur {dur!r}")
+                continue
+            cat = e.get("cat")
+            if cat not in CATS:
+                errors.append(f"trace[{k}]: span {e.get('name')!r} with unknown cat {cat!r}")
+            elif cat in COMM_CATS:
+                comm_iv.append((ts, ts + dur))
+            elif cat in COMPUTE_CATS:
+                compute_iv.append((ts, ts + dur))
+    unnamed = seen_tids - named_tids
+    if unnamed:
+        errors.append(f"trace: tids without thread_name metadata: {sorted(unnamed)}")
+    if n_spans == 0:
+        errors.append("trace: no complete (ph=X) spans at all")
+    if expect_comm:
+        if not comm_iv:
+            errors.append("trace: --expect-comm but no comm/wire spans recorded")
+        if not compute_iv:
+            errors.append("trace: --expect-comm but no compute/data/pool spans recorded")
+        comm_tids = {e["tid"] for e in evs if e.get("ph") == "X" and e.get("cat") in COMM_CATS}
+        compute_tids = {
+            e["tid"] for e in evs if e.get("ph") == "X" and e.get("cat") in COMPUTE_CATS
+        }
+        if comm_iv and compute_iv and not (comm_tids or compute_tids):
+            errors.append("trace: comm/compute spans landed on no lanes")
+    if not errors:
+        comm = union_len(comm_iv)
+        hidden = intersection_len(comm_iv, compute_iv)
+        frac = hidden / comm if comm else 0.0
+        print(
+            f"trace OK: {n_spans} spans on {len(seen_tids)} lanes, "
+            f"comm {comm / 1e3:.2f} ms, hidden {frac * 100.0:.0f}%"
+        )
+
+
+def check_events(text, expect_kill_recovery, errors):
+    recs = []
+    for i, line in enumerate(text.splitlines()):
+        if not line.strip():
+            continue
+        try:
+            o = json.loads(line)
+        except json.JSONDecodeError as e:
+            errors.append(f"events:{i + 1}: unparseable line ({e})")
+            continue
+        if o.get("schema") != EVENT_SCHEMA:
+            errors.append(f"events:{i + 1}: schema {o.get('schema')!r} != {EVENT_SCHEMA!r}")
+            continue
+        if o.get("kind") not in EVENT_KINDS:
+            errors.append(f"events:{i + 1}: unknown kind {o.get('kind')!r}")
+            continue
+        if not isinstance(o.get("t"), (int, float)) or not isinstance(o.get("seq"), int):
+            errors.append(f"events:{i + 1}: t/seq missing or mistyped")
+            continue
+        recs.append(o)
+    if not recs:
+        errors.append("events: stream is empty")
+        return
+    seqs = [r["seq"] for r in recs]
+    if len(set(seqs)) != len(seqs):
+        errors.append("events: duplicate seq numbers — two writers on one stream?")
+    if expect_kill_recovery:
+        deaths = [r for r in recs if r["kind"] == "dead"]
+        if not deaths:
+            errors.append("events: --expect-kill-recovery but no dead record")
+        else:
+            recovered = any(
+                r["kind"] == "respawned"
+                and r.get("rank") == d.get("rank")
+                and r["seq"] > d["seq"]
+                for d in deaths
+                for r in recs
+            )
+            if not recovered:
+                errors.append(
+                    "events: death streamed but no respawned record for that rank followed"
+                )
+    if not errors:
+        kinds = {}
+        for r in recs:
+            kinds[r["kind"]] = kinds.get(r["kind"], 0) + 1
+        print(f"events OK: {len(recs)} records " + str(dict(sorted(kinds.items()))))
+
+
+# ---------------------------------------------------------------- self-test
+
+
+def synth_trace(broken=False):
+    pid = 1
+    evs = [
+        {"ph": "M", "name": "thread_name", "pid": pid, "tid": t,
+         "args": {"name": n}}
+        for t, n in [(0, "main"), (1, "spngd-worker-0"), (2, "spngd-worker-1")]
+    ]
+    evs += [
+        {"ph": "X", "name": "step", "cat": "phase", "pid": pid, "tid": 0,
+         "ts": 0.0, "dur": 1000.0},
+        {"ph": "X", "name": "exec_fwd_bwd", "cat": "compute", "pid": pid, "tid": 1,
+         "ts": 10.0, "dur": 500.0},
+        {"ph": "X", "name": "ring_wait", "cat": "comm", "pid": pid, "tid": 2,
+         "ts": 100.0, "dur": 300.0},
+        {"ph": "i", "name": "poison", "cat": "comm", "pid": pid, "tid": 0,
+         "ts": 900.0, "s": "t"},
+        {"ph": "C", "name": "live", "pid": pid, "tid": 0, "ts": 950.0,
+         "args": {"value": 2.0}},
+    ]
+    if broken:
+        evs.append({"ph": "X", "name": "bad", "cat": "nonsense", "pid": pid,
+                    "tid": 7, "ts": -5.0, "dur": 1.0})
+    return {"traceEvents": evs, "displayTimeUnit": "ms"}
+
+
+def synth_events(broken=False):
+    lines = [
+        {"schema": EVENT_SCHEMA, "seq": 0, "t": 0.1, "kind": "state",
+         "state": "WaitingForMembers", "step": 0},
+        {"schema": EVENT_SCHEMA, "seq": 1, "t": 0.2, "kind": "joined", "rank": 0,
+         "uid": 17, "step": 0},
+        {"schema": EVENT_SCHEMA, "seq": 2, "t": 0.9, "kind": "dead", "rank": 1,
+         "step": 2, "reason": "heartbeat timeout"},
+        {"schema": EVENT_SCHEMA, "seq": 3, "t": 1.1, "kind": "respawned",
+         "rank": 1, "attempt": 1},
+    ]
+    if broken:
+        lines = lines[:3]  # death with no recovery
+    return "\n".join(json.dumps(o) for o in lines) + "\n"
+
+
+def self_test():
+    errors = []
+    check_trace(synth_trace(), expect_comm=True, errors=errors)
+    if errors:
+        print("self-test FAILED: healthy synthetic trace rejected:", errors)
+        return 1
+    bad = []
+    check_trace(synth_trace(broken=True), expect_comm=True, errors=bad)
+    if not bad:
+        print("self-test FAILED: broken trace accepted")
+        return 1
+    errors = []
+    check_events(synth_events(), expect_kill_recovery=True, errors=errors)
+    if errors:
+        print("self-test FAILED: healthy synthetic events rejected:", errors)
+        return 1
+    bad = []
+    check_events(synth_events(broken=True), expect_kill_recovery=True, errors=bad)
+    if not bad:
+        print("self-test FAILED: unrecovered death accepted")
+        return 1
+    print("self-test OK")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--trace", help="Chrome trace-event JSON to validate")
+    ap.add_argument("--expect-comm", action="store_true",
+                    help="require comm AND compute spans; report the hidden fraction")
+    ap.add_argument("--events", help="JSONL event stream to validate")
+    ap.add_argument("--expect-kill-recovery", action="store_true",
+                    help="require a dead record followed by a respawned record")
+    ap.add_argument("--self-test", action="store_true")
+    args = ap.parse_args()
+
+    if args.self_test:
+        sys.exit(self_test())
+    if not args.trace and not args.events:
+        ap.error("nothing to check: pass --trace and/or --events (or --self-test)")
+
+    errors = []
+    if args.trace:
+        try:
+            with open(args.trace) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            errors.append(f"trace: cannot load {args.trace}: {e}")
+        else:
+            check_trace(doc, args.expect_comm, errors)
+    if args.events:
+        try:
+            with open(args.events) as f:
+                text = f.read()
+        except OSError as e:
+            errors.append(f"events: cannot load {args.events}: {e}")
+        else:
+            check_events(text, args.expect_kill_recovery, errors)
+
+    if errors:
+        print(f"trace_check: FAIL ({len(errors)} problem(s))")
+        for e in errors:
+            print(f"  - {e}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -10,10 +10,10 @@
 //! SPNGD_THREADS=4 cargo bench --bench native_perf    # pin the pool size
 //! ```
 //!
-//! JSON schema (`spngd-bench-native/4`): `{schema, model, threads, quick,
+//! JSON schema (`spngd-bench-native/5`): `{schema, model, threads, quick,
 //! step: {name, ns, naive_ns, speedup}, kernels: [{name, ns, naive_ns,
 //! speedup}, ...], workers: [...], optimizers: [{name, step_ns}, ...],
-//! data: [...], simd: [...], precision: [...]}` — `ns` is the median
+//! data: [...], simd: [...], precision: [...], obs: {...}}` — `ns` is the median
 //! per-iteration wall time of the parallel kernel, `naive_ns` the same
 //! measurement with `linalg::set_reference_kernels(true)` routing every
 //! product to the pre-refactor naive loops, `speedup` their ratio.
@@ -30,7 +30,13 @@
 //! step time plus the per-step comm bytes for each wire precision
 //! (`{precision, step_ns, grad_bytes_per_step, stats_bytes_per_step,
 //! param_bytes_per_step}` — mixed must move ~half the grad/stat bytes,
-//! which `bench_gate.py` asserts structurally).
+//! which `bench_gate.py` asserts structurally). `obs` (new in /5) gates
+//! the tracing layer: the per-call cost of a disabled span (one relaxed
+//! atomic load — `disabled_span_ns`), the threaded step time with
+//! tracing off vs on (`step_ns` / `step_ns_traced` /
+//! `trace_overhead_ratio`), and the overlap accountant's view of the
+//! traced run (`comm_ns`, `compute_ns`, `hidden_ns`, `hidden_fraction`,
+//! `critical_path_ns`, `events`).
 
 use spngd::collectives::Precision;
 use spngd::coordinator::DistMode;
@@ -41,6 +47,7 @@ use spngd::runtime::native::kernels;
 use spngd::runtime::{Executor, HostTensor};
 use spngd::util::cli::Args;
 use spngd::util::json::{obj, Json};
+use spngd::util::obs::{self, Cat};
 use spngd::util::pool;
 use spngd::util::rng::Rng;
 use spngd::util::simd;
@@ -96,6 +103,12 @@ fn main() {
     let (wu, it) = if quick { (1, 1) } else { (2, 8) };
     let threads = pool::global().size();
     println!("native_perf: {threads} threads (set SPNGD_THREADS to override), quick={quick}");
+
+    // bench determinism: consume any ambient SPNGD_TRACE/SPNGD_EVENTS here
+    // (the registry is Once-guarded), then force tracing off — the obs
+    // section below toggles it around its own measurements
+    obs::init_from_env();
+    obs::set_enabled(false);
 
     let (manifest, engine) = harness::load_runtime_native().expect("native runtime");
     let model_name = parsed.get("model").to_string();
@@ -323,8 +336,65 @@ fn main() {
         ]));
     }
 
+    // ---- obs: tracing overhead and comm/compute overlap accounting.
+    // Three measurements: the disabled-span cost every instrumented
+    // callsite pays on an untraced run (one relaxed load + branch), the
+    // threaded step with tracing off vs on, and the overlap accountant's
+    // summary of the traced run's spans.
+    let obs_json = {
+        let spins: usize = if quick { 100_000 } else { 1_000_000 };
+        let d = bench("obs disabled span", wu, it, || {
+            for _ in 0..spins {
+                let s = obs::span("bench_noop", Cat::Compute);
+                std::hint::black_box(&s);
+            }
+        });
+        let disabled_span_ns = d.median() * 1e9 / spins as f64;
+
+        let mut tr = harness::builder("convnet_tiny", optim::spngd())
+            .expect("runtime")
+            .workers(2)
+            .dist(DistMode::Threaded)
+            .dataset_len(2048)
+            .data_seed(7)
+            .build()
+            .expect("obs trainer");
+        let off = bench("dist step convnet_tiny [tracing off]", wu, it, || {
+            tr.step().expect("obs step");
+        });
+        let _ = obs::drain(); // discard anything recorded before this point
+        obs::set_enabled(true);
+        let on = bench("dist step convnet_tiny [tracing on]", wu, it, || {
+            tr.step().expect("obs step");
+        });
+        obs::set_enabled(false);
+        let trace = obs::drain();
+        let ov = obs::overlap(&trace);
+        let step_ns = off.median() * 1e9;
+        let step_ns_traced = on.median() * 1e9;
+        println!(
+            "obs: disabled span {disabled_span_ns:.1} ns/call, traced/untraced step \
+             {:.3}x, comm hidden {:.0}%",
+            step_ns_traced / step_ns.max(1e-9),
+            ov.hidden_fraction * 100.0
+        );
+        obj(vec![
+            ("disabled_span_ns", Json::from(disabled_span_ns)),
+            ("step_ns", Json::from(step_ns)),
+            ("step_ns_traced", Json::from(step_ns_traced)),
+            ("trace_overhead_ratio", Json::from(step_ns_traced / step_ns.max(1e-9))),
+            ("events", Json::from(trace.events.len())),
+            ("dropped", Json::from(trace.dropped as f64)),
+            ("comm_ns", Json::from(ov.comm_ns as f64)),
+            ("compute_ns", Json::from(ov.compute_ns as f64)),
+            ("hidden_ns", Json::from(ov.hidden_ns as f64)),
+            ("hidden_fraction", Json::from(ov.hidden_fraction)),
+            ("critical_path_ns", Json::from(ov.critical_path_ns as f64)),
+        ])
+    };
+
     let report = obj(vec![
-        ("schema", Json::from("spngd-bench-native/4")),
+        ("schema", Json::from("spngd-bench-native/5")),
         ("model", Json::from(model_name.clone())),
         ("threads", Json::from(threads)),
         ("quick", Json::from(quick)),
@@ -335,6 +405,7 @@ fn main() {
         ("data", Json::Arr(data_entries)),
         ("simd", Json::Arr(simd_entries)),
         ("precision", Json::Arr(precision_entries)),
+        ("obs", obs_json),
     ]);
     let out_path = parsed.get("out");
     std::fs::write(out_path, report.to_string_pretty()).expect("write bench report");

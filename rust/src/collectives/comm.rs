@@ -13,6 +13,7 @@ use std::sync::Mutex;
 
 use crate::linalg::{packed_len, Mat};
 use crate::util::f16;
+use crate::util::obs::{self, Cat};
 
 /// Per-GPU wire bytes of an N-element ring collective: `(p−1)/p · N ·
 /// wire_elem_bytes`, rounded once — THE byte formula every
@@ -255,10 +256,14 @@ impl SimComm {
     /// receives the quantized mean (f64 accumulation is unchanged).
     pub fn all_reduce_mean(&self, bufs: &mut [Vec<f32>]) {
         assert!(!bufs.is_empty(), "at least one lane");
+        let _s = obs::span("all_reduce_mean", Cat::Comm).arg("lanes", bufs.len() as f64);
         let n = bufs[0].len();
         let nlanes = bufs.len();
-        for b in bufs.iter_mut() {
-            wire_quantize_slice(self.precision, b);
+        {
+            let _q = obs::span("wire_quantize", Cat::Wire);
+            for b in bufs.iter_mut() {
+                wire_quantize_slice(self.precision, b);
+            }
         }
         // reduce into lane 0 (f64 accumulation in canonical lane order)
         for i in 0..n {
@@ -291,6 +296,7 @@ impl SimComm {
         classes: &[StatClass],
     ) -> Vec<Mat> {
         assert!(!items.is_empty(), "at least one lane");
+        let _s = obs::span("reduce_scatter_v", Cat::Comm).arg("items", items[0].len() as f64);
         let n_items = items[0].len();
         assert_eq!(classes.len(), n_items);
         let mut out = Vec::with_capacity(n_items);

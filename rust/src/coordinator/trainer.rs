@@ -42,6 +42,7 @@ use crate::optim::{
     self, Fisher, LayerStateBox, ParamSlot, Preconditioner, SchedulePolicy, StatKind, UpdateRule,
 };
 use crate::runtime::{Executor, HostTensor, Manifest, ModelManifest};
+use crate::util::obs::{self, Cat};
 
 /// How the data-parallel workers execute (§5, Alg. 3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -178,6 +179,9 @@ impl Trainer {
         schedule: Arc<dyn SchedulePolicy>,
         loader: Loader,
     ) -> Result<Trainer> {
+        // pick up SPNGD_TRACE / SPNGD_EVENTS for every construction path
+        // (CLI flags route through the same switches in main.rs)
+        obs::init_from_env();
         let model = manifest.model(&cfg.model)?.clone();
         let (classes, (c, h, w)) = loader.out_spec();
         anyhow::ensure!(
@@ -327,6 +331,7 @@ impl Trainer {
     pub fn step(&mut self) -> Result<StepRecord> {
         self.step += 1;
         let t = self.step;
+        let _step_span = obs::span("step", Cat::Phase).arg("step", t as f64);
         let t_start = Instant::now();
         let w = self.cfg.workers.max(1);
         let micro = self.cfg.grad_accum.max(1);
@@ -468,6 +473,7 @@ impl Trainer {
         let mut lane_outs: Vec<LaneOut> = Vec::with_capacity(lanes_n);
         let mut grad_lanes: Vec<Vec<f32>> = Vec::with_capacity(lanes_n);
         let mut factor_lanes: Vec<Vec<Mat>> = Vec::with_capacity(lanes_n);
+        let s12 = obs::span("stage1_2", Cat::Phase);
         for (g, batch) in batches.iter().enumerate() {
             let mut factors: Vec<Mat> = Vec::with_capacity(plan.len());
             let (lo, grads) = run_lane(
@@ -485,26 +491,32 @@ impl Trainer {
             grad_lanes.push(grads);
             factor_lanes.push(factors);
         }
+        drop(s12);
 
         // ------------------------- Stage 3: gradient AllReduce (mean)
         // (through ProcComm's worker processes under DistMode::Proc —
         // same canonical-lane math, so the results are bit-identical)
+        let s3 = obs::span("stage3_grad", Cat::Phase);
         let comm: &dyn Collective = match &self.proc {
             Some(p) => p,
             None => &self.comm,
         };
         comm.all_reduce_mean(&mut grad_lanes);
         let grads_flat = std::mem::take(&mut grad_lanes[0]);
+        drop(s3);
 
         // ----------------- Stages 2-3: ReduceScatterV of the statistics
+        let s23 = obs::span("stage2_3_stats", Cat::Phase);
         let reduced: Vec<Mat> = if plan.is_empty() {
             Vec::new()
         } else {
             let classes: Vec<_> = plan.iter().map(|&(_, k)| k.class()).collect();
             comm.reduce_scatter_v(&factor_lanes, &classes)
         };
+        drop(s23);
 
         // ------------------- Stage 4a: model-parallel factor inversion
+        let s4a = obs::span("stage4a_invert", Cat::Phase);
         let t_inv_start = Instant::now();
         let mut layer_jobs: Vec<(usize, Vec<(StatKind, Mat)>)> = Vec::new();
         for (&(li, kind), m) in plan.iter().zip(reduced.into_iter()) {
@@ -514,13 +526,16 @@ impl Trainer {
             }
         }
         for (li, items) in layer_jobs {
+            let _inv = obs::span("invert", Cat::Compute).arg("layer", li as f64);
             let slot = &mut self.layers[li];
             self.opt
                 .refresh(self.engine.as_ref(), &self.model, li, &mut slot.state, t, items)?;
         }
         let t_inverse = t_inv_start.elapsed().as_secs_f64();
+        drop(s4a);
 
         // ------------------- Stage 4b: preconditioning + weight update
+        let s4b = obs::span("stage4b_update", Cat::Phase);
         let t_upd_start = Instant::now();
         let mut slots: BTreeMap<usize, ParamSlot> = self
             .params
@@ -530,6 +545,7 @@ impl Trainer {
             .map(|(i, (p, v))| (i, ParamSlot { p, v }))
             .collect();
         for li in 0..self.model.kfac_layers.len() {
+            let _upd = obs::span("update", Cat::Compute).arg("layer", li as f64);
             optim::apply_layer_update(
                 self.engine.as_ref(),
                 &self.model,
@@ -544,6 +560,7 @@ impl Trainer {
             )?;
         }
         let t_update = t_upd_start.elapsed().as_secs_f64();
+        drop(s4b);
         Ok((lane_outs, t_inverse, t_update))
     }
 
@@ -595,34 +612,39 @@ impl Trainer {
         // -------- scope 1: Stage 1-2 compute + publish, Stage 3 send,
         // Stage 4a owner reduce+invert, Stage 3 finish
         let mut yields: Vec<Result<WorkerYield>> = Vec::with_capacity(w);
+        let s14 = obs::span("stage1_4_workers", Cat::Phase);
         std::thread::scope(|s| {
             let mut handles = Vec::with_capacity(w);
             for rank in 0..w {
                 let my_batches = std::mem::take(&mut per_worker[rank]);
                 let group = std::mem::take(&mut layer_groups[rank]);
                 let engine = dist.engine(rank).clone();
-                handles.push(s.spawn(move || {
-                    // a panicking worker (e.g. inside a kernel) poisons
-                    // the ring so peers abort with its rank named
-                    // instead of hanging mid-collective
-                    let _poison = ring.poison_guard(rank);
-                    worker_step(
-                        engine.as_ref(),
-                        ring,
-                        model,
-                        opt,
-                        t,
-                        plan,
-                        layer_items,
-                        params,
-                        nparams_total,
-                        lanes_n,
-                        exe,
-                        seeds,
-                        my_batches,
-                        group,
-                    )
-                }));
+                let h = std::thread::Builder::new()
+                    .name(format!("spngd-worker-{rank}"))
+                    .spawn_scoped(s, move || {
+                        // a panicking worker (e.g. inside a kernel)
+                        // poisons the ring so peers abort with its rank
+                        // named instead of hanging mid-collective
+                        let _poison = ring.poison_guard(rank);
+                        worker_step(
+                            engine.as_ref(),
+                            ring,
+                            model,
+                            opt,
+                            t,
+                            plan,
+                            layer_items,
+                            params,
+                            nparams_total,
+                            lanes_n,
+                            exe,
+                            seeds,
+                            my_batches,
+                            group,
+                        )
+                    })
+                    .expect("spawn dist worker thread");
+                handles.push(h);
             }
             for h in handles {
                 yields.push(match h.join() {
@@ -631,6 +653,7 @@ impl Trainer {
                 });
             }
         });
+        drop(s14);
         drop(layer_groups); // release the &mut borrows of self.layers
         let mut workers_out: Vec<WorkerYield> = Vec::with_capacity(w);
         for y in yields {
@@ -647,6 +670,7 @@ impl Trainer {
 
         // -------- scope 2: Stage 4b owner-parallel updates (disjoint
         // parameter partition, layers now read-only)
+        let s4b = obs::span("stage4b_update", Cat::Phase);
         let t_upd_start = Instant::now();
         let mut powner = vec![usize::MAX; self.params.len()];
         for (li, ml) in self.model.kfac_layers.iter().enumerate() {
@@ -677,27 +701,33 @@ impl Trainer {
             for rank in 0..w {
                 let slots = std::mem::take(&mut slot_groups[rank]);
                 let engine = dist.engine(rank).clone();
-                handles.push(s.spawn(move || -> Result<()> {
-                    let mut slots = slots;
-                    for (li, layer) in layers.iter().enumerate() {
-                        if layer.owner % w != rank {
-                            continue;
+                let h = std::thread::Builder::new()
+                    .name(format!("spngd-update-{rank}"))
+                    .spawn_scoped(s, move || -> Result<()> {
+                        let mut slots = slots;
+                        for (li, layer) in layers.iter().enumerate() {
+                            if layer.owner % w != rank {
+                                continue;
+                            }
+                            let _upd =
+                                obs::span("update", Cat::Compute).arg("layer", li as f64);
+                            optim::apply_layer_update(
+                                engine.as_ref(),
+                                model,
+                                opt,
+                                rule,
+                                li,
+                                &layer.state,
+                                &mut slots,
+                                grads_ref,
+                                lr,
+                                mom,
+                            )?;
                         }
-                        optim::apply_layer_update(
-                            engine.as_ref(),
-                            model,
-                            opt,
-                            rule,
-                            li,
-                            &layer.state,
-                            &mut slots,
-                            grads_ref,
-                            lr,
-                            mom,
-                        )?;
-                    }
-                    Ok(())
-                }));
+                        Ok(())
+                    })
+                    .expect("spawn dist update thread");
+                handles.push(h);
             }
             for h in handles {
                 upd_results.push(match h.join() {
@@ -710,6 +740,7 @@ impl Trainer {
             r?;
         }
         let t_update = t_upd_start.elapsed().as_secs_f64();
+        drop(s4b);
         Ok((lane_outs, t_inverse, t_update))
     }
 
@@ -856,7 +887,9 @@ fn run_lane(
     inputs.push(&batch.x);
     inputs.push(&batch.t);
     let te = Instant::now();
+    let exec_span = obs::span("exec_fwd_bwd", Cat::Compute);
     let outs = engine.execute_seeded(exe, &inputs, seed).context("step exec")?;
+    drop(exec_span);
     let t_exec = te.elapsed().as_secs_f64();
 
     // flatten grads (outputs 2..2+nparams) in canonical param order
@@ -877,7 +910,13 @@ fn run_lane(
     // statistics construction for planned refreshes
     let tf = Instant::now();
     for (item, &(li, kind)) in plan.iter().enumerate() {
-        let mat = opt.build_stat(engine, model, li, kind, &outs)?;
+        // the compute span closes before on_factor: publishing to the
+        // ring is comm and must not nest inside a compute interval (the
+        // overlap accountant would miscount same-thread comm as hidden)
+        let mat = {
+            let _f = obs::span("factor_build", Cat::Compute).arg("layer", li as f64);
+            opt.build_stat(engine, model, li, kind, &outs)?
+        };
         on_factor(item, mat);
     }
     let t_factors = tf.elapsed().as_secs_f64();
@@ -977,6 +1016,7 @@ fn worker_step(
             mats.push((kind, ring.reduce_stat(idx, kind.class())));
         }
         if first_err.is_none() {
+            let _inv = obs::span("invert", Cat::Compute).arg("layer", li as f64);
             if let Err(e) = opt.refresh(engine, model, li, &mut slot.state, t, mats) {
                 first_err = Some(e);
             }

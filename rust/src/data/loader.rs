@@ -32,7 +32,7 @@ use anyhow::{anyhow, ensure, Result};
 
 use crate::data::source::{draw_batch, Batch, DataSource, DataSpec};
 use crate::data::transform::TransformChain;
-use crate::util::pool;
+use crate::util::obs::{self, Cat};
 use crate::util::rng::Rng;
 
 /// `SPNGD_PREFETCH` knob: `0 | off | false` disables, anything else (or
@@ -220,6 +220,7 @@ impl Loader {
             "data pipeline poisoned by an earlier prefetch panic — rebuild the trainer"
         );
         let t0 = Instant::now();
+        let wait_span = obs::span("data_wait", Cat::Data);
         let cur = match self.pending.take() {
             Some(slot) => match slot.take() {
                 Ok(b) => b,
@@ -235,6 +236,7 @@ impl Loader {
                 materialize(self.source.as_ref(), &mut st, self.batch, self.lanes)
             }
         };
+        drop(wait_span);
         self.wait_seconds += t0.elapsed().as_secs_f64();
         self.batches += 1;
         if self.prefetch {
@@ -264,16 +266,21 @@ impl Loader {
         let source = self.source.clone();
         let state = self.state.clone();
         let (batch, lanes) = (self.batch, self.lanes);
-        pool::global().submit(move || {
-            // tolerate a poisoned mutex (a previous panic already surfaced
-            // as Err through the slot) and convert panics into an Err the
-            // consumer can report — never leave `take()` waiting forever
-            let mut st = state.lock().unwrap_or_else(|p| p.into_inner());
-            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                materialize(source.as_ref(), &mut st, batch, lanes)
-            }));
-            job_slot.put(r.map_err(|_| ()));
-        });
+        // a dedicated named thread (not a pool worker): prefetch must not
+        // occupy a compute lane, and the name identifies it in traces
+        std::thread::Builder::new()
+            .name("spngd-prefetch".into())
+            .spawn(move || {
+                // tolerate a poisoned mutex (a previous panic already surfaced
+                // as Err through the slot) and convert panics into an Err the
+                // consumer can report — never leave `take()` waiting forever
+                let mut st = state.lock().unwrap_or_else(|p| p.into_inner());
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    materialize(source.as_ref(), &mut st, batch, lanes)
+                }));
+                job_slot.put(r.map_err(|_| ()));
+            })
+            .expect("spawn prefetch thread");
         self.pending = Some(slot);
     }
 }
@@ -289,6 +296,7 @@ fn materialize(
     lanes: usize,
 ) -> Vec<Batch> {
     let t0 = Instant::now();
+    let _s = obs::span("data_prep", Cat::Data).arg("lanes", lanes as f64);
     let out = (0..lanes)
         .map(|g| {
             let raw = draw_batch(source, batch, &mut st.rng);

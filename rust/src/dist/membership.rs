@@ -14,6 +14,8 @@ use std::process::{Child, Command, Stdio};
 use std::time::{Duration, Instant};
 
 use crate::collectives::wire::{self, Frame, Kind, WelcomeMsg};
+use crate::util::json::Json;
+use crate::util::obs;
 use crate::warn_;
 
 /// The coordinator's run state — driven explicitly, logged on every
@@ -233,6 +235,13 @@ impl Membership {
         let _ = std::fs::remove_file(socket);
         let listener = UnixListener::bind(socket)?;
         listener.set_nonblocking(true)?;
+        obs::emit(
+            "state",
+            vec![
+                ("state", Json::from(RunState::WaitingForMembers.name())),
+                ("step", Json::from(0usize)),
+            ],
+        );
         Ok(Membership {
             listener,
             members: Vec::new(),
@@ -280,6 +289,13 @@ impl Membership {
         if self.state != s {
             self.state = s;
             self.events.push(MemberEvent::State { state: s.name(), step: self.step });
+            obs::emit(
+                "state",
+                vec![
+                    ("state", Json::from(s.name())),
+                    ("step", Json::from(self.step as usize)),
+                ],
+            );
         }
     }
 
@@ -353,6 +369,14 @@ impl Membership {
             return false;
         }
         self.events.push(MemberEvent::Joined { rank, uid, step: self.step });
+        obs::emit(
+            "joined",
+            vec![
+                ("rank", Json::from(rank as usize)),
+                ("uid", Json::from(uid as usize)),
+                ("step", Json::from(self.step as usize)),
+            ],
+        );
         self.members.push(Member { rank, uid, conn, last_seen: Instant::now(), child: None });
         self.members.sort_by_key(|m| m.rank);
         true
@@ -534,6 +558,13 @@ impl Membership {
                         for rank in fresh {
                             warn_!(LOG, "rank {rank} respawned (attempt {attempt})");
                             self.events.push(MemberEvent::Respawned { rank, attempt });
+                            obs::emit(
+                                "respawned",
+                                vec![
+                                    ("rank", Json::from(rank as usize)),
+                                    ("attempt", Json::from(attempt as usize)),
+                                ],
+                            );
                         }
                     }
                 }
@@ -582,6 +613,14 @@ impl Membership {
         }
         self.free_ranks.push(rank);
         self.free_ranks.sort_unstable_by(|a, b| b.cmp(a)); // pop() yields smallest
+        obs::emit(
+            "dead",
+            vec![
+                ("rank", Json::from(rank as usize)),
+                ("step", Json::from(self.step as usize)),
+                ("reason", Json::from(reason.as_str())),
+            ],
+        );
         self.events.push(MemberEvent::Dead { rank, step: self.step, reason });
     }
 

@@ -32,6 +32,8 @@ use crate::dist::membership::{
     MemberEvent, Membership, MembershipCfg, RespawnPolicy, RunState, Spawner,
 };
 use crate::linalg::{packed_len, Mat};
+use crate::util::json::Json;
+use crate::util::obs::{self, Cat};
 
 /// Configuration for the multi-process transport.
 #[derive(Clone, Debug)]
@@ -201,6 +203,15 @@ impl ProcComm {
         membership.wait_for_members(children).map_err(|e| anyhow::anyhow!("{e}"))?;
         membership.warmup().map_err(|e| anyhow::anyhow!("{e}"))?;
         crate::debug!(LOG, "{} workers admitted on {socket}", membership.live());
+        if !cfg.fault_plan.is_empty() {
+            obs::emit(
+                "fault_plan",
+                vec![
+                    ("plan", Json::from(cfg.fault_plan.to_env())),
+                    ("world", Json::from(world)),
+                ],
+            );
+        }
         Ok(ProcComm {
             p: world,
             symmetric_packing: true,
@@ -318,6 +329,8 @@ impl ProcComm {
         mut on_reply: impl FnMut(usize, Frame) -> Result<(), String>,
         mut local: impl FnMut(usize),
     ) {
+        let _s = obs::span(if grad { "proc_grad_jobs" } else { "proc_stat_jobs" }, Cat::Comm)
+            .arg("jobs", frames.len() as f64);
         let want = if grad { Kind::GradSeg } else { Kind::StatResult };
         let mut done = vec![false; frames.len()];
         loop {
@@ -387,22 +400,28 @@ impl Collective for ProcComm {
     /// every lane. Byte charging is identical to `SimComm`.
     fn all_reduce_mean(&self, lanes: &mut [Vec<f32>]) {
         assert!(!lanes.is_empty(), "at least one lane");
+        let _s = obs::span("all_reduce_mean", Cat::Comm).arg("lanes", lanes.len() as f64);
         let n = lanes[0].len();
         let nlanes = lanes.len();
-        for b in lanes.iter_mut() {
-            wire_quantize_slice(self.precision, b);
-        }
         let mut m = self.membership.lock().unwrap();
-        let segs = wire::split_segments(n, m.live().max(1));
-        let frames: Vec<Frame> = segs
-            .iter()
-            .enumerate()
-            .map(|(j, &(start, len))| {
-                let slices: Vec<&[f32]> =
-                    lanes.iter().map(|l| &l[start..start + len]).collect();
-                wire::encode_grad_job(self.precision, j as u32, &slices)
-            })
-            .collect();
+        let frames: Vec<Frame>;
+        let segs;
+        {
+            let _q = obs::span("wire_encode", Cat::Wire);
+            for b in lanes.iter_mut() {
+                wire_quantize_slice(self.precision, b);
+            }
+            segs = wire::split_segments(n, m.live().max(1));
+            frames = segs
+                .iter()
+                .enumerate()
+                .map(|(j, &(start, len))| {
+                    let slices: Vec<&[f32]> =
+                        lanes.iter().map(|l| &l[start..start + len]).collect();
+                    wire::encode_grad_job(self.precision, j as u32, &slices)
+                })
+                .collect();
+        }
         let mut mean = vec![0.0f32; n];
         // split the borrow: `lanes` is read by the local fallback while
         // `mean` segments are written by replies
@@ -451,16 +470,26 @@ impl Collective for ProcComm {
     /// copies are never re-quantized — §5.2).
     fn reduce_scatter_v(&self, items: &[Vec<Mat>], classes: &[StatClass]) -> Vec<Mat> {
         assert!(!items.is_empty(), "at least one lane");
+        let _s = obs::span("reduce_scatter_v", Cat::Comm).arg("items", items[0].len() as f64);
         let n_items = items[0].len();
         assert_eq!(classes.len(), n_items);
-        let frames: Vec<Frame> = (0..n_items)
-            .map(|i| {
-                let (rows, cols) = (items[0][i].rows, items[0][i].cols);
-                let slices: Vec<&[f32]> =
-                    items.iter().map(|lane| lane[i].data.as_slice()).collect();
-                wire::encode_stat_job(self.precision, i as u32, rows as u32, cols as u32, &slices)
-            })
-            .collect();
+        let frames: Vec<Frame> = {
+            let _q = obs::span("wire_encode", Cat::Wire);
+            (0..n_items)
+                .map(|i| {
+                    let (rows, cols) = (items[0][i].rows, items[0][i].cols);
+                    let slices: Vec<&[f32]> =
+                        items.iter().map(|lane| lane[i].data.as_slice()).collect();
+                    wire::encode_stat_job(
+                        self.precision,
+                        i as u32,
+                        rows as u32,
+                        cols as u32,
+                        &slices,
+                    )
+                })
+                .collect()
+        };
         let mut out: Vec<Option<Mat>> = (0..n_items).map(|_| None).collect();
         let out_cell = std::cell::RefCell::new(&mut out);
         let mut m = self.membership.lock().unwrap();

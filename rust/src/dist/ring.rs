@@ -51,6 +51,8 @@ use crate::collectives::comm::{
     Precision, StatClass,
 };
 use crate::linalg::{packed_len, Mat};
+use crate::util::json::Json;
+use crate::util::obs::{self, Cat};
 
 /// Default AllReduce chunk granularity (elements).
 pub const DEFAULT_CHUNK_ELEMS: usize = 4096;
@@ -200,6 +202,10 @@ impl RingComm {
             let mut p = self.poison.lock().unwrap();
             if p.is_none() {
                 *p = Some(format!("worker rank {rank} died: {what}"));
+                obs::emit(
+                    "poison",
+                    vec![("rank", Json::from(rank)), ("what", Json::from(what))],
+                );
             }
         }
         self.stat_cv.notify_all();
@@ -225,6 +231,7 @@ impl RingComm {
         g: MutexGuard<'a, T>,
         what: &str,
     ) -> MutexGuard<'a, T> {
+        let _w = obs::span("ring_wait", Cat::Comm);
         let stall = stall_timeout();
         let start = Instant::now();
         let mut g = g;
@@ -303,8 +310,12 @@ impl RingComm {
     /// a worker the moment the factor product finishes, which is what
     /// lets owners start reducing while other workers still compute.
     pub fn publish_stat(&self, item: usize, lane: usize, mut m: Mat) {
-        // serialization point: the published copy is what travels the wire
-        wire_quantize_slice(self.precision, &mut m.data);
+        let _s = obs::span("publish_stat", Cat::Comm).arg("item", item as f64);
+        {
+            // serialization point: the published copy is what travels the wire
+            let _q = obs::span("wire_quantize", Cat::Wire);
+            wire_quantize_slice(self.precision, &mut m.data);
+        }
         let mut st = self.stat.lock().unwrap();
         assert!(st.active, "publish_stat outside a statistic round");
         assert!(st.slots[item][lane].is_none(), "duplicate publish for (item, lane)");
@@ -320,6 +331,7 @@ impl RingComm {
     /// last reduced item of the round closes it and charges the ring's
     /// ReduceScatterV wire bytes (packed symmetric sizes per class).
     pub fn reduce_stat(&self, item: usize, class: StatClass) -> Mat {
+        let _s = obs::span("reduce_stat", Cat::Comm).arg("item", item as f64);
         let taken: Vec<Mat> = {
             let mut st = self.stat.lock().unwrap();
             assert!(st.active, "reduce_stat outside a statistic round");
@@ -368,9 +380,13 @@ impl RingComm {
         if my_lanes.is_empty() {
             return; // nothing to contribute — other ranks carry the round
         }
-        // serialization point: posted lanes travel the wire
-        for (_, buf) in my_lanes.iter_mut() {
-            wire_quantize_slice(self.precision, buf);
+        let _s = obs::span("grad_post", Cat::Comm);
+        {
+            // serialization point: posted lanes travel the wire
+            let _q = obs::span("wire_quantize", Cat::Wire);
+            for (_, buf) in my_lanes.iter_mut() {
+                wire_quantize_slice(self.precision, buf);
+            }
         }
         let n = my_lanes[0].1.len();
         let mut st = self.grad.lock().unwrap();
@@ -418,6 +434,7 @@ impl RingComm {
     /// finisher can pass the posted-lanes wait, so `participants` is
     /// final by then.
     pub fn grad_finish(&self) -> Vec<f32> {
+        let _s = obs::span("grad_finish", Cat::Comm);
         let (frozen, n, total_lanes) = {
             let mut st = self.grad.lock().unwrap();
             assert!(st.active, "grad_finish without grad_post");
@@ -489,6 +506,7 @@ impl RingComm {
     /// posted (the send), then every rank copies every segment back out.
     /// After the call all ranks hold identical segment contents.
     pub fn all_gather_v(&self, rank: usize, segs: &mut [Vec<f32>], owner_of: &[usize]) {
+        let _s = obs::span("all_gather_v", Cat::Comm);
         assert_eq!(segs.len(), owner_of.len());
         let n_segs = segs.len();
         let mut st = self.gather.lock().unwrap();
@@ -581,7 +599,9 @@ impl Collective for RingComm {
         }
         std::thread::scope(|s| {
             for (rank, group) in groups.into_iter().enumerate() {
-                s.spawn(move || {
+                std::thread::Builder::new()
+                    .name(format!("spngd-worker-{rank}"))
+                    .spawn_scoped(s, move || {
                     let _poison = self.poison_guard(rank);
                     let mut group = group;
                     let posts: Vec<(usize, Vec<f32>)> =
@@ -596,7 +616,8 @@ impl Collective for RingComm {
                     for (_, buf) in group.iter_mut() {
                         buf.extend_from_slice(&mean);
                     }
-                });
+                })
+                    .expect("spawn ring collective thread");
             }
         });
     }
@@ -613,23 +634,26 @@ impl Collective for RingComm {
         std::thread::scope(|s| {
             for rank in 0..self.p {
                 let results = &results;
-                s.spawn(move || {
-                    let _poison = self.poison_guard(rank);
-                    for (g, lane) in lanes.iter().enumerate() {
-                        if g % self.p != rank {
-                            continue;
+                std::thread::Builder::new()
+                    .name(format!("spngd-worker-{rank}"))
+                    .spawn_scoped(s, move || {
+                        let _poison = self.poison_guard(rank);
+                        for (g, lane) in lanes.iter().enumerate() {
+                            if g % self.p != rank {
+                                continue;
+                            }
+                            for (i, m) in lane.iter().enumerate() {
+                                self.publish_stat(i, g, m.clone());
+                            }
                         }
-                        for (i, m) in lane.iter().enumerate() {
-                            self.publish_stat(i, g, m.clone());
+                        let mut i = rank;
+                        while i < n_items {
+                            let m = self.reduce_stat(i, classes[i]);
+                            *results[i].lock().unwrap() = Some(m);
+                            i += self.p;
                         }
-                    }
-                    let mut i = rank;
-                    while i < n_items {
-                        let m = self.reduce_stat(i, classes[i]);
-                        *results[i].lock().unwrap() = Some(m);
-                        i += self.p;
-                    }
-                });
+                    })
+                    .expect("spawn ring collective thread");
             }
         });
         results.into_iter().map(|m| m.into_inner().unwrap().expect("item reduced")).collect()

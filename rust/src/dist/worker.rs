@@ -84,13 +84,16 @@ pub fn run(socket: &str, plan: FaultPlan) -> anyhow::Result<()> {
         let writer = writer.clone();
         let step = Arc::clone(&step);
         let cadence = Duration::from_millis(welcome.heartbeat_ms.max(1) as u64);
-        std::thread::spawn(move || loop {
-            std::thread::sleep(cadence);
-            let f = wire::encode_step(Kind::Heartbeat, step.load(Ordering::Relaxed));
-            if writer.send(&f).is_err() {
-                return; // coordinator is gone; the serve loop will exit too
-            }
-        });
+        std::thread::Builder::new()
+            .name("spngd-heartbeat".into())
+            .spawn(move || loop {
+                std::thread::sleep(cadence);
+                let f = wire::encode_step(Kind::Heartbeat, step.load(Ordering::Relaxed));
+                if writer.send(&f).is_err() {
+                    return; // coordinator is gone; the serve loop will exit too
+                }
+            })
+            .map_err(|e| anyhow::anyhow!("spawn heartbeat thread: {e}"))?;
     }
 
     loop {

@@ -26,9 +26,11 @@ use spngd::optim::{self, BnMode, Fisher, HyperParams, Preconditioner, Schedule, 
 use spngd::runtime::{native, Executor, Manifest};
 use spngd::simulator;
 use spngd::util::cli::Args;
+use spngd::util::obs;
 use spngd::util::stats::{fmt_bytes, fmt_duration};
 
 fn main() {
+    spngd::util::log::init_from_env();
     let argv: Vec<String> = std::env::args().collect();
     let cmd = argv.get(1).map(|s| s.as_str()).unwrap_or("help");
     let result = match cmd {
@@ -245,6 +247,8 @@ fn train_args() -> Args {
         .opt("clip", "0.3", "trust-ratio update clip (0 = off)")
         .opt("eval-every", "0", "evaluate every N steps (0 = only at end)")
         .opt("csv", "", "write per-step CSV to this path")
+        .opt("trace-out", "", "write a Chrome trace-event JSON of the run to this path (or SPNGD_TRACE)")
+        .opt("events-out", "", "write the dist-layer JSONL event stream to this path (or SPNGD_EVENTS)")
         .opt("seed", "7", "RNG seed")
 }
 
@@ -252,6 +256,15 @@ fn cmd_train() -> Result<()> {
     let parsed = train_args().parse_env(2).map_err(|u| anyhow::anyhow!("{u}"))?;
     let steps = parsed.get_usize("steps");
     let eval_every = parsed.get_usize("eval-every");
+    // flags must win over SPNGD_TRACE/SPNGD_EVENTS, so set them before
+    // the trainer's obs::init_from_env runs
+    if !parsed.get("trace-out").is_empty() {
+        obs::set_trace_path(std::path::Path::new(parsed.get("trace-out")));
+    }
+    if !parsed.get("events-out").is_empty() {
+        obs::set_events_path(std::path::Path::new(parsed.get("events-out")))
+            .map_err(|e| anyhow::anyhow!("--events-out: {e}"))?;
+    }
     let mut tr = trainer_from_args(&parsed)?;
     println!(
         "training {} with {} (workers={}, accum={}, effective batch={})",
@@ -294,6 +307,11 @@ fn cmd_train() -> Result<()> {
         tr.log.write_csv(csv)?;
         println!("wrote {csv}");
     }
+    drop(tr); // close the proc transport before flushing telemetry sinks
+    if let Some(path) = obs::flush_trace().map_err(|e| anyhow::anyhow!("write trace: {e}"))? {
+        println!("wrote trace {}", path.display());
+    }
+    obs::close_events();
     Ok(())
 }
 

@@ -141,4 +141,36 @@ mod tests {
         assert_eq!(log.steps_to_loss(0.1), None);
         assert_eq!(log.final_loss(), 0.4);
     }
+
+    #[test]
+    fn summaries_empty_log() {
+        let log = RunLog::default();
+        assert!(log.mean_step_time(0).is_nan());
+        assert_eq!(log.total_stats_bytes(), 0);
+        assert_eq!(log.refresh_fraction(), 1.0, "no stats means nothing was skipped");
+        assert_eq!(log.steps_to_loss(1.0), None);
+        assert!(log.final_loss().is_nan());
+    }
+
+    #[test]
+    fn summaries_warmup_skip_edges() {
+        let mut log = RunLog::default();
+        log.push(rec(1, 2.0, 4.0, 10));
+        log.push(rec(2, 1.5, 2.0, 10));
+        // skip nothing: plain mean; skip everything: NaN, not a panic
+        assert_eq!(log.mean_step_time(0), 3.0);
+        assert_eq!(log.mean_step_time(1), 2.0);
+        assert!(log.mean_step_time(2).is_nan());
+        assert!(log.mean_step_time(100).is_nan());
+    }
+
+    #[test]
+    fn steps_to_loss_reports_first_crossing() {
+        let mut log = RunLog::default();
+        log.push(rec(1, 0.9, 1.0, 0));
+        log.push(rec(2, 2.0, 1.0, 0)); // noisy rebound above target
+        log.push(rec(3, 0.5, 1.0, 0));
+        assert_eq!(log.steps_to_loss(1.0), Some(1), "first crossing wins, not the last");
+        assert_eq!(log.steps_to_loss(0.9), Some(1), "boundary is inclusive");
+    }
 }

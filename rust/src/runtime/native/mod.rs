@@ -24,6 +24,7 @@ use self::model::{LayerGeo, NativeModelCfg};
 use super::manifest::{KfacLayer, Manifest, ModelManifest, OutputSpec, ParamSpec};
 use super::{Executor, HostTensor};
 use crate::linalg::Scratch;
+use crate::util::obs::{self, Cat};
 use crate::util::pool;
 
 /// Newton-Schulz iteration count — matches `NS_ITERS` in the AOT
@@ -379,6 +380,20 @@ impl Executor for NativeBackend {
             .execs
             .get(name)
             .with_context(|| format!("executable '{name}' not in manifest"))?;
+        // static span name per executable class (manifest names are dynamic)
+        let _exec_span = obs::span(
+            match spec {
+                ExecSpec::Step { .. } => "exec_step",
+                ExecSpec::Eval { .. } => "exec_eval",
+                ExecSpec::FactorConvA { .. } => "exec_factor_conv_a",
+                ExecSpec::FactorSyrk { .. } => "exec_factor_syrk",
+                ExecSpec::BnInv => "exec_bn_inv",
+                ExecSpec::BnFull => "exec_bn_full",
+                ExecSpec::Invert { .. } => "exec_invert",
+                ExecSpec::Precond { .. } => "exec_precond",
+            },
+            Cat::Compute,
+        );
         let t0 = Instant::now();
         let mut scratch_guard = self.scratch.lock().unwrap();
         let scratch = &mut *scratch_guard;

@@ -21,6 +21,27 @@ pub fn set_level(l: Level) {
     LEVEL.store(l as u8, Ordering::Relaxed);
 }
 
+impl Level {
+    /// Parse a `SPNGD_LOG` spelling.
+    pub fn parse(s: &str) -> Result<Level, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "debug" => Ok(Level::Debug),
+            "info" => Ok(Level::Info),
+            "warn" | "warning" => Ok(Level::Warn),
+            "error" => Ok(Level::Error),
+            other => Err(format!("unknown log level '{other}' (debug | info | warn | error)")),
+        }
+    }
+}
+
+/// Apply `SPNGD_LOG` to the global level (unset leaves the default Info;
+/// invalid values are a hard error, mirroring the other env registries).
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("SPNGD_LOG") {
+        set_level(Level::parse(&v).unwrap_or_else(|e| panic!("SPNGD_LOG: {e}")));
+    }
+}
+
 pub fn enabled(l: Level) -> bool {
     l as u8 >= LEVEL.load(Ordering::Relaxed)
 }
@@ -69,6 +90,12 @@ macro_rules! warn_ {
         $crate::util::log::log($crate::util::log::Level::Warn, $target, &format!($($arg)*))
     };
 }
+#[macro_export]
+macro_rules! error {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Error, $target, &format!($($arg)*))
+    };
+}
 
 /// Append-only table writer: header once, then rows; used for loss curves
 /// and bench series the experiment docs reference.
@@ -112,6 +139,16 @@ mod tests {
         assert!(enabled(Level::Error));
         set_level(Level::Info);
         assert!(enabled(Level::Info));
+    }
+
+    #[test]
+    fn level_parse() {
+        assert_eq!(Level::parse("debug").unwrap(), Level::Debug);
+        assert_eq!(Level::parse("INFO").unwrap(), Level::Info);
+        assert_eq!(Level::parse(" warn ").unwrap(), Level::Warn);
+        assert_eq!(Level::parse("warning").unwrap(), Level::Warn);
+        assert_eq!(Level::parse("error").unwrap(), Level::Error);
+        assert!(Level::parse("trace").is_err());
     }
 
     #[test]

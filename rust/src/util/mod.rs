@@ -4,12 +4,13 @@
 //! so each of these replaces a crate a production project would normally
 //! pull in: rng≈`rand`, json≈`serde_json`, cli≈`clap`, pool≈`rayon`,
 //! prop≈`proptest`, stats+bench≈`criterion`, log≈`tracing`,
-//! f16≈`half`, simd≈`wide`.
+//! obs≈`tracing-chrome`+`perfetto`, f16≈`half`, simd≈`wide`.
 
 pub mod cli;
 pub mod f16;
 pub mod json;
 pub mod log;
+pub mod obs;
 pub mod pool;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,984 @@
+//! obs — span tracing + structured telemetry substrate (≈`tracing`+perfetto).
+//!
+//! Three independent facilities behind one module:
+//!
+//! 1. **Span recorder**: per-thread lock-free ring buffers of
+//!    `{name, category, tid, t_start_ns, t_end_ns, args}` spans plus
+//!    instant events and counters, registered process-wide and drained
+//!    into Chrome trace-event JSON (`chrome://tracing` / Perfetto) via
+//!    [`crate::util::json`]. When tracing is disabled the whole hot path
+//!    is a branch on one relaxed atomic — [`span`] neither reads the
+//!    clock nor touches thread-local state (cost asserted by the
+//!    `native_perf` bench and gated by `bench_gate.py`).
+//!
+//! 2. **Overlap accountant** ([`overlap`]): post-processes a drained
+//!    trace into the numbers behind Alg. 3's claim that K-FAC
+//!    communication hides behind compute — comm/compute span unions,
+//!    the hidden fraction |comm ∩ compute| / |comm|, per-name span sums
+//!    and a critical-path estimate |comm ∪ compute|. Exported as the
+//!    `obs` dimension of `BENCH_native.json` (schema/5).
+//!
+//! 3. **JSONL event stream**: machine-readable dist-layer telemetry
+//!    (`spngd-events/1`, one JSON object per line) behind
+//!    `--events-out` / `SPNGD_EVENTS` — membership transitions, deaths,
+//!    respawns, fault injections, poison. [`parse_line`] is
+//!    parse-or-skip: any malformed line yields `None`, never a panic,
+//!    so log processors survive truncation and interleaved garbage.
+//!
+//! Tracing and the event stream are process-global switches: recording
+//! never perturbs the training computation itself (spans only read the
+//! monotonic clock), which the `tracing_is_bitwise_neutral` tests pin
+//! across all three dist engines.
+
+use std::cell::UnsafeCell;
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+use std::mem::MaybeUninit;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::{obj, Json};
+
+// ---------------------------------------------------------------------------
+// clock
+// ---------------------------------------------------------------------------
+
+fn epoch() -> &'static Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the process-wide trace epoch (first obs use).
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+// ---------------------------------------------------------------------------
+// span recorder
+// ---------------------------------------------------------------------------
+
+/// Span category — becomes the Chrome `cat` field and drives the
+/// overlap accountant's comm/compute classification.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Cat {
+    /// Enclosing step/stage phases (excluded from overlap math).
+    Phase,
+    /// Forward/backward/factor/inverse math.
+    Compute,
+    /// Collective segments: publish/wait/reduce/drain.
+    Comm,
+    /// Wire serialization: quantize/encode/decode.
+    Wire,
+    /// Data pipeline: batch prep and prefetch wait.
+    Data,
+    /// Thread-pool internals (`parallel_for` scopes).
+    Pool,
+}
+
+impl Cat {
+    pub fn name(self) -> &'static str {
+        match self {
+            Cat::Phase => "phase",
+            Cat::Compute => "compute",
+            Cat::Comm => "comm",
+            Cat::Wire => "wire",
+            Cat::Data => "data",
+            Cat::Pool => "pool",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Cat> {
+        Some(match s {
+            "phase" => Cat::Phase,
+            "compute" => Cat::Compute,
+            "comm" => Cat::Comm,
+            "wire" => Cat::Wire,
+            "data" => Cat::Data,
+            "pool" => Cat::Pool,
+            _ => return None,
+        })
+    }
+
+    /// Does this category count as communication in the overlap math?
+    /// Wire serialization rides the comm lane: it only exists to move
+    /// bytes and serializes with the collective it feeds.
+    pub fn is_comm(self) -> bool {
+        matches!(self, Cat::Comm | Cat::Wire)
+    }
+
+    /// Does this category count as compute in the overlap math? Phases
+    /// are excluded — they *enclose* both kinds and would double-count.
+    pub fn is_compute(self) -> bool {
+        matches!(self, Cat::Compute | Cat::Data | Cat::Pool)
+    }
+}
+
+/// One recorded event. `arg` is a single optional numeric payload
+/// (layer index, byte count, lane id …) — enough to label spans without
+/// allocating on the hot path.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    Span { name: &'static str, cat: Cat, t0_ns: u64, t1_ns: u64, arg: Option<(&'static str, f64)> },
+    Instant { name: &'static str, cat: Cat, t_ns: u64 },
+    Counter { name: &'static str, t_ns: u64, value: f64 },
+}
+
+impl Event {
+    fn t_sort(&self) -> u64 {
+        match self {
+            Event::Span { t0_ns, .. } => *t0_ns,
+            Event::Instant { t_ns, .. } | Event::Counter { t_ns, .. } => *t_ns,
+        }
+    }
+}
+
+/// Default per-thread ring capacity (events). Override with
+/// `SPNGD_TRACE_BUF`; invalid values are a hard error at first use,
+/// matching the repo's env-var convention.
+const DEFAULT_BUF: usize = 16_384;
+
+fn buf_capacity() -> usize {
+    static CAP: OnceLock<usize> = OnceLock::new();
+    *CAP.get_or_init(|| match std::env::var("SPNGD_TRACE_BUF") {
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) if n >= 16 => n,
+            _ => panic!("SPNGD_TRACE_BUF must be an integer >= 16, got '{v}'"),
+        },
+        Err(_) => DEFAULT_BUF,
+    })
+}
+
+/// SPSC ring buffer: the owning thread writes, [`drain`] (serialized by
+/// the registry lock) reads. Head/tail are monotonically increasing
+/// event counts; slot index is `count % capacity`. On overflow the
+/// newest event is dropped and counted — recording must never block the
+/// training step.
+struct RingBuf {
+    tid: u64,
+    thread_name: String,
+    slots: Box<[UnsafeCell<MaybeUninit<Event>>]>,
+    head: AtomicU64,
+    tail: AtomicU64,
+    dropped: AtomicU64,
+}
+
+// SAFETY: single-writer (owner thread via thread-local), single-reader
+// (drain holds the registry mutex); head/tail Acquire/Release ordering
+// publishes slot contents between them.
+unsafe impl Sync for RingBuf {}
+unsafe impl Send for RingBuf {}
+
+impl RingBuf {
+    fn new(tid: u64, thread_name: String) -> RingBuf {
+        let cap = buf_capacity();
+        let slots = (0..cap).map(|_| UnsafeCell::new(MaybeUninit::uninit())).collect();
+        RingBuf {
+            tid,
+            thread_name,
+            slots,
+            head: AtomicU64::new(0),
+            tail: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Owner-thread only.
+    fn push(&self, ev: Event) {
+        let head = self.head.load(Ordering::Relaxed);
+        let tail = self.tail.load(Ordering::Acquire);
+        if head - tail >= self.slots.len() as u64 {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let idx = (head % self.slots.len() as u64) as usize;
+        // SAFETY: slot `idx` is outside [tail, head) so the drainer will
+        // not read it until the Release store below publishes it.
+        unsafe { (*self.slots[idx].get()).write(ev) };
+        self.head.store(head + 1, Ordering::Release);
+    }
+
+    /// Drainer only (registry lock held).
+    fn drain_into(&self, out: &mut Vec<(u64, Event)>) {
+        let head = self.head.load(Ordering::Acquire);
+        let mut tail = self.tail.load(Ordering::Relaxed);
+        while tail < head {
+            let idx = (tail % self.slots.len() as u64) as usize;
+            // SAFETY: [tail, head) slots are initialized and not touched
+            // by the writer until tail advances past them.
+            let ev = unsafe { (*self.slots[idx].get()).assume_init_read() };
+            out.push((self.tid, ev));
+            tail += 1;
+        }
+        self.tail.store(tail, Ordering::Release);
+    }
+}
+
+struct Registry {
+    bufs: Vec<Arc<RingBuf>>,
+    next_tid: u64,
+}
+
+fn registry() -> &'static Mutex<Registry> {
+    static REG: OnceLock<Mutex<Registry>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Registry { bufs: Vec::new(), next_tid: 0 }))
+}
+
+thread_local! {
+    static LOCAL_BUF: UnsafeCell<Option<Arc<RingBuf>>> = const { UnsafeCell::new(None) };
+}
+
+/// The calling thread's ring buffer, registering one on first use. The
+/// registry keeps an `Arc` so events from exited threads (scoped
+/// workers) survive until the next drain.
+fn local_buf<R>(f: impl FnOnce(&RingBuf) -> R) -> R {
+    LOCAL_BUF.with(|cell| {
+        // SAFETY: thread-local, single-threaded access by construction.
+        let slot = unsafe { &mut *cell.get() };
+        if slot.is_none() {
+            let mut reg = registry().lock().unwrap();
+            let tid = reg.next_tid;
+            reg.next_tid += 1;
+            let name = std::thread::current().name().unwrap_or("unnamed").to_string();
+            let buf = Arc::new(RingBuf::new(tid, name));
+            reg.bufs.push(buf.clone());
+            *slot = Some(buf);
+        }
+        f(slot.as_ref().unwrap())
+    })
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is span recording on? One relaxed atomic load — the entire disabled
+/// cost of every instrumentation point.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn span recording on/off (tests and the bench use this directly;
+/// production runs go through [`set_trace_path`] / [`init_from_env`]).
+pub fn set_enabled(on: bool) {
+    if on {
+        // pin the epoch before the first span so timestamps stay small
+        let _ = epoch();
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// RAII span: records `{t_construct, t_drop}` on drop when tracing was
+/// enabled at construction. When disabled, construction is the
+/// [`enabled`] branch and nothing else.
+pub struct SpanGuard {
+    name: &'static str,
+    cat: Cat,
+    t0_ns: u64,
+    arg: Option<(&'static str, f64)>,
+    armed: bool,
+}
+
+impl SpanGuard {
+    /// Attach a numeric argument (layer index, bytes, …) to the span.
+    pub fn arg(mut self, key: &'static str, value: f64) -> SpanGuard {
+        if self.armed {
+            self.arg = Some((key, value));
+        }
+        self
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            let t1 = now_ns();
+            local_buf(|b| {
+                b.push(Event::Span {
+                    name: self.name,
+                    cat: self.cat,
+                    t0_ns: self.t0_ns,
+                    t1_ns: t1,
+                    arg: self.arg,
+                })
+            });
+        }
+    }
+}
+
+/// Open a span; it closes (and records) when the guard drops.
+#[inline]
+pub fn span(name: &'static str, cat: Cat) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { name, cat, t0_ns: 0, arg: None, armed: false };
+    }
+    SpanGuard { name, cat, t0_ns: now_ns(), arg: None, armed: true }
+}
+
+/// Record an instant event (a point in time, no duration).
+#[inline]
+pub fn instant(name: &'static str, cat: Cat) {
+    if !enabled() {
+        return;
+    }
+    let t = now_ns();
+    local_buf(|b| b.push(Event::Instant { name, cat, t_ns: t }));
+}
+
+/// Record a counter sample (rendered as a track in Perfetto).
+#[inline]
+pub fn counter(name: &'static str, value: f64) {
+    if !enabled() {
+        return;
+    }
+    let t = now_ns();
+    local_buf(|b| b.push(Event::Counter { name, t_ns: t, value }));
+}
+
+// ---------------------------------------------------------------------------
+// drain + Chrome trace export
+// ---------------------------------------------------------------------------
+
+/// A drained trace: every event recorded since the last drain, plus the
+/// thread table and the total number of events dropped to ring overflow.
+#[derive(Debug, Default)]
+pub struct Trace {
+    /// `(tid, event)` pairs, sorted by start time.
+    pub events: Vec<(u64, Event)>,
+    /// `tid -> thread name` (name captured at first event on the thread).
+    pub threads: BTreeMap<u64, String>,
+    /// Events lost to ring-buffer overflow (cumulative per drain).
+    pub dropped: u64,
+}
+
+impl Trace {
+    /// Spans only, as `(tid, name, cat, t0_ns, t1_ns)` tuples.
+    pub fn spans(&self) -> impl Iterator<Item = (u64, &'static str, Cat, u64, u64)> + '_ {
+        self.events.iter().filter_map(|(tid, ev)| match ev {
+            Event::Span { name, cat, t0_ns, t1_ns, .. } => Some((*tid, *name, *cat, *t0_ns, *t1_ns)),
+            _ => None,
+        })
+    }
+
+    /// Serialize to the Chrome trace-event JSON object format
+    /// (`{"traceEvents": [...]}`) — loadable by `chrome://tracing` and
+    /// Perfetto. Spans become `ph:"X"` complete events, instants
+    /// `ph:"i"`, counters `ph:"C"`; every thread gets a `thread_name`
+    /// metadata event so lanes are labeled. Timestamps are microseconds
+    /// (fractional, preserving ns).
+    pub fn to_chrome_json(&self) -> Json {
+        let pid = std::process::id() as usize;
+        let mut evs: Vec<Json> = Vec::with_capacity(self.events.len() + self.threads.len());
+        for (tid, name) in &self.threads {
+            evs.push(obj(vec![
+                ("ph", Json::from("M")),
+                ("name", Json::from("thread_name")),
+                ("pid", Json::from(pid)),
+                ("tid", Json::from(*tid as usize)),
+                ("args", obj(vec![("name", Json::from(name.clone()))])),
+            ]));
+        }
+        for (tid, ev) in &self.events {
+            let tid = *tid as usize;
+            match ev {
+                Event::Span { name, cat, t0_ns, t1_ns, arg } => {
+                    let mut fields = vec![
+                        ("ph", Json::from("X")),
+                        ("name", Json::from(*name)),
+                        ("cat", Json::from(cat.name())),
+                        ("pid", Json::from(pid)),
+                        ("tid", Json::from(tid)),
+                        ("ts", Json::from(*t0_ns as f64 / 1e3)),
+                        ("dur", Json::from(t1_ns.saturating_sub(*t0_ns) as f64 / 1e3)),
+                    ];
+                    if let Some((k, v)) = arg {
+                        fields.push(("args", obj(vec![(*k, Json::from(*v))])));
+                    }
+                    evs.push(obj(fields));
+                }
+                Event::Instant { name, cat, t_ns } => {
+                    evs.push(obj(vec![
+                        ("ph", Json::from("i")),
+                        ("name", Json::from(*name)),
+                        ("cat", Json::from(cat.name())),
+                        ("pid", Json::from(pid)),
+                        ("tid", Json::from(tid)),
+                        ("ts", Json::from(*t_ns as f64 / 1e3)),
+                        ("s", Json::from("t")),
+                    ]));
+                }
+                Event::Counter { name, t_ns, value } => {
+                    evs.push(obj(vec![
+                        ("ph", Json::from("C")),
+                        ("name", Json::from(*name)),
+                        ("pid", Json::from(pid)),
+                        ("tid", Json::from(tid)),
+                        ("ts", Json::from(*t_ns as f64 / 1e3)),
+                        ("args", obj(vec![("value", Json::from(*value))])),
+                    ]));
+                }
+            }
+        }
+        obj(vec![
+            ("traceEvents", Json::Arr(evs)),
+            ("displayTimeUnit", Json::from("ms")),
+            ("otherData", obj(vec![("dropped", Json::from(self.dropped as usize))])),
+        ])
+    }
+}
+
+/// Drain every registered ring buffer into one time-sorted [`Trace`].
+/// Spans still open (guards not yet dropped) are not included — drain at
+/// quiescent points (end of run, between steps).
+pub fn drain() -> Trace {
+    let reg = registry().lock().unwrap();
+    let mut tr = Trace::default();
+    for buf in &reg.bufs {
+        buf.drain_into(&mut tr.events);
+        tr.dropped += buf.dropped.swap(0, Ordering::Relaxed);
+        tr.threads.entry(buf.tid).or_insert_with(|| buf.thread_name.clone());
+    }
+    tr.events.sort_by_key(|(tid, ev)| (ev.t_sort(), *tid));
+    tr
+}
+
+static TRACE_PATH: Mutex<Option<PathBuf>> = Mutex::new(None);
+
+/// Enable tracing and remember where [`flush_trace`] should write.
+pub fn set_trace_path(path: &Path) {
+    *TRACE_PATH.lock().unwrap() = Some(path.to_path_buf());
+    set_enabled(true);
+}
+
+/// Drain and write the Chrome trace to the configured path, if any.
+/// Returns the path written. Call at the end of a run.
+pub fn flush_trace() -> std::io::Result<Option<PathBuf>> {
+    let path = TRACE_PATH.lock().unwrap().clone();
+    let Some(path) = path else { return Ok(None) };
+    let trace = drain();
+    std::fs::write(&path, trace.to_chrome_json().to_string())?;
+    Ok(Some(path))
+}
+
+// ---------------------------------------------------------------------------
+// overlap accountant
+// ---------------------------------------------------------------------------
+
+/// Overlap accounting over one drained trace — the measured form of the
+/// paper's Alg. 3 overlap claim.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Overlap {
+    /// Union length of all comm-category span intervals (ns).
+    pub comm_ns: u64,
+    /// Union length of all compute-category span intervals (ns).
+    pub compute_ns: u64,
+    /// |comm ∩ compute|: comm wall time overlapped by compute (ns).
+    pub hidden_ns: u64,
+    /// `hidden_ns / comm_ns` (0 when there was no comm).
+    pub hidden_fraction: f64,
+    /// |comm ∪ compute|: a critical-path estimate — the minimal wall
+    /// time if every hideable byte were hidden (ns).
+    pub critical_path_ns: u64,
+    /// Total span duration summed per span name (ns) — per-stage costs.
+    pub by_name: BTreeMap<&'static str, u64>,
+}
+
+/// Merge (possibly overlapping, unsorted) intervals into a sorted
+/// disjoint union.
+fn interval_union(mut iv: Vec<(u64, u64)>) -> Vec<(u64, u64)> {
+    iv.retain(|(a, b)| b > a);
+    iv.sort_unstable();
+    let mut out: Vec<(u64, u64)> = Vec::with_capacity(iv.len());
+    for (a, b) in iv {
+        match out.last_mut() {
+            Some((_, e)) if a <= *e => *e = (*e).max(b),
+            _ => out.push((a, b)),
+        }
+    }
+    out
+}
+
+fn union_len(iv: &[(u64, u64)]) -> u64 {
+    iv.iter().map(|(a, b)| b - a).sum()
+}
+
+/// Length of the intersection of two sorted disjoint interval lists.
+fn intersection_len(xs: &[(u64, u64)], ys: &[(u64, u64)]) -> u64 {
+    let (mut i, mut j, mut total) = (0, 0, 0u64);
+    while i < xs.len() && j < ys.len() {
+        let lo = xs[i].0.max(ys[j].0);
+        let hi = xs[i].1.min(ys[j].1);
+        if hi > lo {
+            total += hi - lo;
+        }
+        if xs[i].1 < ys[j].1 {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    total
+}
+
+/// Post-process a trace into overlap numbers. Comm = `Cat::{Comm,Wire}`
+/// spans; compute = `Cat::{Compute,Data,Pool}` spans; `Cat::Phase`
+/// spans enclose both and are excluded from the interval math (they
+/// still appear in `by_name`).
+pub fn overlap(trace: &Trace) -> Overlap {
+    let mut comm_iv = Vec::new();
+    let mut compute_iv = Vec::new();
+    let mut by_name: BTreeMap<&'static str, u64> = BTreeMap::new();
+    for (_tid, name, cat, t0, t1) in trace.spans() {
+        *by_name.entry(name).or_insert(0) += t1.saturating_sub(t0);
+        if cat.is_comm() {
+            comm_iv.push((t0, t1));
+        } else if cat.is_compute() {
+            compute_iv.push((t0, t1));
+        }
+    }
+    let comm = interval_union(comm_iv);
+    let compute = interval_union(compute_iv);
+    let comm_ns = union_len(&comm);
+    let compute_ns = union_len(&compute);
+    let hidden_ns = intersection_len(&comm, &compute);
+    let mut all = comm.clone();
+    all.extend_from_slice(&compute);
+    let critical_path_ns = union_len(&interval_union(all));
+    Overlap {
+        comm_ns,
+        compute_ns,
+        hidden_ns,
+        hidden_fraction: if comm_ns == 0 { 0.0 } else { hidden_ns as f64 / comm_ns as f64 },
+        critical_path_ns,
+        by_name,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSONL event stream
+// ---------------------------------------------------------------------------
+
+/// Schema tag stamped on every emitted event line.
+pub const EVENT_SCHEMA: &str = "spngd-events/1";
+
+static EVENTS_ON: AtomicBool = AtomicBool::new(false);
+static EVENT_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+fn event_sink() -> &'static Mutex<Option<BufWriter<File>>> {
+    static SINK: OnceLock<Mutex<Option<BufWriter<File>>>> = OnceLock::new();
+    SINK.get_or_init(|| Mutex::new(None))
+}
+
+/// Is the JSONL event stream on? Same relaxed-atomic discipline as
+/// [`enabled`].
+#[inline(always)]
+pub fn events_enabled() -> bool {
+    EVENTS_ON.load(Ordering::Relaxed)
+}
+
+/// Open (truncating) the JSONL event sink at `path` and enable emission.
+pub fn set_events_path(path: &Path) -> std::io::Result<()> {
+    let f = File::create(path)?;
+    *event_sink().lock().unwrap() = Some(BufWriter::new(f));
+    let _ = epoch();
+    EVENTS_ON.store(true, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Close the event sink and disable emission (flushes pending lines).
+pub fn close_events() {
+    EVENTS_ON.store(false, Ordering::Relaxed);
+    if let Some(mut w) = event_sink().lock().unwrap().take() {
+        let _ = w.flush();
+    }
+}
+
+/// Emit one structured event line: `{"schema":"spngd-events/1",
+/// "seq":N, "t":secs, "kind":kind, ...fields}`. Each line is flushed so
+/// the stream survives a crash of the emitting process — it is the
+/// source of truth for dist-layer assertions.
+pub fn emit(kind: &str, fields: Vec<(&str, Json)>) {
+    if !events_enabled() {
+        return;
+    }
+    let seq = EVENT_SEQ.fetch_add(1, Ordering::Relaxed);
+    let t = now_ns() as f64 / 1e9;
+    let mut pairs = vec![
+        ("schema", Json::from(EVENT_SCHEMA)),
+        ("seq", Json::from(seq)),
+        ("t", Json::from(t)),
+        ("kind", Json::from(kind)),
+    ];
+    pairs.extend(fields);
+    let line = obj(pairs).to_string();
+    let mut guard = event_sink().lock().unwrap();
+    if let Some(w) = guard.as_mut() {
+        let _ = writeln!(w, "{line}");
+        let _ = w.flush();
+    }
+}
+
+/// One parsed event line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EventRec {
+    pub seq: usize,
+    pub t: f64,
+    pub kind: String,
+    pub fields: BTreeMap<String, Json>,
+}
+
+impl EventRec {
+    /// Field accessor (`Json::Null` for missing keys).
+    pub fn get(&self, key: &str) -> &Json {
+        static NULL: Json = Json::Null;
+        self.fields.get(key).unwrap_or(&NULL)
+    }
+}
+
+/// Parse one JSONL event line. **Parse-or-skip**: returns `None` on
+/// malformed JSON, wrong/missing schema tag, missing `kind`/`t`, or an
+/// oversized line (> 1 MiB — a corrupt stream, not a real event). Never
+/// panics on any byte input (fuzzed in `tests/fuzz_smoke.rs`).
+pub fn parse_line(line: &str) -> Option<EventRec> {
+    let line = line.trim();
+    if line.is_empty() || line.len() > 1 << 20 {
+        return None;
+    }
+    let v = Json::parse(line).ok()?;
+    let o = v.as_obj()?;
+    if v.get("schema").as_str() != Some(EVENT_SCHEMA) {
+        return None;
+    }
+    let kind = v.get("kind").as_str()?.to_string();
+    let t = v.get("t").as_f64()?;
+    let seq = v.get("seq").as_usize().unwrap_or(0);
+    let mut fields = o.clone();
+    for k in ["schema", "seq", "t", "kind"] {
+        fields.remove(k);
+    }
+    Some(EventRec { seq, t, kind, fields })
+}
+
+/// Read every well-formed event from a JSONL file, skipping garbage
+/// lines silently.
+pub fn read_events(path: &Path) -> std::io::Result<Vec<EventRec>> {
+    let text = std::fs::read_to_string(path)?;
+    Ok(text.lines().filter_map(parse_line).collect())
+}
+
+// ---------------------------------------------------------------------------
+// env wiring
+// ---------------------------------------------------------------------------
+
+/// One-shot env wiring: `SPNGD_TRACE=PATH` enables span recording with
+/// the trace written to PATH at [`flush_trace`]; `SPNGD_EVENTS=PATH`
+/// opens the JSONL event sink. Idempotent; called from every trainer
+/// construction so examples/benches/tests pick the switches up without
+/// plumbing.
+pub fn init_from_env() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        if let Ok(p) = std::env::var("SPNGD_TRACE") {
+            // an explicit --trace-out already set a path: the flag wins
+            if !p.trim().is_empty() && TRACE_PATH.lock().unwrap().is_none() {
+                set_trace_path(Path::new(p.trim()));
+            }
+        }
+        if let Ok(p) = std::env::var("SPNGD_EVENTS") {
+            if !p.trim().is_empty() && !events_enabled() {
+                set_events_path(Path::new(p.trim()))
+                    .unwrap_or_else(|e| panic!("SPNGD_EVENTS='{p}': cannot open sink: {e}"));
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tracing state is process-global; tests that toggle it serialize
+    /// here so `cargo test`'s parallel runner can't interleave drains.
+    pub(crate) fn trace_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_span_records_nothing() {
+        let _g = trace_lock();
+        set_enabled(false);
+        drop(drain());
+        {
+            let _s = span("never", Cat::Compute).arg("x", 1.0);
+        }
+        instant("never_i", Cat::Comm);
+        counter("never_c", 3.0);
+        // other (non-obs) tests may run concurrently and close spans
+        // they opened while tracing was on, so assert on our names only
+        let ours = drain().events.iter().any(|(_, e)| {
+            matches!(
+                e,
+                Event::Span { name: "never", .. }
+                    | Event::Instant { name: "never_i", .. }
+                    | Event::Counter { name: "never_c", .. }
+            )
+        });
+        assert!(!ours);
+    }
+
+    #[test]
+    fn span_roundtrip_and_ordering() {
+        let _g = trace_lock();
+        set_enabled(true);
+        drop(drain());
+        {
+            let _outer = span("outer", Cat::Phase);
+            {
+                let _inner = span("inner", Cat::Compute).arg("layer", 3.0);
+            }
+            instant("mark", Cat::Comm);
+        }
+        set_enabled(false);
+        let tr = drain();
+        let names: Vec<&str> = tr
+            .events
+            .iter()
+            .map(|(_, e)| match e {
+                Event::Span { name, .. } => *name,
+                Event::Instant { name, .. } => *name,
+                Event::Counter { name, .. } => *name,
+            })
+            .collect();
+        // sorted by start time: outer opened first but closes last —
+        // inner records first; the sort is on t_start
+        assert!(names.contains(&"outer") && names.contains(&"inner") && names.contains(&"mark"));
+        for (tid, ev) in &tr.events {
+            assert!(tr.threads.contains_key(tid));
+            if let Event::Span { t0_ns, t1_ns, .. } = ev {
+                assert!(t1_ns >= t0_ns);
+            }
+        }
+        // events sorted by start time
+        let ts: Vec<u64> = tr.events.iter().map(|(_, e)| e.t_sort()).collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]));
+        let outer = tr
+            .events
+            .iter()
+            .find_map(|(_, e)| match e {
+                Event::Span { name: "outer", t0_ns, t1_ns, .. } => Some((*t0_ns, *t1_ns)),
+                _ => None,
+            })
+            .unwrap();
+        let inner = tr
+            .events
+            .iter()
+            .find_map(|(_, e)| match e {
+                Event::Span { name: "inner", t0_ns, t1_ns, arg } => {
+                    assert_eq!(*arg, Some(("layer", 3.0)));
+                    Some((*t0_ns, *t1_ns))
+                }
+                _ => None,
+            })
+            .unwrap();
+        assert!(outer.0 <= inner.0 && inner.1 <= outer.1, "inner nests in outer");
+    }
+
+    #[test]
+    fn ring_overflow_drops_newest_and_counts() {
+        let _g = trace_lock();
+        set_enabled(true);
+        drop(drain());
+        let cap = buf_capacity();
+        for _ in 0..cap + 100 {
+            instant("flood", Cat::Compute);
+        }
+        set_enabled(false);
+        let tr = drain();
+        let flood = tr
+            .events
+            .iter()
+            .filter(|(_, e)| matches!(e, Event::Instant { name: "flood", .. }))
+            .count();
+        assert!(flood <= cap);
+        assert!(tr.dropped >= 100);
+        // buffer drains clean: no flood events remain for a second drain
+        let leftover = drain()
+            .events
+            .iter()
+            .filter(|(_, e)| matches!(e, Event::Instant { name: "flood", .. }))
+            .count();
+        assert_eq!(leftover, 0);
+    }
+
+    #[test]
+    fn chrome_json_shape() {
+        let tr = Trace {
+            events: vec![
+                (0, Event::Span { name: "s", cat: Cat::Comm, t0_ns: 1000, t1_ns: 2500, arg: Some(("bytes", 64.0)) }),
+                (0, Event::Instant { name: "i", cat: Cat::Phase, t_ns: 1500 }),
+                (1, Event::Counter { name: "c", t_ns: 1700, value: 2.0 }),
+            ],
+            threads: BTreeMap::from([(0, "main".to_string()), (1, "spngd-pool-0".to_string())]),
+            dropped: 0,
+        };
+        let j = tr.to_chrome_json();
+        let evs = j.get("traceEvents").as_arr().unwrap();
+        assert_eq!(evs.len(), 5); // 2 thread_name metadata + 3 events
+        let meta: Vec<_> =
+            evs.iter().filter(|e| e.get("ph").as_str() == Some("M")).collect();
+        assert_eq!(meta.len(), 2);
+        assert_eq!(meta[0].get("name").as_str(), Some("thread_name"));
+        let x = evs.iter().find(|e| e.get("ph").as_str() == Some("X")).unwrap();
+        assert_eq!(x.get("ts").as_f64(), Some(1.0)); // µs
+        assert_eq!(x.get("dur").as_f64(), Some(1.5));
+        assert_eq!(x.get("cat").as_str(), Some("comm"));
+        assert_eq!(x.get("args").get("bytes").as_f64(), Some(64.0));
+        // reparse: the writer emits valid JSON
+        let reparsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(reparsed.get("traceEvents").as_arr().unwrap().len(), 5);
+    }
+
+    fn mk_trace(spans: Vec<(Cat, u64, u64)>) -> Trace {
+        Trace {
+            events: spans
+                .into_iter()
+                .map(|(cat, a, b)| {
+                    (0, Event::Span { name: "s", cat, t0_ns: a, t1_ns: b, arg: None })
+                })
+                .collect(),
+            threads: BTreeMap::new(),
+            dropped: 0,
+        }
+    }
+
+    #[test]
+    fn overlap_fully_hidden() {
+        // comm [10,20) entirely inside compute [0,100): hidden = 1.0
+        let o = overlap(&mk_trace(vec![(Cat::Comm, 10, 20), (Cat::Compute, 0, 100)]));
+        assert_eq!(o.comm_ns, 10);
+        assert_eq!(o.compute_ns, 100);
+        assert_eq!(o.hidden_ns, 10);
+        assert_eq!(o.hidden_fraction, 1.0);
+        assert_eq!(o.critical_path_ns, 100);
+    }
+
+    #[test]
+    fn overlap_fully_serial() {
+        // comm [100,150) strictly after compute [0,100): hidden = 0
+        let o = overlap(&mk_trace(vec![(Cat::Comm, 100, 150), (Cat::Compute, 0, 100)]));
+        assert_eq!(o.hidden_ns, 0);
+        assert_eq!(o.hidden_fraction, 0.0);
+        assert_eq!(o.critical_path_ns, 150);
+    }
+
+    #[test]
+    fn overlap_partial_exact() {
+        // comm [50,150), compute [0,100): overlap [50,100) = 50 of 100 comm
+        let o = overlap(&mk_trace(vec![(Cat::Comm, 50, 150), (Cat::Compute, 0, 100)]));
+        assert_eq!(o.comm_ns, 100);
+        assert_eq!(o.hidden_ns, 50);
+        assert_eq!(o.hidden_fraction, 0.5);
+        assert_eq!(o.critical_path_ns, 150);
+    }
+
+    #[test]
+    fn overlap_unions_before_intersecting() {
+        // two overlapping comm spans union to [0,30); wire counts as comm;
+        // phase spans are ignored; two compute spans union to [10,40)
+        let o = overlap(&mk_trace(vec![
+            (Cat::Comm, 0, 20),
+            (Cat::Wire, 10, 30),
+            (Cat::Phase, 0, 1000),
+            (Cat::Compute, 10, 25),
+            (Cat::Pool, 20, 40),
+        ]));
+        assert_eq!(o.comm_ns, 30);
+        assert_eq!(o.compute_ns, 30);
+        assert_eq!(o.hidden_ns, 20); // [10,30)
+        assert!((o.hidden_fraction - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(o.critical_path_ns, 40);
+        assert_eq!(o.by_name["s"], 20 + 20 + 1000 + 15 + 20);
+    }
+
+    #[test]
+    fn overlap_empty_and_degenerate() {
+        let o = overlap(&mk_trace(vec![]));
+        assert_eq!(o.hidden_fraction, 0.0);
+        assert_eq!(o.critical_path_ns, 0);
+        // zero-length spans are dropped from interval math
+        let o = overlap(&mk_trace(vec![(Cat::Comm, 5, 5), (Cat::Compute, 1, 2)]));
+        assert_eq!(o.comm_ns, 0);
+        assert_eq!(o.hidden_fraction, 0.0);
+    }
+
+    #[test]
+    fn event_line_roundtrip() {
+        let line = format!(
+            r#"{{"schema":"{EVENT_SCHEMA}","seq":4,"t":1.25,"kind":"dead","rank":1,"reason":"checksum"}}"#
+        );
+        let ev = parse_line(&line).unwrap();
+        assert_eq!(ev.kind, "dead");
+        assert_eq!(ev.seq, 4);
+        assert_eq!(ev.t, 1.25);
+        assert_eq!(ev.get("rank").as_usize(), Some(1));
+        assert_eq!(ev.get("reason").as_str(), Some("checksum"));
+        assert_eq!(ev.get("missing"), &Json::Null);
+    }
+
+    #[test]
+    fn parse_line_skips_garbage() {
+        assert!(parse_line("").is_none());
+        assert!(parse_line("   ").is_none());
+        assert!(parse_line("{").is_none());
+        assert!(parse_line("not json at all").is_none());
+        assert!(parse_line(r#"{"schema":"other/9","kind":"x","t":0}"#).is_none());
+        assert!(parse_line(r#"{"kind":"x","t":0}"#).is_none()); // no schema
+        assert!(parse_line(&format!(r#"{{"schema":"{EVENT_SCHEMA}","t":0}}"#)).is_none()); // no kind
+        assert!(parse_line(&format!(r#"{{"schema":"{EVENT_SCHEMA}","kind":"x"}}"#)).is_none()); // no t
+        assert!(parse_line(r#"[1,2,3]"#).is_none()); // not an object
+        let huge = format!(
+            r#"{{"schema":"{EVENT_SCHEMA}","kind":"x","t":0,"blob":"{}"}}"#,
+            "a".repeat(2 << 20)
+        );
+        assert!(parse_line(&huge).is_none()); // oversized
+    }
+
+    #[test]
+    fn emit_read_events_roundtrip() {
+        let _g = trace_lock();
+        let dir = std::env::temp_dir().join(format!("spngd-obs-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("events.jsonl");
+        set_events_path(&path).unwrap();
+        emit("state", vec![("state", Json::from("Warmup")), ("step", Json::from(0usize))]);
+        emit("dead", vec![("rank", Json::from(1usize)), ("reason", Json::from("kill"))]);
+        close_events();
+        // interleave garbage between valid lines, as a crashed writer would
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.insert_str(0, "garbage line\n");
+        text.push_str("{\"trunc");
+        std::fs::write(&path, text).unwrap();
+        let evs = read_events(&path).unwrap();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].kind, "state");
+        assert_eq!(evs[0].get("state").as_str(), Some("Warmup"));
+        assert_eq!(evs[1].kind, "dead");
+        assert_eq!(evs[1].get("rank").as_usize(), Some(1));
+        assert!(evs[0].seq < evs[1].seq);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn emit_disabled_is_a_noop() {
+        let _g = trace_lock();
+        close_events();
+        emit("nope", vec![]); // must not panic with no sink
+        assert!(!events_enabled());
+    }
+}

@@ -16,6 +16,8 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
+use crate::util::obs::{self, Cat};
+
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 struct Shared {
@@ -58,9 +60,11 @@ impl Pool {
             job_panicked: AtomicBool::new(false),
         });
         let workers = (0..size)
-            .map(|_| {
+            .map(|i| {
                 let sh = shared.clone();
-                std::thread::spawn(move || {
+                std::thread::Builder::new()
+                    .name(format!("spngd-pool-{i}"))
+                    .spawn(move || {
                     IN_POOL_WORKER.with(|f| f.set(true));
                     loop {
                         let job = {
@@ -94,6 +98,7 @@ impl Pool {
                         }
                     }
                 })
+                    .expect("spawn pool worker")
             })
             .collect();
         Pool { shared, workers, size }
@@ -159,6 +164,7 @@ impl Pool {
             f(0, n);
             return;
         }
+        let _s = obs::span("parallel_for", Cat::Pool).arg("n", n as f64);
         let work = ForWork { f: &f, next: AtomicUsize::new(0), n, grain, nchunks };
         let helpers = self.size.min(nchunks - 1);
         let latch = Arc::new(Latch::new(helpers));
@@ -342,14 +348,17 @@ where
     let threads = threads.max(1).min(n.max(1));
     let next = AtomicUsize::new(0);
     std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    return;
-                }
-                f(i);
-            });
+        for t in 0..threads {
+            std::thread::Builder::new()
+                .name(format!("spngd-scoped-{t}"))
+                .spawn_scoped(s, || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        return;
+                    }
+                    f(i);
+                })
+                .expect("spawn scoped worker");
         }
     });
 }
@@ -366,15 +375,18 @@ where
         let next = AtomicUsize::new(0);
         let threads = threads.max(1).min(n.max(1));
         std::thread::scope(|s| {
-            for _ in 0..threads {
-                s.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        return;
-                    }
-                    let v = f(i);
-                    **slots[i].lock().unwrap() = Some(v);
-                });
+            for t in 0..threads {
+                std::thread::Builder::new()
+                    .name(format!("spngd-scoped-{t}"))
+                    .spawn_scoped(s, || loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            return;
+                        }
+                        let v = f(i);
+                        **slots[i].lock().unwrap() = Some(v);
+                    })
+                    .expect("spawn scoped worker");
             }
         });
     }

@@ -22,6 +22,7 @@ use spngd::coordinator::{DistMode, Trainer, TrainerBuilder};
 use spngd::dist::{FaultPlan, MemberEvent, ProcCfg, ProcComm, RespawnPolicy};
 use spngd::linalg::Mat;
 use spngd::optim::{self, HyperParams, Preconditioner};
+use spngd::util::obs;
 
 /// Same run shape as `tests/dist_engine.rs` — W=1 sequential runs of
 /// this builder are the ground truth the proc engine must reproduce.
@@ -358,6 +359,60 @@ fn corrupt_fault_is_detected_by_checksum() {
     assert_eq!(dead.len(), 1, "{events:?}");
     assert!(dead[0].2.contains("checksum"), "wrong diagnostic: {}", dead[0].2);
     assert_eq!(respawned_ranks(&events), vec![0], "{events:?}");
+}
+
+/// The JSONL event stream is the machine-readable source of truth for
+/// membership transitions: with a sink configured, a killed worker must
+/// appear as a parseable `dead` record followed (in `seq` order) by a
+/// `respawned` record for the same rank, and the armed fault plan must
+/// be on the stream. The sink is process-global, so concurrent tests in
+/// this binary may interleave their own records — every assertion here
+/// filters on this test's unique (step=3, rank=1) fault coordinates.
+#[test]
+fn kill_fault_streams_dead_then_respawned_jsonl() {
+    let path = std::env::temp_dir()
+        .join(format!("spngd_dist_events_{}.jsonl", std::process::id()));
+    obs::set_events_path(&path).unwrap();
+    let mut cfg = proc_cfg();
+    cfg.fault_plan = FaultPlan::parse("kill:3:1").unwrap();
+    let mut seq = base_builder("mlp", optim::spngd()).build().unwrap();
+    let mut proc = proc_builder("mlp", cfg).build().unwrap();
+    assert_step_parity(&mut seq, &mut proc, 5, "jsonl-kill");
+    obs::close_events();
+
+    // every non-empty line must parse under the stable schema
+    let text = std::fs::read_to_string(&path).unwrap();
+    let recs: Vec<_> = text
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| obs::parse_line(l).unwrap_or_else(|| panic!("unparseable event line: {l}")))
+        .collect();
+    assert!(!recs.is_empty(), "the run streamed no events");
+
+    let plan = recs
+        .iter()
+        .find(|r| r.kind == "fault_plan" && r.get("plan").as_str() == Some("kill:3:1"))
+        .expect("armed fault plan must be announced on the stream");
+    assert_eq!(plan.get("world").as_usize(), Some(2));
+    let dead = recs
+        .iter()
+        .find(|r| {
+            r.kind == "dead"
+                && r.get("rank").as_usize() == Some(1)
+                && r.get("step").as_usize() == Some(3)
+        })
+        .expect("kill:3:1 must stream a dead record for rank 1 at step 3");
+    assert!(dead.get("reason").as_str().is_some(), "dead records carry a diagnostic");
+    let respawned = recs
+        .iter()
+        .find(|r| r.kind == "respawned" && r.get("rank").as_usize() == Some(1) && r.seq > dead.seq)
+        .expect("the replacement must stream a respawned record after the death");
+    assert!(respawned.get("attempt").as_usize().is_some());
+    assert!(
+        recs.iter().any(|r| r.kind == "state" && r.get("state").as_str().is_some()),
+        "membership state transitions belong on the stream"
+    );
+    let _ = std::fs::remove_file(&path);
 }
 
 /// A muted worker (alive but silent — no heartbeats, no replies) is

@@ -12,6 +12,7 @@ use spngd::data::cifar::{CifarBin, CIFAR_CLASSES, CIFAR_RECORD};
 use spngd::data::DataSource;
 use spngd::util::f16;
 use spngd::util::json::Json;
+use spngd::util::obs;
 use spngd::util::prop::{check, gen};
 use spngd::util::rng::Rng;
 
@@ -279,6 +280,99 @@ fn wire_f16_element_buffers_decode_totally() {
             }
         },
     );
+}
+
+/// Arbitrary byte soup through the JSONL event parser (`obs::parse_line`):
+/// parse-or-skip, never a panic, and anything accepted must have carried
+/// the schema tag with the envelope keys stripped from `fields`.
+#[test]
+fn event_line_parse_survives_byte_soup() {
+    check(0xE7E1, 400, 256, rand_bytes, |bytes| {
+        let s = String::from_utf8_lossy(bytes);
+        match obs::parse_line(&s) {
+            None => true, // skipping garbage is the contract
+            Some(rec) => {
+                s.contains(obs::EVENT_SCHEMA)
+                    && ["schema", "seq", "t", "kind"]
+                        .iter()
+                        .all(|k| !rec.fields.contains_key(*k))
+            }
+        }
+    });
+}
+
+/// Mutate realistic emitted event lines byte-by-byte: the parser must
+/// accept or skip cleanly at every corruption — a corrupt dist event
+/// stream must never take the reader down with it.
+#[test]
+fn event_line_parse_survives_mutated_lines() {
+    const KINDS: [&str; 6] = ["state", "joined", "dead", "respawned", "poison", "fault_plan"];
+    check(
+        0xE7E2,
+        400,
+        16,
+        |rng, size| {
+            let kind = KINDS[rng.below_usize(KINDS.len())];
+            let mut b = format!(
+                r#"{{"schema":"spngd-events/1","seq":{},"t":{}.{:03},"kind":"{kind}","rank":{},"step":{},"reason":"job timeout"}}"#,
+                rng.below(10_000),
+                rng.below(100),
+                rng.below(1000),
+                rng.below(8),
+                rng.below(50),
+            )
+            .into_bytes();
+            for _ in 0..1 + rng.below_usize(size.max(1)) {
+                let i = rng.below_usize(b.len());
+                b[i] = rng.below(256) as u8;
+            }
+            b
+        },
+        |bytes| {
+            let s = String::from_utf8_lossy(bytes);
+            match obs::parse_line(&s) {
+                None => true,
+                // accepted ⇒ the envelope survived the corruption intact
+                Some(rec) => {
+                    s.contains(obs::EVENT_SCHEMA)
+                        && ["schema", "seq", "t", "kind"]
+                            .iter()
+                            .all(|k| !rec.fields.contains_key(*k))
+                }
+            }
+        },
+    );
+}
+
+/// Every strict prefix of a valid event line is skipped (truncated JSON
+/// is not an event), the full line parses, and an oversized line is
+/// rejected without reading its body.
+#[test]
+fn event_line_truncation_and_oversize_are_skipped() {
+    check(
+        0xE7E3,
+        60,
+        8,
+        |rng, _| {
+            format!(
+                r#"{{"schema":"spngd-events/1","seq":{},"t":0.5,"kind":"dead","rank":{}}}"#,
+                rng.below(1000),
+                rng.below(8),
+            )
+            .into_bytes()
+        },
+        |bytes| {
+            let s = std::str::from_utf8(bytes).unwrap();
+            (1..s.len()).all(|cut| obs::parse_line(&s[..cut]).is_none())
+                && obs::parse_line(s).is_some_and(|r| r.kind == "dead")
+        },
+    );
+    // a single oversized-but-valid line: corrupt stream, not an event
+    let huge = format!(
+        r#"{{"schema":"spngd-events/1","seq":1,"t":0.5,"kind":"dead","pad":"{}"}}"#,
+        "x".repeat(2 << 20)
+    );
+    assert!(obs::parse_line(&huge).is_none(), "lines over 1 MiB must be skipped");
 }
 
 /// f16 wire codec over ordinary magnitudes: slice quantization is exactly

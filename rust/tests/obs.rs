@@ -1,0 +1,221 @@
+//! Integration tests for the observability layer (`util::obs`):
+//!
+//! - tracing must be bitwise invisible: identical losses and parameters
+//!   with span recording on vs off, across all three dist engines
+//!   (sequential, threaded, multi-process) — the acceptance criterion
+//!   that lets production runs leave `--trace-out` on without doubt;
+//! - a drained trace of a threaded run must satisfy the structural
+//!   invariants the Chrome exporter and the overlap accountant rely on
+//!   (balanced spans, time-sorted starts, named worker lanes, both comm
+//!   and compute categories present) and round-trip through the JSON
+//!   writer;
+//! - the library sources must stay free of raw `println!`/`eprintln!`:
+//!   `util::log` (governed by `SPNGD_LOG`) and the JSONL event stream
+//!   are the only sanctioned outputs outside the CLI and the bench
+//!   harness.
+//!
+//! The tracing switch is process-global, so tests that toggle it
+//! serialize on a local mutex (other test binaries are separate
+//! processes and unaffected).
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use spngd::coordinator::{DistMode, Trainer, TrainerBuilder};
+use spngd::dist::ProcCfg;
+use spngd::optim::{self, HyperParams, Preconditioner};
+use spngd::util::json::Json;
+use spngd::util::obs;
+
+static TRACE_LOCK: Mutex<()> = Mutex::new(());
+
+fn trace_lock() -> MutexGuard<'static, ()> {
+    TRACE_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Same run shape as `tests/dist_engine.rs` / `tests/dist_proc.rs`.
+fn base_builder(model: &str, opt: Arc<dyn Preconditioner>) -> TrainerBuilder {
+    let hp = HyperParams {
+        alpha_mixup: 0.0,
+        p_decay: 2.0,
+        e_start: 100.0,
+        e_end: 200.0,
+        eta0: 0.02,
+        m0: 0.018,
+        lambda: 2.5e-3,
+    };
+    TrainerBuilder::new(model)
+        .optimizer(opt)
+        .hyperparams(hp)
+        .steps_per_epoch(50)
+        .workers(2)
+        .dataset_len(4000)
+        .data_seed(42)
+        .seed(7)
+}
+
+fn proc_cfg() -> ProcCfg {
+    ProcCfg {
+        worker_bin: Some(env!("CARGO_BIN_EXE_spngd").to_string()),
+        heartbeat_ms: 25,
+        join_timeout_ms: 20_000,
+        backoff_base_ms: 10,
+        ..ProcCfg::default()
+    }
+}
+
+fn flat_params(tr: &Trainer) -> Vec<f32> {
+    tr.params.iter().flat_map(|p| p.data.clone()).collect()
+}
+
+fn run_steps(mut tr: Trainer, steps: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut losses = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        losses.push(tr.step().unwrap().loss);
+    }
+    (losses, flat_params(&tr))
+}
+
+// ------------------------------------------------------------ bit-identity
+
+/// The acceptance criterion: recording spans must not change a single
+/// bit of the training trajectory, in any engine.
+#[test]
+fn tracing_is_bitwise_invisible_in_all_engines() {
+    let _g = trace_lock();
+    let mk = |mode: DistMode| -> Trainer {
+        let mut b = base_builder("mlp", optim::spngd()).dist(mode);
+        if mode == DistMode::Proc {
+            b = b.proc_cfg(proc_cfg());
+        }
+        b.build().unwrap()
+    };
+    for mode in [DistMode::Sequential, DistMode::Threaded, DistMode::Proc] {
+        obs::set_enabled(false);
+        let baseline = run_steps(mk(mode), 3);
+        obs::set_enabled(true);
+        let traced = run_steps(mk(mode), 3);
+        obs::set_enabled(false);
+        let _ = obs::drain(); // leave the rings empty for the next mode
+        assert_eq!(baseline.0, traced.0, "{mode:?}: losses diverged under tracing");
+        assert_eq!(baseline.1, traced.1, "{mode:?}: params diverged under tracing");
+    }
+}
+
+// ------------------------------------------------------- trace round-trip
+
+/// A traced threaded run drains into a structurally sound trace: spans
+/// balanced and time-sorted, worker lanes named, comm and compute both
+/// present, the overlap sums internally consistent — and the whole
+/// thing survives a serialize/parse round trip of the Chrome JSON.
+#[test]
+fn threaded_trace_round_trips_with_consistent_spans() {
+    let _g = trace_lock();
+    obs::set_enabled(false);
+    let _ = obs::drain();
+    let mut tr = base_builder("convnet_tiny", optim::spngd())
+        .dist(DistMode::Threaded)
+        .build()
+        .unwrap();
+    obs::set_enabled(true);
+    for _ in 0..2 {
+        tr.step().unwrap();
+    }
+    obs::set_enabled(false);
+    let trace = obs::drain();
+
+    assert!(!trace.events.is_empty(), "traced run recorded nothing");
+    assert_eq!(trace.dropped, 0, "two tiny steps must not overflow the rings");
+    let mut last_t0 = 0u64;
+    let (mut n_comm, mut n_compute) = (0usize, 0usize);
+    for (tid, name, cat, t0, t1) in trace.spans() {
+        assert!(t1 >= t0, "unbalanced span {name} on tid {tid}");
+        assert!(t0 >= last_t0, "drain must sort spans by start time ({name})");
+        last_t0 = t0;
+        assert!(trace.threads.contains_key(&tid), "span {name} on unregistered tid {tid}");
+        n_comm += cat.is_comm() as usize;
+        n_compute += cat.is_compute() as usize;
+    }
+    assert!(n_comm > 0, "threaded run must record collective spans");
+    assert!(n_compute > 0, "threaded run must record compute spans");
+    let lanes: Vec<&str> = trace.threads.values().map(String::as_str).collect();
+    assert!(
+        lanes.iter().any(|n| n.starts_with("spngd-worker-")),
+        "worker lanes must be named in the thread table: {lanes:?}"
+    );
+
+    let ov = obs::overlap(&trace);
+    assert!(ov.comm_ns > 0 && ov.compute_ns > 0);
+    assert!(ov.hidden_ns <= ov.comm_ns.min(ov.compute_ns));
+    assert!(ov.critical_path_ns >= ov.comm_ns.max(ov.compute_ns));
+    assert!(ov.critical_path_ns <= ov.comm_ns + ov.compute_ns);
+    assert!((0.0..=1.0).contains(&ov.hidden_fraction));
+    assert!(ov.by_name.contains_key("step"), "per-stage sums missing the step phase");
+
+    // Chrome JSON round trip: parseable, complete, lanes labeled
+    let s = trace.to_chrome_json().to_string();
+    let back = Json::parse(&s).expect("chrome trace must be valid JSON");
+    let evs = back.get("traceEvents").as_arr().expect("traceEvents array");
+    assert_eq!(evs.len(), trace.events.len() + trace.threads.len());
+    let mut meta_names = Vec::new();
+    for e in evs {
+        let ph = e.get("ph").as_str().expect("every event has ph");
+        assert!(matches!(ph, "M" | "X" | "i" | "C"), "unknown ph {ph}");
+        assert!(e.get("pid").as_usize().is_some() && e.get("tid").as_usize().is_some());
+        if ph == "M" {
+            meta_names.push(e.get("args").get("name").as_str().unwrap_or("").to_string());
+        } else {
+            assert!(e.get("ts").as_f64().is_some(), "non-meta event missing ts");
+        }
+    }
+    assert!(
+        meta_names.iter().any(|n| n.starts_with("spngd-worker-")),
+        "thread_name metadata must label the worker lanes: {meta_names:?}"
+    );
+    assert_eq!(back.get("displayTimeUnit").as_str(), Some("ms"));
+}
+
+// ------------------------------------------------------------ print audit
+
+fn rust_files(dir: &std::path::Path, out: &mut Vec<std::path::PathBuf>) {
+    for entry in std::fs::read_dir(dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.is_dir() {
+            rust_files(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// `SPNGD_LOG` governs all library diagnostics: no `print!`-family
+/// macro may appear in the library sources outside comments. The CLI
+/// (`main.rs`) and the bench harness (`harness/`) are the sanctioned
+/// stdout writers.
+#[test]
+fn no_raw_prints_in_library_sources() {
+    let src = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let mut files = Vec::new();
+    rust_files(&src, &mut files);
+    let mut offenders = Vec::new();
+    for path in files {
+        let rel = path.strip_prefix(&src).unwrap().to_string_lossy().to_string();
+        if rel == "main.rs" || rel.starts_with("harness") {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        for (i, line) in text.lines().enumerate() {
+            let t = line.trim_start();
+            if t.starts_with("//") {
+                continue; // docs may show print!-family examples
+            }
+            if t.contains("println!") || t.contains("eprintln!") || t.contains("print!") {
+                offenders.push(format!("{rel}:{}: {}", i + 1, t));
+            }
+        }
+    }
+    assert!(
+        offenders.is_empty(),
+        "raw prints in library sources (route through util::log or obs::emit):\n{}",
+        offenders.join("\n")
+    );
+}
