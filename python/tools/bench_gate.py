@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""Bench-regression gate for BENCH_native.json (schema spngd-bench-native/5).
+"""Bench-regression gate for BENCH_native.json (schema spngd-bench-native/6).
 
 CI runs `cargo bench --bench native_perf -- --quick`, then this gate
 compares the report against the committed baseline
@@ -25,6 +25,11 @@ regression. Three independent checks, ordered from robust to advisory:
    accountant's sums must be internally consistent (hidden <= comm,
    max(comm, compute) <= critical path <= comm + compute, a traced
    threaded run records both comm and compute spans).
+   The `serve` section gates the micro-batching queue with exact row
+   accounting: every single-row request must come back exactly once
+   (rows == requests), cap 1 must forward every row alone
+   (batches == rows), percentiles must be ordered (p50 <= p99), and
+   the batcher must actually run (batches >= 1, throughput > 0).
 
 3. **Provisional absolute-ns** (advisory ratchet): if the baseline's
    `provisional_ns.entries` is non-empty (populated by
@@ -50,8 +55,10 @@ import json
 import sys
 
 DEFAULT_BASELINE = "rust/benches/baseline/BENCH_baseline.json"
-REPORT_SCHEMA = "spngd-bench-native/5"
-REQUIRED_SECTIONS = ["kernels", "workers", "optimizers", "data", "simd", "precision", "obs"]
+REPORT_SCHEMA = "spngd-bench-native/6"
+REQUIRED_SECTIONS = [
+    "kernels", "workers", "optimizers", "data", "simd", "precision", "obs", "serve",
+]
 RATCHET_MARGIN = 1.15  # floors sit measured/1.15 below the reference run
 
 
@@ -62,7 +69,7 @@ def load(path):
 
 def section_entries(report, section):
     """Entries of a report section as a list ('step'/'obs' are single objects)."""
-    if section in ("step", "obs"):
+    if section in ("step", "obs", "serve"):
         return [report[section]] if report.get(section) else []
     return list(report.get(section, []))
 
@@ -185,6 +192,50 @@ def check_obs(report, baseline, errors):
         errors.append(f"obs: hidden_fraction {obs['hidden_fraction']} outside [0, 1]")
 
 
+def check_serve(report, errors):
+    """Exact row accounting for the serving queue — no timing floors,
+    so the gate never flakes on a loaded CI box."""
+    serve = report.get("serve")
+    if not isinstance(serve, dict):
+        errors.append("serve: section must be a single object")
+        return
+    fwd = serve.get("forward", [])
+    if len(fwd) < 2:
+        errors.append("serve: forward must time both a 1-row and a full-batch pass")
+    for e in fwd:
+        if e.get("ns", 0) <= 0 or e.get("ns_per_row", 0) <= 0:
+            errors.append(f"serve: forward entry rows={e.get('rows')} has non-positive timings")
+    queue = serve.get("queue", [])
+    if not queue:
+        errors.append("serve: queue sweep is empty — the batcher was never exercised")
+    for q in queue:
+        mb = q.get("max_batch", 0)
+        tag = f"serve queue[max_batch={mb}]"
+        requests, batches, rows = q.get("requests", 0), q.get("batches", 0), q.get("rows", 0)
+        if requests <= 0:
+            errors.append(f"{tag}: no requests completed")
+            continue
+        if batches < 1 or rows <= 0:
+            errors.append(
+                f"{tag}: {batches} batches over {rows} rows — the batcher is not flushing"
+            )
+        if rows != requests:
+            errors.append(
+                f"{tag}: {rows} rows predicted for {requests} single-row requests — "
+                "requests lost or duplicated in the queue"
+            )
+        if mb == 1 and batches != rows:
+            errors.append(
+                f"{tag}: cap 1 must forward every row alone, "
+                f"got {batches} batches for {rows} rows"
+            )
+        p50, p99 = q.get("p50_ns", 0), q.get("p99_ns", 0)
+        if p50 <= 0 or p99 < p50:
+            errors.append(f"{tag}: latency percentiles inconsistent (p50 {p50}, p99 {p99})")
+        if q.get("throughput_rps", 0) <= 0:
+            errors.append(f"{tag}: non-positive throughput")
+
+
 def check_provisional_ns(report, baseline, errors):
     prov = baseline.get("provisional_ns", {})
     tol = prov.get("tolerance", 3.0)
@@ -211,6 +262,7 @@ def run_gate(report, baseline):
         check_floors(report, baseline, errors)
         check_structural(report, baseline, errors)
         check_obs(report, baseline, errors)
+        check_serve(report, errors)
         check_provisional_ns(report, baseline, errors)
     return errors
 
@@ -305,6 +357,30 @@ def synth_report(baseline, slowed=False):
             "param_bytes_per_step": 2.0e6,
         },
     ]
+    # healthy serve: every single-row request accounted for, cap 1 runs
+    # one forward per row, percentiles ordered; slowed serve: a dead
+    # batcher that lost every request with inverted percentiles
+    if slowed:
+        serve_queue = [
+            {"max_batch": 1, "requests": 64, "batches": 0, "rows": 0,
+             "p50_ns": 9.0e5, "p99_ns": 2.0e5, "throughput_rps": 0.0},
+        ]
+    else:
+        serve_queue = [
+            {"max_batch": 1, "requests": 64, "batches": 64, "rows": 64,
+             "p50_ns": 2.0e5, "p99_ns": 8.0e5, "throughput_rps": 5000.0},
+            {"max_batch": 8, "requests": 64, "batches": 12, "rows": 64,
+             "p50_ns": 4.0e5, "p99_ns": 9.0e5, "throughput_rps": 9000.0},
+        ]
+    report["serve"] = {
+        "model": "synthetic",
+        "batch": 8,
+        "forward": [
+            {"rows": 1, "ns": 1.0e5, "ns_per_row": 1.0e5},
+            {"rows": 8, "ns": 2.0e5, "ns_per_row": 2.5e4},
+        ],
+        "queue": serve_queue,
+    }
     for s in ["workers", "optimizers", "data"]:
         if not report[s]:
             report[s] = [{"name": f"{s} synthetic", "step_ns": 1.0}]

@@ -14,16 +14,21 @@ the comm-hidden fraction from the span intervals exactly like
 
 JSONL event streams (``--events``, written by ``--events-out`` /
 ``SPNGD_EVENTS``): every non-empty line must parse under the
-``spngd-events/1`` schema with a known kind and unique ``seq``
-(concurrent emitters may write out of order, so order is not checked).
+``spngd-events/2`` schema (``spngd-events/1`` lines are still accepted
+— /2 only added the checkpoint lifecycle kinds ``checkpoint_saved``
+and ``resumed``) with a known kind and unique ``seq`` (concurrent
+emitters may write out of order, so order is not checked).
 ``--expect-kill-recovery`` asserts the membership machine streamed a
 ``dead`` record followed (in seq order) by a ``respawned`` record for
 the same rank — the machine-readable form of the kill-fault
-acceptance scenario.
+acceptance scenario. ``--expect-resume`` asserts the checkpoint loop
+closed: a ``checkpoint_saved`` record followed (in seq order) by a
+``resumed`` record at the same step.
 
 Usage:
     python3 python/tools/trace_check.py --trace trace.json [--expect-comm]
-    python3 python/tools/trace_check.py --events events.jsonl [--expect-kill-recovery]
+    python3 python/tools/trace_check.py --events events.jsonl \
+        [--expect-kill-recovery] [--expect-resume]
     python3 python/tools/trace_check.py --self-test
 """
 
@@ -31,12 +36,16 @@ import argparse
 import json
 import sys
 
-EVENT_SCHEMA = "spngd-events/1"
+EVENT_SCHEMA = "spngd-events/2"
+EVENT_SCHEMAS = {"spngd-events/1", "spngd-events/2"}
 PHASES = {"M", "X", "i", "C"}
 CATS = {"phase", "compute", "comm", "wire", "data", "pool"}
 COMM_CATS = {"comm", "wire"}
 COMPUTE_CATS = {"compute", "data", "pool"}
-EVENT_KINDS = {"state", "joined", "dead", "respawned", "poison", "fault_plan"}
+EVENT_KINDS = {
+    "state", "joined", "dead", "respawned", "poison", "fault_plan",
+    "checkpoint_saved", "resumed",
+}
 
 
 def union_len(intervals):
@@ -141,7 +150,7 @@ def check_trace(doc, expect_comm, errors):
         )
 
 
-def check_events(text, expect_kill_recovery, errors):
+def check_events(text, expect_kill_recovery, errors, expect_resume=False):
     recs = []
     for i, line in enumerate(text.splitlines()):
         if not line.strip():
@@ -151,8 +160,10 @@ def check_events(text, expect_kill_recovery, errors):
         except json.JSONDecodeError as e:
             errors.append(f"events:{i + 1}: unparseable line ({e})")
             continue
-        if o.get("schema") != EVENT_SCHEMA:
-            errors.append(f"events:{i + 1}: schema {o.get('schema')!r} != {EVENT_SCHEMA!r}")
+        if o.get("schema") not in EVENT_SCHEMAS:
+            errors.append(
+                f"events:{i + 1}: schema {o.get('schema')!r} not in {sorted(EVENT_SCHEMAS)}"
+            )
             continue
         if o.get("kind") not in EVENT_KINDS:
             errors.append(f"events:{i + 1}: unknown kind {o.get('kind')!r}")
@@ -182,6 +193,23 @@ def check_events(text, expect_kill_recovery, errors):
             if not recovered:
                 errors.append(
                     "events: death streamed but no respawned record for that rank followed"
+                )
+    if expect_resume:
+        saves = [r for r in recs if r["kind"] == "checkpoint_saved"]
+        if not saves:
+            errors.append("events: --expect-resume but no checkpoint_saved record")
+        else:
+            resumed = any(
+                r["kind"] == "resumed"
+                and r.get("step") == s.get("step")
+                and r["seq"] > s["seq"]
+                for s in saves
+                for r in recs
+            )
+            if not resumed:
+                errors.append(
+                    "events: checkpoint_saved streamed but no resumed record "
+                    "at that step followed — the restore leg never ran"
                 )
     if not errors:
         kinds = {}
@@ -218,19 +246,27 @@ def synth_trace(broken=False):
     return {"traceEvents": evs, "displayTimeUnit": "ms"}
 
 
-def synth_events(broken=False):
+def synth_events(broken=False, broken_resume=False):
+    # the first records ride the /1 schema on purpose: old streams must
+    # keep validating after the /2 bump
     lines = [
-        {"schema": EVENT_SCHEMA, "seq": 0, "t": 0.1, "kind": "state",
+        {"schema": "spngd-events/1", "seq": 0, "t": 0.1, "kind": "state",
          "state": "WaitingForMembers", "step": 0},
-        {"schema": EVENT_SCHEMA, "seq": 1, "t": 0.2, "kind": "joined", "rank": 0,
+        {"schema": "spngd-events/1", "seq": 1, "t": 0.2, "kind": "joined", "rank": 0,
          "uid": 17, "step": 0},
         {"schema": EVENT_SCHEMA, "seq": 2, "t": 0.9, "kind": "dead", "rank": 1,
          "step": 2, "reason": "heartbeat timeout"},
         {"schema": EVENT_SCHEMA, "seq": 3, "t": 1.1, "kind": "respawned",
          "rank": 1, "attempt": 1},
+        {"schema": EVENT_SCHEMA, "seq": 4, "t": 1.5, "kind": "checkpoint_saved",
+         "step": 3, "path": "ckpt/ckpt-000000000003.spck"},
+        {"schema": EVENT_SCHEMA, "seq": 5, "t": 1.7, "kind": "resumed",
+         "step": 3, "path": "ckpt/ckpt-000000000003.spck"},
     ]
     if broken:
         lines = lines[:3]  # death with no recovery
+    if broken_resume:
+        lines = lines[:5]  # checkpoint saved, restore leg never ran
     return "\n".join(json.dumps(o) for o in lines) + "\n"
 
 
@@ -246,7 +282,8 @@ def self_test():
         print("self-test FAILED: broken trace accepted")
         return 1
     errors = []
-    check_events(synth_events(), expect_kill_recovery=True, errors=errors)
+    check_events(synth_events(), expect_kill_recovery=True, errors=errors,
+                 expect_resume=True)
     if errors:
         print("self-test FAILED: healthy synthetic events rejected:", errors)
         return 1
@@ -254,6 +291,19 @@ def self_test():
     check_events(synth_events(broken=True), expect_kill_recovery=True, errors=bad)
     if not bad:
         print("self-test FAILED: unrecovered death accepted")
+        return 1
+    bad = []
+    check_events(synth_events(broken_resume=True), expect_kill_recovery=False,
+                 errors=bad, expect_resume=True)
+    if not bad:
+        print("self-test FAILED: save-without-resume accepted under --expect-resume")
+        return 1
+    bad = []
+    check_events(json.dumps({"schema": "spngd-events/9", "seq": 0, "t": 0.0,
+                             "kind": "state"}) + "\n",
+                 expect_kill_recovery=False, errors=bad)
+    if not bad:
+        print("self-test FAILED: unknown event schema accepted")
         return 1
     print("self-test OK")
     return 0
@@ -267,6 +317,9 @@ def main():
     ap.add_argument("--events", help="JSONL event stream to validate")
     ap.add_argument("--expect-kill-recovery", action="store_true",
                     help="require a dead record followed by a respawned record")
+    ap.add_argument("--expect-resume", action="store_true",
+                    help="require a checkpoint_saved record followed by a "
+                         "resumed record at the same step")
     ap.add_argument("--self-test", action="store_true")
     args = ap.parse_args()
 
@@ -291,7 +344,8 @@ def main():
         except OSError as e:
             errors.append(f"events: cannot load {args.events}: {e}")
         else:
-            check_events(text, args.expect_kill_recovery, errors)
+            check_events(text, args.expect_kill_recovery, errors,
+                         expect_resume=args.expect_resume)
 
     if errors:
         print(f"trace_check: FAIL ({len(errors)} problem(s))")

@@ -10,7 +10,7 @@
 //! SPNGD_THREADS=4 cargo bench --bench native_perf    # pin the pool size
 //! ```
 //!
-//! JSON schema (`spngd-bench-native/5`): `{schema, model, threads, quick,
+//! JSON schema (`spngd-bench-native/6`): `{schema, model, threads, quick,
 //! step: {name, ns, naive_ns, speedup}, kernels: [{name, ns, naive_ns,
 //! speedup}, ...], workers: [...], optimizers: [{name, step_ns}, ...],
 //! data: [...], simd: [...], precision: [...], obs: {...}}` — `ns` is the median
@@ -36,7 +36,14 @@
 //! tracing off vs on (`step_ns` / `step_ns_traced` /
 //! `trace_overhead_ratio`), and the overlap accountant's view of the
 //! traced run (`comm_ns`, `compute_ns`, `hidden_ns`, `hidden_fraction`,
-//! `critical_path_ns`, `events`).
+//! `critical_path_ns`, `events`). `serve` (new in /6) tracks the
+//! inference side: the predict executable's per-row amortization
+//! (`forward`: 1 row vs a full static batch through `serve::Predictor`)
+//! and the micro-batching queue under concurrent single-row clients
+//! across batch caps (`queue`: `{max_batch, requests, batches, rows,
+//! p50_ns, p99_ns, throughput_rps}` — per-request latency percentiles vs
+//! coalesced throughput; `benches/serve_bench.rs` is the deeper
+//! standalone sweep).
 
 use spngd::collectives::Precision;
 use spngd::coordinator::DistMode;
@@ -45,6 +52,8 @@ use spngd::optim;
 use spngd::linalg::{self, Mat};
 use spngd::runtime::native::kernels;
 use spngd::runtime::{Executor, HostTensor};
+use spngd::serve::queue::{BatchQueue, QueueCfg};
+use spngd::serve::Predictor;
 use spngd::util::cli::Args;
 use spngd::util::json::{obj, Json};
 use spngd::util::obs::{self, Cat};
@@ -393,8 +402,120 @@ fn main() {
         ])
     };
 
+    // ---- serve: inference-side tracking. Per-row amortization of the
+    // predict executable (1 row pays the full static batch; a full batch
+    // amortizes it B-fold), then the micro-batching queue under
+    // concurrent single-row clients at two batch caps — cap 1 is the
+    // no-coalescing baseline, the model's static batch the served
+    // configuration.
+    let serve_json = {
+        let mut tr = harness::builder("convnet_tiny", optim::sgd())
+            .expect("runtime")
+            .workers(1)
+            .dataset_len(2048)
+            .data_seed(7)
+            .build()
+            .expect("serve trainer");
+        let ck = tr.checkpoint().expect("serve checkpoint");
+        drop(tr);
+        let predictor = std::sync::Arc::new(
+            Predictor::from_checkpoint(&manifest, engine.clone(), "convnet_tiny", &ck)
+                .expect("predictor"),
+        );
+        let (b, dim) = (predictor.batch(), predictor.in_dim());
+        let rows_full: Vec<Vec<f32>> = (0..b)
+            .map(|r| (0..dim).map(|i| ((i * 31 + r * 7) % 17) as f32 / 17.0).collect())
+            .collect();
+
+        let one = bench("serve predict 1 row", wu, it, || {
+            predictor.logits(&rows_full[..1]).expect("predict");
+        });
+        let full = bench(&format!("serve predict {b} rows"), wu, it, || {
+            predictor.logits(&rows_full).expect("predict");
+        });
+        let (one_ns, full_ns) = (one.median() * 1e9, full.median() * 1e9);
+        let forward = vec![
+            obj(vec![
+                ("rows", Json::from(1usize)),
+                ("ns", Json::from(one_ns)),
+                ("ns_per_row", Json::from(one_ns)),
+            ]),
+            obj(vec![
+                ("rows", Json::from(b)),
+                ("ns", Json::from(full_ns)),
+                ("ns_per_row", Json::from(full_ns / b as f64)),
+            ]),
+        ];
+
+        let n_requests = if quick { 16 } else { 128 };
+        let mut queue_entries: Vec<Json> = Vec::new();
+        for max_batch in [1usize, b] {
+            let queue = BatchQueue::new(QueueCfg { max_batch, max_wait_us: 500 });
+            let qb = queue.clone();
+            let pb = predictor.clone();
+            let batcher = std::thread::spawn(move || {
+                qb.run(|rows| pb.logits(rows).map_err(|e| e.to_string()))
+            });
+            let t_wall = std::time::Instant::now();
+            let clients = 4usize;
+            let handles: Vec<_> = (0..clients)
+                .map(|c| {
+                    let q = queue.clone();
+                    let row = rows_full[c % b].clone();
+                    let per_client = n_requests / clients;
+                    std::thread::spawn(move || {
+                        let mut lat = Vec::with_capacity(per_client);
+                        for _ in 0..per_client {
+                            let t0 = std::time::Instant::now();
+                            q.enqueue(vec![row.clone()])
+                                .expect("enqueue")
+                                .wait()
+                                .expect("predict");
+                            lat.push(t0.elapsed().as_secs_f64());
+                        }
+                        lat
+                    })
+                })
+                .collect();
+            let mut lat = spngd::util::stats::Summary::new();
+            for h in handles {
+                for l in h.join().expect("client") {
+                    lat.push(l);
+                }
+            }
+            let wall = t_wall.elapsed().as_secs_f64();
+            queue.shutdown();
+            batcher.join().expect("batcher");
+            use std::sync::atomic::Ordering;
+            let batches = queue.stats.batches.load(Ordering::Relaxed);
+            let rows = queue.stats.rows.load(Ordering::Relaxed);
+            println!(
+                "serve queue max_batch={max_batch}: {rows} rows in {batches} batches, \
+                 p50 {:.0} ns, p99 {:.0} ns, {:.0} rows/s",
+                lat.percentile(50.0) * 1e9,
+                lat.percentile(99.0) * 1e9,
+                rows as f64 / wall.max(1e-9)
+            );
+            queue_entries.push(obj(vec![
+                ("max_batch", Json::from(max_batch)),
+                ("requests", Json::from(lat.len())),
+                ("batches", Json::from(batches as f64)),
+                ("rows", Json::from(rows as f64)),
+                ("p50_ns", Json::from(lat.percentile(50.0) * 1e9)),
+                ("p99_ns", Json::from(lat.percentile(99.0) * 1e9)),
+                ("throughput_rps", Json::from(rows as f64 / wall.max(1e-9))),
+            ]));
+        }
+        obj(vec![
+            ("model", Json::from("convnet_tiny")),
+            ("batch", Json::from(b)),
+            ("forward", Json::Arr(forward)),
+            ("queue", Json::Arr(queue_entries)),
+        ])
+    };
+
     let report = obj(vec![
-        ("schema", Json::from("spngd-bench-native/5")),
+        ("schema", Json::from("spngd-bench-native/6")),
         ("model", Json::from(model_name.clone())),
         ("threads", Json::from(threads)),
         ("quick", Json::from(quick)),
@@ -406,6 +527,7 @@ fn main() {
         ("simd", Json::Arr(simd_entries)),
         ("precision", Json::Arr(precision_entries)),
         ("obs", obs_json),
+        ("serve", serve_json),
     ]);
     let out_path = parsed.get("out");
     std::fs::write(out_path, report.to_string_pretty()).expect("write bench report");

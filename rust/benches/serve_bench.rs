@@ -1,0 +1,250 @@
+//! Serving-side latency/throughput sweep: the dynamic micro-batching
+//! queue under concurrent single-row clients, across batch caps and
+//! client counts. `benches/native_perf.rs` carries a two-point version
+//! of this into `BENCH_native.json` for the CI ratchet; this bench is
+//! the standalone deep sweep for characterizing the latency/throughput
+//! trade-off — how much p50/p99 degrades as coalescing windows grow,
+//! and how much throughput coalescing buys back.
+//!
+//! ```text
+//! cargo bench --bench serve_bench                    # full sweep
+//! cargo bench --bench serve_bench -- --quick         # CI smoke
+//! cargo bench --bench serve_bench -- --caps 1,8 --clients 2,16
+//! ```
+//!
+//! Writes `BENCH_serve.json` (`spngd-bench-serve/1`): `{schema, model,
+//! batch, quick, forward: [{rows, ns, ns_per_row}, ...], sweep:
+//! [{max_batch, clients, requests, batches, rows, full_flushes,
+//! timeout_flushes, p50_ns, p99_ns, throughput_rps}, ...]}`. The
+//! `forward` entries are the raw `Predictor::logits` cost at 1 row vs
+//! the full static batch (the amortization ceiling the queue is chasing);
+//! each `sweep` entry is one (batch cap × client count) cell.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use spngd::harness::{self, bench};
+use spngd::optim;
+use spngd::serve::queue::{BatchQueue, QueueCfg};
+use spngd::serve::Predictor;
+use spngd::util::cli::Args;
+use spngd::util::json::{obj, Json};
+use spngd::util::obs;
+use spngd::util::stats::Summary;
+
+/// One (batch cap × client count) cell: `clients` threads each push
+/// single-row requests through a fresh queue and block on their tickets;
+/// the batcher thread coalesces into `Predictor::logits` forwards.
+struct Cell {
+    max_batch: usize,
+    clients: usize,
+    requests: usize,
+    batches: u64,
+    rows: u64,
+    full_flushes: u64,
+    timeout_flushes: u64,
+    p50_ns: f64,
+    p99_ns: f64,
+    throughput_rps: f64,
+}
+
+impl Cell {
+    fn json(&self) -> Json {
+        obj(vec![
+            ("max_batch", Json::from(self.max_batch)),
+            ("clients", Json::from(self.clients)),
+            ("requests", Json::from(self.requests)),
+            ("batches", Json::from(self.batches as f64)),
+            ("rows", Json::from(self.rows as f64)),
+            ("full_flushes", Json::from(self.full_flushes as f64)),
+            ("timeout_flushes", Json::from(self.timeout_flushes as f64)),
+            ("p50_ns", Json::from(self.p50_ns)),
+            ("p99_ns", Json::from(self.p99_ns)),
+            ("throughput_rps", Json::from(self.throughput_rps)),
+        ])
+    }
+}
+
+fn run_cell(
+    predictor: &Arc<Predictor>,
+    max_batch: usize,
+    clients: usize,
+    n_requests: usize,
+    max_wait_us: u64,
+) -> Cell {
+    let (b, dim) = (predictor.batch(), predictor.in_dim());
+    let queue = BatchQueue::new(QueueCfg { max_batch, max_wait_us });
+    let qb = queue.clone();
+    let pb = predictor.clone();
+    let batcher = std::thread::Builder::new()
+        .name("serve-bench-batch".to_string())
+        .spawn(move || qb.run(|rows| pb.logits(rows).map_err(|e| e.to_string())))
+        .expect("spawn batcher");
+
+    let t_wall = Instant::now();
+    let per_client = n_requests.max(clients) / clients;
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let q = queue.clone();
+            let row: Vec<f32> =
+                (0..dim).map(|i| ((i * 31 + (c % b) * 7) % 17) as f32 / 17.0).collect();
+            std::thread::spawn(move || {
+                let mut lat = Vec::with_capacity(per_client);
+                for _ in 0..per_client {
+                    let t0 = Instant::now();
+                    q.enqueue(vec![row.clone()]).expect("enqueue").wait().expect("predict");
+                    lat.push(t0.elapsed().as_secs_f64());
+                }
+                lat
+            })
+        })
+        .collect();
+    let mut lat = Summary::new();
+    for h in handles {
+        for l in h.join().expect("client thread") {
+            lat.push(l);
+        }
+    }
+    let wall = t_wall.elapsed().as_secs_f64();
+    queue.shutdown();
+    batcher.join().expect("batcher thread");
+
+    let rows = queue.stats.rows.load(Ordering::Relaxed);
+    Cell {
+        max_batch,
+        clients,
+        requests: lat.len(),
+        batches: queue.stats.batches.load(Ordering::Relaxed),
+        rows,
+        full_flushes: queue.stats.full_flushes.load(Ordering::Relaxed),
+        timeout_flushes: queue.stats.timeout_flushes.load(Ordering::Relaxed),
+        p50_ns: lat.percentile(50.0) * 1e9,
+        p99_ns: lat.percentile(99.0) * 1e9,
+        throughput_rps: rows as f64 / wall.max(1e-9),
+    }
+}
+
+fn main() {
+    let parsed = Args::new("serve_bench", "micro-batching latency/throughput sweep")
+        .opt("model", "convnet_tiny", "model to serve (must define predict_exe)")
+        .opt("caps", "1,4,8", "batch caps to sweep (clamped to the model's static batch)")
+        .opt("clients", "1,4,8", "concurrent client counts to sweep")
+        .opt("requests", "256", "total requests per sweep cell")
+        .opt("max-wait-us", "500", "queue deadline: oldest-row wait before a timeout flush")
+        .opt("out", "BENCH_serve.json", "output path for the JSON report")
+        .flag("quick", "smoke mode: tiny request counts, 2-point sweep")
+        .flag("bench", "ignored (cargo bench passes it)")
+        .parse_env(1)
+        .unwrap_or_else(|u| {
+            eprintln!("{u}");
+            std::process::exit(2);
+        });
+    let quick = parsed.get_bool("quick");
+
+    // bench determinism: tracing off, same as native_perf
+    obs::init_from_env();
+    obs::set_enabled(false);
+
+    let model_name = parsed.get("model").to_string();
+    let (manifest, engine) = harness::load_runtime_native().expect("native runtime");
+    let mut tr = harness::builder(&model_name, optim::sgd())
+        .expect("runtime")
+        .workers(1)
+        .dataset_len(2048)
+        .data_seed(7)
+        .build()
+        .expect("bench trainer");
+    let ck = tr.checkpoint().expect("bench checkpoint");
+    drop(tr);
+    let predictor = Arc::new(
+        Predictor::from_checkpoint(&manifest, engine, &model_name, &ck).expect("predictor"),
+    );
+    let b = predictor.batch();
+    println!("serve_bench: model={model_name} batch={b} quick={quick}");
+
+    // ---- forward amortization: the queue-free floor and ceiling
+    let (wu, it) = if quick { (1, 2) } else { (2, 16) };
+    let dim = predictor.in_dim();
+    let rows_full: Vec<Vec<f32>> = (0..b)
+        .map(|r| (0..dim).map(|i| ((i * 31 + r * 7) % 17) as f32 / 17.0).collect())
+        .collect();
+    let one = bench("predict 1 row", wu, it, || {
+        predictor.logits(&rows_full[..1]).expect("predict");
+    });
+    let full = bench(&format!("predict {b} rows"), wu, it, || {
+        predictor.logits(&rows_full).expect("predict");
+    });
+    let (one_ns, full_ns) = (one.median() * 1e9, full.median() * 1e9);
+    println!(
+        "forward: 1 row {:.0} ns, {b} rows {:.0} ns ({:.0} ns/row, {:.1}x amortization)",
+        one_ns,
+        full_ns,
+        full_ns / b as f64,
+        one_ns / (full_ns / b as f64).max(1e-9)
+    );
+    let forward = vec![
+        obj(vec![
+            ("rows", Json::from(1usize)),
+            ("ns", Json::from(one_ns)),
+            ("ns_per_row", Json::from(one_ns)),
+        ]),
+        obj(vec![
+            ("rows", Json::from(b)),
+            ("ns", Json::from(full_ns)),
+            ("ns_per_row", Json::from(full_ns / b as f64)),
+        ]),
+    ];
+
+    // ---- the sweep: batch caps × client counts
+    let mut caps: Vec<usize> = parsed
+        .get_usize_list("caps")
+        .into_iter()
+        .map(|c| c.clamp(1, b))
+        .collect();
+    caps.dedup();
+    let mut clients_axis = parsed.get_usize_list("clients");
+    clients_axis.retain(|&c| c >= 1);
+    let n_requests = if quick { 32 } else { parsed.get_usize("requests") };
+    if quick {
+        caps = vec![1, b];
+        caps.dedup();
+        clients_axis = vec![4];
+    }
+    let max_wait_us = parsed.get_usize("max-wait-us") as u64;
+
+    println!(
+        "\n{:>9} {:>8} {:>9} {:>8} {:>6} {:>12} {:>12} {:>12}",
+        "max_batch", "clients", "requests", "batches", "rows", "p50_ns", "p99_ns", "rows/s"
+    );
+    let mut sweep: Vec<Json> = Vec::new();
+    for &cap in &caps {
+        for &nc in &clients_axis {
+            let cell = run_cell(&predictor, cap, nc, n_requests, max_wait_us);
+            println!(
+                "{:>9} {:>8} {:>9} {:>8} {:>6} {:>12.0} {:>12.0} {:>12.0}",
+                cell.max_batch,
+                cell.clients,
+                cell.requests,
+                cell.batches,
+                cell.rows,
+                cell.p50_ns,
+                cell.p99_ns,
+                cell.throughput_rps
+            );
+            sweep.push(cell.json());
+        }
+    }
+
+    let report = obj(vec![
+        ("schema", Json::from("spngd-bench-serve/1")),
+        ("model", Json::from(model_name)),
+        ("batch", Json::from(b)),
+        ("quick", Json::from(quick)),
+        ("forward", Json::Arr(forward)),
+        ("sweep", Json::Arr(sweep)),
+    ]);
+    let out_path = parsed.get("out");
+    std::fs::write(out_path, report.to_string_pretty()).expect("write bench report");
+    println!("\nwrote {out_path}");
+}

@@ -1,0 +1,307 @@
+//! Little-endian byte (de)serialization primitives shared by the SPCK
+//! container and every state payload stored inside it (optimizer layer
+//! state, transform-chain state, stashed batches).
+//!
+//! The reader is a total function over arbitrary bytes: every accessor
+//! bounds-checks and returns a structured [`CkptError`] — no panics, no
+//! unbounded allocation (element counts are validated against the bytes
+//! actually present before any `Vec` is sized).
+
+use crate::ckpt::format::CkptError;
+use crate::linalg::Mat;
+use crate::runtime::HostTensor;
+
+/// Append-only little-endian writer.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        ByteWriter { buf: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn into_inner(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn raw(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// u32 length prefix + raw bytes.
+    pub fn blob(&mut self, bytes: &[u8]) {
+        self.u32(bytes.len() as u32);
+        self.raw(bytes);
+    }
+
+    pub fn str_(&mut self, s: &str) {
+        self.blob(s.as_bytes());
+    }
+
+    /// Count-free f32 run — the caller's framing must fix the length.
+    pub fn f32s(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.f32(x);
+        }
+    }
+
+    pub fn rng_state(&mut self, s: [u64; 4]) {
+        for w in s {
+            self.u64(w);
+        }
+    }
+
+    pub fn mat(&mut self, m: &Mat) {
+        self.u32(m.rows as u32);
+        self.u32(m.cols as u32);
+        self.f32s(&m.data);
+    }
+
+    pub fn opt_mat(&mut self, m: Option<&Mat>) {
+        match m {
+            None => self.u8(0),
+            Some(m) => {
+                self.u8(1);
+                self.mat(m);
+            }
+        }
+    }
+
+    pub fn tensor(&mut self, t: &HostTensor) {
+        self.u8(t.shape.len() as u8);
+        for &d in &t.shape {
+            self.u32(d as u32);
+        }
+        self.f32s(&t.data);
+    }
+
+    pub fn opt_tensor(&mut self, t: Option<&HostTensor>) {
+        match t {
+            None => self.u8(0),
+            Some(t) => {
+                self.u8(1);
+                self.tensor(t);
+            }
+        }
+    }
+}
+
+/// Bounds-checked little-endian reader over a payload slice.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], CkptError> {
+        if self.remaining() < n {
+            return Err(CkptError::BadPayload("payload shorter than its encoding claims"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Every byte must have been consumed — trailing garbage is corruption.
+    pub fn finish(self) -> Result<(), CkptError> {
+        if self.remaining() != 0 {
+            return Err(CkptError::BadPayload("trailing bytes after payload"));
+        }
+        Ok(())
+    }
+
+    pub fn u8(&mut self) -> Result<u8, CkptError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16, CkptError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    pub fn u32(&mut self) -> Result<u32, CkptError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, CkptError> {
+        let b = self.take(8)?;
+        let mut w = [0u8; 8];
+        w.copy_from_slice(b);
+        Ok(u64::from_le_bytes(w))
+    }
+
+    pub fn f32(&mut self) -> Result<f32, CkptError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, CkptError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn blob(&mut self) -> Result<&'a [u8], CkptError> {
+        let n = self.u32()? as usize;
+        self.take(n)
+    }
+
+    pub fn str_(&mut self) -> Result<String, CkptError> {
+        let b = self.blob()?;
+        String::from_utf8(b.to_vec()).map_err(|_| CkptError::BadPayload("non-utf8 string"))
+    }
+
+    pub fn f32s(&mut self, n: usize) -> Result<Vec<f32>, CkptError> {
+        // length check before sizing the Vec: a lying count cannot OOM
+        let b = self.take(n.checked_mul(4).ok_or(CkptError::BadPayload("f32 count overflow"))?)?;
+        Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    pub fn rng_state(&mut self) -> Result<[u64; 4], CkptError> {
+        Ok([self.u64()?, self.u64()?, self.u64()?, self.u64()?])
+    }
+
+    pub fn mat(&mut self) -> Result<Mat, CkptError> {
+        let rows = self.u32()? as usize;
+        let cols = self.u32()? as usize;
+        let n = rows.checked_mul(cols).ok_or(CkptError::BadPayload("mat dims overflow"))?;
+        Ok(Mat::from_vec(rows, cols, self.f32s(n)?))
+    }
+
+    pub fn opt_mat(&mut self) -> Result<Option<Mat>, CkptError> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.mat()?)),
+            _ => Err(CkptError::BadPayload("bad option flag")),
+        }
+    }
+
+    pub fn tensor(&mut self) -> Result<HostTensor, CkptError> {
+        let ndim = self.u8()? as usize;
+        let mut shape = Vec::with_capacity(ndim.min(8));
+        let mut n = 1usize;
+        for _ in 0..ndim {
+            let d = self.u32()? as usize;
+            n = n.checked_mul(d).ok_or(CkptError::BadPayload("tensor dims overflow"))?;
+            shape.push(d);
+        }
+        Ok(HostTensor::new(shape, self.f32s(n)?))
+    }
+
+    pub fn opt_tensor(&mut self) -> Result<Option<HostTensor>, CkptError> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.tensor()?)),
+            _ => Err(CkptError::BadPayload("bad option flag")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut w = ByteWriter::new();
+        w.u8(7);
+        w.u16(0xBEEF);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX - 3);
+        w.f32(-0.0);
+        w.f64(std::f64::consts::PI);
+        w.str_("lane-3");
+        w.rng_state([1, 2, 3, u64::MAX]);
+        let bytes = w.into_inner();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u16().unwrap(), 0xBEEF);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert_eq!(r.f64().unwrap(), std::f64::consts::PI);
+        assert_eq!(r.str_().unwrap(), "lane-3");
+        assert_eq!(r.rng_state().unwrap(), [1, 2, 3, u64::MAX]);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn tensor_and_mat_roundtrip_bitwise() {
+        let t = HostTensor::new(vec![2, 3], vec![1.5, -0.0, f32::MIN_POSITIVE, 4.0, 5.0, 6.0]);
+        let m = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let mut w = ByteWriter::new();
+        w.opt_tensor(Some(&t));
+        w.opt_tensor(None);
+        w.opt_mat(Some(&m));
+        w.opt_mat(None);
+        let bytes = w.into_inner();
+        let mut r = ByteReader::new(&bytes);
+        let t2 = r.opt_tensor().unwrap().unwrap();
+        assert_eq!(t2.shape, t.shape);
+        assert_eq!(
+            t2.data.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            t.data.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert!(r.opt_tensor().unwrap().is_none());
+        let m2 = r.opt_mat().unwrap().unwrap();
+        assert_eq!((m2.rows, m2.cols), (2, 2));
+        assert_eq!(m2.data, m.data);
+        assert!(r.opt_mat().unwrap().is_none());
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn reader_is_total_over_garbage() {
+        // truncated / lying encodings must error, never panic or OOM
+        let mut r = ByteReader::new(&[1, 2]);
+        assert!(r.u32().is_err());
+        let mut r = ByteReader::new(&[0xFF, 0xFF, 0xFF, 0xFF]); // blob claiming 4 GiB
+        assert!(r.blob().is_err());
+        let mut r = ByteReader::new(&[2, 0xFF, 0xFF, 0xFF, 0x7F, 0xFF, 0xFF, 0xFF, 0x7F]);
+        assert!(r.tensor().is_err()); // dims product overflows / exceeds bytes
+        let mut r = ByteReader::new(&[9]);
+        assert!(r.opt_mat().is_err()); // bad option flag
+        let r = ByteReader::new(&[0]);
+        assert!(r.finish().is_err());
+    }
+}

@@ -1,0 +1,317 @@
+//! The SPCK container: a versioned binary checkpoint in the house wire
+//! idiom (`collectives::wire`) — fixed magic + version header, a section
+//! table of `(kind, tag, len, fnv1a)` entries, and hard caps enforced
+//! before any allocation. Parsing is a total function: every malformed
+//! input maps to a structured [`CkptError`], never a panic or an OOM.
+//!
+//! ```text
+//! header (16 bytes):  "SPCK" | version u16 | flags u16 | nsect u32 | reserved u32
+//! section (12 + len): kind u16 | tag u16 | len u32 | fnv1a u32 | payload
+//! ```
+//!
+//! Section kinds are part of the format contract; `tag` disambiguates
+//! repeated kinds (parameter index, layer index, lane index). Unknown
+//! kinds are rejected — a checkpoint is a closed artifact, not an
+//! extensible stream.
+
+use crate::collectives::wire::checksum;
+
+/// File magic.
+pub const MAGIC: [u8; 4] = *b"SPCK";
+/// Format version written by this build.
+pub const VERSION: u16 = 1;
+/// Fixed file header size in bytes.
+pub const HEADER_BYTES: usize = 16;
+/// Per-section header size in bytes.
+pub const SECTION_HEADER_BYTES: usize = 12;
+/// Hard cap on one section's payload, enforced before any allocation.
+pub const MAX_SECTION: u32 = 64 * 1024 * 1024;
+/// Hard cap on the section count (a lying header cannot drive a loop).
+pub const MAX_SECTIONS: u32 = 65_536;
+
+/// Section kinds. Values are part of the on-disk contract.
+pub const SEC_META: u16 = 1;
+/// Model parameter; tag = parameter index.
+pub const SEC_PARAM: u16 = 2;
+/// Update-rule momentum (velocity); tag = parameter index.
+pub const SEC_VELOCITY: u16 = 3;
+/// BatchNorm running (mean ‖ var); tag = bn index in `bn_order`.
+pub const SEC_BN: u16 = 4;
+/// Opaque `Preconditioner::state_save` payload; tag = kfac layer index.
+pub const SEC_LAYER: u16 = 5;
+/// Loader cursor (data + validation RNG streams, stash arity).
+pub const SEC_LOADER: u16 = 6;
+/// Per-lane transform-chain state; tag = lane index.
+pub const SEC_CHAIN: u16 = 7;
+/// In-flight prefetched batch; tag = lane index.
+pub const SEC_STASH: u16 = 8;
+
+fn known_kind(kind: u16) -> bool {
+    (SEC_META..=SEC_STASH).contains(&kind)
+}
+
+/// Structured parse failure — every variant names what broke.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CkptError {
+    /// file ends before the bytes its own headers promise
+    Truncated,
+    BadMagic([u8; 4]),
+    BadVersion(u16),
+    BadKind(u16),
+    TooManySections(u32),
+    Oversized { kind: u16, len: u32 },
+    BadChecksum { kind: u16, want: u32, got: u32 },
+    Duplicate { kind: u16, tag: u16 },
+    BadPayload(&'static str),
+    Missing(&'static str),
+}
+
+impl std::fmt::Display for CkptError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CkptError::Truncated => write!(f, "checkpoint truncated"),
+            CkptError::BadMagic(m) => write!(f, "bad magic {m:02x?} (want SPCK)"),
+            CkptError::BadVersion(v) => write!(f, "unsupported version {v} (want {VERSION})"),
+            CkptError::BadKind(k) => write!(f, "unknown section kind {k}"),
+            CkptError::TooManySections(n) => {
+                write!(f, "section count {n} exceeds cap {MAX_SECTIONS}")
+            }
+            CkptError::Oversized { kind, len } => {
+                write!(f, "section kind {kind} length {len} exceeds cap {MAX_SECTION}")
+            }
+            CkptError::BadChecksum { kind, want, got } => {
+                write!(f, "section kind {kind} checksum mismatch (want {want:08x}, got {got:08x})")
+            }
+            CkptError::Duplicate { kind, tag } => {
+                write!(f, "duplicate section (kind {kind}, tag {tag})")
+            }
+            CkptError::BadPayload(why) => write!(f, "bad payload: {why}"),
+            CkptError::Missing(what) => write!(f, "checkpoint missing {what}"),
+        }
+    }
+}
+
+impl std::error::Error for CkptError {}
+
+/// One decoded section.
+#[derive(Clone, Debug)]
+pub struct Section {
+    pub kind: u16,
+    pub tag: u16,
+    pub payload: Vec<u8>,
+}
+
+/// A decoded checkpoint: the flat section list plus a uniqueness
+/// guarantee on `(kind, tag)`.
+#[derive(Clone, Debug, Default)]
+pub struct Checkpoint {
+    pub sections: Vec<Section>,
+}
+
+impl Checkpoint {
+    pub fn new() -> Self {
+        Checkpoint { sections: Vec::new() }
+    }
+
+    pub fn push(&mut self, kind: u16, tag: u16, payload: Vec<u8>) {
+        debug_assert!(payload.len() as u32 <= MAX_SECTION);
+        self.sections.push(Section { kind, tag, payload });
+    }
+
+    /// The unique section of `(kind, tag)`, if present.
+    pub fn section(&self, kind: u16, tag: u16) -> Option<&[u8]> {
+        self.sections
+            .iter()
+            .find(|s| s.kind == kind && s.tag == tag)
+            .map(|s| s.payload.as_slice())
+    }
+
+    /// Required-section accessor with a structured error.
+    pub fn require(&self, kind: u16, tag: u16, what: &'static str) -> Result<&[u8], CkptError> {
+        self.section(kind, tag).ok_or(CkptError::Missing(what))
+    }
+
+    /// All sections of one kind, in tag order.
+    pub fn sections_of(&self, kind: u16) -> Vec<(u16, &[u8])> {
+        let mut out: Vec<(u16, &[u8])> = self
+            .sections
+            .iter()
+            .filter(|s| s.kind == kind)
+            .map(|s| (s.tag, s.payload.as_slice()))
+            .collect();
+        out.sort_by_key(|(tag, _)| *tag);
+        out
+    }
+
+    /// Serialize to the on-disk byte layout.
+    pub fn encode(&self) -> Vec<u8> {
+        let body: usize = self
+            .sections
+            .iter()
+            .map(|s| SECTION_HEADER_BYTES + s.payload.len())
+            .sum();
+        let mut out = Vec::with_capacity(HEADER_BYTES + body);
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&0u16.to_le_bytes()); // flags
+        out.extend_from_slice(&(self.sections.len() as u32).to_le_bytes());
+        out.extend_from_slice(&0u32.to_le_bytes()); // reserved
+        for s in &self.sections {
+            out.extend_from_slice(&s.kind.to_le_bytes());
+            out.extend_from_slice(&s.tag.to_le_bytes());
+            out.extend_from_slice(&(s.payload.len() as u32).to_le_bytes());
+            out.extend_from_slice(&checksum(&s.payload).to_le_bytes());
+            out.extend_from_slice(&s.payload);
+        }
+        out
+    }
+
+    /// Parse a complete checkpoint file. Total: any byte soup maps to a
+    /// structured error. Caps are enforced from headers alone, before
+    /// any payload allocation.
+    pub fn parse(bytes: &[u8]) -> Result<Checkpoint, CkptError> {
+        if bytes.len() < HEADER_BYTES {
+            return Err(CkptError::Truncated);
+        }
+        if bytes[..4] != MAGIC {
+            return Err(CkptError::BadMagic([bytes[0], bytes[1], bytes[2], bytes[3]]));
+        }
+        let version = u16::from_le_bytes([bytes[4], bytes[5]]);
+        if version != VERSION {
+            return Err(CkptError::BadVersion(version));
+        }
+        let nsect = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]);
+        if nsect > MAX_SECTIONS {
+            return Err(CkptError::TooManySections(nsect));
+        }
+        let mut pos = HEADER_BYTES;
+        let mut ck = Checkpoint::new();
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..nsect {
+            if bytes.len() - pos < SECTION_HEADER_BYTES {
+                return Err(CkptError::Truncated);
+            }
+            let kind = u16::from_le_bytes([bytes[pos], bytes[pos + 1]]);
+            let tag = u16::from_le_bytes([bytes[pos + 2], bytes[pos + 3]]);
+            let len =
+                u32::from_le_bytes([bytes[pos + 4], bytes[pos + 5], bytes[pos + 6], bytes[pos + 7]]);
+            let want = u32::from_le_bytes([
+                bytes[pos + 8],
+                bytes[pos + 9],
+                bytes[pos + 10],
+                bytes[pos + 11],
+            ]);
+            pos += SECTION_HEADER_BYTES;
+            if !known_kind(kind) {
+                return Err(CkptError::BadKind(kind));
+            }
+            if len > MAX_SECTION {
+                return Err(CkptError::Oversized { kind, len });
+            }
+            let len = len as usize;
+            if bytes.len() - pos < len {
+                return Err(CkptError::Truncated);
+            }
+            let payload = &bytes[pos..pos + len];
+            pos += len;
+            let got = checksum(payload);
+            if got != want {
+                return Err(CkptError::BadChecksum { kind, want, got });
+            }
+            if !seen.insert((kind, tag)) {
+                return Err(CkptError::Duplicate { kind, tag });
+            }
+            ck.push(kind, tag, payload.to_vec());
+        }
+        if pos != bytes.len() {
+            return Err(CkptError::BadPayload("trailing bytes after last section"));
+        }
+        Ok(ck)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        let mut ck = Checkpoint::new();
+        ck.push(SEC_META, 0, b"meta-bytes".to_vec());
+        ck.push(SEC_PARAM, 0, vec![1, 2, 3, 4]);
+        ck.push(SEC_PARAM, 1, vec![]);
+        ck.push(SEC_LAYER, 3, vec![0xAB; 33]);
+        ck
+    }
+
+    #[test]
+    fn encode_parse_roundtrip() {
+        let ck = sample();
+        let bytes = ck.encode();
+        let back = Checkpoint::parse(&bytes).unwrap();
+        assert_eq!(back.sections.len(), 4);
+        assert_eq!(back.section(SEC_META, 0).unwrap(), b"meta-bytes");
+        assert_eq!(back.section(SEC_PARAM, 1).unwrap(), b"");
+        assert_eq!(back.section(SEC_LAYER, 3).unwrap(), &[0xAB; 33][..]);
+        assert!(back.section(SEC_PARAM, 2).is_none());
+        let params = back.sections_of(SEC_PARAM);
+        assert_eq!(params.iter().map(|(t, _)| *t).collect::<Vec<_>>(), vec![0, 1]);
+    }
+
+    #[test]
+    fn header_rejections() {
+        assert_eq!(Checkpoint::parse(&[]), Err(CkptError::Truncated));
+        assert_eq!(Checkpoint::parse(&[0; 8]), Err(CkptError::Truncated));
+        let mut b = sample().encode();
+        b[0] = b'X';
+        assert!(matches!(Checkpoint::parse(&b), Err(CkptError::BadMagic(_))));
+        let mut b = sample().encode();
+        b[4] = 0xFE;
+        assert!(matches!(Checkpoint::parse(&b), Err(CkptError::BadVersion(_))));
+        // a lying section count larger than the cap is rejected from the
+        // header alone — no allocation, no loop
+        let mut b = sample().encode();
+        b[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(Checkpoint::parse(&b), Err(CkptError::TooManySections(_))));
+    }
+
+    #[test]
+    fn section_rejections() {
+        // oversized length rejected before any payload read
+        let mut b = sample().encode();
+        b[HEADER_BYTES + 4..HEADER_BYTES + 8]
+            .copy_from_slice(&(MAX_SECTION + 1).to_le_bytes());
+        assert!(matches!(Checkpoint::parse(&b), Err(CkptError::Oversized { .. })));
+        // corrupt payload trips the checksum, naming the section
+        let mut b = sample().encode();
+        let off = HEADER_BYTES + SECTION_HEADER_BYTES; // first payload byte
+        b[off] ^= 0x40;
+        assert!(matches!(
+            Checkpoint::parse(&b),
+            Err(CkptError::BadChecksum { kind: SEC_META, .. })
+        ));
+        // truncation anywhere inside a section is Truncated
+        let b = sample().encode();
+        for cut in [HEADER_BYTES + 3, HEADER_BYTES + SECTION_HEADER_BYTES + 2, b.len() - 1] {
+            assert_eq!(Checkpoint::parse(&b[..cut]), Err(CkptError::Truncated), "cut={cut}");
+        }
+        // trailing garbage after the advertised sections is rejected
+        let mut b = sample().encode();
+        b.push(0);
+        assert!(matches!(Checkpoint::parse(&b), Err(CkptError::BadPayload(_))));
+        // unknown kinds are a closed-set violation
+        let mut b = sample().encode();
+        b[HEADER_BYTES..HEADER_BYTES + 2].copy_from_slice(&999u16.to_le_bytes());
+        assert!(matches!(Checkpoint::parse(&b), Err(CkptError::BadKind(999))));
+    }
+
+    #[test]
+    fn duplicate_sections_rejected() {
+        let mut ck = Checkpoint::new();
+        ck.push(SEC_PARAM, 7, vec![1]);
+        ck.push(SEC_PARAM, 7, vec![2]);
+        assert!(matches!(
+            Checkpoint::parse(&ck.encode()),
+            Err(CkptError::Duplicate { kind: SEC_PARAM, tag: 7 })
+        ));
+    }
+}

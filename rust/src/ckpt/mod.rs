@@ -1,0 +1,254 @@
+//! Checkpoint/restore: the on-disk artifact closing the train→inference
+//! loop.
+//!
+//! A checkpoint captures everything a [`crate::coordinator::Trainer`]
+//! needs to resume **bit-identically to an uninterrupted run**: model
+//! parameters, update-rule momentum, BatchNorm running statistics, each
+//! layer's opaque [`crate::optim::Preconditioner`] state (factors,
+//! inverses, stale-scheduler history), every RNG stream, and the loader
+//! cursor — including an in-flight prefetched batch, so double-buffering
+//! stays bitwise-neutral across a save/kill/resume cycle. The schedule
+//! and 1mc Fisher seeds are pure functions of the step counter and need
+//! no persistence.
+//!
+//! Layout and parsing live in [`format`] (magic `SPCK`, versioned
+//! header, checksummed section table, 64 MiB section cap — the house
+//! wire idiom); [`bytes`] holds the shared little-endian payload
+//! primitives. This module adds the file lifecycle: atomic tmp+rename
+//! writes at round boundaries and latest-checkpoint discovery, which is
+//! also what the proc engine's zero-survivor restart consults.
+
+pub mod bytes;
+pub mod format;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+pub use bytes::{ByteReader, ByteWriter};
+pub use format::{
+    Checkpoint, CkptError, Section, MAX_SECTION, SEC_BN, SEC_CHAIN, SEC_LAYER, SEC_LOADER,
+    SEC_META, SEC_PARAM, SEC_STASH, SEC_VELOCITY,
+};
+
+/// META payload layout version.
+pub const META_V: u8 = 1;
+
+/// The decoded META section (`SEC_META`, tag 0) — the run fingerprint
+/// every consumer validates before touching state. Shared between the
+/// trainer's restore path and `spngd serve`'s weight loader so the two
+/// parsers cannot drift.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Meta {
+    pub model: String,
+    pub opt: String,
+    /// 0 = f32 wire, 1 = mixed (f16 wire)
+    pub precision: u8,
+    pub lanes: u32,
+    pub nparams: u32,
+    pub nlayers: u32,
+    pub nbn: u32,
+    pub seed: u64,
+    pub step: u64,
+    /// [`params_fnv`] over the saved parameters, for end-to-end
+    /// integrity beyond the per-section checksums
+    pub params_fnv: u32,
+}
+
+impl Meta {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.u8(META_V);
+        w.str_(&self.model);
+        w.str_(&self.opt);
+        w.u8(self.precision);
+        w.u32(self.lanes);
+        w.u32(self.nparams);
+        w.u32(self.nlayers);
+        w.u32(self.nbn);
+        w.u64(self.seed);
+        w.u64(self.step);
+        w.u32(self.params_fnv);
+        w.into_inner()
+    }
+
+    pub fn parse(bytes: &[u8]) -> Result<Meta, CkptError> {
+        let mut r = ByteReader::new(bytes);
+        if r.u8()? != META_V {
+            return Err(CkptError::BadPayload("unsupported META version"));
+        }
+        // struct-literal fields evaluate in source order — keep it equal
+        // to the encode order above
+        let m = Meta {
+            model: r.str_()?,
+            opt: r.str_()?,
+            precision: r.u8()?,
+            lanes: r.u32()?,
+            nparams: r.u32()?,
+            nlayers: r.u32()?,
+            nbn: r.u32()?,
+            seed: r.u64()?,
+            step: r.u64()?,
+            params_fnv: r.u32()?,
+        };
+        r.finish()?;
+        Ok(m)
+    }
+
+    /// Decode a checkpoint's META section.
+    pub fn of(ck: &Checkpoint) -> Result<Meta, CkptError> {
+        Meta::parse(ck.require(SEC_META, 0, "meta section")?)
+    }
+}
+
+/// FNV-1a (the same function as `wire::checksum`) over the little-endian
+/// bytes of every tensor in order — streamed, no byte-vector
+/// materialization. The one hash equivalence suites, the resume test and
+/// `spngd serve` compare instead of N tensors.
+pub fn params_fnv(tensors: &[crate::runtime::HostTensor]) -> u32 {
+    let mut h = 0x811c_9dc5u32;
+    for t in tensors {
+        for v in &t.data {
+            for b in v.to_le_bytes() {
+                h ^= b as u32;
+                h = h.wrapping_mul(0x0100_0193);
+            }
+        }
+    }
+    h
+}
+
+/// File name for the checkpoint taken at `step` — zero-padded so
+/// lexicographic order is step order.
+pub fn step_path(dir: &Path, step: u64) -> PathBuf {
+    dir.join(format!("ckpt-{step:012}.spck"))
+}
+
+/// Write atomically: serialize to `<path>.tmp`, fsync, rename into
+/// place. A crash mid-write leaves the previous checkpoint intact and
+/// never a half-written `.spck`.
+pub fn write_atomic(path: &Path, ck: &Checkpoint) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+    }
+    let tmp = path.with_extension("tmp");
+    let bytes = ck.encode();
+    {
+        use std::io::Write;
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(&bytes).with_context(|| format!("writing {}", tmp.display()))?;
+        f.sync_all().ok(); // best-effort durability; rename is the atomicity barrier
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", tmp.display()))?;
+    Ok(())
+}
+
+/// Read and parse one checkpoint file.
+pub fn read_file(path: &Path) -> Result<Checkpoint> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading checkpoint {}", path.display()))?;
+    Checkpoint::parse(&bytes)
+        .with_context(|| format!("parsing checkpoint {}", path.display()))
+}
+
+/// The newest checkpoint in `dir` (highest step encoded in the file
+/// name), or `None` when the directory is empty or absent. Stray files
+/// and in-progress `.tmp` writes are ignored.
+pub fn latest(dir: &Path) -> Result<Option<PathBuf>> {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e).with_context(|| format!("listing {}", dir.display())),
+    };
+    let mut best: Option<(u64, PathBuf)> = None;
+    for entry in entries {
+        let path = entry?.path();
+        let Some(step) = parse_step(&path) else { continue };
+        if best.as_ref().map(|(s, _)| step > *s).unwrap_or(true) {
+            best = Some((step, path));
+        }
+    }
+    Ok(best.map(|(_, p)| p))
+}
+
+fn parse_step(path: &Path) -> Option<u64> {
+    let name = path.file_name()?.to_str()?;
+    let digits = name.strip_prefix("ckpt-")?.strip_suffix(".spck")?;
+    digits.parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_roundtrip_and_rejections() {
+        let m = Meta {
+            model: "convnet".into(),
+            opt: "spngd".into(),
+            precision: 1,
+            lanes: 8,
+            nparams: 22,
+            nlayers: 11,
+            nbn: 5,
+            seed: 42,
+            step: 1_000_000,
+            params_fnv: 0xDEAD_BEEF,
+        };
+        let bytes = m.encode();
+        assert_eq!(Meta::parse(&bytes).unwrap(), m);
+        // wrong version byte
+        let mut bad = bytes.clone();
+        bad[0] = 99;
+        assert!(Meta::parse(&bad).is_err());
+        // truncation anywhere must error, never panic
+        for cut in 0..bytes.len() {
+            assert!(Meta::parse(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+        // trailing garbage
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(Meta::parse(&long).is_err());
+    }
+
+    #[test]
+    fn params_fnv_matches_wire_checksum() {
+        use crate::runtime::HostTensor;
+        let ts = vec![
+            HostTensor::new(vec![2, 2], vec![1.0, -2.5, 3.25, 0.0]),
+            HostTensor::new(vec![3], vec![f32::MIN_POSITIVE, 7.0, -0.0]),
+        ];
+        let mut flat = Vec::new();
+        for t in &ts {
+            for v in &t.data {
+                flat.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        assert_eq!(params_fnv(&ts), crate::collectives::wire::checksum(&flat));
+    }
+
+    #[test]
+    fn atomic_write_and_latest_discovery() {
+        let dir = std::env::temp_dir().join(format!("spngd_ckpt_io_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(latest(&dir).unwrap().is_none());
+
+        let mut ck = Checkpoint::new();
+        ck.push(SEC_META, 0, b"m".to_vec());
+        for step in [3u64, 12, 7] {
+            write_atomic(&step_path(&dir, step), &ck).unwrap();
+        }
+        // stray files and half-written tmps must not confuse discovery
+        std::fs::write(dir.join("notes.txt"), b"x").unwrap();
+        std::fs::write(dir.join("ckpt-000000000099.tmp"), b"partial").unwrap();
+
+        let newest = latest(&dir).unwrap().unwrap();
+        assert_eq!(newest, step_path(&dir, 12));
+        let back = read_file(&newest).unwrap();
+        assert_eq!(back.section(SEC_META, 0).unwrap(), b"m");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

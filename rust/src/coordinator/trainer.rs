@@ -27,14 +27,19 @@
 //! path, two schedules.
 
 use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
+use crate::ckpt::{
+    self, ByteReader, ByteWriter, Checkpoint, MAX_SECTION, SEC_BN, SEC_CHAIN, SEC_LAYER,
+    SEC_LOADER, SEC_META, SEC_PARAM, SEC_STASH, SEC_VELOCITY,
+};
 use crate::collectives::comm::{Collective, Precision, SimComm};
 use crate::collectives::cost::StepProfile;
-use crate::data::{Batch, IoStats, Loader};
+use crate::data::{Batch, IoStats, Loader, LoaderCkpt};
 use crate::dist::{DistEngine, ProcCfg, ProcComm, RingComm};
 use crate::linalg::Mat;
 use crate::metrics::{RunLog, StageTimes, StepRecord};
@@ -42,6 +47,7 @@ use crate::optim::{
     self, Fisher, LayerStateBox, ParamSlot, Preconditioner, SchedulePolicy, StatKind, UpdateRule,
 };
 use crate::runtime::{Executor, HostTensor, Manifest, ModelManifest};
+use crate::util::json::Json;
 use crate::util::obs::{self, Cat};
 
 /// How the data-parallel workers execute (§5, Alg. 3).
@@ -453,6 +459,9 @@ impl Trainer {
             total_stats,
         };
         self.log.push(rec.clone());
+        // one hash instead of N tensors: equivalence suites and the
+        // resume test compare runs by this digest of the updated params
+        self.log.final_params_fnv = Some(self.params_digest());
         Ok(rec)
     }
 
@@ -858,6 +867,307 @@ impl Trainer {
         } else {
             sent / full
         }
+    }
+}
+
+// --------------------------------------------------- checkpoint/restore
+// The SPCK mapping of a training run (see `crate::ckpt` for the
+// container format). One checkpoint captures *everything* a resumed run
+// needs to be bit-identical to an uninterrupted one: step counter,
+// params, velocity, BN running stats, per-layer optimizer state, and the
+// full data-pipeline cursor (RNG streams, per-lane transform state, any
+// drained in-flight prefetch batch). Quantities that are pure functions
+// of the step — schedule lr/momentum, 1mc sampling seeds — need no
+// sections.
+
+fn precision_code(p: Precision) -> u8 {
+    match p {
+        Precision::F32 => 0,
+        Precision::Mixed => 1,
+    }
+}
+
+/// `Checkpoint::push` with the format's section cap enforced eagerly, so
+/// an oversized model fails at save time with a named section instead of
+/// at parse time with a corrupt file.
+fn push_checked(
+    ck: &mut Checkpoint,
+    kind: u16,
+    tag: u16,
+    payload: Vec<u8>,
+    what: &str,
+) -> Result<()> {
+    ensure!(
+        payload.len() as u64 <= MAX_SECTION as u64,
+        "{what} section is {} bytes — over the {MAX_SECTION}-byte SPCK section cap",
+        payload.len()
+    );
+    ck.push(kind, tag, payload);
+    Ok(())
+}
+
+impl Trainer {
+    fn lanes(&self) -> usize {
+        self.cfg.workers.max(1) * self.cfg.grad_accum.max(1)
+    }
+
+    /// [`ckpt::params_fnv`] over the current parameters in canonical
+    /// order — the run's one-hash identity.
+    pub fn params_digest(&self) -> u32 {
+        ckpt::params_fnv(&self.params)
+    }
+
+    /// Serialize the full training state. `&mut` because the data
+    /// pipeline drains any in-flight prefetch into its stash (the
+    /// snapshot must include it; training then consumes the stash, so
+    /// the save is bitwise-neutral to the run that continues).
+    pub fn checkpoint(&mut self) -> Result<Checkpoint> {
+        ensure!(self.params.len() <= u16::MAX as usize, "too many params for SPCK tags");
+        let loader_ck = self.loader.checkpoint_state()?;
+        let mut ck = Checkpoint::new();
+
+        let meta = ckpt::Meta {
+            model: self.model.name.clone(),
+            opt: self.opt.name().to_string(),
+            precision: precision_code(self.cfg.precision),
+            lanes: self.lanes() as u32,
+            nparams: self.params.len() as u32,
+            nlayers: self.layers.len() as u32,
+            nbn: self.bn_running.len() as u32,
+            seed: self.cfg.seed,
+            step: self.step,
+            params_fnv: self.params_digest(),
+        };
+        ck.push(SEC_META, 0, meta.encode());
+
+        for (pi, p) in self.params.iter().enumerate() {
+            let mut w = ByteWriter::new();
+            w.f32s(&p.data);
+            push_checked(&mut ck, SEC_PARAM, pi as u16, w.into_inner(), "param")?;
+        }
+        for (pi, v) in self.velocity.iter().enumerate() {
+            let mut w = ByteWriter::new();
+            w.f32s(&v.data);
+            push_checked(&mut ck, SEC_VELOCITY, pi as u16, w.into_inner(), "velocity")?;
+        }
+        for (bi, (mean, var)) in self.bn_running.iter().enumerate() {
+            let mut w = ByteWriter::new();
+            w.u32(mean.data.len() as u32);
+            w.f32s(&mean.data);
+            w.f32s(&var.data);
+            push_checked(&mut ck, SEC_BN, bi as u16, w.into_inner(), "bn")?;
+        }
+        for (li, slot) in self.layers.iter().enumerate() {
+            let payload = self.opt.state_save(&self.model, li, &slot.state);
+            push_checked(&mut ck, SEC_LAYER, li as u16, payload, "layer state")?;
+        }
+
+        let mut w = ByteWriter::new();
+        w.rng_state(loader_ck.rng);
+        w.rng_state(loader_ck.val_rng);
+        w.u8(loader_ck.stash.is_some() as u8);
+        ck.push(SEC_LOADER, 0, w.into_inner());
+        for (g, chain) in loader_ck.chains.iter().enumerate() {
+            push_checked(&mut ck, SEC_CHAIN, g as u16, chain.clone(), "lane chain")?;
+        }
+        if let Some(stash) = &loader_ck.stash {
+            for (g, b) in stash.iter().enumerate() {
+                let mut w = ByteWriter::new();
+                b.state_save(&mut w);
+                push_checked(&mut ck, SEC_STASH, g as u16, w.into_inner(), "stash batch")?;
+            }
+        }
+        Ok(ck)
+    }
+
+    /// Write the current state atomically into `dir` as
+    /// `ckpt-{step:012}.spck` and emit a `checkpoint_saved` event.
+    pub fn save_checkpoint(&mut self, dir: &Path) -> Result<PathBuf> {
+        let ck = self.checkpoint()?;
+        let path = ckpt::step_path(dir, self.step);
+        ckpt::write_atomic(&path, &ck)?;
+        obs::emit(
+            "checkpoint_saved",
+            vec![
+                ("step", Json::from(self.step as usize)),
+                ("path", Json::from(path.display().to_string())),
+            ],
+        );
+        Ok(path)
+    }
+
+    /// Restore a parsed checkpoint into this trainer. The run
+    /// configuration (model, optimizer, precision, lane count, seed)
+    /// must match the one that produced the checkpoint — the META
+    /// fingerprint is validated before any state is touched. After a
+    /// successful restore the trainer is bit-identical to the saved run
+    /// at its `step` boundary, including a cured poisoned data pipeline
+    /// (the fault-recovery path restores over a live trainer).
+    pub fn restore(&mut self, ck: &Checkpoint) -> Result<()> {
+        let meta = ckpt::Meta::of(ck)?;
+        ensure!(
+            meta.model == self.model.name,
+            "checkpoint is for model '{}', run is configured for '{}'",
+            meta.model,
+            self.model.name
+        );
+        ensure!(
+            meta.opt == self.opt.name(),
+            "checkpoint is for optimizer '{}', run is configured for '{}'",
+            meta.opt,
+            self.opt.name()
+        );
+        ensure!(
+            meta.precision == precision_code(self.cfg.precision),
+            "checkpoint precision ({}) differs from the run's ({:?})",
+            if meta.precision == 0 { "f32" } else { "mixed" },
+            self.cfg.precision
+        );
+        let lanes = meta.lanes as usize;
+        ensure!(
+            lanes == self.lanes(),
+            "checkpoint has {lanes} lanes, run is configured for {} \
+             (workers × grad-accum must factorize the same lane total)",
+            self.lanes()
+        );
+        ensure!(
+            meta.seed == self.cfg.seed,
+            "checkpoint was produced with --seed {}, run uses {}",
+            meta.seed,
+            self.cfg.seed
+        );
+        let (nparams, nlayers, nbn) =
+            (meta.nparams as usize, meta.nlayers as usize, meta.nbn as usize);
+        ensure!(
+            nparams == self.params.len()
+                && nlayers == self.layers.len()
+                && nbn == self.bn_running.len(),
+            "checkpoint geometry ({nparams} params / {nlayers} layers / {nbn} bn) does not \
+             match the model ({} / {} / {})",
+            self.params.len(),
+            self.layers.len(),
+            self.bn_running.len()
+        );
+
+        for pi in 0..nparams {
+            let bytes = ck.require(SEC_PARAM, pi as u16, "param section")?;
+            let mut r = ByteReader::new(bytes);
+            let data = r.f32s(self.params[pi].data.len())?;
+            r.finish()?;
+            self.params[pi].data = data;
+        }
+        for pi in 0..nparams {
+            let bytes = ck.require(SEC_VELOCITY, pi as u16, "velocity section")?;
+            let mut r = ByteReader::new(bytes);
+            let data = r.f32s(self.velocity[pi].data.len())?;
+            r.finish()?;
+            self.velocity[pi].data = data;
+        }
+        for bi in 0..nbn {
+            let bytes = ck.require(SEC_BN, bi as u16, "bn section")?;
+            let mut r = ByteReader::new(bytes);
+            let ch = r.u32()? as usize;
+            ensure!(
+                ch == self.bn_running[bi].0.data.len(),
+                "bn section {bi} has {ch} channels, model expects {}",
+                self.bn_running[bi].0.data.len()
+            );
+            let mean = r.f32s(ch)?;
+            let var = r.f32s(ch)?;
+            r.finish()?;
+            self.bn_running[bi].0.data = mean;
+            self.bn_running[bi].1.data = var;
+        }
+        for li in 0..nlayers {
+            let bytes = ck.require(SEC_LAYER, li as u16, "layer-state section")?;
+            self.opt
+                .state_load(&self.model, li, &mut self.layers[li].state, bytes)
+                .with_context(|| format!("layer {li} state"))?;
+        }
+
+        let mut r = ByteReader::new(ck.require(SEC_LOADER, 0, "loader section")?);
+        let rng = r.rng_state()?;
+        let val_rng = r.rng_state()?;
+        let has_stash = match r.u8()? {
+            0 => false,
+            1 => true,
+            f => bail!("bad stash flag {f} in loader section"),
+        };
+        r.finish()?;
+        let chain_secs = ck.sections_of(SEC_CHAIN);
+        for (g, (tag, _)) in chain_secs.iter().enumerate() {
+            ensure!(*tag as usize == g, "lane-chain sections are not contiguous from 0");
+        }
+        let chains: Vec<Vec<u8>> = chain_secs.iter().map(|(_, b)| b.to_vec()).collect();
+        let stash = if has_stash {
+            let mut v = Vec::with_capacity(chains.len());
+            for g in 0..chains.len() {
+                let mut r = ByteReader::new(ck.require(SEC_STASH, g as u16, "stash section")?);
+                let b = Batch::state_load(&mut r)?;
+                r.finish()?;
+                v.push(b);
+            }
+            Some(v)
+        } else {
+            None
+        };
+        self.loader.restore_state(LoaderCkpt { rng, val_rng, chains, stash })?;
+
+        self.step = meta.step;
+        ensure!(
+            self.params_digest() == meta.params_fnv,
+            "restored parameters do not hash to the checkpoint's digest — corrupt sections?"
+        );
+        self.log.final_params_fnv = Some(meta.params_fnv);
+        Ok(())
+    }
+
+    /// Read + restore one checkpoint file and emit a `resumed` event.
+    pub fn resume_from(&mut self, path: &Path) -> Result<()> {
+        let ck = ckpt::read_file(path)?;
+        self.restore(&ck).with_context(|| format!("restoring {}", path.display()))?;
+        obs::emit(
+            "resumed",
+            vec![
+                ("step", Json::from(self.step as usize)),
+                ("path", Json::from(path.display().to_string())),
+            ],
+        );
+        Ok(())
+    }
+
+    /// Resume from the highest-step checkpoint under `dir`, if any.
+    /// Returns the resumed step, or `None` when the directory holds no
+    /// checkpoint (a fresh run).
+    pub fn resume_latest(&mut self, dir: &Path) -> Result<Option<u64>> {
+        match ckpt::latest(dir)? {
+            Some(path) => {
+                self.resume_from(&path)?;
+                Ok(Some(self.step))
+            }
+            None => Ok(None),
+        }
+    }
+
+    /// Fault recovery: after a fatal step error (e.g. the proc engine's
+    /// respawn budget exhausted with zero survivors), relaunch the
+    /// worker pool and rewind to the latest checkpoint under `dir`.
+    /// Returns the step training resumes from. Unlike [`resume_latest`],
+    /// a missing checkpoint is an error — there is nothing sound to
+    /// continue from.
+    ///
+    /// [`resume_latest`]: Trainer::resume_latest
+    pub fn recover_from_latest(&mut self, dir: &Path) -> Result<u64> {
+        if self.proc.is_some() {
+            // the old transport died with the fatal; a fresh pool picks
+            // up membership from scratch
+            self.proc =
+                Some(ProcComm::launch(self.cfg.workers.max(1), self.cfg.precision, &self.cfg.proc)?);
+        }
+        let path = ckpt::latest(dir)?
+            .with_context(|| format!("no checkpoint under {} to recover from", dir.display()))?;
+        self.resume_from(&path)?;
+        Ok(self.step)
     }
 }
 

@@ -139,12 +139,29 @@ pub struct Loader {
     state: Arc<Mutex<TrainState>>,
     val_rng: Rng,
     pending: Option<Arc<Slot>>,
+    /// a drained in-flight prefetch buffer, parked here by
+    /// [`Loader::checkpoint_state`] (and refilled by a resume) so
+    /// checkpointing never discards a materialized batch — consumed by
+    /// the next `next()` before anything else
+    stash: Option<Vec<Batch>>,
     /// sticky failure: a prefetch job panicked, so the RNG/transform
     /// state is partially advanced and the stream can never be trusted
     /// again — every further `next()` fails
     poisoned: bool,
     wait_seconds: f64,
     batches: u64,
+}
+
+/// The loader cursor as a checkpoint sees it: both RNG streams, each
+/// lane chain's state blob, and the in-flight prefetched batch (if
+/// any). The batch rides along because its materialization already
+/// advanced the RNG/chain state — persisting state *and* buffer is what
+/// keeps double-buffered prefetch bitwise-neutral across a resume.
+pub struct LoaderCkpt {
+    pub rng: [u64; 4],
+    pub val_rng: [u64; 4],
+    pub chains: Vec<Vec<u8>>,
+    pub stash: Option<Vec<Batch>>,
 }
 
 impl Loader {
@@ -188,6 +205,7 @@ impl Loader {
             })),
             val_rng,
             pending: None,
+            stash: None,
             poisoned: false,
             wait_seconds: 0.0,
             batches: 0,
@@ -221,25 +239,29 @@ impl Loader {
         );
         let t0 = Instant::now();
         let wait_span = obs::span("data_wait", Cat::Data);
-        let cur = match self.pending.take() {
-            Some(slot) => match slot.take() {
-                Ok(b) => b,
-                Err(()) => {
-                    // the job died mid-materialize: the RNG/transform state
-                    // is partially advanced, so the stream is unrecoverable
-                    self.poisoned = true;
-                    return Err(anyhow!("data prefetch job panicked — pipeline state is lost"));
+        let cur = if let Some(b) = self.stash.take() {
+            b
+        } else {
+            match self.pending.take() {
+                Some(slot) => match slot.take() {
+                    Ok(b) => b,
+                    Err(()) => {
+                        // the job died mid-materialize: the RNG/transform state
+                        // is partially advanced, so the stream is unrecoverable
+                        self.poisoned = true;
+                        return Err(anyhow!("data prefetch job panicked — pipeline state is lost"));
+                    }
+                },
+                None => {
+                    let mut st = self.state.lock().unwrap();
+                    materialize(self.source.as_ref(), &mut st, self.batch, self.lanes)
                 }
-            },
-            None => {
-                let mut st = self.state.lock().unwrap();
-                materialize(self.source.as_ref(), &mut st, self.batch, self.lanes)
             }
         };
         drop(wait_span);
         self.wait_seconds += t0.elapsed().as_secs_f64();
         self.batches += 1;
-        if self.prefetch {
+        if self.prefetch && self.pending.is_none() {
             self.spawn_prefetch();
         }
         Ok(cur)
@@ -258,6 +280,72 @@ impl Loader {
             prep_seconds: st.prep_seconds,
             wait_seconds: self.wait_seconds,
         }
+    }
+
+    /// Snapshot the loader cursor for a checkpoint. An in-flight
+    /// prefetch is drained (blocking briefly) and **parked in the
+    /// stash** — its materialization already advanced the RNG/chain
+    /// state, so the snapshot carries both the advanced state and the
+    /// buffer it produced; training then continues by consuming the
+    /// stash, exactly as an uninterrupted run would have consumed the
+    /// prefetch slot.
+    pub fn checkpoint_state(&mut self) -> Result<LoaderCkpt> {
+        ensure!(!self.poisoned, "cannot checkpoint a poisoned data pipeline");
+        if let Some(slot) = self.pending.take() {
+            match slot.take() {
+                Ok(b) => self.stash = Some(b),
+                Err(()) => {
+                    self.poisoned = true;
+                    return Err(anyhow!("data prefetch job panicked — pipeline state is lost"));
+                }
+            }
+        }
+        let st = self.state.lock().unwrap();
+        Ok(LoaderCkpt {
+            rng: st.rng.state(),
+            val_rng: self.val_rng.state(),
+            chains: st.chains.iter().map(|c| c.state_save()).collect(),
+            stash: self.stash.clone(),
+        })
+    }
+
+    /// Restore a [`Loader::checkpoint_state`] snapshot into a loader of
+    /// the same configuration (source, lanes, chains). Usually the loader
+    /// is freshly built (`--resume`); the fault-recovery path may restore
+    /// over a live one, in which case any in-flight prefetch is discarded
+    /// — the restored cursor supersedes it entirely.
+    pub fn restore_state(&mut self, ck: LoaderCkpt) -> Result<()> {
+        if let Some(slot) = self.pending.take() {
+            // wait it out and drop the batch: the snapshot rewinds the
+            // stream behind whatever this job produced (panic included —
+            // the state it poisoned is overwritten below)
+            let _ = slot.take();
+        }
+        self.poisoned = false;
+        ensure!(
+            ck.chains.len() == self.lanes,
+            "checkpoint has {} lane chains, run is configured for {}",
+            ck.chains.len(),
+            self.lanes
+        );
+        if let Some(stash) = &ck.stash {
+            ensure!(
+                stash.len() == self.lanes,
+                "checkpoint stash has {} lane batches, run is configured for {}",
+                stash.len(),
+                self.lanes
+            );
+        }
+        // tolerate a poisoned mutex: every field it guards is overwritten
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        for (chain, bytes) in st.chains.iter_mut().zip(&ck.chains) {
+            chain.state_load(bytes)?;
+        }
+        st.rng = Rng::from_state(ck.rng);
+        drop(st);
+        self.val_rng = Rng::from_state(ck.val_rng);
+        self.stash = ck.stash;
+        Ok(())
     }
 
     fn spawn_prefetch(&mut self) {
@@ -349,6 +437,54 @@ mod tests {
         assert_eq!(s.batches, 4);
         assert!(s.prep_seconds > 0.0);
         assert!((0.0..=1.0).contains(&s.hidden_fraction()));
+    }
+
+    #[test]
+    fn checkpoint_resume_is_bitwise_neutral() {
+        for prefetch in [false, true] {
+            // reference: an uninterrupted stream
+            let mut base = mk_loader(3, prefetch);
+            let mut want = Vec::new();
+            for _ in 0..6 {
+                want.push(base.next().unwrap());
+            }
+            let want_val = base.val_batch();
+
+            // checkpoint after 3 batches, keep training on the original…
+            let mut a = mk_loader(3, prefetch);
+            for _ in 0..3 {
+                a.next().unwrap();
+            }
+            let snap = a.checkpoint_state().unwrap();
+            // …and resume a fresh loader from the snapshot
+            let mut b = mk_loader(3, prefetch);
+            b.restore_state(snap).unwrap();
+            for (step, w) in want.iter().enumerate().skip(3) {
+                let ba = a.next().unwrap();
+                let bb = b.next().unwrap();
+                for lane in 0..3 {
+                    assert_eq!(
+                        w[lane].x.data, ba[lane].x.data,
+                        "original diverged at step {step} (prefetch={prefetch})"
+                    );
+                    assert_eq!(
+                        w[lane].x.data, bb[lane].x.data,
+                        "resumed diverged at step {step} (prefetch={prefetch})"
+                    );
+                    assert_eq!(w[lane].t.data, bb[lane].t.data);
+                }
+            }
+            assert_eq!(want_val.x.data, b.val_batch().x.data);
+        }
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_lane_count() {
+        let mut a = mk_loader(2, false);
+        a.next().unwrap();
+        let snap = a.checkpoint_state().unwrap();
+        let mut b = mk_loader(3, false);
+        assert!(b.restore_state(snap).is_err());
     }
 
     #[test]

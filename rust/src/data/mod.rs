@@ -24,7 +24,7 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 pub use cifar::CifarBin;
-pub use loader::{prefetch_from_env, IoStats, Loader};
+pub use loader::{prefetch_from_env, IoStats, Loader, LoaderCkpt};
 pub use source::{draw_batch, Batch, DataSource, DataSpec};
 pub use synth::SynthDataset;
 pub use tensor::TensorDataset;

@@ -27,6 +27,20 @@ pub struct Batch {
     pub t: HostTensor,
 }
 
+impl Batch {
+    /// Checkpoint encoding (x then t, bitwise f32).
+    pub fn state_save(&self, w: &mut crate::ckpt::ByteWriter) {
+        w.tensor(&self.x);
+        w.tensor(&self.t);
+    }
+
+    pub fn state_load(
+        r: &mut crate::ckpt::ByteReader,
+    ) -> Result<Batch, crate::ckpt::CkptError> {
+        Ok(Batch { x: r.tensor()?, t: r.tensor()? })
+    }
+}
+
 /// Static geometry of a data source.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct DataSpec {

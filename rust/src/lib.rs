@@ -20,6 +20,7 @@
 //! - with the `pjrt` cargo feature, `runtime::engine` loads the AOT HLO
 //!   artifacts through the PJRT C API (`xla` crate) instead.
 
+pub mod ckpt;
 pub mod collectives;
 pub mod coordinator;
 pub mod data;
@@ -30,5 +31,6 @@ pub mod metrics;
 pub mod optim;
 pub mod linalg;
 pub mod runtime;
+pub mod serve;
 pub mod simulator;
 pub mod util;

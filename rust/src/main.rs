@@ -3,7 +3,11 @@
 //! Subcommands:
 //!   info      print the manifest summary
 //!   train     train a registered data source (--data) with a registered
-//!             optimizer (--optim spngd | sgd | lars)
+//!             optimizer (--optim spngd | sgd | lars); `--ckpt-dir` +
+//!             `--ckpt-every` write SPCK checkpoints, `--resume` picks
+//!             the run back up bit-identically
+//!   serve     load an SPCK checkpoint and answer `/v1/predict` over
+//!             HTTP with dynamic micro-batching
 //!   simulate  sweep the cluster cost model over GPU counts (Fig. 5)
 //!   worker    multi-process reducer body: connect to a coordinator
 //!             socket and serve reduction jobs (spawned by `train
@@ -24,6 +28,7 @@ use spngd::data::{self, AugmentCfg};
 use spngd::dist::{FaultPlan, ProcCfg};
 use spngd::optim::{self, BnMode, Fisher, HyperParams, Preconditioner, Schedule, SpNgd};
 use spngd::runtime::{native, Executor, Manifest};
+use spngd::serve::{Predictor, ServeCfg, Server};
 use spngd::simulator;
 use spngd::util::cli::Args;
 use spngd::util::obs;
@@ -36,11 +41,12 @@ fn main() {
     let result = match cmd {
         "info" => cmd_info(),
         "train" => cmd_train(),
+        "serve" => cmd_serve(),
         "simulate" => cmd_simulate(),
         "worker" => cmd_worker(),
         _ => {
             eprintln!(
-                "usage: spngd <info|train|simulate|worker> [options]\n\
+                "usage: spngd <info|train|serve|simulate|worker> [options]\n\
                  run `spngd <cmd> --help` for per-command options"
             );
             std::process::exit(2);
@@ -249,6 +255,9 @@ fn train_args() -> Args {
         .opt("csv", "", "write per-step CSV to this path")
         .opt("trace-out", "", "write a Chrome trace-event JSON of the run to this path (or SPNGD_TRACE)")
         .opt("events-out", "", "write the dist-layer JSONL event stream to this path (or SPNGD_EVENTS)")
+        .opt("ckpt-dir", "", "directory for SPCK checkpoints (enables --ckpt-every/--resume)")
+        .opt("ckpt-every", "0", "checkpoint every N steps (0 = never; requires --ckpt-dir)")
+        .flag("resume", "resume from the latest checkpoint in --ckpt-dir (bit-identical)")
         .opt("seed", "7", "RNG seed")
 }
 
@@ -265,7 +274,24 @@ fn cmd_train() -> Result<()> {
         obs::set_events_path(std::path::Path::new(parsed.get("events-out")))
             .map_err(|e| anyhow::anyhow!("--events-out: {e}"))?;
     }
+    let ckpt_dir = parsed.get("ckpt-dir").to_string();
+    let ckpt_every = parsed.get_usize("ckpt-every") as u64;
+    if ckpt_every > 0 && ckpt_dir.is_empty() {
+        bail!("--ckpt-every requires --ckpt-dir");
+    }
+    if parsed.get_bool("resume") && ckpt_dir.is_empty() {
+        bail!("--resume requires --ckpt-dir");
+    }
+    // proc runs can restart from the latest checkpoint after a fatal
+    let proc_mode = parsed.get_bool("proc")
+        || (!parsed.get_bool("dist") && matches!(DistMode::from_env(), DistMode::Proc));
     let mut tr = trainer_from_args(&parsed)?;
+    if parsed.get_bool("resume") {
+        match tr.resume_latest(std::path::Path::new(&ckpt_dir))? {
+            Some(step) => println!("resumed from step {step} ({ckpt_dir})"),
+            None => println!("no checkpoint under {ckpt_dir} — starting fresh"),
+        }
+    }
     println!(
         "training {} with {} (workers={}, accum={}, effective batch={})",
         tr.cfg.model,
@@ -274,8 +300,20 @@ fn cmd_train() -> Result<()> {
         tr.cfg.grad_accum,
         tr.cfg.effective_batch(32)
     );
-    for i in 1..=steps {
-        let rec = tr.step()?;
+    let mut recoveries_left = 2u32;
+    while tr.current_step() < steps as u64 {
+        let rec = match tr.step() {
+            Ok(rec) => rec,
+            Err(e) if proc_mode && !ckpt_dir.is_empty() && recoveries_left > 0 => {
+                recoveries_left -= 1;
+                eprintln!("step failed ({e:#}); restarting workers from the latest checkpoint");
+                let step = tr.recover_from_latest(std::path::Path::new(&ckpt_dir))?;
+                println!("recovered at step {step}, resuming");
+                continue;
+            }
+            Err(e) => return Err(e),
+        };
+        let i = rec.step;
         if i <= 3 || i % 20 == 0 {
             println!(
                 "step {:4}  loss {:.4}  acc {:.3}  lr {:.4}  {}/step  stats {}  refreshed {}/{}",
@@ -289,9 +327,13 @@ fn cmd_train() -> Result<()> {
                 rec.total_stats
             );
         }
-        if eval_every > 0 && i % eval_every == 0 {
+        if eval_every > 0 && i % eval_every as u64 == 0 {
             let (vl, va) = tr.evaluate(8)?;
             println!("  eval @ {i}: loss {vl:.4} acc {va:.3}");
+        }
+        if ckpt_every > 0 && i % ckpt_every == 0 {
+            let path = tr.save_checkpoint(std::path::Path::new(&ckpt_dir))?;
+            println!("checkpoint {}", path.display());
         }
     }
     let (vl, va) = tr.evaluate(16)?;
@@ -312,6 +354,58 @@ fn cmd_train() -> Result<()> {
         println!("wrote trace {}", path.display());
     }
     obs::close_events();
+    Ok(())
+}
+
+/// Serve an SPCK checkpoint over HTTP: `/healthz`, `/v1/predict` (with
+/// dynamic micro-batching), `/v1/stats`. `--ckpt` takes either a
+/// checkpoint file or a `--ckpt-dir`-style directory (latest wins).
+fn cmd_serve() -> Result<()> {
+    let model_help = format!("model name: {}", native::model::MODEL_NAMES.join(" | "));
+    let parsed = Args::new("spngd serve", "serve a checkpoint over HTTP")
+        .opt("backend", "native", "execution backend: native | pjrt")
+        .opt("artifacts", "artifacts", "artifact directory (pjrt backend)")
+        .opt("model", "convnet_small", &model_help)
+        .opt("ckpt", "", "SPCK checkpoint file, or a directory of them (required)")
+        .opt("addr", "127.0.0.1:8080", "bind address (port 0 = ephemeral)")
+        .opt("max-batch", "0", "micro-batch row cap (0 = the model's static batch)")
+        .opt("max-wait-us", "2000", "micro-batch coalescing window (µs)")
+        .opt("threads", "4", "connection handler threads")
+        .parse_env(2)
+        .map_err(|u| anyhow::anyhow!("{u}"))?;
+    let (manifest, engine) = load(parsed.get("backend"), parsed.get("artifacts"))?;
+    let given = parsed.get("ckpt");
+    if given.is_empty() {
+        bail!("serve: --ckpt is required");
+    }
+    let given = std::path::Path::new(given);
+    let path = if given.is_dir() {
+        spngd::ckpt::latest(given)?
+            .ok_or_else(|| anyhow::anyhow!("no checkpoint under {}", given.display()))?
+    } else {
+        given.to_path_buf()
+    };
+    let predictor =
+        Predictor::from_checkpoint_file(&manifest, engine, parsed.get("model"), &path)?;
+    println!(
+        "serving {} @ step {} from {} ({} classes, in_dim {})",
+        predictor.model_name(),
+        predictor.step(),
+        path.display(),
+        predictor.classes(),
+        predictor.in_dim()
+    );
+    let server = Server::bind(
+        predictor,
+        &ServeCfg {
+            addr: parsed.get("addr").to_string(),
+            max_batch: parsed.get_usize("max-batch"),
+            max_wait_us: parsed.get_u64("max-wait-us"),
+            threads: parsed.get_usize("threads"),
+        },
+    )?;
+    println!("listening on http://{}", server.addr());
+    server.run();
     Ok(())
 }
 

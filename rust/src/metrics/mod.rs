@@ -38,6 +38,11 @@ pub struct StepRecord {
 #[derive(Default)]
 pub struct RunLog {
     pub records: Vec<StepRecord>,
+    /// FNV-1a digest over the little-endian bytes of the parameter
+    /// vector after the last recorded step — one hash the equivalence
+    /// suites and the resume test compare instead of N tensors. `None`
+    /// until a step has run.
+    pub final_params_fnv: Option<u32>,
 }
 
 impl RunLog {

@@ -187,6 +187,35 @@ pub trait Preconditioner: Send + Sync {
         weights: &[&HostTensor],
     ) -> Result<Vec<HostTensor>>;
 
+    /// Serialize layer `li`'s state for a checkpoint. The payload is
+    /// opaque to the checkpoint layer; bit-exact resume requires that
+    /// `state_load(state_save(x)) == x` for everything `refresh` /
+    /// `direction` read. The default (empty payload) is correct for
+    /// stateless optimizers (SGD, LARS).
+    fn state_save(&self, model: &ModelManifest, li: usize, state: &LayerStateBox) -> Vec<u8> {
+        let _ = (model, li, state);
+        Vec::new()
+    }
+
+    /// Restore layer `li`'s state from a [`Preconditioner::state_save`]
+    /// payload. The default accepts only the empty payload it saves.
+    fn state_load(
+        &self,
+        model: &ModelManifest,
+        li: usize,
+        state: &mut LayerStateBox,
+        bytes: &[u8],
+    ) -> Result<()> {
+        let _ = (model, li, state);
+        anyhow::ensure!(
+            bytes.is_empty(),
+            "{}: unexpected layer-state payload ({} bytes) for a stateless optimizer",
+            self.name(),
+            bytes.len()
+        );
+        Ok(())
+    }
+
     /// Per-statistic refresh fractions, one entry per
     /// [`Preconditioner::stats_spec`] item in the same order (the
     /// Table 2 reduction metric). Empty = no statistics, reduction

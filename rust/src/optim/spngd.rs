@@ -6,6 +6,7 @@
 
 use anyhow::{Context, Result};
 
+use crate::ckpt::{ByteReader, ByteWriter, CkptError};
 use crate::kfac::bn::{BnFisher, BnFullFisher};
 use crate::kfac::damping::pi_split;
 use crate::linalg::Mat;
@@ -70,6 +71,34 @@ impl SpNgdLayer {
             bn_full_inv: None,
         }
     }
+}
+
+/// Layer-state payload version (inside the opaque SEC_LAYER blob).
+const LAYER_STATE_V: u8 = 1;
+
+fn save_stale(w: &mut ByteWriter, st: &StaleState) {
+    w.f32(st.alpha);
+    w.u64(st.next_refresh);
+    w.u64(st.delta);
+    w.u64(st.delta_prev);
+    w.u64(st.refreshes);
+    w.u64(st.skips);
+    let (last, before_last) = st.history();
+    w.opt_mat(last);
+    w.opt_mat(before_last);
+}
+
+fn load_stale(r: &mut ByteReader) -> Result<StaleState, CkptError> {
+    let mut st = StaleState::new(r.f32()?);
+    st.next_refresh = r.u64()?;
+    st.delta = r.u64()?;
+    st.delta_prev = r.u64()?;
+    st.refreshes = r.u64()?;
+    st.skips = r.u64()?;
+    let last = r.opt_mat()?;
+    let before_last = r.opt_mat()?;
+    st.set_history(last, before_last);
+    Ok(st)
 }
 
 fn layer_state(state: &LayerStateBox) -> Result<&SpNgdLayer> {
@@ -335,6 +364,68 @@ impl Preconditioner for SpNgd {
             let out = engine.execute(&ml.precond, &[ginv, &gmat, ainv])?;
             Ok(vec![out[0].clone().reshape(gw.shape.clone())])
         }
+    }
+
+    /// Full per-layer snapshot: factor caches, damped inverses, BN
+    /// Fisher, and both stale schedulers (history matrices included, so
+    /// the Fibonacci interval evolution resumes bit-exactly).
+    fn state_save(&self, _model: &ModelManifest, _li: usize, state: &LayerStateBox) -> Vec<u8> {
+        let layer = layer_state(state).expect("spngd layer state");
+        let mut w = ByteWriter::new();
+        w.u8(LAYER_STATE_V);
+        save_stale(&mut w, &layer.a_stale);
+        save_stale(&mut w, &layer.g_stale);
+        w.opt_mat(layer.a.as_ref());
+        w.opt_mat(layer.g.as_ref());
+        w.opt_tensor(layer.a_inv.as_ref());
+        w.opt_tensor(layer.g_inv.as_ref());
+        match &layer.bn_fisher {
+            None => w.u8(0),
+            Some(f) => {
+                w.u8(1);
+                w.u32(f.channels as u32);
+                for b in &f.blocks {
+                    w.f32s(b);
+                }
+            }
+        }
+        w.opt_mat(layer.bn_full_inv.as_ref());
+        w.into_inner()
+    }
+
+    fn state_load(
+        &self,
+        _model: &ModelManifest,
+        _li: usize,
+        state: &mut LayerStateBox,
+        bytes: &[u8],
+    ) -> Result<()> {
+        let layer = layer_state_mut(state)?;
+        let mut r = ByteReader::new(bytes);
+        let v = r.u8()?;
+        anyhow::ensure!(v == LAYER_STATE_V, "spngd layer-state version {v} unsupported");
+        layer.a_stale = load_stale(&mut r)?;
+        layer.g_stale = load_stale(&mut r)?;
+        layer.a = r.opt_mat()?;
+        layer.g = r.opt_mat()?;
+        layer.a_inv = r.opt_tensor()?;
+        layer.g_inv = r.opt_tensor()?;
+        layer.bn_fisher = match r.u8()? {
+            0 => None,
+            1 => {
+                let channels = r.u32()? as usize;
+                let mut blocks = Vec::with_capacity(channels.min(1 << 16));
+                for _ in 0..channels {
+                    let b = r.f32s(3)?;
+                    blocks.push([b[0], b[1], b[2]]);
+                }
+                Some(BnFisher { channels, blocks })
+            }
+            _ => anyhow::bail!("spngd layer state: bad bn_fisher flag"),
+        };
+        layer.bn_full_inv = r.opt_mat()?;
+        r.finish()?;
+        Ok(())
     }
 
     fn refresh_fractions(

@@ -85,6 +85,19 @@ impl StaleState {
         new_delta
     }
 
+    /// Snapshot the similarity history (X₋₁, X₋₂) for checkpointing.
+    pub fn history(&self) -> (Option<&Mat>, Option<&Mat>) {
+        (self.last.as_ref(), self.before_last.as_ref())
+    }
+
+    /// Restore the similarity history from a checkpoint; together with
+    /// the public counters this makes a restored scheduler bit-identical
+    /// to one that never stopped.
+    pub fn set_history(&mut self, last: Option<Mat>, before_last: Option<Mat>) {
+        self.last = last;
+        self.before_last = before_last;
+    }
+
     /// Fraction of steps on which this statistic was actually refreshed
     /// (the Table 2 "reduction" metric: lower = more stale reuse).
     pub fn refresh_fraction(&self) -> f64 {

@@ -73,6 +73,11 @@ pub struct ModelManifest {
     pub step_emp: String,
     pub step_1mc: String,
     pub eval_exe: String,
+    /// inference-only forward executable ((params…, x, bn stats) →
+    /// logits), used by `spngd serve`; empty when the manifest predates
+    /// the predict contract (AOT manifests without an `executables.predict`
+    /// entry)
+    pub predict_exe: String,
 }
 
 impl ModelManifest {
@@ -264,6 +269,13 @@ impl Manifest {
                     step_emp: as_str(exes.get("step_emp"), "step_emp")?,
                     step_1mc: as_str(exes.get("step_1mc"), "step_1mc")?,
                     eval_exe: as_str(exes.get("eval"), "eval")?,
+                    // optional: manifests predating the predict contract
+                    // simply have no inference executable
+                    predict_exe: exes
+                        .get("predict")
+                        .as_str()
+                        .unwrap_or("")
+                        .to_string(),
                 },
             );
         }

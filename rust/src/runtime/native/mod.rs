@@ -50,6 +50,9 @@ enum ExecSpec {
     Eval {
         model: String,
     },
+    Predict {
+        model: String,
+    },
     FactorConvA {
         cin: usize,
         h: usize,
@@ -120,9 +123,11 @@ pub fn build(model_names: &[&str], seed: u64) -> Result<(Manifest, NativeBackend
         let step_emp = format!("step_{mname}_emp");
         let step_1mc = format!("step_{mname}_1mc");
         let eval_exe = format!("eval_{mname}");
+        let predict_exe = format!("predict_{mname}");
         execs.insert(step_emp.clone(), ExecSpec::Step { model: mname.to_string(), one_mc: false });
         execs.insert(step_1mc.clone(), ExecSpec::Step { model: mname.to_string(), one_mc: true });
         execs.insert(eval_exe.clone(), ExecSpec::Eval { model: mname.to_string() });
+        execs.insert(predict_exe.clone(), ExecSpec::Predict { model: mname.to_string() });
 
         let mut kfac_layers = Vec::new();
         let mut bn_order = Vec::new();
@@ -304,6 +309,7 @@ pub fn build(model_names: &[&str], seed: u64) -> Result<(Manifest, NativeBackend
                 step_emp,
                 step_1mc,
                 eval_exe,
+                predict_exe,
             },
         );
         init_params.insert(mname.to_string(), cfg.init_params(seed));
@@ -385,6 +391,7 @@ impl Executor for NativeBackend {
             match spec {
                 ExecSpec::Step { .. } => "exec_step",
                 ExecSpec::Eval { .. } => "exec_eval",
+                ExecSpec::Predict { .. } => "exec_predict",
                 ExecSpec::FactorConvA { .. } => "exec_factor_conv_a",
                 ExecSpec::FactorSyrk { .. } => "exec_factor_syrk",
                 ExecSpec::BnInv => "exec_bn_inv",
@@ -407,6 +414,11 @@ impl Executor for NativeBackend {
                 let m = self.model(model)?;
                 net::run_eval(&m.cfg, &m.param_names, &m.geo, inputs, scratch)
                     .with_context(|| format!("native eval {name}"))?
+            }
+            ExecSpec::Predict { model } => {
+                let m = self.model(model)?;
+                net::run_predict(&m.cfg, &m.param_names, &m.geo, inputs, scratch)
+                    .with_context(|| format!("native predict {name}"))?
             }
             ExecSpec::FactorConvA { cin, h, w, k, stride, pad, batch } => {
                 anyhow::ensure!(inputs.len() == 1, "{name}: expects the a_tap input");
@@ -503,6 +515,7 @@ mod tests {
         assert!(backend.execs.contains_key(&m.step_emp));
         assert!(backend.execs.contains_key(&m.step_1mc));
         assert!(backend.execs.contains_key(&m.eval_exe));
+        assert!(backend.execs.contains_key(&m.predict_exe));
         // buckets are multiples of 16 and cover the dims
         for l in m.kfac_layers.iter().filter(|l| !l.is_bn()) {
             assert!(l.a_bucket >= l.a_dim && l.a_bucket % 16 == 0);

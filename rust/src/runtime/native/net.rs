@@ -928,3 +928,45 @@ pub fn run_eval(
     let (loss, ncorrect, _) = softmax_xent(&fwd.logits, t);
     Ok(vec![HostTensor::scalar(loss), HostTensor::scalar(ncorrect)])
 }
+
+/// The predict executable: (params…, x, bn_means…, bn_vars…) → logits
+/// (B, K). The inference-only forward path `spngd serve` runs: no
+/// labels, no loss — just the network under the coordinator-maintained
+/// running BN statistics. Like every native executable the batch shape
+/// is static (`cfg.batch`); callers with fewer live rows pad and slice.
+pub fn run_predict(
+    cfg: &NativeModelCfg,
+    param_names: &[String],
+    geo: &[LayerGeo],
+    inputs: &[&HostTensor],
+    scratch: &mut Scratch,
+) -> Result<Vec<HostTensor>> {
+    let np = param_names.len();
+    let bn_names: Vec<&str> =
+        geo.iter().filter(|lg| lg.kind == "bn").map(|lg| lg.name.as_str()).collect();
+    let nb = bn_names.len();
+    anyhow::ensure!(
+        inputs.len() == np + 1 + 2 * nb,
+        "predict executable expects {} inputs (params, x, bn stats), got {}",
+        np + 1 + 2 * nb,
+        inputs.len()
+    );
+    let pdict: PDict =
+        param_names.iter().map(String::as_str).zip(inputs[..np].iter().copied()).collect();
+    let x = inputs[np];
+    let (c, h, w) = cfg.in_shape;
+    anyhow::ensure!(
+        x.shape == [cfg.batch, c, h, w],
+        "input shape {:?} != ({}, {c}, {h}, {w})",
+        x.shape,
+        cfg.batch
+    );
+    let bn_running: BTreeMap<&str, (&HostTensor, &HostTensor)> = bn_names
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| (n, (inputs[np + 1 + i], inputs[np + 1 + nb + i])))
+        .collect();
+    let fwd = forward(cfg, &pdict, x, Some(&bn_running), scratch)?;
+    let (b, k) = (fwd.logits.rows, fwd.logits.cols);
+    Ok(vec![HostTensor::new(vec![b, k], fwd.logits.data)])
+}

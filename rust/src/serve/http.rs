@@ -1,0 +1,197 @@
+//! Dependency-free HTTP/1.1 — just enough protocol for the inference
+//! endpoints, on `std::io` traits so tests can drive it with in-memory
+//! cursors. Parse-don't-panic: every malformed input surfaces as a
+//! typed [`HttpError`] the connection handler maps to a status code,
+//! and header/body sizes are capped before allocation (the same
+//! total-parser discipline as `ckpt::format`).
+
+use std::io::{BufRead, Read, Write};
+
+use crate::util::json::Json;
+
+/// Request line + headers cap (bytes).
+pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+/// Body cap (bytes) — comfortably fits a full model batch of f32 rows
+/// in JSON while bounding a hostile Content-Length.
+pub const MAX_BODY_BYTES: usize = 8 * 1024 * 1024;
+
+/// One parsed request. Headers beyond Content-Length are dropped — the
+/// routes don't consume them.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+#[derive(Debug)]
+pub enum HttpError {
+    /// peer closed between requests — the clean keep-alive exit
+    Closed,
+    /// protocol violation → 400, then drop the connection
+    Bad(&'static str),
+    /// declared body over [`MAX_BODY_BYTES`] → 413
+    TooLarge,
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HttpError::Closed => write!(f, "connection closed"),
+            HttpError::Bad(why) => write!(f, "bad request: {why}"),
+            HttpError::TooLarge => write!(f, "request body too large"),
+            HttpError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+fn read_line_capped(
+    r: &mut impl BufRead,
+    budget: &mut usize,
+    what: &'static str,
+) -> Result<Option<String>, HttpError> {
+    let mut line = String::new();
+    let n = match r.read_line(&mut line) {
+        Ok(n) => n,
+        // non-UTF-8 header bytes are a protocol violation, not an I/O fault
+        Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+            return Err(HttpError::Bad("non-utf8 bytes in headers"))
+        }
+        Err(e) => return Err(HttpError::Io(e)),
+    };
+    if n == 0 {
+        return Ok(None);
+    }
+    *budget = budget.checked_sub(n).ok_or(HttpError::Bad(what))?;
+    Ok(Some(line.trim_end_matches(['\r', '\n']).to_string()))
+}
+
+/// Read one request. [`HttpError::Closed`] when the peer hangs up
+/// before the first byte (the keep-alive loop's normal exit).
+pub fn read_request(r: &mut impl BufRead) -> Result<Request, HttpError> {
+    let mut budget = MAX_HEADER_BYTES;
+    let first = read_line_capped(r, &mut budget, "request line too long")?
+        .ok_or(HttpError::Closed)?;
+    let mut parts = first.split_whitespace();
+    let method = parts.next().filter(|m| !m.is_empty()).ok_or(HttpError::Bad("empty request line"))?;
+    let path = parts.next().ok_or(HttpError::Bad("missing request path"))?;
+    let version = parts.next().ok_or(HttpError::Bad("missing protocol version"))?;
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::Bad("not an HTTP/1.x request"));
+    }
+
+    let mut content_length = 0usize;
+    loop {
+        let line = read_line_capped(r, &mut budget, "headers too long")?
+            .ok_or(HttpError::Bad("eof inside headers"))?;
+        if line.is_empty() {
+            break;
+        }
+        let (k, v) = line.split_once(':').ok_or(HttpError::Bad("malformed header"))?;
+        if k.eq_ignore_ascii_case("content-length") {
+            content_length =
+                v.trim().parse().map_err(|_| HttpError::Bad("unparseable content-length"))?;
+        } else if k.eq_ignore_ascii_case("transfer-encoding") {
+            return Err(HttpError::Bad("chunked bodies not supported"));
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Err(HttpError::TooLarge);
+    }
+    let mut body = vec![0u8; content_length];
+    r.read_exact(&mut body).map_err(HttpError::Io)?;
+    Ok(Request { method: method.to_string(), path: path.to_string(), body })
+}
+
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Status",
+    }
+}
+
+/// Write one JSON response (keep-alive; Content-Length framed).
+pub fn write_json(w: &mut impl Write, status: u16, body: &Json) -> std::io::Result<()> {
+    let b = body.to_string();
+    write!(
+        w,
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n{b}",
+        reason(status),
+        b.len()
+    )?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::obj;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_post_with_body_and_keepalive_sequencing() {
+        let wire = b"POST /v1/predict HTTP/1.1\r\nHost: x\r\nContent-Length: 7\r\n\r\n{\"x\":1}GET /healthz HTTP/1.1\r\n\r\n";
+        let mut r = Cursor::new(&wire[..]);
+        let a = read_request(&mut r).unwrap();
+        assert_eq!(a.method, "POST");
+        assert_eq!(a.path, "/v1/predict");
+        assert_eq!(a.body, b"{\"x\":1}");
+        let b = read_request(&mut r).unwrap();
+        assert_eq!((b.method.as_str(), b.path.as_str()), ("GET", "/healthz"));
+        assert!(b.body.is_empty());
+        // stream exhausted → clean Closed
+        assert!(matches!(read_request(&mut r), Err(HttpError::Closed)));
+    }
+
+    #[test]
+    fn malformed_requests_are_typed_errors_never_panics() {
+        let cases: &[&[u8]] = &[
+            b"GARBAGE\r\n\r\n",                                        // no path/version
+            b"GET /x SPDY/3\r\n\r\n",                                  // wrong protocol
+            b"GET /x HTTP/1.1\r\nbroken header\r\n\r\n",               // no colon
+            b"POST /x HTTP/1.1\r\nContent-Length: nope\r\n\r\n",       // bad length
+            b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n", // chunked
+            b"GET /x HTTP/1.1\r\nIncomplete",                          // eof in headers
+            b"\xff\xfe\x00GET",                                        // byte soup
+        ];
+        for c in cases {
+            assert!(
+                matches!(read_request(&mut Cursor::new(*c)), Err(HttpError::Bad(_))),
+                "case {:?}",
+                String::from_utf8_lossy(c)
+            );
+        }
+        // declared body larger than the cap → TooLarge, with NO allocation
+        let big = format!("POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n", usize::MAX / 2);
+        assert!(matches!(
+            read_request(&mut Cursor::new(big.as_bytes())),
+            Err(HttpError::TooLarge)
+        ));
+        // oversized header block
+        let long = format!("GET /x HTTP/1.1\r\nPad: {}\r\n\r\n", "a".repeat(MAX_HEADER_BYTES));
+        assert!(matches!(
+            read_request(&mut Cursor::new(long.as_bytes())),
+            Err(HttpError::Bad(_))
+        ));
+    }
+
+    #[test]
+    fn response_is_length_framed_json() {
+        let mut out = Vec::new();
+        write_json(&mut out, 200, &obj(vec![("ok", Json::from(true))])).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"), "{s}");
+        let body = s.split("\r\n\r\n").nth(1).unwrap();
+        assert_eq!(body, r#"{"ok":true}"#);
+        assert!(s.contains(&format!("Content-Length: {}", body.len())));
+    }
+}

@@ -1,0 +1,704 @@
+//! `spngd serve` — the inference side of the train→inference loop.
+//!
+//! A training run leaves an SPCK checkpoint (see [`crate::ckpt`]);
+//! this module loads its weights + BN running statistics into the same
+//! [`crate::runtime::Executor`] training used and serves typed HTTP
+//! routes over a dependency-free `std::net` server:
+//!
+//! - `GET /healthz` — liveness + model identity;
+//! - `POST /v1/predict` — `{"x": [[f32; C·H·W], ...]}` → logits +
+//!   argmax, answered through the dynamic micro-batching [`queue`];
+//! - `GET /v1/stats` — request/batch/latency counters.
+//!
+//! Requests ride a `util::pool::Pool` of connection handlers; each
+//! predict enqueues into the [`queue::BatchQueue`] and blocks on a
+//! ticket while the single batcher thread coalesces concurrent requests
+//! into full-batch forward passes (`predict_*` executables — the
+//! inference-only contract in `runtime::native::net::run_predict`).
+
+pub mod http;
+pub mod queue;
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::ckpt::{self, ByteReader, Checkpoint, SEC_BN, SEC_PARAM};
+use crate::runtime::{Executor, HostTensor, Manifest, ModelManifest};
+use crate::util::json::{obj, Json};
+use crate::util::obs::{self, Cat};
+use crate::util::pool::Pool;
+use crate::{debug, info, warn_};
+
+/// Inference-only view of a trained model: weights + BN running stats
+/// behind the runtime's predict executable. Thread-safe (`&self`
+/// forward), so the batcher and tests can share it.
+pub struct Predictor {
+    engine: Arc<dyn Executor>,
+    model: ModelManifest,
+    params: Vec<HostTensor>,
+    bn: Vec<(HostTensor, HostTensor)>,
+    /// training step the weights were saved at (checkpoint META)
+    step: u64,
+}
+
+impl Predictor {
+    /// Load weights from a parsed checkpoint. Validates the META
+    /// fingerprint against the manifest's model and the parameter
+    /// digest end-to-end, exactly like the trainer's restore path.
+    pub fn from_checkpoint(
+        manifest: &Manifest,
+        engine: Arc<dyn Executor>,
+        model_name: &str,
+        ck: &Checkpoint,
+    ) -> Result<Predictor> {
+        let model = manifest.model(model_name)?.clone();
+        ensure!(
+            !model.predict_exe.is_empty(),
+            "model '{model_name}' has no predict executable — the manifest predates the \
+             inference contract"
+        );
+        let meta = ckpt::Meta::of(ck)?;
+        ensure!(
+            meta.model == model.name,
+            "checkpoint is for model '{}', serving '{}'",
+            meta.model,
+            model.name
+        );
+        ensure!(
+            meta.nparams as usize == model.params.len(),
+            "checkpoint has {} params, model '{}' declares {}",
+            meta.nparams,
+            model.name,
+            model.params.len()
+        );
+        ensure!(
+            meta.nbn as usize == model.bn_order.len(),
+            "checkpoint has {} bn sections, model '{}' declares {}",
+            meta.nbn,
+            model.name,
+            model.bn_order.len()
+        );
+
+        // shapes come from the manifest; data is overwritten per section
+        let mut params = manifest.load_init_params(&model)?;
+        for (pi, p) in params.iter_mut().enumerate() {
+            let bytes = ck.require(SEC_PARAM, pi as u16, "param section")?;
+            let mut r = ByteReader::new(bytes);
+            let data = r.f32s(p.data.len())?;
+            r.finish()?;
+            p.data = data;
+        }
+        ensure!(
+            ckpt::params_fnv(&params) == meta.params_fnv,
+            "loaded parameters do not hash to the checkpoint's digest"
+        );
+
+        let mut bn = Vec::with_capacity(model.bn_order.len());
+        for (bi, bname) in model.bn_order.iter().enumerate() {
+            let c = model.layer(bname).map(|l| l.channels).unwrap_or(0);
+            let bytes = ck.require(SEC_BN, bi as u16, "bn section")?;
+            let mut r = ByteReader::new(bytes);
+            let ch = r.u32()? as usize;
+            ensure!(ch == c, "bn section {bi} has {ch} channels, layer '{bname}' has {c}");
+            let mean = r.f32s(ch)?;
+            let var = r.f32s(ch)?;
+            r.finish()?;
+            bn.push((HostTensor::new(vec![c], mean), HostTensor::new(vec![c], var)));
+        }
+        Ok(Predictor { engine, model, params, bn, step: meta.step })
+    }
+
+    /// Load from a checkpoint file on disk.
+    pub fn from_checkpoint_file(
+        manifest: &Manifest,
+        engine: Arc<dyn Executor>,
+        model_name: &str,
+        path: &std::path::Path,
+    ) -> Result<Predictor> {
+        let ck = ckpt::read_file(path)?;
+        Predictor::from_checkpoint(manifest, engine, model_name, &ck)
+            .with_context(|| format!("loading weights from {}", path.display()))
+    }
+
+    /// Flattened input size per row (C·H·W).
+    pub fn in_dim(&self) -> usize {
+        self.model.input_shape.iter().skip(1).product()
+    }
+
+    /// Static batch of the predict executable — the micro-batch cap.
+    pub fn batch(&self) -> usize {
+        self.model.batch
+    }
+
+    pub fn classes(&self) -> usize {
+        self.model.num_classes
+    }
+
+    pub fn model_name(&self) -> &str {
+        &self.model.name
+    }
+
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+
+    /// Forward 1..=batch rows through the predict executable. Rows are
+    /// padded up to the static batch shape with zeros and the padding
+    /// logits discarded — callers only see their own rows.
+    pub fn logits(&self, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let (b, dim, k) = (self.batch(), self.in_dim(), self.classes());
+        let n = rows.len();
+        ensure!(n >= 1 && n <= b, "predict got {n} rows, the static batch allows 1..={b}");
+        for (i, r) in rows.iter().enumerate() {
+            ensure!(
+                r.len() == dim,
+                "row {i} has {} values, the model input is {dim} (C·H·W)",
+                r.len()
+            );
+        }
+        let mut x = vec![0.0f32; b * dim];
+        for (i, r) in rows.iter().enumerate() {
+            x[i * dim..(i + 1) * dim].copy_from_slice(r);
+        }
+        let x = HostTensor::new(self.model.input_shape.clone(), x);
+        let mut inputs: Vec<&HostTensor> = self.params.iter().collect();
+        inputs.push(&x);
+        for (m, _) in &self.bn {
+            inputs.push(m);
+        }
+        for (_, v) in &self.bn {
+            inputs.push(v);
+        }
+        let out = self.engine.execute(&self.model.predict_exe, &inputs)?;
+        ensure!(
+            !out.is_empty() && out[0].data.len() == b * k,
+            "predict executable returned a malformed logits tensor"
+        );
+        Ok((0..n).map(|i| out[0].data[i * k..(i + 1) * k].to_vec()).collect())
+    }
+}
+
+/// Server knobs (`spngd serve` flags).
+#[derive(Clone, Debug)]
+pub struct ServeCfg {
+    /// bind address, e.g. `127.0.0.1:8080` (port 0 for tests)
+    pub addr: String,
+    /// micro-batch row cap; clamped to the model's static batch
+    pub max_batch: usize,
+    /// coalescing window for the micro-batcher (µs)
+    pub max_wait_us: u64,
+    /// connection-handler pool size
+    pub threads: usize,
+}
+
+impl Default for ServeCfg {
+    fn default() -> ServeCfg {
+        ServeCfg { addr: "127.0.0.1:8080".into(), max_batch: 0, max_wait_us: 2_000, threads: 4 }
+    }
+}
+
+/// HTTP-level counters ([`queue::QueueStats`] covers the batcher).
+#[derive(Default)]
+struct HttpStats {
+    requests: AtomicU64,
+    predict_requests: AtomicU64,
+    errors: AtomicU64,
+}
+
+struct Inner {
+    predictor: Predictor,
+    queue: Arc<queue::BatchQueue>,
+    http: HttpStats,
+    started: Instant,
+    stop: AtomicBool,
+}
+
+/// The serving process: listener + handler pool + batcher thread.
+pub struct Server {
+    listener: TcpListener,
+    addr: SocketAddr,
+    inner: Arc<Inner>,
+    threads: usize,
+}
+
+/// Handle to a [`Server::spawn`]ed server — tests and the CLI use it to
+/// find the bound port and to shut down cleanly.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    inner: Arc<Inner>,
+    join: std::thread::JoinHandle<()>,
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, drain the batcher, join the accept loop.
+    pub fn shutdown(self) {
+        self.inner.stop.store(true, Ordering::SeqCst);
+        self.inner.queue.shutdown();
+        // unblock the accept loop with one throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        let _ = self.join.join();
+    }
+}
+
+impl Server {
+    pub fn bind(predictor: Predictor, cfg: &ServeCfg) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        let addr = listener.local_addr().context("local addr")?;
+        let max_batch = if cfg.max_batch == 0 {
+            predictor.batch()
+        } else {
+            cfg.max_batch.min(predictor.batch())
+        };
+        let queue = queue::BatchQueue::new(queue::QueueCfg {
+            max_batch,
+            max_wait_us: cfg.max_wait_us,
+        });
+        let inner = Arc::new(Inner {
+            predictor,
+            queue,
+            http: HttpStats::default(),
+            started: Instant::now(),
+            stop: AtomicBool::new(false),
+        });
+        Ok(Server { listener, addr, inner, threads: cfg.threads.max(1) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Run the accept loop on the current thread (the CLI path). The
+    /// batcher gets its own named thread; connection handlers ride a
+    /// `util::pool::Pool` sized by `threads`.
+    pub fn run(self) {
+        let inner = self.inner.clone();
+        info!(
+            "serve",
+            "listening on http://{} (model {}, step {}, batch {}, wait {}µs)",
+            self.addr,
+            inner.predictor.model_name(),
+            inner.predictor.step(),
+            inner.queue.cfg().max_batch,
+            inner.queue.cfg().max_wait_us
+        );
+        let batcher_inner = inner.clone();
+        let batcher = std::thread::Builder::new()
+            .name("spngd-serve-batch".into())
+            .spawn(move || {
+                let i = batcher_inner.clone();
+                batcher_inner
+                    .queue
+                    .run(move |rows| i.predictor.logits(rows).map_err(|e| format!("{e:#}")))
+            })
+            .expect("spawn batcher");
+
+        let pool = Pool::new(self.threads);
+        for stream in self.listener.incoming() {
+            if inner.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            match stream {
+                Ok(s) => {
+                    let conn_inner = inner.clone();
+                    pool.submit(move || handle_connection(s, &conn_inner));
+                }
+                Err(e) => {
+                    warn_!("serve", "accept failed: {e}");
+                }
+            }
+        }
+        inner.queue.shutdown();
+        let _ = batcher.join();
+    }
+
+    /// Run on a background thread; returns a handle with the bound
+    /// address. This is the test/CI entry point (`addr` with port 0).
+    pub fn spawn(self) -> ServerHandle {
+        let addr = self.addr;
+        let inner = self.inner.clone();
+        let join = std::thread::Builder::new()
+            .name("spngd-serve-accept".into())
+            .spawn(move || self.run())
+            .expect("spawn server");
+        ServerHandle { addr, inner, join }
+    }
+}
+
+/// Per-connection loop: keep-alive request/response until the peer
+/// closes or errors.
+fn handle_connection(stream: TcpStream, inner: &Inner) {
+    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "?".into());
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    loop {
+        let req = match http::read_request(&mut reader) {
+            Ok(r) => r,
+            Err(http::HttpError::Closed) => return,
+            Err(http::HttpError::TooLarge) => {
+                inner.http.errors.fetch_add(1, Ordering::Relaxed);
+                let body = obj(vec![("error", Json::from("request body too large"))]);
+                let _ = http::write_json(&mut writer, 413, &body);
+                return;
+            }
+            Err(http::HttpError::Bad(why)) => {
+                inner.http.errors.fetch_add(1, Ordering::Relaxed);
+                let body = obj(vec![("error", Json::from(why))]);
+                let _ = http::write_json(&mut writer, 400, &body);
+                return;
+            }
+            Err(http::HttpError::Io(_)) => return,
+        };
+        inner.http.requests.fetch_add(1, Ordering::Relaxed);
+        let t0 = Instant::now();
+        let (status, body) = route(&req, inner);
+        if status >= 400 {
+            inner.http.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        debug!(
+            "serve",
+            "{peer} {} {} -> {status} in {:.1}ms",
+            req.method,
+            req.path,
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+        if http::write_json(&mut writer, status, &body).is_err() {
+            return;
+        }
+    }
+}
+
+/// Typed routing table.
+fn route(req: &http::Request, inner: &Inner) -> (u16, Json) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => (200, health_body(inner)),
+        ("GET", "/v1/stats") => (200, stats_body(inner)),
+        ("POST", "/v1/predict") => predict(req, inner),
+        ("GET", "/v1/predict") | ("POST", "/healthz") | ("POST", "/v1/stats") => {
+            (405, obj(vec![("error", Json::from("method not allowed"))]))
+        }
+        _ => (404, obj(vec![("error", Json::from("no such route"))])),
+    }
+}
+
+fn health_body(inner: &Inner) -> Json {
+    obj(vec![
+        ("ok", Json::from(true)),
+        ("model", Json::from(inner.predictor.model_name())),
+        ("step", Json::from(inner.predictor.step() as usize)),
+        ("classes", Json::from(inner.predictor.classes())),
+        ("in_dim", Json::from(inner.predictor.in_dim())),
+        ("max_batch", Json::from(inner.queue.cfg().max_batch)),
+    ])
+}
+
+fn stats_body(inner: &Inner) -> Json {
+    let q = &inner.queue.stats;
+    let ld = |a: &AtomicU64| Json::from(a.load(Ordering::Relaxed) as usize);
+    obj(vec![
+        ("uptime_s", Json::from(inner.started.elapsed().as_secs_f64())),
+        ("requests", ld(&inner.http.requests)),
+        ("predict_requests", ld(&inner.http.predict_requests)),
+        ("errors", ld(&inner.http.errors)),
+        ("batches", ld(&q.batches)),
+        ("rows", ld(&q.rows)),
+        ("full_flushes", ld(&q.full_flushes)),
+        ("timeout_flushes", ld(&q.timeout_flushes)),
+        ("queue_wait_us", ld(&q.queue_wait_us)),
+        ("forward_us", ld(&q.forward_us)),
+    ])
+}
+
+/// `POST /v1/predict`: `{"x": [[...], ...]}` (or a single flat row) →
+/// `{"logits": [[...], ...], "argmax": [...]}`.
+fn predict(req: &http::Request, inner: &Inner) -> (u16, Json) {
+    let _span = obs::span("serve_predict", Cat::Data);
+    inner.http.predict_requests.fetch_add(1, Ordering::Relaxed);
+    let bad = |why: &str| (400, obj(vec![("error", Json::from(why))]));
+    let Ok(text) = std::str::from_utf8(&req.body) else {
+        return bad("body is not utf-8");
+    };
+    let Ok(v) = Json::parse(text) else {
+        return bad("body is not valid JSON");
+    };
+    let x = v.get("x");
+    let Some(outer) = x.as_arr() else {
+        return bad("missing \"x\": expected an array of rows (or one flat row)");
+    };
+    // accept [[row], [row]] and a bare [row] of numbers
+    let rows: Vec<Vec<f32>> = if outer.iter().all(|e| e.as_f64().is_some()) && !outer.is_empty() {
+        vec![outer.iter().map(|e| e.as_f64().unwrap_or(0.0) as f32).collect()]
+    } else {
+        let mut rows = Vec::with_capacity(outer.len());
+        for e in outer {
+            let Some(row) = e.as_arr() else {
+                return bad("\"x\" rows must be arrays of numbers");
+            };
+            let mut out = Vec::with_capacity(row.len());
+            for n in row {
+                let Some(f) = n.as_f64() else {
+                    return bad("\"x\" rows must be arrays of numbers");
+                };
+                out.push(f as f32);
+            }
+            rows.push(out);
+        }
+        rows
+    };
+    if rows.is_empty() {
+        return bad("\"x\" is empty");
+    }
+    let dim = inner.predictor.in_dim();
+    if rows.iter().any(|r| r.len() != dim) {
+        return bad("every row must have C\u{b7}H\u{b7}W values (see /healthz in_dim)");
+    }
+    let ticket = match inner.queue.enqueue(rows) {
+        Ok(t) => t,
+        Err(e) => return (503, obj(vec![("error", Json::from(e))])),
+    };
+    match ticket.wait() {
+        Ok(logits) => {
+            let argmax: Vec<Json> = logits
+                .iter()
+                .map(|row| {
+                    let mut best = 0usize;
+                    for (i, v) in row.iter().enumerate() {
+                        if *v > row[best] {
+                            best = i;
+                        }
+                    }
+                    Json::from(best)
+                })
+                .collect();
+            let lj = Json::Arr(
+                logits
+                    .into_iter()
+                    .map(|row| {
+                        Json::Arr(row.into_iter().map(|v| Json::from(v as f64)).collect())
+                    })
+                    .collect(),
+            );
+            (200, obj(vec![("logits", lj), ("argmax", Json::Arr(argmax))]))
+        }
+        Err(e) => (500, obj(vec![("error", Json::from(e))])),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::TrainerBuilder;
+    use std::io::{BufRead, Read, Write};
+
+    /// A checkpointed tiny model straight off the trainer (step 0 —
+    /// weight values don't matter for the serving contract, fidelity is
+    /// `tests/ckpt.rs`'s job).
+    fn tiny_predictor() -> (Arc<Manifest>, Arc<dyn Executor>, Predictor) {
+        let (manifest, engine) = crate::harness::load_runtime_native().unwrap();
+        let mut tr = TrainerBuilder::new("convnet_tiny")
+            .runtime(manifest.clone(), engine.clone())
+            .optimizer(crate::optim::sgd())
+            .workers(1)
+            .dataset_len(256)
+            .seed(7)
+            .build()
+            .unwrap();
+        let ck = tr.checkpoint().unwrap();
+        let p =
+            Predictor::from_checkpoint(&manifest, engine.clone(), "convnet_tiny", &ck).unwrap();
+        (manifest, engine, p)
+    }
+
+    fn det_rows(n: usize, dim: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|r| {
+                (0..dim).map(|i| ((i * 37 + r * 101) % 29) as f32 / 29.0 - 0.5).collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn predictor_logits_match_a_direct_executor_forward() {
+        let (_manifest, engine, p) = tiny_predictor();
+        let (b, dim, k) = (p.batch(), p.in_dim(), p.classes());
+        let rows = det_rows(3, dim);
+        let got = p.logits(&rows).unwrap();
+
+        // hand-build the padded predict call the way a caller without the
+        // Predictor would: params…, x, bn_means…, bn_vars…
+        let mut x = vec![0.0f32; b * dim];
+        for (i, r) in rows.iter().enumerate() {
+            x[i * dim..(i + 1) * dim].copy_from_slice(r);
+        }
+        let x = HostTensor::new(p.model.input_shape.clone(), x);
+        let mut inputs: Vec<&HostTensor> = p.params.iter().collect();
+        inputs.push(&x);
+        for (m, _) in &p.bn {
+            inputs.push(m);
+        }
+        for (_, v) in &p.bn {
+            inputs.push(v);
+        }
+        let out = engine.execute(&p.model.predict_exe, &inputs).unwrap();
+        let want: Vec<Vec<f32>> =
+            (0..rows.len()).map(|i| out[0].data[i * k..(i + 1) * k].to_vec()).collect();
+        assert_eq!(got, want, "Predictor must be bitwise equal to a direct executor forward");
+
+        // contract errors: wrong row width, empty, over the static batch
+        assert!(p.logits(&[vec![0.0; dim + 1]]).is_err());
+        assert!(p.logits(&[]).is_err());
+        assert!(p.logits(&det_rows(b + 1, dim)).is_err());
+    }
+
+    // -- minimal HTTP client for the socket tests --------------------
+
+    fn read_response(r: &mut impl BufRead) -> (u16, Json) {
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        let status: u16 = line.split_whitespace().nth(1).unwrap().parse().unwrap();
+        let mut clen = 0usize;
+        loop {
+            let mut h = String::new();
+            r.read_line(&mut h).unwrap();
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.split_once(':') {
+                if k.eq_ignore_ascii_case("content-length") {
+                    clen = v.trim().parse().unwrap();
+                }
+            }
+        }
+        let mut body = vec![0u8; clen];
+        r.read_exact(&mut body).unwrap();
+        (status, Json::parse(std::str::from_utf8(&body).unwrap()).unwrap())
+    }
+
+    fn http(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, Json) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let body = body.unwrap_or("");
+        write!(
+            s,
+            "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        s.flush().unwrap();
+        read_response(&mut BufReader::new(s))
+    }
+
+    #[test]
+    fn server_routes_predict_health_stats_and_errors_over_real_sockets() {
+        let (_m, _e, p) = tiny_predictor();
+        let dim = p.in_dim();
+        let k = p.classes();
+        let server = Server::bind(
+            p,
+            &ServeCfg {
+                addr: "127.0.0.1:0".into(),
+                max_batch: 0,
+                max_wait_us: 1_000, // lone requests must not dawdle
+                threads: 2,
+            },
+        )
+        .unwrap();
+        let h = server.spawn();
+        let addr = h.addr();
+
+        let (st, health) = http(addr, "GET", "/healthz", None);
+        assert_eq!(st, 200);
+        assert_eq!(health.get("ok").as_f64(), None); // bool, not number
+        assert_eq!(health.get("model").as_str(), Some("convnet_tiny"));
+        assert_eq!(health.get("in_dim").as_usize(), Some(dim));
+
+        let row = &det_rows(1, dim)[0];
+        let xs: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+        let body = format!("{{\"x\":[[{}]]}}", xs.join(","));
+        let (st, resp) = http(addr, "POST", "/v1/predict", Some(&body));
+        assert_eq!(st, 200, "{resp:?}");
+        let logits = resp.get("logits").as_arr().unwrap();
+        assert_eq!(logits.len(), 1);
+        let l0 = logits[0].as_arr().unwrap();
+        assert_eq!(l0.len(), k);
+        let vals: Vec<f64> = l0.iter().map(|v| v.as_f64().unwrap()).collect();
+        let mut best = 0usize;
+        for (i, v) in vals.iter().enumerate() {
+            if *v > vals[best] {
+                best = i;
+            }
+        }
+        assert_eq!(resp.get("argmax").as_arr().unwrap()[0].as_usize(), Some(best));
+
+        // a bare flat row is accepted too
+        let flat = format!("{{\"x\":[{}]}}", xs.join(","));
+        let (st, resp2) = http(addr, "POST", "/v1/predict", Some(&flat));
+        assert_eq!(st, 200);
+        assert_eq!(resp2.get("logits").as_arr().unwrap().len(), 1);
+
+        // typed failures
+        assert_eq!(http(addr, "GET", "/nope", None).0, 404);
+        assert_eq!(http(addr, "POST", "/healthz", None).0, 405);
+        assert_eq!(http(addr, "POST", "/v1/predict", Some("not json")).0, 400);
+        assert_eq!(http(addr, "POST", "/v1/predict", Some("{\"x\":[]}")).0, 400);
+        assert_eq!(http(addr, "POST", "/v1/predict", Some("{\"x\":[[1.0]]}")).0, 400);
+
+        let (st, stats) = http(addr, "GET", "/v1/stats", None);
+        assert_eq!(st, 200);
+        assert!(stats.get("requests").as_usize().unwrap() >= 8);
+        assert_eq!(stats.get("predict_requests").as_usize(), Some(5));
+        assert!(stats.get("errors").as_usize().unwrap() >= 5);
+        assert_eq!(stats.get("rows").as_usize(), Some(2));
+        h.shutdown();
+    }
+
+    #[test]
+    fn concurrent_predicts_coalesce_into_one_forward_batch() {
+        let (_m, _e, p) = tiny_predictor();
+        let dim = p.in_dim();
+        let server = Server::bind(
+            p,
+            &ServeCfg {
+                addr: "127.0.0.1:0".into(),
+                max_batch: 2,
+                // far above scheduling noise: the only way both clients
+                // return quickly is the *full* flush of a shared batch
+                max_wait_us: 5_000_000,
+                threads: 4,
+            },
+        )
+        .unwrap();
+        let queue = server.inner.queue.clone();
+        let h = server.spawn();
+        let addr = h.addr();
+
+        let rows = det_rows(2, dim);
+        let mk_body = |r: &Vec<f32>| {
+            let xs: Vec<String> = r.iter().map(|v| format!("{v}")).collect();
+            format!("{{\"x\":[[{}]]}}", xs.join(","))
+        };
+        let (b0, b1) = (mk_body(&rows[0]), mk_body(&rows[1]));
+        let t0 = std::thread::spawn(move || http(addr, "POST", "/v1/predict", Some(&b0)));
+        let t1 = std::thread::spawn(move || http(addr, "POST", "/v1/predict", Some(&b1)));
+        let (s0, r0) = t0.join().unwrap();
+        let (s1, r1) = t1.join().unwrap();
+        assert_eq!((s0, s1), (200, 200), "{r0:?} {r1:?}");
+
+        assert_eq!(queue.stats.batches.load(Ordering::Relaxed), 1);
+        assert_eq!(queue.stats.rows.load(Ordering::Relaxed), 2);
+        assert_eq!(queue.stats.full_flushes.load(Ordering::Relaxed), 1);
+        h.shutdown();
+    }
+}

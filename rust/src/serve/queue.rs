@@ -1,0 +1,331 @@
+//! The dynamic micro-batching queue: concurrent `/v1/predict` handlers
+//! enqueue 1..=`max_batch` rows each and block on a ticket; one batcher
+//! thread coalesces whatever is queued into a single forward pass,
+//! flushing when `max_batch` rows are ready **or** the oldest row has
+//! waited `max_wait_us` — whichever comes first. Latency under light
+//! load is bounded by the deadline; throughput under heavy load rides
+//! the model's full static batch.
+//!
+//! Queue-wait and batch-assembly are wrapped in `util::obs` spans so a
+//! trace of a serving process shows where request time goes, exactly as
+//! training traces do for step time.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::util::obs::{self, Cat};
+
+/// Flush policy.
+#[derive(Clone, Copy, Debug)]
+pub struct QueueCfg {
+    /// rows per forward — the model's static batch (or less)
+    pub max_batch: usize,
+    /// how long the first-arrived row waits for co-riders (µs)
+    pub max_wait_us: u64,
+}
+
+/// Batcher counters, all monotonic. Exposed verbatim by `/v1/stats`.
+#[derive(Default)]
+pub struct QueueStats {
+    /// forward passes run
+    pub batches: AtomicU64,
+    /// rows predicted (sum of live rows over batches)
+    pub rows: AtomicU64,
+    /// flushes triggered by a full batch
+    pub full_flushes: AtomicU64,
+    /// flushes triggered by the deadline
+    pub timeout_flushes: AtomicU64,
+    /// cumulative queue wait of flushed batches (µs, oldest row)
+    pub queue_wait_us: AtomicU64,
+    /// cumulative forward time (µs)
+    pub forward_us: AtomicU64,
+}
+
+/// Per-batch result slot: the handler blocks on it, the batcher fills
+/// it once (logits per row, or one error shared by the batch).
+struct SlotInner {
+    m: Mutex<Option<Result<Vec<Vec<f32>>, String>>>,
+    cv: Condvar,
+}
+
+struct Item {
+    rows: Vec<Vec<f32>>,
+    enq: Instant,
+    slot: Arc<SlotInner>,
+}
+
+/// A claim on one enqueued request's results.
+pub struct Ticket {
+    slot: Arc<SlotInner>,
+}
+
+impl Ticket {
+    /// Block until the batcher fills the slot.
+    pub fn wait(self) -> Result<Vec<Vec<f32>>, String> {
+        let mut g = self.slot.m.lock().unwrap();
+        while g.is_none() {
+            g = self.slot.cv.wait(g).unwrap();
+        }
+        g.take().expect("slot filled")
+    }
+}
+
+struct QState {
+    items: VecDeque<Item>,
+    rows_queued: usize,
+    shutdown: bool,
+}
+
+pub struct BatchQueue {
+    cfg: QueueCfg,
+    st: Mutex<QState>,
+    cv: Condvar,
+    pub stats: QueueStats,
+}
+
+impl BatchQueue {
+    pub fn new(cfg: QueueCfg) -> Arc<BatchQueue> {
+        assert!(cfg.max_batch >= 1, "max_batch must be >= 1");
+        Arc::new(BatchQueue {
+            cfg,
+            st: Mutex::new(QState {
+                items: VecDeque::new(),
+                rows_queued: 0,
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+            stats: QueueStats::default(),
+        })
+    }
+
+    pub fn cfg(&self) -> QueueCfg {
+        self.cfg
+    }
+
+    /// Enqueue one request (1..=`max_batch` rows) and get a ticket. A
+    /// request larger than the batch cap is the caller's to split — one
+    /// flush must always be able to carry a whole request.
+    pub fn enqueue(&self, rows: Vec<Vec<f32>>) -> Result<Ticket, String> {
+        if rows.is_empty() {
+            return Err("empty predict request".to_string());
+        }
+        if rows.len() > self.cfg.max_batch {
+            return Err(format!(
+                "request has {} rows, the batch cap is {} — split the request",
+                rows.len(),
+                self.cfg.max_batch
+            ));
+        }
+        let slot = Arc::new(SlotInner { m: Mutex::new(None), cv: Condvar::new() });
+        let mut st = self.st.lock().unwrap();
+        if st.shutdown {
+            return Err("server is shutting down".to_string());
+        }
+        st.rows_queued += rows.len();
+        st.items.push_back(Item { rows, enq: Instant::now(), slot: slot.clone() });
+        drop(st);
+        self.cv.notify_all();
+        Ok(Ticket { slot })
+    }
+
+    /// Stop accepting work. The batcher drains what is queued (each
+    /// remaining ticket still gets an answer) and then exits.
+    pub fn shutdown(&self) {
+        self.st.lock().unwrap().shutdown = true;
+        self.cv.notify_all();
+    }
+
+    /// The batcher loop — run from one dedicated thread. `forward` maps
+    /// assembled rows to per-row logits; its error (if any) fans out to
+    /// every ticket of the batch.
+    pub fn run<F>(&self, mut forward: F)
+    where
+        F: FnMut(&[Vec<f32>]) -> Result<Vec<Vec<f32>>, String>,
+    {
+        loop {
+            let mut st = self.st.lock().unwrap();
+            while st.items.is_empty() {
+                if st.shutdown {
+                    return;
+                }
+                st = self.cv.wait(st).unwrap();
+            }
+
+            // the oldest row opens the coalescing window
+            let opened = st.items.front().expect("non-empty").enq;
+            let deadline = opened + Duration::from_micros(self.cfg.max_wait_us);
+            {
+                let _wait = obs::span("serve_queue_wait", Cat::Data);
+                loop {
+                    if st.rows_queued >= self.cfg.max_batch || st.shutdown {
+                        break;
+                    }
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    let (g, _timeout) = self.cv.wait_timeout(st, deadline - now).unwrap();
+                    st = g;
+                }
+            }
+
+            // drain whole requests up to the row cap (each fits alone by
+            // the enqueue invariant)
+            let asm = obs::span("serve_batch_assemble", Cat::Data);
+            let mut flushed: Vec<Item> = Vec::new();
+            let mut nrows = 0usize;
+            while let Some(head) = st.items.front() {
+                if nrows + head.rows.len() > self.cfg.max_batch {
+                    break;
+                }
+                nrows += head.rows.len();
+                flushed.push(st.items.pop_front().expect("front exists"));
+            }
+            st.rows_queued -= nrows;
+            let full = nrows >= self.cfg.max_batch;
+            drop(st);
+
+            let flat: Vec<Vec<f32>> =
+                flushed.iter().flat_map(|it| it.rows.iter().cloned()).collect();
+            drop(asm);
+
+            let waited = opened.elapsed();
+            if full {
+                self.stats.full_flushes.fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.stats.timeout_flushes.fetch_add(1, Ordering::Relaxed);
+            }
+            self.stats
+                .queue_wait_us
+                .fetch_add(waited.as_micros() as u64, Ordering::Relaxed);
+
+            let t0 = Instant::now();
+            let result = forward(&flat);
+            self.stats
+                .forward_us
+                .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+            self.stats.batches.fetch_add(1, Ordering::Relaxed);
+            self.stats.rows.fetch_add(nrows as u64, Ordering::Relaxed);
+
+            match result {
+                Ok(logits) => {
+                    debug_assert_eq!(logits.len(), nrows);
+                    let mut off = 0usize;
+                    for it in flushed {
+                        let n = it.rows.len();
+                        let part: Vec<Vec<f32>> = logits
+                            .get(off..off + n)
+                            .map(|s| s.to_vec())
+                            .unwrap_or_default();
+                        off += n;
+                        if part.len() == n {
+                            fill(&it.slot, Ok(part));
+                        } else {
+                            fill(
+                                &it.slot,
+                                Err("forward returned fewer rows than requested".to_string()),
+                            );
+                        }
+                    }
+                }
+                Err(e) => {
+                    for it in flushed {
+                        fill(&it.slot, Err(e.clone()));
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn fill(slot: &SlotInner, r: Result<Vec<Vec<f32>>, String>) {
+    *slot.m.lock().unwrap() = Some(r);
+    slot.cv.notify_all();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// forward = identity-ish: logits row i = [sum(row), row len]
+    fn echo_forward(rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String> {
+        Ok(rows.iter().map(|r| vec![r.iter().sum::<f32>(), r.len() as f32]).collect())
+    }
+
+    fn spawn_batcher(q: &Arc<BatchQueue>) -> std::thread::JoinHandle<()> {
+        let qc = q.clone();
+        std::thread::Builder::new()
+            .name("test-batcher".into())
+            .spawn(move || qc.run(echo_forward))
+            .unwrap()
+    }
+
+    #[test]
+    fn two_concurrent_requests_coalesce_into_one_batch() {
+        // max_wait far above scheduling noise: the flush we observe can
+        // only be the *full* flush of both requests riding together
+        let q = BatchQueue::new(QueueCfg { max_batch: 2, max_wait_us: 5_000_000 });
+        let batcher = spawn_batcher(&q);
+        let (qa, qb) = (q.clone(), q.clone());
+        let a = std::thread::spawn(move || qa.enqueue(vec![vec![1.0, 2.0]]).unwrap().wait());
+        let b = std::thread::spawn(move || qb.enqueue(vec![vec![10.0]]).unwrap().wait());
+        let ra = a.join().unwrap().unwrap();
+        let rb = b.join().unwrap().unwrap();
+        assert_eq!(ra, vec![vec![3.0, 2.0]]);
+        assert_eq!(rb, vec![vec![10.0, 1.0]]);
+        assert_eq!(q.stats.batches.load(Ordering::Relaxed), 1);
+        assert_eq!(q.stats.rows.load(Ordering::Relaxed), 2);
+        assert_eq!(q.stats.full_flushes.load(Ordering::Relaxed), 1);
+        q.shutdown();
+        batcher.join().unwrap();
+    }
+
+    #[test]
+    fn deadline_flushes_a_lonely_request() {
+        let q = BatchQueue::new(QueueCfg { max_batch: 64, max_wait_us: 2_000 });
+        let batcher = spawn_batcher(&q);
+        let r = q.enqueue(vec![vec![4.0, 4.0]]).unwrap().wait().unwrap();
+        assert_eq!(r, vec![vec![8.0, 2.0]]);
+        assert_eq!(q.stats.timeout_flushes.load(Ordering::Relaxed), 1);
+        q.shutdown();
+        batcher.join().unwrap();
+    }
+
+    #[test]
+    fn oversized_and_empty_requests_are_rejected_at_enqueue() {
+        let q = BatchQueue::new(QueueCfg { max_batch: 2, max_wait_us: 1 });
+        assert!(q.enqueue(vec![]).is_err());
+        assert!(q.enqueue(vec![vec![0.0]; 3]).is_err());
+    }
+
+    #[test]
+    fn shutdown_drains_queued_work_then_exits() {
+        let q = BatchQueue::new(QueueCfg { max_batch: 8, max_wait_us: 60_000_000 });
+        let t = q.enqueue(vec![vec![5.0]]).unwrap();
+        // shutdown before the batcher ever runs: the pending ticket must
+        // still be answered (drain), then the loop exits
+        q.shutdown();
+        let batcher = spawn_batcher(&q);
+        assert_eq!(t.wait().unwrap(), vec![vec![5.0, 1.0]]);
+        batcher.join().unwrap();
+        assert!(q.enqueue(vec![vec![1.0]]).is_err(), "post-shutdown enqueue must fail");
+    }
+
+    #[test]
+    fn forward_error_fans_out_to_every_ticket_of_the_batch() {
+        let q = BatchQueue::new(QueueCfg { max_batch: 2, max_wait_us: 5_000_000 });
+        let qc = q.clone();
+        let batcher = std::thread::spawn(move || {
+            qc.run(|_rows| Err("engine on fire".to_string()))
+        });
+        let (qa, qb) = (q.clone(), q.clone());
+        let a = std::thread::spawn(move || qa.enqueue(vec![vec![1.0]]).unwrap().wait());
+        let b = std::thread::spawn(move || qb.enqueue(vec![vec![2.0]]).unwrap().wait());
+        assert!(a.join().unwrap().unwrap_err().contains("engine on fire"));
+        assert!(b.join().unwrap().unwrap_err().contains("engine on fire"));
+        q.shutdown();
+        batcher.join().unwrap();
+    }
+}

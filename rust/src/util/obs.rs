@@ -19,7 +19,7 @@
 //!    `obs` dimension of `BENCH_native.json` (schema/5).
 //!
 //! 3. **JSONL event stream**: machine-readable dist-layer telemetry
-//!    (`spngd-events/1`, one JSON object per line) behind
+//!    (`spngd-events/2`, one JSON object per line) behind
 //!    `--events-out` / `SPNGD_EVENTS` — membership transitions, deaths,
 //!    respawns, fault injections, poison. [`parse_line`] is
 //!    parse-or-skip: any malformed line yields `None`, never a panic,
@@ -559,8 +559,14 @@ pub fn overlap(trace: &Trace) -> Overlap {
 // JSONL event stream
 // ---------------------------------------------------------------------------
 
-/// Schema tag stamped on every emitted event line.
-pub const EVENT_SCHEMA: &str = "spngd-events/1";
+/// Schema tag stamped on every emitted event line. `/2` added the
+/// checkpoint lifecycle kinds (`checkpoint_saved`, `resumed`) — a pure
+/// extension, so readers accept every tag in [`EVENT_SCHEMAS`].
+pub const EVENT_SCHEMA: &str = "spngd-events/2";
+
+/// Schema tags [`parse_line`] accepts: the current one plus every older
+/// tag whose envelope it still reads.
+pub const EVENT_SCHEMAS: &[&str] = &["spngd-events/1", "spngd-events/2"];
 
 static EVENTS_ON: AtomicBool = AtomicBool::new(false);
 static EVENT_SEQ: AtomicUsize = AtomicUsize::new(0);
@@ -594,7 +600,7 @@ pub fn close_events() {
     }
 }
 
-/// Emit one structured event line: `{"schema":"spngd-events/1",
+/// Emit one structured event line: `{"schema":"spngd-events/2",
 /// "seq":N, "t":secs, "kind":kind, ...fields}`. Each line is flushed so
 /// the stream survives a crash of the emitting process — it is the
 /// source of truth for dist-layer assertions.
@@ -647,8 +653,9 @@ pub fn parse_line(line: &str) -> Option<EventRec> {
     }
     let v = Json::parse(line).ok()?;
     let o = v.as_obj()?;
-    if v.get("schema").as_str() != Some(EVENT_SCHEMA) {
-        return None;
+    match v.get("schema").as_str() {
+        Some(s) if EVENT_SCHEMAS.contains(&s) => {}
+        _ => return None,
     }
     let kind = v.get("kind").as_str()?.to_string();
     let t = v.get("t").as_f64()?;

@@ -1,0 +1,217 @@
+//! Checkpoint/restore fidelity: a save → kill → resume cycle must be
+//! **bit-identical to an uninterrupted run** — same per-step losses,
+//! same final parameter digest — across all three engines (sequential,
+//! threaded, multi-process) and both wire precisions. The "kill" is
+//! dropping the trainer mid-run and rebuilding from scratch, so nothing
+//! can survive outside the SPCK file itself.
+//!
+//! Also covered: the META fingerprint rejecting mismatched run configs
+//! before any state is touched, corruption surfacing as a structured
+//! error, and the proc engine's restore-over-a-live-trainer recovery
+//! path (`recover_from_latest`).
+//!
+//! Worker processes (proc engine) are the test binary's sibling `spngd`
+//! executable via `CARGO_BIN_EXE_spngd`, as in `tests/dist_proc.rs`.
+
+use std::path::PathBuf;
+
+use spngd::ckpt;
+use spngd::collectives::Precision;
+use spngd::coordinator::{DistMode, Trainer, TrainerBuilder};
+use spngd::dist::ProcCfg;
+use spngd::optim::{self, HyperParams};
+
+fn base_builder(dist: DistMode, precision: Precision) -> TrainerBuilder {
+    let opt = optim::spngd();
+    let hp = HyperParams {
+        alpha_mixup: 0.0,
+        p_decay: 2.0,
+        e_start: 100.0, // effectively flat LR over these short runs
+        e_end: 200.0,
+        ..opt.default_hparams()
+    };
+    let mut b = TrainerBuilder::new("mlp")
+        .optimizer(opt)
+        .hyperparams(hp)
+        .steps_per_epoch(50)
+        .workers(2)
+        .dataset_len(2048)
+        .data_seed(11)
+        .seed(5)
+        .precision(precision)
+        .dist(dist);
+    if matches!(dist, DistMode::Proc) {
+        b = b.proc_cfg(ProcCfg {
+            worker_bin: Some(env!("CARGO_BIN_EXE_spngd").to_string()),
+            heartbeat_ms: 25,
+            join_timeout_ms: 20_000,
+            backoff_base_ms: 10,
+            ..ProcCfg::default()
+        });
+    }
+    b
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("spngd_ckpt_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn run_steps(tr: &mut Trainer, n: usize) -> Vec<f32> {
+    (0..n).map(|_| tr.step().unwrap().loss).collect()
+}
+
+/// The core property: N uninterrupted steps == K steps + save + kill +
+/// fresh build + resume + (N-K) steps, bitwise.
+fn assert_resume_bitwise(tag: &str, dist: DistMode, precision: Precision, k: usize, n: usize) {
+    let mut a = base_builder(dist, precision).build().unwrap();
+    let losses_a = run_steps(&mut a, n);
+    let digest_a = a.params_digest();
+    drop(a);
+
+    let dir = tmpdir(tag);
+    let mut b = base_builder(dist, precision).build().unwrap();
+    let losses_b = run_steps(&mut b, k);
+    b.save_checkpoint(&dir).unwrap();
+    drop(b); // the "kill": no in-memory state survives
+
+    let mut c = base_builder(dist, precision).build().unwrap();
+    assert_eq!(c.resume_latest(&dir).unwrap(), Some(k as u64), "{tag}: resume step");
+    let losses_c = run_steps(&mut c, n - k);
+
+    assert_eq!(losses_a[..k], losses_b[..], "{tag}: pre-kill prefix diverged");
+    assert_eq!(losses_a[k..], losses_c[..], "{tag}: post-resume losses diverged");
+    assert_eq!(digest_a, c.params_digest(), "{tag}: final params diverged");
+    assert_eq!(c.log.final_params_fnv, Some(c.params_digest()), "{tag}: RunLog digest");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_is_bitwise_sequential_f32() {
+    assert_resume_bitwise("seq_f32", DistMode::Sequential, Precision::F32, 3, 6);
+}
+
+#[test]
+fn resume_is_bitwise_sequential_mixed() {
+    assert_resume_bitwise("seq_mixed", DistMode::Sequential, Precision::Mixed, 3, 6);
+}
+
+#[test]
+fn resume_is_bitwise_threaded_f32() {
+    assert_resume_bitwise("thr_f32", DistMode::Threaded, Precision::F32, 3, 6);
+}
+
+#[test]
+fn resume_is_bitwise_threaded_mixed() {
+    assert_resume_bitwise("thr_mixed", DistMode::Threaded, Precision::Mixed, 3, 6);
+}
+
+#[test]
+fn resume_is_bitwise_proc_f32() {
+    assert_resume_bitwise("proc_f32", DistMode::Proc, Precision::F32, 2, 4);
+}
+
+#[test]
+fn resume_is_bitwise_proc_mixed() {
+    assert_resume_bitwise("proc_mixed", DistMode::Proc, Precision::Mixed, 2, 4);
+}
+
+/// The resume matrix above runs with the loader's default prefetch ON,
+/// so saves happen mid-double-buffer and ride the stash sections. This
+/// cross-check pins the other leg: prefetch itself is bitwise-neutral,
+/// so stash-bearing and stash-free checkpoints describe the same run.
+#[test]
+fn prefetch_is_bitwise_neutral() {
+    let mut on = base_builder(DistMode::Sequential, Precision::F32).build().unwrap();
+    let mut off =
+        base_builder(DistMode::Sequential, Precision::F32).prefetch(false).build().unwrap();
+    let la = run_steps(&mut on, 4);
+    let lb = run_steps(&mut off, 4);
+    assert_eq!(la, lb, "prefetch must be bitwise-neutral");
+    assert_eq!(on.params_digest(), off.params_digest());
+}
+
+#[test]
+fn restore_rejects_mismatched_run_configs() {
+    let dir = tmpdir("meta_reject");
+    let mut tr = base_builder(DistMode::Sequential, Precision::F32).build().unwrap();
+    run_steps(&mut tr, 2);
+    let path = tr.save_checkpoint(&dir).unwrap();
+    let ck = ckpt::read_file(&path).unwrap();
+
+    // wrong seed
+    let mut other = base_builder(DistMode::Sequential, Precision::F32).seed(6).build().unwrap();
+    let e = format!("{:#}", other.restore(&ck).unwrap_err());
+    assert!(e.contains("seed"), "{e}");
+
+    // wrong model
+    let mut other = TrainerBuilder::new("convnet_tiny")
+        .optimizer(optim::spngd())
+        .workers(2)
+        .dataset_len(2048)
+        .data_seed(11)
+        .seed(5)
+        .build()
+        .unwrap();
+    let e = format!("{:#}", other.restore(&ck).unwrap_err());
+    assert!(e.contains("model"), "{e}");
+
+    // wrong wire precision
+    let mut other = base_builder(DistMode::Sequential, Precision::Mixed).build().unwrap();
+    let e = format!("{:#}", other.restore(&ck).unwrap_err());
+    assert!(e.contains("precision"), "{e}");
+
+    // wrong lane total (workers × grad-accum)
+    let mut other =
+        base_builder(DistMode::Sequential, Precision::F32).workers(4).build().unwrap();
+    let e = format!("{:#}", other.restore(&ck).unwrap_err());
+    assert!(e.contains("lane"), "{e}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupted_checkpoint_is_a_structured_error_not_a_panic() {
+    let dir = tmpdir("corrupt");
+    let mut tr = base_builder(DistMode::Sequential, Precision::F32).build().unwrap();
+    run_steps(&mut tr, 1);
+    let path = tr.save_checkpoint(&dir).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40; // flip one payload bit → a section checksum breaks
+    std::fs::write(&path, &bytes).unwrap();
+
+    let mut fresh = base_builder(DistMode::Sequential, Precision::F32).build().unwrap();
+    let err = fresh.resume_from(&path).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("checksum") || msg.contains("parsing") || msg.contains("truncated"),
+        "unexpected diagnostic: {msg}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The proc fault-recovery path: restore the latest checkpoint over a
+/// *live* trainer (relaunching the worker pool), then keep training —
+/// the continuation must be bitwise equal to the uninterrupted run.
+#[test]
+fn proc_recover_from_latest_restores_a_live_trainer() {
+    let mut a = base_builder(DistMode::Proc, Precision::F32).build().unwrap();
+    let losses_a = run_steps(&mut a, 4);
+    let digest_a = a.params_digest();
+    drop(a);
+
+    let dir = tmpdir("proc_recover");
+    let mut b = base_builder(DistMode::Proc, Precision::F32).build().unwrap();
+    run_steps(&mut b, 2);
+    b.save_checkpoint(&dir).unwrap();
+    // train past the checkpoint, then roll back in place — the restart
+    // policy's move after a zero-survivor fatal
+    run_steps(&mut b, 1);
+    let step = b.recover_from_latest(&dir).unwrap();
+    assert_eq!(step, 2);
+    let tail = run_steps(&mut b, 2);
+    assert_eq!(losses_a[2..], tail[..], "post-recovery losses diverged");
+    assert_eq!(digest_a, b.params_digest(), "post-recovery params diverged");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,11 +1,13 @@
 //! Deterministic fuzz/property smoke over the repo's byte-level parsers:
-//! random and mutated inputs through `Json::parse`, `CifarBin::from_bytes`
-//! and the f16 wire codec. Fixed seeds, bounded case counts — this is the
+//! random and mutated inputs through `Json::parse`, `CifarBin::from_bytes`,
+//! the SPCK checkpoint container (`ckpt::Checkpoint`/`ckpt::Meta`) and
+//! the f16 wire codec. Fixed seeds, bounded case counts — this is the
 //! CI fuzz job (`fuzz-smoke`), sized to finish in well under two minutes
 //! while still exercising both the accept and reject paths of every
 //! parser. A panic anywhere in a parser is a test failure by
 //! construction (`util::prop::check` runs the property in-process).
 
+use spngd::ckpt;
 use spngd::collectives::comm::Precision;
 use spngd::collectives::wire::{self, Frame, Kind};
 use spngd::data::cifar::{CifarBin, CIFAR_CLASSES, CIFAR_RECORD};
@@ -284,7 +286,8 @@ fn wire_f16_element_buffers_decode_totally() {
 
 /// Arbitrary byte soup through the JSONL event parser (`obs::parse_line`):
 /// parse-or-skip, never a panic, and anything accepted must have carried
-/// the schema tag with the envelope keys stripped from `fields`.
+/// one of the accepted schema tags with the envelope keys stripped from
+/// `fields`.
 #[test]
 fn event_line_parse_survives_byte_soup() {
     check(0xE7E1, 400, 256, rand_bytes, |bytes| {
@@ -292,7 +295,7 @@ fn event_line_parse_survives_byte_soup() {
         match obs::parse_line(&s) {
             None => true, // skipping garbage is the contract
             Some(rec) => {
-                s.contains(obs::EVENT_SCHEMA)
+                obs::EVENT_SCHEMAS.iter().any(|sch| s.contains(sch))
                     && ["schema", "seq", "t", "kind"]
                         .iter()
                         .all(|k| !rec.fields.contains_key(*k))
@@ -303,18 +306,30 @@ fn event_line_parse_survives_byte_soup() {
 
 /// Mutate realistic emitted event lines byte-by-byte: the parser must
 /// accept or skip cleanly at every corruption — a corrupt dist event
-/// stream must never take the reader down with it.
+/// stream must never take the reader down with it. Lines are emitted
+/// under both accepted schema versions (`/1` back-compat, `/2` current)
+/// and both eras' kinds, checkpoint lifecycle included.
 #[test]
 fn event_line_parse_survives_mutated_lines() {
-    const KINDS: [&str; 6] = ["state", "joined", "dead", "respawned", "poison", "fault_plan"];
+    const KINDS: [&str; 8] = [
+        "state",
+        "joined",
+        "dead",
+        "respawned",
+        "poison",
+        "fault_plan",
+        "checkpoint_saved",
+        "resumed",
+    ];
     check(
         0xE7E2,
         400,
         16,
         |rng, size| {
             let kind = KINDS[rng.below_usize(KINDS.len())];
+            let schema = obs::EVENT_SCHEMAS[rng.below_usize(obs::EVENT_SCHEMAS.len())];
             let mut b = format!(
-                r#"{{"schema":"spngd-events/1","seq":{},"t":{}.{:03},"kind":"{kind}","rank":{},"step":{},"reason":"job timeout"}}"#,
+                r#"{{"schema":"{schema}","seq":{},"t":{}.{:03},"kind":"{kind}","rank":{},"step":{},"reason":"job timeout"}}"#,
                 rng.below(10_000),
                 rng.below(100),
                 rng.below(1000),
@@ -334,7 +349,7 @@ fn event_line_parse_survives_mutated_lines() {
                 None => true,
                 // accepted ⇒ the envelope survived the corruption intact
                 Some(rec) => {
-                    s.contains(obs::EVENT_SCHEMA)
+                    obs::EVENT_SCHEMAS.iter().any(|sch| s.contains(sch))
                         && ["schema", "seq", "t", "kind"]
                             .iter()
                             .all(|k| !rec.fields.contains_key(*k))
@@ -409,6 +424,145 @@ fn f16_codec_properties_on_normal_range() {
             })
         },
     );
+}
+
+/// A random but well-formed SPCK checkpoint: a handful of sections over
+/// the known kinds with unique `(kind, tag)` pairs and arbitrary small
+/// payloads.
+fn rand_checkpoint(rng: &mut Rng, max_payload: usize) -> ckpt::Checkpoint {
+    const KINDS: [u16; 8] = [
+        ckpt::SEC_META,
+        ckpt::SEC_PARAM,
+        ckpt::SEC_VELOCITY,
+        ckpt::SEC_BN,
+        ckpt::SEC_LAYER,
+        ckpt::SEC_LOADER,
+        ckpt::SEC_CHAIN,
+        ckpt::SEC_STASH,
+    ];
+    let mut ck = ckpt::Checkpoint::new();
+    let mut used = std::collections::BTreeSet::new();
+    for _ in 0..1 + rng.below_usize(6) {
+        let kind = KINDS[rng.below_usize(KINDS.len())];
+        let tag = rng.below(8) as u16;
+        if used.insert((kind, tag)) {
+            ck.push(kind, tag, rand_bytes(rng, rng.below_usize(max_payload + 1)));
+        }
+    }
+    ck
+}
+
+fn sections_equal(a: &ckpt::Checkpoint, b: &ckpt::Checkpoint) -> bool {
+    a.sections.len() == b.sections.len()
+        && a.sections.iter().zip(b.sections.iter()).all(|(x, y)| {
+            x.kind == y.kind && x.tag == y.tag && x.payload == y.payload
+        })
+}
+
+/// Arbitrary byte soup through `Checkpoint::parse`: never a panic, and
+/// anything accepted must survive an encode → reparse round trip with
+/// identical sections (flags/reserved header bytes are the only
+/// non-canonical freedom, and they carry no state).
+#[test]
+fn ckpt_parse_survives_byte_soup() {
+    check(0x5bc1, 500, 128, rand_bytes, |bytes| match ckpt::Checkpoint::parse(bytes) {
+        Err(_) => true, // structured rejection is the contract
+        Ok(ck) => ckpt::Checkpoint::parse(&ck.encode())
+            .map(|back| sections_equal(&ck, &back))
+            .unwrap_or(false),
+    });
+}
+
+/// Mutate valid checkpoint files byte-by-byte: every corruption must be
+/// rejected cleanly or accepted with intact structure — and payload
+/// corruption specifically must trip the per-section checksum rather
+/// than reach a state decoder.
+#[test]
+fn ckpt_parse_survives_mutated_checkpoints() {
+    check(
+        0x5bc2,
+        500,
+        8,
+        |rng, size| {
+            let mut b = rand_checkpoint(rng, 48).encode();
+            for _ in 0..1 + rng.below_usize(size.max(1)) {
+                let i = rng.below_usize(b.len());
+                b[i] = rng.below(256) as u8;
+            }
+            b
+        },
+        |bytes| match ckpt::Checkpoint::parse(bytes) {
+            Err(_) => true,
+            Ok(ck) => {
+                // accepted ⇒ canonical, and the META decoder (the next
+                // parser in line on a restore) must not panic on it
+                let _ = ckpt::Meta::of(&ck);
+                ckpt::Checkpoint::parse(&ck.encode())
+                    .map(|back| sections_equal(&ck, &back))
+                    .unwrap_or(false)
+            }
+        },
+    );
+}
+
+/// Every strict prefix of a valid checkpoint file is a structured error
+/// (its own headers promise more bytes), and the full encoding parses.
+#[test]
+fn ckpt_truncation_is_always_a_structured_error() {
+    check(
+        0x5bc3,
+        120,
+        32,
+        |rng, size| rand_checkpoint(rng, size).encode(),
+        |bytes| {
+            (0..bytes.len()).all(|cut| ckpt::Checkpoint::parse(&bytes[..cut]).is_err())
+                && ckpt::Checkpoint::parse(bytes).is_ok()
+        },
+    );
+}
+
+/// Headers announcing oversized sections or absurd section counts are
+/// rejected from the fixed-size headers alone — no allocation, no loop.
+#[test]
+fn ckpt_oversized_headers_rejected_before_allocation() {
+    check(
+        0x5bc4,
+        300,
+        1,
+        |rng, _| {
+            let mut ck = ckpt::Checkpoint::new();
+            ck.push(ckpt::SEC_META, 0, rand_bytes(rng, 8));
+            let mut b = ck.encode();
+            if rng.bool(0.5) {
+                // lying section length, over the 64 MiB cap
+                let over = ckpt::MAX_SECTION + 1 + (rng.next_u64() as u32 % 1024);
+                b[16 + 4..16 + 8].copy_from_slice(&over.to_le_bytes());
+            } else {
+                // lying section count, over the table cap
+                let over = 65_537u32.saturating_add(rng.next_u64() as u32 % 4096);
+                b[8..12].copy_from_slice(&over.to_le_bytes());
+            }
+            b
+        },
+        |bytes| {
+            matches!(
+                ckpt::Checkpoint::parse(bytes),
+                Err(ckpt::CkptError::Oversized { .. })
+                    | Err(ckpt::CkptError::TooManySections(_))
+            )
+        },
+    );
+}
+
+/// Arbitrary byte soup through `ckpt::Meta::parse` (the restore path's
+/// innermost decoder): never a panic, and accepted metas are canonical —
+/// re-encoding reproduces the input bytes exactly.
+#[test]
+fn ckpt_meta_parse_survives_byte_soup() {
+    check(0x5bc5, 500, 96, rand_bytes, |bytes| match ckpt::Meta::parse(bytes) {
+        Err(_) => true,
+        Ok(m) => m.encode() == *bytes,
+    });
 }
 
 /// f16 wire codec over adversarial bit patterns (NaN payloads, infinities,
