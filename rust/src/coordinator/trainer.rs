@@ -338,6 +338,7 @@ impl Trainer {
         self.step += 1;
         let t = self.step;
         let _step_span = obs::span("step", Cat::Phase).arg("step", t as f64);
+        // lint:allow(determinism) -- step wall-time telemetry, never step math
         let t_start = Instant::now();
         let w = self.cfg.workers.max(1);
         let micro = self.cfg.grad_accum.max(1);
@@ -526,6 +527,7 @@ impl Trainer {
 
         // ------------------- Stage 4a: model-parallel factor inversion
         let s4a = obs::span("stage4a_invert", Cat::Phase);
+        // lint:allow(determinism) -- stage wall-time telemetry, never step math
         let t_inv_start = Instant::now();
         let mut layer_jobs: Vec<(usize, Vec<(StatKind, Mat)>)> = Vec::new();
         for (&(li, kind), m) in plan.iter().zip(reduced.into_iter()) {
@@ -545,6 +547,7 @@ impl Trainer {
 
         // ------------------- Stage 4b: preconditioning + weight update
         let s4b = obs::span("stage4b_update", Cat::Phase);
+        // lint:allow(determinism) -- stage wall-time telemetry, never step math
         let t_upd_start = Instant::now();
         let mut slots: BTreeMap<usize, ParamSlot> = self
             .params
@@ -680,6 +683,7 @@ impl Trainer {
         // -------- scope 2: Stage 4b owner-parallel updates (disjoint
         // parameter partition, layers now read-only)
         let s4b = obs::span("stage4b_update", Cat::Phase);
+        // lint:allow(determinism) -- stage wall-time telemetry, never step math
         let t_upd_start = Instant::now();
         let mut powner = vec![usize::MAX; self.params.len()];
         for (li, ml) in self.model.kfac_layers.iter().enumerate() {
@@ -1196,6 +1200,7 @@ fn run_lane(
     let mut inputs: Vec<&HostTensor> = params.iter().collect();
     inputs.push(&batch.x);
     inputs.push(&batch.t);
+    // lint:allow(determinism) -- exec wall-time telemetry, never step math
     let te = Instant::now();
     let exec_span = obs::span("exec_fwd_bwd", Cat::Compute);
     let outs = engine.execute_seeded(exe, &inputs, seed).context("step exec")?;
@@ -1218,6 +1223,7 @@ fn run_lane(
     }
 
     // statistics construction for planned refreshes
+    // lint:allow(determinism) -- factor wall-time telemetry, never step math
     let tf = Instant::now();
     for (item, &(li, kind)) in plan.iter().enumerate() {
         // the compute span closes before on_factor: publishing to the
@@ -1315,6 +1321,7 @@ fn worker_step(
     ring.grad_post(std::mem::take(&mut grad_lanes), lanes_n);
 
     // Stage 4a: reduce + invert owned layers (overlaps peers' compute)
+    // lint:allow(determinism) -- stage wall-time telemetry, never step math
     let t_inv0 = Instant::now();
     for (li, slot) in group {
         let items = &layer_items[li];

@@ -237,6 +237,7 @@ impl Loader {
             !self.poisoned,
             "data pipeline poisoned by an earlier prefetch panic — rebuild the trainer"
         );
+        // lint:allow(determinism) -- prefetch-wait telemetry, never step math
         let t0 = Instant::now();
         let wait_span = obs::span("data_wait", Cat::Data);
         let cur = if let Some(b) = self.stash.take() {
@@ -383,6 +384,7 @@ fn materialize(
     batch: usize,
     lanes: usize,
 ) -> Vec<Batch> {
+    // lint:allow(determinism) -- batch-prep telemetry, never step math
     let t0 = Instant::now();
     let _s = obs::span("data_prep", Cat::Data).arg("lanes", lanes as f64);
     let out = (0..lanes)

@@ -233,6 +233,7 @@ impl RingComm {
     ) -> MutexGuard<'a, T> {
         let _w = obs::span("ring_wait", Cat::Comm);
         let stall = stall_timeout();
+        // lint:allow(determinism) -- stall watchdog aborts instead of hanging; no step math
         let start = Instant::now();
         let mut g = g;
         loop {

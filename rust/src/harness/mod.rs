@@ -161,6 +161,7 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> S
     }
     let mut s = Summary::new();
     for _ in 0..iters {
+        // lint:allow(determinism) -- bench timing is the harness's entire job
         let t0 = Instant::now();
         f();
         s.push(t0.elapsed().as_secs_f64());

@@ -11,7 +11,7 @@
 //! that real PJRT bindings are required. Swap the path dependency to run
 //! actual HLO artifacts.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, RwLock};
@@ -33,8 +33,8 @@ pub struct EngineStats {
 pub struct Engine {
     client: xla::PjRtClient,
     dir: PathBuf,
-    files: HashMap<String, String>,
-    exes: RwLock<HashMap<String, xla::PjRtLoadedExecutable>>,
+    files: BTreeMap<String, String>,
+    exes: RwLock<BTreeMap<String, xla::PjRtLoadedExecutable>>,
     compile_lock: Mutex<()>,
     pub stats: EngineStats,
 }
@@ -47,7 +47,7 @@ impl Engine {
             client,
             dir: manifest.dir.clone(),
             files: manifest.executables.iter().map(|(k, v)| (k.clone(), v.clone())).collect(),
-            exes: RwLock::new(HashMap::new()),
+            exes: RwLock::new(BTreeMap::new()),
             compile_lock: Mutex::new(()),
             stats: EngineStats::default(),
         })
@@ -73,6 +73,7 @@ impl Engine {
             .get(name)
             .with_context(|| format!("executable '{name}' not in manifest"))?;
         let path = self.dir.join(file);
+        // lint:allow(determinism) -- compile-time accounting only, never step math
         let t0 = Instant::now();
         let proto = xla::HloModuleProto::from_text_file(&path)
             .with_context(|| format!("parsing HLO text {}", path.display()))?;
@@ -113,6 +114,7 @@ impl Engine {
         seed: Option<u32>,
     ) -> Result<Vec<HostTensor>> {
         self.ensure_compiled(name)?;
+        // lint:allow(determinism) -- exec-time accounting only, never step math
         let t0 = Instant::now();
         let mut lits = Vec::with_capacity(inputs.len() + 1);
         for t in inputs {

@@ -401,6 +401,7 @@ impl Executor for NativeBackend {
             },
             Cat::Compute,
         );
+        // lint:allow(determinism) -- exec wall-time telemetry, never step math
         let t0 = Instant::now();
         let mut scratch_guard = self.scratch.lock().unwrap();
         let scratch = &mut *scratch_guard;

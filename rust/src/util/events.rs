@@ -1,0 +1,71 @@
+//! Parser for the JSONL structured-event stream (`--events-out` /
+//! `SPNGD_EVENTS`).
+//!
+//! The *write* side stays in [`crate::util::obs`] (emission is tangled
+//! with the span/trace machinery and its process-global switches); the
+//! *read* side lives here as a standalone structured-error parser
+//! module, scoped under the lint's panic-hygiene rule: parse-or-skip,
+//! never panic, no bare indexing. `obs` re-exports these names, so
+//! `obs::parse_line` callers are unaffected.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Schema tag stamped on every emitted event line. `/2` added the
+/// checkpoint lifecycle kinds (`checkpoint_saved`, `resumed`) — a pure
+/// extension, so readers accept every tag in [`EVENT_SCHEMAS`].
+pub const EVENT_SCHEMA: &str = "spngd-events/2";
+
+/// Schema tags [`parse_line`] accepts: the current one plus every older
+/// tag whose envelope it still reads.
+pub const EVENT_SCHEMAS: &[&str] = &["spngd-events/1", "spngd-events/2"];
+
+/// One parsed event line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EventRec {
+    pub seq: usize,
+    pub t: f64,
+    pub kind: String,
+    pub fields: BTreeMap<String, Json>,
+}
+
+impl EventRec {
+    /// Field accessor (`Json::Null` for missing keys).
+    pub fn get(&self, key: &str) -> &Json {
+        static NULL: Json = Json::Null;
+        self.fields.get(key).unwrap_or(&NULL)
+    }
+}
+
+/// Parse one JSONL event line. **Parse-or-skip**: returns `None` on
+/// malformed JSON, wrong/missing schema tag, missing `kind`/`t`, or an
+/// oversized line (> 1 MiB — a corrupt stream, not a real event). Never
+/// panics on any byte input (fuzzed in `tests/fuzz_smoke.rs`).
+pub fn parse_line(line: &str) -> Option<EventRec> {
+    let line = line.trim();
+    if line.is_empty() || line.len() > 1 << 20 {
+        return None;
+    }
+    let v = Json::parse(line).ok()?;
+    let o = v.as_obj()?;
+    match v.get("schema").as_str() {
+        Some(s) if EVENT_SCHEMAS.contains(&s) => {}
+        _ => return None,
+    }
+    let kind = v.get("kind").as_str()?.to_string();
+    let t = v.get("t").as_f64()?;
+    let seq = v.get("seq").as_usize().unwrap_or(0);
+    let mut fields = o.clone();
+    for k in ["schema", "seq", "t", "kind"] {
+        fields.remove(k);
+    }
+    Some(EventRec { seq, t, kind, fields })
+}
+
+/// Read every well-formed event from a JSONL file, skipping garbage
+/// lines silently.
+pub fn read_events(path: &Path) -> std::io::Result<Vec<EventRec>> {
+    let text = std::fs::read_to_string(path)?;
+    Ok(text.lines().filter_map(parse_line).collect())
+}

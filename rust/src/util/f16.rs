@@ -113,6 +113,7 @@ pub fn decode_le(bytes: &[u8]) -> Option<Vec<f32>> {
     Some(
         bytes
             .chunks_exact(2)
+            // lint:allow(panic-hygiene) -- chunks_exact(2) guarantees both indices exist
             .map(|c| f32_from_f16(u16::from_le_bytes([c[0], c[1]])))
             .collect(),
     )

@@ -257,7 +257,7 @@ impl<'a> Parser<'a> {
     }
 
     fn skip_ws(&mut self) {
-        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
             self.i += 1;
         }
     }
@@ -289,7 +289,7 @@ impl<'a> Parser<'a> {
     }
 
     fn lit(&mut self, word: &str, v: Json) -> Result<Json, JsonError> {
-        if self.b[self.i..].starts_with(word.as_bytes()) {
+        if self.b.get(self.i..).is_some_and(|t| t.starts_with(word.as_bytes())) {
             self.i += word.len();
             Ok(v)
         } else {
@@ -320,7 +320,11 @@ impl<'a> Parser<'a> {
                 self.i += 1;
             }
         }
-        let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        let s = self
+            .b
+            .get(start..self.i)
+            .and_then(|t| std::str::from_utf8(t).ok())
+            .ok_or_else(|| self.err("bad number"))?;
         s.parse::<f64>().map(Json::Num).map_err(|_| self.err("bad number"))
     }
 
@@ -346,11 +350,13 @@ impl<'a> Parser<'a> {
                         Some(b'b') => out.push('\u{8}'),
                         Some(b'f') => out.push('\u{c}'),
                         Some(b'u') => {
-                            if self.i + 4 >= self.b.len() {
-                                return Err(self.err("truncated \\u escape"));
-                            }
-                            let hex =
-                                std::str::from_utf8(&self.b[self.i + 1..self.i + 5]).unwrap();
+                            // get() rejects truncation; from_utf8 rejects an
+                            // escape whose 4 bytes split a multi-byte char
+                            let hex = self
+                                .b
+                                .get(self.i + 1..self.i + 5)
+                                .and_then(|h| std::str::from_utf8(h).ok())
+                                .ok_or_else(|| self.err("truncated \\u escape"))?;
                             let code = u32::from_str_radix(hex, 16)
                                 .map_err(|_| self.err("bad \\u escape"))?;
                             out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
@@ -362,9 +368,12 @@ impl<'a> Parser<'a> {
                 }
                 Some(_) => {
                     // copy a full UTF-8 char
-                    let s = std::str::from_utf8(&self.b[self.i..])
-                        .map_err(|_| self.err("invalid utf-8"))?;
-                    let c = s.chars().next().unwrap();
+                    let c = self
+                        .b
+                        .get(self.i..)
+                        .and_then(|t| std::str::from_utf8(t).ok())
+                        .and_then(|s| s.chars().next())
+                        .ok_or_else(|| self.err("invalid utf-8"))?;
                     out.push(c);
                     self.i += c.len_utf8();
                 }

@@ -7,6 +7,7 @@
 //! obs≈`tracing-chrome`+`perfetto`, f16≈`half`, simd≈`wide`.
 
 pub mod cli;
+pub mod events;
 pub mod f16;
 pub mod json;
 pub mod log;

@@ -169,6 +169,8 @@ struct RingBuf {
 // (drain holds the registry mutex); head/tail Acquire/Release ordering
 // publishes slot contents between them.
 unsafe impl Sync for RingBuf {}
+// SAFETY: same single-writer/single-reader protocol as Sync above; the
+// buffer only moves threads at registry teardown, after its owner is gone.
 unsafe impl Send for RingBuf {}
 
 impl RingBuf {
@@ -559,14 +561,11 @@ pub fn overlap(trace: &Trace) -> Overlap {
 // JSONL event stream
 // ---------------------------------------------------------------------------
 
-/// Schema tag stamped on every emitted event line. `/2` added the
-/// checkpoint lifecycle kinds (`checkpoint_saved`, `resumed`) — a pure
-/// extension, so readers accept every tag in [`EVENT_SCHEMAS`].
-pub const EVENT_SCHEMA: &str = "spngd-events/2";
-
-/// Schema tags [`parse_line`] accepts: the current one plus every older
-/// tag whose envelope it still reads.
-pub const EVENT_SCHEMAS: &[&str] = &["spngd-events/1", "spngd-events/2"];
+// The parse side (schema tags, `EventRec`, `parse_line`, `read_events`)
+// lives in `util::events` — a structured-error parser module under the
+// lint's panic-hygiene rule. Re-exported here so `obs::parse_line`
+// callers keep working.
+pub use crate::util::events::{parse_line, read_events, EventRec, EVENT_SCHEMA, EVENT_SCHEMAS};
 
 static EVENTS_ON: AtomicBool = AtomicBool::new(false);
 static EVENT_SEQ: AtomicUsize = AtomicUsize::new(0);
@@ -623,55 +622,6 @@ pub fn emit(kind: &str, fields: Vec<(&str, Json)>) {
         let _ = writeln!(w, "{line}");
         let _ = w.flush();
     }
-}
-
-/// One parsed event line.
-#[derive(Debug, Clone, PartialEq)]
-pub struct EventRec {
-    pub seq: usize,
-    pub t: f64,
-    pub kind: String,
-    pub fields: BTreeMap<String, Json>,
-}
-
-impl EventRec {
-    /// Field accessor (`Json::Null` for missing keys).
-    pub fn get(&self, key: &str) -> &Json {
-        static NULL: Json = Json::Null;
-        self.fields.get(key).unwrap_or(&NULL)
-    }
-}
-
-/// Parse one JSONL event line. **Parse-or-skip**: returns `None` on
-/// malformed JSON, wrong/missing schema tag, missing `kind`/`t`, or an
-/// oversized line (> 1 MiB — a corrupt stream, not a real event). Never
-/// panics on any byte input (fuzzed in `tests/fuzz_smoke.rs`).
-pub fn parse_line(line: &str) -> Option<EventRec> {
-    let line = line.trim();
-    if line.is_empty() || line.len() > 1 << 20 {
-        return None;
-    }
-    let v = Json::parse(line).ok()?;
-    let o = v.as_obj()?;
-    match v.get("schema").as_str() {
-        Some(s) if EVENT_SCHEMAS.contains(&s) => {}
-        _ => return None,
-    }
-    let kind = v.get("kind").as_str()?.to_string();
-    let t = v.get("t").as_f64()?;
-    let seq = v.get("seq").as_usize().unwrap_or(0);
-    let mut fields = o.clone();
-    for k in ["schema", "seq", "t", "kind"] {
-        fields.remove(k);
-    }
-    Some(EventRec { seq, t, kind, fields })
-}
-
-/// Read every well-formed event from a JSONL file, skipping garbage
-/// lines silently.
-pub fn read_events(path: &Path) -> std::io::Result<Vec<EventRec>> {
-    let text = std::fs::read_to_string(path)?;
-    Ok(text.lines().filter_map(parse_line).collect())
 }
 
 // ---------------------------------------------------------------------------

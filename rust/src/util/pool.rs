@@ -179,6 +179,9 @@ impl Pool {
         for _ in 0..helpers {
             let guard = CountGuard(latch.clone());
             self.submit(move || {
+                // SAFETY: `wp` is the erased `&work` from the enclosing
+                // frame; the latch discipline above keeps that frame alive
+                // until every helper has finished with it.
                 let w = unsafe { &*(wp as *const ForWork<'_, F>) };
                 let run = std::panic::AssertUnwindSafe(|| w.run());
                 if std::panic::catch_unwind(run).is_err() {

@@ -95,11 +95,15 @@ pub fn axpy(x: f32, b: &[f32], o: &mut [f32]) {
     if mode() == NATIVE {
         #[cfg(target_arch = "x86_64")]
         {
+            // SAFETY: NATIVE on x86_64 means resolve() detected AVX2; accesses
+            // are bounded by the slice-length contract asserted above.
             unsafe { avx2::axpy(x, b, o) };
             return;
         }
         #[cfg(target_arch = "aarch64")]
         {
+            // SAFETY: NEON is part of the aarch64 baseline; accesses are
+            // bounded by the slice-length contract asserted above.
             unsafe { neon::axpy(x, b, o) };
             return;
         }
@@ -116,11 +120,15 @@ pub fn axpy2(x0: f32, x1: f32, b: &[f32], o0: &mut [f32], o1: &mut [f32]) {
     if mode() == NATIVE {
         #[cfg(target_arch = "x86_64")]
         {
+            // SAFETY: NATIVE on x86_64 means resolve() detected AVX2; accesses
+            // are bounded by the slice-length contract asserted above.
             unsafe { avx2::axpy2(x0, x1, b, o0, o1) };
             return;
         }
         #[cfg(target_arch = "aarch64")]
         {
+            // SAFETY: NEON is part of the aarch64 baseline; accesses are
+            // bounded by the slice-length contract asserted above.
             unsafe { neon::axpy2(x0, x1, b, o0, o1) };
             return;
         }
@@ -137,10 +145,14 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     if mode() == NATIVE {
         #[cfg(target_arch = "x86_64")]
         {
+            // SAFETY: NATIVE on x86_64 means resolve() detected AVX2; accesses
+            // are bounded by the slice-length contract asserted above.
             return unsafe { avx2::dot(a, b) };
         }
         #[cfg(target_arch = "aarch64")]
         {
+            // SAFETY: NEON is part of the aarch64 baseline; accesses are
+            // bounded by the slice-length contract asserted above.
             return unsafe { neon::dot(a, b) };
         }
     }
@@ -156,11 +168,15 @@ pub fn axpy_widen(x: f64, xs: &[f32], acc: &mut [f64]) {
     if mode() == NATIVE {
         #[cfg(target_arch = "x86_64")]
         {
+            // SAFETY: NATIVE on x86_64 means resolve() detected AVX2; accesses
+            // are bounded by the slice-length contract asserted above.
             unsafe { avx2::axpy_widen(x, xs, acc) };
             return;
         }
         #[cfg(target_arch = "aarch64")]
         {
+            // SAFETY: NEON is part of the aarch64 baseline; accesses are
+            // bounded by the slice-length contract asserted above.
             unsafe { neon::axpy_widen(x, xs, acc) };
             return;
         }
@@ -222,6 +238,9 @@ mod avx2 {
     // module after `is_x86_feature_detected!("avx2")`). All loads/stores
     // are unaligned and bounded by the slice lengths checked below.
 
+    /// # Safety
+    /// Caller must have runtime-detected AVX2; unaligned
+    /// loads/stores are bounded by `o.len()` with `b.len() >= o.len()`.
     #[target_feature(enable = "avx2")]
     pub unsafe fn axpy(x: f32, b: &[f32], o: &mut [f32]) {
         let n = o.len();
@@ -239,6 +258,10 @@ mod avx2 {
         }
     }
 
+    /// # Safety
+    /// Caller must have runtime-detected AVX2; unaligned
+    /// loads/stores are bounded by `o0.len()` with `o1` the same length
+    /// and `b` at least as long.
     #[target_feature(enable = "avx2")]
     pub unsafe fn axpy2(x0: f32, x1: f32, b: &[f32], o0: &mut [f32], o1: &mut [f32]) {
         let n = o0.len();
@@ -260,6 +283,9 @@ mod avx2 {
         }
     }
 
+    /// # Safety
+    /// Caller must have runtime-detected AVX2; unaligned loads
+    /// are bounded by `a.len()` with `b` at least as long.
     #[target_feature(enable = "avx2")]
     pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
         let k = a.len();
@@ -281,6 +307,10 @@ mod avx2 {
         s
     }
 
+    /// # Safety
+    /// Caller must have runtime-detected AVX2; unaligned
+    /// loads/stores are bounded by `acc.len()` with `xs` at least as
+    /// long.
     #[target_feature(enable = "avx2")]
     pub unsafe fn axpy_widen(x: f64, xs: &[f32], acc: &mut [f64]) {
         let n = acc.len();
@@ -310,6 +340,9 @@ mod neon {
     // `unsafe fn` in std::arch. No `vmlaq_f32` anywhere — that is a
     // fused FMLA and would break bit-parity with the scalar path.
 
+    /// # Safety
+    /// NEON is always present on aarch64; loads/stores are
+    /// bounded by `o.len()` with `b.len() >= o.len()`.
     #[target_feature(enable = "neon")]
     pub unsafe fn axpy(x: f32, b: &[f32], o: &mut [f32]) {
         let n = o.len();
@@ -327,6 +360,10 @@ mod neon {
         }
     }
 
+    /// # Safety
+    /// NEON is always present on aarch64; loads/stores are
+    /// bounded by `o0.len()` with `o1` the same length and `b` at least
+    /// as long.
     #[target_feature(enable = "neon")]
     pub unsafe fn axpy2(x0: f32, x1: f32, b: &[f32], o0: &mut [f32], o1: &mut [f32]) {
         let n = o0.len();
@@ -348,6 +385,9 @@ mod neon {
         }
     }
 
+    /// # Safety
+    /// NEON is always present on aarch64; loads are bounded by
+    /// `a.len()` with `b` at least as long.
     #[target_feature(enable = "neon")]
     pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
         let k = a.len();
@@ -375,6 +415,9 @@ mod neon {
         s
     }
 
+    /// # Safety
+    /// NEON is always present on aarch64; loads/stores are
+    /// bounded by `acc.len()` with `xs` at least as long.
     #[target_feature(enable = "neon")]
     pub unsafe fn axpy_widen(x: f64, xs: &[f32], acc: &mut [f64]) {
         let n = acc.len();

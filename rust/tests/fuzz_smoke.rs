@@ -1,22 +1,25 @@
 //! Deterministic fuzz/property smoke over the repo's byte-level parsers:
 //! random and mutated inputs through `Json::parse`, `CifarBin::from_bytes`,
-//! the SPCK checkpoint container (`ckpt::Checkpoint`/`ckpt::Meta`) and
-//! the f16 wire codec. Fixed seeds, bounded case counts — this is the
-//! CI fuzz job (`fuzz-smoke`), sized to finish in well under two minutes
-//! while still exercising both the accept and reject paths of every
-//! parser. A panic anywhere in a parser is a test failure by
-//! construction (`util::prop::check` runs the property in-process).
+//! the SPCK checkpoint container (`ckpt::Checkpoint`/`ckpt::Meta`), the
+//! `spngd serve` HTTP/1.1 request parser and the f16 wire codec. Fixed
+//! seeds, bounded case counts — this is the CI fuzz job (`fuzz-smoke`),
+//! sized to finish in well under two minutes while still exercising both
+//! the accept and reject paths of every parser. A panic anywhere in a
+//! parser is a test failure by construction (`util::prop::check` runs
+//! the property in-process).
 
 use spngd::ckpt;
 use spngd::collectives::comm::Precision;
 use spngd::collectives::wire::{self, Frame, Kind};
 use spngd::data::cifar::{CifarBin, CIFAR_CLASSES, CIFAR_RECORD};
 use spngd::data::DataSource;
+use spngd::serve::http::{self, read_request, HttpError};
 use spngd::util::f16;
 use spngd::util::json::Json;
 use spngd::util::obs;
 use spngd::util::prop::{check, gen};
 use spngd::util::rng::Rng;
+use std::io::Cursor;
 
 fn rand_bytes(rng: &mut Rng, n: usize) -> Vec<u8> {
     (0..n).map(|_| rng.below(256) as u8).collect()
@@ -563,6 +566,118 @@ fn ckpt_meta_parse_survives_byte_soup() {
         Err(_) => true,
         Ok(m) => m.encode() == *bytes,
     });
+}
+
+/// Arbitrary byte soup through the `spngd serve` request parser: every
+/// outcome is a typed [`HttpError`] or a structurally sane [`Request`]
+/// (method/path are whitespace-free tokens, body within the cap) —
+/// never a panic, whatever a client throws at the socket.
+#[test]
+fn http_read_request_survives_byte_soup() {
+    check(0x1771, 500, 256, rand_bytes, |bytes| {
+        match read_request(&mut Cursor::new(&bytes[..])) {
+            Err(_) => true, // typed rejection is the contract
+            Ok(req) => {
+                !req.method.is_empty()
+                    && !req.method.contains(char::is_whitespace)
+                    && !req.path.contains(char::is_whitespace)
+                    && req.body.len() <= http::MAX_BODY_BYTES
+            }
+        }
+    });
+}
+
+/// A realistic predict request with a randomized body length.
+fn rand_http_request(rng: &mut Rng, max_body: usize) -> Vec<u8> {
+    let body: Vec<u8> = (0..1 + rng.below_usize(max_body.max(1)))
+        .map(|_| b'a' + rng.below(26) as u8)
+        .collect();
+    let mut req = format!(
+        "POST /v1/predict HTTP/1.1\r\nHost: fuzz\r\nContent-Length: {}\r\n\r\n",
+        body.len()
+    )
+    .into_bytes();
+    req.extend_from_slice(&body);
+    req
+}
+
+/// Mutate well-formed requests byte-by-byte: the parser must accept or
+/// reject with a typed error at every corruption, and anything it
+/// accepts must still be structurally sane.
+#[test]
+fn http_read_request_survives_mutated_requests() {
+    check(
+        0x1772,
+        500,
+        8,
+        |rng, size| {
+            let mut b = rand_http_request(rng, 32);
+            for _ in 0..1 + rng.below_usize(size.max(1)) {
+                let i = rng.below_usize(b.len());
+                b[i] = rng.below(256) as u8;
+            }
+            b
+        },
+        |bytes| match read_request(&mut Cursor::new(&bytes[..])) {
+            Err(_) => true,
+            Ok(req) => !req.method.is_empty() && req.body.len() <= http::MAX_BODY_BYTES,
+        },
+    );
+}
+
+/// Every strict prefix of a valid request is a typed error (the body is
+/// last, so a truncated stream can never yield a complete request), the
+/// empty stream is the clean keep-alive `Closed`, and the full bytes
+/// parse back the exact body.
+#[test]
+fn http_truncated_requests_are_typed_errors() {
+    check(
+        0x1773,
+        120,
+        24,
+        rand_http_request,
+        |bytes| {
+            for cut in 0..bytes.len() {
+                match read_request(&mut Cursor::new(&bytes[..cut])) {
+                    Err(HttpError::Closed) if cut == 0 => {}
+                    Err(HttpError::Closed) => return false, // mid-request is never "clean"
+                    Err(_) => {}
+                    Ok(_) => return false, // a strict prefix must not parse
+                }
+            }
+            read_request(&mut Cursor::new(&bytes[..]))
+                .is_ok_and(|req| bytes.ends_with(&req.body) && req.path == "/v1/predict")
+        },
+    );
+}
+
+/// Resource-exhaustion inputs are rejected from the declarations alone:
+/// a header block over [`http::MAX_HEADER_BYTES`] dies mid-read with a
+/// typed 400, and a hostile Content-Length over [`http::MAX_BODY_BYTES`]
+/// is a 413 with no body allocation.
+#[test]
+fn http_oversized_headers_and_bodies_rejected_before_allocation() {
+    check(
+        0x1774,
+        60,
+        4,
+        |rng, _| {
+            if rng.bool(0.5) {
+                let pad = "h".repeat(http::MAX_HEADER_BYTES + rng.below_usize(4096));
+                (format!("GET /x HTTP/1.1\r\nPad: {pad}\r\n\r\n"), true)
+            } else {
+                let len = http::MAX_BODY_BYTES as u64 + 1 + rng.next_u64() % (1 << 40);
+                (format!("POST /x HTTP/1.1\r\nContent-Length: {len}\r\n\r\n"), false)
+            }
+        },
+        |(req, is_header_case)| {
+            match read_request(&mut Cursor::new(req.as_bytes())) {
+                Err(HttpError::Bad(_)) => *is_header_case,
+                Err(HttpError::TooLarge) => !*is_header_case,
+                _ => false,
+            }
+        },
+    );
 }
 
 /// f16 wire codec over adversarial bit patterns (NaN payloads, infinities,

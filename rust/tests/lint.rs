@@ -1,0 +1,34 @@
+//! The repo lint as a `cargo test` gate: the committed tree must scan
+//! clean under the committed `lint.toml`, and the lint itself must
+//! still flag every `fixtures/bad_*.rs` (so a scanner regression can't
+//! silently green the tree).
+//!
+//! Integration tests run with the package root (`rust/`) as cwd, so the
+//! repo root is `..`.
+
+use std::path::Path;
+
+fn repo_root() -> &'static Path {
+    Path::new("..")
+}
+
+#[test]
+fn committed_tree_is_lint_clean() {
+    let root = repo_root();
+    let cfg = spngd_lint::Config::load(&root.join("lint.toml")).expect("lint.toml must parse");
+    let findings = spngd_lint::run(root, &cfg).expect("lint scan must run");
+    assert!(
+        findings.is_empty(),
+        "spngd-lint found {} violation(s) in the committed tree:\n{}",
+        findings.len(),
+        findings.iter().map(|f| f.render()).collect::<Vec<_>>().join("\n")
+    );
+}
+
+#[test]
+fn fixture_self_test_passes() {
+    let report = spngd_lint::self_test(&repo_root().join("tools/lint"))
+        .expect("fixture self-test must pass");
+    // Every fixture accounted for — the report names each one.
+    assert!(report.contains("good_clean.rs"), "self-test report: {report}");
+}

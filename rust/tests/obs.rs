@@ -174,48 +174,6 @@ fn threaded_trace_round_trips_with_consistent_spans() {
     assert_eq!(back.get("displayTimeUnit").as_str(), Some("ms"));
 }
 
-// ------------------------------------------------------------ print audit
-
-fn rust_files(dir: &std::path::Path, out: &mut Vec<std::path::PathBuf>) {
-    for entry in std::fs::read_dir(dir).unwrap() {
-        let path = entry.unwrap().path();
-        if path.is_dir() {
-            rust_files(&path, out);
-        } else if path.extension().is_some_and(|e| e == "rs") {
-            out.push(path);
-        }
-    }
-}
-
-/// `SPNGD_LOG` governs all library diagnostics: no `print!`-family
-/// macro may appear in the library sources outside comments. The CLI
-/// (`main.rs`) and the bench harness (`harness/`) are the sanctioned
-/// stdout writers.
-#[test]
-fn no_raw_prints_in_library_sources() {
-    let src = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
-    let mut files = Vec::new();
-    rust_files(&src, &mut files);
-    let mut offenders = Vec::new();
-    for path in files {
-        let rel = path.strip_prefix(&src).unwrap().to_string_lossy().to_string();
-        if rel == "main.rs" || rel.starts_with("harness") {
-            continue;
-        }
-        let text = std::fs::read_to_string(&path).unwrap();
-        for (i, line) in text.lines().enumerate() {
-            let t = line.trim_start();
-            if t.starts_with("//") {
-                continue; // docs may show print!-family examples
-            }
-            if t.contains("println!") || t.contains("eprintln!") || t.contains("print!") {
-                offenders.push(format!("{rel}:{}: {}", i + 1, t));
-            }
-        }
-    }
-    assert!(
-        offenders.is_empty(),
-        "raw prints in library sources (route through util::log or obs::emit):\n{}",
-        offenders.join("\n")
-    );
-}
+// The old grep-based print audit lived here; it is now the lint's
+// `no-raw-print` rule (comment/string-aware, allowlist in `lint.toml`),
+// enforced by `tests/lint.rs` and the CI `lint` job.

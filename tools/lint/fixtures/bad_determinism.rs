@@ -1,0 +1,11 @@
+// Negative fixture: nondeterminism sources in what the config treats
+// as a step-math path. This file is never compiled.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub fn reduce(grads: &HashMap<String, f32>) -> f32 {
+    let t = Instant::now();
+    let sum: f32 = grads.values().sum();
+    sum + t.elapsed().as_secs_f32() * 0.0
+}

@@ -1,0 +1,7 @@
+// Negative fixture: reads an SPNGD_* env var that registry.md does not
+// list (and registry.md lists SPNGD_FAKE_VAR, which this file does not
+// read — both directions must be flagged). This file is never compiled.
+
+pub fn knob() -> Option<String> {
+    std::env::var("SPNGD_NOT_IN_REGISTRY").ok()
+}

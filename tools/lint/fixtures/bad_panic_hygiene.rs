@@ -1,0 +1,12 @@
+// Negative fixture: panic paths in what the config treats as a parser
+// module. Every flagged line must trip `panic-hygiene` and nothing
+// else. This file is never compiled.
+
+pub fn parse(buf: &[u8]) -> u32 {
+    let first = buf[0];
+    let rest: u32 = std::str::from_utf8(&buf[1..]).unwrap().parse().expect("digits");
+    if first == 0 {
+        panic!("zero tag");
+    }
+    u32::from(first) + rest
+}

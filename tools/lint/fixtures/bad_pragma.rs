@@ -1,0 +1,8 @@
+// Negative fixture: the pragma below suppresses the print on the next
+// line, but it has no `-- <reason>` trailer, which is itself a
+// finding (rule `pragma`). This file is never compiled.
+
+pub fn report(loss: f32) {
+    // lint:allow(no-raw-print)
+    println!("loss = {loss}");
+}

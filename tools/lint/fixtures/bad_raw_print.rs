@@ -1,0 +1,7 @@
+// Negative fixture: raw output macros in library code. This file is
+// never compiled.
+
+pub fn report(loss: f32) {
+    println!("loss = {loss}");
+    eprintln!("debug: {loss}");
+}

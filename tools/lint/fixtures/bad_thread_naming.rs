@@ -1,0 +1,9 @@
+// Negative fixture: anonymous threads — a bare spawn and a Builder
+// that never calls .name(). This file is never compiled.
+
+pub fn fire_and_forget() {
+    std::thread::spawn(|| {});
+    let _ = std::thread::Builder::new()
+        .stack_size(1 << 20)
+        .spawn(|| {});
+}

@@ -1,0 +1,8 @@
+// Negative fixture: an `unsafe` block with no adjacent SAFETY comment.
+// This file is never compiled.
+
+pub fn read_first(v: &[f32]) -> f32 {
+    let p = v.as_ptr();
+
+    unsafe { *p }
+}

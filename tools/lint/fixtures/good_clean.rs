@@ -1,0 +1,71 @@
+// Positive fixture: every forbidden token below sits where the lexer
+// must NOT look — string literals, raw strings, char literals, block
+// comments, cfg(test) regions — or is explicitly suppressed by a
+// well-formed pragma. The self-test requires ZERO findings here, so
+// any lexer regression (string state, nesting, char-vs-lifetime)
+// surfaces as a self-test failure. This file is never compiled.
+
+/* block comment with panic! and .unwrap() tokens
+   /* nested block: thread::spawn(|| {}) println!("x") */
+   still inside the outer comment: HashMap Instant::now
+*/
+
+pub fn strings_are_not_code() -> String {
+    let s = "panic! .unwrap() HashMap println! unsafe buf[0]";
+    let q = "escaped quote \" then .expect( inside";
+    let r = r#"raw string: Instant::now() and v[1] and "quoted""#;
+    let multi = "line one panic!
+line two HashMap";
+    format!("{s}{q}{r}{multi}")
+}
+
+pub fn char_literals_are_not_strings() -> (char, char, char) {
+    let quote = '"';
+    let escaped = '\'';
+    let bracket = '[';
+    (quote, escaped, bracket)
+}
+
+pub fn lifetimes_are_not_chars<'a>(x: &'a [u8]) -> &'a [u8] {
+    x
+}
+
+pub fn env_read_is_registered() -> Option<String> {
+    // SPNGD_SCRATCH_ below is a namespace prefix (trailing underscore),
+    // not a var read, and must not require registration.
+    let _prefix = "SPNGD_SCRATCH_";
+    std::env::var("SPNGD_FAKE_VAR").ok()
+}
+
+pub fn suppressed_with_reason() -> usize {
+    // lint:allow(determinism) -- fixture exercises pragma suppression
+    let m: std::collections::HashMap<u8, u8> = std::collections::HashMap::new();
+    m.len()
+}
+
+pub fn documented_unsafe(v: &[f32]) -> f32 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    let p = v.as_ptr();
+    // SAFETY: v is non-empty (checked above), so reading element 0
+    // through as_ptr() stays in bounds.
+    unsafe { *p }
+}
+
+pub fn named_thread() {
+    let _ = std::thread::Builder::new()
+        .name("spngd-clean-fixture".to_string())
+        .spawn(|| {});
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_may_unwrap_and_print() {
+        let v: Vec<u32> = vec![1];
+        let first = v.first().copied().unwrap();
+        println!("test output {first}");
+        assert!(std::panic::catch_unwind(|| panic!("boom")).is_err());
+    }
+}

@@ -1,0 +1,207 @@
+//! `lint.toml` loader — a minimal TOML subset (sections, string and
+//! string-array values, `#` comments, multi-line arrays). Kept
+//! dependency-free on purpose: the lint must build in the same offline
+//! cell as the rest of the workspace.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// The rule names the scanner knows. A config section or pragma naming
+/// anything else is rejected loudly — a typo'd rule must not silently
+/// disable enforcement.
+pub const KNOWN_RULES: &[&str] = &[
+    "panic-hygiene",
+    "determinism",
+    "unsafe-audit",
+    "thread-naming",
+    "no-raw-print",
+    "env-registry",
+];
+
+/// Per-rule configuration. Paths are root-relative with `/` separators;
+/// an entry matches a file exactly or any file under it as a directory.
+#[derive(Debug, Default, Clone)]
+pub struct RuleCfg {
+    /// Files/dirs the rule scans. Empty scope disables the rule.
+    pub scope: Vec<String>,
+    /// Files/dirs exempted from the rule entirely.
+    pub allow: Vec<String>,
+    /// panic-hygiene only: files whose `[]` indexing is waived (the
+    /// check-then-index ByteReader discipline, proven total by fuzzing).
+    pub index_allow: Vec<String>,
+    /// env-registry only: root-relative markdown file whose table rows
+    /// form the registry.
+    pub registry: Option<String>,
+}
+
+/// Parsed lint configuration: one [`RuleCfg`] per known rule.
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    pub rules: BTreeMap<String, RuleCfg>,
+}
+
+impl Config {
+    /// Look up a rule's config; rules absent from the file are disabled.
+    pub fn rule(&self, name: &str) -> RuleCfg {
+        self.rules.get(name).cloned().unwrap_or_default()
+    }
+
+    pub fn load(path: &Path) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read config {}: {e}", path.display()))?;
+        Config::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut cfg = Config::default();
+        let mut section: Option<String> = None;
+        let mut lines = text.lines().enumerate();
+        while let Some((idx, raw)) = lines.next() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                let name = name.trim();
+                if !KNOWN_RULES.contains(&name) {
+                    return Err(format!("line {}: unknown rule section [{name}]", idx + 1));
+                }
+                cfg.rules.entry(name.to_string()).or_default();
+                section = Some(name.to_string());
+                continue;
+            }
+            let (key, mut val) = line
+                .split_once('=')
+                .map(|(k, v)| (k.trim().to_string(), v.trim().to_string()))
+                .ok_or_else(|| format!("line {}: expected `key = value`", idx + 1))?;
+            // multi-line array: keep consuming until brackets balance
+            if val.starts_with('[') {
+                while !brackets_balance(&val) {
+                    match lines.next() {
+                        Some((_, more)) => {
+                            val.push(' ');
+                            val.push_str(strip_comment(more).trim());
+                        }
+                        None => return Err(format!("line {}: unterminated array", idx + 1)),
+                    }
+                }
+            }
+            let sect = section
+                .clone()
+                .ok_or_else(|| format!("line {}: key `{key}` outside a [rule] section", idx + 1))?;
+            let rule = cfg.rules.entry(sect).or_default();
+            match key.as_str() {
+                "scope" => rule.scope = parse_str_list(&val, idx + 1)?,
+                "allow" => rule.allow = parse_str_list(&val, idx + 1)?,
+                "index-allow" => rule.index_allow = parse_str_list(&val, idx + 1)?,
+                "registry" => rule.registry = Some(parse_str(&val, idx + 1)?),
+                other => return Err(format!("line {}: unknown key `{other}`", idx + 1)),
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+/// Drop a trailing `#` comment, ignoring `#` inside quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn brackets_balance(val: &str) -> bool {
+    let mut depth = 0i64;
+    let mut in_str = false;
+    for c in val.chars() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            _ => {}
+        }
+    }
+    depth == 0 && !in_str
+}
+
+fn parse_str(val: &str, line: usize) -> Result<String, String> {
+    let v = val.trim();
+    v.strip_prefix('"')
+        .and_then(|s| s.strip_suffix('"'))
+        .map(str::to_string)
+        .ok_or_else(|| format!("line {line}: expected a quoted string, got `{val}`"))
+}
+
+fn parse_str_list(val: &str, line: usize) -> Result<Vec<String>, String> {
+    let v = val.trim();
+    let inner = v
+        .strip_prefix('[')
+        .and_then(|s| s.strip_suffix(']'))
+        .ok_or_else(|| format!("line {line}: expected an array, got `{val}`"))?;
+    let mut out = Vec::new();
+    let mut rest = inner;
+    while let Some(start) = rest.find('"') {
+        let tail = &rest[start + 1..];
+        let end = tail
+            .find('"')
+            .ok_or_else(|| format!("line {line}: unterminated string in array"))?;
+        out.push(tail[..end].to_string());
+        rest = &tail[end + 1..];
+    }
+    Ok(out)
+}
+
+/// True when root-relative `path` equals `entry` or lies under it.
+pub fn path_matches(path: &str, entry: &str) -> bool {
+    path == entry || path.starts_with(&format!("{entry}/"))
+}
+
+/// True when `path` matches any entry in `entries`.
+pub fn path_in(path: &str, entries: &[String]) -> bool {
+    entries.iter().any(|e| path_matches(path, e))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_arrays_and_comments() {
+        let text = r#"
+# top comment
+[determinism]
+scope = ["rust/src/optim", # trailing comment
+         "rust/src/dist"]
+allow = ["rust/src/dist/membership.rs"]
+
+[env-registry]
+scope = ["rust/src"]
+registry = "README.md"
+"#;
+        let cfg = Config::parse(text).unwrap();
+        let det = cfg.rule("determinism");
+        assert_eq!(det.scope.len(), 2);
+        assert_eq!(det.allow, vec!["rust/src/dist/membership.rs".to_string()]);
+        assert_eq!(cfg.rule("env-registry").registry.as_deref(), Some("README.md"));
+        assert!(cfg.rule("no-raw-print").scope.is_empty());
+    }
+
+    #[test]
+    fn rejects_unknown_rules_and_keys() {
+        assert!(Config::parse("[made-up-rule]\nscope = []\n").is_err());
+        assert!(Config::parse("[determinism]\nbogus = []\n").is_err());
+        assert!(Config::parse("scope = []\n").is_err());
+    }
+
+    #[test]
+    fn path_matching_is_prefix_by_component() {
+        assert!(path_matches("rust/src/ckpt/bytes.rs", "rust/src/ckpt"));
+        assert!(path_matches("rust/src/ckpt", "rust/src/ckpt"));
+        assert!(!path_matches("rust/src/ckpt2/x.rs", "rust/src/ckpt"));
+    }
+}

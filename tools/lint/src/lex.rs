@@ -1,0 +1,279 @@
+//! A comment/string-aware line lexer for Rust sources — just enough of
+//! the token grammar that rules never match text inside comments,
+//! string/char literals or raw strings, and string contents can be
+//! scanned separately (the env-registry rule reads `"SPNGD_*"`
+//! literals). Not a parser: it tracks five states (code, line comment,
+//! nested block comment, string, raw string) plus char-vs-lifetime
+//! disambiguation, and blanks everything that is not code out of the
+//! per-line `code` text.
+
+/// One source line, split by lexical class.
+#[derive(Debug, Default, Clone)]
+pub struct LineInfo {
+    /// Code text with comments removed and string/char contents blanked.
+    pub code: String,
+    /// Comment text on this line (`//`, `///`, `/* .. */` bodies).
+    pub comment: String,
+    /// Contents of string literals that start or continue on this line.
+    pub strings: Vec<String>,
+}
+
+fn is_ident(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Lex a whole file into per-line [`LineInfo`] records. Total over
+/// arbitrary input: unterminated literals and comments simply run to
+/// end-of-file.
+pub fn lex(text: &str) -> Vec<LineInfo> {
+    #[derive(PartialEq)]
+    enum St {
+        Code,
+        LineComment,
+        BlockComment,
+        Str,
+        RawStr,
+    }
+    let b = text.as_bytes();
+    let n = b.len();
+    let mut lines = Vec::new();
+    let mut cur = LineInfo::default();
+    let mut curstr: Option<Vec<u8>> = None;
+    let mut state = St::Code;
+    let mut depth = 0usize; // block-comment nesting
+    let mut raw_hashes = 0usize;
+    let mut i = 0usize;
+
+    macro_rules! push_code {
+        ($s:expr) => {
+            cur.code.push_str($s)
+        };
+    }
+
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            if state == St::LineComment {
+                state = St::Code;
+            }
+            if let Some(s) = curstr.as_mut() {
+                // a multi-line string: credit the part on this line
+                cur.strings.push(String::from_utf8_lossy(s).into_owned());
+                s.clear();
+            }
+            lines.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match state {
+            St::Code => {
+                if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+                    state = St::LineComment;
+                    cur.comment.push_str("//");
+                    i += 2;
+                } else if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    state = St::BlockComment;
+                    depth = 1;
+                    i += 2;
+                } else if c == b'"' {
+                    state = St::Str;
+                    curstr = Some(Vec::new());
+                    push_code!("\"");
+                    i += 1;
+                } else if c == b'r'
+                    && (i == 0
+                        || !is_ident(b[i - 1])
+                        || (b[i - 1] == b'b' && (i < 2 || !is_ident(b[i - 2]))))
+                {
+                    // raw string r"..." / r#"..."# / br#"..."#
+                    let mut j = i + 1;
+                    let mut h = 0usize;
+                    while j < n && b[j] == b'#' {
+                        h += 1;
+                        j += 1;
+                    }
+                    if j < n && b[j] == b'"' {
+                        state = St::RawStr;
+                        raw_hashes = h;
+                        curstr = Some(Vec::new());
+                        push_code!("r\"");
+                        i = j + 1;
+                    } else {
+                        cur.code.push('r');
+                        i += 1;
+                    }
+                } else if c == b'\'' {
+                    if i + 1 < n && b[i + 1] == b'\\' {
+                        // escaped char literal: scan to the closing quote
+                        let mut j = i + 2;
+                        if j < n {
+                            j += 1; // the escaped character itself
+                            while j < n && b[j] != b'\'' && b[j] != b'\n' {
+                                j += 1;
+                            }
+                        }
+                        push_code!("' '");
+                        i = (j + 1).min(n);
+                    } else if i + 2 < n && b[i + 2] == b'\'' {
+                        // plain char literal 'x' (covers '"' and b'"')
+                        push_code!("' '");
+                        i += 3;
+                    } else {
+                        // lifetime tick
+                        cur.code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    cur.code.push(c as char);
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                cur.comment.push(c as char);
+                i += 1;
+            }
+            St::BlockComment => {
+                if c == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                    if depth == 0 {
+                        state = St::Code;
+                    }
+                } else if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else {
+                    cur.comment.push(c as char);
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == b'\\' {
+                    if i + 1 < n && b[i + 1] != b'\n' {
+                        if let Some(s) = curstr.as_mut() {
+                            s.push(b[i + 1]);
+                        }
+                        i += 2;
+                    } else {
+                        i += 1; // line-continuation escape
+                    }
+                } else if c == b'"' {
+                    if let Some(s) = curstr.take() {
+                        cur.strings.push(String::from_utf8_lossy(&s).into_owned());
+                    }
+                    push_code!("\"");
+                    state = St::Code;
+                    i += 1;
+                } else {
+                    if let Some(s) = curstr.as_mut() {
+                        s.push(c);
+                    }
+                    i += 1;
+                }
+            }
+            St::RawStr => {
+                if c == b'"' {
+                    let mut j = i + 1;
+                    let mut h = 0usize;
+                    while j < n && b[j] == b'#' && h < raw_hashes {
+                        h += 1;
+                        j += 1;
+                    }
+                    if h == raw_hashes {
+                        if let Some(s) = curstr.take() {
+                            cur.strings.push(String::from_utf8_lossy(&s).into_owned());
+                        }
+                        push_code!("\"");
+                        state = St::Code;
+                        i = j;
+                    } else {
+                        if let Some(s) = curstr.as_mut() {
+                            s.push(c);
+                        }
+                        i += 1;
+                    }
+                } else {
+                    if let Some(s) = curstr.as_mut() {
+                        s.push(c);
+                    }
+                    i += 1;
+                }
+            }
+        }
+    }
+    if let Some(s) = curstr.take() {
+        cur.strings.push(String::from_utf8_lossy(&s).into_owned());
+    }
+    lines.push(cur);
+    lines
+}
+
+/// Mark every line inside a `#[cfg(test)] mod … { … }` region. Test
+/// code legitimately unwraps, spawns throwaway threads and prints — the
+/// rules that police library code skip these lines.
+pub fn test_regions(lines: &[LineInfo]) -> Vec<bool> {
+    let mut in_test = vec![false; lines.len()];
+    let mut i = 0usize;
+    while i < lines.len() {
+        let squished: String = lines[i].code.chars().filter(|c| !c.is_whitespace()).collect();
+        if squished.contains("#[cfg(test)]") {
+            let mut depth = 0i64;
+            let mut opened = false;
+            let mut j = i;
+            while j < lines.len() {
+                for ch in lines[j].code.chars() {
+                    match ch {
+                        '{' => {
+                            depth += 1;
+                            opened = true;
+                        }
+                        '}' => depth -= 1,
+                        _ => {}
+                    }
+                }
+                in_test[j] = true;
+                if opened && depth <= 0 {
+                    break;
+                }
+                j += 1;
+            }
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    in_test
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_not_code() {
+        let src = "let s = \"panic!\"; // unwrap()\nlet c = '\"';\nlet r = r#\"x \" y\"#;\n";
+        let l = lex(src);
+        assert!(!l[0].code.contains("panic!"));
+        assert!(l[0].comment.contains("unwrap()"));
+        assert_eq!(l[0].strings, vec!["panic!".to_string()]);
+        // the char-literal quote must not open a string
+        assert!(l[1].strings.is_empty());
+        assert_eq!(l[2].strings, vec!["x \" y".to_string()]);
+    }
+
+    #[test]
+    fn nested_block_comments_and_lifetimes() {
+        let src = "/* a /* b */ still */ fn f<'a>(x: &'a [u8]) {}\n";
+        let l = lex(src);
+        assert!(l[0].code.contains("fn f<'a>"));
+        assert!(l[0].comment.contains("b"));
+    }
+
+    #[test]
+    fn cfg_test_region_is_marked() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n  fn b() {}\n}\nfn c() {}\n";
+        let l = lex(src);
+        let t = test_regions(&l);
+        assert_eq!(t, vec![false, true, true, true, true, false]);
+    }
+}

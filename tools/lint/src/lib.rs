@@ -1,0 +1,232 @@
+//! spngd-lint: repo-invariant static analysis for the spngd workspace.
+//!
+//! A dependency-free, comment/string-aware scanner that walks the
+//! scoped source trees (`rust/src`, `rust/tests`) and enforces the
+//! invariants accumulated over PRs 1–9:
+//!
+//! - `panic-hygiene` — no `unwrap`/`expect`/`panic!`/bare indexing in
+//!   the structured-error parser modules (wire, ckpt, json, f16,
+//!   events, serve HTTP).
+//! - `determinism` — no `Instant`/`SystemTime`/`HashMap`/`HashSet` in
+//!   step-math and dist reduction paths outside the allowlist.
+//! - `unsafe-audit` — every `unsafe` carries an adjacent `// SAFETY:`
+//!   comment (or a `# Safety` doc section).
+//! - `thread-naming` — every spawned thread is named.
+//! - `no-raw-print` — no `println!`-family macros in library code.
+//! - `env-registry` — every `SPNGD_*` env var read in source appears in
+//!   the registry table the README renders, and vice versa.
+//!
+//! Suppression is explicit and audited: inline
+//! `// lint:allow(<rule>) -- <reason>` pragmas (reason mandatory) and
+//! per-rule allowlists in the committed `lint.toml`. Exit is
+//! deny-by-default; `self_test` proves every `fixtures/bad_*.rs` trips
+//! exactly its rule and `fixtures/good_clean.rs` trips none.
+
+pub mod config;
+pub mod lex;
+pub mod rules;
+
+pub use config::{Config, RuleCfg, KNOWN_RULES};
+pub use rules::{Finding, Pragmas};
+
+use rules::EnvRead;
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+/// Run every configured rule over `root`. Returns findings sorted by
+/// (file, line, rule); empty means the tree is clean.
+pub fn run(root: &Path, cfg: &Config) -> Result<Vec<Finding>, String> {
+    let mut files: BTreeSet<String> = BTreeSet::new();
+    for rc in cfg.rules.values() {
+        for entry in &rc.scope {
+            let p = root.join(entry);
+            if p.is_file() {
+                files.insert(entry.clone());
+            } else if p.is_dir() {
+                walk(&p, root, &mut files)?;
+            } else {
+                return Err(format!(
+                    "scope entry `{entry}` does not exist under {}",
+                    root.display()
+                ));
+            }
+        }
+    }
+
+    let mut findings = Vec::new();
+    let mut reads: Vec<EnvRead> = Vec::new();
+    for rel in &files {
+        let text = std::fs::read_to_string(root.join(rel))
+            .map_err(|e| format!("cannot read {rel}: {e}"))?;
+        findings.extend(rules::scan_file(rel, &text, cfg, &mut reads));
+    }
+
+    let er = cfg.rule("env-registry");
+    if let Some(reg) = &er.registry {
+        findings.extend(registry_check(root, reg, &reads)?);
+    }
+
+    findings.sort();
+    findings.dedup();
+    Ok(findings)
+}
+
+/// Cross-check collected `SPNGD_*` reads against the registry table:
+/// table rows are the markdown lines starting with `|` in `reg`. Both
+/// directions are enforced — an unregistered read and a stale registry
+/// row are each findings.
+fn registry_check(root: &Path, reg: &str, reads: &[EnvRead]) -> Result<Vec<Finding>, String> {
+    let text = std::fs::read_to_string(root.join(reg))
+        .map_err(|e| format!("cannot read env registry {reg}: {e}"))?;
+    let mut registered: BTreeMap<String, usize> = BTreeMap::new();
+    for (i, line) in text.lines().enumerate() {
+        if !line.trim_start().starts_with('|') {
+            continue;
+        }
+        for var in rules::env_vars(line) {
+            registered.entry(var).or_insert(i + 1);
+        }
+    }
+
+    let mut findings = Vec::new();
+    let mut seen_reads: BTreeSet<String> = BTreeSet::new();
+    let mut reported: BTreeSet<(String, String)> = BTreeSet::new();
+    for r in reads {
+        seen_reads.insert(r.var.clone());
+        if !registered.contains_key(&r.var) && reported.insert((r.file.clone(), r.var.clone())) {
+            findings.push(Finding {
+                file: r.file.clone(),
+                line: r.line,
+                rule: "env-registry".into(),
+                msg: format!(
+                    "env var `{}` is read here but missing from the {reg} registry table",
+                    r.var
+                ),
+            });
+        }
+    }
+    for (var, line) in &registered {
+        if !seen_reads.contains(var) {
+            findings.push(Finding {
+                file: reg.to_string(),
+                line: *line,
+                rule: "env-registry".into(),
+                msg: format!("registry lists `{var}` but no source string references it"),
+            });
+        }
+    }
+    Ok(findings)
+}
+
+fn walk(dir: &Path, root: &Path, out: &mut BTreeSet<String>) -> Result<(), String> {
+    let rd = std::fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    for e in rd {
+        let e = e.map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+        let p = e.path();
+        if p.is_dir() {
+            walk(&p, root, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            let rel = p
+                .strip_prefix(root)
+                .map_err(|e| format!("strip_prefix {}: {e}", p.display()))?;
+            out.insert(rel.to_string_lossy().replace('\\', "/"));
+        }
+    }
+    Ok(())
+}
+
+/// Expected (fixture file, rule tripped) pairs for the negative
+/// self-test. `self_test` also checks this table is complete against
+/// the fixtures directory in both directions.
+pub const FIXTURE_EXPECT: &[(&str, &str)] = &[
+    ("bad_determinism.rs", "determinism"),
+    ("bad_env_registry.rs", "env-registry"),
+    ("bad_panic_hygiene.rs", "panic-hygiene"),
+    ("bad_pragma.rs", "pragma"),
+    ("bad_raw_print.rs", "no-raw-print"),
+    ("bad_thread_naming.rs", "thread-naming"),
+    ("bad_unsafe_audit.rs", "unsafe-audit"),
+];
+
+/// Fixture-based negative self-test: every `fixtures/bad_*.rs` must
+/// trip exactly its expected rule (no more, no less), and
+/// `fixtures/good_clean.rs` — a lexer stress file full of forbidden
+/// tokens inside strings and comments — must trip nothing.
+pub fn self_test(manifest_dir: &Path) -> Result<String, String> {
+    let fixtures = manifest_dir.join("fixtures");
+    let mut on_disk: BTreeSet<String> = BTreeSet::new();
+    let rd = std::fs::read_dir(&fixtures)
+        .map_err(|e| format!("cannot read fixtures dir {}: {e}", fixtures.display()))?;
+    for e in rd {
+        let e = e.map_err(|e| format!("fixtures dir: {e}"))?;
+        let name = e.file_name().to_string_lossy().into_owned();
+        if name.starts_with("bad_") && name.ends_with(".rs") {
+            on_disk.insert(name);
+        }
+    }
+    for name in &on_disk {
+        if !FIXTURE_EXPECT.iter().any(|(n, _)| n == name) {
+            return Err(format!("fixture {name} exists on disk but is not in FIXTURE_EXPECT"));
+        }
+    }
+    for (name, _) in FIXTURE_EXPECT {
+        if !on_disk.contains(*name) {
+            return Err(format!("FIXTURE_EXPECT lists {name} but the fixture file is missing"));
+        }
+    }
+
+    for (name, rule) in FIXTURE_EXPECT {
+        let cfg = fixture_config(name, *rule == "env-registry");
+        let found = run(&fixtures, &cfg)?;
+        if found.is_empty() {
+            return Err(format!("fixture {name} produced no findings (expected {rule})"));
+        }
+        for f in &found {
+            if f.rule != *rule {
+                return Err(format!("fixture {name} tripped an unexpected rule: {}", f.render()));
+            }
+        }
+    }
+
+    let cfg = fixture_config("good_clean.rs", true);
+    let found = run(&fixtures, &cfg)?;
+    if !found.is_empty() {
+        let shown: Vec<String> = found.iter().map(Finding::render).collect();
+        return Err(format!("good_clean.rs must be clean, got: {}", shown.join("; ")));
+    }
+
+    Ok(format!(
+        "self-test ok: {} bad fixtures each tripped exactly their rule; good_clean.rs clean",
+        FIXTURE_EXPECT.len()
+    ))
+}
+
+/// Config for one fixture run: every rule scoped to exactly that file.
+/// The env registry is only attached where the fixture exercises it, so
+/// stale-registry noise cannot leak into the other fixtures' runs.
+fn fixture_config(name: &str, with_registry: bool) -> Config {
+    let mut cfg = Config::default();
+    for rule in KNOWN_RULES {
+        let mut rc = RuleCfg { scope: vec![name.to_string()], ..Default::default() };
+        if *rule == "env-registry" {
+            if with_registry {
+                rc.registry = Some("registry.md".to_string());
+            } else {
+                rc.scope.clear();
+            }
+        }
+        cfg.rules.insert(rule.to_string(), rc);
+    }
+    cfg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn self_test_passes_on_the_committed_fixtures() {
+        let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+        self_test(manifest).expect("fixture self-test");
+    }
+}

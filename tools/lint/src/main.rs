@@ -1,0 +1,92 @@
+//! CLI for spngd-lint.
+//!
+//! ```text
+//! spngd-lint [--root DIR] [--config FILE] [--self-test]
+//! ```
+//!
+//! Exit codes: 0 clean, 1 findings (or self-test failure), 2 usage or
+//! config error. Deny-by-default: there is no warning mode and no
+//! `--fix` — suppression happens in source (pragmas) or `lint.toml`,
+//! where review can see it.
+
+use spngd_lint::Config;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn usage() -> &'static str {
+    "usage: spngd-lint [--root DIR] [--config FILE] [--self-test]"
+}
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut config: Option<PathBuf> = None;
+    let mut self_test = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(v) => root = PathBuf::from(v),
+                None => {
+                    eprintln!("{}", usage());
+                    return ExitCode::from(2);
+                }
+            },
+            "--config" => match args.next() {
+                Some(v) => config = Some(PathBuf::from(v)),
+                None => {
+                    eprintln!("{}", usage());
+                    return ExitCode::from(2);
+                }
+            },
+            "--self-test" => self_test = true,
+            "-h" | "--help" => {
+                println!("{}", usage());
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("spngd-lint: unknown argument `{other}`\n{}", usage());
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    if self_test {
+        let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        return match spngd_lint::self_test(&manifest) {
+            Ok(msg) => {
+                println!("spngd-lint: {msg}");
+                ExitCode::SUCCESS
+            }
+            Err(e) => {
+                eprintln!("spngd-lint: self-test FAILED: {e}");
+                ExitCode::from(1)
+            }
+        };
+    }
+
+    let cfg_path = config.unwrap_or_else(|| root.join("lint.toml"));
+    let cfg = match Config::load(&cfg_path) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("spngd-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    match spngd_lint::run(&root, &cfg) {
+        Ok(findings) if findings.is_empty() => {
+            println!("spngd-lint: clean");
+            ExitCode::SUCCESS
+        }
+        Ok(findings) => {
+            for f in &findings {
+                println!("{}", f.render());
+            }
+            eprintln!("spngd-lint: {} finding(s)", findings.len());
+            ExitCode::from(1)
+        }
+        Err(e) => {
+            eprintln!("spngd-lint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

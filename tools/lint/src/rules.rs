@@ -1,0 +1,383 @@
+//! The rule engine: given one lexed file, emit findings. Each rule is a
+//! line-level token check over comment/string-blanked code (see
+//! [`crate::lex`]), so `"panic!"` in a log message or a doc comment is
+//! never a violation. Inline `// lint:allow(<rule>) -- <reason>`
+//! pragmas suppress a rule on the pragma's own line and the next one;
+//! a pragma with no reason is itself a finding.
+
+use crate::config::{path_in, Config, KNOWN_RULES};
+use crate::lex::{lex, test_regions, LineInfo};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// One violation, root-relative, 1-indexed.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: String,
+    pub msg: String,
+}
+
+impl Finding {
+    pub fn render(&self) -> String {
+        format!("{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// An `SPNGD_*` env-var occurrence in a source string literal; the
+/// registry cross-check in [`crate::run`] consumes these.
+#[derive(Debug, Clone)]
+pub struct EnvRead {
+    pub file: String,
+    pub line: usize,
+    pub var: String,
+}
+
+/// Tokens the panic-hygiene rule forbids in parser modules.
+const PANIC_TOKENS: &[&str] =
+    &[".unwrap()", ".expect(", "panic!", "unreachable!", "todo!", "unimplemented!"];
+
+/// Wall-clock and iteration-order nondeterminism sources forbidden in
+/// step-math and dist reduction paths.
+const DET_TOKENS: &[&str] = &["Instant::now", "SystemTime::now", "HashMap", "HashSet"];
+
+/// Raw output macros; library code must route through `util::log`/obs.
+const PRINT_TOKENS: &[&str] = &["println!", "print!", "eprintln!", "eprint!", "dbg!"];
+
+fn ident(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Token search over blanked code with identifier boundaries on the
+/// ends that are identifier characters (so `HashMap` does not match
+/// `XHashMapY`, but `.unwrap()` needs no left boundary).
+fn has_token(code: &str, tok: &str) -> bool {
+    let b = code.as_bytes();
+    let t = tok.as_bytes();
+    if t.is_empty() || b.len() < t.len() {
+        return false;
+    }
+    let bound_pre = ident(t[0]);
+    let bound_post = ident(t[t.len() - 1]);
+    for at in 0..=b.len() - t.len() {
+        if &b[at..at + t.len()] != t {
+            continue;
+        }
+        if bound_pre && at > 0 && ident(b[at - 1]) {
+            continue;
+        }
+        if bound_post && at + t.len() < b.len() && ident(b[at + t.len()]) {
+            continue;
+        }
+        return true;
+    }
+    false
+}
+
+/// `expr[` indexing: a `[` directly preceded by an identifier char,
+/// `)`, `]` or `?`. Array types `[u8; 4]`, attributes `#[...]` and
+/// macro brackets `vec![` all have a different preceding character.
+fn has_bare_index(code: &str) -> bool {
+    let b = code.as_bytes();
+    for i in 1..b.len() {
+        if b[i] == b'[' && (ident(b[i - 1]) || matches!(b[i - 1], b')' | b']' | b'?')) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Extract complete `SPNGD_*` tokens from a string literal (or a
+/// registry table row — both sides use the same tokenizer so they can
+/// never disagree). A token ending in `_` is a namespace prefix (e.g.
+/// `"SPNGD_PROC_"` used to build names dynamically), not a var read,
+/// and is skipped.
+pub(crate) fn env_vars(s: &str) -> Vec<String> {
+    let b = s.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 6 <= b.len() {
+        if &b[i..i + 6] == b"SPNGD_" && (i == 0 || !ident(b[i - 1])) {
+            let tail = |c: u8| c.is_ascii_uppercase() || c.is_ascii_digit() || c == b'_';
+            let mut j = i + 6;
+            while j < b.len() && tail(b[j]) {
+                j += 1;
+            }
+            if b[j - 1] != b'_' {
+                out.push(String::from_utf8_lossy(&b[i..j]).into_owned());
+            }
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Suppressions gathered from `lint:allow` pragmas: 1-indexed line →
+/// rules allowed on that line.
+#[derive(Debug, Default)]
+pub struct Pragmas {
+    map: BTreeMap<usize, BTreeSet<String>>,
+}
+
+impl Pragmas {
+    pub fn allows(&self, line: usize, rule: &str) -> bool {
+        self.map.get(&line).is_some_and(|s| s.contains(rule))
+    }
+}
+
+/// Parse pragmas out of comment text. Returns the suppression table
+/// plus findings (rule `pragma`) for malformed pragmas: unknown rule
+/// names, or a missing `-- <reason>` trailer.
+pub fn collect_pragmas(rel: &str, lines: &[LineInfo]) -> (Pragmas, Vec<Finding>) {
+    const NEEDLE: &str = "lint:allow(";
+    let mut pragmas = Pragmas::default();
+    let mut findings = Vec::new();
+    let mut bad = |line: usize, msg: String| {
+        findings.push(Finding { file: rel.to_string(), line, rule: "pragma".into(), msg });
+    };
+    for (i, li) in lines.iter().enumerate() {
+        let ln = i + 1;
+        let Some(pos) = li.comment.find(NEEDLE) else { continue };
+        let after = &li.comment[pos + NEEDLE.len()..];
+        let Some(close) = after.find(')') else {
+            bad(ln, "malformed lint:allow pragma: missing `)`".into());
+            continue;
+        };
+        let mut rules = Vec::new();
+        for r in after[..close].split(',') {
+            let r = r.trim();
+            if r.is_empty() {
+                continue;
+            }
+            if KNOWN_RULES.contains(&r) {
+                rules.push(r.to_string());
+            } else {
+                bad(ln, format!("lint:allow pragma names unknown rule `{r}`"));
+            }
+        }
+        if rules.is_empty() {
+            bad(ln, "lint:allow pragma allows no known rule".into());
+        }
+        let reason_ok = after[close + 1..]
+            .trim_start()
+            .strip_prefix("--")
+            .is_some_and(|r| !r.trim().is_empty());
+        if !reason_ok {
+            bad(ln, "lint:allow pragma is missing its `-- <reason>` trailer".into());
+        }
+        for r in rules {
+            pragmas.map.entry(ln).or_default().insert(r.clone());
+            pragmas.map.entry(ln + 1).or_default().insert(r);
+        }
+    }
+    (pragmas, findings)
+}
+
+/// Scan one file against every scoped rule. `env_reads` accumulates
+/// `SPNGD_*` string occurrences for the cross-file registry check.
+pub fn scan_file(
+    rel: &str,
+    text: &str,
+    cfg: &Config,
+    env_reads: &mut Vec<EnvRead>,
+) -> Vec<Finding> {
+    let lines = lex(text);
+    let in_test = test_regions(&lines);
+    let (pragmas, mut findings) = collect_pragmas(rel, &lines);
+    let mut push = |line: usize, rule: &str, msg: String, out: &mut Vec<Finding>| {
+        out.push(Finding { file: rel.to_string(), line, rule: rule.to_string(), msg });
+    };
+
+    let scoped = |rule: &str| {
+        let rc = cfg.rule(rule);
+        path_in(rel, &rc.scope) && !path_in(rel, &rc.allow)
+    };
+
+    if scoped("panic-hygiene") {
+        let check_index = !path_in(rel, &cfg.rule("panic-hygiene").index_allow);
+        for (i, li) in lines.iter().enumerate() {
+            let ln = i + 1;
+            if in_test[i] || pragmas.allows(ln, "panic-hygiene") {
+                continue;
+            }
+            for tok in PANIC_TOKENS {
+                if has_token(&li.code, tok) {
+                    let msg = format!("`{tok}` in a structured-error parser module");
+                    push(ln, "panic-hygiene", msg, &mut findings);
+                }
+            }
+            if check_index && has_bare_index(&li.code) {
+                let msg = "slice indexing in a parser module (use get()/take-then-index)".into();
+                push(ln, "panic-hygiene", msg, &mut findings);
+            }
+        }
+    }
+
+    if scoped("determinism") {
+        for (i, li) in lines.iter().enumerate() {
+            let ln = i + 1;
+            if in_test[i] || pragmas.allows(ln, "determinism") {
+                continue;
+            }
+            for tok in DET_TOKENS {
+                if has_token(&li.code, tok) {
+                    let msg = format!("nondeterminism source `{tok}` in a step-math/dist path");
+                    push(ln, "determinism", msg, &mut findings);
+                }
+            }
+        }
+    }
+
+    // unsafe-audit applies everywhere, test regions included: a wrong
+    // SAFETY story in a test is still a wrong SAFETY story.
+    if scoped("unsafe-audit") {
+        for (i, li) in lines.iter().enumerate() {
+            let ln = i + 1;
+            if !has_token(&li.code, "unsafe") || pragmas.allows(ln, "unsafe-audit") {
+                continue;
+            }
+            if !safety_documented(&lines, i) {
+                let msg = "`unsafe` without an adjacent `// SAFETY:` comment".into();
+                push(ln, "unsafe-audit", msg, &mut findings);
+            }
+        }
+    }
+
+    if scoped("thread-naming") {
+        for (i, li) in lines.iter().enumerate() {
+            let ln = i + 1;
+            if in_test[i] || pragmas.allows(ln, "thread-naming") {
+                continue;
+            }
+            if has_token(&li.code, "thread::spawn") {
+                let msg = "bare thread::spawn — use thread::Builder::new().name(...)".into();
+                push(ln, "thread-naming", msg, &mut findings);
+            }
+            if has_token(&li.code, "thread::Builder") {
+                let window: String = lines[i..lines.len().min(i + 6)]
+                    .iter()
+                    .map(|l| l.code.as_str())
+                    .collect::<Vec<_>>()
+                    .join(" ");
+                if !window.contains(".name(") {
+                    let msg = "thread::Builder spawn without .name(...)".into();
+                    push(ln, "thread-naming", msg, &mut findings);
+                }
+            }
+        }
+    }
+
+    if scoped("no-raw-print") {
+        for (i, li) in lines.iter().enumerate() {
+            let ln = i + 1;
+            if in_test[i] || pragmas.allows(ln, "no-raw-print") {
+                continue;
+            }
+            for tok in PRINT_TOKENS {
+                if has_token(&li.code, tok) {
+                    let msg = format!("raw `{tok}` in library code (route through util::log/obs)");
+                    push(ln, "no-raw-print", msg, &mut findings);
+                }
+            }
+        }
+    }
+
+    if scoped("env-registry") {
+        for (i, li) in lines.iter().enumerate() {
+            let ln = i + 1;
+            if pragmas.allows(ln, "env-registry") {
+                continue;
+            }
+            for s in &li.strings {
+                for var in env_vars(s) {
+                    env_reads.push(EnvRead { file: rel.to_string(), line: ln, var });
+                }
+            }
+        }
+    }
+
+    findings
+}
+
+/// A SAFETY comment counts when it sits in the `unsafe` line's own
+/// comment or in the contiguous comment/attribute block directly above
+/// (doc comments and `#[target_feature]` attributes may interleave).
+fn safety_documented(lines: &[LineInfo], at: usize) -> bool {
+    let hit = |c: &str| c.contains("SAFETY:") || c.contains("# Safety");
+    if hit(&lines[at].comment) {
+        return true;
+    }
+    let mut j = at;
+    while j > 0 {
+        j -= 1;
+        let lj = &lines[j];
+        let code_t = lj.code.trim();
+        if !code_t.is_empty() && !code_t.starts_with("#[") {
+            return false;
+        }
+        if hit(&lj.comment) {
+            return true;
+        }
+        if code_t.is_empty() && lj.comment.trim().is_empty() {
+            return false; // blank line ends the block
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_boundaries() {
+        assert!(has_token("let m = HashMap::new();", "HashMap"));
+        assert!(!has_token("let m = MyHashMap::new();", "HashMap"));
+        assert!(has_token("x.unwrap();", ".unwrap()"));
+        assert!(!has_token("eprint_buffer()", "print!"));
+        assert!(has_token("std::thread::spawn(f)", "thread::spawn"));
+    }
+
+    #[test]
+    fn index_detection() {
+        assert!(has_bare_index("let x = buf[0];"));
+        assert!(has_bare_index("take(2)?[1]"));
+        assert!(!has_bare_index("#[derive(Debug)]"));
+        assert!(!has_bare_index("fn f(b: &[u8]) -> [f32; 4] { vec![] }"));
+    }
+
+    #[test]
+    fn env_var_extraction() {
+        assert_eq!(env_vars("SPNGD_THREADS"), vec!["SPNGD_THREADS".to_string()]);
+        assert_eq!(env_vars("prefix SPNGD_PROC_ suffix"), Vec::<String>::new());
+        assert_eq!(env_vars("XSPNGD_THREADS"), Vec::<String>::new());
+    }
+
+    #[test]
+    fn pragma_suppresses_and_requires_reason() {
+        let src = "// lint:allow(determinism) -- timer is telemetry-only\n\
+                   let t = Instant::now();\n\
+                   // lint:allow(determinism)\n\
+                   let u = Instant::now();\n";
+        let lines = lex(src);
+        let (pragmas, bad) = collect_pragmas("x.rs", &lines);
+        assert!(pragmas.allows(2, "determinism"));
+        assert!(pragmas.allows(4, "determinism"));
+        assert_eq!(bad.len(), 1);
+        assert_eq!(bad[0].rule, "pragma");
+        assert_eq!(bad[0].line, 3);
+    }
+
+    #[test]
+    fn safety_block_scans_past_attributes() {
+        let src = "/// docs\n/// # Safety\n/// callers check avx2\n\
+                   #[target_feature(enable = \"avx2\")]\npub unsafe fn f() {}\n";
+        let lines = lex(src);
+        assert!(safety_documented(&lines, 4));
+        let src2 = "fn g() {}\npub unsafe fn f() {}\n";
+        let lines2 = lex(src2);
+        assert!(!safety_documented(&lines2, 1));
+    }
+}
